@@ -1,0 +1,106 @@
+//! End-to-end validation driver (DESIGN.md: the "real small workload"
+//! example): the full microscopy pipeline across all three layers.
+//!
+//! Phase A (real compute): generate a plate of fluorescence images at the
+//! paper's six seeding densities, stream them through the **live** cluster
+//! (PE threads → PJRT → the AOT JAX/Pallas nuclei pipeline) and check the
+//! counted nuclei track the planted densities. Reports latency/throughput.
+//!
+//! Phase B (cluster dynamics): the paper's full §VI-B protocol — the
+//! 767-image collection on a simulated 5-worker HIO+IRM cluster, 10 runs
+//! with profile carry-over — and renders Figs 8–10 shapes.
+//!
+//! Run with: `make artifacts && cargo run --release --example microscopy_pipeline`
+
+use harmonicio::experiments::microscopy;
+use harmonicio::master::{LiveCluster, LiveConfig};
+use harmonicio::workload::{imagegen::SEEDING_DENSITIES, ImageGen};
+
+fn main() -> anyhow::Result<()> {
+    // ---------- Phase A: real PJRT compute ----------
+    println!("=== Phase A: live PJRT nuclei analysis ===");
+    let mut cluster = LiveCluster::new(
+        "artifacts",
+        LiveConfig {
+            max_pes: 4,
+            initial_pes: 2,
+            ..LiveConfig::default()
+        },
+    )?;
+    let n_images = 24usize;
+    let mut gen = ImageGen::new(2020, 128);
+    let plate = gen.plate(n_images);
+    let t0 = std::time::Instant::now();
+    for (_, pixels) in &plate {
+        cluster.stream(pixels.clone());
+    }
+    cluster.drain_until(n_images as u64, std::time::Duration::from_secs(600))?;
+    let wall = t0.elapsed();
+
+    // Per-density accuracy: counted vs planted.
+    println!("density  planted  mean_counted  images");
+    let mut ok_densities = 0;
+    for &density in &SEEDING_DENSITIES {
+        let counts: Vec<f32> = cluster
+            .results
+            .iter()
+            .filter(|r| plate[r.id.0 as usize].0 == density)
+            .map(|r| r.features[0])
+            .collect();
+        let mean = counts.iter().sum::<f32>() / counts.len().max(1) as f32;
+        let ok = mean >= density as f32 * 0.5 && mean <= density as f32 * 1.5 + 2.0;
+        if ok {
+            ok_densities += 1;
+        }
+        println!(
+            "{:>7}  {:>7}  {:>12.1}  {:>6}  {}",
+            density,
+            density,
+            mean,
+            counts.len(),
+            if ok { "ok" } else { "OFF" }
+        );
+    }
+    let s = &cluster.stats;
+    println!(
+        "throughput {:.2} img/s | mean service {:?} | mean cpu/job {:?} | latency {:?}",
+        s.completed as f64 / wall.as_secs_f64(),
+        s.mean_service(),
+        s.total_cpu / s.completed.max(1) as u32,
+        s.mean_latency()
+    );
+    anyhow::ensure!(
+        ok_densities >= 5,
+        "nuclei counts should track planted densities ({ok_densities}/6 ok)"
+    );
+
+    // ---------- Phase B: the paper's cluster protocol ----------
+    println!("\n=== Phase B: §VI-B 10-run protocol on the simulated cluster ===");
+    let runs = microscopy::ten_runs(42, 10);
+    println!(
+        "makespans (s): {}",
+        runs.makespans
+            .iter()
+            .map(|m| format!("{:.0}", m.as_secs_f64()))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    let last = &runs.last;
+    println!("\n--- Fig 8 shape: scheduled CPU per worker (run 10) ---");
+    let names: Vec<String> = (0..5).map(|i| format!("w{i}.scheduled")).collect();
+    let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    println!("{}", last.recorder.ascii_chart(&refs, 76, 3));
+    println!("--- Fig 10 shape: workers current/target + active bins ---");
+    println!(
+        "{}",
+        last.recorder
+            .ascii_chart(&["workers.current", "workers.target", "bins.active"], 76, 4)
+    );
+    println!(
+        "rejected VM requests (quota retries): {}",
+        last.cloud.rejected_requests
+    );
+    anyhow::ensure!(runs.last.completions.len() == 767, "all images processed");
+    println!("microscopy_pipeline OK");
+    Ok(())
+}

@@ -1,0 +1,111 @@
+"""AOT-lower the L2 graphs to HLO text artifacts for the rust runtime.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids so text round-trips cleanly. Lowered with
+``return_tuple=True``; the rust side unwraps with ``to_tuple1()``.
+
+Artifacts (``make artifacts``):
+
+* ``nuclei_<S>.hlo.txt``   — nuclei_pipeline over an (S, S) f32 image
+* ``busy_<N>x<STEPS>.hlo.txt`` — busy_pipeline over an (N, N) state
+* ``manifest.json``        — shapes/metadata the rust runtime checks
+
+Python runs only here; it is never on the request path.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+IMAGE_SIZES = (128, 256)
+BUSY_N = 128
+BUSY_STEPS = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_nuclei(size: int) -> str:
+    spec = jax.ShapeDtypeStruct((size, size), jnp.float32)
+    fn = functools.partial(model.nuclei_pipeline, sigma=2.0)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_busy(n: int, steps: int) -> str:
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    fn = functools.partial(model.busy_pipeline, steps=steps)
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"artifacts": []}
+
+    for size in IMAGE_SIZES:
+        name = f"nuclei_{size}"
+        text = lower_nuclei(size)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "kind": "nuclei",
+                "inputs": [{"shape": [size, size], "dtype": "f32"}],
+                "outputs": [{"shape": [4], "dtype": "f32"}],
+                "file": os.path.basename(path),
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    name = f"busy_{BUSY_N}x{BUSY_STEPS}"
+    text = lower_busy(BUSY_N, BUSY_STEPS)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest["artifacts"].append(
+        {
+            "name": name,
+            "kind": "busy",
+            "steps": BUSY_STEPS,
+            "inputs": [
+                {"shape": [BUSY_N, BUSY_N], "dtype": "f32"},
+                {"shape": [BUSY_N, BUSY_N], "dtype": "f32"},
+            ],
+            "outputs": [{"shape": [BUSY_N, BUSY_N], "dtype": "f32"}],
+            "file": os.path.basename(path),
+        }
+    )
+    print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Layer-1 Pallas kernels for the HarmonicIO reproduction.
+
+Every kernel here is the compute hot-spot of a PE (processing engine)
+workload. They are authored as Pallas kernels with ``interpret=True`` so the
+lowered HLO runs on any PJRT backend (the rust coordinator uses the CPU
+client). Pure-jnp oracles live in :mod:`ref` and are enforced by pytest +
+hypothesis at build time.
+"""
+
+from .gaussian_blur import gaussian_blur, gaussian_taps
+from .segment_stats import segment_stats, local_maxima_count
+from .busy import busy_block
+
+__all__ = [
+    "gaussian_blur",
+    "gaussian_taps",
+    "segment_stats",
+    "local_maxima_count",
+    "busy_block",
+]

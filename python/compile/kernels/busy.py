@@ -1,0 +1,56 @@
+"""Synthetic CPU-target workload kernel ("busy work").
+
+The paper's synthetic experiments (§VI-A) stream jobs that "busy the CPU for
+specified usage levels and durations". The unit of busy work here is a chain
+of ``STEPS`` MXU-shaped matmul+tanh steps over a ``(N, N)`` state — one
+artifact execution burns a calibrated, deterministic amount of CPU. The rust
+coordinator calls the artifact ``k`` times to hit a requested CPU-seconds
+target (calibration lives in ``rust/src/runtime/``).
+
+TPU notes: the (128, 128) f32 matmul maps directly onto the MXU systolic
+array; the scan keeps a single VMEM-resident carry, so the chain is
+compute-bound by construction.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_tanh_kernel(x_ref, w_ref, o_ref):
+    """One busy step: ``o = tanh(x @ w) + x * 1e-3`` (keeps state bounded)."""
+    x = x_ref[...]
+    w = w_ref[...]
+    o_ref[...] = jnp.tanh(
+        jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+    ) + x * 1e-3
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def busy_block(x: jax.Array, w: jax.Array, *, steps: int = 16) -> jax.Array:
+    """Run ``steps`` chained matmul+tanh Pallas steps over state ``x``.
+
+    ``x`` and ``w`` must be square ``(N, N)`` float32 with matching N. The
+    chain is expressed with ``lax.scan`` so the lowered HLO contains a single
+    loop body (no unrolled blow-up) — see DESIGN.md §Perf L2.
+    """
+    if x.ndim != 2 or x.shape[0] != x.shape[1]:
+        raise ValueError(f"x must be square, got {x.shape}")
+    if w.shape != x.shape:
+        raise ValueError(f"w must match x shape {x.shape}, got {w.shape}")
+    n = x.shape[0]
+    step = pl.pallas_call(
+        _matmul_tanh_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )
+
+    def body(carry, _):
+        return step(carry, w), None
+
+    out, _ = jax.lax.scan(body, x.astype(jnp.float32), None, length=steps)
+    return out

@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are deliberately written with different primitives than the kernels
+(``jnp.convolve``-style explicit padding instead of roll+mask, dense
+neighbourhood stacking instead of unrolled shifts) so that agreement is a
+meaningful check rather than the same code twice.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .gaussian_blur import gaussian_taps
+
+
+def gaussian_blur_ref(image, *, sigma: float = 2.0, radius: int | None = None):
+    """Separable zero-padded Gaussian blur via explicit pad + windowed dot."""
+    taps = jnp.asarray(gaussian_taps(sigma, radius), dtype=jnp.float32)
+    r = (taps.shape[0] - 1) // 2
+    x = jnp.asarray(image, dtype=jnp.float32)
+
+    def conv_axis(a, axis):
+        pad = [(0, 0), (0, 0)]
+        pad[axis] = (r, r)
+        ap = jnp.pad(a, pad)
+        n = a.shape[axis]
+        slices = []
+        for k in range(2 * r + 1):
+            idx = [slice(None), slice(None)]
+            idx[axis] = slice(k, k + n)
+            slices.append(ap[tuple(idx)])
+        return jnp.tensordot(taps, jnp.stack(slices), axes=(0, 0))
+
+    return conv_axis(conv_axis(x, 1), 0)
+
+
+def segment_stats_ref(image, threshold):
+    """``[area, fg_intensity_sum, total_sum]`` — see kernel docstring."""
+    x = jnp.asarray(image, dtype=jnp.float32)
+    thr = jnp.asarray(threshold, dtype=jnp.float32)
+    fg = (x > thr).astype(jnp.float32)
+    return jnp.stack([jnp.sum(fg), jnp.sum(fg * x), jnp.sum(x)])
+
+
+def local_maxima_count_ref(image, threshold):
+    """Strict 3x3 local maxima above threshold, -inf outside the image."""
+    x = jnp.asarray(image, dtype=jnp.float32)
+    thr = jnp.asarray(threshold, dtype=jnp.float32)
+    xp = jnp.pad(x, 1, constant_values=-jnp.inf)
+    h, w = x.shape
+    neighbours = []
+    for dr in (0, 1, 2):
+        for dc in (0, 1, 2):
+            if dr == 1 and dc == 1:
+                continue
+            neighbours.append(xp[dr : dr + h, dc : dc + w])
+    nb_max = jnp.max(jnp.stack(neighbours), axis=0)
+    is_max = (x > thr) & (x > nb_max)
+    return jnp.sum(is_max.astype(jnp.float32))
+
+
+def busy_block_ref(x, w, *, steps: int = 16):
+    """Python-loop reference of the busy chain."""
+    y = jnp.asarray(x, dtype=jnp.float32)
+    w = jnp.asarray(w, dtype=jnp.float32)
+    for _ in range(steps):
+        y = jnp.tanh(y @ w) + y * 1e-3
+    return y
+
+
+def otsu_threshold_ref(image, *, bins: int = 128):
+    """NumPy Otsu used to validate the L2 jnp implementation in model.py."""
+    x = np.asarray(image, dtype=np.float64).ravel()
+    lo, hi = float(x.min()), float(x.max())
+    if hi <= lo:
+        return lo
+    hist, edges = np.histogram(x, bins=bins, range=(lo, hi))
+    centers = (edges[:-1] + edges[1:]) / 2.0
+    total = hist.sum()
+    best_thr, best_var = lo, -1.0
+    w0 = 0.0
+    sum0 = 0.0
+    sum_all = float((hist * centers).sum())
+    for i in range(bins - 1):
+        w0 += hist[i]
+        sum0 += hist[i] * centers[i]
+        w1 = total - w0
+        if w0 == 0 or w1 == 0:
+            continue
+        m0 = sum0 / w0
+        m1 = (sum_all - sum0) / w1
+        var = w0 * w1 * (m0 - m1) ** 2
+        if var > best_var:
+            best_var = var
+            best_thr = centers[i]
+    return float(best_thr)

@@ -1,0 +1,108 @@
+"""Foreground statistics + nuclei (local-maxima) counting as Pallas kernels.
+
+Two kernels:
+
+* :func:`segment_stats` — a tiled reduction over ``(TILE_H, W)`` blocks
+  producing ``[foreground_area, foreground_intensity_sum, total_sum]`` for a
+  given threshold. Accumulation across grid steps uses the standard Pallas
+  revisiting-output pattern (init at step 0, ``+=`` afterwards).
+* :func:`local_maxima_count` — counts strict 3x3 local maxima above the
+  threshold; the analogue of CellProfiler's per-object nucleus detection on
+  the smoothed image. Runs as a single whole-image block: a 512x512 f32
+  image is 1 MiB, comfortably VMEM-resident; larger fields of view would
+  tile with a 1-row halo (documented in DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gaussian_blur import _pick_tile
+
+
+def _stats_kernel(x_ref, thr_ref, o_ref):
+    """Per-block partial stats, accumulated into the (3,) output."""
+    x = x_ref[...]
+    thr = thr_ref[0]
+    fg = (x > thr).astype(jnp.float32)
+    part = jnp.stack(
+        [jnp.sum(fg), jnp.sum(fg * x), jnp.sum(x)]
+    )
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += part
+
+
+@jax.jit
+def segment_stats(image: jax.Array, threshold: jax.Array) -> jax.Array:
+    """``[area, fg_intensity_sum, total_sum]`` of ``image`` vs ``threshold``.
+
+    ``area`` counts pixels strictly above the threshold; ``fg_intensity_sum``
+    sums their intensities; ``total_sum`` sums the whole image (used for the
+    mean-intensity feature downstream).
+    """
+    if image.ndim != 2:
+        raise ValueError(f"expected a 2-D image, got shape {image.shape}")
+    h, w = image.shape
+    tile_h = _pick_tile(h, 128)
+    thr = jnp.reshape(threshold.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        _stats_kernel,
+        out_shape=jax.ShapeDtypeStruct((3,), jnp.float32),
+        grid=(h // tile_h,),
+        in_specs=[
+            pl.BlockSpec((tile_h, w), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((3,), lambda i: (0,)),
+        interpret=True,
+    )(image.astype(jnp.float32), thr)
+
+
+def _maxima_kernel(x_ref, thr_ref, o_ref):
+    """Count pixels that strictly dominate their 8-neighbourhood, above thr.
+
+    Out-of-image neighbours are treated as -inf (border pixels can be
+    maxima), matching the ref oracle.
+    """
+    x = x_ref[...]
+    thr = thr_ref[0]
+    h, w = x.shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, (h, w), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (h, w), 1)
+    neg = jnp.float32(-jnp.inf)
+    is_max = x > thr
+    for dr in (-1, 0, 1):
+        for dc in (-1, 0, 1):
+            if dr == 0 and dc == 0:
+                continue
+            nb = jnp.roll(jnp.roll(x, -dr, axis=0), -dc, axis=1)
+            valid = (
+                (rows + dr >= 0)
+                & (rows + dr < h)
+                & (cols + dc >= 0)
+                & (cols + dc < w)
+            )
+            nb = jnp.where(valid, nb, neg)
+            is_max = is_max & (x > nb)
+    o_ref[...] = jnp.sum(is_max.astype(jnp.float32)).reshape((1,))
+
+
+@jax.jit
+def local_maxima_count(image: jax.Array, threshold: jax.Array) -> jax.Array:
+    """Number of strict 3x3 local maxima of ``image`` above ``threshold``."""
+    if image.ndim != 2:
+        raise ValueError(f"expected a 2-D image, got shape {image.shape}")
+    h, w = image.shape
+    thr = jnp.reshape(threshold.astype(jnp.float32), (1,))
+    out = pl.pallas_call(
+        _maxima_kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(image.astype(jnp.float32), thr)
+    return out[0]

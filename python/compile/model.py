@@ -1,0 +1,117 @@
+"""Layer-2 JAX compute graphs for the HarmonicIO reproduction.
+
+Two PE (processing-engine) payloads, both AOT-lowered by :mod:`aot` and
+executed from the rust coordinator via PJRT:
+
+* :func:`nuclei_pipeline` — the quantitative-microscopy use case (§VI-B of
+  the paper): the CellProfiler-like "count nuclei and measure their areas"
+  analysis. Illumination-normalize → Gaussian blur (Pallas) → Otsu threshold
+  → foreground stats + local-maxima nucleus count (Pallas).
+* :func:`busy_pipeline` — the synthetic use case (§VI-A): a calibrated
+  CPU-burner built from MXU-shaped matmul chains (Pallas).
+
+Everything here is build-time Python; the request path is pure rust.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import busy_block, gaussian_blur, local_maxima_count, segment_stats
+
+OTSU_BINS = 128
+
+
+def otsu_threshold(image: jax.Array, *, bins: int = OTSU_BINS) -> jax.Array:
+    """Otsu's threshold, fully vectorized (validated vs ref.otsu_threshold_ref).
+
+    Maximizes between-class variance over ``bins`` histogram cells. Returns
+    the lower bin-center in the degenerate constant-image case.
+    """
+    x = image.astype(jnp.float32).ravel()
+    lo = jnp.min(x)
+    hi = jnp.max(x)
+    span = jnp.where(hi > lo, hi - lo, jnp.float32(1.0))
+    # Histogram by bucket index (clamped so x==hi lands in the last bin).
+    idx = jnp.clip(((x - lo) / span * bins).astype(jnp.int32), 0, bins - 1)
+    hist = jnp.zeros((bins,), jnp.float32).at[idx].add(1.0)
+    centers = lo + (jnp.arange(bins, dtype=jnp.float32) + 0.5) * (span / bins)
+
+    w0 = jnp.cumsum(hist)
+    sum0 = jnp.cumsum(hist * centers)
+    total = w0[-1]
+    sum_all = sum0[-1]
+    w1 = total - w0
+    m0 = sum0 / jnp.maximum(w0, 1e-9)
+    m1 = (sum_all - sum0) / jnp.maximum(w1, 1e-9)
+    var = w0 * w1 * (m0 - m1) ** 2
+    # Only splits with both classes non-empty are candidates; the last bin
+    # never is (w1 == 0).
+    var = jnp.where((w0 > 0) & (w1 > 0), var, -1.0)
+    best = jnp.argmax(var[: bins - 1])
+    thr = centers[best]
+    return jnp.where(hi > lo, thr, lo)
+
+
+@functools.partial(jax.jit, static_argnames=("sigma",))
+def nuclei_pipeline(image: jax.Array, *, sigma: float = 2.0) -> jax.Array:
+    """Analyze one fluorescence image; returns ``f32[4]``:
+
+    ``[nucleus_count, foreground_area_px, mean_fg_intensity, otsu_threshold]``
+
+    Mirrors the paper's CellProfiler pipeline ("count the number of nuclei
+    and measure their areas"). The smoothed image is computed once and shared
+    by the threshold, the stats reduction and the maxima detector (no
+    recomputation in the lowered HLO — DESIGN.md §Perf L2).
+    """
+    x = image.astype(jnp.float32)
+    # Illumination normalization: remove the mean plane, rescale to [0, 1].
+    x = x - jnp.min(x)
+    x = x / jnp.maximum(jnp.max(x), 1e-6)
+    smooth = gaussian_blur(x, sigma=sigma)
+    thr = otsu_threshold(smooth)
+    stats = segment_stats(smooth, thr)  # [area, fg_sum, total_sum]
+    count = local_maxima_count(smooth, thr)
+    area = stats[0]
+    mean_fg = stats[1] / jnp.maximum(area, 1.0)
+    return jnp.stack([count, area, mean_fg, thr])
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def busy_pipeline(x: jax.Array, w: jax.Array, *, steps: int = 16) -> jax.Array:
+    """One calibrated unit of synthetic busy work (see kernels.busy)."""
+    return busy_block(x, w, steps=steps)
+
+
+def generate_image(
+    key: jax.Array,
+    *,
+    size: int = 128,
+    n_nuclei: int = 40,
+    nucleus_sigma: float = 2.5,
+    noise: float = 0.02,
+) -> jax.Array:
+    """Synthesize a fluorescence-microscopy-like field of view.
+
+    Nuclei are Gaussian blobs (the Hoechst-stained DNA of the paper's Huh-7
+    cells) on a dark background with additive sensor noise. Used by the
+    python tests; the rust workload generator (`workload/imagegen.rs`)
+    produces the same distribution for the E2E runs.
+    """
+    kpos, kamp, knoise = jax.random.split(key, 3)
+    # Keep centers away from the border so blobs stay well-formed.
+    centers = jax.random.uniform(
+        kpos, (n_nuclei, 2), minval=0.1 * size, maxval=0.9 * size
+    )
+    amps = jax.random.uniform(kamp, (n_nuclei,), minval=0.6, maxval=1.0)
+    yy = jnp.arange(size, dtype=jnp.float32)[:, None]
+    xx = jnp.arange(size, dtype=jnp.float32)[None, :]
+
+    def blob(c, a):
+        d2 = (yy - c[0]) ** 2 + (xx - c[1]) ** 2
+        return a * jnp.exp(-0.5 * d2 / nucleus_sigma**2)
+
+    img = jnp.sum(jax.vmap(blob)(centers, amps), axis=0)
+    img = img + noise * jax.random.normal(knoise, (size, size))
+    return jnp.clip(img, 0.0, None).astype(jnp.float32)

@@ -1,0 +1,213 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, sigmas and thresholds; every property asserts
+allclose (or exact equality for counting kernels) against ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import (
+    busy_block,
+    gaussian_blur,
+    gaussian_taps,
+    local_maxima_count,
+    segment_stats,
+)
+from compile.kernels import ref
+
+DIMS = st.sampled_from([8, 16, 24, 32, 48, 64])
+SIGMAS = st.sampled_from([0.8, 1.0, 2.0, 3.5])
+
+
+def rand_image(seed: int, h: int, w: int) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((h, w)), dtype=jnp.float32)
+
+
+class TestGaussianTaps:
+    def test_normalized(self):
+        for sigma in (0.5, 1.0, 2.0, 5.0):
+            taps = gaussian_taps(sigma)
+            assert abs(sum(taps) - 1.0) < 1e-12
+
+    def test_symmetric(self):
+        taps = gaussian_taps(2.0)
+        assert taps == taps[::-1]
+
+    def test_default_radius(self):
+        assert len(gaussian_taps(2.0)) == 2 * 6 + 1
+
+    def test_explicit_radius(self):
+        assert len(gaussian_taps(2.0, radius=3)) == 7
+
+    def test_rejects_nonpositive_sigma(self):
+        with pytest.raises(ValueError):
+            gaussian_taps(0.0)
+
+    def test_peak_at_center(self):
+        taps = gaussian_taps(1.5)
+        assert max(taps) == taps[len(taps) // 2]
+
+
+class TestGaussianBlur:
+    @settings(max_examples=20, deadline=None)
+    @given(h=DIMS, w=DIMS, sigma=SIGMAS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, h, w, sigma, seed):
+        x = rand_image(seed, h, w)
+        got = gaussian_blur(x, sigma=sigma)
+        want = ref.gaussian_blur_ref(x, sigma=sigma)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_preserves_shape_and_dtype(self):
+        x = rand_image(0, 24, 40)
+        y = gaussian_blur(x, sigma=1.5)
+        assert y.shape == x.shape and y.dtype == jnp.float32
+
+    def test_constant_image_interior(self):
+        # Away from borders a constant image is preserved exactly.
+        x = jnp.ones((32, 32), jnp.float32)
+        y = gaussian_blur(x, sigma=1.0)
+        np.testing.assert_allclose(y[8:-8, 8:-8], 1.0, rtol=1e-6)
+
+    def test_zero_padding_darkens_border(self):
+        x = jnp.ones((32, 32), jnp.float32)
+        y = gaussian_blur(x, sigma=2.0)
+        assert float(y[0, 0]) < 0.5  # corner sees 3 zero quadrants
+
+    def test_linearity(self):
+        a = rand_image(1, 16, 16)
+        b = rand_image(2, 16, 16)
+        lhs = gaussian_blur(a + 2.0 * b, sigma=1.0)
+        rhs = gaussian_blur(a, sigma=1.0) + 2.0 * gaussian_blur(b, sigma=1.0)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-5)
+
+    def test_tile_independence(self):
+        # Result must not depend on the grid tiling choice.
+        x = rand_image(3, 64, 64)
+        y1 = gaussian_blur(x, sigma=2.0, tile=8)
+        y2 = gaussian_blur(x, sigma=2.0, tile=64)
+        np.testing.assert_allclose(y1, y2, rtol=1e-6, atol=1e-6)
+
+    def test_rejects_non_2d(self):
+        with pytest.raises(ValueError):
+            gaussian_blur(jnp.zeros((4, 4, 3)))
+
+    @settings(max_examples=8, deadline=None)
+    @given(h=st.sampled_from([10, 14, 22]), w=st.sampled_from([18, 26, 34]))
+    def test_odd_sizes(self, h, w):
+        # Non-power-of-two dims exercise the divisor-tile fallback.
+        x = rand_image(7, h, w)
+        got = gaussian_blur(x, sigma=1.0)
+        want = ref.gaussian_blur_ref(x, sigma=1.0)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestSegmentStats:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        h=DIMS,
+        w=DIMS,
+        thr=st.floats(-1.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, h, w, thr, seed):
+        x = rand_image(seed, h, w)
+        got = segment_stats(x, jnp.float32(thr))
+        want = ref.segment_stats_ref(x, thr)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+    def test_all_background(self):
+        x = jnp.zeros((16, 16), jnp.float32)
+        got = segment_stats(x, jnp.float32(0.5))
+        np.testing.assert_allclose(got, [0.0, 0.0, 0.0])
+
+    def test_all_foreground(self):
+        x = jnp.ones((16, 16), jnp.float32)
+        got = segment_stats(x, jnp.float32(0.5))
+        np.testing.assert_allclose(got, [256.0, 256.0, 256.0])
+
+    def test_threshold_strict(self):
+        # Pixels exactly at the threshold are background.
+        x = jnp.full((8, 8), 0.5, jnp.float32)
+        got = segment_stats(x, jnp.float32(0.5))
+        assert float(got[0]) == 0.0
+
+    def test_tiled_accumulation(self):
+        # Tall image forces multiple grid steps; totals must still match.
+        x = rand_image(11, 64, 8)
+        got = segment_stats(x, jnp.float32(0.0))
+        want = ref.segment_stats_ref(x, 0.0)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+class TestLocalMaxima:
+    @settings(max_examples=20, deadline=None)
+    @given(h=DIMS, w=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, h, w, seed):
+        x = rand_image(seed, h, w)
+        got = local_maxima_count(x, jnp.float32(0.0))
+        want = ref.local_maxima_count_ref(x, 0.0)
+        assert float(got) == float(want)
+
+    def test_single_peak(self):
+        x = jnp.zeros((16, 16), jnp.float32).at[5, 7].set(1.0)
+        assert float(local_maxima_count(x, jnp.float32(0.1))) == 1.0
+
+    def test_two_separated_peaks(self):
+        x = (
+            jnp.zeros((16, 16), jnp.float32)
+            .at[3, 3]
+            .set(1.0)
+            .at[12, 12]
+            .set(0.8)
+        )
+        assert float(local_maxima_count(x, jnp.float32(0.1))) == 2.0
+
+    def test_plateau_is_not_strict_max(self):
+        x = jnp.zeros((8, 8), jnp.float32).at[4, 4].set(1.0).at[4, 5].set(1.0)
+        assert float(local_maxima_count(x, jnp.float32(0.1))) == 0.0
+
+    def test_border_peak_counts(self):
+        x = jnp.zeros((8, 8), jnp.float32).at[0, 0].set(1.0)
+        assert float(local_maxima_count(x, jnp.float32(0.1))) == 1.0
+
+    def test_threshold_suppresses(self):
+        x = jnp.zeros((8, 8), jnp.float32).at[4, 4].set(0.3)
+        assert float(local_maxima_count(x, jnp.float32(0.5))) == 0.0
+
+
+class TestBusyBlock:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n=st.sampled_from([8, 16, 32]),
+        steps=st.sampled_from([1, 4, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, n, steps, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((n, n)) * 0.1, jnp.float32)
+        got = busy_block(x, w, steps=steps)
+        want = ref.busy_block_ref(x, w, steps=steps)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_state_bounded(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
+        y = busy_block(x, w, steps=64)
+        assert bool(jnp.all(jnp.isfinite(y)))
+        assert float(jnp.max(jnp.abs(y))) < 2.0
+
+    def test_rejects_mismatched_shapes(self):
+        with pytest.raises(ValueError):
+            busy_block(jnp.zeros((8, 8)), jnp.zeros((4, 4)))
+
+    def test_rejects_non_square(self):
+        with pytest.raises(ValueError):
+            busy_block(jnp.zeros((8, 4)), jnp.zeros((8, 4)))

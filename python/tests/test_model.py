@@ -1,0 +1,133 @@
+"""L2 pipeline tests: Otsu, the nuclei pipeline on synthetic microscopy
+images (does it count the planted nuclei?), and the busy pipeline."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+class TestOtsu:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_matches_numpy_ref_bimodal(self, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.normal(0.2, 0.05, 600)
+        b = rng.normal(0.8, 0.05, 400)
+        x = jnp.asarray(np.concatenate([a, b]).reshape(40, 25), jnp.float32)
+        got = float(model.otsu_threshold(x))
+        want = ref.otsu_threshold_ref(x, bins=model.OTSU_BINS)
+        # Same algorithm, same binning — agree to within one bin width.
+        bin_w = float(jnp.max(x) - jnp.min(x)) / model.OTSU_BINS
+        assert abs(got - want) <= bin_w + 1e-6
+
+    def test_separates_bimodal(self):
+        rng = np.random.default_rng(0)
+        lo = rng.normal(0.1, 0.02, 800)
+        hi = rng.normal(0.9, 0.02, 200)
+        x = jnp.asarray(np.concatenate([lo, hi]).reshape(40, 25), jnp.float32)
+        thr = float(model.otsu_threshold(x))
+        # With an 80/20 class imbalance Otsu lands just above the low mode
+        # (brute-force maximization agrees); it must separate the high mode.
+        assert 0.14 < thr < 0.8
+        fg_frac = float(jnp.mean(x > thr))
+        assert 0.15 < fg_frac < 0.35
+
+    def test_constant_image(self):
+        x = jnp.full((8, 8), 0.42, jnp.float32)
+        assert float(model.otsu_threshold(x)) == pytest.approx(0.42)
+
+    def test_threshold_within_range(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.uniform(-5, 5, (16, 16)), jnp.float32)
+        thr = float(model.otsu_threshold(x))
+        assert float(jnp.min(x)) <= thr <= float(jnp.max(x))
+
+
+class TestGenerateImage:
+    def test_shape_dtype_range(self):
+        img = model.generate_image(jax.random.key(0), size=64, n_nuclei=10)
+        assert img.shape == (64, 64)
+        assert img.dtype == jnp.float32
+        assert float(jnp.min(img)) >= 0.0
+
+    def test_deterministic_in_key(self):
+        a = model.generate_image(jax.random.key(7), size=32, n_nuclei=5)
+        b = model.generate_image(jax.random.key(7), size=32, n_nuclei=5)
+        np.testing.assert_array_equal(a, b)
+
+    def test_brighter_with_more_nuclei(self):
+        k = jax.random.key(1)
+        lo = model.generate_image(k, size=64, n_nuclei=4)
+        hi = model.generate_image(k, size=64, n_nuclei=60)
+        assert float(jnp.sum(hi)) > float(jnp.sum(lo))
+
+
+class TestNucleiPipeline:
+    def test_output_shape(self):
+        img = model.generate_image(jax.random.key(0), size=64, n_nuclei=12)
+        out = model.nuclei_pipeline(img)
+        assert out.shape == (4,)
+        assert out.dtype == jnp.float32
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        n=st.sampled_from([5, 10, 20, 35]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_counts_planted_nuclei(self, n, seed):
+        # Well-separated blobs: the maxima count should be close to the
+        # number planted (merged blobs can reduce it slightly).
+        img = model.generate_image(
+            jax.random.key(seed), size=128, n_nuclei=n, noise=0.01
+        )
+        count = float(model.nuclei_pipeline(img)[0])
+        assert 0.5 * n <= count <= 1.5 * n + 2
+
+    def test_area_scales_with_density(self):
+        k = jax.random.key(2)
+        lo = model.nuclei_pipeline(
+            model.generate_image(k, size=128, n_nuclei=6, noise=0.01)
+        )
+        hi = model.nuclei_pipeline(
+            model.generate_image(k, size=128, n_nuclei=48, noise=0.01)
+        )
+        assert float(hi[1]) > float(lo[1])
+
+    def test_empty_image_few_detections(self):
+        # Pure noise: Otsu still splits, but detections stay modest and the
+        # pipeline must not produce NaNs.
+        img = 0.02 * jax.random.normal(jax.random.key(3), (64, 64))
+        out = model.nuclei_pipeline(jnp.abs(img))
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    def test_invariant_to_intensity_scale(self):
+        # The pipeline normalizes illumination, so scaling the image should
+        # not change count/area materially.
+        img = model.generate_image(jax.random.key(4), size=64, n_nuclei=10)
+        a = model.nuclei_pipeline(img)
+        b = model.nuclei_pipeline(img * 7.5)
+        assert float(a[0]) == pytest.approx(float(b[0]), abs=2)
+        assert float(a[1]) == pytest.approx(float(b[1]), rel=0.1)
+
+
+class TestBusyPipeline:
+    def test_matches_kernel_chain(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((16, 16)) * 0.1, jnp.float32)
+        got = model.busy_pipeline(x, w, steps=8)
+        want = ref.busy_block_ref(x, w, steps=8)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_deterministic(self):
+        x = jnp.ones((8, 8), jnp.float32)
+        w = jnp.eye(8, dtype=jnp.float32)
+        a = model.busy_pipeline(x, w, steps=4)
+        b = model.busy_pipeline(x, w, steps=4)
+        np.testing.assert_array_equal(a, b)

@@ -1,0 +1,76 @@
+//! Bin-packing micro-benchmarks (L3 hot path §Perf target: ≥1 M items/s
+//! for First-Fit on IRM-shaped instances) + the A1 quality comparison.
+
+use harmonicio::bench::{black_box, Bencher};
+use harmonicio::binpacking::{
+    analysis, BestFit, Bin, BinPacker, FirstFit, FirstFitDecreasing, FirstFitTree, Harmonic,
+    Item, NextFit, WorstFit,
+};
+use harmonicio::util::rng::Rng;
+
+fn instance(n: usize, seed: u64) -> Vec<Item> {
+    let mut rng = Rng::seeded(seed);
+    (0..n)
+        .map(|i| {
+            let size = if rng.next_f64() < 0.8 {
+                rng.uniform(0.08, 0.2)
+            } else {
+                rng.uniform(0.2, 0.9)
+            };
+            Item::new(i as u64, size)
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("# bench_binpacking — algorithm throughput + quality");
+
+    for &n in &[100usize, 1_000, 10_000] {
+        let items = instance(n, 42);
+        b.bench_throughput(&format!("first-fit/{n}"), Some(n as u64), |iters| {
+            for _ in 0..iters {
+                black_box(FirstFit.pack(black_box(&items), Vec::new()));
+            }
+        });
+        b.bench_throughput(&format!("first-fit-tree/{n}"), Some(n as u64), |iters| {
+            for _ in 0..iters {
+                black_box(FirstFitTree.pack(black_box(&items), Vec::new()));
+            }
+        });
+    }
+
+    let items = instance(1_000, 42);
+    let packers: Vec<(&str, Box<dyn BinPacker>)> = vec![
+        ("next-fit", Box::new(NextFit)),
+        ("best-fit", Box::new(BestFit)),
+        ("worst-fit", Box::new(WorstFit)),
+        ("ffd", Box::new(FirstFitDecreasing)),
+        ("harmonic-7", Box::new(Harmonic { k: 7 })),
+    ];
+    for (name, p) in &packers {
+        b.bench_throughput(&format!("{name}/1000"), Some(1_000), |iters| {
+            for _ in 0..iters {
+                black_box(p.pack(black_box(&items), Vec::new()));
+            }
+        });
+    }
+
+    // Incremental insertion (the IRM's per-cycle pattern: pre-loaded bins).
+    b.bench("first-fit/pack_one_into_64_bins", || {
+        let mut bins: Vec<Bin> = (0..64).map(|i| Bin::with_used(0.01 * i as f64)).collect();
+        black_box(FirstFit.pack_one(Item::new(0, 0.3), &mut bins));
+    });
+
+    // Quality summary (printed alongside the timings).
+    println!("\n# quality on 1000-item IRM-shaped instance");
+    let all: Vec<&dyn BinPacker> = vec![&FirstFit, &NextFit, &BestFit, &WorstFit];
+    for (name, stats) in analysis::compare(&all, &items) {
+        println!(
+            "  {name:<12} bins={:<5} ideal={:<5} ratio={:.3} mean_load={:.3}",
+            stats.bins_used, stats.ideal_bins, stats.ratio, stats.mean_load
+        );
+    }
+
+    b.write_csv("results/bench_binpacking.csv").ok();
+}

@@ -1,0 +1,89 @@
+//! End-to-end cluster benchmarks: simulation throughput (events and
+//! messages per wall-second) and the live PJRT path (images/s through the
+//! full coordinator). These are the §Perf L3 numbers in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use harmonicio::bench::{black_box, Bencher};
+use harmonicio::experiments::microscopy;
+use harmonicio::master::{LiveCluster, LiveConfig};
+use harmonicio::sim::SimCluster;
+use harmonicio::types::Millis;
+use harmonicio::workload::{ImageGen, MicroscopyConfig, MicroscopyTrace};
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("# bench_e2e — simulation + live-path throughput");
+
+    // --- Simulation throughput: one full §VI-B run per iteration. ---
+    let trace = MicroscopyTrace::new(MicroscopyConfig::default()).run_trace(0);
+    let t0 = Instant::now();
+    let mut cluster = SimCluster::new(microscopy::cluster_config(1));
+    trace.schedule_into(&mut cluster);
+    let makespan = cluster
+        .run_to_completion(trace.len(), Millis::from_secs(4000))
+        .expect("completes");
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "bench sim/microscopy_full_run          {wall:>8.3} s wall for {:.0} s simulated ({:.0}x real time)",
+        makespan.as_secs_f64(),
+        makespan.as_secs_f64() / wall
+    );
+
+    // Tick rate microbench on a loaded cluster.
+    let mut cluster = SimCluster::new(microscopy::cluster_config(2));
+    trace.schedule_into(&mut cluster);
+    cluster.run_until(Millis::from_secs(120)); // warm: 5 workers, ~40 PEs
+    let mut t = cluster.now();
+    b.bench_throughput("sim/tick_loaded_cluster", Some(1), |iters| {
+        for _ in 0..iters {
+            t = t + Millis(100);
+            cluster.tick(black_box(t));
+        }
+    });
+
+    // --- Live PJRT path (needs `make artifacts`). ---
+    match LiveCluster::new(
+        "artifacts",
+        LiveConfig {
+            max_pes: 4,
+            initial_pes: 4,
+            ..LiveConfig::default()
+        },
+    ) {
+        Ok(mut live) => {
+            let mut gen = ImageGen::new(3, 128);
+            // Warm-up: each PE thread compiles its own runtime (container
+            // boot); measure steady-state throughput after that.
+            let warm = gen.plate(4);
+            for (_, px) in &warm {
+                live.stream(px.clone());
+            }
+            live.drain_until(4, std::time::Duration::from_secs(600))
+                .expect("warmup");
+            let n = 32;
+            let plate = gen.plate(n);
+            let t0 = Instant::now();
+            for (_, px) in &plate {
+                live.stream(px.clone());
+            }
+            live.drain_until(4 + n as u64, std::time::Duration::from_secs(600))
+                .expect("live drain");
+            let dt = t0.elapsed().as_secs_f64();
+            println!(
+                "bench live/nuclei_throughput           {:>8.2} img/s ({} images, 4 PEs, {:.2}s)",
+                n as f64 / dt,
+                n,
+                dt
+            );
+            println!(
+                "bench live/mean_service                {:>8.1} ms/img (cpu {:.1} ms)",
+                live.stats.mean_service().as_secs_f64() * 1e3,
+                (live.stats.total_cpu / live.stats.completed.max(1) as u32).as_secs_f64() * 1e3,
+            );
+        }
+        Err(e) => println!("(skipping live bench: {e:#})"),
+    }
+
+    b.write_csv("results/bench_e2e.csv").ok();
+}

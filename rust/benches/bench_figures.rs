@@ -1,0 +1,32 @@
+//! Figure-regeneration benchmarks: wall time of each experiment driver
+//! (§Perf target: the whole figure suite under 60 s) — one bench per paper
+//! figure, so `cargo bench` exercises exactly what the paper reports.
+
+use std::time::Instant;
+
+use harmonicio::experiments;
+
+fn main() {
+    println!("# bench_figures — per-figure regeneration wall time");
+    let out = std::env::temp_dir().join("hio_bench_figures");
+    std::fs::create_dir_all(&out).unwrap();
+    let out = out.to_str().unwrap();
+
+    let mut total = 0.0;
+    let mut rows = String::from("figure,seconds,checks_passed\n");
+    for fig in [
+        "fig3", "fig4", "fig5", "fig7", "fig8", "fig9", "fig10", "headline", "warmup",
+    ] {
+        let t0 = Instant::now();
+        let reports = experiments::run(fig, out, 42).expect(fig);
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        let ok = reports.iter().all(|r| r.all_passed());
+        println!("bench figure/{fig:<9} {dt:>8.2}s   checks: {}", if ok { "PASS" } else { "FAIL" });
+        rows.push_str(&format!("{fig},{dt:.3},{ok}\n"));
+    }
+    println!("total figure suite: {total:.1}s (target < 60s)");
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_figures.csv", rows).ok();
+    assert!(total < 300.0, "figure suite too slow: {total:.1}s");
+}

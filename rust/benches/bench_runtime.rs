@@ -1,0 +1,80 @@
+//! PJRT runtime benchmarks (L1/L2 request-path cost): artifact execution
+//! latency for the nuclei pipeline and the busy kernel, plus the master's
+//! routing decision (the L3 hot path that must stay sub-microsecond).
+
+use harmonicio::bench::{black_box, Bencher};
+use harmonicio::master::Master;
+use harmonicio::protocol::{PeState, PeStatus, WorkerReport};
+use harmonicio::runtime::Runtime;
+use harmonicio::types::{
+    CpuFraction, ImageName, MessageId, Millis, PeId, StreamMessage, WorkerId,
+};
+use harmonicio::workload::ImageGen;
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("# bench_runtime — PJRT execution + master routing hot path");
+
+    // --- PJRT artifact execution (needs `make artifacts`). ---
+    match Runtime::load_dir("artifacts") {
+        Ok(rt) => {
+            let mut gen = ImageGen::new(1, 128);
+            let img = gen.generate(40);
+            b.bench("pjrt/nuclei_128", || {
+                black_box(rt.analyze_image(black_box(&img)).unwrap());
+            });
+
+            let exe = rt.get_kind("busy").unwrap();
+            let n = exe.spec.inputs[0][0];
+            let x: Vec<f32> = (0..n * n).map(|i| (i % 7) as f32 * 0.1).collect();
+            let w: Vec<f32> = (0..n * n).map(|i| (i % 5) as f32 * 0.05).collect();
+            b.bench(&format!("pjrt/busy_{n}x16"), || {
+                black_box(exe.run_f32(&[black_box(&x), black_box(&w)]).unwrap());
+            });
+        }
+        Err(e) => {
+            println!("(skipping PJRT benches: {e:#})");
+        }
+    }
+
+    // --- Master routing decision with a realistic registry. ---
+    let mut master = Master::new();
+    let image = ImageName::new("cellprofiler:3.1.9");
+    for w in 0..5u64 {
+        master.ingest_report(WorkerReport {
+            worker: WorkerId(w),
+            at: Millis(0),
+            total_cpu: CpuFraction::new(0.5),
+            per_image: vec![(image.clone(), CpuFraction::new(0.125))],
+            pes: (0..8)
+                .map(|p| PeStatus {
+                    pe: PeId(w * 100 + p),
+                    image: image.clone(),
+                    state: if p == 7 { PeState::Idle } else { PeState::Busy },
+                    cpu: CpuFraction::new(0.12),
+                })
+                .collect(),
+        });
+    }
+    let mut msg_id = 0u64;
+    b.bench("master/route_decision", || {
+        let msg = StreamMessage {
+            id: MessageId(msg_id),
+            image: image.clone(),
+            payload_bytes: 4 << 20,
+            service_demand: Millis(15_000),
+            created_at: Millis(0),
+        };
+        msg_id += 1;
+        let d = master.route(black_box(msg));
+        black_box(&d);
+        // Free the PE again so the registry state stays constant.
+        if let harmonicio::protocol::RouteDecision::Direct { worker, pe } = d {
+            master.job_completed(worker, pe);
+        } else {
+            let _ = master.drain_backlog();
+        }
+    });
+
+    b.write_csv("results/bench_runtime.csv").ok();
+}

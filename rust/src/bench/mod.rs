@@ -1,0 +1,249 @@
+//! Criterion-like micro-benchmark harness (criterion is not in the offline
+//! closure). Provides warm-up, calibrated iteration counts, robust statistics
+//! (median + MAD), throughput reporting, and a black-box sink.
+//!
+//! Used by the `rust/benches/*.rs` targets (declared `harness = false`).
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from deleting a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Median time per iteration, nanoseconds.
+    pub median_ns: f64,
+    /// Median absolute deviation, nanoseconds.
+    pub mad_ns: f64,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+    /// Optional items-per-iteration for throughput reporting.
+    pub throughput_items: Option<u64>,
+}
+
+impl Measurement {
+    pub fn items_per_sec(&self) -> Option<f64> {
+        self.throughput_items
+            .map(|n| n as f64 / (self.median_ns * 1e-9))
+    }
+}
+
+/// Benchmark runner with fixed measurement budget per case.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub samples: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // Env knobs so `cargo bench` can be made quick or thorough.
+        let ms = |var: &str, default_ms: u64| {
+            Duration::from_millis(
+                std::env::var(var)
+                    .ok()
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(default_ms),
+            )
+        };
+        Bencher {
+            warmup: ms("BENCH_WARMUP_MS", 200),
+            measure: ms("BENCH_MEASURE_MS", 800),
+            samples: 30,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which performs ONE logical iteration per call.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &Measurement {
+        self.bench_throughput(name, None, move |iters| {
+            for _ in 0..iters {
+                f();
+            }
+        })
+    }
+
+    /// Benchmark with an item count (for items/sec reporting). `f` receives
+    /// the number of iterations to run back-to-back.
+    pub fn bench_throughput(
+        &mut self,
+        name: &str,
+        items_per_iter: Option<u64>,
+        mut f: impl FnMut(u64),
+    ) -> &Measurement {
+        // Warm-up + calibration: find iters per sample so one sample takes
+        // roughly measure/samples.
+        let mut iters: u64 = 1;
+        let warm_end = Instant::now() + self.warmup;
+        loop {
+            let t0 = Instant::now();
+            f(iters);
+            let dt = t0.elapsed();
+            if Instant::now() >= warm_end && dt >= Duration::from_micros(10) {
+                let target = self.measure / self.samples as u32;
+                let scale = target.as_secs_f64() / dt.as_secs_f64().max(1e-9);
+                iters = ((iters as f64 * scale).ceil() as u64).clamp(1, 1_000_000_000);
+                break;
+            }
+            if dt < Duration::from_millis(1) {
+                iters = iters.saturating_mul(2).max(iters + 1);
+            }
+        }
+
+        let mut per_iter_ns: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f(iters);
+            let dt = t0.elapsed();
+            per_iter_ns.push(dt.as_nanos() as f64 / iters as f64);
+        }
+        per_iter_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = per_iter_ns[per_iter_ns.len() / 2];
+        let mut devs: Vec<f64> = per_iter_ns.iter().map(|x| (x - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[devs.len() / 2];
+
+        let m = Measurement {
+            name: name.to_string(),
+            median_ns: median,
+            mad_ns: mad,
+            iters_per_sample: iters,
+            samples: self.samples,
+            throughput_items: items_per_iter,
+        };
+        print_measurement(&m);
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Write all results as CSV (one file per bench target, used by the
+    /// perf log in EXPERIMENTS.md §Perf).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = String::from("name,median_ns,mad_ns,iters,samples,items_per_sec\n");
+        for m in &self.results {
+            out.push_str(&format!(
+                "{},{:.1},{:.1},{},{},{}\n",
+                m.name,
+                m.median_ns,
+                m.mad_ns,
+                m.iters_per_sample,
+                m.samples,
+                m.items_per_sec().map(|t| format!("{t:.0}")).unwrap_or_default()
+            ));
+        }
+        std::fs::write(path, out)
+    }
+}
+
+fn print_measurement(m: &Measurement) {
+    let human = |ns: f64| -> String {
+        if ns < 1e3 {
+            format!("{ns:.1} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    };
+    let tp = m
+        .items_per_sec()
+        .map(|t| format!("  ({t:.0} items/s)"))
+        .unwrap_or_default();
+    println!(
+        "bench {:<44} {:>12} ± {:<10}{tp}",
+        m.name,
+        human(m.median_ns),
+        human(m.mad_ns)
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> Bencher {
+        Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(30),
+            samples: 5,
+            results: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = quick();
+        let m = b.bench("sum", || {
+            let s: u64 = black_box((0..1000u64).sum());
+            black_box(s);
+        });
+        assert!(m.median_ns > 0.0);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut b = quick();
+        let m = b.bench_throughput("batch", Some(100), |iters| {
+            for _ in 0..iters {
+                black_box((0..100u64).product::<u64>());
+            }
+        });
+        assert!(m.items_per_sec().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn ordering_sane_for_different_costs() {
+        let mut b = quick();
+        let cheap = b.bench("cheap", || {
+            black_box(1u64 + black_box(1));
+        });
+        let cheap_ns = cheap.median_ns;
+        let costly = b.bench("costly", || {
+            let mut acc = 0u64;
+            for i in 0..20_000u64 {
+                acc = acc.wrapping_add(black_box(i) * 31);
+            }
+            black_box(acc);
+        });
+        assert!(
+            costly.median_ns > cheap_ns,
+            "costly {} <= cheap {}",
+            costly.median_ns,
+            cheap_ns
+        );
+    }
+
+    #[test]
+    fn csv_written() {
+        let mut b = quick();
+        b.bench("x", || {
+            black_box(2u64.pow(black_box(10)));
+        });
+        let path = std::env::temp_dir().join("harmonicio_bench_test.csv");
+        b.write_csv(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("name,median_ns"));
+        assert!(text.lines().count() >= 2);
+    }
+}

@@ -1,0 +1,467 @@
+//! The Any-Fit family (paper Algorithm 1) + FFD and Harmonic(k).
+//!
+//! All algorithms consume items strictly in sequence order (online: "each
+//! item in the input sequence is assigned one by one without knowledge about
+//! the following items") except [`FirstFitDecreasing`], the offline
+//! comparator used to estimate how far the online result is from optimal.
+
+use super::{Bin, Item, Packing};
+
+/// A bin-packing algorithm. `pack` starts from `initial` bins (possibly
+/// partially used — live workers with PEs already placed) and never moves
+/// existing load; it only adds the new `items`.
+pub trait BinPacker {
+    fn name(&self) -> &'static str;
+
+    fn pack(&self, items: &[Item], initial: Vec<Bin>) -> Packing;
+
+    /// Online single-item insertion (the default goes through `pack`).
+    fn pack_one(&self, item: Item, bins: &mut Vec<Bin>) -> usize {
+        let packing = self.pack(std::slice::from_ref(&item), std::mem::take(bins));
+        *bins = packing.bins;
+        packing.assignments[0]
+    }
+}
+
+/// Search criterion of an Any-Fit algorithm: which open bin takes the item?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AnyFit {
+    /// Lowest-index bin that fits (R = 1.7).
+    First,
+    /// Only the most recently opened bin is considered (R = 2).
+    Next,
+    /// Fitting bin with the *least* residual space (R = 1.7).
+    Best,
+    /// Fitting bin with the *most* residual space (R = 2).
+    Worst,
+}
+
+fn any_fit_select(rule: AnyFit, bins: &[Bin], item: &Item, cursor: usize) -> Option<usize> {
+    match rule {
+        AnyFit::First => bins.iter().position(|b| b.fits(item)),
+        AnyFit::Next => {
+            if cursor < bins.len() && bins[cursor].fits(item) {
+                Some(cursor)
+            } else {
+                None
+            }
+        }
+        AnyFit::Best => bins
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.fits(item))
+            .min_by(|(_, a), (_, b)| a.residual().partial_cmp(&b.residual()).unwrap())
+            .map(|(i, _)| i),
+        AnyFit::Worst => bins
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.fits(item))
+            .max_by(|(_, a), (_, b)| a.residual().partial_cmp(&b.residual()).unwrap())
+            .map(|(i, _)| i),
+    }
+}
+
+fn any_fit_pack(rule: AnyFit, items: &[Item], initial: Vec<Bin>) -> Packing {
+    let mut bins = initial;
+    // Next-Fit's "current" bin starts at the last existing bin.
+    let mut cursor = bins.len().saturating_sub(1);
+    let mut assignments = Vec::with_capacity(items.len());
+    for item in items {
+        let choice = any_fit_select(rule, &bins, item, cursor);
+        let idx = match choice {
+            Some(i) => i,
+            None => {
+                // Algorithm 1: a new bin is generated only when no active
+                // bin can fit the next item.
+                bins.push(Bin::new());
+                cursor = bins.len() - 1;
+                cursor
+            }
+        };
+        bins[idx].push(*item);
+        assignments.push(idx);
+    }
+    Packing { assignments, bins }
+}
+
+macro_rules! any_fit_packer {
+    ($(#[$doc:meta])* $name:ident, $rule:expr, $label:literal) => {
+        $(#[$doc])*
+        #[derive(Clone, Copy, Debug, Default)]
+        pub struct $name;
+
+        impl BinPacker for $name {
+            fn name(&self) -> &'static str {
+                $label
+            }
+
+            fn pack(&self, items: &[Item], initial: Vec<Bin>) -> Packing {
+                any_fit_pack($rule, items, initial)
+            }
+        }
+    };
+}
+
+any_fit_packer!(
+    /// First-Fit: the paper's algorithm of choice (R = 1.7, O(n log n) with
+    /// a tree index — see [`FirstFitTree`](crate::binpacking::algorithms) in
+    /// the bench for the indexed variant).
+    FirstFit,
+    AnyFit::First,
+    "first-fit"
+);
+any_fit_packer!(
+    /// Next-Fit: only the most recent bin stays open (R = 2).
+    NextFit,
+    AnyFit::Next,
+    "next-fit"
+);
+any_fit_packer!(
+    /// Best-Fit: tightest fitting bin (R = 1.7).
+    BestFit,
+    AnyFit::Best,
+    "best-fit"
+);
+any_fit_packer!(
+    /// Worst-Fit: emptiest fitting bin (R = 2).
+    WorstFit,
+    AnyFit::Worst,
+    "worst-fit"
+);
+
+/// Offline First-Fit-Decreasing (sorts by size, descending; 11/9·OPT+6/9).
+/// Not online — used purely as the quality yardstick in the ablations.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FirstFitDecreasing;
+
+impl BinPacker for FirstFitDecreasing {
+    fn name(&self) -> &'static str {
+        "first-fit-decreasing"
+    }
+
+    fn pack(&self, items: &[Item], initial: Vec<Bin>) -> Packing {
+        let mut order: Vec<usize> = (0..items.len()).collect();
+        order.sort_by(|&a, &b| items[b].size.partial_cmp(&items[a].size).unwrap());
+        let sorted: Vec<Item> = order.iter().map(|&i| items[i]).collect();
+        let packing = any_fit_pack(AnyFit::First, &sorted, initial);
+        // Un-permute assignments back to input order.
+        let mut assignments = vec![0usize; items.len()];
+        for (sorted_pos, &orig) in order.iter().enumerate() {
+            assignments[orig] = packing.assignments[sorted_pos];
+        }
+        Packing {
+            assignments,
+            bins: packing.bins,
+        }
+    }
+}
+
+/// Harmonic(k) (Lee & Lee 1985): items are classified by size into harmonic
+/// intervals `(1/(j+1), 1/j]`; each class packs Next-Fit into its own bins
+/// (class j bins hold exactly j items). Pre-existing bins are treated as
+/// closed: Harmonic never mixes classes, so it only ever opens fresh bins.
+#[derive(Clone, Copy, Debug)]
+pub struct Harmonic {
+    pub k: usize,
+}
+
+impl Default for Harmonic {
+    fn default() -> Self {
+        Harmonic { k: 7 }
+    }
+}
+
+impl BinPacker for Harmonic {
+    fn name(&self) -> &'static str {
+        "harmonic-k"
+    }
+
+    fn pack(&self, items: &[Item], initial: Vec<Bin>) -> Packing {
+        assert!(self.k >= 2, "harmonic needs k >= 2");
+        let mut bins = initial;
+        // Per class j (1..=k): open bin index + count of items inside.
+        let mut open: Vec<Option<(usize, usize)>> = vec![None; self.k + 1];
+        let mut assignments = Vec::with_capacity(items.len());
+        for item in items {
+            // class j such that size in (1/(j+1), 1/j]; sizes <= 1/k go to k.
+            let mut j = (1.0 / item.size).floor() as usize;
+            if j < 1 {
+                j = 1;
+            }
+            let class = j.min(self.k);
+            let capacity_items = class; // class-j bin holds j items of size <= 1/j
+            let idx = match open[class] {
+                Some((idx, count)) if count < capacity_items && bins[idx].fits(item) => {
+                    open[class] = Some((idx, count + 1));
+                    idx
+                }
+                _ => {
+                    bins.push(Bin::new());
+                    let idx = bins.len() - 1;
+                    open[class] = Some((idx, 1));
+                    idx
+                }
+            };
+            bins[idx].push(*item);
+            assignments.push(idx);
+        }
+        Packing { assignments, bins }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{self, Config};
+    use crate::util::rng::Rng;
+
+    fn items(sizes: &[f64]) -> Vec<Item> {
+        sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| Item::new(i as u64, s))
+            .collect()
+    }
+
+    #[test]
+    fn first_fit_textbook_sequence() {
+        // Classic example: FF([0.5, 0.7, 0.5, 0.2, 0.4, 0.2, 0.5, 0.1, 0.6])
+        let its = items(&[0.5, 0.7, 0.5, 0.2, 0.4, 0.2, 0.5, 0.1, 0.6]);
+        let p = FirstFit.pack(&its, Vec::new());
+        p.check(&its).unwrap();
+        // item0 (0.5) -> bin0; item1 (0.7) -> bin1; item2 (0.5) -> bin0;
+        // item3 (0.2) -> bin1; item4 (0.4) -> bin2; ...
+        assert_eq!(p.assignments[0], 0);
+        assert_eq!(p.assignments[1], 1);
+        assert_eq!(p.assignments[2], 0);
+        assert_eq!(p.assignments[3], 1);
+        assert_eq!(p.assignments[4], 2);
+        // Final loads: b0=1.0, b1=1.0 (0.7+0.2+0.1), b2=0.6, b3=0.5, b4=0.6.
+        assert_eq!(p.bins_used(), 5);
+    }
+
+    #[test]
+    fn first_fit_prefers_lowest_index() {
+        let its = items(&[0.6, 0.6, 0.3]);
+        let p = FirstFit.pack(&its, Vec::new());
+        // 0.3 fits into bin0 (0.6 used) — lowest index, even though bin1
+        // has identical residual.
+        assert_eq!(p.assignments[2], 0);
+    }
+
+    #[test]
+    fn next_fit_never_looks_back() {
+        let its = items(&[0.6, 0.6, 0.3]);
+        let p = NextFit.pack(&its, Vec::new());
+        // 0.3 goes into the current (last) bin, not bin0.
+        assert_eq!(p.assignments[2], 1);
+    }
+
+    #[test]
+    fn best_fit_picks_tightest() {
+        // bins: [0.7 used], [0.5 used]; item 0.3 fits both; Best-Fit picks
+        // the one leaving least residual -> the 0.7 bin.
+        let initial = vec![Bin::with_used(0.7), Bin::with_used(0.5)];
+        let mut bins = initial.clone();
+        let idx = BestFit.pack_one(Item::new(9, 0.3), &mut bins);
+        assert_eq!(idx, 0);
+        // Worst-Fit picks the emptiest.
+        let mut bins = initial;
+        let idx = WorstFit.pack_one(Item::new(9, 0.3), &mut bins);
+        assert_eq!(idx, 1);
+    }
+
+    #[test]
+    fn respects_preexisting_load() {
+        let initial = vec![Bin::with_used(0.95)];
+        let its = items(&[0.2]);
+        let p = FirstFit.pack(&its, initial);
+        assert_eq!(p.assignments[0], 1, "must open a new bin");
+    }
+
+    #[test]
+    fn ffd_beats_or_ties_ff_on_adversarial_input() {
+        // Ascending sizes are First-Fit's bad case.
+        let sizes: Vec<f64> = (1..=40).map(|i| 0.1 + 0.02 * (i % 10) as f64).collect();
+        let its = items(&sizes);
+        let ff = FirstFit.pack(&its, Vec::new()).bins_used();
+        let ffd = FirstFitDecreasing.pack(&its, Vec::new()).bins_used();
+        assert!(ffd <= ff, "ffd={ffd} ff={ff}");
+    }
+
+    #[test]
+    fn ffd_assignments_follow_input_order() {
+        let its = items(&[0.2, 0.9]);
+        let p = FirstFitDecreasing.pack(&its, Vec::new());
+        p.check(&its).unwrap();
+        // 0.9 is packed first (bin 0), then 0.2 (doesn't fit -> bin 1).
+        assert_eq!(p.assignments[1], 0);
+        assert_eq!(p.assignments[0], 1);
+    }
+
+    #[test]
+    fn harmonic_segregates_classes() {
+        let its = items(&[0.6, 0.35, 0.34, 0.2, 0.19, 0.18]);
+        let p = Harmonic { k: 4 }.pack(&its, Vec::new());
+        p.check(&its).unwrap();
+        // Class 1 (0.6), class 2 (0.35, 0.34 -> one bin of 2), class 4/5
+        // items share no bin with other classes.
+        assert_eq!(p.assignments[1], p.assignments[2]);
+        assert_ne!(p.assignments[0], p.assignments[1]);
+    }
+
+    #[test]
+    fn harmonic_ignores_preexisting_bins() {
+        let p = Harmonic::default().pack(&items(&[0.5]), vec![Bin::with_used(0.1)]);
+        assert_eq!(p.assignments[0], 1);
+    }
+
+    // ---- property tests over the whole family ----
+
+    fn packers() -> Vec<Box<dyn BinPacker>> {
+        vec![
+            Box::new(FirstFit),
+            Box::new(NextFit),
+            Box::new(BestFit),
+            Box::new(WorstFit),
+            Box::new(FirstFitDecreasing),
+            Box::new(Harmonic::default()),
+        ]
+    }
+
+    #[test]
+    fn prop_no_overflow_and_all_assigned() {
+        testkit::forall(
+            Config::default(),
+            |rng| testkit::gen_item_sizes(rng, 60),
+            testkit::shrink_f64_vec,
+            |sizes| {
+                let its = items(sizes);
+                for p in packers() {
+                    let packing = p.pack(&its, Vec::new());
+                    packing
+                        .check(&its)
+                        .map_err(|e| format!("{}: {e}", p.name()))?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_anyfit_never_opens_bin_when_one_fits() {
+        // Any-Fit group invariant (paper §IV-A): a new bin is opened only
+        // if the item fits in no active bin.
+        testkit::forall(
+            Config::default(),
+            |rng| testkit::gen_item_sizes(rng, 40),
+            testkit::shrink_f64_vec,
+            |sizes| {
+                let its = items(sizes);
+                for rule in [AnyFit::First, AnyFit::Best, AnyFit::Worst] {
+                    let mut bins: Vec<Bin> = Vec::new();
+                    for item in &its {
+                        let before = bins.clone();
+                        let packing = any_fit_pack(rule, std::slice::from_ref(item), bins);
+                        bins = packing.bins;
+                        let idx = packing.assignments[0];
+                        if idx == before.len() {
+                            // Opened a new bin: verify nothing fitted.
+                            if before.iter().any(|b| b.fits(item)) {
+                                return Err(format!(
+                                    "{rule:?} opened a bin although item {} fits",
+                                    item.size
+                                ));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_first_fit_ratio_bound() {
+        // FF uses at most 1.7·OPT + 2 bins; with OPT >= ceil(sum) this gives
+        // a checkable (loose) bound.
+        testkit::forall_no_shrink(
+            Config {
+                cases: 100,
+                ..Config::default()
+            },
+            |rng| {
+                let n = rng.range(1, 200) as usize;
+                (0..n).map(|_| rng.uniform(0.01, 1.0)).collect::<Vec<f64>>()
+            },
+            |sizes| {
+                let its = items(sizes);
+                let used = FirstFit.pack(&its, Vec::new()).bins_used();
+                let ideal = sizes.iter().sum::<f64>().ceil() as usize;
+                if used as f64 <= 1.7 * ideal as f64 + 2.0 {
+                    Ok(())
+                } else {
+                    Err(format!("FF used {used} bins, ideal {ideal}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_pack_one_equals_pack_sequence() {
+        // Feeding items one at a time must give the same result as one
+        // batch call — the IRM relies on this (it packs per control cycle).
+        testkit::forall(
+            Config {
+                cases: 100,
+                ..Config::default()
+            },
+            |rng| testkit::gen_item_sizes(rng, 30),
+            testkit::shrink_f64_vec,
+            |sizes| {
+                let its = items(sizes);
+                let batch = FirstFit.pack(&its, Vec::new());
+                let mut bins: Vec<Bin> = Vec::new();
+                let mut one_by_one = Vec::new();
+                for item in &its {
+                    one_by_one.push(FirstFit.pack_one(*item, &mut bins));
+                }
+                if batch.assignments == one_by_one {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "batch {:?} != incremental {:?}",
+                        batch.assignments, one_by_one
+                    ))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_harmonic_class_capacity() {
+        // A class-j Harmonic bin never holds more than j items.
+        let mut rng = Rng::seeded(77);
+        for _ in 0..50 {
+            let sizes: Vec<f64> = (0..rng.range(1, 80))
+                .map(|_| rng.uniform(0.01, 1.0))
+                .collect();
+            let its = items(&sizes);
+            let k = 5;
+            let p = Harmonic { k }.pack(&its, Vec::new());
+            for b in &p.bins {
+                if b.items.is_empty() {
+                    continue;
+                }
+                let min_size = b.items.iter().map(|i| i.size).fold(f64::MAX, f64::min);
+                let mut j = (1.0 / min_size).floor() as usize;
+                j = j.clamp(1, k);
+                assert!(
+                    b.items.len() <= j,
+                    "class-{j} bin holds {} items",
+                    b.items.len()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Packing-quality analysis: the paper's "ideal number of bins" (Fig 10's
+//! *active bins* lower bound is `ceil(Σ item sizes)`) and asymptotic-ratio
+//! estimation used by the algorithm ablation (DESIGN.md A1).
+
+use super::{BinPacker, Item, Packing, EPS};
+
+/// Lower bound on the optimal number of unit bins: `ceil(Σ sizes)`.
+pub fn ideal_bins(items: &[Item]) -> usize {
+    let total: f64 = items.iter().map(|i| i.size).sum();
+    // Tolerate float dust (e.g. ten 0.1-items must be 1 bin, not 2).
+    (total - 1e-9).ceil().max(0.0) as usize
+}
+
+/// `bins_used / ideal` — an (over)estimate of the performance ratio R for
+/// one instance (R is asymptotic; we report the empirical instance ratio).
+pub fn performance_ratio(packing: &Packing, items: &[Item]) -> f64 {
+    let ideal = ideal_bins(items).max(1);
+    packing.bins_used() as f64 / ideal as f64
+}
+
+/// Summary statistics for one packing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackingStats {
+    pub bins_used: usize,
+    pub ideal_bins: usize,
+    pub ratio: f64,
+    /// Mean load of non-empty bins (utilization; the paper's Figs 4/8 show
+    /// workers peaking at 90–100 %).
+    pub mean_load: f64,
+    /// Total unused capacity across non-empty bins.
+    pub waste: f64,
+}
+
+pub fn stats(packing: &Packing, items: &[Item]) -> PackingStats {
+    let used: Vec<f64> = packing
+        .bins
+        .iter()
+        .filter(|b| b.used > EPS)
+        .map(|b| b.used)
+        .collect();
+    let bins_used = used.len();
+    let mean_load = if bins_used == 0 {
+        0.0
+    } else {
+        used.iter().sum::<f64>() / bins_used as f64
+    };
+    let waste = used.iter().map(|u| (1.0 - u).max(0.0)).sum();
+    PackingStats {
+        bins_used,
+        ideal_bins: ideal_bins(items),
+        ratio: performance_ratio(packing, items),
+        mean_load,
+        waste,
+    }
+}
+
+/// Run one instance through several algorithms and report their stats —
+/// the data behind the A1 ablation table.
+pub fn compare<'a>(
+    packers: &'a [&'a dyn BinPacker],
+    items: &[Item],
+) -> Vec<(&'a str, PackingStats)> {
+    packers
+        .iter()
+        .map(|p| {
+            let packing = p.pack(items, Vec::new());
+            (p.name(), stats(&packing, items))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::binpacking::{BestFit, FirstFit, FirstFitDecreasing, NextFit};
+
+    fn items(sizes: &[f64]) -> Vec<Item> {
+        sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| Item::new(i as u64, s))
+            .collect()
+    }
+
+    #[test]
+    fn ideal_bins_ceils() {
+        assert_eq!(ideal_bins(&items(&[0.5, 0.5])), 1);
+        assert_eq!(ideal_bins(&items(&[0.5, 0.6])), 2);
+        assert_eq!(ideal_bins(&[]), 0);
+    }
+
+    #[test]
+    fn ideal_bins_tolerates_dust() {
+        let ten_tenths = vec![0.1; 10];
+        assert_eq!(ideal_bins(&items(&ten_tenths)), 1);
+    }
+
+    #[test]
+    fn ratio_at_least_one() {
+        let its = items(&[0.6, 0.6, 0.6]);
+        let p = FirstFit.pack(&its, Vec::new());
+        let r = performance_ratio(&p, &its);
+        assert!(r >= 1.0);
+        assert_eq!(p.bins_used(), 3);
+        assert!((r - 1.5).abs() < 1e-9, "3 bins vs ideal 2");
+    }
+
+    #[test]
+    fn stats_mean_load_and_waste() {
+        let its = items(&[0.6, 0.6]);
+        let p = FirstFit.pack(&its, Vec::new());
+        let s = stats(&p, &its);
+        assert_eq!(s.bins_used, 2);
+        assert!((s.mean_load - 0.6).abs() < 1e-9);
+        assert!((s.waste - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compare_covers_all_packers() {
+        let packers: Vec<&dyn BinPacker> =
+            vec![&FirstFit, &NextFit, &BestFit, &FirstFitDecreasing];
+        let its = items(&[0.4, 0.3, 0.7, 0.2, 0.6]);
+        let rows = compare(&packers, &its);
+        assert_eq!(rows.len(), 4);
+        for (name, s) in &rows {
+            assert!(s.ratio >= 1.0, "{name} ratio {}", s.ratio);
+            assert!(s.bins_used >= s.ideal_bins, "{name}");
+        }
+        // Next-Fit can never beat First-Fit.
+        let ff = rows[0].1.bins_used;
+        let nf = rows[1].1.bins_used;
+        assert!(nf >= ff);
+    }
+}

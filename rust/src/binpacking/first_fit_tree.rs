@@ -1,0 +1,197 @@
+//! Indexed First-Fit: identical placement decisions to the naive
+//! [`FirstFit`](crate::binpacking::FirstFit) scan, in `O(n log m)` instead
+//! of `O(n·m)` (§Perf L3 optimization; the naive scan is kept as the
+//! reference and the equivalence is property-tested).
+//!
+//! The index is a max-residual segment tree over bin slots: to place an
+//! item, descend left-first into any subtree whose max residual fits — the
+//! leftmost (lowest-index) fitting bin, exactly First-Fit's rule. Updates
+//! after placement are `O(log m)`.
+
+use super::{Bin, BinPacker, Item, Packing, EPS};
+
+/// Segment tree over bin residuals with leftmost-fit descent.
+struct ResidualTree {
+    /// Number of leaves (power of two ≥ bins).
+    leaves: usize,
+    /// `tree[i]` = max residual in the subtree; leaf j at `leaves + j`.
+    tree: Vec<f64>,
+}
+
+impl ResidualTree {
+    fn new(capacity_hint: usize) -> Self {
+        let leaves = capacity_hint.next_power_of_two().max(1);
+        ResidualTree {
+            leaves,
+            tree: vec![f64::NEG_INFINITY; 2 * leaves],
+        }
+    }
+
+    fn set(&mut self, idx: usize, residual: f64) {
+        if idx >= self.leaves {
+            self.grow(idx + 1);
+        }
+        let mut i = self.leaves + idx;
+        self.tree[i] = residual;
+        while i > 1 {
+            i /= 2;
+            self.tree[i] = self.tree[2 * i].max(self.tree[2 * i + 1]);
+        }
+    }
+
+    fn grow(&mut self, needed: usize) {
+        let new_leaves = needed.next_power_of_two();
+        let mut new_tree = vec![f64::NEG_INFINITY; 2 * new_leaves];
+        for j in 0..self.leaves {
+            new_tree[new_leaves + j] = self.tree[self.leaves + j];
+        }
+        // Rebuild internal nodes.
+        for i in (1..new_leaves).rev() {
+            new_tree[i] = new_tree[2 * i].max(new_tree[2 * i + 1]);
+        }
+        self.leaves = new_leaves;
+        self.tree = new_tree;
+    }
+
+    /// Lowest-index leaf with residual ≥ size − EPS, if any.
+    fn first_fit(&self, size: f64) -> Option<usize> {
+        let need = size - EPS;
+        if self.tree[1] < need {
+            return None;
+        }
+        let mut i = 1;
+        while i < self.leaves {
+            i = if self.tree[2 * i] >= need { 2 * i } else { 2 * i + 1 };
+        }
+        Some(i - self.leaves)
+    }
+}
+
+/// First-Fit with the segment-tree index. Drop-in equivalent of
+/// [`FirstFit`](crate::binpacking::FirstFit).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FirstFitTree;
+
+impl BinPacker for FirstFitTree {
+    fn name(&self) -> &'static str {
+        "first-fit-tree"
+    }
+
+    fn pack(&self, items: &[Item], initial: Vec<Bin>) -> Packing {
+        let mut bins = initial;
+        let mut tree = ResidualTree::new((bins.len() + items.len() / 2).max(16));
+        for (i, b) in bins.iter().enumerate() {
+            tree.set(i, b.residual());
+        }
+        let mut assignments = Vec::with_capacity(items.len());
+        for item in items {
+            let idx = match tree.first_fit(item.size) {
+                Some(idx) if idx < bins.len() => idx,
+                _ => {
+                    bins.push(Bin::new());
+                    let idx = bins.len() - 1;
+                    tree.set(idx, 1.0);
+                    idx
+                }
+            };
+            bins[idx].push(*item);
+            tree.set(idx, bins[idx].residual());
+            assignments.push(idx);
+        }
+        Packing { assignments, bins }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::binpacking::FirstFit;
+    use crate::testkit::{self, Config};
+
+    fn items(sizes: &[f64]) -> Vec<Item> {
+        sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| Item::new(i as u64, s))
+            .collect()
+    }
+
+    #[test]
+    fn matches_naive_on_textbook_sequence() {
+        let its = items(&[0.5, 0.7, 0.5, 0.2, 0.4, 0.2, 0.5, 0.1, 0.6]);
+        let naive = FirstFit.pack(&its, Vec::new());
+        let tree = FirstFitTree.pack(&its, Vec::new());
+        assert_eq!(naive.assignments, tree.assignments);
+    }
+
+    #[test]
+    fn respects_preexisting_bins() {
+        let initial = vec![Bin::with_used(0.95), Bin::with_used(0.2)];
+        let its = items(&[0.5, 0.04]);
+        let p = FirstFitTree.pack(&its, initial);
+        p.check(&its).unwrap();
+        assert_eq!(p.assignments[0], 1, "0.5 into the 0.2-loaded bin");
+        assert_eq!(p.assignments[1], 0, "0.04 into the 0.95 bin (lowest index)");
+    }
+
+    #[test]
+    fn tree_grows_beyond_initial_hint() {
+        // Force many new bins (every item size 0.9 → one bin each).
+        let its = items(&vec![0.9; 200]);
+        let p = FirstFitTree.pack(&its, Vec::new());
+        p.check(&its).unwrap();
+        assert_eq!(p.bins_used(), 200);
+    }
+
+    #[test]
+    fn prop_equivalent_to_naive_first_fit() {
+        // The §Perf optimization must not change any placement decision.
+        testkit::forall(
+            Config {
+                cases: 300,
+                ..Config::default()
+            },
+            |rng| testkit::gen_item_sizes(rng, 120),
+            testkit::shrink_f64_vec,
+            |sizes| {
+                let its = items(sizes);
+                let naive = FirstFit.pack(&its, Vec::new());
+                let tree = FirstFitTree.pack(&its, Vec::new());
+                if naive.assignments == tree.assignments {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "diverged: naive {:?} vs tree {:?}",
+                        naive.assignments, tree.assignments
+                    ))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_equivalent_with_preloaded_bins() {
+        testkit::forall_no_shrink(
+            Config {
+                cases: 200,
+                ..Config::default()
+            },
+            |rng| {
+                let loads: Vec<f64> = (0..rng.below(12)).map(|_| rng.uniform(0.0, 1.0)).collect();
+                let sizes = testkit::gen_item_sizes(rng, 60);
+                (loads, sizes)
+            },
+            |(loads, sizes)| {
+                let its = items(sizes);
+                let initial: Vec<Bin> = loads.iter().map(|&u| Bin::with_used(u)).collect();
+                let naive = FirstFit.pack(&its, initial.clone());
+                let tree = FirstFitTree.pack(&its, initial);
+                if naive.assignments == tree.assignments {
+                    Ok(())
+                } else {
+                    Err("diverged with preloaded bins".into())
+                }
+            },
+        );
+    }
+}

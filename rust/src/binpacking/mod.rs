@@ -1,0 +1,184 @@
+//! Online bin-packing (Section IV of the paper).
+//!
+//! Items are PE container-hosting requests with sizes in `(0, 1]` (the
+//! workload's profiled CPU fraction); bins are worker VMs with capacity 1.0.
+//! The paper builds its IRM on **First-Fit** (R = 1.7, `O(n log n)` time):
+//! *"The search criterion in First-Fit is to find the first (lowest index)
+//! available bin in the list in which the current item fits."*
+//!
+//! This module provides the whole Any-Fit family from the paper's Algorithm 1
+//! (First-, Next-, Best-, Worst-Fit), the offline First-Fit-Decreasing
+//! lower-bound comparator, and the classic Harmonic(k) algorithm, plus
+//! packing-quality analysis (`ceil(Σ sizes)` ideal, asymptotic-ratio
+//! estimates) used by the ablation bench (DESIGN.md A1).
+
+pub mod algorithms;
+pub mod analysis;
+pub mod first_fit_tree;
+pub mod multidim;
+
+pub use algorithms::{
+    AnyFit, BestFit, BinPacker, FirstFit, FirstFitDecreasing, Harmonic, NextFit, WorstFit,
+};
+pub use first_fit_tree::FirstFitTree;
+pub use multidim::{first_fit_md, ResourceVec, VecBin, VecItem};
+pub use analysis::{ideal_bins, performance_ratio, PackingStats};
+
+/// An item to pack: `size` must lie in `(0, 1]`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Item {
+    /// Caller-side identifier (e.g. the container request id).
+    pub id: u64,
+    /// CPU fraction in `(0, 1]`.
+    pub size: f64,
+}
+
+impl Item {
+    pub fn new(id: u64, size: f64) -> Self {
+        assert!(
+            size > 0.0 && size <= 1.0,
+            "item size must be in (0,1], got {size}"
+        );
+        Item { id, size }
+    }
+}
+
+/// A bin (worker VM) with unit capacity by default. Bins may start
+/// partially full (`used > 0`): the IRM packs *new* requests around the PEs
+/// already placed on live workers.
+#[derive(Clone, Debug, Default)]
+pub struct Bin {
+    pub used: f64,
+    pub items: Vec<Item>,
+}
+
+/// Numerical slack when testing "fits": measured CPU fractions are floats
+/// and a worker loaded to 0.999999 must still count as full.
+pub const EPS: f64 = 1e-9;
+
+impl Bin {
+    pub fn new() -> Self {
+        Bin::default()
+    }
+
+    pub fn with_used(used: f64) -> Self {
+        assert!((0.0..=1.0 + EPS).contains(&used));
+        Bin {
+            used,
+            items: Vec::new(),
+        }
+    }
+
+    pub fn residual(&self) -> f64 {
+        (1.0 - self.used).max(0.0)
+    }
+
+    pub fn fits(&self, item: &Item) -> bool {
+        item.size <= self.residual() + EPS
+    }
+
+    pub fn push(&mut self, item: Item) {
+        debug_assert!(self.fits(&item), "push would overflow bin");
+        self.used += item.size;
+        self.items.push(item);
+    }
+}
+
+/// Result of a packing run: `assignments[i]` is the bin index of `items[i]`.
+#[derive(Clone, Debug, Default)]
+pub struct Packing {
+    pub assignments: Vec<usize>,
+    pub bins: Vec<Bin>,
+}
+
+impl Packing {
+    /// Number of non-empty bins.
+    pub fn bins_used(&self) -> usize {
+        self.bins.iter().filter(|b| b.used > EPS).count()
+    }
+
+    /// Invariant check: no bin exceeds capacity; every item assigned once.
+    pub fn check(&self, items: &[Item]) -> Result<(), String> {
+        for (i, b) in self.bins.iter().enumerate() {
+            let sum: f64 = b.items.iter().map(|it| it.size).sum();
+            if b.used > 1.0 + 1e-6 {
+                return Err(format!("bin {i} overflows: used={}", b.used));
+            }
+            // `used` may include pre-existing load not in `items`.
+            if sum > b.used + 1e-6 {
+                return Err(format!(
+                    "bin {i} accounting broken: items sum {sum} > used {}",
+                    b.used
+                ));
+            }
+        }
+        if self.assignments.len() != items.len() {
+            return Err(format!(
+                "expected {} assignments, got {}",
+                items.len(),
+                self.assignments.len()
+            ));
+        }
+        for (i, &b) in self.assignments.iter().enumerate() {
+            if b >= self.bins.len() {
+                return Err(format!("item {i} assigned to missing bin {b}"));
+            }
+            if !self.bins[b].items.iter().any(|it| it.id == items[i].id) {
+                return Err(format!("item {i} not present in its bin {b}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn item_validates_size() {
+        let _ = Item::new(0, 0.5);
+        let _ = Item::new(1, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "(0,1]")]
+    fn item_rejects_zero() {
+        let _ = Item::new(0, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "(0,1]")]
+    fn item_rejects_oversize() {
+        let _ = Item::new(0, 1.2);
+    }
+
+    #[test]
+    fn bin_residual_and_fits() {
+        let mut b = Bin::new();
+        assert!(b.fits(&Item::new(0, 1.0)));
+        b.push(Item::new(0, 0.6));
+        assert!((b.residual() - 0.4).abs() < 1e-12);
+        assert!(b.fits(&Item::new(1, 0.4)));
+        assert!(!b.fits(&Item::new(2, 0.41)));
+    }
+
+    #[test]
+    fn bin_with_preexisting_load() {
+        let b = Bin::with_used(0.75);
+        assert!(b.fits(&Item::new(0, 0.25)));
+        assert!(!b.fits(&Item::new(1, 0.3)));
+    }
+
+    #[test]
+    fn fits_tolerates_float_dust() {
+        let mut b = Bin::new();
+        for i in 0..10 {
+            b.push(Item::new(i, 0.1));
+        }
+        // used == 1.0 up to float dust; a fresh 0.1 item must not fit but
+        // residual must not be negative either.
+        assert!(b.residual() >= 0.0);
+        assert!(!b.fits(&Item::new(99, 0.1)));
+    }
+}

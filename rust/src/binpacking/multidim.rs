@@ -1,0 +1,262 @@
+//! Multi-dimensional (vector) online bin-packing — the paper's stated
+//! future work: *"we would like [to] further extend our approach with
+//! multi-dimensional online bin-packing [...] to profile and schedule
+//! workloads based on more resources than only CPU, such as RAM, network
+//! usage, or even variations of CPU metrics like average, maximum etc."*
+//!
+//! Items and bins carry a resource vector; an item fits when every
+//! component fits. First-Fit generalizes directly; the quality lower bound
+//! becomes `max_d ceil(Σ_i size_i[d])`.
+
+use std::fmt;
+
+/// Resource dimensions used by the extended profiler.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Resource {
+    Cpu = 0,
+    Ram = 1,
+    Net = 2,
+}
+
+pub const DIMS: usize = 3;
+
+/// A point in resource space, each component in `[0, 1]` of a worker.
+#[derive(Clone, Copy, PartialEq, Debug, Default)]
+pub struct ResourceVec(pub [f64; DIMS]);
+
+impl ResourceVec {
+    pub fn new(cpu: f64, ram: f64, net: f64) -> Self {
+        ResourceVec([cpu, ram, net])
+    }
+
+    pub fn cpu(cpu: f64) -> Self {
+        ResourceVec([cpu, 0.0, 0.0])
+    }
+
+    pub fn get(&self, r: Resource) -> f64 {
+        self.0[r as usize]
+    }
+
+    pub fn add(&self, rhs: &ResourceVec) -> ResourceVec {
+        let mut out = [0.0; DIMS];
+        for d in 0..DIMS {
+            out[d] = self.0[d] + rhs.0[d];
+        }
+        ResourceVec(out)
+    }
+
+    /// Component-wise `self + item <= 1 + eps`.
+    pub fn fits_into(&self, used: &ResourceVec, eps: f64) -> bool {
+        (0..DIMS).all(|d| used.0[d] + self.0[d] <= 1.0 + eps)
+    }
+
+    /// The dominant (largest) component — used for size-ordering
+    /// heuristics.
+    pub fn dominant(&self) -> f64 {
+        self.0.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+impl fmt::Display for ResourceVec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "(cpu {:.2}, ram {:.2}, net {:.2})",
+            self.0[0], self.0[1], self.0[2]
+        )
+    }
+}
+
+/// A multi-dimensional item.
+#[derive(Clone, Copy, Debug)]
+pub struct VecItem {
+    pub id: u64,
+    pub size: ResourceVec,
+}
+
+impl VecItem {
+    pub fn new(id: u64, size: ResourceVec) -> Self {
+        for (d, v) in size.0.iter().enumerate() {
+            assert!(
+                (0.0..=1.0).contains(v),
+                "dimension {d} out of [0,1]: {v}"
+            );
+        }
+        assert!(size.dominant() > 0.0, "item must demand something");
+        VecItem { id, size }
+    }
+}
+
+/// A multi-dimensional bin.
+#[derive(Clone, Debug, Default)]
+pub struct VecBin {
+    pub used: ResourceVec,
+    pub items: Vec<VecItem>,
+}
+
+impl VecBin {
+    pub fn fits(&self, item: &VecItem) -> bool {
+        item.size.fits_into(&self.used, 1e-9)
+    }
+
+    pub fn push(&mut self, item: VecItem) {
+        debug_assert!(self.fits(&item));
+        self.used = self.used.add(&item.size);
+        self.items.push(item);
+    }
+}
+
+/// Result of a vector packing run.
+#[derive(Clone, Debug, Default)]
+pub struct VecPacking {
+    pub assignments: Vec<usize>,
+    pub bins: Vec<VecBin>,
+}
+
+impl VecPacking {
+    pub fn bins_used(&self) -> usize {
+        self.bins.iter().filter(|b| !b.items.is_empty()).count()
+    }
+
+    pub fn check(&self, items: &[VecItem]) -> Result<(), String> {
+        for (i, b) in self.bins.iter().enumerate() {
+            for d in 0..DIMS {
+                if b.used.0[d] > 1.0 + 1e-6 {
+                    return Err(format!("bin {i} dim {d} overflows: {}", b.used.0[d]));
+                }
+            }
+        }
+        if self.assignments.len() != items.len() {
+            return Err("missing assignments".into());
+        }
+        Ok(())
+    }
+}
+
+/// Multi-dimensional First-Fit (online; lowest-index bin where every
+/// component fits).
+pub fn first_fit_md(items: &[VecItem], initial: Vec<VecBin>) -> VecPacking {
+    let mut bins = initial;
+    let mut assignments = Vec::with_capacity(items.len());
+    for item in items {
+        let idx = match bins.iter().position(|b| b.fits(item)) {
+            Some(i) => i,
+            None => {
+                bins.push(VecBin::default());
+                bins.len() - 1
+            }
+        };
+        bins[idx].push(*item);
+        assignments.push(idx);
+    }
+    VecPacking { assignments, bins }
+}
+
+/// Lower bound on the optimal bin count: the tightest single dimension.
+pub fn ideal_bins_md(items: &[VecItem]) -> usize {
+    let mut per_dim = [0.0f64; DIMS];
+    for it in items {
+        for d in 0..DIMS {
+            per_dim[d] += it.size.0[d];
+        }
+    }
+    per_dim
+        .iter()
+        .map(|s| (s - 1e-9).ceil().max(0.0) as usize)
+        .max()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{self, Config};
+
+    fn item(id: u64, cpu: f64, ram: f64, net: f64) -> VecItem {
+        VecItem::new(id, ResourceVec::new(cpu, ram, net))
+    }
+
+    #[test]
+    fn ram_constraint_forces_new_bin() {
+        // CPU fits easily but RAM is the binding dimension.
+        let items = vec![
+            item(0, 0.1, 0.8, 0.0),
+            item(1, 0.1, 0.8, 0.0),
+            item(2, 0.1, 0.1, 0.0),
+        ];
+        let p = first_fit_md(&items, Vec::new());
+        p.check(&items).unwrap();
+        assert_eq!(p.assignments[0], 0);
+        assert_eq!(p.assignments[1], 1, "RAM-bound spill");
+        assert_eq!(p.assignments[2], 0, "small item backfills bin 0");
+    }
+
+    #[test]
+    fn reduces_to_scalar_first_fit_on_cpu_only() {
+        let sizes = [0.5, 0.7, 0.5, 0.2, 0.4, 0.2, 0.5, 0.1, 0.6];
+        let md: Vec<VecItem> = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| VecItem::new(i as u64, ResourceVec::cpu(s)))
+            .collect();
+        let scalar: Vec<crate::binpacking::Item> = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| crate::binpacking::Item::new(i as u64, s))
+            .collect();
+        use crate::binpacking::BinPacker;
+        let a = first_fit_md(&md, Vec::new());
+        let b = crate::binpacking::FirstFit.pack(&scalar, Vec::new());
+        assert_eq!(a.assignments, b.assignments);
+    }
+
+    #[test]
+    fn ideal_bins_takes_tightest_dimension() {
+        let items = vec![item(0, 0.2, 0.9, 0.1), item(1, 0.2, 0.9, 0.1)];
+        // CPU sum 0.4 → 1 bin; RAM sum 1.8 → 2 bins.
+        assert_eq!(ideal_bins_md(&items), 2);
+    }
+
+    #[test]
+    fn prop_no_dimension_overflows() {
+        testkit::forall_no_shrink(
+            Config::default(),
+            |rng| {
+                let n = rng.below(60) as usize;
+                (0..n)
+                    .map(|i| {
+                        VecItem::new(
+                            i as u64,
+                            ResourceVec::new(
+                                rng.uniform(0.01, 1.0),
+                                rng.uniform(0.0, 1.0),
+                                rng.uniform(0.0, 1.0),
+                            ),
+                        )
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |items| {
+                let p = first_fit_md(items, Vec::new());
+                p.check(items).map_err(|e| e)?;
+                // Quality: never worse than one bin per item, never better
+                // than the per-dimension lower bound.
+                let used = p.bins_used();
+                let ideal = ideal_bins_md(items);
+                if used < ideal {
+                    return Err(format!("impossible: used {used} < ideal {ideal}"));
+                }
+                if used > items.len() {
+                    return Err("more bins than items".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "out of [0,1]")]
+    fn rejects_oversized_dimension() {
+        let _ = item(0, 0.5, 1.2, 0.0);
+    }
+}

@@ -1,0 +1,188 @@
+//! Virtual/real time. All coordinator logic takes time as a [`Millis`]
+//! argument or a [`Clock`] handle, so the same code drives the
+//! discrete-time experiments (instant) and the real-time deployment mode.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::types::Millis;
+
+/// A monotonic time source.
+pub trait Clock: Send + Sync {
+    /// Current time since the clock's epoch.
+    fn now(&self) -> Millis;
+    /// Block the calling thread for `d` (no-op under simulation: virtual
+    /// time is advanced by the simulation loop, not by sleepers).
+    fn sleep(&self, d: Millis);
+}
+
+/// Wall-clock time relative to construction.
+pub struct RealClock {
+    epoch: Instant,
+}
+
+impl RealClock {
+    pub fn new() -> Self {
+        RealClock {
+            epoch: Instant::now(),
+        }
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> Millis {
+        Millis(self.epoch.elapsed().as_millis() as u64)
+    }
+
+    fn sleep(&self, d: Millis) {
+        std::thread::sleep(std::time::Duration::from_millis(d.0));
+    }
+}
+
+/// Shared virtual clock, advanced explicitly by the simulation driver.
+#[derive(Clone)]
+pub struct SimClock {
+    now_ms: Arc<AtomicU64>,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock {
+            now_ms: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Advance virtual time by `d`.
+    pub fn advance(&self, d: Millis) {
+        self.now_ms.fetch_add(d.0, Ordering::SeqCst);
+    }
+
+    /// Jump to an absolute virtual time (must not go backwards).
+    pub fn set(&self, t: Millis) {
+        let prev = self.now_ms.swap(t.0, Ordering::SeqCst);
+        debug_assert!(prev <= t.0, "sim clock moved backwards: {prev} -> {}", t.0);
+    }
+}
+
+impl Default for SimClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> Millis {
+        Millis(self.now_ms.load(Ordering::SeqCst))
+    }
+
+    fn sleep(&self, _d: Millis) {
+        // Virtual time is advanced by the driver, never by sleeping.
+    }
+}
+
+/// A recurring timer: fires whenever at least `period` has elapsed since the
+/// last firing. This is how every periodic control loop in the system (the
+/// bin-packing run rate, profiler report interval, load-predictor polling)
+/// expresses its cadence without owning a thread.
+#[derive(Clone, Copy, Debug)]
+pub struct Periodic {
+    period: Millis,
+    last: Option<Millis>,
+}
+
+impl Periodic {
+    pub fn new(period: Millis) -> Self {
+        assert!(period.0 > 0, "period must be positive");
+        Periodic { period, last: None }
+    }
+
+    /// Returns true (and re-arms) if the period elapsed. The first call
+    /// always fires, anchoring the cadence at the caller's start time.
+    pub fn fire(&mut self, now: Millis) -> bool {
+        match self.last {
+            None => {
+                self.last = Some(now);
+                true
+            }
+            Some(last) if now.0 >= last.0 + self.period.0 => {
+                self.last = Some(now);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    pub fn period(&self) -> Millis {
+        self.period
+    }
+
+    /// Reset so the next `fire` triggers immediately.
+    pub fn reset(&mut self) {
+        self.last = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_clock_monotonic() {
+        let c = RealClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn sim_clock_advances_only_explicitly() {
+        let c = SimClock::new();
+        assert_eq!(c.now(), Millis(0));
+        c.sleep(Millis(1000)); // no-op
+        assert_eq!(c.now(), Millis(0));
+        c.advance(Millis(250));
+        assert_eq!(c.now(), Millis(250));
+        c.set(Millis(1000));
+        assert_eq!(c.now(), Millis(1000));
+    }
+
+    #[test]
+    fn sim_clock_shared_between_clones() {
+        let a = SimClock::new();
+        let b = a.clone();
+        a.advance(Millis(10));
+        assert_eq!(b.now(), Millis(10));
+    }
+
+    #[test]
+    fn periodic_fires_on_schedule() {
+        let mut p = Periodic::new(Millis(100));
+        assert!(p.fire(Millis(0)), "first call fires");
+        assert!(!p.fire(Millis(50)));
+        assert!(!p.fire(Millis(99)));
+        assert!(p.fire(Millis(100)));
+        assert!(!p.fire(Millis(150)));
+        assert!(p.fire(Millis(210)));
+    }
+
+    #[test]
+    fn periodic_reset() {
+        let mut p = Periodic::new(Millis(100));
+        assert!(p.fire(Millis(0)));
+        p.reset();
+        assert!(p.fire(Millis(1)));
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_period_panics() {
+        let _ = Periodic::new(Millis(0));
+    }
+}

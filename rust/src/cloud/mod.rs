@@ -1,0 +1,268 @@
+//! Simulated IaaS provider (the SNIC science cloud stand-in).
+//!
+//! The paper deploys on OpenStack VMs (SSC flavors) with minutes-scale boot
+//! latency and a fixed project quota (both experiments cap at 5 workers).
+//! The IRM only ever observes the cloud through: request VM → (eventually)
+//! VM active, terminate VM, quota errors. This module reproduces exactly
+//! those observables with deterministic, configurable latencies.
+
+use crate::types::{IdGen, Millis, VmId};
+use crate::util::rng::Rng;
+
+/// VM flavors mirroring the paper's SNIC setup (§VI-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flavor {
+    /// SSC.small — 1 vCPU (image host).
+    Small,
+    /// SSC.large — 4 vCPU (client).
+    Large,
+    /// SSC.xlarge — 8 vCPU (master + workers).
+    Xlarge,
+}
+
+impl Flavor {
+    pub fn cores(self) -> u32 {
+        match self {
+            Flavor::Small => 1,
+            Flavor::Large => 4,
+            Flavor::Xlarge => 8,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Flavor::Small => "SSC.small",
+            Flavor::Large => "SSC.large",
+            Flavor::Xlarge => "SSC.xlarge",
+        }
+    }
+}
+
+/// Lifecycle of a simulated VM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VmState {
+    /// Provisioning: not usable until `ready_at`.
+    Booting { ready_at: Millis },
+    Active,
+    Terminated,
+}
+
+#[derive(Clone, Debug)]
+pub struct Vm {
+    pub id: VmId,
+    pub flavor: Flavor,
+    pub state: VmState,
+    pub requested_at: Millis,
+}
+
+/// Provisioning errors surfaced to the autoscaler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CloudError {
+    /// Project quota exhausted (the 5-worker cap in the experiments —
+    /// drives Fig 10's failed scale-up attempts).
+    QuotaExceeded,
+}
+
+/// Cloud provider configuration.
+#[derive(Clone, Debug)]
+pub struct CloudConfig {
+    /// Max simultaneously alive (booting+active) VMs.
+    pub quota: usize,
+    /// Mean VM boot latency.
+    pub boot_delay: Millis,
+    /// Uniform jitter applied to boot latency (±).
+    pub boot_jitter: Millis,
+    pub flavor: Flavor,
+    pub seed: u64,
+}
+
+impl Default for CloudConfig {
+    fn default() -> Self {
+        CloudConfig {
+            quota: 5,
+            boot_delay: Millis::from_secs(45),
+            boot_jitter: Millis::from_secs(10),
+            flavor: Flavor::Xlarge,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// The simulated provider. Deterministic for a given seed + call sequence.
+pub struct SimCloud {
+    cfg: CloudConfig,
+    vms: Vec<Vm>,
+    ids: IdGen,
+    rng: Rng,
+    /// Count of rejected requests (observable for Fig 10's retry shape).
+    pub rejected_requests: u64,
+}
+
+impl SimCloud {
+    pub fn new(cfg: CloudConfig) -> Self {
+        let rng = Rng::seeded(cfg.seed);
+        SimCloud {
+            cfg,
+            vms: Vec::new(),
+            ids: IdGen::new(),
+            rng,
+            rejected_requests: 0,
+        }
+    }
+
+    pub fn config(&self) -> &CloudConfig {
+        &self.cfg
+    }
+
+    fn alive(&self) -> usize {
+        self.vms
+            .iter()
+            .filter(|v| !matches!(v.state, VmState::Terminated))
+            .count()
+    }
+
+    /// Request a new VM. Either starts booting or fails on quota.
+    pub fn request_vm(&mut self, now: Millis) -> Result<VmId, CloudError> {
+        if self.alive() >= self.cfg.quota {
+            self.rejected_requests += 1;
+            return Err(CloudError::QuotaExceeded);
+        }
+        let jitter = if self.cfg.boot_jitter.0 == 0 {
+            0
+        } else {
+            self.rng.range(0, 2 * self.cfg.boot_jitter.0)
+        };
+        let ready_at =
+            now + self.cfg.boot_delay.saturating_sub(self.cfg.boot_jitter) + Millis(jitter);
+        let id = VmId(self.ids.next_id());
+        self.vms.push(Vm {
+            id,
+            flavor: self.cfg.flavor,
+            state: VmState::Booting { ready_at },
+            requested_at: now,
+        });
+        Ok(id)
+    }
+
+    /// Terminate a VM (idempotent; terminating a booting VM cancels it).
+    pub fn terminate_vm(&mut self, id: VmId) {
+        if let Some(vm) = self.vms.iter_mut().find(|v| v.id == id) {
+            vm.state = VmState::Terminated;
+        }
+    }
+
+    /// Advance boot progress; returns VMs that became active this tick.
+    pub fn tick(&mut self, now: Millis) -> Vec<VmId> {
+        let mut ready = Vec::new();
+        for vm in &mut self.vms {
+            if let VmState::Booting { ready_at } = vm.state {
+                if now >= ready_at {
+                    vm.state = VmState::Active;
+                    ready.push(vm.id);
+                }
+            }
+        }
+        ready
+    }
+
+    pub fn vm(&self, id: VmId) -> Option<&Vm> {
+        self.vms.iter().find(|v| v.id == id)
+    }
+
+    pub fn active_vms(&self) -> Vec<VmId> {
+        self.vms
+            .iter()
+            .filter(|v| v.state == VmState::Active)
+            .map(|v| v.id)
+            .collect()
+    }
+
+    pub fn booting_vms(&self) -> Vec<VmId> {
+        self.vms
+            .iter()
+            .filter(|v| matches!(v.state, VmState::Booting { .. }))
+            .map(|v| v.id)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cloud(quota: usize) -> SimCloud {
+        SimCloud::new(CloudConfig {
+            quota,
+            boot_delay: Millis::from_secs(40),
+            boot_jitter: Millis::from_secs(5),
+            ..CloudConfig::default()
+        })
+    }
+
+    #[test]
+    fn vm_boots_after_delay() {
+        let mut c = cloud(5);
+        let id = c.request_vm(Millis(0)).unwrap();
+        assert!(matches!(c.vm(id).unwrap().state, VmState::Booting { .. }));
+        assert!(c.tick(Millis(1000)).is_empty(), "too early");
+        let ready = c.tick(Millis::from_secs(60));
+        assert_eq!(ready, vec![id]);
+        assert_eq!(c.vm(id).unwrap().state, VmState::Active);
+    }
+
+    #[test]
+    fn boot_jitter_within_bounds() {
+        let mut c = cloud(50);
+        for _ in 0..20 {
+            let id = c.request_vm(Millis(0)).unwrap();
+            if let VmState::Booting { ready_at } = c.vm(id).unwrap().state {
+                // delay-jitter <= ready <= delay+jitter
+                assert!(ready_at >= Millis::from_secs(35), "{ready_at:?}");
+                assert!(ready_at <= Millis::from_secs(45), "{ready_at:?}");
+            } else {
+                panic!("should be booting");
+            }
+        }
+    }
+
+    #[test]
+    fn quota_enforced_and_counted() {
+        let mut c = cloud(2);
+        c.request_vm(Millis(0)).unwrap();
+        c.request_vm(Millis(0)).unwrap();
+        assert_eq!(c.request_vm(Millis(0)), Err(CloudError::QuotaExceeded));
+        assert_eq!(c.rejected_requests, 1);
+        // Terminating frees quota.
+        let active = c.booting_vms()[0];
+        c.terminate_vm(active);
+        assert!(c.request_vm(Millis(0)).is_ok());
+    }
+
+    #[test]
+    fn terminate_is_idempotent() {
+        let mut c = cloud(3);
+        let id = c.request_vm(Millis(0)).unwrap();
+        c.terminate_vm(id);
+        c.terminate_vm(id);
+        assert_eq!(c.vm(id).unwrap().state, VmState::Terminated);
+        assert!(c.active_vms().is_empty());
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mk = || {
+            let mut c = SimCloud::new(CloudConfig::default());
+            let a = c.request_vm(Millis(0)).unwrap();
+            let b = c.request_vm(Millis(10)).unwrap();
+            (c.vm(a).unwrap().state, c.vm(b).unwrap().state)
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn flavor_cores() {
+        assert_eq!(Flavor::Xlarge.cores(), 8);
+        assert_eq!(Flavor::Small.cores(), 1);
+        assert_eq!(Flavor::Xlarge.name(), "SSC.xlarge");
+    }
+}

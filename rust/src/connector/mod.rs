@@ -1,0 +1,179 @@
+//! HarmonicIO Stream Connector — the client API (paper §III-A).
+//!
+//! "The stream connector acts as the client to the HIO platform [...] so
+//! that the user can stream a message. Internally, it requests the address
+//! of an available PE, so the message can be sent directly if possible."
+//!
+//! Two flavors:
+//! * [`LocalConnector`] — in-process (simulation + single-process cluster):
+//!   talks to a [`Master`](crate::master::Master) directly.
+//! * [`TcpConnector`] — distributed mode: speaks the JSON wire protocol to
+//!   a master endpoint (`stream` requests; P2P delivery happens server-side
+//!   in the live cluster service).
+
+use anyhow::{Context, Result};
+
+use crate::master::Master;
+use crate::protocol::RouteDecision;
+use crate::types::{IdGen, ImageName, MessageId, Millis, StreamMessage};
+use crate::util::json::Json;
+
+/// Builder for stream messages (fills ids/timestamps).
+pub struct MessageFactory {
+    ids: IdGen,
+}
+
+impl Default for MessageFactory {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MessageFactory {
+    pub fn new() -> Self {
+        MessageFactory { ids: IdGen::new() }
+    }
+
+    pub fn message(
+        &mut self,
+        image: &ImageName,
+        payload_bytes: u64,
+        service_demand: Millis,
+        now: Millis,
+    ) -> StreamMessage {
+        StreamMessage {
+            id: MessageId(self.ids.next_id()),
+            image: image.clone(),
+            payload_bytes,
+            service_demand,
+            created_at: now,
+        }
+    }
+}
+
+/// In-process connector: the simulation's stream source.
+pub struct LocalConnector {
+    factory: MessageFactory,
+}
+
+impl Default for LocalConnector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LocalConnector {
+    pub fn new() -> Self {
+        LocalConnector {
+            factory: MessageFactory::new(),
+        }
+    }
+
+    /// Stream one message: request an endpoint from the master; P2P if one
+    /// is available, otherwise it lands in the master's backlog.
+    pub fn stream(
+        &mut self,
+        master: &mut Master,
+        image: &ImageName,
+        payload_bytes: u64,
+        service_demand: Millis,
+        now: Millis,
+    ) -> (StreamMessage, RouteDecision) {
+        let msg = self
+            .factory
+            .message(image, payload_bytes, service_demand, now);
+        let decision = master.route(msg.clone());
+        (msg, decision)
+    }
+}
+
+/// Wire-protocol connector for the distributed mode.
+pub struct TcpConnector {
+    master_addr: String,
+    factory: MessageFactory,
+}
+
+impl TcpConnector {
+    pub fn new(master_addr: impl Into<String>) -> Self {
+        TcpConnector {
+            master_addr: master_addr.into(),
+            factory: MessageFactory::new(),
+        }
+    }
+
+    /// Stream a message to the remote master. Returns the server's route
+    /// outcome (`direct` with worker/pe, or `queued`).
+    pub fn stream(
+        &mut self,
+        image: &ImageName,
+        payload_bytes: u64,
+        service_demand: Millis,
+        now: Millis,
+    ) -> Result<Json> {
+        let msg = self
+            .factory
+            .message(image, payload_bytes, service_demand, now);
+        let req = Json::obj([("type", Json::str("stream")), ("msg", msg.to_json())]);
+        crate::transport::call(self.master_addr.as_str(), &req)
+            .context("stream request failed")
+    }
+
+    /// Query cluster status (backlog length, workers, completions).
+    pub fn status(&self) -> Result<Json> {
+        let req = Json::obj([("type", Json::str("status"))]);
+        crate::transport::call(self.master_addr.as_str(), &req).context("status request failed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::{PeState, PeStatus, WorkerReport};
+    use crate::types::{CpuFraction, PeId, WorkerId};
+
+    #[test]
+    fn local_connector_streams_and_queues() {
+        let mut master = Master::new();
+        let mut conn = LocalConnector::new();
+        let img = ImageName::new("img");
+        let (_msg, decision) = conn.stream(&mut master, &img, 1024, Millis(1000), Millis(0));
+        assert!(matches!(decision, RouteDecision::Queued { .. }));
+        assert_eq!(master.backlog_len(), 1);
+    }
+
+    #[test]
+    fn local_connector_direct_when_available() {
+        let mut master = Master::new();
+        master.ingest_report(WorkerReport {
+            worker: WorkerId(0),
+            at: Millis(0),
+            total_cpu: CpuFraction::ZERO,
+            per_image: Vec::new(),
+            pes: vec![PeStatus {
+                pe: PeId(1),
+                image: ImageName::new("img"),
+                state: PeState::Idle,
+                cpu: CpuFraction::ZERO,
+            }],
+        });
+        let mut conn = LocalConnector::new();
+        let (_, decision) = conn.stream(
+            &mut master,
+            &ImageName::new("img"),
+            1024,
+            Millis(1000),
+            Millis(0),
+        );
+        assert!(matches!(decision, RouteDecision::Direct { .. }));
+    }
+
+    #[test]
+    fn message_ids_increment() {
+        let mut f = MessageFactory::new();
+        let img = ImageName::new("img");
+        let a = f.message(&img, 1, Millis(1), Millis(0));
+        let b = f.message(&img, 1, Millis(1), Millis(0));
+        assert_eq!(a.id, MessageId(0));
+        assert_eq!(b.id, MessageId(1));
+    }
+}

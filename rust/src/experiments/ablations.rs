@@ -1,0 +1,236 @@
+//! A1–A3: ablations over the IRM's design choices (DESIGN.md §Perf /
+//! per-experiment index). These quantify the decisions the paper makes:
+//! First-Fit as the packing rule, the log-proportional idle buffer, and
+//! the profiler's moving-average window.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::binpacking::{
+    analysis, BestFit, BinPacker, FirstFit, FirstFitDecreasing, Harmonic, Item, NextFit, WorstFit,
+};
+use crate::experiments::{microscopy, Report};
+use crate::irm::{BufferPolicy, PackerChoice};
+use crate::sim::SimCluster;
+use crate::types::Millis;
+use crate::util::rng::Rng;
+use crate::workload::{MicroscopyConfig, MicroscopyTrace};
+
+/// A1 — algorithm quality on bin-packing instances shaped like the IRM's
+/// (item sizes = profiled CPU fractions), plus end-to-end makespan impact.
+pub fn packer(out: &Path, seed: u64) -> Result<Report> {
+    let mut report = Report::new("A1 — packing algorithm ablation");
+
+    // Instance-level quality: empirical ratio vs the ceil(Σ) ideal.
+    let packers: Vec<(&str, Box<dyn BinPacker>)> = vec![
+        ("first-fit", Box::new(FirstFit)),
+        ("next-fit", Box::new(NextFit)),
+        ("best-fit", Box::new(BestFit)),
+        ("worst-fit", Box::new(WorstFit)),
+        ("ffd (offline)", Box::new(FirstFitDecreasing)),
+        ("harmonic-7", Box::new(Harmonic { k: 7 })),
+    ];
+    let mut rng = Rng::seeded(seed);
+    let mut csv = String::from("algorithm,mean_ratio,mean_load\n");
+    report.line(format!(
+        "{:<14} {:>10} {:>10}",
+        "algorithm", "ratio", "mean load"
+    ));
+    let mut ratios: Vec<(String, f64)> = Vec::new();
+    for (name, p) in &packers {
+        let mut ratio_sum = 0.0;
+        let mut load_sum = 0.0;
+        let instances = 100;
+        for _ in 0..instances {
+            let n = rng.range(20, 200) as usize;
+            let items: Vec<Item> = (0..n)
+                .map(|i| {
+                    // The IRM's item domain: mostly ~1-core fractions with
+                    // occasional heavier workloads.
+                    let size = if rng.next_f64() < 0.8 {
+                        rng.uniform(0.08, 0.2)
+                    } else {
+                        rng.uniform(0.2, 0.9)
+                    };
+                    Item::new(i as u64, size)
+                })
+                .collect();
+            let packing = p.pack(&items, Vec::new());
+            let s = analysis::stats(&packing, &items);
+            ratio_sum += s.ratio;
+            load_sum += s.mean_load;
+        }
+        let mean_ratio = ratio_sum / instances as f64;
+        let mean_load = load_sum / instances as f64;
+        report.line(format!("{name:<14} {mean_ratio:>10.3} {mean_load:>10.3}"));
+        let _ = writeln!(csv, "{name},{mean_ratio:.4},{mean_load:.4}");
+        ratios.push((name.to_string(), mean_ratio));
+    }
+    std::fs::write(out.join("ablation_packer.csv"), csv)?;
+
+    let ff = ratios.iter().find(|(n, _)| n == "first-fit").unwrap().1;
+    let nf = ratios.iter().find(|(n, _)| n == "next-fit").unwrap().1;
+    let ffd = ratios.iter().find(|(n, _)| n == "ffd (offline)").unwrap().1;
+    report.check(
+        "first-fit beats next-fit",
+        ff <= nf,
+        format!("FF {ff:.3} vs NF {nf:.3}"),
+    );
+    report.check(
+        "first-fit close to offline FFD",
+        ff <= ffd * 1.15,
+        format!("FF {ff:.3} vs FFD {ffd:.3}"),
+    );
+
+    // End-to-end: swap the IRM's packer on a shortened microscopy run.
+    report.line(String::new());
+    report.line("end-to-end makespan (300-image batch):".to_string());
+    let mut e2e: Vec<(&str, f64)> = Vec::new();
+    for (label, choice) in [
+        ("first-fit", PackerChoice::FirstFit),
+        ("next-fit", PackerChoice::NextFit),
+        ("best-fit", PackerChoice::BestFit),
+        ("worst-fit", PackerChoice::WorstFit),
+    ] {
+        let mut cfg = microscopy::cluster_config(seed);
+        cfg.irm.packer = choice;
+        let trace = MicroscopyTrace::new(MicroscopyConfig {
+            n_images: 300,
+            ..MicroscopyConfig::default()
+        })
+        .run_trace(seed);
+        let mut cluster = SimCluster::new(cfg);
+        trace.schedule_into(&mut cluster);
+        let makespan = cluster
+            .run_to_completion(trace.len(), Millis::from_secs(4000))
+            .map(|m| m.as_secs_f64())
+            .unwrap_or(f64::NAN);
+        report.line(format!("  {label:<12} {makespan:>7.0}s"));
+        e2e.push((label, makespan));
+    }
+    let ff_t = e2e[0].1;
+    report.check(
+        "first-fit competitive end-to-end",
+        e2e.iter().all(|(_, t)| ff_t <= t * 1.10),
+        format!("FF {ff_t:.0}s vs others"),
+    );
+    Ok(report)
+}
+
+/// A2 — idle-worker buffer policy: latency headroom vs resource cost.
+pub fn buffer(out: &Path, seed: u64) -> Result<Report> {
+    let mut report = Report::new("A2 — idle-worker buffer policy ablation");
+    let mut csv = String::from("policy,makespan_s,mean_latency_s,peak_workers\n");
+    let mut rows: Vec<(String, f64, f64, f64)> = Vec::new();
+    for (label, policy) in [
+        ("logarithmic", BufferPolicy::Logarithmic),
+        ("none", BufferPolicy::None),
+        ("linear-50%", BufferPolicy::Linear(0.5)),
+    ] {
+        let mut cfg = microscopy::cluster_config(seed);
+        cfg.irm.buffer_policy = policy;
+        cfg.cloud.quota = 10; // uncapped enough to see the policy differ
+        let trace = MicroscopyTrace::new(MicroscopyConfig {
+            n_images: 300,
+            ..MicroscopyConfig::default()
+        })
+        .run_trace(seed);
+        let mut cluster = SimCluster::new(cfg);
+        trace.schedule_into(&mut cluster);
+        let makespan = cluster
+            .run_to_completion(trace.len(), Millis::from_secs(4000))
+            .map(|m| m.as_secs_f64())
+            .unwrap_or(f64::NAN);
+        let latency = cluster.mean_latency().as_secs_f64();
+        let peak = cluster
+            .recorder
+            .get("workers.current")
+            .map(|s| s.max())
+            .unwrap_or(0.0);
+        report.line(format!(
+            "{label:<12} makespan {makespan:>6.0}s | mean latency {latency:>6.1}s | peak workers {peak}"
+        ));
+        let _ = writeln!(csv, "{label},{makespan:.1},{latency:.2},{peak}");
+        rows.push((label.to_string(), makespan, latency, peak));
+    }
+    std::fs::write(out.join("ablation_buffer.csv"), csv)?;
+    let log_lat = rows[0].2;
+    let none_lat = rows[1].2;
+    report.check(
+        "headroom reduces latency vs no buffer",
+        log_lat <= none_lat * 1.02,
+        format!("log {log_lat:.1}s vs none {none_lat:.1}s"),
+    );
+    let log_peak = rows[0].3;
+    let linear_peak = rows[2].3;
+    report.check(
+        "log buffer cheaper than linear",
+        log_peak <= linear_peak,
+        format!("log peak {log_peak} vs linear peak {linear_peak}"),
+    );
+    Ok(report)
+}
+
+/// A3 — profiler window: too small → jitter; too large → slow adaptation.
+pub fn profiler(out: &Path, seed: u64) -> Result<Report> {
+    let mut report = Report::new("A3 — profiler window ablation");
+    let mut csv = String::from("window,makespan_run1_s,makespan_run2_s\n");
+    let mut rows = Vec::new();
+    for window in [1usize, 10, 60] {
+        let dataset = MicroscopyTrace::new(MicroscopyConfig {
+            n_images: 300,
+            ..MicroscopyConfig::default()
+        });
+        let mut carried: Option<crate::profiler::WorkerProfiler> = None;
+        let mut cache: Option<std::collections::HashSet<(crate::types::WorkerId, crate::types::ImageName)>> = None;
+        let mut makespans = Vec::new();
+        for run_idx in 0..2 {
+            let mut cfg = microscopy::cluster_config(seed ^ (run_idx as u64) << 4);
+            cfg.irm.profiler_window = window;
+            let trace = dataset.run_trace(seed ^ run_idx as u64);
+            let mut cluster = SimCluster::new(cfg);
+            if let Some(p) = carried.take() {
+                cluster.irm.profiler = p;
+            }
+            if let Some(c) = cache.take() {
+                cluster.pulled_images = c;
+            }
+            trace.schedule_into(&mut cluster);
+            let m = cluster
+                .run_to_completion(trace.len(), Millis::from_secs(4000))
+                .map(|m| m.as_secs_f64())
+                .unwrap_or(f64::NAN);
+            makespans.push(m);
+            carried = Some(cluster.irm.profiler.clone());
+            cache = Some(cluster.pulled_images.clone());
+        }
+        report.line(format!(
+            "window {window:<3} run1 {:.0}s run2 {:.0}s",
+            makespans[0], makespans[1]
+        ));
+        let _ = writeln!(csv, "{window},{:.1},{:.1}", makespans[0], makespans[1]);
+        rows.push((window, makespans[0], makespans[1]));
+    }
+    std::fs::write(out.join("ablation_profiler.csv"), csv)?;
+    report.check(
+        "warm runs never slower than cold",
+        rows.iter().all(|(_, r1, r2)| r2 <= &(r1 * 1.05)),
+        "profiling pays off across windows",
+    );
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packer_ablation_runs() {
+        let tmp = std::env::temp_dir().join("hio_abl_test");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let report = packer(&tmp, 3).unwrap();
+        assert!(report.all_passed(), "{}", report.render());
+    }
+}

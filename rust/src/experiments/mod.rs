@@ -1,0 +1,185 @@
+//! Experiment drivers — one per figure of the paper's evaluation plus the
+//! headline comparison, the warm-up study and the design-choice ablations
+//! (see DESIGN.md's per-experiment index).
+//!
+//! Every driver writes `results/<exp>.csv` (long-format series), prints an
+//! ASCII rendering of the figure, and returns a textual report with the
+//! shape checks the paper's figure implies. `run("all", ...)` regenerates
+//! everything (EXPERIMENTS.md is written from these outputs).
+
+pub mod ablations;
+pub mod headline;
+pub mod microscopy;
+pub mod spark_fig7;
+pub mod synthetic;
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+/// A single named check derived from a figure's expected shape.
+#[derive(Clone, Debug)]
+pub struct Check {
+    pub name: String,
+    pub passed: bool,
+    pub detail: String,
+}
+
+impl Check {
+    pub fn new(name: &str, passed: bool, detail: impl Into<String>) -> Self {
+        Check {
+            name: name.to_string(),
+            passed,
+            detail: detail.into(),
+        }
+    }
+}
+
+/// Output of one experiment driver.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub title: String,
+    pub lines: Vec<String>,
+    pub checks: Vec<Check>,
+}
+
+impl Report {
+    pub fn new(title: &str) -> Self {
+        Report {
+            title: title.to_string(),
+            ..Report::default()
+        }
+    }
+
+    pub fn line(&mut self, s: impl Into<String>) {
+        self.lines.push(s.into());
+    }
+
+    pub fn check(&mut self, name: &str, passed: bool, detail: impl Into<String>) {
+        self.checks.push(Check::new(name, passed, detail));
+    }
+
+    pub fn all_passed(&self) -> bool {
+        self.checks.iter().all(|c| c.passed)
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        for l in &self.lines {
+            let _ = writeln!(out, "{l}");
+        }
+        for c in &self.checks {
+            let _ = writeln!(
+                out,
+                "  [{}] {} — {}",
+                if c.passed { "PASS" } else { "FAIL" },
+                c.name,
+                c.detail
+            );
+        }
+        out
+    }
+}
+
+/// The experiment registry (name → id in DESIGN.md's index).
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("fig3", "E1: measured CPU per worker over time (synthetic)"),
+    ("fig4", "E2: scheduled CPU per worker over time (synthetic)"),
+    ("fig5", "E3: scheduled-vs-measured error (synthetic)"),
+    ("fig7", "E4: Spark executor cores vs actual CPU (microscopy)"),
+    ("fig8", "E5: scheduled CPU per worker (microscopy, HIO+IRM)"),
+    ("fig9", "E6: perceived-vs-measured error (microscopy)"),
+    ("fig10", "E7: target/current workers + active bins (microscopy)"),
+    ("headline", "E8: HIO vs Spark makespan on the 767-image batch"),
+    ("warmup", "E9: run-1-vs-later profiling warm-up"),
+    ("ablation-packer", "A1: packing-algorithm choice"),
+    ("ablation-buffer", "A2: idle-worker buffer policy"),
+    ("ablation-profiler", "A3: profiler window / report cadence"),
+];
+
+/// Run one experiment (or "all") writing outputs under `out_dir`.
+pub fn run(name: &str, out_dir: &str, seed: u64) -> Result<Vec<Report>> {
+    std::fs::create_dir_all(out_dir)?;
+    let out = Path::new(out_dir);
+    let reports = match name {
+        // Figs 3–5 share one synthetic run; each entry re-runs it so the
+        // CLI stays stateless (the run takes well under a second).
+        "fig3" | "fig4" | "fig5" => vec![synthetic::run(out, seed, name)?],
+        "fig7" => vec![spark_fig7::run(out, seed)?],
+        "fig8" | "fig9" | "fig10" => vec![microscopy::run(out, seed, name)?],
+        "headline" => vec![headline::run(out, seed)?],
+        "warmup" => vec![microscopy::warmup(out, seed)?],
+        "ablation-packer" => vec![ablations::packer(out, seed)?],
+        "ablation-buffer" => vec![ablations::buffer(out, seed)?],
+        "ablation-profiler" => vec![ablations::profiler(out, seed)?],
+        "all" => {
+            let mut all = Vec::new();
+            all.push(synthetic::run(out, seed, "fig3")?);
+            all.push(synthetic::run(out, seed, "fig4")?);
+            all.push(synthetic::run(out, seed, "fig5")?);
+            all.push(spark_fig7::run(out, seed)?);
+            all.push(microscopy::run(out, seed, "fig8")?);
+            all.push(microscopy::run(out, seed, "fig9")?);
+            all.push(microscopy::run(out, seed, "fig10")?);
+            all.push(headline::run(out, seed)?);
+            all.push(microscopy::warmup(out, seed)?);
+            all.push(ablations::packer(out, seed)?);
+            all.push(ablations::buffer(out, seed)?);
+            all.push(ablations::profiler(out, seed)?);
+            all
+        }
+        other => bail!(
+            "unknown experiment '{other}'; available: {}",
+            EXPERIMENTS
+                .iter()
+                .map(|(n, _)| *n)
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    };
+    // Append to the cumulative summary.
+    let mut summary = String::new();
+    for r in &reports {
+        summary.push_str(&r.render());
+        summary.push('\n');
+    }
+    let path = out.join("summary.txt");
+    let prev = std::fs::read_to_string(&path).unwrap_or_default();
+    std::fs::write(&path, prev + &summary)?;
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_paper_figure() {
+        let names: Vec<&str> = EXPERIMENTS.iter().map(|(n, _)| *n).collect();
+        for fig in ["fig3", "fig4", "fig5", "fig7", "fig8", "fig9", "fig10"] {
+            assert!(names.contains(&fig), "missing {fig}");
+        }
+        assert!(names.contains(&"headline"));
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        let tmp = std::env::temp_dir().join("hio_exp_test");
+        assert!(run("fig99", tmp.to_str().unwrap(), 0).is_err());
+    }
+
+    #[test]
+    fn report_rendering() {
+        let mut r = Report::new("t");
+        r.line("hello");
+        r.check("c1", true, "ok");
+        r.check("c2", false, "bad");
+        let s = r.render();
+        assert!(s.contains("== t =="));
+        assert!(s.contains("[PASS] c1"));
+        assert!(s.contains("[FAIL] c2"));
+        assert!(!r.all_passed());
+    }
+}

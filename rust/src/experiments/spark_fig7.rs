@@ -1,0 +1,122 @@
+//! E4 (paper Fig 7): Spark executor cores vs actual CPU usage on the
+//! microscopy trace, under dynamic allocation.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::experiments::Report;
+use crate::spark::{SparkConfig, SparkSim};
+use crate::types::Millis;
+use crate::workload::{MicroscopyConfig, MicroscopyTrace};
+
+/// The arrival rate of images into the Spark source directory ("the
+/// initial set of images for a 5 second batch interval (50 or more)" →
+/// ≥10 images/s).
+pub const SPARK_ARRIVAL_RATE: f64 = 12.0;
+
+/// Run the Spark baseline on the 767-image trace.
+pub fn run_baseline(seed: u64) -> (SparkSim, Millis) {
+    let trace = MicroscopyTrace::new(MicroscopyConfig {
+        stream_rate_per_sec: SPARK_ARRIVAL_RATE,
+        ..MicroscopyConfig::default()
+    })
+    .run_trace(seed);
+    let mut sim = SparkSim::new(SparkConfig {
+        seed: seed ^ 0x57A6,
+        ..SparkConfig::default()
+    });
+    sim.load_trace(&trace);
+    let makespan = sim
+        .run_to_completion(Millis(100), Millis::from_secs(6000))
+        .expect("spark batch must complete");
+    // Run past the idle timeout so tail scale-downs are visible (the
+    // paper's plot extends past the last batch).
+    let end = makespan + Millis::from_secs(45);
+    let mut t = makespan;
+    while t < end {
+        t = t + Millis(100);
+        sim.tick(t);
+    }
+    (sim, makespan)
+}
+
+pub fn run(out: &Path, seed: u64) -> Result<Report> {
+    let (sim, makespan) = run_baseline(seed);
+    let csv_path = out.join("fig7.csv");
+    sim.recorder
+        .write_csv(csv_path.to_str().unwrap())
+        .context("write fig7.csv")?;
+
+    let mut report = Report::new("Fig 7 — Spark executor cores vs actual CPU (microscopy)");
+    report.line(format!(
+        "tasks: {} | makespan: {:.0}s | scale-downs: {}",
+        sim.tasks_completed,
+        makespan.as_secs_f64(),
+        sim.scale_downs.len()
+    ));
+    report.line(format!("csv: {}", csv_path.display()));
+    report.line(
+        sim.recorder
+            .ascii_chart(&["spark.executor_cores", "spark.cpu_cores"], 72, 5),
+    );
+
+    let cores = sim.recorder.get("spark.executor_cores").unwrap();
+    let cpu = sim.recorder.get("spark.cpu_cores").unwrap();
+
+    report.check(
+        "scales to all 40 worker cores",
+        cores.max() >= 40.0,
+        format!("peak cores {}", cores.max()),
+    );
+    let lead = cpu
+        .points
+        .iter()
+        .any(|(t, busy)| cores.at(*t).map(|c| *busy > c + 0.5).unwrap_or(false));
+    report.check(
+        "CPU leads cores on scale-up",
+        lead,
+        "executors burn CPU before the REST API reports them",
+    );
+    // Batch gaps in actual CPU.
+    let end = cpu.end().unwrap_or(Millis::ZERO);
+    let mid: Vec<f64> = cpu
+        .points
+        .iter()
+        .filter(|(t, _)| t.0 > end.0 / 5 && t.0 < 4 * end.0 / 5)
+        .map(|(_, v)| *v)
+        .collect();
+    let dip = mid.iter().cloned().fold(f64::MAX, f64::min);
+    report.check(
+        "per-batch gaps visible in CPU",
+        dip < cpu.max() * 0.75,
+        format!("mid-run dip to {dip:.1} cores vs peak {:.1}", cpu.max()),
+    );
+    report.check(
+        "idle-gap scale-downs (red circles)",
+        !sim.scale_downs.is_empty(),
+        format!(
+            "{} scale-down events, first at {:.0}s",
+            sim.scale_downs.len(),
+            sim.scale_downs
+                .first()
+                .map(|s| s.at.as_secs_f64())
+                .unwrap_or(0.0)
+        ),
+    );
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_shapes_hold() {
+        let tmp = std::env::temp_dir().join("hio_fig7_test");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let report = run(&tmp, 1).unwrap();
+        assert!(report.all_passed(), "{}", report.render());
+        assert!(tmp.join("fig7.csv").exists());
+    }
+}

@@ -1,0 +1,218 @@
+//! E1–E3 (paper Figs 3, 4, 5): the synthetic-workload IRM evaluation.
+//!
+//! Four busy-CPU workload classes streamed as regular small batches plus
+//! two large peaks (§VI-A). Figure shapes to reproduce:
+//! * Fig 3 — measured CPU concentrates on low-index workers; high-index
+//!   workers show windows of zero utilization;
+//! * Fig 4 — per-worker scheduled CPU peaks at 90–100 % before spilling;
+//! * Fig 5 — noisy error (pp) driven by container start/stop churn.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::cloud::CloudConfig;
+use crate::experiments::Report;
+use crate::metrics::Recorder;
+use crate::sim::{ClusterConfig, SimCluster};
+use crate::types::{CpuFraction, Millis};
+use crate::worker::WorkerConfig;
+use crate::workload::{SyntheticConfig, SyntheticWorkload};
+
+/// Cluster configuration of the synthetic scenario.
+pub fn cluster_config(seed: u64) -> ClusterConfig {
+    let wl_images = SyntheticWorkload::images();
+    ClusterConfig {
+        cloud: CloudConfig {
+            quota: 8,
+            boot_delay: Millis::from_secs(45),
+            boot_jitter: Millis::from_secs(10),
+            seed: seed ^ 0xC10D,
+            ..CloudConfig::default()
+        },
+        worker: WorkerConfig {
+            container_boot: Millis::from_secs(3),
+            container_boot_jitter: Millis(1500),
+            container_idle_timeout: Millis::from_secs(10),
+            report_interval: Millis::from_secs(1),
+            measure_noise_std: 0.01,
+            ..WorkerConfig::default()
+        },
+        // Every synthetic class targets 100 % of one core (§VI-A) on an
+        // 8-core worker.
+        image_demand: wl_images
+            .iter()
+            .map(|img| (img.clone(), CpuFraction::new(0.125)))
+            .collect(),
+        seed,
+        ..ClusterConfig::default()
+    }
+}
+
+/// Run the scenario once; returns the cluster post-run.
+pub fn run_scenario(seed: u64) -> SimCluster {
+    let wl = SyntheticWorkload::new(SyntheticConfig {
+        seed: seed ^ 0x5715,
+        ..SyntheticConfig::default()
+    });
+    let trace = wl.trace();
+    let n = trace.len();
+    let mut cluster = SimCluster::new(cluster_config(seed));
+    trace.schedule_into(&mut cluster);
+    // Horizon + generous drain.
+    cluster.run_to_completion(n, trace.end() + Millis::from_secs(900));
+    cluster
+}
+
+/// Extract the per-worker series matching one figure into a fresh recorder.
+fn figure_series(cluster: &SimCluster, fig: &str) -> (Recorder, Vec<String>) {
+    let suffix = match fig {
+        "fig3" => "measured",
+        "fig4" => "scheduled",
+        "fig5" => "error_pp",
+        other => panic!("not a synthetic figure: {other}"),
+    };
+    let mut rec = Recorder::new();
+    let mut names = Vec::new();
+    for slot in 0..cluster.max_worker_slots() {
+        let src = format!("w{slot}.{suffix}");
+        if let Some(s) = cluster.recorder.get(&src) {
+            for (t, v) in &s.points {
+                rec.record(&src, *t, *v);
+            }
+            names.push(src);
+        }
+    }
+    (rec, names)
+}
+
+/// The E1/E2/E3 driver.
+pub fn run(out: &Path, seed: u64, fig: &str) -> Result<Report> {
+    let cluster = run_scenario(seed);
+    let (rec, names) = figure_series(&cluster, fig);
+    let csv_path = out.join(format!("{fig}.csv"));
+    rec.write_csv(csv_path.to_str().unwrap())?;
+
+    let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    let mut report = Report::new(match fig {
+        "fig3" => "Fig 3 — CPU utilization per worker over time (synthetic)",
+        "fig4" => "Fig 4 — scheduled CPU per worker over time (synthetic)",
+        _ => "Fig 5 — scheduled vs measured CPU error (synthetic)",
+    });
+    report.line(format!("workers used: {}", cluster.max_worker_slots()));
+    report.line(format!(
+        "jobs completed: {} | makespan: {}",
+        cluster.completions.len(),
+        cluster
+            .completions
+            .iter()
+            .map(|c| c.completed_at)
+            .max()
+            .unwrap_or(Millis::ZERO)
+    ));
+    report.line(format!("csv: {}", csv_path.display()));
+    report.line(cluster.recorder.ascii_chart(
+        &refs.iter().copied().take(4).collect::<Vec<_>>(),
+        72,
+        4,
+    ));
+
+    match fig {
+        "fig3" | "fig4" => {
+            // Shape: load concentrates on low indices.
+            let mean = |slot: usize| {
+                cluster
+                    .recorder
+                    .get(&format!(
+                        "w{slot}.{}",
+                        if fig == "fig3" { "measured" } else { "scheduled" }
+                    ))
+                    .map(|s| s.mean())
+                    .unwrap_or(0.0)
+            };
+            let low = mean(0) + mean(1);
+            let hi_slot = cluster.max_worker_slots().saturating_sub(1);
+            let high = mean(hi_slot) + mean(hi_slot.saturating_sub(1));
+            report.check(
+                "low-index concentration",
+                low > high,
+                format!("w0+w1 mean {low:.3} vs top-two {high:.3}"),
+            );
+            // Shape: peaks reach 90–100 % on loaded workers.
+            let peak = cluster
+                .recorder
+                .get(&format!(
+                    "w0.{}",
+                    if fig == "fig3" { "measured" } else { "scheduled" }
+                ))
+                .map(|s| s.max())
+                .unwrap_or(0.0);
+            report.check(
+                "worker 0 peaks at 90-100%",
+                peak >= 0.9,
+                format!("peak {peak:.3}"),
+            );
+            // Shape: the top worker has idle windows (deactivatable).
+            if let Some(s) = cluster.recorder.get(&format!(
+                "w{hi_slot}.{}",
+                if fig == "fig3" { "measured" } else { "scheduled" }
+            )) {
+                let idle_frac = s
+                    .points
+                    .iter()
+                    .filter(|(_, v)| *v < 0.05)
+                    .count() as f64
+                    / s.len().max(1) as f64;
+                report.check(
+                    "top worker has idle windows",
+                    idle_frac > 0.3,
+                    format!("idle fraction {idle_frac:.2}"),
+                );
+            }
+        }
+        "fig5" => {
+            // Shape: the error is noisy (start/stop churn) but centred
+            // near zero; spikes exist.
+            let mut all: Vec<f64> = Vec::new();
+            for slot in 0..cluster.max_worker_slots() {
+                if let Some(s) = cluster.recorder.get(&format!("w{slot}.error_pp")) {
+                    all.extend(s.points.iter().map(|(_, v)| *v));
+                }
+            }
+            let mean = all.iter().sum::<f64>() / all.len().max(1) as f64;
+            let spikes = all.iter().filter(|v| v.abs() > 10.0).count();
+            report.check(
+                "error centred near zero",
+                mean.abs() < 10.0,
+                format!("mean error {mean:.2} pp"),
+            );
+            report.check(
+                "start/stop noise spikes present",
+                spikes > 10,
+                format!("{spikes} samples beyond ±10 pp"),
+            );
+        }
+        _ => unreachable!(),
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_scenario_completes_and_shapes_hold() {
+        let tmp = std::env::temp_dir().join("hio_synth_test");
+        std::fs::create_dir_all(&tmp).unwrap();
+        for fig in ["fig3", "fig4", "fig5"] {
+            let report = run(&tmp, 7, fig).unwrap();
+            assert!(
+                report.all_passed(),
+                "{fig} checks failed:\n{}",
+                report.render()
+            );
+            assert!(tmp.join(format!("{fig}.csv")).exists());
+        }
+    }
+}

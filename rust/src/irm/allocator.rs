@@ -1,0 +1,265 @@
+//! Container allocator (§V-B2): the bin-packing manager + allocation queue.
+//!
+//! "In this model a worker VM represents a bin and the container hosting
+//! requests represent items. Active VMs indicate open bins [...] with a
+//! capacity of 1.0. The container requests have item sizes in the range
+//! (0,1], indicating the CPU usage of that PE from 0-100 %. The bin-packing
+//! manager performs a bin-packing run at a configurable rate [...]
+//! resulting in a mapping of where to host the queued PEs and how many
+//! worker VMs are needed to host these."
+
+use crate::binpacking::{BestFit, Bin, BinPacker, FirstFitTree, Item, NextFit, WorstFit};
+use crate::irm::config::PackerChoice;
+use crate::irm::container_queue::ContainerRequest;
+use crate::types::{CpuFraction, ImageName, WorkerId};
+
+/// The allocator's view of one active worker: identity plus the scheduled
+/// load of PEs already hosted there (sum of their profiled item sizes).
+#[derive(Clone, Debug)]
+pub struct WorkerBin {
+    pub worker: WorkerId,
+    pub scheduled: CpuFraction,
+}
+
+/// One hosting decision: start `request`'s image on `worker`.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    pub request: ContainerRequest,
+    pub worker: WorkerId,
+}
+
+/// Outcome of one bin-packing run.
+#[derive(Debug, Default)]
+pub struct PackOutcome {
+    /// Requests mapped onto currently active workers (ready to start).
+    pub allocations: Vec<Allocation>,
+    /// Requests that landed in bins beyond the active workers (need VMs
+    /// that do not exist yet) — the caller requeues them.
+    pub pending_new_workers: Vec<ContainerRequest>,
+    /// Total bins the packing needed (active + new) — the worker target
+    /// before the idle buffer is added (Fig 10's "target" input).
+    pub bins_needed: usize,
+    /// Scheduled load per active worker *after* this packing run (the
+    /// "Bin-packing scheduled CPU usage" series of Figs 4/8).
+    pub scheduled: Vec<(WorkerId, CpuFraction)>,
+}
+
+/// The bin-packing manager.
+pub struct Allocator {
+    packer: Box<dyn BinPacker + Send>,
+    /// Lifetime counters (observability / EXPERIMENTS.md).
+    pub runs: u64,
+    pub items_packed: u64,
+}
+
+impl Allocator {
+    pub fn new(choice: PackerChoice) -> Self {
+        let packer: Box<dyn BinPacker + Send> = match choice {
+            // The indexed variant: identical decisions to First-Fit,
+            // O(n log m) — property-tested equivalent (§Perf L3).
+            PackerChoice::FirstFit => Box::new(FirstFitTree),
+            PackerChoice::NextFit => Box::new(NextFit),
+            PackerChoice::BestFit => Box::new(BestFit),
+            PackerChoice::WorstFit => Box::new(WorstFit),
+        };
+        Allocator {
+            packer,
+            runs: 0,
+            items_packed: 0,
+        }
+    }
+
+    pub fn algorithm(&self) -> &'static str {
+        self.packer.name()
+    }
+
+    /// One bin-packing run over the waiting `requests`, against the current
+    /// active workers (ordered by worker id — the paper's "lowest index").
+    pub fn pack(&mut self, requests: Vec<ContainerRequest>, workers: &[WorkerBin]) -> PackOutcome {
+        self.runs += 1;
+        self.items_packed += requests.len() as u64;
+
+        let initial: Vec<Bin> = workers
+            .iter()
+            .map(|w| Bin::with_used(w.scheduled.value().min(1.0)))
+            .collect();
+        let items: Vec<Item> = requests
+            .iter()
+            .enumerate()
+            .map(|(i, r)| Item::new(i as u64, r.estimate.value().clamp(1e-3, 1.0)))
+            .collect();
+
+        let packing = self.packer.pack(&items, initial);
+
+        let mut outcome = PackOutcome {
+            bins_needed: packing.bins_used().max(
+                // A pre-loaded worker counts as a needed bin even if this
+                // run placed nothing new on it.
+                workers
+                    .iter()
+                    .filter(|w| w.scheduled.value() > 1e-9)
+                    .count(),
+            ),
+            ..PackOutcome::default()
+        };
+
+        let mut requests = requests;
+        // Consume in reverse index order so removal by index stays valid.
+        let assignments = packing.assignments.clone();
+        for (i, req) in requests.drain(..).enumerate() {
+            let bin_idx = assignments[i];
+            if bin_idx < workers.len() {
+                outcome.allocations.push(Allocation {
+                    request: req,
+                    worker: workers[bin_idx].worker,
+                });
+            } else {
+                outcome.pending_new_workers.push(req);
+            }
+        }
+
+        // Scheduled view after this run, for the active workers only.
+        outcome.scheduled = workers
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.worker, CpuFraction::new(packing.bins[i].used)))
+            .collect();
+
+        outcome
+    }
+}
+
+/// Helper: compute each worker's scheduled load from the images of the PEs
+/// it currently hosts and a per-image estimator.
+pub fn scheduled_load(
+    pe_images: &[ImageName],
+    estimate: impl Fn(&ImageName) -> CpuFraction,
+) -> CpuFraction {
+    pe_images
+        .iter()
+        .fold(CpuFraction::ZERO, |acc, img| acc + estimate(img))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::irm::container_queue::{ContainerQueue, RequestOrigin};
+    use crate::types::Millis;
+
+    fn requests(n: usize, est: f64) -> Vec<ContainerRequest> {
+        let mut q = ContainerQueue::new();
+        for _ in 0..n {
+            q.push(
+                ImageName::new("img"),
+                CpuFraction::new(est),
+                10,
+                RequestOrigin::AutoScale,
+                Millis(0),
+            );
+        }
+        q.drain()
+    }
+
+    fn workers(loads: &[f64]) -> Vec<WorkerBin> {
+        loads
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| WorkerBin {
+                worker: WorkerId(i as u64),
+                scheduled: CpuFraction::new(l),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn packs_into_lowest_index_worker_first() {
+        let mut alloc = Allocator::new(PackerChoice::FirstFit);
+        let out = alloc.pack(requests(4, 0.25), &workers(&[0.0, 0.0]));
+        assert_eq!(out.allocations.len(), 4);
+        assert!(out.allocations.iter().all(|a| a.worker == WorkerId(0)));
+        assert_eq!(out.bins_needed, 1);
+        assert!((out.scheduled[0].1.value() - 1.0).abs() < 1e-9);
+        assert_eq!(out.scheduled[1].1.value(), 0.0);
+    }
+
+    #[test]
+    fn spills_to_next_worker_at_capacity() {
+        let mut alloc = Allocator::new(PackerChoice::FirstFit);
+        let out = alloc.pack(requests(6, 0.25), &workers(&[0.0, 0.0]));
+        let to_w1 = out
+            .allocations
+            .iter()
+            .filter(|a| a.worker == WorkerId(1))
+            .count();
+        assert_eq!(to_w1, 2);
+        assert_eq!(out.bins_needed, 2);
+    }
+
+    #[test]
+    fn respects_existing_scheduled_load() {
+        let mut alloc = Allocator::new(PackerChoice::FirstFit);
+        let out = alloc.pack(requests(1, 0.5), &workers(&[0.8, 0.1]));
+        assert_eq!(out.allocations[0].worker, WorkerId(1));
+    }
+
+    #[test]
+    fn overflow_becomes_pending_new_workers() {
+        let mut alloc = Allocator::new(PackerChoice::FirstFit);
+        let out = alloc.pack(requests(5, 0.5), &workers(&[0.0]));
+        // Worker 0 takes 2; 3 remain, needing 2 more bins.
+        assert_eq!(out.allocations.len(), 2);
+        assert_eq!(out.pending_new_workers.len(), 3);
+        assert_eq!(out.bins_needed, 3);
+    }
+
+    #[test]
+    fn no_workers_everything_pending() {
+        let mut alloc = Allocator::new(PackerChoice::FirstFit);
+        let out = alloc.pack(requests(3, 0.4), &[]);
+        assert!(out.allocations.is_empty());
+        assert_eq!(out.pending_new_workers.len(), 3);
+        assert_eq!(out.bins_needed, 2); // 3×0.4 = 1.2 -> 2 bins
+    }
+
+    #[test]
+    fn empty_queue_reports_current_bins() {
+        let mut alloc = Allocator::new(PackerChoice::FirstFit);
+        let out = alloc.pack(Vec::new(), &workers(&[0.6, 0.0]));
+        assert!(out.allocations.is_empty());
+        // Worker 0 is loaded, so one bin is in use.
+        assert_eq!(out.bins_needed, 1);
+    }
+
+    #[test]
+    fn oversized_scheduled_load_clamped_for_packing() {
+        // Measured/scheduled load can drift above 1.0; the bin model clamps
+        // so packing still works (the worker just accepts nothing new).
+        let mut alloc = Allocator::new(PackerChoice::FirstFit);
+        let out = alloc.pack(requests(1, 0.3), &workers(&[1.2_f64.min(1.0), 0.0]));
+        assert_eq!(out.allocations[0].worker, WorkerId(1));
+    }
+
+    #[test]
+    fn scheduled_load_helper_sums() {
+        let imgs = vec![ImageName::new("a"), ImageName::new("a"), ImageName::new("b")];
+        let load = scheduled_load(&imgs, |img| {
+            if img.as_str() == "a" {
+                CpuFraction::new(0.2)
+            } else {
+                CpuFraction::new(0.5)
+            }
+        });
+        assert!((load.value() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn algorithm_choice_respected() {
+        assert_eq!(
+            Allocator::new(PackerChoice::FirstFit).algorithm(),
+            "first-fit-tree"
+        );
+        assert_eq!(Allocator::new(PackerChoice::BestFit).algorithm(), "best-fit");
+        assert_eq!(Allocator::new(PackerChoice::NextFit).algorithm(), "next-fit");
+        assert_eq!(Allocator::new(PackerChoice::WorstFit).algorithm(), "worst-fit");
+    }
+}

@@ -1,0 +1,210 @@
+//! Worker auto-scaler: converts the bin-packing result into VM scale
+//! decisions (§V-A: "HIO can determine where to host the containers and in
+//! addition whether more or fewer worker nodes are needed for the current
+//! workload autonomously"), with the log-proportional idle-worker buffer
+//! for headroom.
+
+use std::collections::HashMap;
+
+use crate::irm::config::BufferPolicy;
+use crate::types::{Millis, WorkerId};
+
+/// A worker as the autoscaler sees it.
+#[derive(Clone, Debug)]
+pub struct WorkerState {
+    pub worker: WorkerId,
+    pub pe_count: usize,
+}
+
+/// Scale plan for one control cycle.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ScalePlan {
+    /// How many new VMs to request from the cloud this cycle.
+    pub request_vms: usize,
+    /// Workers to drain + terminate (highest-index empty workers first).
+    pub terminate: Vec<WorkerId>,
+    /// The computed target (bins needed + idle buffer) — Fig 10's "target
+    /// workers" series.
+    pub target_workers: usize,
+}
+
+/// Tracks empty-worker grace periods and produces scale plans.
+pub struct AutoScaler {
+    policy: BufferPolicy,
+    drain_grace: Millis,
+    empty_since: HashMap<WorkerId, Millis>,
+}
+
+impl AutoScaler {
+    pub fn new(policy: BufferPolicy, drain_grace: Millis) -> Self {
+        AutoScaler {
+            policy,
+            drain_grace,
+            empty_since: HashMap::new(),
+        }
+    }
+
+    /// Compute this cycle's plan.
+    ///
+    /// * `bins_needed` — bins used by the latest packing run (demand).
+    /// * `workers` — currently active workers with their PE counts.
+    /// * `booting` — VMs already requested and still provisioning.
+    pub fn plan(
+        &mut self,
+        now: Millis,
+        bins_needed: usize,
+        workers: &[WorkerState],
+        booting: usize,
+    ) -> ScalePlan {
+        let active = workers.len();
+        let buffer = self.policy.buffer_for(active);
+        let target = bins_needed + buffer;
+
+        // Track how long each worker has been empty (for drain grace).
+        for w in workers {
+            if w.pe_count == 0 {
+                self.empty_since.entry(w.worker).or_insert(now);
+            } else {
+                self.empty_since.remove(&w.worker);
+            }
+        }
+        self.empty_since
+            .retain(|id, _| workers.iter().any(|w| w.worker == *id));
+
+        let supply = active + booting;
+        let mut plan = ScalePlan {
+            target_workers: target,
+            ..ScalePlan::default()
+        };
+
+        if supply < target {
+            plan.request_vms = target - supply;
+        } else if supply > target {
+            // Scale down: only terminate workers that are empty and have
+            // been empty past the grace period; highest index first (the
+            // packing concentrates load on low indices, so high-index bins
+            // are the ones bin-packing freed).
+            let mut excess = supply - target;
+            let mut candidates: Vec<WorkerId> = workers
+                .iter()
+                .filter(|w| w.pe_count == 0)
+                .filter(|w| {
+                    self.empty_since
+                        .get(&w.worker)
+                        .map(|t0| now >= *t0 + self.drain_grace)
+                        .unwrap_or(false)
+                })
+                .map(|w| w.worker)
+                .collect();
+            candidates.sort();
+            candidates.reverse();
+            for w in candidates {
+                if excess == 0 {
+                    break;
+                }
+                plan.terminate.push(w);
+                excess -= 1;
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn workers(pe_counts: &[usize]) -> Vec<WorkerState> {
+        pe_counts
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| WorkerState {
+                worker: WorkerId(i as u64),
+                pe_count: n,
+            })
+            .collect()
+    }
+
+    fn scaler() -> AutoScaler {
+        AutoScaler::new(BufferPolicy::Logarithmic, Millis::from_secs(10))
+    }
+
+    #[test]
+    fn scales_up_to_target_plus_buffer() {
+        let mut s = scaler();
+        // 3 bins needed, 1 active (buffer=1), 0 booting → target 4, req 3.
+        let plan = s.plan(Millis(0), 3, &workers(&[2]), 0);
+        assert_eq!(plan.target_workers, 4);
+        assert_eq!(plan.request_vms, 3);
+        assert!(plan.terminate.is_empty());
+    }
+
+    #[test]
+    fn booting_vms_count_toward_supply() {
+        let mut s = scaler();
+        let plan = s.plan(Millis(0), 3, &workers(&[2]), 3);
+        assert_eq!(plan.request_vms, 0);
+    }
+
+    #[test]
+    fn scale_down_waits_for_grace() {
+        let mut s = scaler();
+        // 5 active, only 1 bin needed (+1 buffer... active=5 → buffer=3 →
+        // target 4): 1 excess; worker 4 empty.
+        let w = workers(&[3, 2, 1, 1, 0]);
+        let p0 = s.plan(Millis(0), 1, &w, 0);
+        assert_eq!(p0.target_workers, 1 + 3);
+        assert!(p0.terminate.is_empty(), "grace not elapsed");
+        let p1 = s.plan(Millis::from_secs(10), 1, &w, 0);
+        assert_eq!(p1.terminate, vec![WorkerId(4)]);
+    }
+
+    #[test]
+    fn busy_workers_never_terminated() {
+        let mut s = scaler();
+        let w = workers(&[1, 1, 1, 1, 1]);
+        s.plan(Millis(0), 0, &w, 0);
+        let p = s.plan(Millis::from_secs(60), 0, &w, 0);
+        assert!(p.terminate.is_empty());
+    }
+
+    #[test]
+    fn highest_index_empty_workers_terminated_first() {
+        let mut s = scaler();
+        let w = workers(&[0, 1, 0, 1, 0]);
+        s.plan(Millis(0), 0, &w, 0);
+        // target = 0 + buffer(5)=3 → excess 2; empty workers 0,2,4 past
+        // grace → terminate 4 then 2.
+        let p = s.plan(Millis::from_secs(30), 0, &w, 0);
+        assert_eq!(p.terminate, vec![WorkerId(4), WorkerId(2)]);
+    }
+
+    #[test]
+    fn becoming_busy_resets_grace() {
+        let mut s = scaler();
+        s.plan(Millis(0), 5, &workers(&[0]), 0);
+        // Worker gets a PE at t=5s…
+        s.plan(Millis::from_secs(5), 5, &workers(&[1]), 0);
+        // …and is empty again at t=12s: grace restarts, no termination at
+        // t=12s even though it was first empty at t=0.
+        let p = s.plan(Millis::from_secs(12), 0, &workers(&[0]), 5);
+        assert!(p.terminate.is_empty());
+    }
+
+    #[test]
+    fn zero_demand_keeps_buffer() {
+        let mut s = AutoScaler::new(BufferPolicy::Logarithmic, Millis::ZERO);
+        let plan = s.plan(Millis(0), 0, &[], 0);
+        // buffer_for(0) = 1: always keep one worker warm.
+        assert_eq!(plan.target_workers, 1);
+        assert_eq!(plan.request_vms, 1);
+    }
+
+    #[test]
+    fn no_buffer_policy_scales_to_exact_demand() {
+        let mut s = AutoScaler::new(BufferPolicy::None, Millis::ZERO);
+        let plan = s.plan(Millis(0), 2, &workers(&[1, 1]), 0);
+        assert_eq!(plan.target_workers, 2);
+        assert_eq!(plan.request_vms, 0);
+    }
+}

@@ -1,0 +1,149 @@
+//! IRM configuration — the analogue of [15] §4.3 / Table 1's tunables.
+
+use crate::types::{CpuFraction, Millis};
+
+/// Which Any-Fit algorithm the bin-packing manager runs (First-Fit in the
+/// paper; the rest exist for the A1 ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackerChoice {
+    FirstFit,
+    NextFit,
+    BestFit,
+    WorstFit,
+}
+
+/// Idle-worker buffer policy (§V-A: "a small buffer of idle workers are
+/// kept ready [...] logarithmically proportional to the number of currently
+/// active workers").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BufferPolicy {
+    /// ceil(log2(active + 1)) idle workers (the paper's policy).
+    Logarithmic,
+    /// No headroom (A2 ablation).
+    None,
+    /// ceil(frac * active) idle workers (A2 ablation).
+    Linear(f64),
+}
+
+impl BufferPolicy {
+    pub fn buffer_for(&self, active_workers: usize) -> usize {
+        match self {
+            BufferPolicy::Logarithmic => {
+                ((active_workers as f64 + 1.0).log2().ceil() as usize).max(1)
+            }
+            BufferPolicy::None => 0,
+            BufferPolicy::Linear(frac) => (frac * active_workers as f64).ceil() as usize,
+        }
+    }
+}
+
+/// Load-predictor thresholds (§V-B4: "The decision of scaling up is based
+/// on various thresholds of the message queue length and ROC [...] there
+/// are four cases, resulting in either a large or small increase in PEs").
+#[derive(Clone, Copy, Debug)]
+pub struct LoadPredictorConfig {
+    /// Polling cadence of the queue metrics.
+    pub poll_interval: Millis,
+    /// Queue length considered "long" / "very long".
+    pub queue_small: usize,
+    pub queue_large: usize,
+    /// ROC (messages/s) considered "growing" / "very large".
+    pub roc_small: f64,
+    pub roc_large: f64,
+    /// PE increase sizes for the two outcomes.
+    pub increase_small: usize,
+    pub increase_large: usize,
+    /// Timeout after scheduling PEs before the predictor reads again.
+    pub cooldown: Millis,
+}
+
+impl Default for LoadPredictorConfig {
+    fn default() -> Self {
+        LoadPredictorConfig {
+            poll_interval: Millis::from_secs(2),
+            queue_small: 1,
+            queue_large: 20,
+            roc_small: 0.5,
+            roc_large: 5.0,
+            increase_small: 2,
+            increase_large: 8,
+            cooldown: Millis::from_secs(6),
+        }
+    }
+}
+
+/// Top-level IRM configuration.
+#[derive(Clone, Debug)]
+pub struct IrmConfig {
+    /// Bin-packing run cadence ("performs a bin-packing run at a
+    /// configurable rate").
+    pub binpack_interval: Millis,
+    pub packer: PackerChoice,
+    pub buffer_policy: BufferPolicy,
+    pub load_predictor: LoadPredictorConfig,
+    /// TTL for container host requests (requeues burn one unit).
+    pub request_ttl: u32,
+    /// Grace period a worker must stay empty before scale-down terminates
+    /// its VM.
+    pub worker_drain_grace: Millis,
+    /// Hard cap on PEs per image queued+hosted at once (safety valve).
+    pub max_pes_per_image: usize,
+    /// Initial per-image CPU estimate (forwarded to the profiler).
+    pub default_estimate: CpuFraction,
+    /// Profiler moving-average window (last N measurements).
+    pub profiler_window: usize,
+}
+
+impl Default for IrmConfig {
+    fn default() -> Self {
+        IrmConfig {
+            binpack_interval: Millis::from_secs(2),
+            packer: PackerChoice::FirstFit,
+            buffer_policy: BufferPolicy::Logarithmic,
+            load_predictor: LoadPredictorConfig::default(),
+            request_ttl: 100,
+            worker_drain_grace: Millis::from_secs(10),
+            max_pes_per_image: 256,
+            // Conservative initial guess for unprofiled images (half a
+            // worker): the first run schedules fewer PEs per bin until the
+            // profiler converges — the warm-up effect the paper reports.
+            default_estimate: CpuFraction::new(0.5),
+            profiler_window: 10,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_buffer_grows_slowly() {
+        let p = BufferPolicy::Logarithmic;
+        assert_eq!(p.buffer_for(0), 1);
+        assert_eq!(p.buffer_for(1), 1);
+        assert_eq!(p.buffer_for(3), 2);
+        assert_eq!(p.buffer_for(7), 3);
+        assert_eq!(p.buffer_for(31), 5);
+    }
+
+    #[test]
+    fn none_buffer_is_zero() {
+        assert_eq!(BufferPolicy::None.buffer_for(10), 0);
+    }
+
+    #[test]
+    fn linear_buffer() {
+        assert_eq!(BufferPolicy::Linear(0.5).buffer_for(4), 2);
+        assert_eq!(BufferPolicy::Linear(0.5).buffer_for(5), 3);
+    }
+
+    #[test]
+    fn defaults_sane() {
+        let cfg = IrmConfig::default();
+        assert!(cfg.binpack_interval.0 > 0);
+        assert!(cfg.load_predictor.queue_large > cfg.load_predictor.queue_small);
+        assert!(cfg.load_predictor.roc_large > cfg.load_predictor.roc_small);
+        assert!(cfg.load_predictor.increase_large > cfg.load_predictor.increase_small);
+    }
+}

@@ -1,0 +1,190 @@
+//! Container queue (§V-B1): FIFO of container hosting requests.
+//!
+//! "Whenever a PE is to be created, it must first enter the container
+//! queue [...] Each request contains the container image name, a
+//! time-to-live (TTL) counter, any metrics related to that image etc. The
+//! TTL counter is used in case the request is requeued following a failed
+//! hosting attempt. While waiting in the queue, requests are periodically
+//! updated with metric changes and finally consumed and processed by the
+//! periodic bin-packing algorithm. The queue holds requests both from
+//! auto-scaling decisions and manual hosting requests from users."
+
+use std::collections::VecDeque;
+
+use crate::profiler::WorkerProfiler;
+use crate::types::{CpuFraction, ImageName, Millis};
+
+/// Where a hosting request came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestOrigin {
+    /// The load predictor's auto-scaling decision.
+    AutoScale,
+    /// An explicit user request (stream connector "host this image").
+    Manual,
+}
+
+/// One container hosting request.
+#[derive(Clone, Debug)]
+pub struct ContainerRequest {
+    pub id: u64,
+    pub image: ImageName,
+    pub ttl: u32,
+    /// Current item-size metric (refreshed from the profiler while queued).
+    pub estimate: CpuFraction,
+    pub origin: RequestOrigin,
+    pub enqueued_at: Millis,
+    pub requeues: u32,
+}
+
+/// FIFO container queue with TTL-guarded requeue.
+#[derive(Default)]
+pub struct ContainerQueue {
+    queue: VecDeque<ContainerRequest>,
+    next_id: u64,
+    /// Requests dropped because their TTL reached zero.
+    pub dropped: u64,
+}
+
+impl ContainerQueue {
+    pub fn new() -> Self {
+        ContainerQueue::default()
+    }
+
+    /// Enqueue a fresh request.
+    pub fn push(
+        &mut self,
+        image: ImageName,
+        estimate: CpuFraction,
+        ttl: u32,
+        origin: RequestOrigin,
+        now: Millis,
+    ) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(ContainerRequest {
+            id,
+            image,
+            ttl,
+            estimate,
+            origin,
+            enqueued_at: now,
+            requeues: 0,
+        });
+        id
+    }
+
+    /// Requeue after a failed hosting attempt; burns one TTL unit and drops
+    /// the request (counted) when TTL is exhausted.
+    pub fn requeue(&mut self, mut req: ContainerRequest) {
+        if req.ttl == 0 {
+            self.dropped += 1;
+            return;
+        }
+        req.ttl -= 1;
+        req.requeues += 1;
+        // Requeued requests go to the back: the queue stays strictly FIFO.
+        self.queue.push_back(req);
+    }
+
+    /// Periodic metric refresh (§V-B1/§V-B3: updated averages are
+    /// propagated to requests waiting in the queue).
+    pub fn refresh_estimates(&mut self, profiler: &WorkerProfiler) {
+        for req in &mut self.queue {
+            req.estimate = profiler.estimate(&req.image);
+        }
+    }
+
+    /// Take every waiting request (the bin-packing manager consumes the
+    /// whole queue each run).
+    pub fn drain(&mut self) -> Vec<ContainerRequest> {
+        self.queue.drain(..).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Queued requests per image (to bound PE auto-scaling).
+    pub fn count_for(&self, image: &ImageName) -> usize {
+        self.queue.iter().filter(|r| &r.image == image).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::{ProfilerConfig, WorkerProfiler};
+    use crate::protocol::WorkerReport;
+    use crate::types::WorkerId;
+
+    fn req_queue() -> ContainerQueue {
+        ContainerQueue::new()
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut q = req_queue();
+        q.push(ImageName::new("a"), CpuFraction::new(0.1), 3, RequestOrigin::AutoScale, Millis(0));
+        q.push(ImageName::new("b"), CpuFraction::new(0.1), 3, RequestOrigin::Manual, Millis(1));
+        let drained = q.drain();
+        assert_eq!(drained[0].image.as_str(), "a");
+        assert_eq!(drained[1].image.as_str(), "b");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn requeue_burns_ttl_then_drops() {
+        let mut q = req_queue();
+        q.push(ImageName::new("a"), CpuFraction::new(0.1), 2, RequestOrigin::AutoScale, Millis(0));
+        let mut req = q.drain().pop().unwrap();
+        q.requeue(req.clone()); // ttl 2 -> 1
+        req = q.drain().pop().unwrap();
+        assert_eq!(req.ttl, 1);
+        assert_eq!(req.requeues, 1);
+        q.requeue(req.clone()); // ttl 1 -> 0
+        req = q.drain().pop().unwrap();
+        assert_eq!(req.ttl, 0);
+        q.requeue(req); // dropped
+        assert!(q.is_empty());
+        assert_eq!(q.dropped, 1);
+    }
+
+    #[test]
+    fn estimates_refresh_from_profiler() {
+        let mut q = req_queue();
+        q.push(ImageName::new("img"), CpuFraction::new(0.25), 3, RequestOrigin::AutoScale, Millis(0));
+        let mut prof = WorkerProfiler::new(ProfilerConfig::default());
+        prof.ingest(&WorkerReport {
+            worker: WorkerId(0),
+            at: Millis(0),
+            total_cpu: CpuFraction::new(0.5),
+            per_image: vec![(ImageName::new("img"), CpuFraction::new(0.5))],
+            pes: Vec::new(),
+        });
+        q.refresh_estimates(&prof);
+        let req = q.drain().pop().unwrap();
+        assert!((req.estimate.value() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn count_for_image() {
+        let mut q = req_queue();
+        q.push(ImageName::new("a"), CpuFraction::new(0.1), 3, RequestOrigin::AutoScale, Millis(0));
+        q.push(ImageName::new("a"), CpuFraction::new(0.1), 3, RequestOrigin::AutoScale, Millis(0));
+        q.push(ImageName::new("b"), CpuFraction::new(0.1), 3, RequestOrigin::AutoScale, Millis(0));
+        assert_eq!(q.count_for(&ImageName::new("a")), 2);
+        assert_eq!(q.count_for(&ImageName::new("b")), 1);
+    }
+
+    #[test]
+    fn ids_unique() {
+        let mut q = req_queue();
+        let a = q.push(ImageName::new("a"), CpuFraction::new(0.1), 3, RequestOrigin::AutoScale, Millis(0));
+        let b = q.push(ImageName::new("a"), CpuFraction::new(0.1), 3, RequestOrigin::AutoScale, Millis(0));
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,223 @@
+//! Load predictor (§V-B4): tracks streaming-request pressure.
+//!
+//! "Looking at the length of the message queue and its rate of change
+//! (ROC), the load predictor can determine if the rate of processing data
+//! streams is too slow and there is a need to add more PEs. [...] The
+//! decision of scaling up is based on various thresholds of the message
+//! queue length and ROC. These thresholds are configurable, and there are
+//! four cases, resulting in either a large or small increase in PEs. [...]
+//! Reading the queue metrics is done periodically, and there is a timeout
+//! period after scheduling more PEs before the load predictor can do this
+//! again."
+
+use crate::clock::Periodic;
+use crate::irm::config::LoadPredictorConfig;
+use crate::master::QueueMetrics;
+use crate::types::Millis;
+
+/// The four threshold cases of the paper and their outcome.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Queue very long OR ROC very large → large PE increase.
+    LargeIncrease(usize),
+    /// Queue long OR ROC growing → small PE increase.
+    SmallIncrease(usize),
+    /// Pressure within bounds.
+    Hold,
+    /// In cooldown after a recent scheduling action.
+    CoolingDown,
+}
+
+impl ScaleDecision {
+    pub fn pe_increase(self) -> usize {
+        match self {
+            ScaleDecision::LargeIncrease(n) | ScaleDecision::SmallIncrease(n) => n,
+            _ => 0,
+        }
+    }
+}
+
+/// Periodic queue-pressure evaluator with post-action cooldown.
+pub struct LoadPredictor {
+    cfg: LoadPredictorConfig,
+    poll: Periodic,
+    cooldown_until: Option<Millis>,
+    /// Lifetime decisions (observability).
+    pub large_increases: u64,
+    pub small_increases: u64,
+}
+
+impl LoadPredictor {
+    pub fn new(cfg: LoadPredictorConfig) -> Self {
+        LoadPredictor {
+            poll: Periodic::new(cfg.poll_interval),
+            cfg,
+            cooldown_until: None,
+            large_increases: 0,
+            small_increases: 0,
+        }
+    }
+
+    pub fn config(&self) -> &LoadPredictorConfig {
+        &self.cfg
+    }
+
+    /// Whether the predictor wants a queue sample this tick.
+    pub fn wants_sample(&mut self, now: Millis) -> bool {
+        if let Some(until) = self.cooldown_until {
+            if now < until {
+                return false;
+            }
+            self.cooldown_until = None;
+        }
+        self.poll.fire(now)
+    }
+
+    /// Evaluate one queue sample into a decision. The caller only invokes
+    /// this when [`wants_sample`](Self::wants_sample) returned true.
+    pub fn evaluate(&mut self, metrics: QueueMetrics) -> ScaleDecision {
+        let q = metrics.backlog_len;
+        let roc = metrics.rate_of_change;
+        let c = &self.cfg;
+
+        // The paper's four cases over (queue, ROC):
+        //   1. q >= large OR roc >= large            → large increase
+        //   2. q >= small AND roc >= small           → large increase
+        //   3. q >= small (roc low)  — queue exists but stable → small
+        //   4. roc >= small (queue short) — growth from idle    → small
+        let decision = if q >= c.queue_large || roc >= c.roc_large {
+            ScaleDecision::LargeIncrease(c.increase_large)
+        } else if q >= c.queue_small && roc >= c.roc_small {
+            ScaleDecision::LargeIncrease(c.increase_large)
+        } else if q >= c.queue_small {
+            ScaleDecision::SmallIncrease(c.increase_small)
+        } else if roc >= c.roc_small {
+            ScaleDecision::SmallIncrease(c.increase_small)
+        } else {
+            ScaleDecision::Hold
+        };
+
+        match decision {
+            ScaleDecision::LargeIncrease(_) => {
+                self.large_increases += 1;
+                self.cooldown_until = Some(metrics.at + c.cooldown);
+            }
+            ScaleDecision::SmallIncrease(_) => {
+                self.small_increases += 1;
+                self.cooldown_until = Some(metrics.at + c.cooldown);
+            }
+            _ => {}
+        }
+        decision
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> LoadPredictorConfig {
+        LoadPredictorConfig {
+            poll_interval: Millis::from_secs(1),
+            queue_small: 2,
+            queue_large: 20,
+            roc_small: 0.5,
+            roc_large: 5.0,
+            increase_small: 2,
+            increase_large: 8,
+            cooldown: Millis::from_secs(5),
+        }
+    }
+
+    fn metrics(at: u64, len: usize, roc: f64) -> QueueMetrics {
+        QueueMetrics {
+            at: Millis(at),
+            backlog_len: len,
+            rate_of_change: roc,
+        }
+    }
+
+    #[test]
+    fn very_long_queue_triggers_large() {
+        let mut p = LoadPredictor::new(cfg());
+        assert_eq!(
+            p.evaluate(metrics(0, 50, 0.0)),
+            ScaleDecision::LargeIncrease(8)
+        );
+    }
+
+    #[test]
+    fn very_large_roc_triggers_large() {
+        let mut p = LoadPredictor::new(cfg());
+        assert_eq!(
+            p.evaluate(metrics(0, 0, 10.0)),
+            ScaleDecision::LargeIncrease(8)
+        );
+    }
+
+    #[test]
+    fn moderate_queue_and_growth_triggers_large() {
+        let mut p = LoadPredictor::new(cfg());
+        assert_eq!(
+            p.evaluate(metrics(0, 5, 1.0)),
+            ScaleDecision::LargeIncrease(8)
+        );
+    }
+
+    #[test]
+    fn stable_queue_triggers_small() {
+        let mut p = LoadPredictor::new(cfg());
+        assert_eq!(
+            p.evaluate(metrics(0, 5, 0.0)),
+            ScaleDecision::SmallIncrease(2)
+        );
+    }
+
+    #[test]
+    fn growth_from_idle_triggers_small() {
+        let mut p = LoadPredictor::new(cfg());
+        assert_eq!(
+            p.evaluate(metrics(0, 0, 1.0)),
+            ScaleDecision::SmallIncrease(2)
+        );
+    }
+
+    #[test]
+    fn no_pressure_holds() {
+        let mut p = LoadPredictor::new(cfg());
+        assert_eq!(p.evaluate(metrics(0, 0, 0.0)), ScaleDecision::Hold);
+        assert_eq!(p.large_increases + p.small_increases, 0);
+    }
+
+    #[test]
+    fn cooldown_suppresses_polling() {
+        let mut p = LoadPredictor::new(cfg());
+        assert!(p.wants_sample(Millis(0)));
+        p.evaluate(metrics(0, 50, 0.0)); // action → cooldown until 5 s
+        assert!(!p.wants_sample(Millis(1000)));
+        assert!(!p.wants_sample(Millis(4999)));
+        assert!(p.wants_sample(Millis(5000)));
+    }
+
+    #[test]
+    fn hold_does_not_start_cooldown() {
+        let mut p = LoadPredictor::new(cfg());
+        assert!(p.wants_sample(Millis(0)));
+        p.evaluate(metrics(0, 0, 0.0));
+        assert!(p.wants_sample(Millis(1000)), "polling continues after Hold");
+    }
+
+    #[test]
+    fn polling_respects_interval() {
+        let mut p = LoadPredictor::new(cfg());
+        assert!(p.wants_sample(Millis(0)));
+        assert!(!p.wants_sample(Millis(400)));
+        assert!(p.wants_sample(Millis(1000)));
+    }
+
+    #[test]
+    fn negative_roc_never_scales() {
+        let mut p = LoadPredictor::new(cfg());
+        assert_eq!(p.evaluate(metrics(0, 0, -3.0)), ScaleDecision::Hold);
+    }
+}

@@ -1,0 +1,404 @@
+//! The Intelligent Resource Manager (IRM) — the paper's contribution.
+//!
+//! Wires the four components of Fig 2 — container queue, container
+//! allocator (bin-packing manager), worker profiler and load predictor —
+//! plus the worker auto-scaler, into one control loop:
+//!
+//! 1. the **load predictor** polls the master's queue metrics and, per its
+//!    four threshold cases, enqueues PE hosting requests;
+//! 2. the **worker profiler** keeps per-image moving averages from worker
+//!    reports and refreshes the queued requests' item sizes;
+//! 3. the **bin-packing manager** periodically packs all waiting requests
+//!    into the active workers (First-Fit; bins = workers at capacity 1.0),
+//!    producing hosting allocations and the needed worker count;
+//! 4. the **auto-scaler** turns that into VM requests / terminations with
+//!    the log-proportional idle buffer.
+//!
+//! The IRM is a pure state machine: the caller (simulation harness or live
+//! cluster) applies the returned [`IrmUpdate`] to its workers and cloud.
+
+pub mod allocator;
+pub mod autoscaler;
+pub mod config;
+pub mod container_queue;
+pub mod load_predictor;
+
+use crate::clock::Periodic;
+use crate::master::Master;
+use crate::profiler::{ProfilerConfig, WorkerProfiler};
+use crate::protocol::WorkerReport;
+use crate::types::{CpuFraction, ImageName, Millis, WorkerId};
+
+pub use allocator::{Allocation, Allocator, PackOutcome, WorkerBin};
+pub use autoscaler::{AutoScaler, ScalePlan, WorkerState};
+pub use config::{BufferPolicy, IrmConfig, LoadPredictorConfig, PackerChoice};
+pub use container_queue::{ContainerQueue, ContainerRequest, RequestOrigin};
+pub use load_predictor::{LoadPredictor, ScaleDecision};
+
+/// The IRM's per-cycle view of the cluster (provided by the harness).
+#[derive(Clone, Debug, Default)]
+pub struct ClusterView {
+    /// Active workers in id order, with the images of the PEs they host
+    /// (booting PEs included — their capacity is already committed).
+    pub workers: Vec<(WorkerId, Vec<ImageName>)>,
+    /// VMs requested but still provisioning.
+    pub booting_vms: usize,
+}
+
+/// Commands and telemetry produced by one control cycle.
+#[derive(Debug, Default)]
+pub struct IrmUpdate {
+    /// Start these images on these workers (bin-packing placements).
+    pub start_pes: Vec<Allocation>,
+    /// Request this many new VMs.
+    pub request_vms: usize,
+    /// Drain and terminate these workers' VMs.
+    pub terminate_workers: Vec<WorkerId>,
+    /// Telemetry: scheduled CPU per active worker after the latest packing
+    /// run (Figs 4/8 series), empty if no run happened this cycle.
+    pub scheduled: Vec<(WorkerId, CpuFraction)>,
+    /// Telemetry: the latest worker target (Fig 10).
+    pub target_workers: Option<usize>,
+    /// Telemetry: bins needed by the latest packing (Fig 10 "active bins"
+    /// companion).
+    pub bins_needed: Option<usize>,
+    /// Telemetry: load-predictor decision this cycle, if it polled.
+    pub scale_decision: Option<ScaleDecision>,
+}
+
+/// The assembled IRM.
+pub struct Irm {
+    pub cfg: IrmConfig,
+    pub queue: ContainerQueue,
+    pub allocator: Allocator,
+    pub predictor: LoadPredictor,
+    pub scaler: AutoScaler,
+    pub profiler: WorkerProfiler,
+    binpack_timer: Periodic,
+    /// Last packing telemetry, re-reported between runs so the recorded
+    /// series are continuous.
+    last_scheduled: Vec<(WorkerId, CpuFraction)>,
+    last_bins_needed: usize,
+    last_target: usize,
+}
+
+impl Irm {
+    pub fn new(cfg: IrmConfig) -> Self {
+        Irm {
+            queue: ContainerQueue::new(),
+            allocator: Allocator::new(cfg.packer),
+            predictor: LoadPredictor::new(cfg.load_predictor),
+            scaler: AutoScaler::new(cfg.buffer_policy, cfg.worker_drain_grace),
+            profiler: WorkerProfiler::new(ProfilerConfig {
+                window: cfg.profiler_window,
+                default_estimate: cfg.default_estimate,
+                ..ProfilerConfig::default()
+            }),
+            binpack_timer: Periodic::new(cfg.binpack_interval),
+            cfg,
+            last_scheduled: Vec::new(),
+            last_bins_needed: 0,
+            last_target: 0,
+        }
+    }
+
+    /// Feed a worker report into the profiler (master half of §V-B3).
+    pub fn ingest_report(&mut self, report: &WorkerReport) {
+        self.profiler.ingest(report);
+    }
+
+    /// Manual hosting request (user-initiated, e.g. pre-warming an image).
+    pub fn host_request(&mut self, image: ImageName, now: Millis) {
+        let est = self.profiler.estimate(&image);
+        self.queue
+            .push(image, est, self.cfg.request_ttl, RequestOrigin::Manual, now);
+    }
+
+    /// Latest scheduled view (continuous between packing runs).
+    pub fn scheduled_view(&self) -> &[(WorkerId, CpuFraction)] {
+        &self.last_scheduled
+    }
+
+    pub fn last_target(&self) -> usize {
+        self.last_target
+    }
+
+    pub fn last_bins_needed(&self) -> usize {
+        self.last_bins_needed
+    }
+
+    /// One IRM control cycle. Call every simulation/control tick; the
+    /// internal timers decide which sub-loops actually run.
+    pub fn control_cycle(
+        &mut self,
+        now: Millis,
+        master: &mut Master,
+        view: &ClusterView,
+    ) -> IrmUpdate {
+        let mut update = IrmUpdate::default();
+
+        // --- 1. Load predictor: queue pressure → PE hosting requests. ---
+        if self.predictor.wants_sample(now) {
+            let metrics = master.sample_queue(now);
+            let decision = self.predictor.evaluate(metrics);
+            update.scale_decision = Some(decision);
+            let n = decision.pe_increase();
+            if n > 0 {
+                self.enqueue_pe_requests(n, master, view, now);
+            }
+        }
+
+        // --- 2. Bin-packing run over the waiting requests. ---
+        if self.binpack_timer.fire(now) {
+            self.queue.refresh_estimates(&self.profiler);
+            let requests = self.queue.drain();
+            let bins: Vec<WorkerBin> = view
+                .workers
+                .iter()
+                .map(|(id, images)| WorkerBin {
+                    worker: *id,
+                    scheduled: allocator::scheduled_load(images, |img| {
+                        self.profiler.estimate(img)
+                    }),
+                })
+                .collect();
+            let outcome = self.allocator.pack(requests, &bins);
+            for req in outcome.pending_new_workers {
+                // Failed hosting attempt (target VM does not exist yet):
+                // requeue with TTL decrement, as §V-B2 specifies.
+                self.queue.requeue(req);
+            }
+            self.last_scheduled = outcome.scheduled.clone();
+            self.last_bins_needed = outcome.bins_needed;
+            update.start_pes = outcome.allocations;
+            update.bins_needed = Some(outcome.bins_needed);
+            update.scheduled = outcome.scheduled;
+        }
+
+        // --- 3. Auto-scaler: worker supply vs bins needed. ---
+        let worker_states: Vec<WorkerState> = view
+            .workers
+            .iter()
+            .map(|(id, images)| WorkerState {
+                worker: *id,
+                pe_count: images.len(),
+            })
+            .collect();
+        let plan = self
+            .scaler
+            .plan(now, self.last_bins_needed, &worker_states, view.booting_vms);
+        self.last_target = plan.target_workers;
+        update.request_vms = plan.request_vms;
+        update.terminate_workers = plan.terminate;
+        update.target_workers = Some(plan.target_workers);
+
+        update
+    }
+
+    /// Split a PE increase across the images waiting in the backlog,
+    /// proportionally to their share of waiting messages, bounded so we
+    /// never queue more PEs than there are waiting messages per image.
+    fn enqueue_pe_requests(
+        &mut self,
+        total: usize,
+        master: &Master,
+        view: &ClusterView,
+        now: Millis,
+    ) {
+        let backlog = master.backlog_by_image();
+        if backlog.is_empty() {
+            return;
+        }
+        let waiting_total: usize = backlog.iter().map(|(_, n)| n).sum();
+        for (image, waiting) in &backlog {
+            // Proportional share, at least 1 for any waiting image.
+            let share = ((total * waiting) as f64 / waiting_total as f64).ceil() as usize;
+            let hosted: usize = view
+                .workers
+                .iter()
+                .map(|(_, imgs)| imgs.iter().filter(|i| *i == image).count())
+                .sum();
+            let queued = self.queue.count_for(image);
+            // Never more in-flight PEs than waiting messages, and respect
+            // the per-image cap.
+            let room = self
+                .cfg
+                .max_pes_per_image
+                .saturating_sub(hosted + queued)
+                .min(waiting.saturating_sub(queued));
+            let n = share.min(room);
+            let est = self.profiler.estimate(image);
+            for _ in 0..n {
+                self.queue.push(
+                    image.clone(),
+                    est,
+                    self.cfg.request_ttl,
+                    RequestOrigin::AutoScale,
+                    now,
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::connector::LocalConnector;
+
+    fn view(workers: &[(u64, &[&str])], booting: usize) -> ClusterView {
+        ClusterView {
+            workers: workers
+                .iter()
+                .map(|(id, imgs)| {
+                    (
+                        WorkerId(*id),
+                        imgs.iter().map(|s| ImageName::new(*s)).collect(),
+                    )
+                })
+                .collect(),
+            booting_vms: booting,
+        }
+    }
+
+    fn fast_cfg() -> IrmConfig {
+        IrmConfig {
+            binpack_interval: Millis(1000),
+            load_predictor: LoadPredictorConfig {
+                poll_interval: Millis(1000),
+                cooldown: Millis(2000),
+                ..LoadPredictorConfig::default()
+            },
+            ..IrmConfig::default()
+        }
+    }
+
+    fn flood_backlog(master: &mut Master, image: &str, n: usize) {
+        let mut conn = LocalConnector::new();
+        for _ in 0..n {
+            conn.stream(
+                master,
+                &ImageName::new(image),
+                1024,
+                Millis(10_000),
+                Millis(0),
+            );
+        }
+    }
+
+    #[test]
+    fn queue_pressure_creates_pe_requests_and_vm_demand() {
+        let mut irm = Irm::new(fast_cfg());
+        let mut master = Master::new();
+        flood_backlog(&mut master, "img", 50);
+        let update = irm.control_cycle(Millis(0), &mut master, &view(&[], 0));
+        // Large increase expected; no workers → requests pend, VMs asked.
+        assert!(matches!(
+            update.scale_decision,
+            Some(ScaleDecision::LargeIncrease(_))
+        ));
+        assert!(update.request_vms > 0, "must ask the cloud for workers");
+        assert!(update.start_pes.is_empty());
+        assert!(irm.queue.len() > 0, "requests requeued awaiting workers");
+    }
+
+    #[test]
+    fn packing_places_pes_on_active_workers() {
+        let mut irm = Irm::new(fast_cfg());
+        let mut master = Master::new();
+        flood_backlog(&mut master, "img", 50);
+        // Cycle 1: requests enqueued (no workers yet).
+        irm.control_cycle(Millis(0), &mut master, &view(&[], 0));
+        // Cycle 2 (cooldown active): a worker is now active.
+        let update = irm.control_cycle(Millis(1000), &mut master, &view(&[(0, &[])], 0));
+        assert!(!update.start_pes.is_empty());
+        assert!(update
+            .start_pes
+            .iter()
+            .all(|a| a.worker == WorkerId(0)));
+        // Scheduled view reflects the placements.
+        let sched = &update.scheduled;
+        assert_eq!(sched[0].0, WorkerId(0));
+        assert!(sched[0].1.value() > 0.0);
+    }
+
+    #[test]
+    fn scheduled_respects_capacity() {
+        let mut irm = Irm::new(fast_cfg());
+        let mut master = Master::new();
+        flood_backlog(&mut master, "img", 200);
+        irm.control_cycle(Millis(0), &mut master, &view(&[], 0));
+        let update = irm.control_cycle(Millis(1000), &mut master, &view(&[(0, &[])], 0));
+        assert!(update.scheduled[0].1.value() <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn profiled_estimates_drive_item_sizes() {
+        let mut irm = Irm::new(fast_cfg());
+        // Teach the profiler img ≈ 0.5.
+        for _ in 0..10 {
+            irm.ingest_report(&WorkerReport {
+                worker: WorkerId(0),
+                at: Millis(0),
+                total_cpu: CpuFraction::new(0.5),
+                per_image: vec![(ImageName::new("img"), CpuFraction::new(0.5))],
+                pes: vec![],
+            });
+        }
+        let mut master = Master::new();
+        flood_backlog(&mut master, "img", 50);
+        irm.control_cycle(Millis(0), &mut master, &view(&[], 0));
+        let update = irm.control_cycle(Millis(1000), &mut master, &view(&[(0, &[])], 0));
+        // 0.5-sized items: exactly 2 fit on the one worker.
+        assert_eq!(update.start_pes.len(), 2);
+    }
+
+    #[test]
+    fn existing_pes_consume_bin_space() {
+        let mut irm = Irm::new(fast_cfg());
+        let mut master = Master::new();
+        flood_backlog(&mut master, "img", 50);
+        irm.control_cycle(Millis(0), &mut master, &view(&[], 0));
+        // Worker already hosts 1 PE of the default 0.5 estimate → 0.5
+        // used → exactly one more 0.5-item fits.
+        let update = irm.control_cycle(
+            Millis(1000),
+            &mut master,
+            &view(&[(0, &["img"])], 0),
+        );
+        assert_eq!(update.start_pes.len(), 1);
+    }
+
+    #[test]
+    fn manual_host_request_packs() {
+        let mut irm = Irm::new(fast_cfg());
+        let mut master = Master::new();
+        irm.host_request(ImageName::new("custom"), Millis(0));
+        let update = irm.control_cycle(Millis(0), &mut master, &view(&[(0, &[])], 0));
+        assert_eq!(update.start_pes.len(), 1);
+        assert_eq!(update.start_pes[0].request.image.as_str(), "custom");
+        assert_eq!(update.start_pes[0].request.origin, RequestOrigin::Manual);
+    }
+
+    #[test]
+    fn telemetry_continuous_between_runs() {
+        let mut irm = Irm::new(fast_cfg());
+        let mut master = Master::new();
+        irm.host_request(ImageName::new("img"), Millis(0));
+        irm.control_cycle(Millis(0), &mut master, &view(&[(0, &[])], 0));
+        let sched = irm.scheduled_view().to_vec();
+        assert!(!sched.is_empty());
+        // A cycle between packing runs keeps the last view.
+        irm.control_cycle(Millis(1500), &mut master, &view(&[(0, &["img"])], 0));
+        assert_eq!(irm.scheduled_view(), sched.as_slice());
+    }
+
+    #[test]
+    fn never_queues_more_pes_than_waiting_messages() {
+        let mut irm = Irm::new(fast_cfg());
+        let mut master = Master::new();
+        flood_backlog(&mut master, "img", 3);
+        let _ = irm.control_cycle(Millis(0), &mut master, &view(&[], 0));
+        assert!(irm.queue.len() <= 3, "queued {}", irm.queue.len());
+    }
+}

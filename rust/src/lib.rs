@@ -1,0 +1,66 @@
+//! # HarmonicIO + IRM — smart resource management for data streaming
+//!
+//! A from-scratch reproduction of *"Smart Resource Management for Data
+//! Streaming using an Online Bin-packing Strategy"* (Stein et al., 2020):
+//! the HarmonicIO (HIO) streaming framework for large individual objects,
+//! extended with the Intelligent Resource Manager (IRM) that schedules
+//! containerized processing engines (PEs) onto worker VMs with online
+//! First-Fit bin-packing, profiles workloads at run time, and auto-scales
+//! both PEs and workers.
+//!
+//! ## Layering
+//!
+//! * **L3 (this crate)** — the coordination system: master, workers, stream
+//!   connector, the IRM (container queue, allocator/bin-packing manager,
+//!   worker profiler, load predictor, autoscaler), a simulated cloud
+//!   provider, a Spark-Streaming dynamic-allocation baseline, a
+//!   discrete-time simulation harness, and the experiment drivers that
+//!   regenerate every figure of the paper.
+//! * **L2/L1 (python, build-time only)** — the PE payloads (the
+//!   CellProfiler-like nuclei pipeline and the synthetic CPU burner) as JAX
+//!   graphs over Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **[`runtime`]** — loads those artifacts via PJRT (`xla` crate) and
+//!   executes them from the rust request path. Python never runs at
+//!   request time.
+//!
+//! ## Map of the crate
+//!
+//! | module | role |
+//! |---|---|
+//! | [`binpacking`] | online bin-packing algorithms + quality analysis |
+//! | [`irm`] | the paper's contribution: container queue, allocator, load predictor, autoscaler |
+//! | [`profiler`] | sliding-window per-image CPU profiling |
+//! | [`master`], [`worker`], [`connector`] | the HarmonicIO framework |
+//! | [`cloud`] | simulated IaaS provider (flavors, boot delay, quota) |
+//! | [`sim`] | fixed-step cluster simulation harness |
+//! | [`clock`] | virtual/real time |
+//! | [`spark`] | Spark Streaming dynamic-allocation baseline |
+//! | [`workload`] | synthetic + microscopy workload generators |
+//! | [`runtime`] | PJRT artifact loading/execution |
+//! | [`metrics`] | time-series recording, CSV + ASCII plots |
+//! | [`experiments`] | one driver per paper figure (Figs 3–10, headline) |
+//! | [`protocol`], [`transport`] | wire protocol + TCP for distributed mode |
+//! | [`util`], [`testkit`], [`bench`] | substrates: JSON, RNG, CLI, property testing, bench harness |
+
+pub mod bench;
+pub mod binpacking;
+pub mod clock;
+pub mod cloud;
+pub mod connector;
+pub mod experiments;
+pub mod irm;
+pub mod master;
+pub mod metrics;
+pub mod profiler;
+pub mod protocol;
+pub mod runtime;
+pub mod sim;
+pub mod spark;
+pub mod testkit;
+pub mod transport;
+pub mod types;
+pub mod util;
+pub mod worker;
+pub mod workload;
+
+pub use types::{CpuFraction, ImageName, Millis, PeId, VmId, WorkerId};

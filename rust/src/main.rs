@@ -1,0 +1,206 @@
+//! `repro` — the HarmonicIO+IRM coordinator CLI.
+//!
+//! Subcommands:
+//!
+//! * `repro experiment <name|all> [--out results] [--seed N]` — regenerate
+//!   any figure of the paper (see `repro list`).
+//! * `repro list` — list available experiments.
+//! * `repro analyze [--images N] [--size 128] [--pes K]` — live PJRT run:
+//!   generate fluorescence images, stream them through the live cluster,
+//!   report features + throughput (the E2E driver's core).
+//! * `repro serve [--addr 127.0.0.1:4950] [--artifacts artifacts]` — serve
+//!   the live cluster over TCP (JSON protocol).
+//! * `repro stream --addr HOST:PORT [--images N]` — stream-connector
+//!   client against a running `repro serve`.
+//! * `repro master [--addr 127.0.0.1:4900]` — distributed-mode master
+//!   (endpoint query + backlog dispatcher).
+//! * `repro worker --master HOST:PORT [--pes 2]` — distributed-mode worker
+//!   agent: registers with the master, accepts P2P messages.
+
+use anyhow::{bail, Context, Result};
+use harmonicio::connector::TcpConnector;
+use harmonicio::master::{LiveCluster, LiveConfig};
+use harmonicio::util::cli::Args;
+use harmonicio::util::json::Json;
+use harmonicio::workload::ImageGen;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: repro <experiment|list|analyze|serve|stream> [options]\n\
+     \n\
+     repro experiment <name|all> [--out results] [--seed N]\n\
+     repro list\n\
+     repro analyze [--images 24] [--size 128] [--pes 4] [--artifacts artifacts]\n\
+     repro serve   [--addr 127.0.0.1:4950] [--artifacts artifacts]\n\
+     repro stream  --addr HOST:PORT [--images 4] [--size 128]\n\
+     repro master  [--addr 127.0.0.1:4900]\n\
+     repro worker  --master HOST:PORT [--addr 127.0.0.1:0] [--pes 2]"
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.pos(0) {
+        Some("experiment") => cmd_experiment(&args),
+        Some("list") => {
+            println!("experiments (repro experiment <name>):");
+            for (name, desc) in harmonicio::experiments::EXPERIMENTS {
+                println!("  {name:<18} {desc}");
+            }
+            println!("  {:<18} run everything", "all");
+            Ok(())
+        }
+        Some("analyze") => cmd_analyze(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("stream") => cmd_stream(&args),
+        Some("master") => cmd_master(&args),
+        Some("worker") => cmd_worker(&args),
+        _ => {
+            println!("{}", usage());
+            Ok(())
+        }
+    }
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let name = args
+        .pos(1)
+        .context("experiment name required (see `repro list`)")?;
+    let out = args.get_or("out", "results");
+    let seed = args.get_u64("seed", 42)?;
+    let reports = harmonicio::experiments::run(name, out, seed)?;
+    for r in &reports {
+        println!("{}", r.render());
+    }
+    let failed = reports.iter().filter(|r| !r.all_passed()).count();
+    if failed > 0 {
+        bail!("{failed} experiment(s) had failing shape checks");
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let n_images = args.get_usize("images", 24)?;
+    let size = args.get_usize("size", 128)?;
+    let pes = args.get_usize("pes", 4)?;
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let seed = args.get_u64("seed", 7)?;
+
+    let mut cluster = LiveCluster::new(
+        artifacts,
+        LiveConfig {
+            max_pes: pes,
+            initial_pes: pes.min(2),
+            ..LiveConfig::default()
+        },
+    )?;
+    println!(
+        "live cluster up: platform={} pes={} (max {pes})",
+        cluster.platform(),
+        cluster.pe_count()
+    );
+
+    let mut gen = ImageGen::new(seed, size);
+    let plate = gen.plate(n_images);
+    let t0 = std::time::Instant::now();
+    for (_, pixels) in &plate {
+        cluster.stream(pixels.clone());
+    }
+    cluster.drain_until(n_images as u64, std::time::Duration::from_secs(600))?;
+    let wall = t0.elapsed();
+
+    println!("\n  img  planted  counted  area_px  mean_fg");
+    for (i, r) in cluster.results.iter().enumerate() {
+        let planted = plate
+            .get(r.id.0 as usize)
+            .map(|(d, _)| *d)
+            .unwrap_or(0);
+        println!(
+            "  {:>3}  {:>7}  {:>7.0}  {:>7.0}  {:>7.3}",
+            i, planted, r.features[0], r.features[1], r.features[2]
+        );
+    }
+    let s = &cluster.stats;
+    println!(
+        "\n{} images in {:.2}s | throughput {:.2} img/s | mean latency {:?} | mean service {:?} | PEs peak {}",
+        s.completed,
+        wall.as_secs_f64(),
+        s.completed as f64 / wall.as_secs_f64(),
+        s.mean_latency(),
+        s.mean_service(),
+        s.pes_peak
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:4950");
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let cluster = LiveCluster::new(artifacts, LiveConfig::default())?;
+    println!("platform={} — serving on {addr}", cluster.platform());
+    let cluster = std::sync::Arc::new(std::sync::Mutex::new(cluster));
+    let server = LiveCluster::serve(cluster, addr)?;
+    println!("listening on {} (ctrl-c to stop)", server.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_master(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:4900");
+    let service = harmonicio::master::MasterService::start(addr)?;
+    println!("HIO master (P2P endpoint-query + backlog) on {}", service.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let master = args.get("master").context("--master HOST:PORT required")?;
+    let addr = args.get_or("addr", "127.0.0.1:0");
+    let pes = args.get_usize("pes", 2)?;
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let agent = harmonicio::worker::agent::WorkerAgent::start(addr, artifacts, pes)?;
+    let resp = harmonicio::transport::call(
+        master,
+        &Json::obj([
+            ("type", Json::str("register")),
+            ("addr", Json::str(agent.addr().to_string())),
+        ]),
+    )?;
+    println!(
+        "worker agent on {} registered with {master}: {resp}",
+        agent.addr()
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_stream(args: &Args) -> Result<()> {
+    let addr = args.get("addr").context("--addr HOST:PORT required")?;
+    let n_images = args.get_usize("images", 4)?;
+    let size = args.get_usize("size", 128)?;
+    let connector = TcpConnector::new(addr);
+    let mut gen = ImageGen::new(1, size);
+    for i in 0..n_images {
+        let (density, pixels) = gen.plate(1).pop().unwrap();
+        let req = Json::obj([
+            ("type", Json::str("analyze")),
+            (
+                "pixels",
+                Json::arr(pixels.iter().map(|p| Json::num(*p as f64))),
+            ),
+        ]);
+        let resp = harmonicio::transport::call(addr, &req)?;
+        println!("image {i} (planted {density}): {resp}");
+    }
+    let status = connector.status()?;
+    println!("cluster status: {status}");
+    Ok(())
+}

@@ -1,0 +1,312 @@
+//! Master node: system state, worker registry, message routing and the
+//! backlog queue.
+//!
+//! Per the paper (§III-A): the master "is responsible for maintaining the
+//! state of the system, tracking worker nodes, and the availability of
+//! their containers, connects stream requests to workers that are available
+//! [...] It also maintains a backlog queue of messages, if message influx
+//! exceeds available processing capacity", and backlog messages "are
+//! processed with higher priority than new messages".
+
+pub mod live;
+pub mod registry;
+pub mod service;
+
+use std::collections::VecDeque;
+
+use crate::protocol::{PeState, RouteDecision, WorkerReport};
+use crate::types::{ImageName, Millis, PeId, StreamMessage, WorkerId};
+
+pub use live::{LiveCluster, LiveConfig, LiveStats};
+pub use service::MasterService;
+pub use registry::{PeView, WorkerRegistry, WorkerView};
+
+/// Queue-pressure metrics the IRM's load predictor consumes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QueueMetrics {
+    pub at: Millis,
+    pub backlog_len: usize,
+    /// Rate of change of the backlog length, messages/second, estimated
+    /// over the window since the previous sample.
+    pub rate_of_change: f64,
+}
+
+/// The master's mutable state.
+pub struct Master {
+    registry: WorkerRegistry,
+    backlog: VecDeque<StreamMessage>,
+    /// Messages that entered the backlog (lifetime counter).
+    pub total_queued: u64,
+    /// Messages routed directly P2P without queuing.
+    pub total_direct: u64,
+    /// Completions the workers reported back.
+    pub total_completed: u64,
+    last_queue_sample: Option<(Millis, usize)>,
+}
+
+impl Default for Master {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Master {
+    pub fn new() -> Self {
+        Master {
+            registry: WorkerRegistry::new(),
+            backlog: VecDeque::new(),
+            total_queued: 0,
+            total_direct: 0,
+            total_completed: 0,
+            last_queue_sample: None,
+        }
+    }
+
+    pub fn registry(&self) -> &WorkerRegistry {
+        &self.registry
+    }
+
+    pub fn registry_mut(&mut self) -> &mut WorkerRegistry {
+        &mut self.registry
+    }
+
+    /// Ingest a periodic worker report (updates the registry's view of PE
+    /// availability used for routing).
+    pub fn ingest_report(&mut self, report: WorkerReport) {
+        self.registry.ingest(report);
+    }
+
+    /// Route one stream request. Mirrors the connector flow: ask for an
+    /// available PE; P2P if found, otherwise the message joins the backlog.
+    pub fn route(&mut self, msg: StreamMessage) -> RouteDecision {
+        // Backlog has priority: if older messages are waiting, a new
+        // message must not jump the queue even when a PE is free.
+        if self.backlog.is_empty() {
+            if let Some((worker, pe)) = self.registry.find_idle_pe(&msg.image) {
+                self.registry.mark_busy(worker, pe);
+                self.total_direct += 1;
+                return RouteDecision::Direct { worker, pe };
+            }
+        }
+        self.backlog.push_back(msg);
+        self.total_queued += 1;
+        RouteDecision::Queued {
+            backlog_len: self.backlog.len(),
+        }
+    }
+
+    /// Drain backlog messages onto idle PEs (called each control cycle;
+    /// returns `(worker, pe, message)` deliveries for the caller to apply).
+    pub fn drain_backlog(&mut self) -> Vec<(WorkerId, PeId, StreamMessage)> {
+        let mut deliveries = Vec::new();
+        while let Some(front) = self.backlog.front() {
+            match self.registry.find_idle_pe(&front.image) {
+                Some((worker, pe)) => {
+                    let msg = self.backlog.pop_front().unwrap();
+                    self.registry.mark_busy(worker, pe);
+                    deliveries.push((worker, pe, msg));
+                }
+                None => break, // strictly FIFO: head-of-line blocks
+            }
+        }
+        deliveries
+    }
+
+    /// Put a message back at the *front* of the backlog (failed P2P
+    /// delivery — e.g. the PE self-terminated while the message was in
+    /// flight). Front placement preserves the queue's FIFO priority.
+    pub fn requeue_front(&mut self, msg: StreamMessage) {
+        self.backlog.push_front(msg);
+    }
+
+    /// A completion report from a worker (frees our view of the PE).
+    pub fn job_completed(&mut self, worker: WorkerId, pe: PeId) {
+        self.registry.mark_idle(worker, pe);
+        self.total_completed += 1;
+    }
+
+    pub fn backlog_len(&self) -> usize {
+        self.backlog.len()
+    }
+
+    /// Images present in the backlog, with counts (drives PE auto-scaling
+    /// decisions per image).
+    pub fn backlog_by_image(&self) -> Vec<(ImageName, usize)> {
+        let mut counts: Vec<(ImageName, usize)> = Vec::new();
+        for m in &self.backlog {
+            match counts.iter_mut().find(|(img, _)| img == &m.image) {
+                Some((_, c)) => *c += 1,
+                None => counts.push((m.image.clone(), 1)),
+            }
+        }
+        counts
+    }
+
+    /// Sample queue metrics (length + rate of change) — the load
+    /// predictor's input. Call at the predictor's polling cadence.
+    pub fn sample_queue(&mut self, now: Millis) -> QueueMetrics {
+        let len = self.backlog.len();
+        let roc = match self.last_queue_sample {
+            Some((t0, len0)) if now > t0 => {
+                (len as f64 - len0 as f64) / (now - t0).as_secs_f64()
+            }
+            _ => 0.0,
+        };
+        self.last_queue_sample = Some((now, len));
+        QueueMetrics {
+            at: now,
+            backlog_len: len,
+            rate_of_change: roc,
+        }
+    }
+
+    /// Count of idle PEs per image across the cluster (for scale-down and
+    /// the allocator's view).
+    pub fn idle_pe_count(&self, image: &ImageName) -> usize {
+        self.registry.idle_pe_count(image)
+    }
+
+    /// All PEs in a given state across the cluster.
+    pub fn pes_in_state(&self, state: PeState) -> usize {
+        self.registry.pes_in_state(state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::PeStatus;
+    use crate::types::{CpuFraction, MessageId};
+
+    fn msg(id: u64, image: &str) -> StreamMessage {
+        StreamMessage {
+            id: MessageId(id),
+            image: ImageName::new(image),
+            payload_bytes: 1024,
+            service_demand: Millis(1000),
+            created_at: Millis(0),
+        }
+    }
+
+    fn report(worker: u64, idle: &[(u64, &str)]) -> WorkerReport {
+        WorkerReport {
+            worker: WorkerId(worker),
+            at: Millis(0),
+            total_cpu: CpuFraction::ZERO,
+            per_image: Vec::new(),
+            pes: idle
+                .iter()
+                .map(|(pe, img)| PeStatus {
+                    pe: PeId(*pe),
+                    image: ImageName::new(*img),
+                    state: PeState::Idle,
+                    cpu: CpuFraction::ZERO,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn routes_direct_when_pe_available() {
+        let mut m = Master::new();
+        m.ingest_report(report(0, &[(1, "img")]));
+        match m.route(msg(0, "img")) {
+            RouteDecision::Direct { worker, pe } => {
+                assert_eq!(worker, WorkerId(0));
+                assert_eq!(pe, PeId(1));
+            }
+            other => panic!("expected direct, got {other:?}"),
+        }
+        assert_eq!(m.total_direct, 1);
+    }
+
+    #[test]
+    fn queues_when_no_pe() {
+        let mut m = Master::new();
+        match m.route(msg(0, "img")) {
+            RouteDecision::Queued { backlog_len } => assert_eq!(backlog_len, 1),
+            other => panic!("expected queued, got {other:?}"),
+        }
+        assert_eq!(m.backlog_len(), 1);
+    }
+
+    #[test]
+    fn same_pe_not_double_booked() {
+        let mut m = Master::new();
+        m.ingest_report(report(0, &[(1, "img")]));
+        assert!(matches!(m.route(msg(0, "img")), RouteDecision::Direct { .. }));
+        // Second message: our view marks pe busy until the next report.
+        assert!(matches!(m.route(msg(1, "img")), RouteDecision::Queued { .. }));
+    }
+
+    #[test]
+    fn backlog_has_priority_over_new_messages() {
+        let mut m = Master::new();
+        m.route(msg(0, "img")); // queued (no PEs)
+        m.ingest_report(report(0, &[(1, "img")]));
+        // A new message must NOT bypass the queued one.
+        match m.route(msg(1, "img")) {
+            RouteDecision::Queued { backlog_len } => assert_eq!(backlog_len, 2),
+            other => panic!("expected queued, got {other:?}"),
+        }
+        let deliveries = m.drain_backlog();
+        assert_eq!(deliveries.len(), 1);
+        assert_eq!(deliveries[0].2.id, MessageId(0), "FIFO order");
+    }
+
+    #[test]
+    fn drain_respects_image_match() {
+        let mut m = Master::new();
+        m.route(msg(0, "a"));
+        m.route(msg(1, "b"));
+        m.ingest_report(report(0, &[(1, "b")]));
+        // Head of line is image "a" with no PE: strict FIFO blocks.
+        assert!(m.drain_backlog().is_empty());
+        m.ingest_report(report(1, &[(2, "a"), (3, "b")]));
+        let deliveries = m.drain_backlog();
+        assert_eq!(deliveries.len(), 2);
+        assert_eq!(deliveries[0].2.image.as_str(), "a");
+    }
+
+    #[test]
+    fn completion_frees_pe() {
+        let mut m = Master::new();
+        m.ingest_report(report(0, &[(1, "img")]));
+        m.route(msg(0, "img"));
+        assert!(matches!(m.route(msg(1, "img")), RouteDecision::Queued { .. }));
+        m.job_completed(WorkerId(0), PeId(1));
+        let deliveries = m.drain_backlog();
+        assert_eq!(deliveries.len(), 1);
+        assert_eq!(m.total_completed, 1);
+    }
+
+    #[test]
+    fn queue_metrics_roc() {
+        let mut m = Master::new();
+        let s0 = m.sample_queue(Millis(0));
+        assert_eq!(s0.rate_of_change, 0.0);
+        for i in 0..10 {
+            m.route(msg(i, "img"));
+        }
+        let s1 = m.sample_queue(Millis::from_secs(2));
+        assert_eq!(s1.backlog_len, 10);
+        assert!((s1.rate_of_change - 5.0).abs() < 1e-9, "{}", s1.rate_of_change);
+        // Draining drops ROC negative.
+        m.ingest_report(report(0, &(0..10).map(|i| (i, "img")).collect::<Vec<_>>()));
+        let n = m.drain_backlog().len();
+        assert_eq!(n, 10);
+        let s2 = m.sample_queue(Millis::from_secs(4));
+        assert!(s2.rate_of_change < 0.0);
+    }
+
+    #[test]
+    fn backlog_by_image_counts() {
+        let mut m = Master::new();
+        m.route(msg(0, "a"));
+        m.route(msg(1, "a"));
+        m.route(msg(2, "b"));
+        let counts = m.backlog_by_image();
+        assert!(counts.contains(&(ImageName::new("a"), 2)));
+        assert!(counts.contains(&(ImageName::new("b"), 1)));
+    }
+}

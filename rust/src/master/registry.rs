@@ -1,0 +1,228 @@
+//! Worker registry: the master's view of workers and their PE availability,
+//! rebuilt from periodic worker reports ("tracking worker nodes, and the
+//! availability of their containers").
+//!
+//! Routing marks PEs busy optimistically between reports so two messages are
+//! never sent to the same idle PE within one report interval.
+
+use crate::protocol::{PeState, WorkerReport};
+use crate::types::{CpuFraction, ImageName, Millis, PeId, WorkerId};
+
+/// Master-side view of one PE.
+#[derive(Clone, Debug)]
+pub struct PeView {
+    pub pe: PeId,
+    pub image: ImageName,
+    pub state: PeState,
+    pub cpu: CpuFraction,
+}
+
+/// Master-side view of one worker.
+#[derive(Clone, Debug)]
+pub struct WorkerView {
+    pub worker: WorkerId,
+    pub last_report: Millis,
+    pub total_cpu: CpuFraction,
+    pub pes: Vec<PeView>,
+}
+
+impl WorkerView {
+    pub fn idle_count(&self, image: &ImageName) -> usize {
+        self.pes
+            .iter()
+            .filter(|p| p.state == PeState::Idle && &p.image == image)
+            .count()
+    }
+}
+
+/// Registry of all known workers, ordered by worker id (= bin index order;
+/// First-Fit's "lowest index" is well-defined because of this ordering).
+#[derive(Default)]
+pub struct WorkerRegistry {
+    workers: Vec<WorkerView>,
+}
+
+impl WorkerRegistry {
+    pub fn new() -> Self {
+        WorkerRegistry::default()
+    }
+
+    /// Replace the view of a worker with its latest report.
+    pub fn ingest(&mut self, report: WorkerReport) {
+        let view = WorkerView {
+            worker: report.worker,
+            last_report: report.at,
+            total_cpu: report.total_cpu,
+            pes: report
+                .pes
+                .iter()
+                .map(|p| PeView {
+                    pe: p.pe,
+                    image: p.image.clone(),
+                    state: p.state,
+                    cpu: p.cpu,
+                })
+                .collect(),
+        };
+        match self.workers.iter_mut().find(|w| w.worker == report.worker) {
+            Some(w) => *w = view,
+            None => {
+                self.workers.push(view);
+                self.workers.sort_by_key(|w| w.worker);
+            }
+        }
+    }
+
+    /// Remove a worker (VM terminated).
+    pub fn remove(&mut self, worker: WorkerId) {
+        self.workers.retain(|w| w.worker != worker);
+    }
+
+    pub fn workers(&self) -> &[WorkerView] {
+        &self.workers
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    /// Lowest-index worker with an idle PE for `image` (P2P routing query).
+    pub fn find_idle_pe(&self, image: &ImageName) -> Option<(WorkerId, PeId)> {
+        for w in &self.workers {
+            if let Some(p) = w
+                .pes
+                .iter()
+                .find(|p| p.state == PeState::Idle && &p.image == image)
+            {
+                return Some((w.worker, p.pe));
+            }
+        }
+        None
+    }
+
+    /// Optimistically mark a PE busy until the next report refresh.
+    pub fn mark_busy(&mut self, worker: WorkerId, pe: PeId) {
+        self.set_state(worker, pe, PeState::Busy);
+    }
+
+    pub fn mark_idle(&mut self, worker: WorkerId, pe: PeId) {
+        self.set_state(worker, pe, PeState::Idle);
+    }
+
+    fn set_state(&mut self, worker: WorkerId, pe: PeId, state: PeState) {
+        if let Some(w) = self.workers.iter_mut().find(|w| w.worker == worker) {
+            if let Some(p) = w.pes.iter_mut().find(|p| p.pe == pe) {
+                p.state = state;
+            }
+        }
+    }
+
+    pub fn idle_pe_count(&self, image: &ImageName) -> usize {
+        self.workers.iter().map(|w| w.idle_count(image)).sum()
+    }
+
+    pub fn pes_in_state(&self, state: PeState) -> usize {
+        self.workers
+            .iter()
+            .flat_map(|w| &w.pes)
+            .filter(|p| p.state == state)
+            .count()
+    }
+
+    /// Total PEs per image across the cluster (busy + idle + booting).
+    pub fn pe_count(&self, image: &ImageName) -> usize {
+        self.workers
+            .iter()
+            .flat_map(|w| &w.pes)
+            .filter(|p| &p.image == image)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::PeStatus;
+
+    fn report(worker: u64, at: u64, pes: &[(u64, &str, PeState)]) -> WorkerReport {
+        WorkerReport {
+            worker: WorkerId(worker),
+            at: Millis(at),
+            total_cpu: CpuFraction::new(0.3),
+            per_image: Vec::new(),
+            pes: pes
+                .iter()
+                .map(|(pe, img, state)| PeStatus {
+                    pe: PeId(*pe),
+                    image: ImageName::new(*img),
+                    state: *state,
+                    cpu: CpuFraction::ZERO,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn ingest_replaces_view() {
+        let mut r = WorkerRegistry::new();
+        r.ingest(report(0, 0, &[(1, "a", PeState::Idle)]));
+        r.ingest(report(0, 1000, &[(1, "a", PeState::Busy)]));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.find_idle_pe(&ImageName::new("a")), None);
+        assert_eq!(r.workers()[0].last_report, Millis(1000));
+    }
+
+    #[test]
+    fn find_prefers_lowest_worker_id() {
+        let mut r = WorkerRegistry::new();
+        // Insert out of order; registry sorts by id.
+        r.ingest(report(5, 0, &[(50, "a", PeState::Idle)]));
+        r.ingest(report(1, 0, &[(10, "a", PeState::Idle)]));
+        let (w, pe) = r.find_idle_pe(&ImageName::new("a")).unwrap();
+        assert_eq!(w, WorkerId(1));
+        assert_eq!(pe, PeId(10));
+    }
+
+    #[test]
+    fn mark_busy_hides_pe_until_refresh() {
+        let mut r = WorkerRegistry::new();
+        r.ingest(report(0, 0, &[(1, "a", PeState::Idle)]));
+        r.mark_busy(WorkerId(0), PeId(1));
+        assert!(r.find_idle_pe(&ImageName::new("a")).is_none());
+        r.mark_idle(WorkerId(0), PeId(1));
+        assert!(r.find_idle_pe(&ImageName::new("a")).is_some());
+    }
+
+    #[test]
+    fn booting_pes_not_routable_but_counted() {
+        let mut r = WorkerRegistry::new();
+        r.ingest(report(0, 0, &[(1, "a", PeState::Booting)]));
+        assert!(r.find_idle_pe(&ImageName::new("a")).is_none());
+        assert_eq!(r.pe_count(&ImageName::new("a")), 1);
+        assert_eq!(r.pes_in_state(PeState::Booting), 1);
+    }
+
+    #[test]
+    fn remove_worker() {
+        let mut r = WorkerRegistry::new();
+        r.ingest(report(0, 0, &[(1, "a", PeState::Idle)]));
+        r.ingest(report(1, 0, &[(2, "a", PeState::Idle)]));
+        r.remove(WorkerId(0));
+        assert_eq!(r.len(), 1);
+        let (w, _) = r.find_idle_pe(&ImageName::new("a")).unwrap();
+        assert_eq!(w, WorkerId(1));
+    }
+
+    #[test]
+    fn image_isolation() {
+        let mut r = WorkerRegistry::new();
+        r.ingest(report(0, 0, &[(1, "a", PeState::Idle)]));
+        assert!(r.find_idle_pe(&ImageName::new("b")).is_none());
+        assert_eq!(r.idle_pe_count(&ImageName::new("a")), 1);
+        assert_eq!(r.idle_pe_count(&ImageName::new("b")), 0);
+    }
+}

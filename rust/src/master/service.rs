@@ -1,0 +1,221 @@
+//! Distributed master service: the endpoint-query + backlog half of the
+//! paper's P2P architecture (Fig 1).
+//!
+//! Endpoints:
+//! * `register {addr}` — a worker agent announces itself;
+//! * `endpoint {}` — the stream connector asks for "the address of an
+//!   available PE, so the message can be sent directly if possible"; the
+//!   master answers with a worker address (round-robin over workers that
+//!   reported free capacity) or `queued: true`, telling the connector to
+//!   hand the payload to the master instead;
+//! * `enqueue {pixels}` — backlog fallback: the master stores the message
+//!   and a dispatcher thread forwards it to a worker as capacity frees
+//!   ("Messages in this queue are processed with higher priority than new
+//!   messages" — the dispatcher drains before new P2P hints are issued);
+//! * `status {}` — cluster view (workers, backlog, dispatched count).
+//!
+//! Analysis *results* of backlogged messages are collected by the
+//! dispatcher and can be fetched with `drain_results {}` (the paper's
+//! client collects minimal data back).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::transport::{call, Handler, Server};
+use crate::util::json::Json;
+use crate::worker::agent::decode_pixels;
+
+#[derive(Default)]
+struct MasterState {
+    workers: Vec<String>,
+    rr_cursor: usize,
+    backlog: VecDeque<Vec<f32>>,
+    results: Vec<Json>,
+}
+
+/// The running master service (server + backlog dispatcher thread).
+pub struct MasterService {
+    server: Option<Server>,
+    bound: std::net::SocketAddr,
+    state: Arc<Mutex<MasterState>>,
+    stop: Arc<AtomicBool>,
+    dispatched: Arc<AtomicU64>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MasterService {
+    pub fn start(addr: &str) -> Result<MasterService> {
+        let state = Arc::new(Mutex::new(MasterState::default()));
+        let dispatched = Arc::new(AtomicU64::new(0));
+
+        let handler_state = state.clone();
+        let handler_dispatched = dispatched.clone();
+        let handler: Handler = Arc::new(move |req: Json| {
+            let kind = req.get("type").and_then(|t| t.as_str()).unwrap_or("");
+            match kind {
+                "register" => {
+                    let Some(addr) = req.get("addr").and_then(|a| a.as_str()) else {
+                        return err("missing addr");
+                    };
+                    let mut st = handler_state.lock().unwrap();
+                    if !st.workers.iter().any(|w| w == addr) {
+                        st.workers.push(addr.to_string());
+                    }
+                    Json::obj([
+                        ("ok", Json::Bool(true)),
+                        ("workers", Json::num(st.workers.len() as f64)),
+                    ])
+                }
+                "endpoint" => {
+                    let mut st = handler_state.lock().unwrap();
+                    // Backlog priority: while messages wait, new messages
+                    // must queue behind them rather than jump P2P.
+                    if !st.backlog.is_empty() || st.workers.is_empty() {
+                        return Json::obj([
+                            ("ok", Json::Bool(true)),
+                            ("queued", Json::Bool(true)),
+                        ]);
+                    }
+                    let n = st.workers.len();
+                    let pick = st.rr_cursor % n;
+                    st.rr_cursor += 1;
+                    let addr = st.workers[pick].clone();
+                    Json::obj([
+                        ("ok", Json::Bool(true)),
+                        ("queued", Json::Bool(false)),
+                        ("worker", Json::str(addr)),
+                    ])
+                }
+                "enqueue" => {
+                    let Some(pixels) = decode_pixels(&req) else {
+                        return err("missing pixels");
+                    };
+                    let mut st = handler_state.lock().unwrap();
+                    st.backlog.push_back(pixels);
+                    Json::obj([
+                        ("ok", Json::Bool(true)),
+                        ("backlog", Json::num(st.backlog.len() as f64)),
+                    ])
+                }
+                "drain_results" => {
+                    let mut st = handler_state.lock().unwrap();
+                    let results = std::mem::take(&mut st.results);
+                    Json::obj([
+                        ("ok", Json::Bool(true)),
+                        ("results", Json::Arr(results)),
+                    ])
+                }
+                "status" => {
+                    let st = handler_state.lock().unwrap();
+                    Json::obj([
+                        ("ok", Json::Bool(true)),
+                        ("workers", Json::num(st.workers.len() as f64)),
+                        ("backlog", Json::num(st.backlog.len() as f64)),
+                        (
+                            "dispatched",
+                            Json::num(handler_dispatched.load(Ordering::SeqCst) as f64),
+                        ),
+                        ("results_waiting", Json::num(st.results.len() as f64)),
+                    ])
+                }
+                other => err(&format!("unknown request '{other}'")),
+            }
+        });
+        let server = Server::start(addr, handler)?;
+
+        // Backlog dispatcher: forward queued messages to workers that
+        // accept them (the master-side half of the paper's queue drain).
+        let stop = Arc::new(AtomicBool::new(false));
+        let d_state = state.clone();
+        let d_stop = stop.clone();
+        let d_count = dispatched.clone();
+        let dispatcher = std::thread::spawn(move || {
+            while !d_stop.load(Ordering::SeqCst) {
+                let (job, workers) = {
+                    let mut st = d_state.lock().unwrap();
+                    (st.backlog.pop_front(), st.workers.clone())
+                };
+                match job {
+                    None => std::thread::sleep(std::time::Duration::from_millis(20)),
+                    Some(pixels) => {
+                        let req = Json::obj([
+                            ("type", Json::str("analyze")),
+                            (
+                                "pixels",
+                                Json::arr(pixels.iter().map(|p| Json::num(*p as f64))),
+                            ),
+                        ]);
+                        let mut delivered = false;
+                        for w in &workers {
+                            if let Ok(resp) = call(w.as_str(), &req) {
+                                if resp.get("ok").and_then(|v| v.as_bool()) == Some(true) {
+                                    d_count.fetch_add(1, Ordering::SeqCst);
+                                    d_state.lock().unwrap().results.push(resp);
+                                    delivered = true;
+                                    break;
+                                }
+                            }
+                        }
+                        if !delivered {
+                            // Everyone busy/unreachable: requeue at the
+                            // front (FIFO preserved), back off briefly.
+                            d_state.lock().unwrap().backlog.push_front(pixels);
+                            std::thread::sleep(std::time::Duration::from_millis(50));
+                        }
+                    }
+                }
+            }
+        });
+
+        let bound = server.addr();
+        Ok(MasterService {
+            server: Some(server),
+            bound,
+            state,
+            stop,
+            dispatched,
+            dispatcher: Some(dispatcher),
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.bound
+    }
+
+    pub fn backlog_len(&self) -> usize {
+        self.state.lock().unwrap().backlog.len()
+    }
+
+    pub fn dispatched(&self) -> u64 {
+        self.dispatched.load(Ordering::SeqCst)
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.dispatcher.take() {
+            let _ = t.join();
+        }
+        if let Some(server) = self.server.take() {
+            server.shutdown();
+        }
+    }
+}
+
+impl Drop for MasterService {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.dispatcher.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn err(msg: &str) -> Json {
+    Json::obj([
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(msg.to_string())),
+    ])
+}

@@ -1,0 +1,260 @@
+//! Metrics: time-series recording, CSV emission and ASCII rendering.
+//!
+//! Every experiment records per-worker scheduled/measured CPU, queue
+//! lengths and worker counts here, then emits (a) a long-format CSV
+//! (`series,t_ms,value`) consumed by any plotting tool and (b) an ASCII
+//! rendering so `repro experiment figN` shows the figure's shape directly
+//! in the terminal. Error series (Figs 5/9) are computed from pairs of
+//! recorded series.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::types::Millis;
+
+/// One named time series.
+#[derive(Clone, Debug, Default)]
+pub struct TimeSeries {
+    pub points: Vec<(Millis, f64)>,
+}
+
+impl TimeSeries {
+    pub fn push(&mut self, t: Millis, v: f64) {
+        debug_assert!(
+            self.points.last().map(|(pt, _)| *pt <= t).unwrap_or(true),
+            "time series must be appended in order"
+        );
+        self.points.push((t, v));
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Value at or before `t` (step interpolation).
+    pub fn at(&self, t: Millis) -> Option<f64> {
+        match self.points.binary_search_by(|(pt, _)| pt.cmp(&t)) {
+            Ok(i) => Some(self.points[i].1),
+            Err(0) => None,
+            Err(i) => Some(self.points[i - 1].1),
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.points.iter().map(|(_, v)| *v).fold(0.0, f64::max)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        self.points.iter().map(|(_, v)| *v).sum::<f64>() / self.points.len() as f64
+    }
+
+    /// Last time with a point.
+    pub fn end(&self) -> Option<Millis> {
+        self.points.last().map(|(t, _)| *t)
+    }
+}
+
+/// A set of named series recorded during one experiment run.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    pub series: BTreeMap<String, TimeSeries>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder::default()
+    }
+
+    pub fn record(&mut self, name: &str, t: Millis, v: f64) {
+        self.series.entry(name.to_string()).or_default().push(t, v);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&TimeSeries> {
+        self.series.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.series.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Pointwise difference `a - b` sampled at `a`'s timestamps — the
+    /// paper's error-in-percentage-points series (scheduled vs measured).
+    pub fn error_series(&self, a: &str, b: &str) -> TimeSeries {
+        let mut out = TimeSeries::default();
+        let (Some(sa), Some(sb)) = (self.get(a), self.get(b)) else {
+            return out;
+        };
+        for (t, va) in &sa.points {
+            if let Some(vb) = sb.at(*t) {
+                out.push(*t, va - vb);
+            }
+        }
+        out
+    }
+
+    /// Long-format CSV: `series,t_ms,value`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("series,t_ms,value\n");
+        for (name, s) in &self.series {
+            for (t, v) in &s.points {
+                let _ = writeln!(out, "{name},{},{v:.6}", t.0);
+            }
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+
+    /// ASCII rendering of selected series on a shared time axis: one row
+    /// block per series, `width` buckets, `#`-scaled by value (0..max).
+    pub fn ascii_chart(&self, names: &[&str], width: usize, height: usize) -> String {
+        let mut out = String::new();
+        let t_end = names
+            .iter()
+            .filter_map(|n| self.get(n).and_then(|s| s.end()))
+            .max()
+            .unwrap_or(Millis::ZERO);
+        let v_max = names
+            .iter()
+            .filter_map(|n| self.get(n).map(|s| s.max()))
+            .fold(0.0f64, f64::max)
+            .max(1e-9);
+        for name in names {
+            let Some(s) = self.get(name) else { continue };
+            // Bucket means over the time axis.
+            let mut buckets = vec![(0.0f64, 0u32); width];
+            for (t, v) in &s.points {
+                let idx = if t_end.0 == 0 {
+                    0
+                } else {
+                    ((t.0 as u128 * (width as u128 - 1)) / t_end.0 as u128) as usize
+                };
+                buckets[idx].0 += *v;
+                buckets[idx].1 += 1;
+            }
+            let vals: Vec<f64> = buckets
+                .iter()
+                .map(|(sum, n)| if *n > 0 { sum / *n as f64 } else { f64::NAN })
+                .collect();
+            let _ = writeln!(out, "{name}  (max {v_max:.2})");
+            for row in (1..=height).rev() {
+                let threshold = v_max * row as f64 / height as f64;
+                let line: String = vals
+                    .iter()
+                    .map(|v| {
+                        if v.is_nan() {
+                            ' '
+                        } else if *v >= threshold - v_max / (2.0 * height as f64) {
+                            '#'
+                        } else {
+                            ' '
+                        }
+                    })
+                    .collect();
+                let _ = writeln!(out, "  |{line}");
+            }
+            let _ = writeln!(out, "  +{}", "-".repeat(width));
+            let _ = writeln!(
+                out,
+                "   0{:>width$.0}s",
+                t_end.as_secs_f64(),
+                width = width - 1
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_get() {
+        let mut r = Recorder::new();
+        r.record("w0.cpu", Millis(0), 0.5);
+        r.record("w0.cpu", Millis(1000), 0.8);
+        let s = r.get("w0.cpu").unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.max(), 0.8);
+        assert!((s.mean() - 0.65).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_interpolation() {
+        let mut s = TimeSeries::default();
+        s.push(Millis(100), 1.0);
+        s.push(Millis(200), 2.0);
+        assert_eq!(s.at(Millis(50)), None);
+        assert_eq!(s.at(Millis(100)), Some(1.0));
+        assert_eq!(s.at(Millis(150)), Some(1.0));
+        assert_eq!(s.at(Millis(200)), Some(2.0));
+        assert_eq!(s.at(Millis(999)), Some(2.0));
+    }
+
+    #[test]
+    fn error_series_is_pointwise_diff() {
+        let mut r = Recorder::new();
+        for t in [0u64, 1000, 2000] {
+            r.record("sched", Millis(t), 0.9);
+            r.record("meas", Millis(t), 0.8);
+        }
+        let err = r.error_series("sched", "meas");
+        assert_eq!(err.len(), 3);
+        for (_, v) in &err.points {
+            assert!((v - 0.1).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn error_series_missing_input_empty() {
+        let r = Recorder::new();
+        assert!(r.error_series("a", "b").is_empty());
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut r = Recorder::new();
+        r.record("a", Millis(0), 1.0);
+        r.record("b", Millis(500), 0.25);
+        let csv = r.to_csv();
+        assert!(csv.starts_with("series,t_ms,value\n"));
+        assert!(csv.contains("a,0,1.000000"));
+        assert!(csv.contains("b,500,0.250000"));
+    }
+
+    #[test]
+    fn ascii_chart_renders() {
+        let mut r = Recorder::new();
+        for t in 0..100 {
+            r.record("ramp", Millis(t * 100), t as f64 / 100.0);
+        }
+        let chart = r.ascii_chart(&["ramp"], 40, 5);
+        assert!(chart.contains("ramp"));
+        assert!(chart.contains('#'));
+        // The ramp should touch the top only near the right edge.
+        let top_row = chart.lines().nth(1).unwrap();
+        assert!(top_row.trim_end().ends_with('#'));
+    }
+
+    #[test]
+    #[should_panic(expected = "order")]
+    #[cfg(debug_assertions)]
+    fn out_of_order_push_asserts() {
+        let mut s = TimeSeries::default();
+        s.push(Millis(100), 1.0);
+        s.push(Millis(50), 2.0);
+    }
+}

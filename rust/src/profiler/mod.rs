@@ -1,0 +1,205 @@
+//! Worker profiler (master half) — paper §V-B3.
+//!
+//! Workers periodically measure per-PE CPU and report per-image averages;
+//! this component "aggregates the information from all active workers and
+//! keeps a moving average of the CPU utilization based on the last N
+//! measurements". The moving average is the *item size* the bin-packing
+//! manager uses, and updated averages are propagated into the container
+//! and allocation queues.
+//!
+//! Unseen images get a configurable initial guess; the paper observes the
+//! first microscopy run is slightly worse until this guess is adjusted
+//! (experiment E9 reproduces that warm-up).
+
+use std::collections::HashMap;
+
+use crate::protocol::WorkerReport;
+use crate::types::{CpuFraction, ImageName};
+use crate::util::ringbuf::RingBuf;
+
+/// Profiler configuration.
+#[derive(Clone, Debug)]
+pub struct ProfilerConfig {
+    /// Moving-average window: the last N per-worker measurements.
+    pub window: usize,
+    /// Initial estimate for images never profiled (deliberately generic —
+    /// the warm-up run corrects it).
+    pub default_estimate: CpuFraction,
+    /// Measurements below this are treated as idle noise and ignored for
+    /// the busy-demand estimate (an idle container burns ~0, and packing
+    /// on ~0 would overcommit workers infinitely).
+    pub busy_floor: f64,
+}
+
+impl Default for ProfilerConfig {
+    fn default() -> Self {
+        ProfilerConfig {
+            window: 10,
+            default_estimate: CpuFraction::new(0.25),
+            busy_floor: 0.02,
+        }
+    }
+}
+
+/// Master-side aggregation of per-image CPU usage. `Clone` lets a
+/// long-lived profile survive cluster restarts (the paper's 10-run
+/// microscopy protocol keeps HIO — and its profile — running throughout).
+#[derive(Clone)]
+pub struct WorkerProfiler {
+    cfg: ProfilerConfig,
+    per_image: HashMap<ImageName, RingBuf<f64>>,
+    /// Lifetime count of ingested samples (observability).
+    pub samples_ingested: u64,
+}
+
+impl WorkerProfiler {
+    pub fn new(cfg: ProfilerConfig) -> Self {
+        WorkerProfiler {
+            cfg,
+            per_image: HashMap::new(),
+            samples_ingested: 0,
+        }
+    }
+
+    pub fn config(&self) -> &ProfilerConfig {
+        &self.cfg
+    }
+
+    /// Ingest one worker report (the per-image averages it carries).
+    pub fn ingest(&mut self, report: &WorkerReport) {
+        for (image, cpu) in &report.per_image {
+            if cpu.value() < self.cfg.busy_floor {
+                continue;
+            }
+            let window = self.cfg.window;
+            self.per_image
+                .entry(image.clone())
+                .or_insert_with(|| RingBuf::new(window))
+                .push(cpu.value());
+            self.samples_ingested += 1;
+        }
+    }
+
+    /// The current item-size estimate for an image: moving average of the
+    /// last N busy measurements, or the default guess when unprofiled.
+    /// Clamped to (0, 1] — a bin-packing item can never exceed a bin.
+    pub fn estimate(&self, image: &ImageName) -> CpuFraction {
+        let v = self
+            .per_image
+            .get(image)
+            .and_then(|rb| rb.mean())
+            .unwrap_or(self.cfg.default_estimate.value());
+        CpuFraction::new(v.clamp(1e-3, 1.0))
+    }
+
+    /// Whether this image has real measurements behind its estimate.
+    pub fn is_profiled(&self, image: &ImageName) -> bool {
+        self.per_image
+            .get(image)
+            .map(|rb| !rb.is_empty())
+            .unwrap_or(false)
+    }
+
+    /// Number of samples currently in the window for an image.
+    pub fn window_fill(&self, image: &ImageName) -> usize {
+        self.per_image.get(image).map(|rb| rb.len()).unwrap_or(0)
+    }
+
+    /// Forget everything (used between ablation runs).
+    pub fn reset(&mut self) {
+        self.per_image.clear();
+        self.samples_ingested = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Millis, WorkerId};
+
+    fn report(image: &str, cpu: f64) -> WorkerReport {
+        WorkerReport {
+            worker: WorkerId(0),
+            at: Millis(0),
+            total_cpu: CpuFraction::new(cpu),
+            per_image: vec![(ImageName::new(image), CpuFraction::new(cpu))],
+            pes: Vec::new(),
+        }
+    }
+
+    fn profiler() -> WorkerProfiler {
+        WorkerProfiler::new(ProfilerConfig::default())
+    }
+
+    #[test]
+    fn unprofiled_image_uses_default_guess() {
+        let p = profiler();
+        let img = ImageName::new("new");
+        assert!(!p.is_profiled(&img));
+        assert_eq!(p.estimate(&img).value(), 0.25);
+    }
+
+    #[test]
+    fn estimate_converges_to_measurements() {
+        let mut p = profiler();
+        let img = ImageName::new("cellprofiler");
+        for _ in 0..10 {
+            p.ingest(&report("cellprofiler", 0.125));
+        }
+        assert!(p.is_profiled(&img));
+        assert!((p.estimate(&img).value() - 0.125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_is_sliding() {
+        let mut p = WorkerProfiler::new(ProfilerConfig {
+            window: 4,
+            ..ProfilerConfig::default()
+        });
+        let img = ImageName::new("img");
+        for _ in 0..10 {
+            p.ingest(&report("img", 0.5));
+        }
+        for _ in 0..4 {
+            p.ingest(&report("img", 0.1));
+        }
+        // Window fully displaced by the new level.
+        assert!((p.estimate(&img).value() - 0.1).abs() < 1e-9);
+        assert_eq!(p.window_fill(&img), 4);
+    }
+
+    #[test]
+    fn idle_noise_filtered() {
+        let mut p = profiler();
+        p.ingest(&report("img", 0.004)); // idle container overhead
+        assert!(!p.is_profiled(&ImageName::new("img")));
+        assert_eq!(p.samples_ingested, 0);
+    }
+
+    #[test]
+    fn estimate_clamped_to_bin_domain() {
+        let mut p = profiler();
+        // Transient over-measurement (noise) must not produce items > 1.
+        for _ in 0..10 {
+            p.ingest(&report("img", 1.3));
+        }
+        assert!(p.estimate(&ImageName::new("img")).value() <= 1.0);
+    }
+
+    #[test]
+    fn images_profiled_independently() {
+        let mut p = profiler();
+        p.ingest(&report("a", 0.4));
+        assert!(p.is_profiled(&ImageName::new("a")));
+        assert!(!p.is_profiled(&ImageName::new("b")));
+        assert_eq!(p.estimate(&ImageName::new("b")).value(), 0.25);
+    }
+
+    #[test]
+    fn reset_forgets() {
+        let mut p = profiler();
+        p.ingest(&report("a", 0.4));
+        p.reset();
+        assert!(!p.is_profiled(&ImageName::new("a")));
+    }
+}

@@ -1,0 +1,276 @@
+//! Protocol messages (HIO REST-API analogue).
+//!
+//! The paper's stream request "consists of both the data to be processed,
+//! and the docker container and tag that a PE needs to run to process the
+//! data"; worker nodes "report to the Master node". These types carry that
+//! same information, with JSON (de)serialization for the TCP mode.
+
+use crate::types::{CpuFraction, ImageName, MessageId, Millis, PeId, StreamMessage, WorkerId};
+use crate::util::json::Json;
+
+/// Lifecycle state of a PE as reported to the master.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PeState {
+    /// Container is starting (docker pull/start latency).
+    Booting,
+    /// Ready to accept a message.
+    Idle,
+    /// Processing a message.
+    Busy,
+    /// Graceful shutdown in progress (docker stop latency): no longer
+    /// schedulable, still burning cleanup CPU.
+    Stopping,
+    /// Shut down (idle self-termination or explicit stop).
+    Terminated,
+}
+
+impl PeState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PeState::Booting => "booting",
+            PeState::Idle => "idle",
+            PeState::Busy => "busy",
+            PeState::Stopping => "stopping",
+            PeState::Terminated => "terminated",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PeState> {
+        Some(match s {
+            "booting" => PeState::Booting,
+            "idle" => PeState::Idle,
+            "busy" => PeState::Busy,
+            "stopping" => PeState::Stopping,
+            "terminated" => PeState::Terminated,
+            _ => return None,
+        })
+    }
+}
+
+/// Per-PE status inside a worker report.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PeStatus {
+    pub pe: PeId,
+    pub image: ImageName,
+    pub state: PeState,
+    /// CPU fraction this PE consumed over the report interval.
+    pub cpu: CpuFraction,
+}
+
+/// Periodic report each worker sends to the master (the worker half of the
+/// paper's worker profiler, §V-B3).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerReport {
+    pub worker: WorkerId,
+    pub at: Millis,
+    /// Total measured CPU over the interval (0..1 of the whole VM).
+    pub total_cpu: CpuFraction,
+    /// Average CPU per container image across that image's PEs.
+    pub per_image: Vec<(ImageName, CpuFraction)>,
+    pub pes: Vec<PeStatus>,
+}
+
+impl WorkerReport {
+    pub fn idle_pes(&self, image: &ImageName) -> usize {
+        self.pes
+            .iter()
+            .filter(|p| p.state == PeState::Idle && &p.image == image)
+            .count()
+    }
+}
+
+/// Commands the coordination layer issues to workers. In the simulation the
+/// cluster harness applies them directly; over TCP they are serialized.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WorkerCommand {
+    /// Start a PE container for `image` (the allocator's hosting decision).
+    StartPe { image: ImageName },
+    /// Deliver a message to a specific PE (P2P from connector, or backlog
+    /// drain from the master).
+    Deliver { pe: PeId, msg: StreamMessage },
+    /// Gracefully stop a PE.
+    StopPe { pe: PeId },
+}
+
+/// Connector-facing responses from the master's endpoint query.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RouteDecision {
+    /// Send P2P to this worker/PE.
+    Direct { worker: WorkerId, pe: PeId },
+    /// No capacity: the message was accepted into the master's backlog.
+    Queued { backlog_len: usize },
+}
+
+// ---------- JSON encoding (TCP mode) ----------
+
+impl PeStatus {
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("pe", Json::num(self.pe.0 as f64)),
+            ("image", Json::str(self.image.as_str())),
+            ("state", Json::str(self.state.as_str())),
+            ("cpu", Json::num(self.cpu.value())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<PeStatus> {
+        Some(PeStatus {
+            pe: PeId(v.get("pe")?.as_u64()?),
+            image: ImageName::new(v.get("image")?.as_str()?),
+            state: PeState::parse(v.get("state")?.as_str()?)?,
+            cpu: CpuFraction::new(v.get("cpu")?.as_f64()?),
+        })
+    }
+}
+
+impl WorkerReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("worker", Json::num(self.worker.0 as f64)),
+            ("at", Json::num(self.at.0 as f64)),
+            ("total_cpu", Json::num(self.total_cpu.value())),
+            (
+                "per_image",
+                Json::arr(self.per_image.iter().map(|(img, cpu)| {
+                    Json::obj([
+                        ("image", Json::str(img.as_str())),
+                        ("cpu", Json::num(cpu.value())),
+                    ])
+                })),
+            ),
+            ("pes", Json::arr(self.pes.iter().map(|p| p.to_json()))),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<WorkerReport> {
+        let per_image = v
+            .get("per_image")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Some((
+                    ImageName::new(e.get("image")?.as_str()?),
+                    CpuFraction::new(e.get("cpu")?.as_f64()?),
+                ))
+            })
+            .collect::<Option<Vec<_>>>()?;
+        let pes = v
+            .get("pes")?
+            .as_arr()?
+            .iter()
+            .map(PeStatus::from_json)
+            .collect::<Option<Vec<_>>>()?;
+        Some(WorkerReport {
+            worker: WorkerId(v.get("worker")?.as_u64()?),
+            at: Millis(v.get("at")?.as_u64()?),
+            total_cpu: CpuFraction::new(v.get("total_cpu")?.as_f64()?),
+            per_image,
+            pes,
+        })
+    }
+}
+
+impl StreamMessage {
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("id", Json::num(self.id.0 as f64)),
+            ("image", Json::str(self.image.as_str())),
+            ("payload_bytes", Json::num(self.payload_bytes as f64)),
+            ("service_demand", Json::num(self.service_demand.0 as f64)),
+            ("created_at", Json::num(self.created_at.0 as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<StreamMessage> {
+        Some(StreamMessage {
+            id: MessageId(v.get("id")?.as_u64()?),
+            image: ImageName::new(v.get("image")?.as_str()?),
+            payload_bytes: v.get("payload_bytes")?.as_u64()?,
+            service_demand: Millis(v.get("service_demand")?.as_u64()?),
+            created_at: Millis(v.get("created_at")?.as_u64()?),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> WorkerReport {
+        WorkerReport {
+            worker: WorkerId(2),
+            at: Millis(5000),
+            total_cpu: CpuFraction::new(0.62),
+            per_image: vec![
+                (ImageName::new("cellprofiler"), CpuFraction::new(0.12)),
+                (ImageName::new("busy"), CpuFraction::new(0.25)),
+            ],
+            pes: vec![
+                PeStatus {
+                    pe: PeId(1),
+                    image: ImageName::new("cellprofiler"),
+                    state: PeState::Busy,
+                    cpu: CpuFraction::new(0.13),
+                },
+                PeStatus {
+                    pe: PeId(2),
+                    image: ImageName::new("cellprofiler"),
+                    state: PeState::Idle,
+                    cpu: CpuFraction::new(0.004),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn pe_state_roundtrip() {
+        for s in [
+            PeState::Booting,
+            PeState::Idle,
+            PeState::Busy,
+            PeState::Stopping,
+            PeState::Terminated,
+        ] {
+            assert_eq!(PeState::parse(s.as_str()), Some(s));
+        }
+        assert_eq!(PeState::parse("bogus"), None);
+    }
+
+    #[test]
+    fn report_json_roundtrip() {
+        let r = sample_report();
+        let j = r.to_json();
+        let parsed = WorkerReport::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(parsed, r);
+    }
+
+    #[test]
+    fn stream_message_json_roundtrip() {
+        let m = StreamMessage {
+            id: MessageId(77),
+            image: ImageName::new("nuclei"),
+            payload_bytes: 3 * 1024 * 1024,
+            service_demand: Millis(15_000),
+            created_at: Millis(42),
+        };
+        let parsed =
+            StreamMessage::from_json(&Json::parse(&m.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(parsed.id, m.id);
+        assert_eq!(parsed.image, m.image);
+        assert_eq!(parsed.payload_bytes, m.payload_bytes);
+        assert_eq!(parsed.service_demand, m.service_demand);
+    }
+
+    #[test]
+    fn idle_pes_counts_per_image() {
+        let r = sample_report();
+        assert_eq!(r.idle_pes(&ImageName::new("cellprofiler")), 1);
+        assert_eq!(r.idle_pes(&ImageName::new("busy")), 0);
+    }
+
+    #[test]
+    fn from_json_rejects_missing_fields() {
+        let j = Json::parse(r#"{"worker": 1}"#).unwrap();
+        assert!(WorkerReport::from_json(&j).is_none());
+    }
+}

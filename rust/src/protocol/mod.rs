@@ -1,0 +1,8 @@
+//! Wire protocol: the message vocabulary exchanged between the stream
+//! connector, master and workers, plus JSON encode/decode for the TCP
+//! deployment mode. The simulation mode passes these same structs in
+//! memory, so both modes exercise identical semantics.
+
+pub mod messages;
+
+pub use messages::*;

@@ -1,0 +1,253 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts`) and executes them on the request path.
+//!
+//! This is the only place the stack touches XLA. Interchange is HLO *text*
+//! (the image's xla_extension 0.5.1 rejects jax≥0.5 serialized protos with
+//! 64-bit instruction ids; the text parser reassigns ids). Lowering used
+//! `return_tuple=True`, so outputs unwrap with `to_tuple1`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Artifact metadata (one entry of `artifacts/manifest.json`).
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    /// Input shapes (row-major dims).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes.
+    pub outputs: Vec<Vec<usize>>,
+}
+
+impl ArtifactSpec {
+    fn from_json(v: &Json) -> Option<ArtifactSpec> {
+        let shapes = |key: &str| -> Option<Vec<Vec<usize>>> {
+            v.get(key)?
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    e.get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_u64().map(|d| d as usize))
+                        .collect::<Option<Vec<usize>>>()
+                })
+                .collect()
+        };
+        Some(ArtifactSpec {
+            name: v.get("name")?.as_str()?.to_string(),
+            kind: v.get("kind")?.as_str()?.to_string(),
+            file: v.get("file")?.as_str()?.to_string(),
+            inputs: shapes("inputs")?,
+            outputs: shapes("outputs")?,
+        })
+    }
+
+    pub fn input_len(&self, i: usize) -> usize {
+        self.inputs[i].iter().product()
+    }
+}
+
+/// Parse `manifest.json` text into artifact specs.
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactSpec>> {
+    let v = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+    let arr = v
+        .get("artifacts")
+        .and_then(|a| a.as_arr())
+        .context("manifest missing 'artifacts'")?;
+    arr.iter()
+        .map(|e| ArtifactSpec::from_json(e).context("bad artifact entry"))
+        .collect()
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with f32 inputs (shapes from the spec). Returns the flat f32
+    /// outputs (the lowering wraps results in a 1-tuple; longer tuples come
+    /// back element-wise).
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, data) in inputs.iter().enumerate() {
+            let want = self.spec.input_len(i);
+            if data.len() != want {
+                bail!(
+                    "{}: input {i} has {} elements, expected {want}",
+                    self.spec.name,
+                    data.len()
+                );
+            }
+            let dims: Vec<i64> = self.spec.inputs[i].iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.spec.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch output: {e:?}"))?;
+        let elems = out
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple output: {e:?}"))?;
+        elems
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// The runtime: a PJRT CPU client plus all compiled artifacts.
+pub struct Runtime {
+    pub dir: PathBuf,
+    client: xla::PjRtClient,
+    executables: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Load and compile every artifact in `dir` (expects `manifest.json`).
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let specs = parse_manifest(&text)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let mut executables = HashMap::new();
+        for spec in specs {
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", spec.name))?;
+            executables.insert(spec.name.clone(), Executable { spec, exe });
+        }
+        Ok(Runtime {
+            dir,
+            client,
+            executables,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.executables.keys().map(|s| s.as_str()).collect();
+        names.sort();
+        names
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Executable> {
+        self.executables
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}'"))
+    }
+
+    /// First artifact of a given kind (e.g. "nuclei", "busy").
+    pub fn get_kind(&self, kind: &str) -> Result<&Executable> {
+        let mut of_kind: Vec<&Executable> = self
+            .executables
+            .values()
+            .filter(|e| e.spec.kind == kind)
+            .collect();
+        of_kind.sort_by(|a, b| a.spec.name.cmp(&b.spec.name));
+        of_kind
+            .first()
+            .copied()
+            .with_context(|| format!("no artifact of kind '{kind}'"))
+    }
+
+    /// Run the nuclei pipeline on a square image; the artifact variant is
+    /// selected by the image size (one compiled executable per model
+    /// variant). Returns `[count, area_px, mean_fg_intensity, otsu_threshold]`.
+    pub fn analyze_image(&self, pixels: &[f32]) -> Result<[f32; 4]> {
+        let exe = self
+            .executables
+            .values()
+            .filter(|e| e.spec.kind == "nuclei")
+            .find(|e| e.spec.input_len(0) == pixels.len())
+            .with_context(|| {
+                format!(
+                    "no nuclei artifact for {} pixels (available: {:?})",
+                    pixels.len(),
+                    self.executables
+                        .values()
+                        .filter(|e| e.spec.kind == "nuclei")
+                        .map(|e| e.spec.inputs[0].clone())
+                        .collect::<Vec<_>>()
+                )
+            })?;
+        let out = exe.run_f32(&[pixels])?;
+        let v = &out[0];
+        if v.len() != 4 {
+            bail!("nuclei output has {} values", v.len());
+        }
+        Ok([v[0], v[1], v[2], v[3]])
+    }
+
+    /// Run `units` chained busy-blocks; returns wall time per unit (the
+    /// calibration used to map CPU-seconds targets onto artifact calls).
+    pub fn busy_units(&self, units: usize, state: &mut Vec<f32>, weights: &[f32]) -> Result<std::time::Duration> {
+        let exe = self.get_kind("busy")?;
+        let t0 = std::time::Instant::now();
+        for _ in 0..units {
+            let out = exe.run_f32(&[state.as_slice(), weights])?;
+            *state = out.into_iter().next().unwrap();
+        }
+        Ok(t0.elapsed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let text = r#"{"artifacts": [{
+            "name": "nuclei_128", "kind": "nuclei", "file": "nuclei_128.hlo.txt",
+            "inputs": [{"shape": [128, 128], "dtype": "f32"}],
+            "outputs": [{"shape": [4], "dtype": "f32"}]
+        }]}"#;
+        let specs = parse_manifest(text).unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].name, "nuclei_128");
+        assert_eq!(specs[0].inputs[0], vec![128, 128]);
+        assert_eq!(specs[0].input_len(0), 128 * 128);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(parse_manifest("{}").is_err());
+        assert!(parse_manifest("not json").is_err());
+        assert!(parse_manifest(r#"{"artifacts": [{"name": "x"}]}"#).is_err());
+    }
+}

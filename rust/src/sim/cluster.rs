@@ -1,0 +1,698 @@
+//! The simulated HIO+IRM cluster: master + IRM + workers + cloud, driven by
+//! a fixed-step virtual clock. This is the harness every experiment runs on.
+//!
+//! Per tick (default 100 ms):
+//! 1. due stream arrivals are routed via the connector path;
+//! 2. the cloud advances VM boots; ready VMs become workers (bins);
+//! 3. workers advance PEs (contention model), emitting reports/completions;
+//! 4. the master drains its backlog onto idle PEs;
+//! 5. the IRM runs its control cycle (load predictor → container queue →
+//!    bin-packing manager → autoscaler) and the harness applies the
+//!    resulting commands;
+//! 6. the recorder samples every figure series.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::cloud::{CloudConfig, SimCloud};
+use crate::connector::LocalConnector;
+use crate::irm::{ClusterView, Irm, IrmConfig};
+use crate::master::Master;
+use crate::metrics::Recorder;
+use crate::protocol::RouteDecision;
+use crate::sim::EventQueue;
+use crate::types::{CpuFraction, ImageName, MessageId, Millis, VmId, WorkerId};
+use crate::worker::{Worker, WorkerConfig, WorkerEvent};
+
+/// Full cluster configuration.
+#[derive(Clone)]
+pub struct ClusterConfig {
+    pub irm: IrmConfig,
+    pub worker: WorkerConfig,
+    pub cloud: CloudConfig,
+    /// Busy CPU demand per image (fraction of the whole VM). Unlisted
+    /// images default to one core (1/cores).
+    pub image_demand: Vec<(ImageName, CpuFraction)>,
+    /// Simulation step.
+    pub dt: Millis,
+    pub seed: u64,
+    /// Sample the figure series every this often.
+    pub sample_interval: Millis,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            irm: IrmConfig::default(),
+            worker: WorkerConfig::default(),
+            cloud: CloudConfig::default(),
+            image_demand: Vec::new(),
+            dt: Millis(100),
+            seed: 42,
+            sample_interval: Millis::from_secs(1),
+        }
+    }
+}
+
+/// One scheduled stream arrival.
+#[derive(Clone, Debug)]
+pub struct Arrival {
+    pub image: ImageName,
+    pub payload_bytes: u64,
+    pub service_demand: Millis,
+}
+
+/// A finished message, for latency/makespan accounting.
+#[derive(Clone, Copy, Debug)]
+pub struct Completion {
+    pub id: MessageId,
+    pub created_at: Millis,
+    pub completed_at: Millis,
+}
+
+/// The simulated cluster.
+pub struct SimCluster {
+    pub cfg: ClusterConfig,
+    pub master: Master,
+    pub irm: Irm,
+    pub cloud: SimCloud,
+    pub recorder: Recorder,
+    workers: Vec<Worker>,
+    /// Lowest-free-slot worker index assignment (bins keep stable, low
+    /// indices across churn, like the paper's b1..bm).
+    used_slots: Vec<bool>,
+    vm_of_worker: HashMap<WorkerId, VmId>,
+    connector: LocalConnector,
+    /// Per-worker docker image cache: completed pulls. Keyed by worker
+    /// slot so it can be carried across runs (the paper keeps HIO — and
+    /// its nodes — running between runs).
+    pub pulled_images: HashSet<(WorkerId, ImageName)>,
+    /// Pulls currently in flight: concurrent container starts of the same
+    /// image on one node share the single registry pull and all wait for
+    /// it (docker semantics).
+    pulls_in_flight: HashMap<(WorkerId, ImageName), Millis>,
+    arrivals: EventQueue<Arrival>,
+    pub completions: Vec<Completion>,
+    pub failed_deliveries: u64,
+    sample_timer: crate::clock::Periodic,
+    now: Millis,
+}
+
+impl SimCluster {
+    pub fn new(cfg: ClusterConfig) -> Self {
+        SimCluster {
+            master: Master::new(),
+            irm: Irm::new(cfg.irm.clone()),
+            cloud: SimCloud::new(cfg.cloud.clone()),
+            recorder: Recorder::new(),
+            workers: Vec::new(),
+            used_slots: Vec::new(),
+            vm_of_worker: HashMap::new(),
+            connector: LocalConnector::new(),
+            pulled_images: HashSet::new(),
+            pulls_in_flight: HashMap::new(),
+            arrivals: EventQueue::new(),
+            completions: Vec::new(),
+            failed_deliveries: 0,
+            sample_timer: crate::clock::Periodic::new(cfg.sample_interval),
+            now: Millis::ZERO,
+            cfg,
+        }
+    }
+
+    /// Schedule a stream arrival at absolute sim time `at`.
+    pub fn schedule_arrival(&mut self, at: Millis, arrival: Arrival) {
+        self.arrivals.schedule(at, arrival);
+    }
+
+    /// Busy demand for an image (config lookup, default = one core).
+    fn demand_for(&self, image: &ImageName) -> CpuFraction {
+        self.cfg
+            .image_demand
+            .iter()
+            .find(|(img, _)| img == image)
+            .map(|(_, d)| *d)
+            .unwrap_or(CpuFraction::new(1.0 / self.cfg.worker.cores as f64))
+    }
+
+    /// How long a container start at `now` must wait for the image to be
+    /// present on `worker`. First start triggers the registry pull;
+    /// concurrent starts share it; completed pulls are cached (and the
+    /// cache is carried across experiment runs).
+    fn pull_wait(&mut self, worker: WorkerId, image: &ImageName, now: Millis) -> Millis {
+        let key = (worker, image.clone());
+        if self.pulled_images.contains(&key) {
+            return Millis::ZERO;
+        }
+        match self.pulls_in_flight.get(&key) {
+            Some(&done_at) if done_at <= now => {
+                self.pulls_in_flight.remove(&key);
+                self.pulled_images.insert(key);
+                Millis::ZERO
+            }
+            Some(&done_at) => done_at - now,
+            None => {
+                let pull = self.cfg.worker.image_pull;
+                self.pulls_in_flight.insert(key, now + pull);
+                pull
+            }
+        }
+    }
+
+    fn alloc_slot(&mut self) -> u64 {
+        match self.used_slots.iter().position(|used| !used) {
+            Some(i) => {
+                self.used_slots[i] = true;
+                i as u64
+            }
+            None => {
+                self.used_slots.push(true);
+                (self.used_slots.len() - 1) as u64
+            }
+        }
+    }
+
+    fn release_slot(&mut self, id: WorkerId) {
+        if let Some(slot) = self.used_slots.get_mut(id.0 as usize) {
+            *slot = false;
+        }
+    }
+
+    /// Highest worker slot ever used (figure series dimension).
+    pub fn max_worker_slots(&self) -> usize {
+        self.used_slots.len()
+    }
+
+    pub fn workers(&self) -> &[Worker] {
+        &self.workers
+    }
+
+    pub fn now(&self) -> Millis {
+        self.now
+    }
+
+    /// Advance the cluster to `now` (call with monotonically increasing
+    /// times, normally from [`StepDriver`](crate::sim::StepDriver)).
+    pub fn tick(&mut self, now: Millis) {
+        self.now = now;
+
+        // --- 1. Stream arrivals (connector path). ---
+        for (_, arrival) in self.arrivals.pop_due(now) {
+            let (msg, decision) = self.connector.stream(
+                &mut self.master,
+                &arrival.image,
+                arrival.payload_bytes,
+                arrival.service_demand,
+                now,
+            );
+            if let RouteDecision::Direct { worker, pe } = decision {
+                let demand_check = msg.id;
+                if let Some(w) = self.workers.iter_mut().find(|w| w.id == worker) {
+                    if let Err(back) = w.deliver(pe, msg, now) {
+                        // PE vanished between report and delivery.
+                        self.failed_deliveries += 1;
+                        self.master.requeue_front(back);
+                    }
+                } else {
+                    self.failed_deliveries += 1;
+                    debug_assert!(demand_check.0 < u64::MAX);
+                }
+            }
+        }
+
+        // --- 2. Cloud: VM boots complete → new workers (bins). ---
+        for vm in self.cloud.tick(now) {
+            let slot = self.alloc_slot();
+            let id = WorkerId(slot);
+            let worker = Worker::new(
+                id,
+                vm,
+                self.cfg.worker.clone(),
+                self.cfg.seed ^ (0x9E37 + vm.0 * 7919),
+            );
+            self.vm_of_worker.insert(id, vm);
+            // Register with the master immediately (empty report) so the
+            // registry knows the worker exists.
+            self.master.ingest_report(crate::protocol::WorkerReport {
+                worker: id,
+                at: now,
+                total_cpu: CpuFraction::ZERO,
+                per_image: Vec::new(),
+                pes: Vec::new(),
+            });
+            self.workers.push(worker);
+            self.workers.sort_by_key(|w| w.id);
+        }
+
+        // --- 3. Workers advance. ---
+        let mut worker_events: Vec<(WorkerId, WorkerEvent)> = Vec::new();
+        for w in &mut self.workers {
+            for e in w.tick(now) {
+                worker_events.push((w.id, e));
+            }
+        }
+        for (wid, event) in worker_events {
+            match event {
+                WorkerEvent::Report(report) => {
+                    self.irm.ingest_report(&report);
+                    self.master.ingest_report(report);
+                }
+                WorkerEvent::JobCompleted {
+                    pe,
+                    msg,
+                    completed_at,
+                } => {
+                    self.master.job_completed(wid, pe);
+                    self.completions.push(Completion {
+                        id: msg.id,
+                        created_at: msg.created_at,
+                        completed_at,
+                    });
+                }
+                WorkerEvent::PeReady(pe) => {
+                    // Make the PE routable immediately (the real system
+                    // waits for the next report; immediate marking only
+                    // shortcuts at most one report interval).
+                    self.master.registry_mut().mark_idle(wid, pe);
+                }
+                WorkerEvent::PeTerminated(_) => {
+                    // The next report reflects the removal.
+                }
+            }
+        }
+
+        // --- 4. Backlog drain (queued messages have priority). ---
+        for (wid, pe, msg) in self.master.drain_backlog() {
+            if let Some(w) = self.workers.iter_mut().find(|w| w.id == wid) {
+                if let Err(back) = w.deliver(pe, msg, now) {
+                    self.failed_deliveries += 1;
+                    self.master.requeue_front(back);
+                }
+            } else {
+                self.failed_deliveries += 1;
+            }
+        }
+
+        // --- 5. IRM control cycle. ---
+        let view = ClusterView {
+            workers: self
+                .workers
+                .iter()
+                .map(|w| {
+                    (
+                        w.id,
+                        w.pes()
+                            .iter()
+                            // Stopping containers are no longer part of the
+                            // bin: the packer must not count their space.
+                            .filter(|p| {
+                                p.state() != crate::protocol::PeState::Stopping
+                            })
+                            .map(|p| p.image.clone())
+                            .collect::<Vec<_>>(),
+                    )
+                })
+                .collect(),
+            booting_vms: self.cloud.booting_vms().len(),
+        };
+        let update = self.irm.control_cycle(now, &mut self.master, &view);
+
+        for alloc in update.start_pes {
+            let demand = self.demand_for(&alloc.request.image);
+            let pull = self.pull_wait(alloc.worker, &alloc.request.image, now);
+            if let Some(w) = self.workers.iter_mut().find(|w| w.id == alloc.worker) {
+                w.start_pe_with_pull(alloc.request.image.clone(), demand, now, pull);
+            } else {
+                // Worker vanished (scale-down race): requeue per §V-B2.
+                self.irm.queue.requeue(alloc.request);
+            }
+        }
+        for _ in 0..update.request_vms {
+            // Quota failures are counted inside the cloud (Fig 10 retries).
+            let _ = self.cloud.request_vm(now);
+        }
+        for wid in update.terminate_workers {
+            if let Some(pos) = self.workers.iter().position(|w| w.id == wid) {
+                let w = self.workers.remove(pos);
+                debug_assert_eq!(w.pe_count(), 0, "terminating a non-empty worker");
+                if let Some(vm) = self.vm_of_worker.remove(&wid) {
+                    self.cloud.terminate_vm(vm);
+                }
+                self.master.registry_mut().remove(wid);
+                self.release_slot(wid);
+            }
+        }
+
+        // --- 6. Sample the figure series. ---
+        if self.sample_timer.fire(now) {
+            self.sample(now);
+        }
+    }
+
+    fn sample(&mut self, now: Millis) {
+        // Per-slot measured + scheduled CPU (absent workers sample 0 —
+        // a terminated bin is an idle bin).
+        for slot in 0..self.used_slots.len() {
+            let wid = WorkerId(slot as u64);
+            let (measured, scheduled) = match self.workers.iter().find(|w| w.id == wid) {
+                Some(w) => {
+                    let sched: f64 = w
+                        .pes()
+                        .iter()
+                        .filter(|p| p.state() != crate::protocol::PeState::Stopping)
+                        .map(|p| self.irm.profiler.estimate(&p.image).value())
+                        .sum();
+                    (w.last_total_cpu.value(), sched)
+                }
+                None => (0.0, 0.0),
+            };
+            self.recorder
+                .record(&format!("w{slot}.measured"), now, measured);
+            self.recorder
+                .record(&format!("w{slot}.scheduled"), now, scheduled);
+            self.recorder.record(
+                &format!("w{slot}.error_pp"),
+                now,
+                (scheduled - measured) * 100.0,
+            );
+        }
+        self.recorder
+            .record("queue.len", now, self.master.backlog_len() as f64);
+        self.recorder
+            .record("workers.current", now, self.workers.len() as f64);
+        self.recorder
+            .record("workers.target", now, self.irm.last_target() as f64);
+        let active_bins = self
+            .workers
+            .iter()
+            .filter(|w| w.pe_count() > 0)
+            .count();
+        self.recorder
+            .record("bins.active", now, active_bins as f64);
+        self.recorder
+            .record("cloud.rejected", now, self.cloud.rejected_requests as f64);
+        self.recorder.record(
+            "completions",
+            now,
+            self.completions.len() as f64,
+        );
+    }
+
+    /// Failure injection: kill a worker VM outright (hardware failure —
+    /// not a graceful scale-down). Messages its busy PEs were processing
+    /// are recovered onto the master backlog so nothing is lost; the
+    /// cloud slot frees and the autoscaler replaces the capacity.
+    pub fn fail_worker(&mut self, id: WorkerId) -> bool {
+        let Some(pos) = self.workers.iter().position(|w| w.id == id) else {
+            return false;
+        };
+        let worker = self.workers.remove(pos);
+        // Recover in-flight messages (the reliability contract: the
+        // master's backlog re-dispatches work that lost its PE).
+        for pe in worker.pes() {
+            if let crate::worker::PePhase::Busy { msg, .. } = &pe.phase {
+                self.master.requeue_front(msg.clone());
+                self.failed_deliveries += 1;
+            }
+        }
+        if let Some(vm) = self.vm_of_worker.remove(&id) {
+            self.cloud.terminate_vm(vm);
+        }
+        self.master.registry_mut().remove(id);
+        self.release_slot(id);
+        true
+    }
+
+    /// Conservation invariant: every message is exactly one of completed,
+    /// queued at the master, or being processed by a live PE.
+    /// (Checked by the chaos tests after every failure.)
+    pub fn accounted_messages(&self) -> usize {
+        let in_flight: usize = self
+            .workers
+            .iter()
+            .flat_map(|w| w.pes())
+            .filter(|p| matches!(p.phase, crate::worker::PePhase::Busy { .. }))
+            .count();
+        self.completions.len() + self.master.backlog_len() + in_flight
+    }
+
+    /// Run the whole simulation until `end` sim time.
+    pub fn run_until(&mut self, end: Millis) {
+        let dt = self.cfg.dt;
+        let mut t = self.now;
+        // First tick at t=0 if never ticked.
+        if t == Millis::ZERO {
+            self.tick(Millis::ZERO);
+        }
+        loop {
+            t = t + dt;
+            if t > end {
+                break;
+            }
+            self.tick(t);
+        }
+    }
+
+    /// Run until all scheduled arrivals completed (or `deadline`).
+    /// Returns the makespan (last completion time) if everything finished.
+    pub fn run_to_completion(&mut self, total_messages: usize, deadline: Millis) -> Option<Millis> {
+        let dt = self.cfg.dt;
+        if self.now == Millis::ZERO {
+            self.tick(Millis::ZERO);
+        }
+        let mut t = self.now;
+        while self.completions.len() < total_messages && t < deadline {
+            t = t + dt;
+            self.tick(t);
+        }
+        if self.completions.len() >= total_messages {
+            self.completions.iter().map(|c| c.completed_at).max()
+        } else {
+            None
+        }
+    }
+
+    /// Mean message latency (created → completed).
+    pub fn mean_latency(&self) -> Millis {
+        if self.completions.is_empty() {
+            return Millis::ZERO;
+        }
+        let total: u64 = self
+            .completions
+            .iter()
+            .map(|c| (c.completed_at - c.created_at).0)
+            .sum();
+        Millis(total / self.completions.len() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::irm::LoadPredictorConfig;
+
+    fn fast_cluster(quota: usize) -> SimCluster {
+        let cfg = ClusterConfig {
+            cloud: CloudConfig {
+                quota,
+                boot_delay: Millis::from_secs(5),
+                boot_jitter: Millis(1000),
+                ..CloudConfig::default()
+            },
+            worker: WorkerConfig {
+                container_boot: Millis(2000),
+                container_boot_jitter: Millis(500),
+                container_idle_timeout: Millis::from_secs(5),
+                measure_noise_std: 0.0,
+                ..WorkerConfig::default()
+            },
+            irm: IrmConfig {
+                binpack_interval: Millis::from_secs(2),
+                load_predictor: LoadPredictorConfig {
+                    poll_interval: Millis::from_secs(2),
+                    cooldown: Millis::from_secs(4),
+                    ..LoadPredictorConfig::default()
+                },
+                ..IrmConfig::default()
+            },
+            ..ClusterConfig::default()
+        };
+        SimCluster::new(cfg)
+    }
+
+    fn burst(cluster: &mut SimCluster, n: usize, at: Millis, demand: Millis) {
+        for _ in 0..n {
+            cluster.schedule_arrival(
+                at,
+                Arrival {
+                    image: ImageName::new("img"),
+                    payload_bytes: 1 << 20,
+                    service_demand: demand,
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn end_to_end_burst_completes() {
+        let mut c = fast_cluster(5);
+        burst(&mut c, 40, Millis(0), Millis::from_secs(10));
+        let makespan = c.run_to_completion(40, Millis::from_secs(1200));
+        assert!(makespan.is_some(), "40 messages must complete");
+        assert_eq!(c.completions.len(), 40);
+        assert_eq!(c.master.total_completed, 40);
+    }
+
+    #[test]
+    fn autoscaler_brings_up_workers_under_load() {
+        let mut c = fast_cluster(5);
+        burst(&mut c, 100, Millis(0), Millis::from_secs(15));
+        c.run_until(Millis::from_secs(120));
+        assert!(!c.workers.is_empty(), "workers provisioned");
+        let current = c.recorder.get("workers.current").unwrap().max();
+        assert!(current >= 2.0, "scaled to {current}");
+    }
+
+    #[test]
+    fn quota_cap_respected_and_retried() {
+        let mut c = fast_cluster(3);
+        burst(&mut c, 200, Millis(0), Millis::from_secs(20));
+        c.run_until(Millis::from_secs(180));
+        assert!(c.workers.len() <= 3);
+        // Fig 10 shape: the IRM keeps asking beyond the quota.
+        assert!(c.cloud.rejected_requests > 0);
+        let target = c.recorder.get("workers.target").unwrap().max();
+        assert!(target > 3.0, "target {target} should exceed quota");
+    }
+
+    #[test]
+    fn workers_scale_down_when_drained() {
+        let mut c = fast_cluster(5);
+        burst(&mut c, 30, Millis(0), Millis::from_secs(5));
+        c.run_to_completion(30, Millis::from_secs(1200))
+            .expect("completes");
+        let peak = c.recorder.get("workers.current").unwrap().max();
+        // Run idle: idle PEs self-terminate, empty workers get culled down
+        // to the standing buffer (1 for an idle system).
+        let t = c.now();
+        c.run_until(t + Millis::from_secs(120));
+        assert!(
+            (c.workers.len() as f64) < peak || peak <= 1.0,
+            "peak {peak} -> now {}",
+            c.workers.len()
+        );
+        assert!(c.workers.len() <= 2);
+    }
+
+    #[test]
+    fn no_message_lost() {
+        let mut c = fast_cluster(2);
+        // Overload a tiny cluster; everything must still finish eventually.
+        burst(&mut c, 60, Millis(0), Millis::from_secs(8));
+        let makespan = c.run_to_completion(60, Millis::from_secs(3000));
+        assert!(makespan.is_some(), "no message may be lost");
+    }
+
+    #[test]
+    fn utilization_concentrates_on_low_slots() {
+        let mut c = fast_cluster(5);
+        // Moderate steady load that needs ~2 workers.
+        for i in 0..120 {
+            c.schedule_arrival(
+                Millis::from_secs(i),
+                Arrival {
+                    image: ImageName::new("img"),
+                    payload_bytes: 1 << 20,
+                    service_demand: Millis::from_secs(12),
+                },
+            );
+        }
+        c.run_until(Millis::from_secs(200));
+        let mean_of = |name: &str| c.recorder.get(name).map(|s| s.mean()).unwrap_or(0.0);
+        let w0 = mean_of("w0.measured");
+        let w4 = mean_of("w4.measured");
+        assert!(
+            w0 > w4,
+            "bin-packing must favor low indices: w0={w0:.3} w4={w4:.3}"
+        );
+    }
+
+    #[test]
+    fn recorder_series_complete() {
+        let mut c = fast_cluster(3);
+        burst(&mut c, 10, Millis(0), Millis::from_secs(5));
+        c.run_until(Millis::from_secs(60));
+        for name in ["queue.len", "workers.current", "workers.target", "bins.active"] {
+            let s = c.recorder.get(name).expect(name);
+            assert!(s.len() >= 60, "{name} has {} samples", s.len());
+        }
+    }
+
+    #[test]
+    fn prop_messages_conserved_under_random_workloads() {
+        use crate::testkit::{self, Config};
+        // At any sample time: completed + backlog + in-flight == arrived.
+        testkit::forall_no_shrink(
+            Config {
+                cases: 15,
+                ..Config::default()
+            },
+            |rng| {
+                let n = rng.range(5, 60) as usize;
+                let arrivals: Vec<(u64, u64)> = (0..n)
+                    .map(|_| (rng.range(0, 60_000), rng.range(2_000, 30_000)))
+                    .collect();
+                (rng.next_u64(), arrivals)
+            },
+            |(seed, arrivals)| {
+                let mut c = fast_cluster(3);
+                c.cfg.seed = *seed;
+                for (at, demand) in arrivals {
+                    c.schedule_arrival(
+                        Millis(*at),
+                        Arrival {
+                            image: ImageName::new("img"),
+                            payload_bytes: 1 << 20,
+                            service_demand: Millis(*demand),
+                        },
+                    );
+                }
+                let mut arrived_by = std::collections::BTreeMap::new();
+                for (at, _) in arrivals {
+                    *arrived_by.entry(*at).or_insert(0usize) += 1;
+                }
+                let mut t = Millis::ZERO;
+                c.tick(t);
+                for _ in 0..1200 {
+                    t = t + Millis(100);
+                    c.tick(t);
+                    let arrived: usize = arrived_by
+                        .range(..=t.0)
+                        .map(|(_, n)| *n)
+                        .sum();
+                    let accounted = c.accounted_messages();
+                    if accounted != arrived {
+                        return Err(format!(
+                            "at {t}: accounted {accounted} != arrived {arrived}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let run = || {
+            let mut c = fast_cluster(4);
+            burst(&mut c, 50, Millis(0), Millis::from_secs(10));
+            c.run_until(Millis::from_secs(300));
+            (
+                c.completions.len(),
+                c.recorder.get("workers.current").unwrap().max() as u64,
+                c.cloud.rejected_requests,
+            )
+        };
+        assert_eq!(run(), run());
+    }
+}

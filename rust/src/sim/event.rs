@@ -1,0 +1,159 @@
+//! Time-ordered event queue (binary heap keyed by [`Millis`]).
+//!
+//! Used wherever completions must not be quantized to the simulation step:
+//! PE job finish times, VM boot completions, Spark task completions.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::types::Millis;
+
+/// An event due at `at`, carrying a payload. Ties break FIFO by sequence
+/// number so simulation runs are fully deterministic.
+#[derive(Debug, Clone)]
+struct Entry<T> {
+    at: Millis,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap semantics on BinaryHeap (a max-heap).
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic min-heap of timed events.
+#[derive(Debug)]
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn schedule(&mut self, at: Millis, payload: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { at, seq, payload });
+    }
+
+    /// Time of the next event, if any.
+    pub fn peek_time(&self) -> Option<Millis> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    /// Pop every event due at or before `now`, in time order (FIFO within
+    /// equal timestamps).
+    pub fn pop_due(&mut self, now: Millis) -> Vec<(Millis, T)> {
+        let mut due = Vec::new();
+        while self
+            .heap
+            .peek()
+            .map(|e| e.at <= now)
+            .unwrap_or(false)
+        {
+            let e = self.heap.pop().unwrap();
+            due.push((e.at, e.payload));
+        }
+        due
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(Millis(30), "c");
+        q.schedule(Millis(10), "a");
+        q.schedule(Millis(20), "b");
+        let due = q.pop_due(Millis(100));
+        let labels: Vec<&str> = due.iter().map(|(_, l)| *l).collect();
+        assert_eq!(labels, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn equal_times_fifo() {
+        let mut q = EventQueue::new();
+        q.schedule(Millis(5), 1);
+        q.schedule(Millis(5), 2);
+        q.schedule(Millis(5), 3);
+        let due = q.pop_due(Millis(5));
+        let vals: Vec<i32> = due.iter().map(|(_, v)| *v).collect();
+        assert_eq!(vals, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn only_due_events_pop() {
+        let mut q = EventQueue::new();
+        q.schedule(Millis(10), "early");
+        q.schedule(Millis(20), "late");
+        let due = q.pop_due(Millis(15));
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].1, "early");
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.peek_time(), Some(Millis(20)));
+    }
+
+    #[test]
+    fn empty_queue_behaviour() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        assert!(q.is_empty());
+        assert_eq!(q.peek_time(), None);
+        assert!(q.pop_due(Millis(100)).is_empty());
+    }
+
+    #[test]
+    fn interleaved_schedule_and_pop() {
+        let mut q = EventQueue::new();
+        q.schedule(Millis(10), 1);
+        assert_eq!(q.pop_due(Millis(10)).len(), 1);
+        q.schedule(Millis(5), 2); // earlier than already-popped; still fine
+        assert_eq!(q.pop_due(Millis(10))[0].1, 2);
+    }
+}

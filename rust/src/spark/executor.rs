@@ -1,0 +1,237 @@
+//! Spark executor model + dynamic allocation policy (the paper's baseline
+//! configuration: `spark.dynamicAllocation.*` with
+//! `executorIdleTimeout=20s`, exponential ramp-up while the scheduler
+//! backlog is sustained, scale-down of idle executors).
+
+use crate::types::Millis;
+
+/// Executor lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecState {
+    /// Container/JVM starting; cores not usable yet.
+    Starting { usable_at: Millis, registered_at: Millis },
+    /// Usable; `registered_at` is when the driver REST API reports it
+    /// (slightly after it starts burning CPU — the paper observes "CPU
+    /// usage leads the available cores by a few seconds when scaling up").
+    Running { registered_at: Millis },
+}
+
+/// One executor (a container with `cores` task slots).
+#[derive(Clone, Debug)]
+pub struct Executor {
+    pub id: u64,
+    pub cores: u32,
+    pub busy: u32,
+    /// Of `busy`, how many tasks are still in their input-read (NFS) phase
+    /// — they hold a core but burn almost no CPU (the paper's batch-gap
+    /// suspect: "The time could have been spent reading the images from
+    /// disk").
+    pub io_busy: u32,
+    pub state: ExecState,
+    pub idle_since: Option<Millis>,
+}
+
+impl Executor {
+    pub fn usable(&self, now: Millis) -> bool {
+        match self.state {
+            ExecState::Starting { usable_at, .. } => now >= usable_at,
+            ExecState::Running { .. } => true,
+        }
+    }
+
+    pub fn registered(&self, now: Millis) -> bool {
+        match self.state {
+            ExecState::Starting { registered_at, .. } => now >= registered_at,
+            ExecState::Running { registered_at } => now >= registered_at,
+        }
+    }
+
+    pub fn free_cores(&self, now: Millis) -> u32 {
+        if self.usable(now) {
+            self.cores - self.busy
+        } else {
+            0
+        }
+    }
+}
+
+/// Dynamic-allocation policy state (exponential ramp while backlogged).
+#[derive(Clone, Debug)]
+pub struct DynamicAllocation {
+    /// Next ramp round adds up to this many executors (doubles each round).
+    ramp: usize,
+    backlog_since: Option<Millis>,
+    pub backlog_timeout: Millis,
+    pub min_executors: usize,
+    pub max_executors: usize,
+    pub idle_timeout: Millis,
+}
+
+impl DynamicAllocation {
+    pub fn new(min_executors: usize, max_executors: usize, idle_timeout: Millis) -> Self {
+        DynamicAllocation {
+            ramp: 1,
+            backlog_since: None,
+            backlog_timeout: Millis::from_secs(1),
+            min_executors,
+            max_executors,
+            idle_timeout,
+        }
+    }
+
+    /// How many executors to request this tick given the scheduler backlog
+    /// (pending tasks) and current supply. Resets the ramp when the
+    /// backlog clears.
+    pub fn executors_to_request(
+        &mut self,
+        now: Millis,
+        pending_tasks: usize,
+        current: usize,
+        cores_per_exec: u32,
+    ) -> usize {
+        if pending_tasks == 0 {
+            self.backlog_since = None;
+            self.ramp = 1;
+            return 0;
+        }
+        match self.backlog_since {
+            None => {
+                self.backlog_since = Some(now);
+                0
+            }
+            Some(since) if now >= since + self.backlog_timeout => {
+                self.backlog_since = Some(now); // next round re-arms
+                let need = pending_tasks.div_ceil(cores_per_exec as usize);
+                let want = (current + self.ramp).min(self.max_executors).min(
+                    // Never request beyond what the backlog justifies.
+                    current.max(need).max(self.min_executors),
+                );
+                let add = want.saturating_sub(current);
+                // Cap the exponential ramp: doubling past the executor cap
+                // is pointless (and would overflow on long backlogs).
+                self.ramp = (self.ramp * 2).min(self.max_executors.max(1));
+                add
+            }
+            Some(_) => 0,
+        }
+    }
+
+    /// Which executors to release: idle past the timeout, respecting the
+    /// minimum (the paper's red-circled scale-downs).
+    pub fn executors_to_release(&self, now: Millis, executors: &[Executor]) -> Vec<u64> {
+        let mut releasable: Vec<&Executor> = executors
+            .iter()
+            .filter(|e| e.busy == 0)
+            .filter(|e| {
+                e.idle_since
+                    .map(|t0| now >= t0 + self.idle_timeout)
+                    .unwrap_or(false)
+            })
+            .collect();
+        releasable.sort_by_key(|e| e.id);
+        releasable.reverse(); // newest first
+        let max_release = executors.len().saturating_sub(self.min_executors);
+        releasable
+            .into_iter()
+            .take(max_release)
+            .map(|e| e.id)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exec(id: u64, busy: u32, idle_since: Option<Millis>) -> Executor {
+        Executor {
+            id,
+            cores: 8,
+            busy,
+            io_busy: 0,
+            state: ExecState::Running {
+                registered_at: Millis(0),
+            },
+            idle_since,
+        }
+    }
+
+    #[test]
+    fn ramp_doubles_while_backlogged() {
+        let mut da = DynamicAllocation::new(1, 16, Millis::from_secs(20));
+        // t=0: backlog noticed, nothing yet.
+        assert_eq!(da.executors_to_request(Millis(0), 100, 1, 8), 0);
+        // After the backlog timeout: +1, then +2, then +4…
+        assert_eq!(da.executors_to_request(Millis(1000), 100, 1, 8), 1);
+        assert_eq!(da.executors_to_request(Millis(2000), 100, 2, 8), 2);
+        assert_eq!(da.executors_to_request(Millis(3000), 100, 4, 8), 4);
+        // need = ceil(100/8) = 13 caps the next round at 13 total → +5.
+        assert_eq!(da.executors_to_request(Millis(4000), 100, 8, 8), 5);
+    }
+
+    #[test]
+    fn ramp_capped_by_max_and_need() {
+        let mut da = DynamicAllocation::new(1, 5, Millis::from_secs(20));
+        da.executors_to_request(Millis(0), 100, 1, 8);
+        // need = ceil(100/8) = 13 > max 5 → capped at 5 total.
+        assert_eq!(da.executors_to_request(Millis(1000), 100, 4, 8), 1);
+        // Small backlog: 4 tasks on 1 executor of 8 cores → no growth
+        // beyond need=1.
+        let mut da = DynamicAllocation::new(1, 5, Millis::from_secs(20));
+        da.executors_to_request(Millis(0), 4, 1, 8);
+        assert_eq!(da.executors_to_request(Millis(1000), 4, 1, 8), 0);
+    }
+
+    #[test]
+    fn backlog_clear_resets_ramp() {
+        let mut da = DynamicAllocation::new(1, 16, Millis::from_secs(20));
+        da.executors_to_request(Millis(0), 10, 1, 8);
+        da.executors_to_request(Millis(1000), 10, 1, 8);
+        assert_eq!(da.executors_to_request(Millis(2000), 0, 2, 8), 0);
+        // Backlog returns: ramp restarts at 1.
+        da.executors_to_request(Millis(3000), 50, 2, 8);
+        assert_eq!(da.executors_to_request(Millis(4000), 50, 2, 8), 1);
+    }
+
+    #[test]
+    fn idle_executors_released_after_timeout() {
+        let da = DynamicAllocation::new(1, 5, Millis::from_secs(20));
+        let executors = vec![
+            exec(0, 4, None),
+            exec(1, 0, Some(Millis(0))),
+            exec(2, 0, Some(Millis::from_secs(15))),
+        ];
+        let released = da.executors_to_release(Millis::from_secs(21), &executors);
+        assert_eq!(released, vec![1], "only the 20s-idle one");
+    }
+
+    #[test]
+    fn min_executors_respected() {
+        let da = DynamicAllocation::new(1, 5, Millis::from_secs(20));
+        let executors = vec![exec(0, 0, Some(Millis(0)))];
+        let released = da.executors_to_release(Millis::from_secs(60), &executors);
+        assert!(released.is_empty(), "never below min");
+    }
+
+    #[test]
+    fn executor_visibility_lag() {
+        let e = Executor {
+            id: 0,
+            cores: 8,
+            busy: 0,
+            io_busy: 0,
+            state: ExecState::Starting {
+                usable_at: Millis(4000),
+                registered_at: Millis(7000),
+            },
+            idle_since: None,
+        };
+        assert!(!e.usable(Millis(3000)));
+        assert!(e.usable(Millis(4000)));
+        // CPU can burn (usable) before the REST API shows the cores.
+        assert!(!e.registered(Millis(5000)));
+        assert!(e.registered(Millis(7000)));
+        assert_eq!(e.free_cores(Millis(3000)), 0);
+        assert_eq!(e.free_cores(Millis(5000)), 8);
+    }
+}

@@ -1,0 +1,501 @@
+//! Apache Spark Streaming baseline (paper §VI-B1, Fig 7).
+//!
+//! A discrete-time model of the paper's comparison system: Spark file
+//! streaming with 5 s micro-batches, CellProfiler invoked per image as an
+//! external process (one task = one image = one core, "the minimum unit of
+//! parallelism"), `spark.streaming.concurrentJobs=3`, and the *older*
+//! dynamic-allocation policy (`executorIdleTimeout=20s`, exponential
+//! ramp-up on sustained scheduler backlog) the paper had to fall back to.
+//!
+//! Reproduced phenomena (all visible in the recorded series):
+//! * executor cores staircase up to the cluster cap;
+//! * measured CPU *leads* reported cores during ramp-up (executors burn
+//!   CPU before the REST API registers them);
+//! * per-batch CPU gaps (job submit + NFS image reads before compute);
+//! * idle-gap-triggered scale-downs (the red circles of Fig 7).
+
+pub mod executor;
+
+use std::collections::VecDeque;
+
+use crate::clock::Periodic;
+use crate::metrics::Recorder;
+use crate::sim::{Arrival, EventQueue};
+use crate::types::{IdGen, Millis};
+use crate::util::rng::Rng;
+use crate::workload::Trace;
+
+pub use executor::{DynamicAllocation, ExecState, Executor};
+
+/// Baseline configuration (defaults = the paper's settings).
+#[derive(Clone, Debug)]
+pub struct SparkConfig {
+    /// Micro-batch interval (5 s in the paper).
+    pub batch_interval: Millis,
+    /// `spark.streaming.concurrentJobs` (raised to 3 in the paper).
+    pub concurrent_jobs: usize,
+    /// Cores per executor (SSC.xlarge = 8).
+    pub executor_cores: u32,
+    /// Worker VMs (the 5-worker cap shared with the HIO experiment).
+    pub max_executors: usize,
+    pub min_executors: usize,
+    /// `spark.dynamicAllocation.executorIdleTimeout` (20 s in the paper).
+    pub executor_idle_timeout: Millis,
+    /// JVM/executor spin-up before tasks can run.
+    pub executor_startup: Millis,
+    /// Lag until the driver REST API reports a new executor's cores.
+    pub registration_lag: Millis,
+    /// Per-job overhead before its tasks are runnable (job submit).
+    pub job_setup: (Millis, Millis),
+    /// Per-task input-read (NFS) phase: the task holds a core at ~zero CPU
+    /// before compute starts — the paper's suspected gap source.
+    pub task_io: (Millis, Millis),
+    /// Result collection/teardown at the end of each job; the job keeps its
+    /// concurrency slot (driver busy) for this long after its last task.
+    pub collect_overhead: (Millis, Millis),
+    /// The paper's observed anomaly: "For unknown reasons, the system sat
+    /// idle with 2 executors for some time." Modelled as a driver stall
+    /// (no task scheduling) of this duration after the first job
+    /// completes. Set to 0 to disable.
+    pub driver_stall: Millis,
+    pub seed: u64,
+}
+
+impl Default for SparkConfig {
+    fn default() -> Self {
+        SparkConfig {
+            batch_interval: Millis::from_secs(5),
+            concurrent_jobs: 3,
+            executor_cores: 8,
+            max_executors: 5,
+            min_executors: 1,
+            executor_idle_timeout: Millis::from_secs(20),
+            executor_startup: Millis::from_secs(4),
+            registration_lag: Millis::from_secs(5),
+            job_setup: (Millis::from_secs(2), Millis::from_secs(6)),
+            task_io: (Millis::from_secs(2), Millis::from_secs(6)),
+            collect_overhead: (Millis::from_secs(4), Millis::from_secs(10)),
+            driver_stall: Millis::from_secs(75),
+            seed: 11,
+        }
+    }
+}
+
+/// One micro-batch job.
+#[derive(Clone, Debug)]
+struct Job {
+    /// Remaining task costs (one per image still waiting for a core).
+    pending: VecDeque<Millis>,
+    running: usize,
+    /// Tasks become runnable only after setup (job submit).
+    runnable_at: Millis,
+    /// Set when the last task finishes: the driver still collects results
+    /// until this time and the job keeps its concurrency slot.
+    collect_until: Option<Millis>,
+}
+
+impl Job {
+    fn tasks_finished(&self) -> bool {
+        self.pending.is_empty() && self.running == 0
+    }
+
+    fn done(&self, now: Millis) -> bool {
+        self.tasks_finished() && self.collect_until.map(|t| now >= t).unwrap_or(false)
+    }
+}
+
+/// A recorded scale-down event (Fig 7's red circles).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScaleDown {
+    pub at: Millis,
+    pub executors_left: usize,
+}
+
+/// The Spark Streaming baseline simulator.
+pub struct SparkSim {
+    pub cfg: SparkConfig,
+    pub recorder: Recorder,
+    pub scale_downs: Vec<ScaleDown>,
+    arrivals: EventQueue<Arrival>,
+    unbatched: Vec<Arrival>,
+    jobs: VecDeque<Job>,
+    active: Vec<Job>,
+    executors: Vec<Executor>,
+    exec_ids: IdGen,
+    allocation: DynamicAllocation,
+    /// (finish_at-keyed) running task completions; payload = executor id.
+    task_done: EventQueue<u64>,
+    /// End of each running task's input-read phase; payload = executor id.
+    io_done: EventQueue<u64>,
+    batch_timer: Periodic,
+    sample_timer: Periodic,
+    rng: Rng,
+    pub tasks_total: usize,
+    pub tasks_completed: usize,
+    pub last_completion: Millis,
+    /// Driver stall window (the paper's unexplained idle period).
+    stall_until: Option<Millis>,
+    stall_spent: bool,
+    jobs_completed: usize,
+    now: Millis,
+}
+
+impl SparkSim {
+    pub fn new(cfg: SparkConfig) -> Self {
+        let allocation = DynamicAllocation::new(
+            cfg.min_executors,
+            cfg.max_executors,
+            cfg.executor_idle_timeout,
+        );
+        SparkSim {
+            recorder: Recorder::new(),
+            scale_downs: Vec::new(),
+            arrivals: EventQueue::new(),
+            unbatched: Vec::new(),
+            jobs: VecDeque::new(),
+            active: Vec::new(),
+            executors: Vec::new(),
+            exec_ids: IdGen::new(),
+            allocation,
+            task_done: EventQueue::new(),
+            io_done: EventQueue::new(),
+            batch_timer: Periodic::new(cfg.batch_interval),
+            sample_timer: Periodic::new(Millis::from_secs(1)),
+            rng: Rng::seeded(cfg.seed),
+            tasks_total: 0,
+            tasks_completed: 0,
+            last_completion: Millis::ZERO,
+            stall_until: None,
+            stall_spent: false,
+            jobs_completed: 0,
+            now: Millis::ZERO,
+            cfg,
+        }
+    }
+
+    /// Load a workload trace (files appearing in the source directory).
+    pub fn load_trace(&mut self, trace: &Trace) {
+        for (t, a) in &trace.arrivals {
+            self.arrivals.schedule(*t, a.clone());
+            self.tasks_total += 1;
+        }
+        // Spark starts with the minimum executors already registered.
+        for _ in 0..self.cfg.min_executors {
+            self.spawn_executor(Millis::ZERO, true);
+        }
+    }
+
+    fn spawn_executor(&mut self, now: Millis, warm: bool) {
+        let id = self.exec_ids.next_id();
+        let state = if warm {
+            ExecState::Running { registered_at: now }
+        } else {
+            ExecState::Starting {
+                usable_at: now + self.cfg.executor_startup,
+                registered_at: now + self.cfg.executor_startup + self.cfg.registration_lag,
+            }
+        };
+        self.executors.push(Executor {
+            id,
+            cores: self.cfg.executor_cores,
+            busy: 0,
+            io_busy: 0,
+            state,
+            idle_since: Some(now),
+        });
+    }
+
+    /// Advance to `now` (monotonic).
+    pub fn tick(&mut self, now: Millis) {
+        self.now = now;
+
+        // 1a. Input-read phases ending (task switches to compute).
+        for (_, exec_id) in self.io_done.pop_due(now) {
+            if let Some(e) = self.executors.iter_mut().find(|e| e.id == exec_id) {
+                e.io_busy = e.io_busy.saturating_sub(1);
+            }
+        }
+
+        // 1b. Task completions.
+        for (at, exec_id) in self.task_done.pop_due(now) {
+            if let Some(e) = self.executors.iter_mut().find(|e| e.id == exec_id) {
+                e.busy -= 1;
+                if e.busy == 0 {
+                    e.idle_since = Some(at);
+                }
+            }
+            for job in &mut self.active {
+                if job.running > 0 {
+                    job.running -= 1;
+                    break;
+                }
+            }
+            self.tasks_completed += 1;
+            self.last_completion = at;
+        }
+        // Jobs whose last task just finished enter result collection; the
+        // first finished job triggers the paper's observed driver stall.
+        let mut start_stall = false;
+        for job in &mut self.active {
+            if job.tasks_finished() && job.collect_until.is_none() {
+                let collect = Millis(self.rng.range(
+                    self.cfg.collect_overhead.0 .0,
+                    self.cfg.collect_overhead.1 .0,
+                ));
+                job.collect_until = Some(now + collect);
+                self.jobs_completed += 1;
+                if self.jobs_completed == 1
+                    && !self.stall_spent
+                    && self.cfg.driver_stall.0 > 0
+                {
+                    start_stall = true;
+                }
+            }
+        }
+        if start_stall {
+            self.stall_spent = true;
+            self.stall_until = Some(now + self.cfg.driver_stall);
+        }
+        self.active.retain(|j| !j.done(now));
+
+        // 2. New files → unbatched pool; batch boundary → job.
+        for (_, a) in self.arrivals.pop_due(now) {
+            self.unbatched.push(a);
+        }
+        if self.batch_timer.fire(now) && !self.unbatched.is_empty() {
+            let setup = Millis(
+                self.rng
+                    .range(self.cfg.job_setup.0 .0, self.cfg.job_setup.1 .0),
+            );
+            let job = Job {
+                pending: self
+                    .unbatched
+                    .drain(..)
+                    .map(|a| a.service_demand)
+                    .collect(),
+                running: 0,
+                runnable_at: now + setup,
+                collect_until: None,
+            };
+            self.jobs.push_back(job);
+        }
+
+        // 3. Activate jobs up to concurrentJobs.
+        while self.active.len() < self.cfg.concurrent_jobs {
+            match self.jobs.pop_front() {
+                Some(job) => self.active.push(job),
+                None => break,
+            }
+        }
+
+        // 4. Schedule tasks of runnable active jobs onto free cores (the
+        // driver schedules nothing during its stall window).
+        let stalled = self.stall_until.map(|t| now < t).unwrap_or(false);
+        for job in &mut self.active {
+            if stalled || now < job.runnable_at {
+                continue;
+            }
+            'fill: while !job.pending.is_empty() {
+                let slot = self
+                    .executors
+                    .iter_mut()
+                    .filter(|e| e.free_cores(now) > 0)
+                    .min_by_key(|e| e.id);
+                match slot {
+                    Some(e) => {
+                        let cost = job.pending.pop_front().unwrap();
+                        e.busy += 1;
+                        e.io_busy += 1;
+                        e.idle_since = None;
+                        job.running += 1;
+                        let eid = e.id;
+                        let io = Millis(
+                            self.rng.range(self.cfg.task_io.0 .0, self.cfg.task_io.1 .0),
+                        );
+                        self.io_done.schedule(now + io, eid);
+                        self.task_done.schedule(now + io + cost, eid);
+                    }
+                    None => break 'fill,
+                }
+            }
+        }
+
+        // 5. Dynamic allocation.
+        let pending: usize = self
+            .active
+            .iter()
+            .map(|j| j.pending.len())
+            .sum::<usize>()
+            + self.jobs.iter().map(|j| j.pending.len()).sum::<usize>();
+        let add = self.allocation.executors_to_request(
+            now,
+            pending,
+            self.executors.len(),
+            self.cfg.executor_cores,
+        );
+        for _ in 0..add {
+            if self.executors.len() < self.cfg.max_executors {
+                self.spawn_executor(now, false);
+            }
+        }
+        let release = self.allocation.executors_to_release(now, &self.executors);
+        if !release.is_empty() {
+            self.executors.retain(|e| !release.contains(&e.id));
+            self.scale_downs.push(ScaleDown {
+                at: now,
+                executors_left: self.executors.len(),
+            });
+        }
+
+        // 6. Sample Fig 7 series.
+        if self.sample_timer.fire(now) {
+            let registered_cores: u32 = self
+                .executors
+                .iter()
+                .filter(|e| e.registered(now))
+                .map(|e| e.cores)
+                .sum();
+            let compute: u32 = self.executors.iter().map(|e| e.busy - e.io_busy).sum();
+            let io: u32 = self.executors.iter().map(|e| e.io_busy).sum();
+            let busy_cores = compute as f64 + 0.1 * io as f64;
+            let noise = self.rng.normal_with(0.0, 0.15).max(-0.5);
+            self.recorder
+                .record("spark.executor_cores", now, registered_cores as f64);
+            self.recorder.record(
+                "spark.cpu_cores",
+                now,
+                (busy_cores + noise).max(0.0),
+            );
+            self.recorder.record("spark.pending_tasks", now, pending as f64);
+            self.recorder
+                .record("spark.active_jobs", now, self.active.len() as f64);
+        }
+    }
+
+    /// Run until all tasks complete (or deadline); returns the makespan.
+    pub fn run_to_completion(&mut self, dt: Millis, deadline: Millis) -> Option<Millis> {
+        let mut t = self.now;
+        if t == Millis::ZERO {
+            self.tick(Millis::ZERO);
+        }
+        while self.tasks_completed < self.tasks_total && t < deadline {
+            t = t + dt;
+            self.tick(t);
+        }
+        (self.tasks_completed >= self.tasks_total).then_some(self.last_completion)
+    }
+
+    pub fn executors(&self) -> &[Executor] {
+        &self.executors
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{MicroscopyConfig, MicroscopyTrace};
+
+    fn microscopy_run(n_images: usize) -> SparkSim {
+        let trace = MicroscopyTrace::new(MicroscopyConfig {
+            n_images,
+            stream_rate_per_sec: 10.0,
+            ..MicroscopyConfig::default()
+        })
+        .run_trace(0);
+        let mut sim = SparkSim::new(SparkConfig::default());
+        sim.load_trace(&trace);
+        sim
+    }
+
+    #[test]
+    fn completes_all_tasks() {
+        let mut sim = microscopy_run(120);
+        let makespan = sim
+            .run_to_completion(Millis(100), Millis::from_secs(2000))
+            .expect("all tasks complete");
+        assert!(makespan > Millis::from_secs(30));
+        assert_eq!(sim.tasks_completed, 120);
+    }
+
+    #[test]
+    fn scales_up_to_cap_under_load() {
+        let mut sim = microscopy_run(400);
+        sim.run_to_completion(Millis(100), Millis::from_secs(3000))
+            .unwrap();
+        let cores = sim.recorder.get("spark.executor_cores").unwrap().max();
+        assert_eq!(cores, 40.0, "all 5×8 cores registered at peak");
+    }
+
+    #[test]
+    fn scale_downs_happen(){
+        let mut sim = microscopy_run(300);
+        sim.run_to_completion(Millis(100), Millis::from_secs(3000))
+            .unwrap();
+        // Run past the idle timeout to see the tail scale-down.
+        let end = sim.now + Millis::from_secs(60);
+        let mut t = sim.now;
+        while t < end {
+            t = t + Millis(100);
+            sim.tick(t);
+        }
+        assert!(!sim.scale_downs.is_empty(), "Fig 7 red circles exist");
+        // Never below min executors.
+        assert!(sim.executors().len() >= 1);
+    }
+
+    #[test]
+    fn cpu_leads_registered_cores_during_rampup() {
+        let mut sim = microscopy_run(400);
+        sim.run_to_completion(Millis(100), Millis::from_secs(3000))
+            .unwrap();
+        // Find a moment where busy cores exceed registered cores.
+        let cpu = sim.recorder.get("spark.cpu_cores").unwrap();
+        let cores = sim.recorder.get("spark.executor_cores").unwrap();
+        let lead = cpu
+            .points
+            .iter()
+            .any(|(t, busy)| cores.at(*t).map(|c| *busy > c + 0.5).unwrap_or(false));
+        assert!(lead, "CPU must lead registered cores during ramp-up");
+    }
+
+    #[test]
+    fn respects_max_executors() {
+        let mut sim = microscopy_run(500);
+        sim.run_to_completion(Millis(100), Millis::from_secs(4000))
+            .unwrap();
+        assert!(sim.executors().len() <= 5);
+    }
+
+    #[test]
+    fn batch_gaps_visible_in_cpu() {
+        let mut sim = microscopy_run(300);
+        sim.run_to_completion(Millis(100), Millis::from_secs(3000))
+            .unwrap();
+        // During the busy middle phase the CPU series must dip well below
+        // its peak at least once (the paper's inter-batch gaps).
+        let cpu = sim.recorder.get("spark.cpu_cores").unwrap();
+        let peak = cpu.max();
+        let end = cpu.end().unwrap();
+        let mid: Vec<f64> = cpu
+            .points
+            .iter()
+            .filter(|(t, _)| t.0 > end.0 / 5 && t.0 < 4 * end.0 / 5)
+            .map(|(_, v)| *v)
+            .collect();
+        let dip = mid.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(
+            dip < peak * 0.75,
+            "no gap visible: dip {dip:.1} vs peak {peak:.1}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let run = || {
+            let mut sim = microscopy_run(150);
+            sim.run_to_completion(Millis(100), Millis::from_secs(3000))
+                .map(|m| m.0)
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,235 @@
+//! Property-based testing mini-framework (no proptest in the offline
+//! closure). Provides seeded case generation, a `forall` runner with
+//! counterexample reporting and simple input shrinking for integer and
+//! f64-vector cases.
+//!
+//! Used by the bin-packing, IRM and simulation tests to check invariants
+//! (no bin overflow, routing correctness, conservation of work) over
+//! thousands of random cases per property.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_iters: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Env knobs let CI crank cases up without code changes.
+        let cases = std::env::var("TESTKIT_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(200);
+        let seed = std::env::var("TESTKIT_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Config {
+            cases,
+            seed,
+            max_shrink_iters: 500,
+        }
+    }
+}
+
+/// A failed property, with the (possibly shrunk) counterexample rendered.
+#[derive(Debug)]
+pub struct Failure {
+    pub case_index: usize,
+    pub rendered_input: String,
+    pub message: String,
+}
+
+/// Run `prop` over `cfg.cases` random inputs from `gen`. On failure, tries
+/// `shrink` repeatedly to find a smaller failing input, then panics with the
+/// rendered counterexample (so plain `cargo test` reports it).
+pub fn forall<T: Clone + std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut shrink: impl FnMut(&T) -> Vec<T>,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = Rng::seeded(cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B9));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink: repeatedly take the first smaller input that
+            // still fails.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut iters = 0;
+            'outer: while iters < cfg.max_shrink_iters {
+                for cand in shrink(&best) {
+                    iters += 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if iters >= cfg.max_shrink_iters {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {:#x}):\n  input: {:?}\n  error: {best_msg}",
+                cfg.seed, best
+            );
+        }
+    }
+}
+
+/// Convenience: `forall` with no shrinking.
+pub fn forall_no_shrink<T: Clone + std::fmt::Debug>(
+    cfg: Config,
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    forall(cfg, gen, |_| Vec::new(), prop);
+}
+
+/// Shrinker for `Vec<f64>`: drop halves, drop single elements, halve values.
+pub fn shrink_f64_vec(xs: &Vec<f64>) -> Vec<Vec<f64>> {
+    let mut out = Vec::new();
+    let n = xs.len();
+    if n == 0 {
+        return out;
+    }
+    out.push(xs[..n / 2].to_vec());
+    out.push(xs[n / 2..].to_vec());
+    if n <= 8 {
+        for i in 0..n {
+            let mut c = xs.clone();
+            c.remove(i);
+            out.push(c);
+        }
+    }
+    let halved: Vec<f64> = xs.iter().map(|x| x / 2.0).collect();
+    if halved != *xs {
+        out.push(halved);
+    }
+    out.retain(|c| !c.is_empty() || xs.is_empty());
+    out
+}
+
+/// Shrinker for integers: towards zero by halving.
+pub fn shrink_u64(x: &u64) -> Vec<u64> {
+    if *x == 0 {
+        Vec::new()
+    } else {
+        vec![x / 2, x - 1]
+    }
+}
+
+/// Generate a vector of item sizes in `(0, 1]` — the bin-packing input
+/// domain of the paper (PE CPU fractions).
+pub fn gen_item_sizes(rng: &mut Rng, max_len: usize) -> Vec<f64> {
+    let n = rng.below(max_len as u64 + 1) as usize;
+    (0..n)
+        .map(|_| {
+            // Mix of small, medium and near-full items exercises edge cases.
+            match rng.below(3) {
+                0 => rng.uniform(0.01, 0.2),
+                1 => rng.uniform(0.2, 0.7),
+                _ => rng.uniform(0.7, 1.0),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall_no_shrink(
+            Config {
+                cases: 50,
+                ..Config::default()
+            },
+            |rng| rng.below(100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_counterexample() {
+        forall_no_shrink(
+            Config {
+                cases: 100,
+                ..Config::default()
+            },
+            |rng| rng.below(1000),
+            |&x| {
+                if x < 900 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} too big"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinking_reduces_counterexample() {
+        // Property: sum < 5. Failing inputs shrink towards a minimal one.
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                Config {
+                    cases: 200,
+                    seed: 1,
+                    max_shrink_iters: 500,
+                },
+                |rng| {
+                    (0..rng.below(20) as usize)
+                        .map(|_| rng.uniform(0.0, 2.0))
+                        .collect::<Vec<f64>>()
+                },
+                shrink_f64_vec,
+                |xs| {
+                    if xs.iter().sum::<f64>() < 5.0 {
+                        Ok(())
+                    } else {
+                        Err("sum too large".into())
+                    }
+                },
+            )
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("expected a failure"),
+        };
+        // The shrunk input should be much smaller than a worst-case vector.
+        let rendered = msg.split("input: ").nth(1).unwrap();
+        let items = rendered.matches(',').count() + 1;
+        assert!(items <= 10, "shrunk to {items} items: {msg}");
+    }
+
+    #[test]
+    fn gen_item_sizes_in_domain() {
+        let mut rng = Rng::seeded(5);
+        for _ in 0..100 {
+            for s in gen_item_sizes(&mut rng, 50) {
+                assert!(s > 0.0 && s <= 1.0, "size {s} outside (0,1]");
+            }
+        }
+    }
+
+    #[test]
+    fn shrink_u64_towards_zero() {
+        assert!(shrink_u64(&0).is_empty());
+        assert_eq!(shrink_u64(&10), vec![5, 9]);
+    }
+}

@@ -1,0 +1,277 @@
+//! TCP transport: length-prefixed JSON frames + a minimal request/response
+//! server. This is the distributed-deployment path (master/worker/connector
+//! as separate processes); the simulation mode bypasses it.
+//!
+//! Frame format: 4-byte big-endian payload length, then UTF-8 JSON.
+//! A `Server` runs a handler per connection on its own thread; `call` is
+//! the blocking client side (one request, one response per frame pair).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Maximum accepted frame (64 MiB: microscopy images are MB-scale, and the
+/// paper's whole point is large individual objects).
+pub const MAX_FRAME: u32 = 64 * 1024 * 1024;
+
+/// Write one JSON frame.
+pub fn send_frame(stream: &mut TcpStream, msg: &Json) -> Result<()> {
+    let body = msg.to_string();
+    let len = body.len() as u32;
+    if len > MAX_FRAME {
+        bail!("frame too large: {len} bytes");
+    }
+    stream.write_all(&len.to_be_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read one JSON frame (None on clean EOF before a frame starts).
+pub fn recv_frame(stream: &mut TcpStream) -> Result<Option<Json>> {
+    let mut len_buf = [0u8; 4];
+    match stream.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_be_bytes(len_buf);
+    if len > MAX_FRAME {
+        bail!("incoming frame too large: {len} bytes");
+    }
+    let mut body = vec![0u8; len as usize];
+    stream.read_exact(&mut body)?;
+    let text = String::from_utf8(body).context("frame is not UTF-8")?;
+    Ok(Some(Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?))
+}
+
+/// Server-side receive outcome distinguishing idle timeouts (keep waiting)
+/// from dead connections.
+enum RecvError {
+    TimedOut,
+    Broken,
+}
+
+/// Like [`recv_frame`] but treats a read timeout *before any byte of a
+/// frame* as [`RecvError::TimedOut`]. A timeout mid-frame is a broken peer.
+fn recv_frame_timeout(stream: &mut TcpStream) -> std::result::Result<Option<Json>, RecvError> {
+    let mut len_buf = [0u8; 4];
+    match stream.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e)
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut =>
+        {
+            return Err(RecvError::TimedOut)
+        }
+        Err(_) => return Err(RecvError::Broken),
+    }
+    let len = u32::from_be_bytes(len_buf);
+    if len > MAX_FRAME {
+        return Err(RecvError::Broken);
+    }
+    let mut body = vec![0u8; len as usize];
+    // The length prefix arrived; insist on the body (retry on timeout up to
+    // a generous bound so slow senders of large frames still succeed).
+    let mut read = 0;
+    let mut stalls = 0;
+    while read < body.len() {
+        match stream.read(&mut body[read..]) {
+            Ok(0) => return Err(RecvError::Broken),
+            Ok(n) => {
+                read += n;
+                stalls = 0;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                stalls += 1;
+                if stalls > 150 {
+                    return Err(RecvError::Broken); // ~30 s mid-frame stall
+                }
+            }
+            Err(_) => return Err(RecvError::Broken),
+        }
+    }
+    let text = String::from_utf8(body).map_err(|_| RecvError::Broken)?;
+    Json::parse(&text).map(Some).map_err(|_| RecvError::Broken)
+}
+
+/// Blocking request/response call.
+pub fn call(addr: impl ToSocketAddrs, request: &Json) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr).context("connect failed")?;
+    send_frame(&mut stream, request)?;
+    recv_frame(&mut stream)?.context("server closed without responding")
+}
+
+/// A request handler: one JSON in, one JSON out.
+pub type Handler = Arc<dyn Fn(Json) -> Json + Send + Sync>;
+
+/// Threaded request/response server (one thread per connection; each
+/// connection may carry many sequential request/response pairs).
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving. `addr` may use port 0 for an ephemeral port;
+    /// the bound address is available via [`Server::addr`].
+    pub fn start(addr: &str, handler: Handler) -> Result<Server> {
+        let listener = TcpListener::bind(addr).context("bind failed")?;
+        let bound = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        listener.set_nonblocking(true)?;
+        let accept_thread = std::thread::spawn(move || {
+            let mut conn_threads = Vec::new();
+            while !stop2.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((mut stream, _peer)) => {
+                        let _ = stream.set_nonblocking(false);
+                        // Bounded read timeout so connection threads can
+                        // observe shutdown even with an idle open client.
+                        let _ =
+                            stream.set_read_timeout(Some(std::time::Duration::from_millis(200)));
+                        let handler = handler.clone();
+                        let stop3 = stop2.clone();
+                        conn_threads.push(std::thread::spawn(move || {
+                            while !stop3.load(Ordering::SeqCst) {
+                                match recv_frame_timeout(&mut stream) {
+                                    Ok(Some(req)) => {
+                                        let resp = handler(req);
+                                        if send_frame(&mut stream, &resp).is_err() {
+                                            break;
+                                        }
+                                    }
+                                    Ok(None) => break,          // clean EOF
+                                    Err(RecvError::TimedOut) => continue,
+                                    Err(_) => break,
+                                }
+                            }
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for t in conn_threads {
+                let _ = t.join();
+            }
+        });
+        Ok(Server {
+            addr: bound,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> Server {
+        Server::start(
+            "127.0.0.1:0",
+            Arc::new(|req| Json::obj([("echo", req)])),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip_single_call() {
+        let server = echo_server();
+        let req = Json::obj([("hello", Json::num(1.0))]);
+        let resp = call(server.addr(), &req).unwrap();
+        assert_eq!(resp.get("echo").unwrap(), &req);
+        server.shutdown();
+    }
+
+    #[test]
+    fn multiple_sequential_calls_one_connection() {
+        let server = echo_server();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        for i in 0..10 {
+            let req = Json::num(i as f64);
+            send_frame(&mut stream, &req).unwrap();
+            let resp = recv_frame(&mut stream).unwrap().unwrap();
+            assert_eq!(resp.get("echo").unwrap(), &req);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = echo_server();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let req = Json::num(i as f64);
+                    let resp = call(addr, &req).unwrap();
+                    assert_eq!(resp.get("echo").unwrap(), &req);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn large_frame_roundtrips() {
+        let server = echo_server();
+        // 2 MB payload (simulated image bytes as a string).
+        let big = "x".repeat(2 * 1024 * 1024);
+        let resp = call(server.addr(), &Json::str(big.clone())).unwrap();
+        assert_eq!(resp.get("echo").unwrap().as_str().unwrap().len(), big.len());
+        server.shutdown();
+    }
+
+    #[test]
+    fn clean_eof_returns_none() {
+        let server = echo_server();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        drop(stream.try_clone()); // no-op, keep simple
+        drop(stream);
+        // Server side handles EOF; from the client view, open a new conn
+        // and close without sending — recv on a fresh server->client side
+        // isn't directly observable here, so just assert server stays up.
+        let resp = call(server.addr(), &Json::Null).unwrap();
+        assert!(resp.get("echo").is_some());
+        server.shutdown();
+    }
+}

@@ -1,0 +1,285 @@
+//! Core domain types shared across the whole stack.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, Mul, Sub};
+
+/// Milliseconds of (virtual or real) time since an arbitrary epoch.
+///
+/// All coordinator logic is expressed against this type so it is agnostic to
+/// whether it runs under the simulated clock or wall time.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default, Debug)]
+pub struct Millis(pub u64);
+
+impl Millis {
+    pub const ZERO: Millis = Millis(0);
+
+    pub fn from_secs(s: u64) -> Self {
+        Millis(s * 1000)
+    }
+
+    pub fn from_secs_f64(s: f64) -> Self {
+        Millis((s.max(0.0) * 1000.0).round() as u64)
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1000.0
+    }
+
+    pub fn saturating_sub(self, rhs: Millis) -> Millis {
+        Millis(self.0.saturating_sub(rhs.0))
+    }
+
+    pub fn min(self, rhs: Millis) -> Millis {
+        Millis(self.0.min(rhs.0))
+    }
+
+    pub fn max(self, rhs: Millis) -> Millis {
+        Millis(self.0.max(rhs.0))
+    }
+}
+
+impl Add for Millis {
+    type Output = Millis;
+    fn add(self, rhs: Millis) -> Millis {
+        Millis(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Millis {
+    fn add_assign(&mut self, rhs: Millis) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for Millis {
+    type Output = Millis;
+    fn sub(self, rhs: Millis) -> Millis {
+        Millis(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl Mul<u64> for Millis {
+    type Output = Millis;
+    fn mul(self, rhs: u64) -> Millis {
+        Millis(self.0 * rhs)
+    }
+}
+
+impl Div<u64> for Millis {
+    type Output = Millis;
+    fn div(self, rhs: u64) -> Millis {
+        Millis(self.0 / rhs)
+    }
+}
+
+impl fmt::Display for Millis {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3}s", self.as_secs_f64())
+    }
+}
+
+/// Fraction of a worker VM's total CPU capacity, in `[0, +)`.
+///
+/// `1.0` is the whole VM (the bin capacity of the paper's model); a
+/// single-core PE on an 8-core SSC.xlarge worker is `0.125`. Values are
+/// clamped non-negative but deliberately *not* clamped at 1.0: measured
+/// usage can transiently exceed the nominal capacity (OS noise), which the
+/// error figures (Figs 5/9) must be able to express.
+#[derive(Clone, Copy, PartialEq, PartialOrd, Default, Debug)]
+pub struct CpuFraction(pub f64);
+
+impl CpuFraction {
+    pub const ZERO: CpuFraction = CpuFraction(0.0);
+    pub const FULL: CpuFraction = CpuFraction(1.0);
+
+    pub fn new(v: f64) -> Self {
+        CpuFraction(v.max(0.0))
+    }
+
+    pub fn value(self) -> f64 {
+        self.0
+    }
+
+    pub fn clamp01(self) -> Self {
+        CpuFraction(self.0.clamp(0.0, 1.0))
+    }
+
+    /// Percentage points, the unit of the paper's error plots.
+    pub fn as_percent(self) -> f64 {
+        self.0 * 100.0
+    }
+}
+
+impl Add for CpuFraction {
+    type Output = CpuFraction;
+    fn add(self, rhs: CpuFraction) -> CpuFraction {
+        CpuFraction(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for CpuFraction {
+    fn add_assign(&mut self, rhs: CpuFraction) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for CpuFraction {
+    type Output = CpuFraction;
+    fn sub(self, rhs: CpuFraction) -> CpuFraction {
+        CpuFraction(self.0 - rhs.0)
+    }
+}
+
+impl fmt::Display for CpuFraction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.1}%", self.as_percent())
+    }
+}
+
+macro_rules! id_type {
+    ($(#[$doc:meta])* $name:ident, $prefix:literal) => {
+        $(#[$doc])*
+        #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+        pub struct $name(pub u64);
+
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, concat!($prefix, "{}"), self.0)
+            }
+        }
+    };
+}
+
+id_type!(
+    /// A processing-engine (container) instance.
+    PeId,
+    "pe-"
+);
+id_type!(
+    /// A worker node (one per hosting VM).
+    WorkerId,
+    "w-"
+);
+id_type!(
+    /// A cloud VM (workers run on VMs; the distinction matters during boot).
+    VmId,
+    "vm-"
+);
+id_type!(
+    /// A streamed message (one large object, e.g. one microscopy image).
+    MessageId,
+    "msg-"
+);
+
+/// A Docker-image-like identifier for the PE container a message needs.
+///
+/// The paper's stream request carries "the docker container and tag that a
+/// PE needs to run to process the data"; we keep the same shape.
+#[derive(Clone, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct ImageName(pub String);
+
+impl ImageName {
+    pub fn new(s: impl Into<String>) -> Self {
+        ImageName(s.into())
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl fmt::Display for ImageName {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl From<&str> for ImageName {
+    fn from(s: &str) -> Self {
+        ImageName(s.to_string())
+    }
+}
+
+/// One streamed message: the unit of work a PE processes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamMessage {
+    pub id: MessageId,
+    /// Container image that must process this message.
+    pub image: ImageName,
+    /// Size of the object in bytes (MB-scale for microscopy images).
+    pub payload_bytes: u64,
+    /// Intrinsic service demand in CPU-milliseconds on one dedicated core.
+    /// In simulation this drives the processing time; in real mode it is
+    /// ignored (the PJRT execution provides the real cost).
+    pub service_demand: Millis,
+    /// When the message entered the system (for latency accounting).
+    pub created_at: Millis,
+}
+
+/// Counter-based id generator (no global state; own one per subsystem).
+#[derive(Default, Debug, Clone)]
+pub struct IdGen {
+    next: u64,
+}
+
+impl IdGen {
+    pub fn new() -> Self {
+        IdGen { next: 0 }
+    }
+
+    pub fn next_id(&mut self) -> u64 {
+        let id = self.next;
+        self.next += 1;
+        id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn millis_arithmetic() {
+        let a = Millis::from_secs(2);
+        let b = Millis(500);
+        assert_eq!((a + b).0, 2500);
+        assert_eq!((a - b).0, 1500);
+        assert_eq!((b - a).0, 0, "sub saturates");
+        assert_eq!((b * 4).0, 2000);
+        assert_eq!((a / 2).0, 1000);
+    }
+
+    #[test]
+    fn millis_float_roundtrip() {
+        let m = Millis::from_secs_f64(1.2345);
+        assert!((m.as_secs_f64() - 1.2345).abs() <= 5e-4 + 1e-12);
+        assert_eq!(Millis::from_secs_f64(-5.0), Millis::ZERO);
+    }
+
+    #[test]
+    fn cpu_fraction_clamps_negative_only() {
+        assert_eq!(CpuFraction::new(-0.5).value(), 0.0);
+        assert_eq!(CpuFraction::new(1.5).value(), 1.5);
+        assert_eq!(CpuFraction::new(1.5).clamp01().value(), 1.0);
+    }
+
+    #[test]
+    fn cpu_fraction_percent() {
+        assert_eq!(CpuFraction(0.42).as_percent(), 42.0);
+    }
+
+    #[test]
+    fn id_display() {
+        assert_eq!(PeId(3).to_string(), "pe-3");
+        assert_eq!(WorkerId(0).to_string(), "w-0");
+        assert_eq!(VmId(7).to_string(), "vm-7");
+    }
+
+    #[test]
+    fn idgen_monotonic() {
+        let mut g = IdGen::new();
+        assert_eq!(g.next_id(), 0);
+        assert_eq!(g.next_id(), 1);
+        assert_eq!(g.next_id(), 2);
+    }
+}

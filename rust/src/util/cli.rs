@@ -1,0 +1,165 @@
+//! Tiny CLI argument parser (subcommands + `--flag value` options).
+//!
+//! The offline closure has no clap; this covers what the `repro` binary and
+//! the examples need: positional subcommands, `--key value`, `--key=value`,
+//! boolean switches, typed accessors with defaults, and usage errors that
+//! name the offending flag.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed command line: leading positionals + `--key [value]` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+/// CLI parse/lookup error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    return Err(CliError("bare '--' is not supported".into()));
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(body.to_string(), v);
+                } else {
+                    args.switches.push(body.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env() -> Result<Args, CliError> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch) || self.options.contains_key(switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected number, got '{v}'"))),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        self.get_u64(key, default as u64).map(|v| v as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(parts: &[&str]) -> Args {
+        Args::parse(parts.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse(&["experiment", "fig3", "--seed", "7", "--out=results"]);
+        assert_eq!(a.pos(0), Some("experiment"));
+        assert_eq!(a.pos(1), Some("fig3"));
+        assert_eq!(a.get("seed"), Some("7"));
+        assert_eq!(a.get("out"), Some("results"));
+    }
+
+    #[test]
+    fn switches() {
+        let a = parse(&["run", "--verbose", "--n", "3"]);
+        assert!(a.has("verbose"));
+        assert!(a.has("n"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["--seed", "42", "--rate", "1.5"]);
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 42);
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 1.5);
+        assert_eq!(a.get_u64("missing", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn typed_errors_name_the_flag() {
+        let a = parse(&["--seed", "abc"]);
+        let err = a.get_u64("seed", 0).unwrap_err();
+        assert!(err.0.contains("--seed"), "{err}");
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse(&["cmd", "--fast"]);
+        assert!(a.has("fast"));
+        assert_eq!(a.pos(0), Some("cmd"));
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse(&["--delta", "-3.5"]);
+        assert_eq!(a.get_f64("delta", 0.0).unwrap(), -3.5);
+    }
+
+    #[test]
+    fn bare_double_dash_rejected() {
+        assert!(Args::parse(["--".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Substrate utilities built from scratch (the offline crate closure has no
+//! serde/clap/rand, so these are first-class parts of the system).
+
+pub mod cli;
+pub mod json;
+pub mod ringbuf;
+pub mod rng;
+
+pub use json::Json;
+pub use ringbuf::RingBuf;
+pub use rng::Rng;

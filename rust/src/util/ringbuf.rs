@@ -1,0 +1,165 @@
+//! Fixed-capacity ring buffer — the storage behind every sliding-window
+//! statistic in the system (the worker profiler's "moving average of the
+//! last N measurements", the load predictor's queue-length history).
+
+/// Overwriting ring buffer of the most recent `capacity` samples.
+#[derive(Clone, Debug)]
+pub struct RingBuf<T> {
+    buf: Vec<T>,
+    capacity: usize,
+    /// Index of the next write (== logical end).
+    head: usize,
+    len: usize,
+}
+
+impl<T: Copy> RingBuf<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "ring buffer capacity must be positive");
+        RingBuf {
+            buf: Vec::with_capacity(capacity),
+            capacity,
+            head: 0,
+            len: 0,
+        }
+    }
+
+    pub fn push(&mut self, v: T) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(v);
+        } else {
+            self.buf[self.head] = v;
+        }
+        self.head = (self.head + 1) % self.capacity;
+        self.len = (self.len + 1).min(self.capacity);
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+        self.len = 0;
+    }
+
+    /// Oldest-to-newest iteration.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        let start = if self.len < self.capacity {
+            0
+        } else {
+            self.head
+        };
+        (0..self.len).map(move |i| &self.buf[(start + i) % self.capacity])
+    }
+
+    /// Most recent sample, if any.
+    pub fn last(&self) -> Option<&T> {
+        if self.len == 0 {
+            None
+        } else {
+            let idx = (self.head + self.capacity - 1) % self.capacity;
+            Some(&self.buf[idx])
+        }
+    }
+}
+
+impl RingBuf<f64> {
+    pub fn mean(&self) -> Option<f64> {
+        if self.is_empty() {
+            None
+        } else {
+            Some(self.iter().sum::<f64>() / self.len as f64)
+        }
+    }
+
+    pub fn max(&self) -> Option<f64> {
+        self.iter().copied().fold(None, |acc, x| {
+            Some(acc.map_or(x, |a: f64| a.max(x)))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_then_overwrites() {
+        let mut rb = RingBuf::new(3);
+        rb.push(1.0);
+        rb.push(2.0);
+        assert_eq!(rb.len(), 2);
+        rb.push(3.0);
+        rb.push(4.0); // evicts 1.0
+        assert_eq!(rb.len(), 3);
+        let v: Vec<f64> = rb.iter().copied().collect();
+        assert_eq!(v, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn iter_order_before_wrap() {
+        let mut rb = RingBuf::new(4);
+        rb.push(1);
+        rb.push(2);
+        let v: Vec<i32> = rb.iter().copied().collect();
+        assert_eq!(v, vec![1, 2]);
+    }
+
+    #[test]
+    fn last_tracks_newest() {
+        let mut rb = RingBuf::new(2);
+        assert_eq!(rb.last(), None);
+        rb.push(10);
+        assert_eq!(rb.last(), Some(&10));
+        rb.push(20);
+        rb.push(30);
+        assert_eq!(rb.last(), Some(&30));
+    }
+
+    #[test]
+    fn mean_over_window_only() {
+        let mut rb = RingBuf::new(2);
+        assert_eq!(rb.mean(), None);
+        rb.push(1.0);
+        rb.push(3.0);
+        rb.push(5.0); // window = [3, 5]
+        assert_eq!(rb.mean(), Some(4.0));
+    }
+
+    #[test]
+    fn max_and_clear() {
+        let mut rb = RingBuf::new(3);
+        rb.push(2.0);
+        rb.push(9.0);
+        rb.push(4.0);
+        assert_eq!(rb.max(), Some(9.0));
+        rb.clear();
+        assert!(rb.is_empty());
+        assert_eq!(rb.max(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn zero_capacity_panics() {
+        let _ = RingBuf::<f64>::new(0);
+    }
+
+    #[test]
+    fn long_sequence_keeps_window() {
+        let mut rb = RingBuf::new(5);
+        for i in 0..1000 {
+            rb.push(i as f64);
+        }
+        let v: Vec<f64> = rb.iter().copied().collect();
+        assert_eq!(v, vec![995.0, 996.0, 997.0, 998.0, 999.0]);
+    }
+}

@@ -1,0 +1,142 @@
+//! Remote worker agent: a worker node as its own process/endpoint.
+//!
+//! The distributed deployment of Fig 1: the master only tracks worker
+//! state; *data* travels P2P from the stream connector straight to a
+//! worker's endpoint ("messages are forwarded directly to available PEs
+//! for processing"). The agent wraps a live PE pool behind a TCP server
+//! with three endpoints:
+//!
+//! * `analyze {pixels}` — accept one message P2P, process, reply with the
+//!   features (rejects with `busy` when no PE can take it, so the caller
+//!   falls back to the master backlog);
+//! * `status {}` — idle/total PEs + mailbox depth (the worker report the
+//!   master's registry consumes);
+//! * `ping {}` — liveness.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::master::{LiveCluster, LiveConfig};
+use crate::transport::{Handler, Server};
+use crate::util::json::Json;
+
+/// A running worker agent (server + shared PE pool).
+pub struct WorkerAgent {
+    pub server: Server,
+    cluster: Arc<Mutex<LiveCluster>>,
+}
+
+impl WorkerAgent {
+    /// Start an agent over the given artifacts with `pes` live PEs.
+    pub fn start(addr: &str, artifacts_dir: &str, pes: usize) -> Result<WorkerAgent> {
+        let cluster = LiveCluster::new(
+            artifacts_dir,
+            LiveConfig {
+                max_pes: pes,
+                initial_pes: pes,
+                scale_up_backlog_per_pe: usize::MAX, // fixed pool: master scales
+            },
+        )?;
+        let cluster = Arc::new(Mutex::new(cluster));
+        let handler_cluster = cluster.clone();
+        let handler: Handler = Arc::new(move |req: Json| {
+            let kind = req.get("type").and_then(|t| t.as_str()).unwrap_or("");
+            match kind {
+                "ping" => Json::obj([("ok", Json::Bool(true))]),
+                "status" => {
+                    let mut c = handler_cluster.lock().unwrap();
+                    c.pump();
+                    Json::obj([
+                        ("ok", Json::Bool(true)),
+                        ("pes", Json::num(c.pe_count() as f64)),
+                        ("completed", Json::num(c.stats.completed as f64)),
+                        ("submitted", Json::num(c.stats.submitted as f64)),
+                        (
+                            "busy",
+                            Json::num((c.stats.submitted - c.stats.completed) as f64),
+                        ),
+                    ])
+                }
+                "analyze" => {
+                    let Some(pixels) = decode_pixels(&req) else {
+                        return Json::obj([
+                            ("ok", Json::Bool(false)),
+                            ("error", Json::str("missing pixels")),
+                        ]);
+                    };
+                    // P2P admission control: only accept when a PE can take
+                    // the message now; otherwise the connector must fall
+                    // back to the master backlog.
+                    let id = {
+                        let mut c = handler_cluster.lock().unwrap();
+                        let in_flight = c.stats.submitted - c.stats.completed;
+                        if in_flight >= 2 * c.pe_count() as u64 {
+                            return Json::obj([
+                                ("ok", Json::Bool(false)),
+                                ("error", Json::str("busy")),
+                            ]);
+                        }
+                        c.stream(pixels)
+                    };
+                    let t0 = std::time::Instant::now();
+                    loop {
+                        {
+                            let mut c = handler_cluster.lock().unwrap();
+                            c.pump();
+                            if let Some(r) = c.results.iter().find(|r| r.id == id) {
+                                return Json::obj([
+                                    ("ok", Json::Bool(true)),
+                                    (
+                                        "features",
+                                        Json::arr(
+                                            r.features.iter().map(|f| Json::num(*f as f64)),
+                                        ),
+                                    ),
+                                    (
+                                        "wall_ms",
+                                        Json::num(r.wall.as_secs_f64() * 1e3),
+                                    ),
+                                ]);
+                            }
+                        }
+                        if t0.elapsed() > std::time::Duration::from_secs(120) {
+                            return Json::obj([
+                                ("ok", Json::Bool(false)),
+                                ("error", Json::str("timeout")),
+                            ]);
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                }
+                other => Json::obj([
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::str(format!("unknown request '{other}'"))),
+                ]),
+            }
+        });
+        let server = Server::start(addr, handler)?;
+        Ok(WorkerAgent { server, cluster })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.server.addr()
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.cluster.lock().unwrap().stats.completed
+    }
+
+    pub fn shutdown(self) {
+        self.server.shutdown();
+    }
+}
+
+/// Shared pixel decoding for agent/master services.
+pub fn decode_pixels(req: &Json) -> Option<Vec<f32>> {
+    req.get("pixels")?.as_arr().map(|a| {
+        a.iter()
+            .filter_map(|v| v.as_f64().map(|f| f as f32))
+            .collect()
+    })
+}

@@ -1,0 +1,163 @@
+//! Live processing engines: real threads executing the AOT artifacts via
+//! PJRT. This is the deployment-mode counterpart of the simulated
+//! [`ProcessingEngine`](crate::worker::pe::ProcessingEngine): one OS thread
+//! per PE, a bounded mailbox, per-job CPU-time measurement via
+//! `clock_gettime(CLOCK_THREAD_CPUTIME_ID)` — the worker half of the
+//! paper's profiler, measured for real.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+use crate::types::{ImageName, MessageId, PeId};
+
+/// A job for a live PE: one image's pixels to analyze.
+pub struct LiveJob {
+    pub id: MessageId,
+    pub pixels: Vec<f32>,
+    pub submitted: Instant,
+}
+
+/// Result of one live job.
+#[derive(Clone, Debug)]
+pub struct LiveResult {
+    pub id: MessageId,
+    pub pe: PeId,
+    /// `[nucleus_count, area_px, mean_fg_intensity, otsu_threshold]`.
+    pub features: [f32; 4],
+    /// Wall time spent processing (queue wait excluded).
+    pub wall: std::time::Duration,
+    /// CPU time the PE thread spent on this job.
+    pub cpu: std::time::Duration,
+    /// End-to-end latency including mailbox wait.
+    pub latency: std::time::Duration,
+}
+
+/// Thread CPU-time via libc (the real measurement the simulated worker's
+/// contention model stands in for).
+pub fn thread_cpu_time() -> std::time::Duration {
+    let mut ts = libc::timespec {
+        tv_sec: 0,
+        tv_nsec: 0,
+    };
+    // SAFETY: plain syscall writing into a stack timespec.
+    unsafe {
+        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
+    }
+    std::time::Duration::new(ts.tv_sec as u64, ts.tv_nsec as u32)
+}
+
+/// A live PE: a worker thread with a bounded mailbox.
+pub struct LivePe {
+    pub id: PeId,
+    pub image: ImageName,
+    tx: SyncSender<LiveJob>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl LivePe {
+    /// Spawn a PE executing the `nuclei` artifact.
+    ///
+    /// PJRT handles are not `Send`, so each PE thread loads and compiles
+    /// its *own* runtime — exactly like each PE container in the paper
+    /// runs its own CellProfiler instance. The compile time is the PE's
+    /// real "container boot" latency; jobs delivered meanwhile wait in the
+    /// mailbox. Results are pushed into `results`.
+    pub fn spawn(
+        id: PeId,
+        image: ImageName,
+        artifacts_dir: String,
+        results: SyncSender<LiveResult>,
+    ) -> Result<LivePe> {
+        let (tx, rx): (SyncSender<LiveJob>, Receiver<LiveJob>) = sync_channel(1);
+        let handle = std::thread::Builder::new()
+            .name(format!("{id}"))
+            .spawn(move || {
+                let runtime = match Runtime::load_dir(&artifacts_dir) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        eprintln!("{id}: runtime load failed: {e:#}");
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    let cpu0 = thread_cpu_time();
+                    let t0 = Instant::now();
+                    match runtime.analyze_image(&job.pixels) {
+                        Ok(features) => {
+                            let result = LiveResult {
+                                id: job.id,
+                                pe: id,
+                                features,
+                                wall: t0.elapsed(),
+                                cpu: thread_cpu_time().saturating_sub(cpu0),
+                                latency: job.submitted.elapsed(),
+                            };
+                            if results.send(result).is_err() {
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("{id}: job {} failed: {e:#}", job.id);
+                        }
+                    }
+                }
+            })?;
+        Ok(LivePe {
+            id,
+            image,
+            tx,
+            handle: Some(handle),
+        })
+    }
+
+    /// Non-blocking delivery; returns the job back when the PE is busy
+    /// (mailbox full) — the caller requeues on the master backlog, same as
+    /// the simulated path.
+    pub fn try_deliver(&self, job: LiveJob) -> Result<(), LiveJob> {
+        match self.tx.try_send(job) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(j)) | Err(TrySendError::Disconnected(j)) => Err(j),
+        }
+    }
+
+    /// Graceful shutdown (Drop does the same): close the mailbox, join.
+    pub fn shutdown(self) {
+        drop(self);
+    }
+}
+
+impl Drop for LivePe {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            // The receiver loop ends when every sender is gone; swap our
+            // sender for a dummy whose receiver we immediately drop, so
+            // the real mailbox closes before the join.
+            let (dead_tx, _dead_rx) = sync_channel::<LiveJob>(1);
+            let real_tx = std::mem::replace(&mut self.tx, dead_tx);
+            drop(real_tx);
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_cpu_time_monotonic_and_burns() {
+        let a = thread_cpu_time();
+        // Burn some CPU.
+        let mut acc = 0u64;
+        for i in 0..3_000_000u64 {
+            acc = acc.wrapping_add(i * 31);
+        }
+        crate::bench::black_box(acc);
+        let b = thread_cpu_time();
+        assert!(b > a, "cpu time advanced: {a:?} -> {b:?}");
+    }
+}

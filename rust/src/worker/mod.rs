@@ -1,0 +1,602 @@
+//! Worker node: hosts PE containers, runs the contention model, measures
+//! per-PE CPU and sends periodic reports to the master (the worker half of
+//! the paper's worker profiler).
+//!
+//! The contention model is processor sharing: busy PEs demand their
+//! configured CPU fraction; if total demand exceeds the VM's capacity every
+//! PE is throttled proportionally, stretching its service time — exactly
+//! the effect that makes over-packing a worker slow (and that bin-packing
+//! avoids by keeping scheduled load ≤ 1.0).
+
+pub mod agent;
+pub mod live;
+pub mod pe;
+
+use crate::clock::Periodic;
+use crate::protocol::{PeStatus, WorkerReport};
+use crate::types::{CpuFraction, IdGen, ImageName, Millis, PeId, StreamMessage, VmId, WorkerId};
+use crate::util::rng::Rng;
+
+pub use live::{LiveJob, LivePe, LiveResult};
+pub use pe::{PePhase, ProcessingEngine};
+
+/// Per-worker configuration (parameters from [15] §4.3 / Table 1 that live
+/// on the worker side).
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    /// Container start latency (docker pull + start).
+    pub container_boot: Millis,
+    /// Jitter on the start latency (±, uniform).
+    pub container_boot_jitter: Millis,
+    /// Idle self-termination timeout (`container_idle_timeout`; the
+    /// microscopy experiment sets 1 s).
+    pub container_idle_timeout: Millis,
+    /// Graceful container stop latency (docker stop → exited).
+    pub container_stop: Millis,
+    /// First-ever hosting of an image on this deployment pulls it from the
+    /// registry (Docker Hub); later starts hit the local cache. The paper's
+    /// run-1 warm-up penalty.
+    pub image_pull: Millis,
+    /// Report cadence to the master (`report_interval`; 1 s in §VI-B).
+    pub report_interval: Millis,
+    /// CPU fraction an idle PE consumes.
+    pub idle_cpu: CpuFraction,
+    /// Std-dev of OS measurement noise on total CPU (0 disables).
+    pub measure_noise_std: f64,
+    /// VM cores (capacity is normalized to 1.0 = all cores).
+    pub cores: u32,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig {
+            container_boot: Millis::from_secs(3),
+            container_boot_jitter: Millis(1500),
+            container_idle_timeout: Millis::from_secs(1),
+            container_stop: Millis(2500),
+            image_pull: Millis::from_secs(30),
+            report_interval: Millis::from_secs(1),
+            idle_cpu: CpuFraction::new(0.004),
+            measure_noise_std: 0.01,
+            cores: 8,
+        }
+    }
+}
+
+/// Events a worker surfaces to the coordination layer each tick.
+#[derive(Clone, Debug)]
+pub enum WorkerEvent {
+    PeReady(PeId),
+    JobCompleted {
+        pe: PeId,
+        msg: StreamMessage,
+        completed_at: Millis,
+    },
+    /// Idle self-termination ("graceful").
+    PeTerminated(PeId),
+    Report(WorkerReport),
+}
+
+/// A worker node bound to a cloud VM.
+pub struct Worker {
+    pub id: WorkerId,
+    pub vm: VmId,
+    cfg: WorkerConfig,
+    pes: Vec<ProcessingEngine>,
+    pe_ids: IdGen,
+    rng: Rng,
+    report_timer: Periodic,
+    last_tick: Option<Millis>,
+    /// Integrated (cpu·ms, busy·ms) per PE since the last report. Demand
+    /// estimates average over *busy time only* so partially-busy intervals
+    /// do not drag the profile below the true busy demand (which would
+    /// make the bin-packing manager over-pack workers).
+    acc_cpu_ms: Vec<(PeId, f64, f64)>,
+    acc_window_ms: f64,
+    /// Most recent instantaneous total CPU (with noise), for plots.
+    pub last_total_cpu: CpuFraction,
+}
+
+impl Worker {
+    pub fn new(id: WorkerId, vm: VmId, cfg: WorkerConfig, seed: u64) -> Self {
+        let report_interval = cfg.report_interval;
+        Worker {
+            id,
+            vm,
+            cfg,
+            pes: Vec::new(),
+            pe_ids: IdGen::new(),
+            rng: Rng::seeded(seed),
+            report_timer: Periodic::new(report_interval),
+            last_tick: None,
+            acc_cpu_ms: Vec::new(),
+            acc_window_ms: 0.0,
+            last_total_cpu: CpuFraction::ZERO,
+        }
+    }
+
+    pub fn config(&self) -> &WorkerConfig {
+        &self.cfg
+    }
+
+    /// Start a new PE container for `image` with the given busy demand.
+    /// `extra_boot` models a registry pull on the first hosting of the
+    /// image (the caller owns the pull cache).
+    pub fn start_pe_with_pull(
+        &mut self,
+        image: ImageName,
+        busy_demand: CpuFraction,
+        now: Millis,
+        extra_boot: Millis,
+    ) -> PeId {
+        let jitter = if self.cfg.container_boot_jitter.0 == 0 {
+            Millis::ZERO
+        } else {
+            Millis(self.rng.range(0, 2 * self.cfg.container_boot_jitter.0))
+        };
+        let boot = self
+            .cfg
+            .container_boot
+            .saturating_sub(self.cfg.container_boot_jitter)
+            + jitter
+            + extra_boot;
+        let id = PeId(self.pe_ids.next_id() | (self.id.0 << 32));
+        self.pes.push(ProcessingEngine::new(
+            id,
+            image,
+            busy_demand,
+            self.cfg.idle_cpu,
+            now,
+            boot,
+        ));
+        id
+    }
+
+    /// Start a PE with a warm image cache (no pull).
+    pub fn start_pe(&mut self, image: ImageName, busy_demand: CpuFraction, now: Millis) -> PeId {
+        self.start_pe_with_pull(image, busy_demand, now, Millis::ZERO)
+    }
+
+    /// Gracefully stop a PE (used by explicit scale-down). The container
+    /// enters its stop phase and is removed once the stop latency elapses.
+    pub fn stop_pe(&mut self, pe: PeId) -> bool {
+        let stop = self.cfg.container_stop;
+        if let Some(p) = self.pes.iter_mut().find(|p| p.id == pe) {
+            p.phase = PePhase::Stopping {
+                until: self.last_tick.unwrap_or(Millis::ZERO) + stop,
+            };
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Deliver a message P2P to a PE. On failure the message is returned so
+    /// the caller can requeue it on the master backlog.
+    pub fn deliver(&mut self, pe: PeId, msg: StreamMessage, now: Millis) -> Result<(), StreamMessage> {
+        match self.pes.iter_mut().find(|p| p.id == pe) {
+            Some(p) => p.deliver(msg, now),
+            None => Err(msg),
+        }
+    }
+
+    /// First idle PE hosting `image`, if any (the master's routing query).
+    pub fn find_idle_pe(&self, image: &ImageName) -> Option<PeId> {
+        self.pes
+            .iter()
+            .find(|p| p.is_idle() && &p.image == image)
+            .map(|p| p.id)
+    }
+
+    pub fn pes(&self) -> &[ProcessingEngine] {
+        &self.pes
+    }
+
+    pub fn pe_count(&self) -> usize {
+        self.pes.len()
+    }
+
+    pub fn pe_count_for(&self, image: &ImageName) -> usize {
+        self.pes.iter().filter(|p| &p.image == image).count()
+    }
+
+    /// Sum of busy demands + idle overheads — the "scheduled" load proxy.
+    pub fn demand_total(&self) -> CpuFraction {
+        self.pes
+            .iter()
+            .fold(CpuFraction::ZERO, |acc, p| acc + p.demand())
+    }
+
+    /// Advance the worker by one step ending at `now`.
+    pub fn tick(&mut self, now: Millis) -> Vec<WorkerEvent> {
+        let dt = match self.last_tick {
+            None => Millis::ZERO,
+            Some(last) => now - last,
+        };
+        self.last_tick = Some(now);
+        let mut events = Vec::new();
+
+        // 1. Boot transitions.
+        for p in &mut self.pes {
+            if let PePhase::Booting { ready_at } = p.phase {
+                if now >= ready_at {
+                    p.phase = PePhase::Idle { since: now };
+                    events.push(WorkerEvent::PeReady(p.id));
+                }
+            }
+        }
+
+        // 2. Contention model: grant CPU, advance busy jobs.
+        let total_demand: f64 = self.pes.iter().map(|p| p.demand().value()).sum();
+        let factor = if total_demand > 1.0 {
+            1.0 / total_demand
+        } else {
+            1.0
+        };
+        let mut measured_total = 0.0;
+        for p in &mut self.pes {
+            let granted = p.demand().value() * factor;
+            p.granted = CpuFraction::new(granted);
+            measured_total += granted;
+            if dt.0 > 0 {
+                if let PePhase::Busy {
+                    ref mut remaining, ..
+                } = p.phase
+                {
+                    // Service progresses at the throttle factor.
+                    let progress = Millis(((dt.0 as f64) * factor).round() as u64);
+                    *remaining = remaining.saturating_sub(progress.max(Millis(1)));
+                }
+            }
+            // Accumulate (cpu·ms, busy·ms) for the report-interval average.
+            if dt.0 > 0 && matches!(p.phase, PePhase::Busy { .. }) {
+                match self.acc_cpu_ms.iter_mut().find(|(id, _, _)| *id == p.id) {
+                    Some((_, cpu, busy)) => {
+                        *cpu += granted * dt.0 as f64;
+                        *busy += dt.0 as f64;
+                    }
+                    None => self
+                        .acc_cpu_ms
+                        .push((p.id, granted * dt.0 as f64, dt.0 as f64)),
+                }
+            }
+        }
+        self.acc_window_ms += dt.0 as f64;
+
+        // 3. Completions.
+        for p in &mut self.pes {
+            if let PePhase::Busy { remaining, .. } = &p.phase {
+                if remaining.0 == 0 {
+                    if let PePhase::Busy { msg, .. } =
+                        std::mem::replace(&mut p.phase, PePhase::Idle { since: now })
+                    {
+                        p.jobs_done += 1;
+                        events.push(WorkerEvent::JobCompleted {
+                            pe: p.id,
+                            msg,
+                            completed_at: now,
+                        });
+                    }
+                }
+            }
+        }
+
+        // 4. Idle self-termination: idle → graceful stop → terminated.
+        let timeout = self.cfg.container_idle_timeout;
+        let stop = self.cfg.container_stop;
+        for p in &mut self.pes {
+            match p.phase {
+                PePhase::Idle { since } => {
+                    if now >= since + timeout && timeout.0 > 0 {
+                        p.phase = PePhase::Stopping { until: now + stop };
+                    }
+                }
+                PePhase::Stopping { until } => {
+                    if now >= until {
+                        p.phase = PePhase::Terminated;
+                        events.push(WorkerEvent::PeTerminated(p.id));
+                    }
+                }
+                _ => {}
+            }
+        }
+        self.pes.retain(|p| p.phase != PePhase::Terminated);
+
+        // 5. Measurement noise (only on the externally observed total).
+        let noise = if self.cfg.measure_noise_std > 0.0 {
+            self.rng.normal_with(0.0, self.cfg.measure_noise_std)
+        } else {
+            0.0
+        };
+        self.last_total_cpu = CpuFraction::new((measured_total + noise).max(0.0));
+
+        // 6. Periodic report.
+        if self.report_timer.fire(now) {
+            events.push(WorkerEvent::Report(self.report(now)));
+            self.acc_cpu_ms.clear();
+            self.acc_window_ms = 0.0;
+        }
+
+        events
+    }
+
+    /// Build the report from busy-time-averaged CPU per PE.
+    fn report(&mut self, now: Millis) -> WorkerReport {
+        let avg_for = |id: PeId, fallback: f64| -> f64 {
+            self.acc_cpu_ms
+                .iter()
+                .find(|(pid, _, _)| *pid == id)
+                .map(|(_, cpu, busy)| cpu / busy.max(1.0))
+                .unwrap_or(fallback)
+        };
+        let pes: Vec<PeStatus> = self
+            .pes
+            .iter()
+            .map(|p| PeStatus {
+                pe: p.id,
+                image: p.image.clone(),
+                state: p.state(),
+                cpu: CpuFraction::new(avg_for(p.id, p.granted.value())),
+            })
+            .collect();
+
+        // Per-image average over that image's PEs (the paper's §V-B3). The
+        // busy-demand estimate only makes sense over PEs that actually
+        // worked in the interval; all-idle intervals report the raw mean
+        // (which the master-side profiler filters below its busy floor).
+        let mut images: Vec<ImageName> = self.pes.iter().map(|p| p.image.clone()).collect();
+        images.sort();
+        images.dedup();
+        let per_image = images
+            .into_iter()
+            .map(|img| {
+                let vals: Vec<f64> = self
+                    .pes
+                    .iter()
+                    .filter(|p| p.image == img)
+                    .map(|p| avg_for(p.id, p.granted.value()))
+                    .collect();
+                let busy: Vec<f64> = vals.iter().copied().filter(|v| *v > 0.02).collect();
+                let pool = if busy.is_empty() { &vals } else { &busy };
+                let mean = pool.iter().sum::<f64>() / pool.len().max(1) as f64;
+                (img, CpuFraction::new(mean))
+            })
+            .collect();
+
+        WorkerReport {
+            worker: self.id,
+            at: now,
+            total_cpu: self.last_total_cpu,
+            per_image,
+            pes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::MessageId;
+
+    fn quiet_cfg() -> WorkerConfig {
+        WorkerConfig {
+            container_boot: Millis(2000),
+            container_boot_jitter: Millis::ZERO,
+            container_idle_timeout: Millis::from_secs(3600), // effectively off
+            container_stop: Millis(500),
+            image_pull: Millis::ZERO,
+            report_interval: Millis::from_secs(1),
+            idle_cpu: CpuFraction::new(0.0),
+            measure_noise_std: 0.0,
+            cores: 8,
+        }
+    }
+
+    fn msg(id: u64, demand_ms: u64) -> StreamMessage {
+        StreamMessage {
+            id: MessageId(id),
+            image: ImageName::new("img"),
+            payload_bytes: 1 << 20,
+            service_demand: Millis(demand_ms),
+            created_at: Millis(0),
+        }
+    }
+
+    fn run_until(w: &mut Worker, from: Millis, to: Millis, dt: Millis) -> Vec<WorkerEvent> {
+        let mut all = Vec::new();
+        let mut t = from;
+        while t <= to {
+            all.extend(w.tick(t));
+            t += dt;
+        }
+        all
+    }
+
+    #[test]
+    fn pe_boots_and_becomes_routable() {
+        let mut w = Worker::new(WorkerId(0), VmId(0), quiet_cfg(), 1);
+        let img = ImageName::new("img");
+        w.start_pe(img.clone(), CpuFraction::new(0.125), Millis(0));
+        assert_eq!(w.find_idle_pe(&img), None);
+        let events = run_until(&mut w, Millis(0), Millis(2500), Millis(100));
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, WorkerEvent::PeReady(_))));
+        assert!(w.find_idle_pe(&img).is_some());
+    }
+
+    #[test]
+    fn job_runs_for_service_time_uncontended() {
+        let mut w = Worker::new(WorkerId(0), VmId(0), quiet_cfg(), 1);
+        let img = ImageName::new("img");
+        let pe = w.start_pe(img.clone(), CpuFraction::new(0.125), Millis(0));
+        run_until(&mut w, Millis(0), Millis(2000), Millis(100));
+        w.deliver(pe, msg(1, 5000), Millis(2000)).unwrap();
+        let events = run_until(&mut w, Millis(2100), Millis(10_000), Millis(100));
+        let done_at = events
+            .iter()
+            .find_map(|e| match e {
+                WorkerEvent::JobCompleted { completed_at, .. } => Some(*completed_at),
+                _ => None,
+            })
+            .expect("job completed");
+        // ~5000ms of service starting at 2000ms -> completes ≈7000ms.
+        assert!(done_at >= Millis(6900) && done_at <= Millis(7300), "{done_at:?}");
+    }
+
+    #[test]
+    fn contention_stretches_service_time() {
+        // Two PEs each demanding 0.8 on one VM -> total 1.6, throttle 0.625:
+        // a 4 s job takes ≈6.4 s.
+        let mut w = Worker::new(WorkerId(0), VmId(0), quiet_cfg(), 1);
+        let img = ImageName::new("img");
+        let a = w.start_pe(img.clone(), CpuFraction::new(0.8), Millis(0));
+        let b = w.start_pe(img.clone(), CpuFraction::new(0.8), Millis(0));
+        run_until(&mut w, Millis(0), Millis(2000), Millis(100));
+        w.deliver(a, msg(1, 4000), Millis(2000)).unwrap();
+        w.deliver(b, msg(2, 4000), Millis(2000)).unwrap();
+        let events = run_until(&mut w, Millis(2100), Millis(12_000), Millis(100));
+        let done: Vec<Millis> = events
+            .iter()
+            .filter_map(|e| match e {
+                WorkerEvent::JobCompleted { completed_at, .. } => Some(*completed_at),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(done.len(), 2);
+        for d in done {
+            assert!(d >= Millis(8200) && d <= Millis(8800), "{d:?}");
+        }
+    }
+
+    #[test]
+    fn measured_cpu_tracks_demand() {
+        let mut w = Worker::new(WorkerId(0), VmId(0), quiet_cfg(), 1);
+        let img = ImageName::new("img");
+        let pe = w.start_pe(img.clone(), CpuFraction::new(0.5), Millis(0));
+        run_until(&mut w, Millis(0), Millis(2000), Millis(100));
+        w.deliver(pe, msg(1, 60_000), Millis(2000)).unwrap();
+        w.tick(Millis(2100));
+        assert!((w.last_total_cpu.value() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_timeout_terminates_pe() {
+        let mut cfg = quiet_cfg();
+        cfg.container_idle_timeout = Millis(1000);
+        let mut w = Worker::new(WorkerId(0), VmId(0), cfg, 1);
+        w.start_pe(ImageName::new("img"), CpuFraction::new(0.1), Millis(0));
+        let events = run_until(&mut w, Millis(0), Millis(4000), Millis(100));
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, WorkerEvent::PeTerminated(_))));
+        assert_eq!(w.pe_count(), 0);
+    }
+
+    #[test]
+    fn deliver_to_busy_pe_returns_message() {
+        let mut w = Worker::new(WorkerId(0), VmId(0), quiet_cfg(), 1);
+        let img = ImageName::new("img");
+        let pe = w.start_pe(img.clone(), CpuFraction::new(0.125), Millis(0));
+        run_until(&mut w, Millis(0), Millis(2000), Millis(100));
+        w.deliver(pe, msg(1, 10_000), Millis(2000)).unwrap();
+        let back = w.deliver(pe, msg(2, 10_000), Millis(2000));
+        assert!(back.is_err());
+        assert_eq!(back.unwrap_err().id, MessageId(2));
+    }
+
+    #[test]
+    fn reports_on_interval_with_per_image_avg() {
+        let mut w = Worker::new(WorkerId(0), VmId(0), quiet_cfg(), 1);
+        let img = ImageName::new("img");
+        let pe = w.start_pe(img.clone(), CpuFraction::new(0.25), Millis(0));
+        run_until(&mut w, Millis(0), Millis(2000), Millis(100));
+        w.deliver(pe, msg(1, 30_000), Millis(2000)).unwrap();
+        let events = run_until(&mut w, Millis(2100), Millis(4000), Millis(100));
+        let reports: Vec<&WorkerReport> = events
+            .iter()
+            .filter_map(|e| match e {
+                WorkerEvent::Report(r) => Some(r),
+                _ => None,
+            })
+            .collect();
+        assert!(reports.len() >= 2);
+        let last = reports.last().unwrap();
+        let (rimg, cpu) = &last.per_image[0];
+        assert_eq!(rimg, &img);
+        assert!((cpu.value() - 0.25).abs() < 0.02, "avg {}", cpu.value());
+    }
+
+    #[test]
+    fn stopping_pe_burns_cleanup_cpu_but_is_unroutable() {
+        let mut cfg = quiet_cfg();
+        cfg.container_idle_timeout = Millis(500);
+        cfg.container_stop = Millis(2000);
+        let mut w = Worker::new(WorkerId(0), VmId(0), cfg, 1);
+        let img = ImageName::new("img");
+        w.start_pe(img.clone(), CpuFraction::new(0.4), Millis(0));
+        run_until(&mut w, Millis(0), Millis(2000), Millis(100));
+        assert!(w.find_idle_pe(&img).is_some());
+        // Idle past the timeout → Stopping: no longer routable, but the
+        // cleanup CPU (half busy demand) is still measured.
+        run_until(&mut w, Millis(2100), Millis(2700), Millis(100));
+        assert!(w.find_idle_pe(&img).is_none(), "stopping PE unroutable");
+        assert_eq!(w.pe_count(), 1, "still winding down");
+        assert!(
+            (w.last_total_cpu.value() - 0.2).abs() < 1e-9,
+            "cleanup cpu measured: {}",
+            w.last_total_cpu.value()
+        );
+        // After the stop latency it is gone.
+        run_until(&mut w, Millis(2800), Millis(5200), Millis(100));
+        assert_eq!(w.pe_count(), 0);
+    }
+
+    #[test]
+    fn image_pull_delays_first_boot() {
+        let mut w = Worker::new(WorkerId(0), VmId(0), quiet_cfg(), 1);
+        let img = ImageName::new("img");
+        // Cold start: 2 s boot + 10 s pull.
+        w.start_pe_with_pull(img.clone(), CpuFraction::new(0.1), Millis(0), Millis(10_000));
+        let events = run_until(&mut w, Millis(0), Millis(11_000), Millis(100));
+        let ready_at = events.iter().find_map(|e| match e {
+            WorkerEvent::PeReady(_) => Some(()),
+            _ => None,
+        });
+        assert!(ready_at.is_none() || w.pes()[0].state() != crate::protocol::PeState::Booting);
+        // It must not have been ready before ~12 s.
+        let early: Vec<&WorkerEvent> = events
+            .iter()
+            .filter(|e| matches!(e, WorkerEvent::PeReady(_)))
+            .collect();
+        assert!(early.is_empty(), "pull must delay readiness past 11 s");
+        let events = run_until(&mut w, Millis(11_100), Millis(13_000), Millis(100));
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, WorkerEvent::PeReady(_))));
+    }
+
+    #[test]
+    fn pe_ids_unique_across_workers() {
+        let mut w0 = Worker::new(WorkerId(0), VmId(0), quiet_cfg(), 1);
+        let mut w1 = Worker::new(WorkerId(1), VmId(1), quiet_cfg(), 2);
+        let a = w0.start_pe(ImageName::new("img"), CpuFraction::new(0.1), Millis(0));
+        let b = w1.start_pe(ImageName::new("img"), CpuFraction::new(0.1), Millis(0));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn stop_pe_removes_after_tick() {
+        let mut w = Worker::new(WorkerId(0), VmId(0), quiet_cfg(), 1);
+        let pe = w.start_pe(ImageName::new("img"), CpuFraction::new(0.1), Millis(0));
+        w.tick(Millis(0));
+        assert!(w.stop_pe(pe));
+        // Graceful stop: the container winds down for container_stop
+        // (500 ms in quiet_cfg) before it disappears.
+        w.tick(Millis(100));
+        assert_eq!(w.pe_count(), 1, "still stopping");
+        w.tick(Millis(700));
+        assert_eq!(w.pe_count(), 0);
+        assert!(!w.stop_pe(pe), "already gone");
+    }
+}

@@ -1,0 +1,169 @@
+//! Processing Engine (PE): the containerized unit of processing.
+//!
+//! A PE hosts the user's analysis container (here: the AOT-compiled nuclei
+//! pipeline or the synthetic busy kernel). Lifecycle mirrors Docker
+//! containers in the paper: a start latency (pull/boot), an idle state
+//! accepting at most one message at a time, and graceful self-termination
+//! after a configurable idle timeout ("After a time of being idle, a PE
+//! will self-terminate gracefully in order to free the resources").
+
+use crate::protocol::PeState;
+use crate::types::{CpuFraction, ImageName, Millis, PeId, StreamMessage};
+
+/// Internal PE lifecycle (richer than the reported [`PeState`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum PePhase {
+    Booting {
+        ready_at: Millis,
+    },
+    Idle {
+        since: Millis,
+    },
+    Busy {
+        msg: StreamMessage,
+        /// Remaining service time at full CPU allocation.
+        remaining: Millis,
+        started_at: Millis,
+    },
+    /// Graceful self-termination in progress (docker stop latency).
+    Stopping {
+        until: Millis,
+    },
+    Terminated,
+}
+
+/// One processing engine.
+#[derive(Clone, Debug)]
+pub struct ProcessingEngine {
+    pub id: PeId,
+    pub image: ImageName,
+    /// CPU fraction of the *whole VM* the PE demands while busy (a
+    /// single-core container on an 8-core worker demands 0.125).
+    pub busy_demand: CpuFraction,
+    /// Background CPU while idle (container overhead).
+    pub idle_cpu: CpuFraction,
+    pub phase: PePhase,
+    pub jobs_done: u64,
+    /// CPU actually granted in the last tick (set by the worker's
+    /// contention model; what the profiler measures).
+    pub granted: CpuFraction,
+}
+
+impl ProcessingEngine {
+    pub fn new(
+        id: PeId,
+        image: ImageName,
+        busy_demand: CpuFraction,
+        idle_cpu: CpuFraction,
+        now: Millis,
+        boot_delay: Millis,
+    ) -> Self {
+        ProcessingEngine {
+            id,
+            image,
+            busy_demand,
+            idle_cpu,
+            phase: PePhase::Booting {
+                ready_at: now + boot_delay,
+            },
+            jobs_done: 0,
+            granted: CpuFraction::ZERO,
+        }
+    }
+
+    pub fn state(&self) -> PeState {
+        match self.phase {
+            PePhase::Booting { .. } => PeState::Booting,
+            PePhase::Idle { .. } => PeState::Idle,
+            PePhase::Busy { .. } => PeState::Busy,
+            PePhase::Stopping { .. } => PeState::Stopping,
+            PePhase::Terminated => PeState::Terminated,
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        matches!(self.phase, PePhase::Idle { .. })
+    }
+
+    /// CPU demand in the current phase (input to the contention model).
+    /// A stopping container still burns cleanup CPU (about half its busy
+    /// demand) while it flushes and exits — the source of the paper's
+    /// negative error dips when idle PEs terminate in bursts.
+    pub fn demand(&self) -> CpuFraction {
+        match self.phase {
+            PePhase::Busy { .. } => self.busy_demand,
+            PePhase::Idle { .. } => self.idle_cpu,
+            PePhase::Stopping { .. } => CpuFraction::new(self.busy_demand.value() * 0.5),
+            _ => CpuFraction::ZERO,
+        }
+    }
+
+    /// Accept a message (only valid when idle).
+    pub fn deliver(&mut self, msg: StreamMessage, now: Millis) -> Result<(), StreamMessage> {
+        if self.is_idle() {
+            self.phase = PePhase::Busy {
+                remaining: msg.service_demand,
+                msg,
+                started_at: now,
+            };
+            Ok(())
+        } else {
+            Err(msg)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::MessageId;
+
+    fn msg(demand_ms: u64) -> StreamMessage {
+        StreamMessage {
+            id: MessageId(0),
+            image: ImageName::new("img"),
+            payload_bytes: 1024,
+            service_demand: Millis(demand_ms),
+            created_at: Millis(0),
+        }
+    }
+
+    fn pe(now: Millis) -> ProcessingEngine {
+        ProcessingEngine::new(
+            PeId(1),
+            ImageName::new("img"),
+            CpuFraction::new(0.125),
+            CpuFraction::new(0.004),
+            now,
+            Millis(2000),
+        )
+    }
+
+    #[test]
+    fn boots_then_idle_demand() {
+        let p = pe(Millis(0));
+        assert_eq!(p.state(), PeState::Booting);
+        assert_eq!(p.demand().value(), 0.0);
+    }
+
+    #[test]
+    fn deliver_only_when_idle() {
+        let mut p = pe(Millis(0));
+        assert!(p.deliver(msg(1000), Millis(0)).is_err(), "booting rejects");
+        p.phase = PePhase::Idle { since: Millis(2000) };
+        assert!(p.deliver(msg(1000), Millis(2000)).is_ok());
+        assert_eq!(p.state(), PeState::Busy);
+        assert!(p.deliver(msg(1000), Millis(2100)).is_err(), "busy rejects");
+    }
+
+    #[test]
+    fn demand_by_phase() {
+        let mut p = pe(Millis(0));
+        p.phase = PePhase::Idle { since: Millis(0) };
+        assert_eq!(p.demand().value(), 0.004);
+        p.deliver(msg(500), Millis(0)).unwrap();
+        assert_eq!(p.demand().value(), 0.125);
+        p.phase = PePhase::Terminated;
+        assert_eq!(p.demand().value(), 0.0);
+    }
+}

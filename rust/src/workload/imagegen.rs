@@ -1,0 +1,128 @@
+//! Fluorescence-microscopy image synthesizer (rust twin of
+//! `python/compile/model.py::generate_image`).
+//!
+//! Generates the pixel payloads for the real-PJRT end-to-end example:
+//! Hoechst-stained nuclei are Gaussian blobs on a dark background with
+//! additive sensor noise, seeded "at 6 different densities across a
+//! plate" like the paper's Huh-7 dataset.
+
+use crate::util::rng::Rng;
+
+/// Image synthesizer.
+pub struct ImageGen {
+    rng: Rng,
+    pub size: usize,
+    pub nucleus_sigma: f64,
+    pub noise: f64,
+}
+
+/// The six seeding densities (nuclei per field of view), mirroring the
+/// paper's plate layout.
+pub const SEEDING_DENSITIES: [usize; 6] = [5, 10, 20, 35, 55, 80];
+
+impl ImageGen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        ImageGen {
+            rng: Rng::seeded(seed),
+            size,
+            nucleus_sigma: 2.5,
+            noise: 0.02,
+        }
+    }
+
+    /// Generate one field of view with `n_nuclei` planted nuclei.
+    /// Returns row-major f32 pixels in `[0, +)`.
+    pub fn generate(&mut self, n_nuclei: usize) -> Vec<f32> {
+        let s = self.size;
+        let mut img = vec![0f32; s * s];
+        let lo = 0.1 * s as f64;
+        let hi = 0.9 * s as f64;
+        let two_sigma2 = 2.0 * self.nucleus_sigma * self.nucleus_sigma;
+        // Render each blob only inside its 4-sigma bounding box: O(n·k²).
+        let radius = (4.0 * self.nucleus_sigma).ceil() as i64;
+        for _ in 0..n_nuclei {
+            let cy = self.rng.uniform(lo, hi);
+            let cx = self.rng.uniform(lo, hi);
+            let amp = self.rng.uniform(0.6, 1.0);
+            let y0 = ((cy as i64) - radius).max(0);
+            let y1 = ((cy as i64) + radius + 1).min(s as i64);
+            let x0 = ((cx as i64) - radius).max(0);
+            let x1 = ((cx as i64) + radius + 1).min(s as i64);
+            for y in y0..y1 {
+                for x in x0..x1 {
+                    let dy = y as f64 - cy;
+                    let dx = x as f64 - cx;
+                    let v = amp * (-(dy * dy + dx * dx) / two_sigma2).exp();
+                    img[y as usize * s + x as usize] += v as f32;
+                }
+            }
+        }
+        for px in &mut img {
+            let n = self.rng.normal_with(0.0, self.noise);
+            *px = (*px + n as f32).max(0.0);
+        }
+        img
+    }
+
+    /// Generate a plate of images cycling through the seeding densities.
+    pub fn plate(&mut self, n_images: usize) -> Vec<(usize, Vec<f32>)> {
+        (0..n_images)
+            .map(|i| {
+                let density = SEEDING_DENSITIES[i % SEEDING_DENSITIES.len()];
+                (density, self.generate(density))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_dimensions_and_range() {
+        let mut g = ImageGen::new(0, 64);
+        let img = g.generate(10);
+        assert_eq!(img.len(), 64 * 64);
+        assert!(img.iter().all(|&v| v >= 0.0));
+        assert!(img.iter().any(|&v| v > 0.3), "blobs visible");
+    }
+
+    #[test]
+    fn more_nuclei_more_signal() {
+        let mut g1 = ImageGen::new(3, 96);
+        let lo: f32 = g1.generate(5).iter().sum();
+        let mut g2 = ImageGen::new(3, 96);
+        let hi: f32 = g2.generate(60).iter().sum();
+        assert!(hi > lo * 2.0, "hi={hi} lo={lo}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = ImageGen::new(9, 32).generate(8);
+        let b = ImageGen::new(9, 32).generate(8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn plate_cycles_densities() {
+        let mut g = ImageGen::new(1, 32);
+        let plate = g.plate(12);
+        assert_eq!(plate.len(), 12);
+        assert_eq!(plate[0].0, SEEDING_DENSITIES[0]);
+        assert_eq!(plate[6].0, SEEDING_DENSITIES[0]);
+        assert_eq!(plate[5].0, SEEDING_DENSITIES[5]);
+    }
+
+    #[test]
+    fn blobs_confined_to_interior() {
+        // Centers live in [0.1, 0.9]·size; the extreme border rows should
+        // carry only noise.
+        let mut g = ImageGen::new(5, 64);
+        let img = g.generate(40);
+        let border_max = (0..64)
+            .map(|x| img[x])
+            .fold(0f32, f32::max);
+        assert!(border_max < 0.3, "border {border_max}");
+    }
+}

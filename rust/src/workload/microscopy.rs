@@ -1,0 +1,170 @@
+//! The quantitative-microscopy workload (paper §VI-B).
+//!
+//! "The data provided by AstraZeneca consists of a set of microscopy
+//! images [...] Due to variations in the images they take varying amounts
+//! of time to process, and the dataset includes a total of 767 images."
+//! Per-image CellProfiler cost is 10–20 s (§VI-B1). The entire collection
+//! is streamed as a single batch; across the 10 experiment runs "the
+//! streaming order of the images was randomized".
+//!
+//! We synthesize a fixed dataset of 767 images (deterministic per-image
+//! costs and sizes from the dataset seed) and shuffle the order per run —
+//! exactly the paper's protocol, minus the proprietary pixels (the real
+//! pixel path is exercised by the PJRT end-to-end example, which generates
+//! fluorescence-like images via [`ImageGen`](crate::workload::ImageGen)).
+
+use crate::sim::Arrival;
+use crate::types::{ImageName, Millis};
+use crate::util::rng::Rng;
+use crate::workload::Trace;
+
+/// Dataset configuration.
+#[derive(Clone, Debug)]
+pub struct MicroscopyConfig {
+    pub n_images: usize,
+    /// Per-image processing time band (the paper's "10-20 seconds").
+    pub min_cost: Millis,
+    pub max_cost: Millis,
+    /// Log-normal spread within the band (heavier middle, thin tails).
+    pub sigma: f64,
+    /// Image payload sizes ("order MB").
+    pub min_bytes: u64,
+    pub max_bytes: u64,
+    /// Streaming rate of the single batch (connector-side; messages/s).
+    /// The whole collection is sent as fast as the connector can push.
+    pub stream_rate_per_sec: f64,
+    /// Dataset seed (fixes per-image costs across runs).
+    pub dataset_seed: u64,
+}
+
+impl Default for MicroscopyConfig {
+    fn default() -> Self {
+        MicroscopyConfig {
+            n_images: 767,
+            min_cost: Millis::from_secs(10),
+            max_cost: Millis::from_secs(20),
+            sigma: 0.25,
+            min_bytes: 2 << 20,
+            max_bytes: 8 << 20,
+            stream_rate_per_sec: 50.0,
+            dataset_seed: 2020,
+        }
+    }
+}
+
+/// The container image every microscopy message requires.
+pub fn cellprofiler_image() -> ImageName {
+    ImageName::new("cellprofiler:3.1.9")
+}
+
+/// The materialized dataset: per-image fixed properties.
+#[derive(Clone, Debug)]
+pub struct MicroscopyTrace {
+    pub cfg: MicroscopyConfig,
+    /// (cost, payload_bytes) per image, index = image id in the dataset.
+    pub images: Vec<(Millis, u64)>,
+}
+
+impl MicroscopyTrace {
+    /// Build the dataset (deterministic in `cfg.dataset_seed`).
+    pub fn new(cfg: MicroscopyConfig) -> Self {
+        let mut rng = Rng::seeded(cfg.dataset_seed);
+        let mid = (cfg.min_cost.0 + cfg.max_cost.0) as f64 / 2.0;
+        let images = (0..cfg.n_images)
+            .map(|_| {
+                let cost = rng
+                    .lognormal(mid, cfg.sigma)
+                    .clamp(cfg.min_cost.0 as f64, cfg.max_cost.0 as f64);
+                let bytes = rng.range(cfg.min_bytes, cfg.max_bytes);
+                (Millis(cost as u64), bytes)
+            })
+            .collect();
+        MicroscopyTrace { cfg, images }
+    }
+
+    /// Mean per-image cost (calibration metric recorded in EXPERIMENTS.md).
+    pub fn mean_cost(&self) -> Millis {
+        let total: u64 = self.images.iter().map(|(c, _)| c.0).sum();
+        Millis(total / self.images.len().max(1) as u64)
+    }
+
+    /// The single-batch trace for one run: image order shuffled by
+    /// `run_seed`, streamed at the configured connector rate.
+    pub fn run_trace(&self, run_seed: u64) -> Trace {
+        let mut order: Vec<usize> = (0..self.images.len()).collect();
+        let mut rng = Rng::seeded(self.cfg.dataset_seed ^ run_seed.wrapping_mul(0xA5A5));
+        rng.shuffle(&mut order);
+        let gap_ms = 1000.0 / self.cfg.stream_rate_per_sec;
+        let image = cellprofiler_image();
+        let arrivals = order
+            .iter()
+            .enumerate()
+            .map(|(pos, &idx)| {
+                let (cost, bytes) = self.images[idx];
+                (
+                    Millis((pos as f64 * gap_ms) as u64),
+                    Arrival {
+                        image: image.clone(),
+                        payload_bytes: bytes,
+                        service_demand: cost,
+                    },
+                )
+            })
+            .collect();
+        Trace { arrivals }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_is_767_images_in_band() {
+        let t = MicroscopyTrace::new(MicroscopyConfig::default());
+        assert_eq!(t.images.len(), 767);
+        for (cost, bytes) in &t.images {
+            assert!(*cost >= Millis::from_secs(10) && *cost <= Millis::from_secs(20));
+            assert!(*bytes >= 2 << 20 && *bytes <= 8 << 20);
+        }
+    }
+
+    #[test]
+    fn costs_vary() {
+        let t = MicroscopyTrace::new(MicroscopyConfig::default());
+        let min = t.images.iter().map(|(c, _)| c.0).min().unwrap();
+        let max = t.images.iter().map(|(c, _)| c.0).max().unwrap();
+        assert!(max > min + 3000, "spread {min}..{max}");
+    }
+
+    #[test]
+    fn dataset_fixed_across_runs_order_shuffled() {
+        let t = MicroscopyTrace::new(MicroscopyConfig::default());
+        let r1 = t.run_trace(1);
+        let r2 = t.run_trace(2);
+        // Same multiset of costs…
+        let mut c1: Vec<u64> = r1.arrivals.iter().map(|(_, a)| a.service_demand.0).collect();
+        let mut c2: Vec<u64> = r2.arrivals.iter().map(|(_, a)| a.service_demand.0).collect();
+        let in_order_equal = c1 == c2;
+        c1.sort();
+        c2.sort();
+        assert_eq!(c1, c2, "same dataset");
+        assert!(!in_order_equal, "different order across runs");
+    }
+
+    #[test]
+    fn single_batch_streams_fast() {
+        let t = MicroscopyTrace::new(MicroscopyConfig::default());
+        let trace = t.run_trace(0);
+        // 767 images at 50/s -> whole batch within ~16 s.
+        assert!(trace.end() <= Millis::from_secs(16));
+        assert_eq!(trace.len(), 767);
+    }
+
+    #[test]
+    fn mean_cost_in_band() {
+        let t = MicroscopyTrace::new(MicroscopyConfig::default());
+        let mean = t.mean_cost();
+        assert!(mean >= Millis::from_secs(12) && mean <= Millis::from_secs(18));
+    }
+}

@@ -1,0 +1,82 @@
+//! Workload generators for the paper's two evaluations plus the image
+//! synthesizer used by the real-PJRT end-to-end example.
+
+pub mod imagegen;
+pub mod microscopy;
+pub mod synthetic;
+
+pub use imagegen::ImageGen;
+pub use microscopy::{MicroscopyConfig, MicroscopyTrace};
+pub use synthetic::{SyntheticConfig, SyntheticWorkload};
+
+use crate::sim::Arrival;
+use crate::types::Millis;
+
+/// A fully materialized workload trace: time-stamped arrivals.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub arrivals: Vec<(Millis, Arrival)>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    /// Last arrival time.
+    pub fn end(&self) -> Millis {
+        self.arrivals
+            .iter()
+            .map(|(t, _)| *t)
+            .max()
+            .unwrap_or(Millis::ZERO)
+    }
+
+    /// Total service demand across all arrivals (lower-bounds the makespan
+    /// given the cluster's core count).
+    pub fn total_demand(&self) -> Millis {
+        Millis(self.arrivals.iter().map(|(_, a)| a.service_demand.0).sum())
+    }
+
+    /// Feed every arrival into a simulated cluster.
+    pub fn schedule_into(&self, cluster: &mut crate::sim::SimCluster) {
+        for (t, a) in &self.arrivals {
+            cluster.schedule_arrival(*t, a.clone());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::ImageName;
+
+    #[test]
+    fn trace_accessors() {
+        let mut trace = Trace::default();
+        assert!(trace.is_empty());
+        trace.arrivals.push((
+            Millis(100),
+            Arrival {
+                image: ImageName::new("x"),
+                payload_bytes: 1,
+                service_demand: Millis(500),
+            },
+        ));
+        trace.arrivals.push((
+            Millis(50),
+            Arrival {
+                image: ImageName::new("x"),
+                payload_bytes: 1,
+                service_demand: Millis(700),
+            },
+        ));
+        assert_eq!(trace.len(), 2);
+        assert_eq!(trace.end(), Millis(100));
+        assert_eq!(trace.total_demand(), Millis(1200));
+    }
+}

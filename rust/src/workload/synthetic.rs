@@ -1,0 +1,192 @@
+//! Synthetic workloads (paper §VI-A).
+//!
+//! "The IRM was tasked with profiling and scheduling workloads based on
+//! busying the CPU for specified usage levels and durations [...] The main
+//! scenario [...] included four different workloads all targeting 100 %
+//! CPU utilization for various amounts of time. These were streamed in
+//! regular small batches of jobs and two peaks of large batches to
+//! introduce different levels of intensity in pressure to the IRM."
+
+use crate::sim::Arrival;
+use crate::types::{ImageName, Millis};
+use crate::util::rng::Rng;
+use crate::workload::Trace;
+
+/// Configuration of the §VI-A scenario.
+#[derive(Clone, Debug)]
+pub struct SyntheticConfig {
+    /// Experiment horizon over which batches arrive.
+    pub horizon: Millis,
+    /// The four workload durations (each "targets 100 % of a core").
+    pub durations: [Millis; 4],
+    /// Cadence of the regular small batches.
+    pub small_batch_interval: Millis,
+    /// Jobs per small batch (min..=max).
+    pub small_batch_jobs: (usize, usize),
+    /// The two large peaks: times as fractions of the horizon.
+    pub peak_at: [f64; 2],
+    /// Jobs per large peak.
+    pub peak_jobs: usize,
+    pub seed: u64,
+}
+
+impl Default for SyntheticConfig {
+    fn default() -> Self {
+        SyntheticConfig {
+            horizon: Millis::from_secs(1500),
+            durations: [
+                Millis::from_secs(10),
+                Millis::from_secs(20),
+                Millis::from_secs(40),
+                Millis::from_secs(80),
+            ],
+            small_batch_interval: Millis::from_secs(60),
+            small_batch_jobs: (3, 8),
+            peak_at: [0.3, 0.65],
+            peak_jobs: 48,
+            seed: 7,
+        }
+    }
+}
+
+/// Generator for the synthetic scenario.
+pub struct SyntheticWorkload {
+    pub cfg: SyntheticConfig,
+}
+
+impl SyntheticWorkload {
+    pub fn new(cfg: SyntheticConfig) -> Self {
+        SyntheticWorkload { cfg }
+    }
+
+    /// The four container images (one per workload class).
+    pub fn images() -> [ImageName; 4] {
+        [
+            ImageName::new("busy-10s"),
+            ImageName::new("busy-20s"),
+            ImageName::new("busy-40s"),
+            ImageName::new("busy-80s"),
+        ]
+    }
+
+    /// Materialize the arrival trace.
+    pub fn trace(&self) -> Trace {
+        let mut rng = Rng::seeded(self.cfg.seed);
+        let images = Self::images();
+        let mut arrivals = Vec::new();
+
+        let push_job = |arrivals: &mut Vec<(Millis, Arrival)>, at: Millis, rng: &mut Rng| {
+            let class = rng.below(4) as usize;
+            // Small jitter on the nominal duration (real jobs vary).
+            let nominal = self.cfg.durations[class].0 as f64;
+            let jitter = rng.uniform(0.9, 1.1);
+            arrivals.push((
+                at,
+                Arrival {
+                    image: images[class].clone(),
+                    payload_bytes: rng.range(64 << 10, 1 << 20),
+                    service_demand: Millis((nominal * jitter) as u64),
+                },
+            ));
+        };
+
+        // Regular small batches.
+        let mut t = Millis::ZERO;
+        while t <= self.cfg.horizon {
+            let n = rng.range(
+                self.cfg.small_batch_jobs.0 as u64,
+                self.cfg.small_batch_jobs.1 as u64,
+            ) as usize;
+            for _ in 0..n {
+                // Spread jobs a little inside the batch window.
+                let offset = Millis(rng.range(0, 2000));
+                push_job(&mut arrivals, t + offset, &mut rng);
+            }
+            t += self.cfg.small_batch_interval;
+        }
+
+        // Two large peaks.
+        for frac in self.cfg.peak_at {
+            let at = Millis((self.cfg.horizon.0 as f64 * frac) as u64);
+            for _ in 0..self.cfg.peak_jobs {
+                let offset = Millis(rng.range(0, 4000));
+                push_job(&mut arrivals, at + offset, &mut rng);
+            }
+        }
+
+        arrivals.sort_by_key(|(t, _)| *t);
+        Trace { arrivals }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_has_batches_and_peaks() {
+        let wl = SyntheticWorkload::new(SyntheticConfig::default());
+        let trace = wl.trace();
+        let cfg = &wl.cfg;
+        let n_batches = (cfg.horizon.0 / cfg.small_batch_interval.0 + 1) as usize;
+        let min_expected = n_batches * cfg.small_batch_jobs.0 + 2 * cfg.peak_jobs;
+        assert!(
+            trace.len() >= min_expected,
+            "{} < {min_expected}",
+            trace.len()
+        );
+        // Peaks: count arrivals in the peak windows vs a quiet window.
+        let count_in = |lo: f64, hi: f64| {
+            trace
+                .arrivals
+                .iter()
+                .filter(|(t, _)| {
+                    let f = t.0 as f64 / cfg.horizon.0 as f64;
+                    f >= lo && f < hi
+                })
+                .count()
+        };
+        let peak0 = count_in(0.29, 0.33);
+        let quiet = count_in(0.45, 0.49);
+        assert!(peak0 > quiet * 3, "peak {peak0} vs quiet {quiet}");
+    }
+
+    #[test]
+    fn all_four_classes_present() {
+        let trace = SyntheticWorkload::new(SyntheticConfig::default()).trace();
+        for img in SyntheticWorkload::images() {
+            assert!(
+                trace.arrivals.iter().any(|(_, a)| a.image == img),
+                "missing {img}"
+            );
+        }
+    }
+
+    #[test]
+    fn durations_near_nominal() {
+        let trace = SyntheticWorkload::new(SyntheticConfig::default()).trace();
+        for (_, a) in &trace.arrivals {
+            let nominal = match a.image.as_str() {
+                "busy-10s" => 10_000.0,
+                "busy-20s" => 20_000.0,
+                "busy-40s" => 40_000.0,
+                "busy-80s" => 80_000.0,
+                other => panic!("unexpected image {other}"),
+            };
+            let d = a.service_demand.0 as f64;
+            assert!(d >= nominal * 0.9 - 1.0 && d <= nominal * 1.1 + 1.0, "{d}");
+        }
+    }
+
+    #[test]
+    fn sorted_by_time_and_deterministic() {
+        let t1 = SyntheticWorkload::new(SyntheticConfig::default()).trace();
+        let t2 = SyntheticWorkload::new(SyntheticConfig::default()).trace();
+        assert!(t1.arrivals.windows(2).all(|w| w[0].0 <= w[1].0));
+        assert_eq!(t1.len(), t2.len());
+        for (a, b) in t1.arrivals.iter().zip(t2.arrivals.iter()) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1.service_demand, b.1.service_demand);
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Failure injection: worker crashes mid-run must not lose messages, and
+//! the IRM must restore capacity (the paper's reliability premise —
+//! "recovery from failures" is table stakes for streaming frameworks).
+
+use harmonicio::cloud::CloudConfig;
+use harmonicio::experiments::microscopy;
+use harmonicio::sim::{Arrival, ClusterConfig, SimCluster};
+use harmonicio::types::{ImageName, Millis, WorkerId};
+use harmonicio::util::rng::Rng;
+use harmonicio::worker::WorkerConfig;
+
+fn fast_cluster(quota: usize) -> SimCluster {
+    let mut cfg: ClusterConfig = microscopy::cluster_config(99);
+    cfg.cloud = CloudConfig {
+        quota,
+        boot_delay: Millis::from_secs(8),
+        boot_jitter: Millis(2000),
+        ..CloudConfig::default()
+    };
+    cfg.worker = WorkerConfig {
+        container_boot: Millis(2000),
+        container_boot_jitter: Millis(500),
+        container_idle_timeout: Millis::from_secs(5),
+        image_pull: Millis::ZERO,
+        measure_noise_std: 0.0,
+        ..WorkerConfig::default()
+    };
+    SimCluster::new(cfg)
+}
+
+fn burst(c: &mut SimCluster, n: usize, demand_s: u64) {
+    for _ in 0..n {
+        c.schedule_arrival(
+            Millis(0),
+            Arrival {
+                image: ImageName::new("cellprofiler:3.1.9"),
+                payload_bytes: 4 << 20,
+                service_demand: Millis::from_secs(demand_s),
+            },
+        );
+    }
+}
+
+#[test]
+fn single_worker_crash_loses_nothing() {
+    let mut c = fast_cluster(4);
+    burst(&mut c, 80, 10);
+    // Let the cluster ramp up and get busy.
+    c.run_until(Millis::from_secs(60));
+    assert!(!c.workers().is_empty());
+    let victim = c.workers()[0].id;
+    assert!(c.fail_worker(victim));
+    assert_eq!(
+        c.accounted_messages(),
+        80,
+        "crash must not lose messages"
+    );
+    // Everything still completes.
+    let makespan = c.run_to_completion(80, Millis::from_secs(2000));
+    assert!(makespan.is_some(), "all 80 messages completed after crash");
+}
+
+#[test]
+fn repeated_random_crashes_still_drain() {
+    let mut c = fast_cluster(4);
+    burst(&mut c, 60, 8);
+    let mut rng = Rng::seeded(7);
+    let mut t = Millis::ZERO;
+    let mut crashes = 0;
+    // Crash a random worker every ~30 s of sim time, five times.
+    for _ in 0..5 {
+        t = t + Millis::from_secs(30);
+        c.run_until(t);
+        let ids: Vec<WorkerId> = c.workers().iter().map(|w| w.id).collect();
+        if !ids.is_empty() {
+            let victim = ids[rng.below(ids.len() as u64) as usize];
+            if c.fail_worker(victim) {
+                crashes += 1;
+            }
+            assert_eq!(c.accounted_messages(), 60, "conservation after crash");
+        }
+    }
+    assert!(crashes >= 3, "chaos actually happened ({crashes})");
+    let makespan = c.run_to_completion(60, Millis::from_secs(4000));
+    assert!(makespan.is_some(), "drained despite {crashes} crashes");
+}
+
+#[test]
+fn autoscaler_replaces_failed_capacity() {
+    let mut c = fast_cluster(3);
+    // Enough work that the backlog is still deep when we crash a worker.
+    burst(&mut c, 200, 20);
+    c.run_until(Millis::from_secs(60));
+    let before = c.workers().len();
+    assert!(before >= 2);
+    assert!(c.master.backlog_len() > 0, "still under pressure");
+    let victim = c.workers()[before - 1].id;
+    c.fail_worker(victim);
+    // With backlog pressure the IRM must bring a replacement up.
+    c.run_until(Millis::from_secs(110));
+    assert!(
+        c.workers().len() >= before,
+        "capacity restored: {} -> {}",
+        before,
+        c.workers().len()
+    );
+}
+
+#[test]
+fn failing_unknown_worker_is_noop() {
+    let mut c = fast_cluster(2);
+    assert!(!c.fail_worker(WorkerId(99)));
+}

@@ -1,0 +1,63 @@
+//! Distributed-mode integration: the live cluster served over TCP, a
+//! stream-connector client talking the JSON wire protocol from another
+//! thread (the `repro serve` / `repro stream` path).
+
+use std::sync::{Arc, Mutex};
+
+use harmonicio::master::{LiveCluster, LiveConfig};
+use harmonicio::transport;
+use harmonicio::util::json::Json;
+use harmonicio::workload::ImageGen;
+
+#[test]
+fn serve_analyze_and_status_over_tcp() {
+    let cluster = match LiveCluster::new(
+        "artifacts",
+        LiveConfig {
+            max_pes: 2,
+            initial_pes: 1,
+            scale_up_backlog_per_pe: 2,
+        },
+    ) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("skipping tcp test: {e:#}");
+            return;
+        }
+    };
+    let cluster = Arc::new(Mutex::new(cluster));
+    let server = LiveCluster::serve(cluster, "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+
+    // Analyze one image end to end through the wire protocol.
+    let mut gen = ImageGen::new(5, 128);
+    let planted = 20;
+    let pixels = gen.generate(planted);
+    let req = Json::obj([
+        ("type", Json::str("analyze")),
+        (
+            "pixels",
+            Json::arr(pixels.iter().map(|p| Json::num(*p as f64))),
+        ),
+    ]);
+    let resp = transport::call(addr, &req).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{resp}");
+    let features = resp.get("features").unwrap().as_arr().unwrap();
+    assert_eq!(features.len(), 4);
+    let count = features[0].as_f64().unwrap();
+    assert!(
+        count >= planted as f64 * 0.5 && count <= planted as f64 * 1.5 + 2.0,
+        "planted {planted}, counted {count}"
+    );
+
+    // Status endpoint.
+    let status = transport::call(addr, &Json::obj([("type", Json::str("status"))])).unwrap();
+    assert_eq!(status.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(status.get("completed").and_then(|v| v.as_u64()), Some(1));
+
+    // Unknown request type is rejected, not a crash.
+    let bad = transport::call(addr, &Json::obj([("type", Json::str("nope"))])).unwrap();
+    assert_eq!(bad.get("ok").and_then(|v| v.as_bool()), Some(false));
+
+    server.shutdown();
+}

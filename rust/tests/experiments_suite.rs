@@ -1,0 +1,54 @@
+//! The whole figure suite as an integration test: every experiment's shape
+//! checks must pass at the default seed (the same gate `repro experiment
+//! all` enforces).
+
+#[test]
+fn all_figures_reproduce_with_passing_checks() {
+    let out = std::env::temp_dir().join("hio_experiments_suite");
+    std::fs::create_dir_all(&out).unwrap();
+    let reports =
+        harmonicio::experiments::run("all", out.to_str().unwrap(), 42).expect("suite runs");
+    assert_eq!(reports.len(), 12, "all 12 experiments ran");
+    let mut failed = Vec::new();
+    for r in &reports {
+        for c in &r.checks {
+            if !c.passed {
+                failed.push(format!("{} :: {} ({})", r.title, c.name, c.detail));
+            }
+        }
+    }
+    assert!(failed.is_empty(), "failing checks:\n{}", failed.join("\n"));
+
+    // Every figure CSV must exist and be non-trivial.
+    for fig in [
+        "fig3.csv",
+        "fig4.csv",
+        "fig5.csv",
+        "fig7.csv",
+        "fig8.csv",
+        "fig9.csv",
+        "fig10.csv",
+        "headline.csv",
+        "warmup.csv",
+        "ablation_packer.csv",
+        "ablation_buffer.csv",
+        "ablation_profiler.csv",
+    ] {
+        let path = out.join(fig);
+        let meta = std::fs::metadata(&path).unwrap_or_else(|_| panic!("{fig} missing"));
+        assert!(meta.len() > 40, "{fig} too small ({} bytes)", meta.len());
+    }
+}
+
+#[test]
+fn figures_are_deterministic_per_seed() {
+    let out_a = std::env::temp_dir().join("hio_exp_det_a");
+    let out_b = std::env::temp_dir().join("hio_exp_det_b");
+    for out in [&out_a, &out_b] {
+        std::fs::create_dir_all(out).unwrap();
+        harmonicio::experiments::run("fig5", out.to_str().unwrap(), 7).unwrap();
+    }
+    let a = std::fs::read_to_string(out_a.join("fig5.csv")).unwrap();
+    let b = std::fs::read_to_string(out_b.join("fig5.csv")).unwrap();
+    assert_eq!(a, b, "same seed → identical figure data");
+}

@@ -1,0 +1,77 @@
+//! Live-cluster end-to-end: real PE threads, real PJRT executions, the
+//! master's route/backlog logic, and queue-pressure PE auto-scaling.
+
+use harmonicio::master::{LiveCluster, LiveConfig};
+use harmonicio::workload::ImageGen;
+
+fn cluster(max_pes: usize, initial: usize) -> Option<LiveCluster> {
+    match LiveCluster::new(
+        "artifacts",
+        LiveConfig {
+            max_pes,
+            initial_pes: initial,
+            scale_up_backlog_per_pe: 2,
+        },
+    ) {
+        Ok(c) => Some(c),
+        Err(e) => {
+            eprintln!("skipping live cluster test: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn processes_a_plate_end_to_end() {
+    let Some(mut c) = cluster(2, 2) else { return };
+    let mut gen = ImageGen::new(0, 128);
+    let plate = gen.plate(6);
+    for (_, px) in &plate {
+        c.stream(px.clone());
+    }
+    c.drain_until(6, std::time::Duration::from_secs(300)).unwrap();
+    assert_eq!(c.results.len(), 6);
+    // Every job measured wall + cpu time and produced sane features.
+    for r in &c.results {
+        let planted = plate[r.id.0 as usize].0 as f32;
+        assert!(r.features[0] >= planted * 0.5 - 1.0, "count {}", r.features[0]);
+        assert!(r.wall.as_nanos() > 0);
+        assert!(r.cpu.as_nanos() > 0, "thread CPU time measured");
+        assert!(r.latency >= r.wall);
+    }
+}
+
+#[test]
+fn backlog_pressure_scales_up_pes() {
+    let Some(mut c) = cluster(3, 1) else { return };
+    assert_eq!(c.pe_count(), 1);
+    let mut gen = ImageGen::new(1, 128);
+    for (_, px) in gen.plate(9) {
+        c.stream(px);
+    }
+    c.drain_until(9, std::time::Duration::from_secs(300)).unwrap();
+    assert!(
+        c.stats.pes_peak > 1,
+        "queue pressure should add PEs (peak {})",
+        c.stats.pes_peak
+    );
+    assert!(c.pe_count() <= 3, "max_pes respected");
+}
+
+#[test]
+fn results_complete_exactly_once() {
+    let Some(mut c) = cluster(2, 2) else { return };
+    let mut gen = ImageGen::new(2, 128);
+    let n = 8;
+    for (_, px) in gen.plate(n) {
+        c.stream(px);
+    }
+    c.drain_until(n as u64, std::time::Duration::from_secs(300))
+        .unwrap();
+    let mut ids: Vec<u64> = c.results.iter().map(|r| r.id.0).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "every message completed exactly once");
+    assert_eq!(c.stats.submitted, n as u64);
+    assert_eq!(c.stats.completed, n as u64);
+}

@@ -1,0 +1,123 @@
+//! Full P2P distributed-mode integration (the paper's Fig 1 flow):
+//! connector asks the master for an endpoint → sends the image *directly*
+//! to the worker (P2P, the master never touches the pixels) → when every
+//! worker is busy, the connector falls back to the master backlog, whose
+//! dispatcher drains with priority.
+
+use harmonicio::master::service::MasterService;
+use harmonicio::transport::call;
+use harmonicio::util::json::Json;
+use harmonicio::worker::agent::WorkerAgent;
+use harmonicio::workload::ImageGen;
+
+fn pixels_json(pixels: &[f32]) -> Json {
+    Json::arr(pixels.iter().map(|p| Json::num(*p as f64)))
+}
+
+#[test]
+fn p2p_routing_with_backlog_fallback() {
+    // Two remote workers, one master — all separate TCP endpoints.
+    let w1 = match WorkerAgent::start("127.0.0.1:0", "artifacts", 1) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("skipping p2p test: {e:#}");
+            return;
+        }
+    };
+    let w2 = WorkerAgent::start("127.0.0.1:0", "artifacts", 1).unwrap();
+    let master = MasterService::start("127.0.0.1:0").unwrap();
+
+    // Workers register with the master (the paper's worker → master
+    // reporting channel).
+    for w in [&w1, &w2] {
+        let resp = call(
+            master.addr(),
+            &Json::obj([
+                ("type", Json::str("register")),
+                ("addr", Json::str(w.addr().to_string())),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    }
+
+    let mut gen = ImageGen::new(3, 128);
+    let mut p2p_done = 0u64;
+    let mut queued = 0u64;
+    let n = 10;
+    for i in 0..n {
+        let planted = 10 + (i % 3) * 5;
+        let img = gen.generate(planted as usize);
+        // 1. Endpoint query.
+        let ep = call(
+            master.addr(),
+            &Json::obj([("type", Json::str("endpoint"))]),
+        )
+        .unwrap();
+        let direct = ep.get("queued").and_then(|v| v.as_bool()) == Some(false);
+        if direct {
+            // 2a. P2P: send the payload straight to the worker.
+            let worker_addr = ep.get("worker").unwrap().as_str().unwrap().to_string();
+            let resp = call(
+                worker_addr.as_str(),
+                &Json::obj([
+                    ("type", Json::str("analyze")),
+                    ("pixels", pixels_json(&img)),
+                ]),
+            )
+            .unwrap();
+            if resp.get("ok").and_then(|v| v.as_bool()) == Some(true) {
+                let count = resp.get("features").unwrap().as_arr().unwrap()[0]
+                    .as_f64()
+                    .unwrap();
+                assert!(count > 0.0, "counted something");
+                p2p_done += 1;
+                continue;
+            }
+            // Worker said busy → fall through to the backlog.
+        }
+        // 2b. Backlog fallback.
+        let resp = call(
+            master.addr(),
+            &Json::obj([
+                ("type", Json::str("enqueue")),
+                ("pixels", pixels_json(&img)),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+        queued += 1;
+    }
+
+    // Wait for the dispatcher to drain the backlog.
+    let t0 = std::time::Instant::now();
+    while master.backlog_len() > 0 || master.dispatched() < queued {
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(180),
+            "backlog stuck: {} left, {} dispatched of {queued}",
+            master.backlog_len(),
+            master.dispatched()
+        );
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+
+    // Every message processed exactly once, across both channels.
+    let total = w1.completed() + w2.completed();
+    assert_eq!(total, n as u64, "p2p {p2p_done} + queued {queued}");
+    assert_eq!(p2p_done + queued, n as u64);
+
+    // Queued results are retrievable by the client.
+    let drained = call(
+        master.addr(),
+        &Json::obj([("type", Json::str("drain_results"))]),
+    )
+    .unwrap();
+    assert_eq!(
+        drained.get("results").unwrap().as_arr().unwrap().len() as u64,
+        queued
+    );
+
+    master.shutdown();
+    w1.shutdown();
+    w2.shutdown();
+}

@@ -1,0 +1,117 @@
+//! PJRT runtime integration: the HLO-text → compile → execute contract the
+//! whole request path relies on (the rust twin of python's kernel tests).
+//!
+//! Requires `make artifacts` (skips gracefully when missing so plain
+//! `cargo test` works before the python toolchain ran).
+
+use harmonicio::runtime::Runtime;
+use harmonicio::workload::ImageGen;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load_dir("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping runtime integration: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn loads_all_manifest_artifacts() {
+    let Some(rt) = runtime() else { return };
+    let names = rt.names();
+    assert!(names.iter().any(|n| n.starts_with("nuclei")), "{names:?}");
+    assert!(names.iter().any(|n| n.starts_with("busy")), "{names:?}");
+    let platform = rt.platform().to_lowercase();
+    assert!(platform == "cpu" || platform == "host", "{platform}");
+}
+
+#[test]
+fn nuclei_counts_track_planted_density() {
+    let Some(rt) = runtime() else { return };
+    for (seed, planted) in [(1u64, 8usize), (2, 20), (3, 45)] {
+        let mut gen = ImageGen::new(seed, 128);
+        let img = gen.generate(planted);
+        let [count, area, mean_fg, thr] = rt.analyze_image(&img).unwrap();
+        assert!(
+            count >= planted as f32 * 0.5 && count <= planted as f32 * 1.5 + 2.0,
+            "planted {planted}, counted {count}"
+        );
+        assert!(area > 0.0, "area {area}");
+        assert!(mean_fg > thr, "foreground brighter than threshold");
+        assert!(thr > 0.0 && thr < 1.0, "otsu in normalized range: {thr}");
+    }
+}
+
+#[test]
+fn nuclei_area_scales_with_density() {
+    let Some(rt) = runtime() else { return };
+    let mut gen = ImageGen::new(9, 128);
+    let sparse = rt.analyze_image(&gen.generate(6)).unwrap();
+    let dense = rt.analyze_image(&gen.generate(60)).unwrap();
+    assert!(dense[1] > sparse[1], "dense {} vs sparse {}", dense[1], sparse[1]);
+}
+
+#[test]
+fn nuclei_execution_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let mut gen = ImageGen::new(4, 128);
+    let img = gen.generate(25);
+    let a = rt.analyze_image(&img).unwrap();
+    let b = rt.analyze_image(&img).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn nuclei_rejects_wrong_shape() {
+    let Some(rt) = runtime() else { return };
+    let bad = vec![0f32; 64 * 64];
+    assert!(rt.analyze_image(&bad).is_err());
+}
+
+#[test]
+fn busy_kernel_state_bounded_and_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.get_kind("busy").unwrap();
+    let n = exe.spec.inputs[0][0];
+    let x: Vec<f32> = (0..n * n).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+    let w: Vec<f32> = (0..n * n).map(|i| ((i % 7) as f32 - 3.0) * 0.02).collect();
+    let out1 = exe.run_f32(&[&x, &w]).unwrap();
+    let out2 = exe.run_f32(&[&x, &w]).unwrap();
+    assert_eq!(out1, out2, "deterministic");
+    let y = &out1[0];
+    assert_eq!(y.len(), n * n);
+    assert!(y.iter().all(|v| v.is_finite()));
+    assert!(y.iter().all(|v| v.abs() < 2.0), "tanh chain stays bounded");
+    // And it actually computes something.
+    assert!(y.iter().any(|v| v.abs() > 1e-3));
+}
+
+#[test]
+fn busy_calibration_measures_wall_time() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.get_kind("busy").unwrap();
+    let n = exe.spec.inputs[0][0];
+    let mut state: Vec<f32> = vec![0.1; n * n];
+    let w: Vec<f32> = (0..n * n).map(|i| ((i % 5) as f32 - 2.0) * 0.03).collect();
+    let dt = rt.busy_units(3, &mut state, &w).unwrap();
+    assert!(dt.as_nanos() > 0);
+    assert!(state.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn artifact_variant_selected_by_image_size() {
+    let Some(rt) = runtime() else { return };
+    // 128² and 256² both dispatch to their compiled variant.
+    let mut gen = ImageGen::new(11, 128);
+    let small = rt.analyze_image(&gen.generate(15)).unwrap();
+    let mut gen = ImageGen::new(11, 256);
+    let large = rt.analyze_image(&gen.generate(15)).unwrap();
+    for out in [small, large] {
+        assert!(out[0] >= 7.0 && out[0] <= 25.0, "count {}", out[0]);
+    }
+    // Unknown size → clear error naming the available variants.
+    let err = rt.analyze_image(&vec![0.0f32; 64 * 64]).unwrap_err();
+    assert!(format!("{err:#}").contains("no nuclei artifact"), "{err:#}");
+}
