@@ -1,10 +1,18 @@
 //! Bin-packing micro-benchmarks (L3 hot path §Perf target: ≥1 M items/s
 //! for First-Fit on IRM-shaped instances) + the A1 quality comparison.
+//!
+//! The headline comparison is **naive scan vs indexed engine** for
+//! Best-Fit/Worst-Fit at m ≥ 10⁴ open bins (ISSUE 1 acceptance: ≥ 5×),
+//! plus indexed-only scaling runs at 10⁵–10⁶ items. Results land in
+//! `results/bench_binpacking.{csv,json}`; `scripts/bench_check.sh`
+//! publishes the JSON as the PR-to-PR perf trajectory.
+
+use std::time::Duration;
 
 use harmonicio::bench::{black_box, Bencher};
 use harmonicio::binpacking::{
-    analysis, BestFit, Bin, BinPacker, FirstFit, FirstFitDecreasing, FirstFitTree, Harmonic,
-    Item, NextFit, WorstFit,
+    analysis, BestFit, Bin, BinPacker, EngineRule, FirstFit, FirstFitDecreasing, FirstFitTree,
+    Harmonic, IndexedPacker, Item, NextFit, PackEngine, WorstFit,
 };
 use harmonicio::util::rng::Rng;
 
@@ -24,6 +32,10 @@ fn instance(n: usize, seed: u64) -> Vec<Item> {
 
 fn main() {
     let mut b = Bencher::new();
+    // BENCH_QUICK=1 (set by `scripts/bench_check.sh --quick`) skips the
+    // multi-second naive baselines and 10⁵–10⁶-item scaling runs, whose
+    // budgets are otherwise fixed (they ignore BENCH_MEASURE_MS).
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
     println!("# bench_binpacking — algorithm throughput + quality");
 
     for &n in &[100usize, 1_000, 10_000] {
@@ -47,6 +59,9 @@ fn main() {
         ("worst-fit", Box::new(WorstFit)),
         ("ffd", Box::new(FirstFitDecreasing)),
         ("harmonic-7", Box::new(Harmonic { k: 7 })),
+        ("best-fit-indexed", Box::new(IndexedPacker::best())),
+        ("worst-fit-indexed", Box::new(IndexedPacker::worst())),
+        ("harmonic-7-indexed", Box::new(IndexedPacker::harmonic(7))),
     ];
     for (name, p) in &packers {
         b.bench_throughput(&format!("{name}/1000"), Some(1_000), |iters| {
@@ -56,21 +71,137 @@ fn main() {
         });
     }
 
-    // Incremental insertion (the IRM's per-cycle pattern: pre-loaded bins).
+    // --- The acceptance comparison: naive O(n·m) scans vs the indexed
+    // engine at m ≥ 10⁴ open bins (n = 50k items ≈ 12k bins on this
+    // instance shape). The naive baselines take seconds per pack, so they
+    // run under a reduced sample budget.
+    println!("\n# naive vs indexed at >= 10^4 bins (ISSUE 1 acceptance: >= 5x)");
+    let big = instance(50_000, 7);
+    if quick {
+        println!("(BENCH_QUICK=1: skipping naive 50k baselines and 10^5-10^6 scaling runs)");
+    }
+    if !quick {
+        let mut heavy = Bencher::with_budget(Duration::from_millis(0), Duration::from_secs(2), 3);
+        let naive: Vec<(&str, Box<dyn BinPacker>)> = vec![
+            ("best-fit-naive/50000", Box::new(BestFit)),
+            ("worst-fit-naive/50000", Box::new(WorstFit)),
+            ("first-fit-naive/50000", Box::new(FirstFit)),
+        ];
+        for (name, p) in &naive {
+            heavy.bench_throughput(name, Some(50_000), |iters| {
+                for _ in 0..iters {
+                    black_box(p.pack(black_box(&big), Vec::new()));
+                }
+            });
+        }
+        b.absorb(heavy);
+    }
+    let indexed: Vec<(&str, Box<dyn BinPacker>)> = vec![
+        ("best-fit-indexed/50000", Box::new(IndexedPacker::best())),
+        ("worst-fit-indexed/50000", Box::new(IndexedPacker::worst())),
+        ("first-fit-indexed/50000", Box::new(IndexedPacker::first())),
+    ];
+    for (name, p) in &indexed {
+        b.bench_throughput(name, Some(50_000), |iters| {
+            for _ in 0..iters {
+                black_box(p.pack(black_box(&big), Vec::new()));
+            }
+        });
+    }
+    report_speedups(&b);
+
+    // Indexed-only scaling runs: 10⁵–10⁶ items (the regime the synthetic
+    // and microscopy sweeps need; naive would take minutes per pack).
+    if !quick {
+        let mut heavy = Bencher::with_budget(Duration::from_millis(0), Duration::from_secs(3), 3);
+        for &n in &[100_000usize, 1_000_000] {
+            let items = instance(n, 11);
+            for (label, rule) in [
+                ("first-fit-indexed", EngineRule::First),
+                ("best-fit-indexed", EngineRule::Best),
+                ("worst-fit-indexed", EngineRule::Worst),
+                ("harmonic-7-indexed", EngineRule::Harmonic(7)),
+            ] {
+                heavy.bench_throughput(&format!("{label}/{n}"), Some(n as u64), |iters| {
+                    for _ in 0..iters {
+                        black_box(
+                            PackEngine::new(rule, Vec::new()).pack_all(black_box(&items)),
+                        );
+                    }
+                });
+            }
+        }
+        b.absorb(heavy);
+    }
+
+    // --- Incremental insertion: the IRM's per-cycle pattern against 10⁴
+    // live worker bins — live engine (sync + O(log m) inserts) vs the
+    // naive rebuild-and-scan round.
+    let loads: Vec<f64> = {
+        let mut rng = Rng::seeded(23);
+        (0..10_000).map(|_| rng.uniform(0.0, 0.85)).collect()
+    };
+    let round: Vec<Item> = instance(100, 31);
+    let mut engine = PackEngine::new(EngineRule::Best, Vec::new());
+    b.bench_throughput("engine/best-fit-round/10k-bins", Some(100), |iters| {
+        for _ in 0..iters {
+            engine.sync_used(loads.iter().copied());
+            for item in &round {
+                black_box(engine.insert(*item));
+            }
+        }
+    });
+    b.bench_throughput("naive/best-fit-round/10k-bins", Some(100), |iters| {
+        for _ in 0..iters {
+            let initial: Vec<Bin> = loads.iter().map(|&u| Bin::with_used(u)).collect();
+            black_box(BestFit.pack(black_box(&round), initial));
+        }
+    });
+
+    // Single-item in-place insertion (no engine, caller-owned bins).
     b.bench("first-fit/pack_one_into_64_bins", || {
         let mut bins: Vec<Bin> = (0..64).map(|i| Bin::with_used(0.01 * i as f64)).collect();
         black_box(FirstFit.pack_one(Item::new(0, 0.3), &mut bins));
     });
 
-    // Quality summary (printed alongside the timings).
+    // Quality summary (printed alongside the timings) — indexed variants
+    // must report identical packing quality to their oracles.
     println!("\n# quality on 1000-item IRM-shaped instance");
-    let all: Vec<&dyn BinPacker> = vec![&FirstFit, &NextFit, &BestFit, &WorstFit];
+    let best_indexed = IndexedPacker::best();
+    let worst_indexed = IndexedPacker::worst();
+    let all: Vec<&dyn BinPacker> = vec![
+        &FirstFit,
+        &NextFit,
+        &BestFit,
+        &WorstFit,
+        &best_indexed,
+        &worst_indexed,
+    ];
     for (name, stats) in analysis::compare(&all, &items) {
         println!(
-            "  {name:<12} bins={:<5} ideal={:<5} ratio={:.3} mean_load={:.3}",
+            "  {name:<18} bins={:<5} ideal={:<5} ratio={:.3} mean_load={:.3}",
             stats.bins_used, stats.ideal_bins, stats.ratio, stats.mean_load
         );
     }
 
     b.write_csv("results/bench_binpacking.csv").ok();
+    b.write_json("results/bench_binpacking.json").ok();
+}
+
+/// Print the naive→indexed speedups the acceptance criterion tracks.
+fn report_speedups(b: &Bencher) {
+    let median = |name: &str| {
+        b.results()
+            .iter()
+            .find(|m| m.name == name)
+            .map(|m| m.median_ns)
+    };
+    for rule in ["best-fit", "worst-fit", "first-fit"] {
+        if let (Some(naive), Some(indexed)) = (
+            median(&format!("{rule}-naive/50000")),
+            median(&format!("{rule}-indexed/50000")),
+        ) {
+            println!("speedup {rule:<10} naive/indexed = {:.1}x", naive / indexed);
+        }
+    }
 }

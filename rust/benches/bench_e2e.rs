@@ -6,9 +6,10 @@ use std::time::Instant;
 
 use harmonicio::bench::{black_box, Bencher};
 use harmonicio::experiments::microscopy;
+use harmonicio::irm::{Allocator, ContainerRequest, PackerChoice, RequestOrigin, WorkerBin};
 use harmonicio::master::{LiveCluster, LiveConfig};
 use harmonicio::sim::SimCluster;
-use harmonicio::types::Millis;
+use harmonicio::types::{CpuFraction, ImageName, Millis, WorkerId};
 use harmonicio::workload::{ImageGen, MicroscopyConfig, MicroscopyTrace};
 
 fn main() {
@@ -41,6 +42,40 @@ fn main() {
             cluster.tick(black_box(t));
         }
     });
+
+    // --- IRM allocator at fleet scale: one scheduling round against 10⁵
+    // live workers (the live-engine hot path — reconcile + O(log m)
+    // placements; the old rebuild-and-scan path was O(r·m) per round). ---
+    for &m in &[10_000usize, 100_000] {
+        let workers: Vec<WorkerBin> = (0..m)
+            .map(|i| WorkerBin {
+                worker: WorkerId(i as u64),
+                scheduled: CpuFraction::new((i % 97) as f64 / 113.0),
+            })
+            .collect();
+        let image = ImageName::new("img");
+        let requests: Vec<ContainerRequest> = (0..500)
+            .map(|i| ContainerRequest {
+                id: i,
+                image: image.clone(),
+                ttl: 10,
+                estimate: CpuFraction::new(0.125),
+                origin: RequestOrigin::AutoScale,
+                enqueued_at: Millis::ZERO,
+                requeues: 0,
+            })
+            .collect();
+        let mut alloc = Allocator::new(PackerChoice::BestFit);
+        b.bench_throughput(
+            &format!("irm/allocator_round_500reqs_{m}workers"),
+            Some(500),
+            |iters| {
+                for _ in 0..iters {
+                    black_box(alloc.pack(requests.clone(), &workers));
+                }
+            },
+        );
+    }
 
     // --- Live PJRT path (needs `make artifacts`). ---
     match LiveCluster::new(

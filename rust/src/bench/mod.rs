@@ -128,8 +128,26 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
+    /// A bencher with an explicit measurement budget — for heavy cases
+    /// (e.g. naive `O(n·m)` baselines at 10⁴+ bins) where the default
+    /// 30-sample budget would take minutes.
+    pub fn with_budget(warmup: Duration, measure: Duration, samples: usize) -> Self {
+        Bencher {
+            warmup,
+            measure,
+            samples: samples.max(1),
+            results: Vec::new(),
+        }
+    }
+
     pub fn results(&self) -> &[Measurement] {
         &self.results
+    }
+
+    /// Merge another bencher's results into this one (so one CSV/JSON file
+    /// covers cases run under different budgets).
+    pub fn absorb(&mut self, other: Bencher) {
+        self.results.extend(other.results);
     }
 
     /// Write all results as CSV (one file per bench target, used by the
@@ -150,6 +168,33 @@ impl Bencher {
                 m.items_per_sec().map(|t| format!("{t:.0}")).unwrap_or_default()
             ));
         }
+        std::fs::write(path, out)
+    }
+
+    /// Write all results as a JSON document (`scripts/bench_check.sh`
+    /// publishes this as the PR-to-PR perf trajectory artifact).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = String::from("{\n  \"results\": [\n");
+        for (i, m) in self.results.iter().enumerate() {
+            let sep = if i + 1 < self.results.len() { "," } else { "" };
+            // Bench names are [a-z0-9/_-] — no JSON escaping needed.
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"median_ns\": {:.1}, \"mad_ns\": {:.1}, \
+                 \"iters_per_sample\": {}, \"samples\": {}, \"items_per_sec\": {}}}{sep}\n",
+                m.name,
+                m.median_ns,
+                m.mad_ns,
+                m.iters_per_sample,
+                m.samples,
+                m.items_per_sec()
+                    .map(|t| format!("{t:.1}"))
+                    .unwrap_or_else(|| "null".to_string()),
+            ));
+        }
+        out.push_str("  ]\n}\n");
         std::fs::write(path, out)
     }
 }
@@ -232,6 +277,28 @@ mod tests {
             costly.median_ns,
             cheap_ns
         );
+    }
+
+    #[test]
+    fn json_written_and_parses() {
+        let mut b = quick();
+        b.bench("x", || {
+            black_box(2u64.pow(black_box(10)));
+        });
+        b.bench_throughput("y", Some(10), |iters| {
+            for _ in 0..iters {
+                black_box((0..10u64).sum::<u64>());
+            }
+        });
+        let path = std::env::temp_dir().join("harmonicio_bench_test.json");
+        b.write_json(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::util::json::Json::parse(&text).expect("valid json");
+        let results = v.get("results").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("name").unwrap().as_str().unwrap(), "x");
+        assert!(results[1].get("items_per_sec").unwrap().as_f64().is_some());
+        assert_eq!(results[0].get("items_per_sec"), Some(&crate::util::json::Json::Null));
     }
 
     #[test]

@@ -4,7 +4,17 @@
 //! item in the input sequence is assigned one by one without knowledge about
 //! the following items") except [`FirstFitDecreasing`], the offline
 //! comparator used to estimate how far the online result is from optimal.
+//!
+//! The Any-Fit packers here are the **naive `O(n·m)` reference scans**;
+//! the production hot paths run the placement-identical indexed engine in
+//! [`index`](crate::binpacking::index) (`O(n log m)`), and
+//! `rust/tests/binpacking_equivalence.rs` keeps the two in lock-step.
+//! Ties (equal residuals) always break toward the lowest bin index — the
+//! paper's `b1..bm` ordering — and residual comparisons use
+//! `f64::total_cmp`, so a NaN slipping into a bin's bookkeeping can never
+//! panic the scheduler.
 
+use super::index::{EngineRule, PackEngine};
 use super::{Bin, Item, Packing};
 
 /// A bin-packing algorithm. `pack` starts from `initial` bins (possibly
@@ -15,12 +25,11 @@ pub trait BinPacker {
 
     fn pack(&self, items: &[Item], initial: Vec<Bin>) -> Packing;
 
-    /// Online single-item insertion (the default goes through `pack`).
-    fn pack_one(&self, item: Item, bins: &mut Vec<Bin>) -> usize {
-        let packing = self.pack(std::slice::from_ref(&item), std::mem::take(bins));
-        *bins = packing.bins;
-        packing.assignments[0]
-    }
+    /// Online single-item insertion into caller-owned bins. Must place
+    /// exactly where `pack` would have placed the item as the next element
+    /// of the stream, and must work in place — no draining or re-packing
+    /// of `bins`.
+    fn pack_one(&self, item: Item, bins: &mut Vec<Bin>) -> usize;
 }
 
 /// Search criterion of an Any-Fit algorithm: which open bin takes the item?
@@ -36,7 +45,31 @@ pub enum AnyFit {
     Worst,
 }
 
+/// Linear scan for the fitting bin whose residual is strictly "better"
+/// than the best seen so far — strictness makes ties keep the earliest
+/// (lowest-index) bin, the canonical tie-break shared with the indexed
+/// engine. `total_cmp` keeps the scan total even for NaN residuals.
+fn select_extreme(
+    bins: &[Bin],
+    item: &Item,
+    better: impl Fn(f64, f64) -> bool,
+) -> Option<usize> {
+    let mut chosen: Option<(usize, f64)> = None;
+    for (i, b) in bins.iter().enumerate() {
+        if !b.fits(item) {
+            continue;
+        }
+        let r = b.residual();
+        match chosen {
+            Some((_, cur)) if !better(r, cur) => {}
+            _ => chosen = Some((i, r)),
+        }
+    }
+    chosen.map(|(i, _)| i)
+}
+
 fn any_fit_select(rule: AnyFit, bins: &[Bin], item: &Item, cursor: usize) -> Option<usize> {
+    use std::cmp::Ordering;
     match rule {
         AnyFit::First => bins.iter().position(|b| b.fits(item)),
         AnyFit::Next => {
@@ -46,19 +79,78 @@ fn any_fit_select(rule: AnyFit, bins: &[Bin], item: &Item, cursor: usize) -> Opt
                 None
             }
         }
-        AnyFit::Best => bins
-            .iter()
-            .enumerate()
-            .filter(|(_, b)| b.fits(item))
-            .min_by(|(_, a), (_, b)| a.residual().partial_cmp(&b.residual()).unwrap())
-            .map(|(i, _)| i),
-        AnyFit::Worst => bins
-            .iter()
-            .enumerate()
-            .filter(|(_, b)| b.fits(item))
-            .max_by(|(_, a), (_, b)| a.residual().partial_cmp(&b.residual()).unwrap())
-            .map(|(i, _)| i),
+        AnyFit::Best => select_extreme(bins, item, |cand, cur| {
+            cand.total_cmp(&cur) == Ordering::Less
+        }),
+        AnyFit::Worst => select_extreme(bins, item, |cand, cur| {
+            cand.total_cmp(&cur) == Ordering::Greater
+        }),
     }
+}
+
+/// Place one item into caller-owned bins with `rule`'s scan, opening a new
+/// bin only when nothing fits. In place and allocation-free (beyond bin
+/// growth) — the incremental counterpart of `any_fit_pack`'s loop body,
+/// used by every Any-Fit `pack_one`.
+pub fn any_fit_insert(rule: AnyFit, bins: &mut Vec<Bin>, item: Item) -> usize {
+    // Next-Fit's open bin is always the most recently opened one.
+    let cursor = bins.len().saturating_sub(1);
+    let idx = match any_fit_select(rule, bins, &item, cursor) {
+        Some(i) => i,
+        None => {
+            bins.push(Bin::new());
+            bins.len() - 1
+        }
+    };
+    bins[idx].push(item);
+    idx
+}
+
+/// The harmonic class of a size: `j` with `size ∈ (1/(j+1), 1/j]`, sizes
+/// ≤ `1/k` collapsing into class `k`.
+pub(crate) fn harmonic_class(size: f64, k: usize) -> usize {
+    let j = (1.0 / size).floor() as usize;
+    j.clamp(1, k)
+}
+
+/// Incremental Harmonic(k) insertion into caller-owned bins. The open bin
+/// of the item's class is recovered as the *last* bin holding only items
+/// of that class; *loaded* bins without recorded items (`Bin::with_used`
+/// snapshots of live workers) are treated as closed, while **empty** bins
+/// are claimable when a new class bin opens — all matching the batch
+/// packer. Feeding a stream through this one item at a time is
+/// placement-identical to one batch `Harmonic::pack` call. For long-lived
+/// `O(1)` insertion hold a
+/// [`PackEngine`](crate::binpacking::index::PackEngine) instead.
+pub fn harmonic_insert(k: usize, bins: &mut Vec<Bin>, item: Item) -> usize {
+    assert!(k >= 2, "harmonic needs k >= 2");
+    let class = harmonic_class(item.size, k);
+    let open: Option<usize> = bins
+        .iter()
+        .enumerate()
+        .rev()
+        .find(|(_, b)| {
+            !b.items.is_empty() && b.items.iter().all(|it| harmonic_class(it.size, k) == class)
+        })
+        .and_then(|(i, b)| {
+            // The open bin may be full (j items) or closed by float dust —
+            // then a fresh bin opens, exactly like the batch packer.
+            (b.items.len() < class && b.fits(&item)).then_some(i)
+        });
+    let idx = match open {
+        Some(i) => i,
+        // Same open rule as the batch packer: claim the lowest-index
+        // empty bin before pushing a fresh one.
+        None => bins
+            .iter()
+            .position(|b| b.used <= super::EPS && b.items.is_empty())
+            .unwrap_or_else(|| {
+                bins.push(Bin::new());
+                bins.len() - 1
+            }),
+    };
+    bins[idx].push(item);
+    idx
 }
 
 fn any_fit_pack(rule: AnyFit, items: &[Item], initial: Vec<Bin>) -> Packing {
@@ -97,6 +189,10 @@ macro_rules! any_fit_packer {
 
             fn pack(&self, items: &[Item], initial: Vec<Bin>) -> Packing {
                 any_fit_pack($rule, items, initial)
+            }
+
+            fn pack_one(&self, item: Item, bins: &mut Vec<Bin>) -> usize {
+                any_fit_insert($rule, bins, item)
             }
         }
     };
@@ -141,9 +237,12 @@ impl BinPacker for FirstFitDecreasing {
 
     fn pack(&self, items: &[Item], initial: Vec<Bin>) -> Packing {
         let mut order: Vec<usize> = (0..items.len()).collect();
-        order.sort_by(|&a, &b| items[b].size.partial_cmp(&items[a].size).unwrap());
+        order.sort_by(|&a, &b| items[b].size.total_cmp(&items[a].size));
         let sorted: Vec<Item> = order.iter().map(|&i| items[i]).collect();
-        let packing = any_fit_pack(AnyFit::First, &sorted, initial);
+        // The inner First-Fit runs on the indexed engine (placement-
+        // identical to the naive scan), so the offline comparator stays
+        // usable at 10⁵–10⁶ items.
+        let packing = PackEngine::new(EngineRule::First, initial).pack_all(&sorted);
         // Un-permute assignments back to input order.
         let mut assignments = vec![0usize; items.len()];
         for (sorted_pos, &orig) in order.iter().enumerate() {
@@ -154,12 +253,19 @@ impl BinPacker for FirstFitDecreasing {
             bins: packing.bins,
         }
     }
+
+    /// A single item is its own decreasing order — plain First-Fit.
+    fn pack_one(&self, item: Item, bins: &mut Vec<Bin>) -> usize {
+        any_fit_insert(AnyFit::First, bins, item)
+    }
 }
 
 /// Harmonic(k) (Lee & Lee 1985): items are classified by size into harmonic
 /// intervals `(1/(j+1), 1/j]`; each class packs Next-Fit into its own bins
-/// (class j bins hold exactly j items). Pre-existing bins are treated as
-/// closed: Harmonic never mixes classes, so it only ever opens fresh bins.
+/// (class j bins hold exactly j items). *Loaded* pre-existing bins are
+/// treated as closed — Harmonic never mixes classes into a bin whose
+/// contents it can't classify — but **empty** pre-existing bins (idle
+/// workers) are claimed, lowest index first, when a class opens a new bin.
 #[derive(Clone, Copy, Debug)]
 pub struct Harmonic {
     pub k: usize,
@@ -181,14 +287,17 @@ impl BinPacker for Harmonic {
         let mut bins = initial;
         // Per class j (1..=k): open bin index + count of items inside.
         let mut open: Vec<Option<(usize, usize)>> = vec![None; self.k + 1];
+        // Claimable empty bins can only come from `initial` (bins opened
+        // mid-pack get an item immediately); once this count hits zero the
+        // per-open scan is skipped, keeping the no-initial-bins case O(1)
+        // amortized per item.
+        let mut free_candidates = bins
+            .iter()
+            .filter(|b| b.used <= super::EPS && b.items.is_empty())
+            .count();
         let mut assignments = Vec::with_capacity(items.len());
         for item in items {
-            // class j such that size in (1/(j+1), 1/j]; sizes <= 1/k go to k.
-            let mut j = (1.0 / item.size).floor() as usize;
-            if j < 1 {
-                j = 1;
-            }
-            let class = j.min(self.k);
+            let class = harmonic_class(item.size, self.k);
             let capacity_items = class; // class-j bin holds j items of size <= 1/j
             let idx = match open[class] {
                 Some((idx, count)) if count < capacity_items && bins[idx].fits(item) => {
@@ -196,8 +305,25 @@ impl BinPacker for Harmonic {
                     idx
                 }
                 _ => {
-                    bins.push(Bin::new());
-                    let idx = bins.len() - 1;
+                    // A new class bin claims the lowest-index *empty* bin
+                    // first (an idle worker is trivially class-pure);
+                    // loaded pre-existing bins stay closed.
+                    let claimed = if free_candidates > 0 {
+                        bins.iter()
+                            .position(|b| b.used <= super::EPS && b.items.is_empty())
+                    } else {
+                        None
+                    };
+                    let idx = match claimed {
+                        Some(i) => {
+                            free_candidates -= 1;
+                            i
+                        }
+                        None => {
+                            bins.push(Bin::new());
+                            bins.len() - 1
+                        }
+                    };
                     open[class] = Some((idx, 1));
                     idx
                 }
@@ -206,6 +332,12 @@ impl BinPacker for Harmonic {
             assignments.push(idx);
         }
         Packing { assignments, bins }
+    }
+
+    /// Incremental insertion that recovers each class's open bin from the
+    /// bin contents (see [`harmonic_insert`]).
+    fn pack_one(&self, item: Item, bins: &mut Vec<Bin>) -> usize {
+        harmonic_insert(self.k, bins, item)
     }
 }
 
@@ -311,9 +443,19 @@ mod tests {
     }
 
     #[test]
-    fn harmonic_ignores_preexisting_bins() {
+    fn harmonic_ignores_loaded_preexisting_bins() {
         let p = Harmonic::default().pack(&items(&[0.5]), vec![Bin::with_used(0.1)]);
         assert_eq!(p.assignments[0], 1);
+    }
+
+    #[test]
+    fn harmonic_claims_empty_preexisting_bins() {
+        // Idle workers (empty bins) are usable; the loaded bin stays
+        // closed. Both class-2 items share the claimed bin.
+        let initial = vec![Bin::with_used(0.0), Bin::with_used(0.6)];
+        let p = Harmonic::default().pack(&items(&[0.5, 0.4]), initial);
+        p.check(&items(&[0.5, 0.4])).unwrap();
+        assert_eq!(p.assignments, vec![0, 0]);
     }
 
     // ---- property tests over the whole family ----

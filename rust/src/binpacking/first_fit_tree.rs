@@ -3,69 +3,14 @@
 //! of `O(n·m)` (§Perf L3 optimization; the naive scan is kept as the
 //! reference and the equivalence is property-tested).
 //!
-//! The index is a max-residual segment tree over bin slots: to place an
-//! item, descend left-first into any subtree whose max residual fits — the
-//! leftmost (lowest-index) fitting bin, exactly First-Fit's rule. Updates
-//! after placement are `O(log m)`.
+//! Historically this module owned its own residual segment tree; that
+//! structure now lives in [`index`](crate::binpacking::index) (generalized
+//! to the whole Any-Fit family), and [`FirstFitTree`] is a thin wrapper
+//! over [`PackEngine`] kept for its established name (`"first-fit-tree"`
+//! appears in recorded bench and experiment series).
 
-use super::{Bin, BinPacker, Item, Packing, EPS};
-
-/// Segment tree over bin residuals with leftmost-fit descent.
-struct ResidualTree {
-    /// Number of leaves (power of two ≥ bins).
-    leaves: usize,
-    /// `tree[i]` = max residual in the subtree; leaf j at `leaves + j`.
-    tree: Vec<f64>,
-}
-
-impl ResidualTree {
-    fn new(capacity_hint: usize) -> Self {
-        let leaves = capacity_hint.next_power_of_two().max(1);
-        ResidualTree {
-            leaves,
-            tree: vec![f64::NEG_INFINITY; 2 * leaves],
-        }
-    }
-
-    fn set(&mut self, idx: usize, residual: f64) {
-        if idx >= self.leaves {
-            self.grow(idx + 1);
-        }
-        let mut i = self.leaves + idx;
-        self.tree[i] = residual;
-        while i > 1 {
-            i /= 2;
-            self.tree[i] = self.tree[2 * i].max(self.tree[2 * i + 1]);
-        }
-    }
-
-    fn grow(&mut self, needed: usize) {
-        let new_leaves = needed.next_power_of_two();
-        let mut new_tree = vec![f64::NEG_INFINITY; 2 * new_leaves];
-        for j in 0..self.leaves {
-            new_tree[new_leaves + j] = self.tree[self.leaves + j];
-        }
-        // Rebuild internal nodes.
-        for i in (1..new_leaves).rev() {
-            new_tree[i] = new_tree[2 * i].max(new_tree[2 * i + 1]);
-        }
-        self.leaves = new_leaves;
-        self.tree = new_tree;
-    }
-
-    /// Lowest-index leaf with residual ≥ size − EPS, if any.
-    fn first_fit(&self, size: f64) -> Option<usize> {
-        let need = size - EPS;
-        if self.tree[1] < need {
-            return None;
-        }
-        let mut i = 1;
-        while i < self.leaves {
-            i = if self.tree[2 * i] >= need { 2 * i } else { 2 * i + 1 };
-        }
-        Some(i - self.leaves)
-    }
-}
+use super::index::{EngineRule, IndexedPacker, PackEngine};
+use super::{Bin, BinPacker, Item, Packing};
 
 /// First-Fit with the segment-tree index. Drop-in equivalent of
 /// [`FirstFit`](crate::binpacking::FirstFit).
@@ -78,27 +23,11 @@ impl BinPacker for FirstFitTree {
     }
 
     fn pack(&self, items: &[Item], initial: Vec<Bin>) -> Packing {
-        let mut bins = initial;
-        let mut tree = ResidualTree::new((bins.len() + items.len() / 2).max(16));
-        for (i, b) in bins.iter().enumerate() {
-            tree.set(i, b.residual());
-        }
-        let mut assignments = Vec::with_capacity(items.len());
-        for item in items {
-            let idx = match tree.first_fit(item.size) {
-                Some(idx) if idx < bins.len() => idx,
-                _ => {
-                    bins.push(Bin::new());
-                    let idx = bins.len() - 1;
-                    tree.set(idx, 1.0);
-                    idx
-                }
-            };
-            bins[idx].push(*item);
-            tree.set(idx, bins[idx].residual());
-            assignments.push(idx);
-        }
-        Packing { assignments, bins }
+        PackEngine::new(EngineRule::First, initial).pack_all(items)
+    }
+
+    fn pack_one(&self, item: Item, bins: &mut Vec<Bin>) -> usize {
+        IndexedPacker::first().pack_one(item, bins)
     }
 }
 

@@ -1,0 +1,123 @@
+//! Per-class bucket index for Harmonic(k) — `O(1)` per item.
+//!
+//! Harmonic (Lee & Lee 1985) classifies items by size into harmonic
+//! intervals `(1/(j+1), 1/j]` and packs each class Next-Fit into its own
+//! bins (a class-`j` bin holds exactly `j` items). The only state the
+//! algorithm needs is, per class, *which bin is currently open and how
+//! many items it holds* — this index, plus the pool of **empty**
+//! pre-existing bins a new class bin may claim (idle workers in the IRM:
+//! Harmonic can't mix classes into a *loaded* bin, but an empty bin is
+//! trivially class-pure). Kept separately from the batch packer so the
+//! [`PackEngine`](super::PackEngine) can carry it across incremental
+//! insertions (the default `pack_one` used to lose it and open one bin
+//! per item).
+
+use std::collections::BTreeSet;
+
+/// Open-bin bookkeeping per harmonic class `1..=k`.
+#[derive(Clone, Debug)]
+pub struct HarmonicBuckets {
+    k: usize,
+    /// Per class `j`: open bin index + items already inside it.
+    open: Vec<Option<(usize, usize)>>,
+    /// Empty, unclaimed bin indexes — candidates for the next class open
+    /// (lowest index first, the paper's `b1..bm` order).
+    free: BTreeSet<usize>,
+}
+
+impl HarmonicBuckets {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 2, "harmonic needs k >= 2");
+        HarmonicBuckets {
+            k,
+            open: vec![None; k + 1],
+            free: BTreeSet::new(),
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Class `j` with `size ∈ (1/(j+1), 1/j]`; sizes ≤ 1/k collapse to `k`.
+    /// Delegates to the single class function shared with the naive packer.
+    pub fn class_of(&self, size: f64) -> usize {
+        crate::binpacking::algorithms::harmonic_class(size, self.k)
+    }
+
+    /// The open bin of `class`, as `(bin index, item count)`.
+    pub fn open(&self, class: usize) -> Option<(usize, usize)> {
+        self.open[class]
+    }
+
+    /// Record one more item placed into `class`'s open bin.
+    pub fn bump(&mut self, class: usize) {
+        if let Some((_, count)) = &mut self.open[class] {
+            *count += 1;
+        }
+    }
+
+    /// A fresh bin (holding one item) becomes `class`'s open bin.
+    pub fn open_new(&mut self, class: usize, bin_idx: usize) {
+        self.open[class] = Some((bin_idx, 1));
+    }
+
+    /// Offer an empty bin for future class opens.
+    pub fn add_free(&mut self, bin_idx: usize) {
+        self.free.insert(bin_idx);
+    }
+
+    /// Claim the lowest-index empty bin, if any.
+    pub fn take_free(&mut self) -> Option<usize> {
+        let idx = self.free.iter().next().copied()?;
+        self.free.remove(&idx);
+        Some(idx)
+    }
+
+    /// Close every class and forget the free pool (loaded pre-existing
+    /// bins are never reopened — batch Harmonic semantics).
+    pub fn clear(&mut self) {
+        self.open.iter_mut().for_each(|o| *o = None);
+        self.free.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_follow_harmonic_intervals() {
+        let b = HarmonicBuckets::new(5);
+        assert_eq!(b.class_of(1.0), 1);
+        assert_eq!(b.class_of(0.6), 1);
+        assert_eq!(b.class_of(0.5), 2);
+        assert_eq!(b.class_of(0.34), 2);
+        assert_eq!(b.class_of(0.33), 3);
+        assert_eq!(b.class_of(0.05), 5, "tiny sizes collapse to class k");
+    }
+
+    #[test]
+    fn open_bump_clear_lifecycle() {
+        let mut b = HarmonicBuckets::new(3);
+        assert_eq!(b.open(2), None);
+        b.open_new(2, 7);
+        assert_eq!(b.open(2), Some((7, 1)));
+        b.bump(2);
+        assert_eq!(b.open(2), Some((7, 2)));
+        b.clear();
+        assert_eq!(b.open(2), None);
+    }
+
+    #[test]
+    fn free_pool_hands_out_lowest_index_first() {
+        let mut b = HarmonicBuckets::new(3);
+        b.add_free(5);
+        b.add_free(2);
+        b.add_free(9);
+        assert_eq!(b.take_free(), Some(2));
+        assert_eq!(b.take_free(), Some(5));
+        b.clear();
+        assert_eq!(b.take_free(), None, "clear forgets the free pool");
+    }
+}

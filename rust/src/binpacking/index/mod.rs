@@ -1,0 +1,454 @@
+//! The indexed packing engine — `O(log m)` placement for the whole
+//! Any-Fit family, plus the incremental state the IRM's hot loop needs.
+//!
+//! | rule | index | select cost | structure |
+//! |---|---|---|---|
+//! | First-Fit | max-residual segment tree, leftmost-fit descent | `O(log m)` | [`ResidualTree`] |
+//! | Next-Fit | open-bin cursor | `O(1)` | `usize` |
+//! | Best-Fit | ordered residual map (successor query) | `O(log m)` | [`ResidualMap`] |
+//! | Worst-Fit | max-residual segment tree, leftmost-max descent | `O(log m)` | [`ResidualTree`] |
+//! | Harmonic(k) | per-class open-bin buckets + free-bin pool | `O(1)` (`O(log m)` on open) | [`HarmonicBuckets`] |
+//!
+//! [`PackEngine`] owns the bins *and* the rule's index and keeps both in
+//! sync across insertions, so a long-lived caller (the IRM allocator, the
+//! simulator) pays `O(log m)` per scheduling decision instead of the
+//! `O(m)` scan — and, via [`PackEngine::sync_used`], reuses all of its
+//! allocations between control cycles instead of rebuilding `Vec<Bin>`
+//! every tick.
+//!
+//! Placement decisions are **identical** to the naive reference scans in
+//! [`algorithms`](crate::binpacking::algorithms) (ties always break toward
+//! the lowest bin index); `rust/tests/binpacking_equivalence.rs` proves it
+//! property-wise over random item streams and pre-populated bins.
+
+mod harmonic_buckets;
+mod residual_map;
+mod residual_tree;
+
+pub use harmonic_buckets::HarmonicBuckets;
+pub use residual_map::ResidualMap;
+pub use residual_tree::ResidualTree;
+
+use super::algorithms::{any_fit_insert, harmonic_insert, AnyFit};
+use super::{Bin, BinPacker, Item, Packing};
+
+/// Which packing rule an engine (or [`IndexedPacker`]) runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineRule {
+    First,
+    Next,
+    Best,
+    Worst,
+    /// Harmonic with `k` classes.
+    Harmonic(usize),
+}
+
+/// The rule-specific index (each variant carries exactly the structure its
+/// rule needs — see the module-level table).
+#[derive(Clone, Debug)]
+enum RuleIndex {
+    First(ResidualTree),
+    Next { cursor: usize },
+    Best(ResidualMap),
+    Worst(ResidualTree),
+    Harmonic(HarmonicBuckets),
+}
+
+/// A stateful, indexed bin-packer: bins plus the rule index, kept
+/// consistent across [`insert`](PackEngine::insert) calls.
+#[derive(Clone, Debug)]
+pub struct PackEngine {
+    rule: EngineRule,
+    bins: Vec<Bin>,
+    index: RuleIndex,
+}
+
+impl PackEngine {
+    /// Build an engine over `initial` bins (possibly pre-loaded). Matches
+    /// batch semantics: Harmonic treats pre-existing bins as closed.
+    pub fn new(rule: EngineRule, initial: Vec<Bin>) -> PackEngine {
+        let index = match rule {
+            EngineRule::First | EngineRule::Worst => {
+                let mut tree = ResidualTree::new(initial.len().max(16));
+                for (i, b) in initial.iter().enumerate() {
+                    tree.set(i, b.residual());
+                }
+                if rule == EngineRule::First {
+                    RuleIndex::First(tree)
+                } else {
+                    RuleIndex::Worst(tree)
+                }
+            }
+            EngineRule::Next => RuleIndex::Next {
+                cursor: initial.len().saturating_sub(1),
+            },
+            EngineRule::Best => {
+                let mut map = ResidualMap::new();
+                for b in &initial {
+                    map.push(b.residual());
+                }
+                RuleIndex::Best(map)
+            }
+            EngineRule::Harmonic(k) => {
+                let mut buckets = HarmonicBuckets::new(k);
+                for (i, b) in initial.iter().enumerate() {
+                    if b.used <= super::EPS && b.items.is_empty() {
+                        buckets.add_free(i);
+                    }
+                }
+                RuleIndex::Harmonic(buckets)
+            }
+        };
+        PackEngine {
+            rule,
+            bins: initial,
+            index,
+        }
+    }
+
+    pub fn rule(&self) -> EngineRule {
+        self.rule
+    }
+
+    pub fn bins(&self) -> &[Bin] {
+        &self.bins
+    }
+
+    pub fn len(&self) -> usize {
+        self.bins.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bins.is_empty()
+    }
+
+    /// Consume the engine, returning its bins.
+    pub fn into_bins(self) -> Vec<Bin> {
+        self.bins
+    }
+
+    /// Place one item, returning its bin index — `O(log m)`.
+    pub fn insert(&mut self, item: Item) -> usize {
+        let chosen = match &mut self.index {
+            RuleIndex::First(tree) => tree.first_fit(item.size),
+            RuleIndex::Worst(tree) => tree.worst_fit(item.size),
+            RuleIndex::Best(map) => map.best_fit(item.size),
+            RuleIndex::Next { cursor } => {
+                let c = *cursor;
+                if c < self.bins.len() && self.bins[c].fits(&item) {
+                    Some(c)
+                } else {
+                    None
+                }
+            }
+            RuleIndex::Harmonic(buckets) => {
+                let class = buckets.class_of(item.size);
+                match buckets.open(class) {
+                    // A class-j bin holds at most j items; float dust can
+                    // also close it early, exactly like the naive packer.
+                    Some((idx, count)) if count < class && self.bins[idx].fits(&item) => {
+                        buckets.bump(class);
+                        Some(idx)
+                    }
+                    _ => None,
+                }
+            }
+        };
+        let idx = match chosen {
+            Some(idx) => idx,
+            None => {
+                // Any-Fit invariant: open a new bin only when nothing
+                // fits. Harmonic first claims the lowest-index *empty*
+                // pre-existing bin (an idle worker is class-pure).
+                let reused = match &mut self.index {
+                    RuleIndex::Harmonic(buckets) => buckets.take_free(),
+                    _ => None,
+                };
+                let idx = match reused {
+                    Some(idx) => idx,
+                    None => {
+                        self.bins.push(Bin::new());
+                        self.bins.len() - 1
+                    }
+                };
+                match &mut self.index {
+                    RuleIndex::First(tree) | RuleIndex::Worst(tree) => {
+                        tree.set(idx, self.bins[idx].residual());
+                    }
+                    RuleIndex::Best(map) => {
+                        if idx == map.len() {
+                            map.push(1.0);
+                        }
+                    }
+                    RuleIndex::Next { cursor } => *cursor = idx,
+                    RuleIndex::Harmonic(buckets) => {
+                        let class = buckets.class_of(item.size);
+                        buckets.open_new(class, idx);
+                    }
+                }
+                idx
+            }
+        };
+        self.bins[idx].push(item);
+        match &mut self.index {
+            RuleIndex::First(tree) | RuleIndex::Worst(tree) => {
+                tree.set(idx, self.bins[idx].residual());
+            }
+            RuleIndex::Best(map) => map.set(idx, self.bins[idx].residual()),
+            RuleIndex::Next { .. } | RuleIndex::Harmonic(_) => {}
+        }
+        idx
+    }
+
+    /// Pack a whole item sequence, consuming the engine.
+    pub fn pack_all(mut self, items: &[Item]) -> Packing {
+        let mut assignments = Vec::with_capacity(items.len());
+        for item in items {
+            assignments.push(self.insert(*item));
+        }
+        Packing {
+            assignments,
+            bins: self.bins,
+        }
+    }
+
+    /// Reconcile the engine to an externally observed bin population: bin
+    /// `i` gets load `used[i]` (clamped to `[0, 1]`), bins beyond are
+    /// dropped. This is the IRM's per-cycle entry point: all storage is
+    /// reused, only *changed* loads touch the index, and the per-bin item
+    /// lists are cleared (their capacity kept) — placement-equivalent to
+    /// rebuilding a fresh engine over `Bin::with_used` bins, without the
+    /// allocations.
+    pub fn sync_used<I>(&mut self, used: I)
+    where
+        I: IntoIterator<Item = f64>,
+        I::IntoIter: ExactSizeIterator,
+    {
+        let used = used.into_iter();
+        let n = used.len();
+        if self.bins.len() > n {
+            match &mut self.index {
+                RuleIndex::First(tree) | RuleIndex::Worst(tree) => tree.truncate(n),
+                RuleIndex::Best(map) => map.truncate(n),
+                RuleIndex::Next { .. } | RuleIndex::Harmonic(_) => {}
+            }
+            self.bins.truncate(n);
+        }
+        for (i, u) in used.enumerate() {
+            let u = u.clamp(0.0, 1.0);
+            if i < self.bins.len() {
+                let bin = &mut self.bins[i];
+                bin.items.clear();
+                if bin.used != u {
+                    bin.used = u;
+                    match &mut self.index {
+                        RuleIndex::First(tree) | RuleIndex::Worst(tree) => {
+                            tree.set(i, bin.residual());
+                        }
+                        RuleIndex::Best(map) => map.set(i, bin.residual()),
+                        RuleIndex::Next { .. } | RuleIndex::Harmonic(_) => {}
+                    }
+                }
+            } else {
+                let bin = Bin::with_used(u);
+                match &mut self.index {
+                    RuleIndex::First(tree) | RuleIndex::Worst(tree) => {
+                        tree.set(i, bin.residual());
+                    }
+                    RuleIndex::Best(map) => map.push(bin.residual()),
+                    RuleIndex::Next { .. } | RuleIndex::Harmonic(_) => {}
+                }
+                self.bins.push(bin);
+            }
+        }
+        // Rule state resets to batch-start semantics over the new view
+        // (for Harmonic that includes re-offering the now-empty bins —
+        // idle workers — as claimable class bins).
+        match &mut self.index {
+            RuleIndex::Next { cursor } => *cursor = n.saturating_sub(1),
+            RuleIndex::Harmonic(buckets) => {
+                buckets.clear();
+                for (i, b) in self.bins.iter().enumerate() {
+                    if b.used <= super::EPS && b.items.is_empty() {
+                        buckets.add_free(i);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Engine-backed [`BinPacker`]: drop-in indexed replacement for the naive
+/// scans, placement-identical (property-tested) but `O(n log m)` per batch
+/// instead of `O(n·m)`.
+#[derive(Clone, Copy, Debug)]
+pub struct IndexedPacker {
+    rule: EngineRule,
+}
+
+impl IndexedPacker {
+    pub fn new(rule: EngineRule) -> Self {
+        IndexedPacker { rule }
+    }
+
+    pub fn first() -> Self {
+        Self::new(EngineRule::First)
+    }
+
+    pub fn next() -> Self {
+        Self::new(EngineRule::Next)
+    }
+
+    pub fn best() -> Self {
+        Self::new(EngineRule::Best)
+    }
+
+    pub fn worst() -> Self {
+        Self::new(EngineRule::Worst)
+    }
+
+    pub fn harmonic(k: usize) -> Self {
+        Self::new(EngineRule::Harmonic(k))
+    }
+
+    pub fn rule(&self) -> EngineRule {
+        self.rule
+    }
+
+    /// A live engine over `initial` bins — for callers that keep inserting.
+    pub fn engine(&self, initial: Vec<Bin>) -> PackEngine {
+        PackEngine::new(self.rule, initial)
+    }
+}
+
+impl BinPacker for IndexedPacker {
+    fn name(&self) -> &'static str {
+        match self.rule {
+            EngineRule::First => "first-fit-indexed",
+            EngineRule::Next => "next-fit-indexed",
+            EngineRule::Best => "best-fit-indexed",
+            EngineRule::Worst => "worst-fit-indexed",
+            EngineRule::Harmonic(_) => "harmonic-k-indexed",
+        }
+    }
+
+    fn pack(&self, items: &[Item], initial: Vec<Bin>) -> Packing {
+        PackEngine::new(self.rule, initial).pack_all(items)
+    }
+
+    /// Single insertion into caller-owned bins: the `O(m)` in-place scan
+    /// (no engine rebuild, no reallocation — for `O(log m)` repeated
+    /// insertion hold a [`PackEngine`] instead).
+    fn pack_one(&self, item: Item, bins: &mut Vec<Bin>) -> usize {
+        match self.rule {
+            EngineRule::First => any_fit_insert(AnyFit::First, bins, item),
+            EngineRule::Next => any_fit_insert(AnyFit::Next, bins, item),
+            EngineRule::Best => any_fit_insert(AnyFit::Best, bins, item),
+            EngineRule::Worst => any_fit_insert(AnyFit::Worst, bins, item),
+            EngineRule::Harmonic(k) => harmonic_insert(k, bins, item),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::binpacking::{BestFit, FirstFit, WorstFit};
+
+    fn items(sizes: &[f64]) -> Vec<Item> {
+        sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| Item::new(i as u64, s))
+            .collect()
+    }
+
+    #[test]
+    fn engine_first_matches_naive_on_textbook_sequence() {
+        let its = items(&[0.5, 0.7, 0.5, 0.2, 0.4, 0.2, 0.5, 0.1, 0.6]);
+        let naive = FirstFit.pack(&its, Vec::new());
+        let engine = IndexedPacker::first().pack(&its, Vec::new());
+        assert_eq!(naive.assignments, engine.assignments);
+    }
+
+    #[test]
+    fn engine_best_picks_tightest() {
+        let initial = vec![Bin::with_used(0.7), Bin::with_used(0.5)];
+        let p = IndexedPacker::best().pack(&items(&[0.3]), initial);
+        assert_eq!(p.assignments[0], 0);
+    }
+
+    #[test]
+    fn engine_worst_picks_emptiest() {
+        let initial = vec![Bin::with_used(0.7), Bin::with_used(0.5)];
+        let p = IndexedPacker::worst().pack(&items(&[0.3]), initial);
+        assert_eq!(p.assignments[0], 1);
+    }
+
+    #[test]
+    fn engine_harmonic_keeps_classes_apart() {
+        let its = items(&[0.6, 0.35, 0.34, 0.2, 0.19, 0.18]);
+        let p = IndexedPacker::harmonic(4).pack(&its, Vec::new());
+        p.check(&its).unwrap();
+        assert_eq!(p.assignments[1], p.assignments[2]);
+        assert_ne!(p.assignments[0], p.assignments[1]);
+    }
+
+    #[test]
+    fn incremental_insert_is_stateful() {
+        // The engine keeps Harmonic's open bins across inserts — the very
+        // thing the old pack_one lost.
+        let mut e = PackEngine::new(EngineRule::Harmonic(4), Vec::new());
+        let a = e.insert(Item::new(0, 0.35));
+        let b = e.insert(Item::new(1, 0.34));
+        assert_eq!(a, b, "same class-2 bin across separate inserts");
+    }
+
+    #[test]
+    fn sync_used_matches_fresh_engine() {
+        let loads = [0.8, 0.2, 0.55];
+        let its = items(&[0.4, 0.3, 0.1, 0.25]);
+        for rule in [
+            EngineRule::First,
+            EngineRule::Next,
+            EngineRule::Best,
+            EngineRule::Worst,
+            EngineRule::Harmonic(7),
+        ] {
+            // A dirty engine (leftover bins from a previous round) synced
+            // to `loads` must place exactly like a fresh engine.
+            let mut dirty = PackEngine::new(rule, Vec::new());
+            for it in &items(&[0.9, 0.9, 0.9, 0.9, 0.9]) {
+                dirty.insert(*it);
+            }
+            dirty.sync_used(loads.iter().copied());
+            let fresh = PackEngine::new(
+                rule,
+                loads.iter().map(|&u| Bin::with_used(u)).collect(),
+            );
+            let got: Vec<usize> = {
+                let mut d = dirty.clone();
+                its.iter().map(|it| d.insert(*it)).collect()
+            };
+            let want = fresh.pack_all(&its).assignments;
+            assert_eq!(got, want, "rule {rule:?}");
+        }
+    }
+
+    #[test]
+    fn pack_one_uses_rule_scan() {
+        let mut bins = vec![Bin::with_used(0.7), Bin::with_used(0.5)];
+        assert_eq!(IndexedPacker::best().pack_one(Item::new(0, 0.3), &mut bins), 0);
+        let mut bins = vec![Bin::with_used(0.7), Bin::with_used(0.5)];
+        assert_eq!(
+            IndexedPacker::worst().pack_one(Item::new(0, 0.3), &mut bins),
+            1
+        );
+        // Naive scans agree.
+        let mut bins = vec![Bin::with_used(0.7), Bin::with_used(0.5)];
+        assert_eq!(BestFit.pack_one(Item::new(0, 0.3), &mut bins), 0);
+        let mut bins = vec![Bin::with_used(0.7), Bin::with_used(0.5)];
+        assert_eq!(WorstFit.pack_one(Item::new(0, 0.3), &mut bins), 1);
+    }
+}

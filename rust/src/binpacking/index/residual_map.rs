@@ -1,0 +1,152 @@
+//! Ordered residual map — the `O(log m)` Best-Fit index.
+//!
+//! Best-Fit wants the *tightest* fitting bin: the minimum residual among
+//! bins with residual ≥ the item size. A max segment tree can't answer
+//! that, so this index keeps every bin in a `BTreeSet` ordered by
+//! `(residual, bin index)`; the Best-Fit query is a single successor
+//! lookup (`range(need..).next()`), which also encodes the canonical
+//! tie-break: among equal residuals, the lowest bin index wins.
+//!
+//! Residuals are non-negative finite floats, so their IEEE-754 bit patterns
+//! order identically to the values — the set keys on `f64::to_bits` to get
+//! a total order without float-in-`Ord` gymnastics.
+
+use std::collections::BTreeSet;
+
+use crate::binpacking::EPS;
+
+/// Order-preserving integer key for a non-negative residual.
+fn key(residual: f64) -> u64 {
+    // `residual <= 0.0` collapses -0.0 (and any clamped negative dust) to
+    // the zero key so bit-pattern quirks can't reorder the set.
+    if residual <= 0.0 {
+        0
+    } else {
+        residual.to_bits()
+    }
+}
+
+/// Sorted-by-residual bin index for Best-Fit.
+#[derive(Clone, Debug, Default)]
+pub struct ResidualMap {
+    /// `(residual bits, bin index)`, ordered — the query structure.
+    set: BTreeSet<(u64, usize)>,
+    /// Current residual per bin — needed to locate a bin's set entry when
+    /// its residual changes.
+    residuals: Vec<f64>,
+}
+
+impl ResidualMap {
+    pub fn new() -> Self {
+        ResidualMap::default()
+    }
+
+    /// Number of tracked bins.
+    pub fn len(&self) -> usize {
+        self.residuals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.residuals.is_empty()
+    }
+
+    /// Append a new bin (index = current `len`) with the given residual.
+    pub fn push(&mut self, residual: f64) {
+        let idx = self.residuals.len();
+        self.residuals.push(residual);
+        self.set.insert((key(residual), idx));
+    }
+
+    /// Update bin `idx`'s residual.
+    pub fn set(&mut self, idx: usize, residual: f64) {
+        let old = self.residuals[idx];
+        self.set.remove(&(key(old), idx));
+        self.residuals[idx] = residual;
+        self.set.insert((key(residual), idx));
+    }
+
+    /// Drop all bins at index ≥ `len`.
+    pub fn truncate(&mut self, len: usize) {
+        while self.residuals.len() > len {
+            let idx = self.residuals.len() - 1;
+            let old = self.residuals.pop().unwrap();
+            self.set.remove(&(key(old), idx));
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.set.clear();
+        self.residuals.clear();
+    }
+
+    /// Tightest fitting bin: minimum residual ≥ `size − EPS`; ties go to
+    /// the lowest bin index (Best-Fit).
+    pub fn best_fit(&self, size: f64) -> Option<usize> {
+        let need = (size - EPS).max(0.0);
+        self.set
+            .range((key(need), 0usize)..)
+            .next()
+            .map(|&(_, idx)| idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_fit_picks_tightest() {
+        let mut m = ResidualMap::new();
+        m.push(0.3); // bin 0
+        m.push(0.5); // bin 1
+        m.push(0.25); // bin 2
+        assert_eq!(m.best_fit(0.26), Some(0));
+        assert_eq!(m.best_fit(0.25), Some(2));
+        assert_eq!(m.best_fit(0.4), Some(1));
+        assert_eq!(m.best_fit(0.6), None);
+    }
+
+    #[test]
+    fn ties_break_to_lowest_index() {
+        let mut m = ResidualMap::new();
+        m.push(0.4);
+        m.push(0.4);
+        m.push(0.4);
+        assert_eq!(m.best_fit(0.1), Some(0));
+        m.set(0, 0.05);
+        assert_eq!(m.best_fit(0.1), Some(1));
+    }
+
+    #[test]
+    fn updates_track_residual_changes() {
+        let mut m = ResidualMap::new();
+        m.push(1.0);
+        m.push(1.0);
+        m.set(0, 0.2);
+        assert_eq!(m.best_fit(0.15), Some(0));
+        assert_eq!(m.best_fit(0.5), Some(1));
+        m.set(0, 0.0);
+        assert_eq!(m.best_fit(0.15), Some(1));
+    }
+
+    #[test]
+    fn truncate_removes_entries() {
+        let mut m = ResidualMap::new();
+        m.push(0.9);
+        m.push(0.8);
+        m.push(0.7);
+        m.truncate(1);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.best_fit(0.5), Some(0));
+        m.truncate(0);
+        assert_eq!(m.best_fit(0.01), None);
+    }
+
+    #[test]
+    fn zero_and_negative_residuals_never_fit_real_items() {
+        let mut m = ResidualMap::new();
+        m.push(0.0);
+        m.push(-0.0);
+        assert_eq!(m.best_fit(0.001), None);
+    }
+}

@@ -1,0 +1,191 @@
+//! Max-residual segment tree over bin slots — the shared index behind the
+//! `O(log m)` First-Fit and Worst-Fit queries.
+//!
+//! Leaves hold per-bin residual capacity (`NEG_INFINITY` for unused slots);
+//! internal nodes hold the subtree max. Two descents answer the Any-Fit
+//! queries without scanning:
+//!
+//! * **first fit** — descend left-first into any subtree whose max fits:
+//!   the leftmost (lowest-index) bin with enough residual, exactly the
+//!   paper's First-Fit rule over `b1..bm`.
+//! * **worst fit** — descend toward the larger child (ties left): the
+//!   lowest-index bin with the globally largest residual. If that bin does
+//!   not fit, no bin does.
+//!
+//! Updates after a placement are `O(log m)`; growth doubles the leaf count
+//! and rebuilds in `O(m)` amortized.
+
+use crate::binpacking::EPS;
+
+/// Segment tree over bin residuals with leftmost-fit / leftmost-max descent.
+#[derive(Clone, Debug)]
+pub struct ResidualTree {
+    /// Number of leaves (power of two ≥ tracked bins).
+    leaves: usize,
+    /// `tree[i]` = max residual in the subtree; leaf `j` lives at
+    /// `leaves + j`.
+    tree: Vec<f64>,
+    /// Number of bin slots tracked (leaves beyond hold `NEG_INFINITY`).
+    len: usize,
+}
+
+impl ResidualTree {
+    pub fn new(capacity_hint: usize) -> Self {
+        let leaves = capacity_hint.next_power_of_two().max(1);
+        ResidualTree {
+            leaves,
+            tree: vec![f64::NEG_INFINITY; 2 * leaves],
+            len: 0,
+        }
+    }
+
+    /// Number of tracked bin slots.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Set bin `idx`'s residual, growing the tree as needed.
+    pub fn set(&mut self, idx: usize, residual: f64) {
+        if idx >= self.leaves {
+            self.grow(idx + 1);
+        }
+        let mut i = self.leaves + idx;
+        self.tree[i] = residual;
+        while i > 1 {
+            i /= 2;
+            self.tree[i] = self.tree[2 * i].max(self.tree[2 * i + 1]);
+        }
+        self.len = self.len.max(idx + 1);
+    }
+
+    /// Drop all bins at index ≥ `len` from the index.
+    pub fn truncate(&mut self, len: usize) {
+        while self.len > len {
+            let idx = self.len - 1;
+            self.len -= 1;
+            // Inline `set` without the len bump.
+            let mut i = self.leaves + idx;
+            self.tree[i] = f64::NEG_INFINITY;
+            while i > 1 {
+                i /= 2;
+                self.tree[i] = self.tree[2 * i].max(self.tree[2 * i + 1]);
+            }
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.truncate(0);
+    }
+
+    fn grow(&mut self, needed: usize) {
+        let new_leaves = needed.next_power_of_two();
+        let mut new_tree = vec![f64::NEG_INFINITY; 2 * new_leaves];
+        for j in 0..self.leaves {
+            new_tree[new_leaves + j] = self.tree[self.leaves + j];
+        }
+        for i in (1..new_leaves).rev() {
+            new_tree[i] = new_tree[2 * i].max(new_tree[2 * i + 1]);
+        }
+        self.leaves = new_leaves;
+        self.tree = new_tree;
+    }
+
+    /// Largest residual across all tracked bins.
+    pub fn max_residual(&self) -> f64 {
+        self.tree[1]
+    }
+
+    /// Lowest-index bin with residual ≥ `size − EPS`, if any (First-Fit).
+    pub fn first_fit(&self, size: f64) -> Option<usize> {
+        let need = size - EPS;
+        if self.tree[1] < need {
+            return None;
+        }
+        let mut i = 1;
+        while i < self.leaves {
+            i = if self.tree[2 * i] >= need { 2 * i } else { 2 * i + 1 };
+        }
+        Some(i - self.leaves)
+    }
+
+    /// Lowest-index bin holding the maximum residual, if that residual is
+    /// ≥ `size − EPS` (Worst-Fit; if the emptiest bin can't take the item,
+    /// no bin can).
+    pub fn worst_fit(&self, size: f64) -> Option<usize> {
+        let need = size - EPS;
+        if self.tree[1] < need {
+            return None;
+        }
+        let mut i = 1;
+        while i < self.leaves {
+            // `>=` prefers the left child on ties → lowest index.
+            i = if self.tree[2 * i] >= self.tree[2 * i + 1] {
+                2 * i
+            } else {
+                2 * i + 1
+            };
+        }
+        Some(i - self.leaves)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_fit_finds_leftmost() {
+        let mut t = ResidualTree::new(4);
+        t.set(0, 0.1);
+        t.set(1, 0.5);
+        t.set(2, 0.9);
+        assert_eq!(t.first_fit(0.4), Some(1));
+        assert_eq!(t.first_fit(0.05), Some(0));
+        assert_eq!(t.first_fit(0.95), None);
+    }
+
+    #[test]
+    fn worst_fit_finds_leftmost_max() {
+        let mut t = ResidualTree::new(4);
+        t.set(0, 0.3);
+        t.set(1, 0.9);
+        t.set(2, 0.9);
+        t.set(3, 0.5);
+        // Two bins tie at 0.9 — the lower index wins.
+        assert_eq!(t.worst_fit(0.4), Some(1));
+        assert_eq!(t.worst_fit(0.95), None);
+        assert!((t.max_residual() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grows_and_truncates() {
+        let mut t = ResidualTree::new(1);
+        for i in 0..37 {
+            t.set(i, 1.0 - i as f64 * 0.01);
+        }
+        assert_eq!(t.len(), 37);
+        assert_eq!(t.first_fit(0.99), Some(0));
+        t.truncate(5);
+        assert_eq!(t.len(), 5);
+        // Bins beyond 5 are gone from the index.
+        assert_eq!(t.worst_fit(0.5), Some(0));
+        t.set(0, 0.0);
+        assert_eq!(t.first_fit(0.995), None);
+        t.clear();
+        assert!(t.is_empty());
+        assert_eq!(t.first_fit(0.01), None);
+    }
+
+    #[test]
+    fn residual_tolerance_matches_bin_fits() {
+        // A bin loaded to 0.999999999 must reject a 0.1 item but the EPS
+        // slack must admit exact fits with float dust.
+        let mut t = ResidualTree::new(2);
+        t.set(0, 0.1 - 1e-12);
+        assert_eq!(t.first_fit(0.1), Some(0));
+    }
+}

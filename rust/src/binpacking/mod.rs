@@ -11,16 +11,50 @@
 //! lower-bound comparator, and the classic Harmonic(k) algorithm, plus
 //! packing-quality analysis (`ceil(Σ sizes)` ideal, asymptotic-ratio
 //! estimates) used by the ablation bench (DESIGN.md A1).
+//!
+//! ## Architecture: naive oracles + the indexed engine
+//!
+//! Every algorithm exists twice, deliberately:
+//!
+//! * [`algorithms`] holds the **naive reference scans** — direct
+//!   transcriptions of Algorithm 1, `O(m)` per item. They are the
+//!   property-test oracles and stay the ground truth for placement
+//!   semantics (ties on equal residuals break toward the lowest bin
+//!   index; residual comparisons use `f64::total_cmp` so NaN can never
+//!   panic the scheduler).
+//! * [`index`] holds the **indexed engine** ([`PackEngine`] /
+//!   [`IndexedPacker`]): the same placement decisions from purpose-built
+//!   indexes, used by the IRM allocator and the simulator hot loops.
+//!   `rust/tests/binpacking_equivalence.rs` proves naive ≡ indexed over
+//!   random streams, including pre-populated bins.
+//!
+//! Per-item placement complexity (m = open bins):
+//!
+//! | algorithm | naive scan | indexed | index structure |
+//! |---|---|---|---|
+//! | First-Fit | `O(m)` | `O(log m)` | max-residual segment tree, leftmost-fit descent |
+//! | Next-Fit | `O(1)` | `O(1)` | open-bin cursor |
+//! | Best-Fit | `O(m)` | `O(log m)` | ordered residual map (successor query) |
+//! | Worst-Fit | `O(m)` | `O(log m)` | max-residual segment tree, leftmost-max descent |
+//! | Harmonic(k) | `O(1)` amortized | `O(1)` (`O(log m)` when opening) | per-class open-bin buckets + free-bin pool |
+//! | FFD (offline) | `O(n log n + n·m)` | `O(n log n + n log m)` | sorted prefix + First-Fit tree |
+//!
+//! Incremental use (the IRM's per-control-cycle pattern) goes through
+//! [`PackEngine::sync_used`], which reconciles the engine to the live
+//! worker loads in place — no per-tick `Vec<Bin>` rebuild, no re-pack.
 
 pub mod algorithms;
 pub mod analysis;
 pub mod first_fit_tree;
+pub mod index;
 pub mod multidim;
 
 pub use algorithms::{
-    AnyFit, BestFit, BinPacker, FirstFit, FirstFitDecreasing, Harmonic, NextFit, WorstFit,
+    any_fit_insert, harmonic_insert, AnyFit, BestFit, BinPacker, FirstFit, FirstFitDecreasing,
+    Harmonic, NextFit, WorstFit,
 };
 pub use first_fit_tree::FirstFitTree;
+pub use index::{EngineRule, IndexedPacker, PackEngine};
 pub use multidim::{first_fit_md, ResourceVec, VecBin, VecItem};
 pub use analysis::{ideal_bins, performance_ratio, PackingStats};
 

@@ -8,7 +8,7 @@
 //! resulting in a mapping of where to host the queued PEs and how many
 //! worker VMs are needed to host these."
 
-use crate::binpacking::{BestFit, Bin, BinPacker, FirstFitTree, Item, NextFit, WorstFit};
+use crate::binpacking::{EngineRule, Item, PackEngine, EPS};
 use crate::irm::config::PackerChoice;
 use crate::irm::container_queue::ContainerRequest;
 use crate::types::{CpuFraction, ImageName, WorkerId};
@@ -44,9 +44,16 @@ pub struct PackOutcome {
     pub scheduled: Vec<(WorkerId, CpuFraction)>,
 }
 
-/// The bin-packing manager.
+/// The bin-packing manager. Owns a **live** [`PackEngine`]: the rule index
+/// (segment tree / ordered residual map / class buckets) persists across
+/// scheduling rounds, so each run costs `O(w + r log m)` — reconcile the
+/// observed worker loads in place, then place each request in `O(log m)` —
+/// instead of rebuilding `Vec<Bin>` and linear-scanning every bin per item.
 pub struct Allocator {
-    packer: Box<dyn BinPacker + Send>,
+    engine: PackEngine,
+    name: &'static str,
+    /// Scratch: this round's bin index per request (reused across runs).
+    assignments: Vec<usize>,
     /// Lifetime counters (observability / EXPERIMENTS.md).
     pub runs: u64,
     pub items_packed: u64,
@@ -54,23 +61,26 @@ pub struct Allocator {
 
 impl Allocator {
     pub fn new(choice: PackerChoice) -> Self {
-        let packer: Box<dyn BinPacker + Send> = match choice {
-            // The indexed variant: identical decisions to First-Fit,
-            // O(n log m) — property-tested equivalent (§Perf L3).
-            PackerChoice::FirstFit => Box::new(FirstFitTree),
-            PackerChoice::NextFit => Box::new(NextFit),
-            PackerChoice::BestFit => Box::new(BestFit),
-            PackerChoice::WorstFit => Box::new(WorstFit),
+        // Placement decisions are identical to the naive Any-Fit scans
+        // (property-tested, §Perf L3); only the lookup structure differs.
+        let (rule, name) = match choice {
+            PackerChoice::FirstFit => (EngineRule::First, "first-fit-tree"),
+            PackerChoice::NextFit => (EngineRule::Next, "next-fit-indexed"),
+            PackerChoice::BestFit => (EngineRule::Best, "best-fit-indexed"),
+            PackerChoice::WorstFit => (EngineRule::Worst, "worst-fit-indexed"),
+            PackerChoice::Harmonic(k) => (EngineRule::Harmonic(k), "harmonic-k-indexed"),
         };
         Allocator {
-            packer,
+            engine: PackEngine::new(rule, Vec::new()),
+            name,
+            assignments: Vec::new(),
             runs: 0,
             items_packed: 0,
         }
     }
 
     pub fn algorithm(&self) -> &'static str {
-        self.packer.name()
+        self.name
     }
 
     /// One bin-packing run over the waiting `requests`, against the current
@@ -79,20 +89,20 @@ impl Allocator {
         self.runs += 1;
         self.items_packed += requests.len() as u64;
 
-        let initial: Vec<Bin> = workers
-            .iter()
-            .map(|w| Bin::with_used(w.scheduled.value().min(1.0)))
-            .collect();
-        let items: Vec<Item> = requests
-            .iter()
-            .enumerate()
-            .map(|(i, r)| Item::new(i as u64, r.estimate.value().clamp(1e-3, 1.0)))
-            .collect();
+        // Reconcile the live engine to the observed loads: bins and index
+        // storage are reused; only changed loads touch the index.
+        self.engine
+            .sync_used(workers.iter().map(|w| w.scheduled.value().min(1.0)));
 
-        let packing = self.packer.pack(&items, initial);
+        self.assignments.clear();
+        for (i, r) in requests.iter().enumerate() {
+            let item = Item::new(i as u64, r.estimate.value().clamp(1e-3, 1.0));
+            self.assignments.push(self.engine.insert(item));
+        }
 
+        let bins = self.engine.bins();
         let mut outcome = PackOutcome {
-            bins_needed: packing.bins_used().max(
+            bins_needed: bins.iter().filter(|b| b.used > EPS).count().max(
                 // A pre-loaded worker counts as a needed bin even if this
                 // run placed nothing new on it.
                 workers
@@ -103,17 +113,16 @@ impl Allocator {
             ..PackOutcome::default()
         };
 
-        let mut requests = requests;
-        // Consume in reverse index order so removal by index stays valid.
-        let assignments = packing.assignments.clone();
-        for (i, req) in requests.drain(..).enumerate() {
-            let bin_idx = assignments[i];
+        for (i, req) in requests.into_iter().enumerate() {
+            let bin_idx = self.assignments[i];
             if bin_idx < workers.len() {
                 outcome.allocations.push(Allocation {
                     request: req,
                     worker: workers[bin_idx].worker,
                 });
             } else {
+                // Landed in a bin beyond the active workers: needs a VM
+                // that does not exist yet.
                 outcome.pending_new_workers.push(req);
             }
         }
@@ -122,7 +131,7 @@ impl Allocator {
         outcome.scheduled = workers
             .iter()
             .enumerate()
-            .map(|(i, w)| (w.worker, CpuFraction::new(packing.bins[i].used)))
+            .map(|(i, w)| (w.worker, CpuFraction::new(bins[i].used)))
             .collect();
 
         outcome
@@ -258,8 +267,66 @@ mod tests {
             Allocator::new(PackerChoice::FirstFit).algorithm(),
             "first-fit-tree"
         );
-        assert_eq!(Allocator::new(PackerChoice::BestFit).algorithm(), "best-fit");
-        assert_eq!(Allocator::new(PackerChoice::NextFit).algorithm(), "next-fit");
-        assert_eq!(Allocator::new(PackerChoice::WorstFit).algorithm(), "worst-fit");
+        assert_eq!(
+            Allocator::new(PackerChoice::BestFit).algorithm(),
+            "best-fit-indexed"
+        );
+        assert_eq!(
+            Allocator::new(PackerChoice::NextFit).algorithm(),
+            "next-fit-indexed"
+        );
+        assert_eq!(
+            Allocator::new(PackerChoice::WorstFit).algorithm(),
+            "worst-fit-indexed"
+        );
+        assert_eq!(
+            Allocator::new(PackerChoice::Harmonic(7)).algorithm(),
+            "harmonic-k-indexed"
+        );
+    }
+
+    #[test]
+    fn live_engine_consistent_across_rounds() {
+        // Round 2 must pack against the freshly observed loads, not
+        // leftovers of round 1's engine state.
+        let mut alloc = Allocator::new(PackerChoice::FirstFit);
+        let out1 = alloc.pack(requests(2, 0.4), &workers(&[0.0, 0.0]));
+        assert!(out1.allocations.iter().all(|a| a.worker == WorkerId(0)));
+        // The two PEs now run on worker 0 (scheduled 0.8); a 0.3 request
+        // must spill to worker 1.
+        let out2 = alloc.pack(requests(1, 0.3), &workers(&[0.8, 0.0]));
+        assert_eq!(out2.allocations[0].worker, WorkerId(1));
+        // Worker set shrinks (scale-down): the engine follows.
+        let out3 = alloc.pack(requests(1, 0.3), &workers(&[0.5]));
+        assert_eq!(out3.allocations[0].worker, WorkerId(0));
+        assert_eq!(alloc.runs, 3);
+        assert_eq!(alloc.items_packed, 4);
+    }
+
+    #[test]
+    fn harmonic_choice_uses_idle_workers() {
+        // Harmonic can't mix classes into loaded bins, but it must claim
+        // idle (empty) workers — otherwise every request would pend for
+        // new VMs forever while capacity sits unused.
+        let mut alloc = Allocator::new(PackerChoice::Harmonic(7));
+        let out = alloc.pack(requests(2, 0.4), &workers(&[0.0, 0.5]));
+        assert_eq!(out.allocations.len(), 2, "both class-2 items placed");
+        assert!(out.allocations.iter().all(|a| a.worker == WorkerId(0)));
+        assert!(out.pending_new_workers.is_empty());
+        // The loaded worker stays closed: a third item of the same class
+        // opens a new (pending) bin rather than touching worker 1.
+        let out = alloc.pack(requests(2, 0.4), &workers(&[0.8, 0.5]));
+        assert!(out.allocations.is_empty());
+        assert_eq!(out.pending_new_workers.len(), 2);
+    }
+
+    #[test]
+    fn best_fit_choice_packs_tightest_worker() {
+        let mut alloc = Allocator::new(PackerChoice::BestFit);
+        let out = alloc.pack(requests(1, 0.3), &workers(&[0.5, 0.7]));
+        assert_eq!(out.allocations[0].worker, WorkerId(1));
+        let mut alloc = Allocator::new(PackerChoice::WorstFit);
+        let out = alloc.pack(requests(1, 0.3), &workers(&[0.5, 0.7]));
+        assert_eq!(out.allocations[0].worker, WorkerId(0));
     }
 }

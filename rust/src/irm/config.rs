@@ -2,14 +2,17 @@
 
 use crate::types::{CpuFraction, Millis};
 
-/// Which Any-Fit algorithm the bin-packing manager runs (First-Fit in the
-/// paper; the rest exist for the A1 ablation).
+/// Which packing algorithm the bin-packing manager runs (First-Fit in the
+/// paper; the rest exist for the A1 ablation). Every choice maps onto the
+/// indexed engine (`O(log m)` per placement) in the allocator.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PackerChoice {
     FirstFit,
     NextFit,
     BestFit,
     WorstFit,
+    /// Harmonic with `k` classes (k ≥ 2).
+    Harmonic(usize),
 }
 
 /// Idle-worker buffer policy (§V-A: "a small buffer of idle workers are

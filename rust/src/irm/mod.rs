@@ -80,6 +80,10 @@ pub struct Irm {
     last_scheduled: Vec<(WorkerId, CpuFraction)>,
     last_bins_needed: usize,
     last_target: usize,
+    /// Reused per-cycle buffers (the control loop runs every sim tick —
+    /// it must not rebuild vectors it can refill).
+    bins_buf: Vec<WorkerBin>,
+    states_buf: Vec<WorkerState>,
 }
 
 impl Irm {
@@ -99,6 +103,8 @@ impl Irm {
             last_scheduled: Vec::new(),
             last_bins_needed: 0,
             last_target: 0,
+            bins_buf: Vec::new(),
+            states_buf: Vec::new(),
         }
     }
 
@@ -152,17 +158,16 @@ impl Irm {
         if self.binpack_timer.fire(now) {
             self.queue.refresh_estimates(&self.profiler);
             let requests = self.queue.drain();
-            let bins: Vec<WorkerBin> = view
-                .workers
-                .iter()
-                .map(|(id, images)| WorkerBin {
+            self.bins_buf.clear();
+            for (id, images) in &view.workers {
+                self.bins_buf.push(WorkerBin {
                     worker: *id,
                     scheduled: allocator::scheduled_load(images, |img| {
                         self.profiler.estimate(img)
                     }),
-                })
-                .collect();
-            let outcome = self.allocator.pack(requests, &bins);
+                });
+            }
+            let outcome = self.allocator.pack(requests, &self.bins_buf);
             for req in outcome.pending_new_workers {
                 // Failed hosting attempt (target VM does not exist yet):
                 // requeue with TTL decrement, as §V-B2 specifies.
@@ -176,17 +181,14 @@ impl Irm {
         }
 
         // --- 3. Auto-scaler: worker supply vs bins needed. ---
-        let worker_states: Vec<WorkerState> = view
-            .workers
-            .iter()
-            .map(|(id, images)| WorkerState {
-                worker: *id,
-                pe_count: images.len(),
-            })
-            .collect();
+        self.states_buf.clear();
+        self.states_buf.extend(view.workers.iter().map(|(id, images)| WorkerState {
+            worker: *id,
+            pe_count: images.len(),
+        }));
         let plan = self
             .scaler
-            .plan(now, self.last_bins_needed, &worker_states, view.booting_vms);
+            .plan(now, self.last_bins_needed, &self.states_buf, view.booting_vms);
         self.last_target = plan.target_workers;
         update.request_vms = plan.request_vms;
         update.terminate_workers = plan.terminate;

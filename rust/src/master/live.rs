@@ -15,6 +15,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::runtime::xla;
 use crate::types::{IdGen, ImageName, MessageId, PeId};
 use crate::util::json::Json;
 use crate::worker::live::{LiveJob, LivePe, LiveResult};

@@ -13,6 +13,10 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 
+/// PJRT bindings: the offline shim (see its docs). Swapping in the real
+/// `xla` crate means deleting this `mod` and adding the dependency.
+pub(crate) mod xla;
+
 /// Artifact metadata (one entry of `artifacts/manifest.json`).
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {

@@ -69,6 +69,14 @@ pub struct Completion {
     pub completed_at: Millis,
 }
 
+/// Cached per-slot series names, so sampling doesn't `format!` three
+/// strings per worker slot every second of sim time.
+struct SlotSeries {
+    measured: String,
+    scheduled: String,
+    error_pp: String,
+}
+
 /// The simulated cluster.
 pub struct SimCluster {
     pub cfg: ClusterConfig,
@@ -95,6 +103,12 @@ pub struct SimCluster {
     pub failed_deliveries: u64,
     sample_timer: crate::clock::Periodic,
     now: Millis,
+    /// Reused per-tick buffers (§Perf: the tick loop is allocation-free at
+    /// steady state — no per-tick view rebuild, event vectors or strings).
+    view: ClusterView,
+    worker_events: Vec<(WorkerId, WorkerEvent)>,
+    event_scratch: Vec<WorkerEvent>,
+    slot_series: Vec<SlotSeries>,
 }
 
 impl SimCluster {
@@ -115,8 +129,17 @@ impl SimCluster {
             failed_deliveries: 0,
             sample_timer: crate::clock::Periodic::new(cfg.sample_interval),
             now: Millis::ZERO,
+            view: ClusterView::default(),
+            worker_events: Vec::new(),
+            event_scratch: Vec::new(),
+            slot_series: Vec::new(),
             cfg,
         }
+    }
+
+    /// Position of worker `id` in the (id-sorted) worker list.
+    fn worker_pos(&self, id: WorkerId) -> Option<usize> {
+        self.workers.binary_search_by_key(&id, |w| w.id).ok()
     }
 
     /// Schedule a stream arrival at absolute sim time `at`.
@@ -206,8 +229,8 @@ impl SimCluster {
             );
             if let RouteDecision::Direct { worker, pe } = decision {
                 let demand_check = msg.id;
-                if let Some(w) = self.workers.iter_mut().find(|w| w.id == worker) {
-                    if let Err(back) = w.deliver(pe, msg, now) {
+                if let Some(pos) = self.worker_pos(worker) {
+                    if let Err(back) = self.workers[pos].deliver(pe, msg, now) {
                         // PE vanished between report and delivery.
                         self.failed_deliveries += 1;
                         self.master.requeue_front(back);
@@ -243,14 +266,17 @@ impl SimCluster {
             self.workers.sort_by_key(|w| w.id);
         }
 
-        // --- 3. Workers advance. ---
-        let mut worker_events: Vec<(WorkerId, WorkerEvent)> = Vec::new();
+        // --- 3. Workers advance (reused event buffers — no per-tick
+        // allocation once the cluster is warm). ---
+        self.worker_events.clear();
         for w in &mut self.workers {
-            for e in w.tick(now) {
-                worker_events.push((w.id, e));
+            self.event_scratch.clear();
+            w.tick_into(now, &mut self.event_scratch);
+            for e in self.event_scratch.drain(..) {
+                self.worker_events.push((w.id, e));
             }
         }
-        for (wid, event) in worker_events {
+        for (wid, event) in self.worker_events.drain(..) {
             match event {
                 WorkerEvent::Report(report) => {
                     self.irm.ingest_report(&report);
@@ -282,8 +308,8 @@ impl SimCluster {
 
         // --- 4. Backlog drain (queued messages have priority). ---
         for (wid, pe, msg) in self.master.drain_backlog() {
-            if let Some(w) = self.workers.iter_mut().find(|w| w.id == wid) {
-                if let Err(back) = w.deliver(pe, msg, now) {
+            if let Some(pos) = self.worker_pos(wid) {
+                if let Err(back) = self.workers[pos].deliver(pe, msg, now) {
                     self.failed_deliveries += 1;
                     self.master.requeue_front(back);
                 }
@@ -292,35 +318,17 @@ impl SimCluster {
             }
         }
 
-        // --- 5. IRM control cycle. ---
-        let view = ClusterView {
-            workers: self
-                .workers
-                .iter()
-                .map(|w| {
-                    (
-                        w.id,
-                        w.pes()
-                            .iter()
-                            // Stopping containers are no longer part of the
-                            // bin: the packer must not count their space.
-                            .filter(|p| {
-                                p.state() != crate::protocol::PeState::Stopping
-                            })
-                            .map(|p| p.image.clone())
-                            .collect::<Vec<_>>(),
-                    )
-                })
-                .collect(),
-            booting_vms: self.cloud.booting_vms().len(),
-        };
-        let update = self.irm.control_cycle(now, &mut self.master, &view);
+        // --- 5. IRM control cycle (the view buffer — outer vector, inner
+        // image vectors — is reused across ticks; image clones are Arc
+        // refcount bumps). ---
+        self.refresh_view();
+        let update = self.irm.control_cycle(now, &mut self.master, &self.view);
 
         for alloc in update.start_pes {
             let demand = self.demand_for(&alloc.request.image);
             let pull = self.pull_wait(alloc.worker, &alloc.request.image, now);
-            if let Some(w) = self.workers.iter_mut().find(|w| w.id == alloc.worker) {
-                w.start_pe_with_pull(alloc.request.image.clone(), demand, now, pull);
+            if let Some(pos) = self.worker_pos(alloc.worker) {
+                self.workers[pos].start_pe_with_pull(alloc.request.image.clone(), demand, now, pull);
             } else {
                 // Worker vanished (scale-down race): requeue per §V-B2.
                 self.irm.queue.requeue(alloc.request);
@@ -331,7 +339,7 @@ impl SimCluster {
             let _ = self.cloud.request_vm(now);
         }
         for wid in update.terminate_workers {
-            if let Some(pos) = self.workers.iter().position(|w| w.id == wid) {
+            if let Some(pos) = self.worker_pos(wid) {
                 let w = self.workers.remove(pos);
                 debug_assert_eq!(w.pe_count(), 0, "terminating a non-empty worker");
                 if let Some(vm) = self.vm_of_worker.remove(&wid) {
@@ -348,13 +356,52 @@ impl SimCluster {
         }
     }
 
+    /// Rebuild the IRM's cluster view **in place**: the outer vector and
+    /// the per-worker image vectors are reused; only the Arc-backed image
+    /// names are (cheaply) cloned.
+    fn refresh_view(&mut self) {
+        let n = self.workers.len();
+        self.view.workers.truncate(n);
+        for (i, w) in self.workers.iter().enumerate() {
+            let images = w
+                .pes()
+                .iter()
+                // Stopping containers are no longer part of the bin: the
+                // packer must not count their space.
+                .filter(|p| p.state() != crate::protocol::PeState::Stopping)
+                .map(|p| p.image.clone());
+            if let Some(entry) = self.view.workers.get_mut(i) {
+                entry.0 = w.id;
+                entry.1.clear();
+                entry.1.extend(images);
+            } else {
+                self.view.workers.push((w.id, images.collect()));
+            }
+        }
+        self.view.booting_vms = self.cloud.booting_vms().len();
+    }
+
     fn sample(&mut self, now: Millis) {
+        // Per-slot series names are formatted once per slot lifetime.
+        while self.slot_series.len() < self.used_slots.len() {
+            let slot = self.slot_series.len();
+            self.slot_series.push(SlotSeries {
+                measured: format!("w{slot}.measured"),
+                scheduled: format!("w{slot}.scheduled"),
+                error_pp: format!("w{slot}.error_pp"),
+            });
+        }
         // Per-slot measured + scheduled CPU (absent workers sample 0 —
-        // a terminated bin is an idle bin).
+        // a terminated bin is an idle bin). Workers are id-sorted, so one
+        // merge-walk covers every slot without per-slot scans.
+        let mut wi = 0;
         for slot in 0..self.used_slots.len() {
             let wid = WorkerId(slot as u64);
-            let (measured, scheduled) = match self.workers.iter().find(|w| w.id == wid) {
-                Some(w) => {
+            while wi < self.workers.len() && self.workers[wi].id < wid {
+                wi += 1;
+            }
+            let (measured, scheduled) = match self.workers.get(wi) {
+                Some(w) if w.id == wid => {
                     let sched: f64 = w
                         .pes()
                         .iter()
@@ -363,17 +410,13 @@ impl SimCluster {
                         .sum();
                     (w.last_total_cpu.value(), sched)
                 }
-                None => (0.0, 0.0),
+                _ => (0.0, 0.0),
             };
+            let names = &self.slot_series[slot];
+            self.recorder.record(&names.measured, now, measured);
+            self.recorder.record(&names.scheduled, now, scheduled);
             self.recorder
-                .record(&format!("w{slot}.measured"), now, measured);
-            self.recorder
-                .record(&format!("w{slot}.scheduled"), now, scheduled);
-            self.recorder.record(
-                &format!("w{slot}.error_pp"),
-                now,
-                (scheduled - measured) * 100.0,
-            );
+                .record(&names.error_pp, now, (scheduled - measured) * 100.0);
         }
         self.recorder
             .record("queue.len", now, self.master.backlog_len() as f64);

@@ -2,6 +2,7 @@
 
 use std::fmt;
 use std::ops::{Add, AddAssign, Div, Mul, Sub};
+use std::sync::Arc;
 
 /// Milliseconds of (virtual or real) time since an arbitrary epoch.
 ///
@@ -175,12 +176,18 @@ id_type!(
 ///
 /// The paper's stream request carries "the docker container and tag that a
 /// PE needs to run to process the data"; we keep the same shape.
+///
+/// Internally an `Arc<str>`: image names are cloned on every routing
+/// decision, worker report, cluster-view rebuild and pull-cache probe, so
+/// `clone` must be a refcount bump, not a heap copy (§Perf — the simulator
+/// tick used to allocate a string per hosted PE per tick). Equality,
+/// ordering and hashing follow the string contents.
 #[derive(Clone, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
-pub struct ImageName(pub String);
+pub struct ImageName(Arc<str>);
 
 impl ImageName {
     pub fn new(s: impl Into<String>) -> Self {
-        ImageName(s.into())
+        ImageName(Arc::from(s.into()))
     }
 
     pub fn as_str(&self) -> &str {
@@ -196,7 +203,7 @@ impl fmt::Display for ImageName {
 
 impl From<&str> for ImageName {
     fn from(s: &str) -> Self {
-        ImageName(s.to_string())
+        ImageName(Arc::from(s))
     }
 }
 
@@ -273,6 +280,16 @@ mod tests {
         assert_eq!(PeId(3).to_string(), "pe-3");
         assert_eq!(WorkerId(0).to_string(), "w-0");
         assert_eq!(VmId(7).to_string(), "vm-7");
+    }
+
+    #[test]
+    fn image_name_clone_shares_storage() {
+        let a = ImageName::new("nuclei:latest");
+        let b = a.clone();
+        assert!(Arc::ptr_eq(&a.0, &b.0), "clone must be a refcount bump");
+        assert_eq!(a, b);
+        assert_eq!(a.as_str(), "nuclei:latest");
+        assert_eq!(ImageName::from("x"), ImageName::new("x"));
     }
 
     #[test]

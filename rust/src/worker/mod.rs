@@ -209,12 +209,20 @@ impl Worker {
 
     /// Advance the worker by one step ending at `now`.
     pub fn tick(&mut self, now: Millis) -> Vec<WorkerEvent> {
+        let mut events = Vec::new();
+        self.tick_into(now, &mut events);
+        events
+    }
+
+    /// Advance the worker, appending events to a caller-owned buffer — the
+    /// simulator's per-tick path, so a loaded cluster doesn't allocate one
+    /// event vector per worker per tick.
+    pub fn tick_into(&mut self, now: Millis, events: &mut Vec<WorkerEvent>) {
         let dt = match self.last_tick {
             None => Millis::ZERO,
             Some(last) => now - last,
         };
         self.last_tick = Some(now);
-        let mut events = Vec::new();
 
         // 1. Boot transitions.
         for p in &mut self.pes {
@@ -316,8 +324,6 @@ impl Worker {
             self.acc_cpu_ms.clear();
             self.acc_window_ms = 0.0;
         }
-
-        events
     }
 
     /// Build the report from busy-time-averaged CPU per PE.

@@ -1,0 +1,222 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The build image has no crates.io access, so this vendored shim provides
+//! the subset of the `anyhow` 1.x API the codebase uses: [`Error`] with a
+//! context chain, the [`Result`] alias, the [`Context`] extension trait for
+//! `Result` and `Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//! Formatting matches anyhow's conventions: `{}` prints the outermost
+//! message, `{:#}` prints the whole chain joined by `: `, and `{:?}` prints
+//! the message followed by a `Caused by:` list.
+//!
+//! Swap this path dependency for the real crate if the build environment
+//! ever gains registry access — no call sites need to change.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the same defaulted error type as anyhow.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error with a chain of context messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Prepend a context message (what `.context(..)` does).
+    fn wrap(mut self, context: String) -> Error {
+        self.chain.insert(0, context);
+        self
+    }
+
+    /// The messages in the chain, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like anyhow: any std error converts, capturing its source chain. `Error`
+// itself deliberately does NOT implement `std::error::Error`, which is what
+// keeps this blanket impl coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, context: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, context: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(context().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, context: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $($arg:tt)*)?) => {
+        $crate::Error::msg(format!($fmt $(, $($arg)*)?))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+).into())
+    };
+}
+
+/// `if !cond { bail!(..) }`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+).into());
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: `{}`", stringify!($cond)).into());
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_outermost_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing file");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("missing file"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let e = None::<u32>.context("nothing here").unwrap_err();
+        assert_eq!(e.to_string(), "nothing here");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let v: Result<u32> = Ok(7);
+        let called = std::cell::Cell::new(false);
+        let v = v.with_context(|| {
+            called.set(true);
+            "ctx"
+        });
+        assert_eq!(v.unwrap(), 7);
+        assert!(!called.get(), "context closure must be lazy");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn fails(n: u32) -> Result<u32> {
+            ensure!(n < 10, "n too big: {n}");
+            if n == 5 {
+                bail!("five is right out");
+            }
+            Err(anyhow!("fell through with {}", n))
+        }
+        assert_eq!(fails(12).unwrap_err().to_string(), "n too big: 12");
+        assert_eq!(fails(5).unwrap_err().to_string(), "five is right out");
+        assert_eq!(fails(1).unwrap_err().to_string(), "fell through with 1");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn chain_and_root_cause() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("inner")
+            .context("outer")
+            .unwrap_err();
+        let msgs: Vec<&str> = e.chain().collect();
+        assert_eq!(msgs, vec!["outer", "inner", "missing file"]);
+        assert_eq!(e.root_cause(), "missing file");
+    }
+}

@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Perf + hygiene gate: formatting, lints, and the bin-packing benchmark
+# trajectory. Run from the repo root (where Cargo.toml lives):
+#
+#   ./scripts/bench_check.sh [--quick]
+#
+# --quick shrinks the bench budget (BENCH_MEASURE_MS) for smoke runs.
+#
+# Emits BENCH_binpacking.json at the repo root (copied from
+# results/bench_binpacking.json, which cargo bench writes) so every PR
+# leaves a comparable perf artifact behind.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+QUICK=0
+if [[ "${1:-}" == "--quick" ]]; then
+    QUICK=1
+fi
+
+echo "== cargo fmt --check"
+cargo fmt --check
+
+echo "== cargo clippy -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "== cargo bench --bench bench_binpacking"
+if [[ "$QUICK" == "1" ]]; then
+    # BENCH_QUICK=1 also skips the fixed-budget heavy sections (naive 50k
+    # baselines, 10^5-10^6 scaling runs) inside the bench itself.
+    BENCH_QUICK=1 BENCH_WARMUP_MS=20 BENCH_MEASURE_MS=100 \
+        cargo bench --bench bench_binpacking
+else
+    cargo bench --bench bench_binpacking
+fi
+
+if [[ ! -f results/bench_binpacking.json ]]; then
+    echo "error: results/bench_binpacking.json missing" >&2
+    exit 1
+fi
+if [[ "$QUICK" == "1" ]]; then
+    # Quick runs skip the naive baselines and scaling series — don't
+    # overwrite the real perf-trajectory artifact with a degraded set.
+    cp results/bench_binpacking.json BENCH_binpacking.quick.json
+    echo "== wrote BENCH_binpacking.quick.json (quick run; BENCH_binpacking.json untouched)"
+else
+    cp results/bench_binpacking.json BENCH_binpacking.json
+    echo "== wrote BENCH_binpacking.json"
+fi
