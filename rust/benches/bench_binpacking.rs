@@ -11,8 +11,9 @@ use std::time::Duration;
 
 use harmonicio::bench::{black_box, Bencher};
 use harmonicio::binpacking::{
-    analysis, BestFit, Bin, BinPacker, EngineRule, FirstFit, FirstFitDecreasing, FirstFitTree,
-    Harmonic, IndexedPacker, Item, NextFit, PackEngine, WorstFit,
+    analysis, first_fit_md_in, BestFit, Bin, BinPacker, EngineRule, FirstFit, FirstFitDecreasing,
+    FirstFitTree, Harmonic, IndexedPacker, Item, NextFit, PackEngine, ResourceVec, VecItem,
+    VecPackEngine, WorstFit,
 };
 use harmonicio::util::rng::Rng;
 
@@ -26,6 +27,23 @@ fn instance(n: usize, seed: u64) -> Vec<Item> {
                 rng.uniform(0.2, 0.9)
             };
             Item::new(i as u64, size)
+        })
+        .collect()
+}
+
+/// CellProfiler-shaped vector items: ~1-core CPU, RAM-heavy, light net.
+fn md_instance(n: usize, seed: u64) -> Vec<VecItem> {
+    let mut rng = Rng::seeded(seed);
+    (0..n)
+        .map(|i| {
+            VecItem::new(
+                i as u64,
+                ResourceVec::new(
+                    rng.uniform(0.08, 0.2),
+                    rng.uniform(0.15, 0.4),
+                    rng.uniform(0.01, 0.1),
+                ),
+            )
         })
         .collect()
 }
@@ -109,6 +127,41 @@ fn main() {
         });
     }
     report_speedups(&b);
+
+    // --- Multi-dimensional (vector) packing: naive O(n·m) scan vs the
+    // per-dimension-tree engine, on RAM-bound (many-bin) instances. The
+    // results merge into the same results/bench_binpacking.json artifact
+    // that bench_check.sh publishes as BENCH_binpacking.json.
+    println!("\n# multi-dim (vector) naive vs indexed");
+    let md = md_instance(20_000, 13);
+    if !quick {
+        let mut heavy = Bencher::with_budget(Duration::from_millis(0), Duration::from_secs(2), 3);
+        heavy.bench_throughput("md-first-fit-naive/20000", Some(20_000), |iters| {
+            for _ in 0..iters {
+                black_box(first_fit_md_in(
+                    black_box(&md),
+                    Vec::new(),
+                    ResourceVec::UNIT,
+                ));
+            }
+        });
+        b.absorb(heavy);
+    }
+    b.bench_throughput("md-first-fit-indexed/20000", Some(20_000), |iters| {
+        for _ in 0..iters {
+            black_box(
+                VecPackEngine::new(Vec::new(), ResourceVec::UNIT).pack_all(black_box(&md)),
+            );
+        }
+    });
+    // Heterogeneous flavor mix: half-size bins double the bin count.
+    let large = ResourceVec::new(0.5, 0.5, 1.0);
+    b.bench_throughput("md-first-fit-indexed-hetero/20000", Some(20_000), |iters| {
+        for _ in 0..iters {
+            black_box(VecPackEngine::new(Vec::new(), large).pack_all(black_box(&md)));
+        }
+    });
+    report_md_speedup(&b);
 
     // Indexed-only scaling runs: 10⁵–10⁶ items (the regime the synthetic
     // and microscopy sweeps need; naive would take minutes per pack).
@@ -203,5 +256,24 @@ fn report_speedups(b: &Bencher) {
         ) {
             println!("speedup {rule:<10} naive/indexed = {:.1}x", naive / indexed);
         }
+    }
+}
+
+/// Same, for the multi-dimensional engine.
+fn report_md_speedup(b: &Bencher) {
+    let median = |name: &str| {
+        b.results()
+            .iter()
+            .find(|m| m.name == name)
+            .map(|m| m.median_ns)
+    };
+    if let (Some(naive), Some(indexed)) = (
+        median("md-first-fit-naive/20000"),
+        median("md-first-fit-indexed/20000"),
+    ) {
+        println!(
+            "speedup md-first-fit naive/indexed = {:.1}x",
+            naive / indexed
+        );
     }
 }

@@ -48,9 +48,11 @@ fn main() {
     // placements; the old rebuild-and-scan path was O(r·m) per round). ---
     for &m in &[10_000usize, 100_000] {
         let workers: Vec<WorkerBin> = (0..m)
-            .map(|i| WorkerBin {
-                worker: WorkerId(i as u64),
-                scheduled: CpuFraction::new((i % 97) as f64 / 113.0),
+            .map(|i| {
+                WorkerBin::cpu(
+                    WorkerId(i as u64),
+                    CpuFraction::new((i % 97) as f64 / 113.0),
+                )
             })
             .collect();
         let image = ImageName::new("img");
@@ -60,6 +62,7 @@ fn main() {
                 image: image.clone(),
                 ttl: 10,
                 estimate: CpuFraction::new(0.125),
+                estimate_vec: harmonicio::binpacking::ResourceVec::cpu(0.125),
                 origin: RequestOrigin::AutoScale,
                 enqueued_at: Millis::ZERO,
                 requeues: 0,

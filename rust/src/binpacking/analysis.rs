@@ -2,6 +2,7 @@
 //! *active bins* lower bound is `ceil(Σ item sizes)`) and asymptotic-ratio
 //! estimation used by the algorithm ablation (DESIGN.md A1).
 
+use super::multidim::{ideal_bins_md, VecItem, VecPacking, DIMS};
 use super::{BinPacker, Item, Packing, EPS};
 
 /// Lower bound on the optimal number of unit bins: `ceil(Σ sizes)`.
@@ -51,6 +52,56 @@ pub fn stats(packing: &Packing, items: &[Item]) -> PackingStats {
         ratio: performance_ratio(packing, items),
         mean_load,
         waste,
+    }
+}
+
+/// Summary statistics for one multi-dimensional packing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VecPackingStats {
+    pub bins_used: usize,
+    /// Unit-capacity lower bound (`max_d ceil(Σ size_d)`).
+    pub ideal_bins: usize,
+    /// `bins_used / ideal_bins` (empirical instance ratio).
+    pub ratio: f64,
+    /// Mean per-dimension load of non-empty bins, as a fraction of each
+    /// bin's own capacity.
+    pub mean_load: [f64; DIMS],
+    /// Worst per-dimension *overcommit* across bins: `max_i (used_d −
+    /// cap_d)`, zero when every bin respects its capacity. Non-zero only
+    /// for packings produced by a capacity-blind (CPU-only) model — the
+    /// quantity the multi-dim ablation reports.
+    pub overcommit: [f64; DIMS],
+}
+
+/// Stats for a vector packing (the multi-dim ablation's table rows).
+pub fn stats_md(packing: &VecPacking, items: &[VecItem]) -> VecPackingStats {
+    let mut mean_load = [0.0f64; DIMS];
+    let mut overcommit = [0.0f64; DIMS];
+    let mut bins_used = 0usize;
+    for b in &packing.bins {
+        if b.items.is_empty() && b.used.dominant() <= EPS {
+            continue;
+        }
+        bins_used += 1;
+        for d in 0..DIMS {
+            if b.capacity.0[d] > 0.0 {
+                mean_load[d] += b.used.0[d] / b.capacity.0[d];
+            }
+            overcommit[d] = overcommit[d].max(b.used.0[d] - b.capacity.0[d]);
+        }
+    }
+    if bins_used > 0 {
+        for l in &mut mean_load {
+            *l /= bins_used as f64;
+        }
+    }
+    let ideal = ideal_bins_md(items);
+    VecPackingStats {
+        bins_used,
+        ideal_bins: ideal,
+        ratio: bins_used as f64 / ideal.max(1) as f64,
+        mean_load,
+        overcommit,
     }
 }
 

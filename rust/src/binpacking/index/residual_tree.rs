@@ -112,6 +112,42 @@ impl ResidualTree {
         Some(i - self.leaves)
     }
 
+    /// Lowest-index bin at index ≥ `lo` with residual ≥ `size − EPS`, if
+    /// any — the successor form of [`first_fit`](Self::first_fit), used by
+    /// the multi-dimensional engine to walk candidate bins in index order
+    /// (a candidate that fits the keyed dimension may still fail another
+    /// dimension; the caller resumes the search from `idx + 1`).
+    pub fn first_fit_from(&self, size: f64, lo: usize) -> Option<usize> {
+        let need = size - EPS;
+        if lo >= self.len {
+            return None;
+        }
+        // Climb from leaf `lo`: the leaf itself, then every right sibling
+        // subtree hanging off the root path covers exactly the indices
+        // ≥ lo, in order.
+        let mut i = self.leaves + lo;
+        if self.tree[i] >= need {
+            return Some(lo);
+        }
+        while i > 1 {
+            if i % 2 == 0 && self.tree[i + 1] >= need {
+                // Descend leftmost-fit into the right sibling.
+                let mut j = i + 1;
+                while j < self.leaves {
+                    j = if self.tree[2 * j] >= need {
+                        2 * j
+                    } else {
+                        2 * j + 1
+                    };
+                }
+                let idx = j - self.leaves;
+                return (idx < self.len).then_some(idx);
+            }
+            i /= 2;
+        }
+        None
+    }
+
     /// Lowest-index bin holding the maximum residual, if that residual is
     /// ≥ `size − EPS` (Worst-Fit; if the emptiest bin can't take the item,
     /// no bin can).
@@ -178,6 +214,26 @@ mod tests {
         t.clear();
         assert!(t.is_empty());
         assert_eq!(t.first_fit(0.01), None);
+    }
+
+    #[test]
+    fn first_fit_from_walks_candidates_in_index_order() {
+        let mut t = ResidualTree::new(8);
+        t.set(0, 0.1);
+        t.set(1, 0.5);
+        t.set(2, 0.2);
+        t.set(3, 0.5);
+        t.set(4, 0.9);
+        assert_eq!(t.first_fit_from(0.4, 0), Some(1));
+        assert_eq!(t.first_fit_from(0.4, 1), Some(1));
+        assert_eq!(t.first_fit_from(0.4, 2), Some(3));
+        assert_eq!(t.first_fit_from(0.4, 4), Some(4));
+        assert_eq!(t.first_fit_from(0.95, 0), None);
+        assert_eq!(t.first_fit_from(0.4, 5), None, "lo beyond tracked bins");
+        // Agreement with the plain query at lo = 0 across sizes.
+        for size in [0.05, 0.15, 0.3, 0.6, 0.89] {
+            assert_eq!(t.first_fit_from(size, 0), t.first_fit(size));
+        }
     }
 
     #[test]

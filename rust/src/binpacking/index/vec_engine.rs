@@ -1,0 +1,269 @@
+//! The multi-dimensional indexed engine: vector First-Fit over
+//! heterogeneous-capacity bins in `O(log m)` expected per placement.
+//!
+//! One [`ResidualTree`] per resource dimension tracks each bin's residual
+//! capacity in that dimension. A placement keys its candidate search on
+//! the item's **dominant dimension** (its largest component — the
+//! strongest pruner): [`ResidualTree::first_fit_from`] yields, in index
+//! order, exactly the bins whose keyed residual fits, and each candidate
+//! is then fit-checked over **all** dimensions. Bins the walk skips could
+//! not have fit anyway (the keyed dimension must fit too), so the first
+//! fully fitting candidate is the lowest-index fitting bin — placement-
+//! identical to the naive
+//! [`first_fit_md_in`](crate::binpacking::multidim::first_fit_md_in)
+//! oracle, which
+//! `rust/tests/binpacking_multidim_equivalence.rs` proves property-wise
+//! over random item streams and random flavor mixes.
+//!
+//! The walk visits one candidate in the common case (IRM streams key on
+//! the binding dimension most of the time). An adversarial stream — keyed
+//! dimension loose on every bin while another dimension binds — pays one
+//! `O(log m)` query per rejected candidate, i.e. `O(m log m)` worst case
+//! per item, a log factor *over* the naive scan; prefer the naive oracle
+//! for such shapes.
+
+use super::residual_tree::ResidualTree;
+use crate::binpacking::multidim::{
+    clamp_to_flavor, ResourceVec, VecBin, VecItem, VecPacking, DIMS,
+};
+
+/// A stateful, indexed multi-dimensional bin-packer: bins plus one
+/// residual tree per dimension, kept consistent across
+/// [`insert`](VecPackEngine::insert) calls. The vector analogue of
+/// [`PackEngine`](super::PackEngine) (First-Fit only — the paper's rule).
+#[derive(Clone, Debug)]
+pub struct VecPackEngine {
+    bins: Vec<VecBin>,
+    /// Capacity of bins opened beyond the initial set — the flavor the
+    /// cloud will provision for the IRM's `pending_new_workers`.
+    new_capacity: ResourceVec,
+    trees: Vec<ResidualTree>,
+}
+
+impl VecPackEngine {
+    /// Build an engine over `initial` bins (possibly pre-loaded, possibly
+    /// heterogeneous). `new_capacity` must be non-zero in the CPU
+    /// dimension (every real container demands CPU).
+    pub fn new(initial: Vec<VecBin>, new_capacity: ResourceVec) -> VecPackEngine {
+        assert!(
+            new_capacity.0[0] > 0.0,
+            "provisioning flavor must have CPU capacity"
+        );
+        let mut trees: Vec<ResidualTree> = (0..DIMS)
+            .map(|_| ResidualTree::new(initial.len().max(16)))
+            .collect();
+        for (i, b) in initial.iter().enumerate() {
+            for (d, tree) in trees.iter_mut().enumerate() {
+                tree.set(i, b.residual(d));
+            }
+        }
+        VecPackEngine {
+            bins: initial,
+            new_capacity,
+            trees,
+        }
+    }
+
+    pub fn bins(&self) -> &[VecBin] {
+        &self.bins
+    }
+
+    pub fn len(&self) -> usize {
+        self.bins.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bins.is_empty()
+    }
+
+    pub fn new_capacity(&self) -> ResourceVec {
+        self.new_capacity
+    }
+
+    /// Consume the engine, returning its bins.
+    pub fn into_bins(self) -> Vec<VecBin> {
+        self.bins
+    }
+
+    /// Place one item into the lowest-index bin where every dimension
+    /// fits, opening a `new_capacity` bin when none does. Existing bins
+    /// are fit-tested at the item's **true** size (a demand above the
+    /// provisioning flavor may still fit a larger live flavor); only an
+    /// item landing in a freshly opened bin is clamped into that flavor —
+    /// a demand larger than a whole new VM gets the whole VM. Identical
+    /// to the oracle's semantics.
+    pub fn insert(&mut self, item: VecItem) -> usize {
+        let key = item.size.dominant_dim();
+        let need = item.size.0[key];
+        let mut lo = 0;
+        let chosen = loop {
+            match self.trees[key].first_fit_from(need, lo) {
+                Some(i) if self.bins[i].fits(&item) => break Some(i),
+                // Keyed dimension fits but another is binding: resume the
+                // walk past this bin.
+                Some(i) => lo = i + 1,
+                None => break None,
+            }
+        };
+        let (idx, item) = match chosen {
+            Some(i) => (i, item),
+            None => {
+                self.bins.push(VecBin::new(self.new_capacity));
+                (
+                    self.bins.len() - 1,
+                    clamp_to_flavor(item, &self.new_capacity),
+                )
+            }
+        };
+        self.bins[idx].push(item);
+        for (d, tree) in self.trees.iter_mut().enumerate() {
+            tree.set(idx, self.bins[idx].residual(d));
+        }
+        idx
+    }
+
+    /// Pack a whole item sequence, consuming the engine.
+    pub fn pack_all(mut self, items: &[VecItem]) -> VecPacking {
+        let mut assignments = Vec::with_capacity(items.len());
+        for item in items {
+            assignments.push(self.insert(*item));
+        }
+        VecPacking {
+            assignments,
+            bins: self.bins,
+        }
+    }
+
+    /// Reconcile the engine to an externally observed worker population:
+    /// bin `i` gets `(used, capacity)` from the iterator (used clamped
+    /// into capacity), bins beyond are dropped. The multi-dimensional
+    /// analogue of [`PackEngine::sync_used`](super::PackEngine::sync_used):
+    /// all storage is reused and the per-bin item lists are cleared —
+    /// placement-equivalent to a fresh engine over `VecBin::with_load`
+    /// bins, without the allocations.
+    pub fn sync<I>(&mut self, state: I)
+    where
+        I: IntoIterator<Item = (ResourceVec, ResourceVec)>,
+        I::IntoIter: ExactSizeIterator,
+    {
+        let state = state.into_iter();
+        let n = state.len();
+        if self.bins.len() > n {
+            for tree in &mut self.trees {
+                tree.truncate(n);
+            }
+            self.bins.truncate(n);
+        }
+        for (i, (used, capacity)) in state.enumerate() {
+            let used = used.clamp_to(&capacity);
+            if i < self.bins.len() {
+                let bin = &mut self.bins[i];
+                bin.items.clear();
+                bin.used = used;
+                bin.capacity = capacity;
+            } else {
+                self.bins.push(VecBin::with_load(capacity, used));
+            }
+            for (d, tree) in self.trees.iter_mut().enumerate() {
+                tree.set(i, self.bins[i].residual(d));
+            }
+        }
+    }
+}
+
+/// Batch convenience mirroring the oracle's signature: indexed vector
+/// First-Fit over `initial` bins, new bins at `new_capacity`.
+pub fn first_fit_md_indexed(
+    items: &[VecItem],
+    initial: Vec<VecBin>,
+    new_capacity: ResourceVec,
+) -> VecPacking {
+    VecPackEngine::new(initial, new_capacity).pack_all(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::binpacking::multidim::{first_fit_md_in, Resource};
+
+    fn item(id: u64, cpu: f64, ram: f64, net: f64) -> VecItem {
+        VecItem::new(id, ResourceVec::new(cpu, ram, net))
+    }
+
+    #[test]
+    fn matches_oracle_on_ram_bound_stream() {
+        let items = vec![
+            item(0, 0.1, 0.8, 0.0),
+            item(1, 0.1, 0.8, 0.0),
+            item(2, 0.1, 0.1, 0.0),
+        ];
+        let a = first_fit_md_in(&items, Vec::new(), ResourceVec::UNIT);
+        let b = first_fit_md_indexed(&items, Vec::new(), ResourceVec::UNIT);
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(b.assignments, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn candidate_walk_skips_bins_binding_on_other_dims() {
+        // Bin 0 has CPU room but no RAM; the item keys on CPU, must skip
+        // bin 0 and land in bin 1 — exactly where the naive scan goes.
+        let initial = vec![
+            VecBin::with_load(ResourceVec::UNIT, ResourceVec::new(0.1, 0.95, 0.0)),
+            VecBin::new(ResourceVec::UNIT),
+        ];
+        let items = vec![item(0, 0.5, 0.2, 0.0)];
+        let p = first_fit_md_indexed(&items, initial, ResourceVec::UNIT);
+        assert_eq!(p.assignments, vec![1]);
+    }
+
+    #[test]
+    fn heterogeneous_sync_round_matches_fresh_engine() {
+        let caps = [
+            ResourceVec::UNIT,
+            ResourceVec::new(0.5, 0.5, 1.0),
+            ResourceVec::new(0.125, 0.125, 1.0),
+        ];
+        let loads = [
+            ResourceVec::new(0.3, 0.2, 0.0),
+            ResourceVec::new(0.1, 0.4, 0.0),
+            ResourceVec::ZERO,
+        ];
+        let items = vec![
+            item(0, 0.2, 0.25, 0.0),
+            item(1, 0.4, 0.1, 0.05),
+            item(2, 0.1, 0.05, 0.0),
+        ];
+        // Dirty engine from a previous round.
+        let mut dirty = VecPackEngine::new(Vec::new(), ResourceVec::UNIT);
+        for i in 0..5 {
+            dirty.insert(item(100 + i, 0.9, 0.9, 0.9));
+        }
+        dirty.sync(loads.iter().copied().zip(caps.iter().copied()));
+        let got: Vec<usize> = items.iter().map(|it| dirty.insert(*it)).collect();
+
+        let fresh_bins: Vec<VecBin> = caps
+            .iter()
+            .zip(loads.iter())
+            .map(|(c, u)| VecBin::with_load(*c, *u))
+            .collect();
+        let want = first_fit_md_in(&items, fresh_bins, ResourceVec::UNIT).assignments;
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn new_bins_carry_the_provisioning_flavor() {
+        let large = ResourceVec::new(0.5, 0.5, 1.0);
+        let mut e = VecPackEngine::new(Vec::new(), large);
+        e.insert(item(0, 0.4, 0.1, 0.0));
+        e.insert(item(1, 0.4, 0.1, 0.0));
+        assert_eq!(e.len(), 2, "cpu cap 0.5 fits one 0.4 item per bin");
+        assert_eq!(e.bins()[0].capacity, large);
+        assert!((e.bins()[1].used.get(Resource::Cpu) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "CPU capacity")]
+    fn rejects_cpuless_provisioning_flavor() {
+        let _ = VecPackEngine::new(Vec::new(), ResourceVec::new(0.0, 1.0, 1.0));
+    }
+}

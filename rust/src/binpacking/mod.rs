@@ -42,6 +42,17 @@
 //! Incremental use (the IRM's per-control-cycle pattern) goes through
 //! [`PackEngine::sync_used`], which reconciles the engine to the live
 //! worker loads in place — no per-tick `Vec<Bin>` rebuild, no re-pack.
+//!
+//! ## Multi-dimensional (vector) packing
+//!
+//! The paper's stated future work — packing over CPU, RAM and network at
+//! once — lives in [`multidim`] (naive oracle, [`ResourceVec`] items,
+//! heterogeneous [`VecBin`] flavor capacities) and
+//! [`index::VecPackEngine`] (the indexed engine the IRM runs when
+//! `IrmConfig::resource_model` selects
+//! [`ResourceModel::Vector`](crate::irm::config::ResourceModel)).
+//! `rust/tests/binpacking_multidim_equivalence.rs` keeps oracle and
+//! engine in lock-step over random flavor mixes.
 
 pub mod algorithms;
 pub mod analysis;
@@ -54,9 +65,12 @@ pub use algorithms::{
     Harmonic, NextFit, WorstFit,
 };
 pub use first_fit_tree::FirstFitTree;
-pub use index::{EngineRule, IndexedPacker, PackEngine};
-pub use multidim::{first_fit_md, ResourceVec, VecBin, VecItem};
-pub use analysis::{ideal_bins, performance_ratio, PackingStats};
+pub use index::{first_fit_md_indexed, EngineRule, IndexedPacker, PackEngine, VecPackEngine};
+pub use multidim::{
+    first_fit_md, first_fit_md_in, ideal_bins_md, ideal_bins_md_in, Resource, ResourceVec, VecBin,
+    VecItem, VecPacking,
+};
+pub use analysis::{ideal_bins, performance_ratio, stats_md, PackingStats, VecPackingStats};
 
 /// An item to pack: `size` must lie in `(0, 1]`.
 #[derive(Clone, Copy, Debug, PartialEq)]

@@ -4,9 +4,22 @@
 //! workloads based on more resources than only CPU, such as RAM, network
 //! usage, or even variations of CPU metrics like average, maximum etc."*
 //!
-//! Items and bins carry a resource vector; an item fits when every
-//! component fits. First-Fit generalizes directly; the quality lower bound
-//! becomes `max_d ceil(Σ_i size_i[d])`.
+//! Items carry a resource vector; bins carry a **capacity** vector (VM
+//! flavors — an SSC.large worker has half the cores and half the RAM of
+//! the SSC.xlarge reference, but the same NIC). An item fits when every
+//! component fits. First-Fit generalizes directly; the quality lower
+//! bound becomes `max_d ceil(Σ_i size_i[d] / cap[d])`.
+//!
+//! All sizes and capacities are expressed in **reference-VM units**: `1.0`
+//! in a dimension is the whole reference flavor (the paper's SSC.xlarge).
+//! Heterogeneous clouds show up as bins whose capacity is below (or at)
+//! the unit vector.
+//!
+//! [`first_fit_md_in`] is the naive `O(n·m)` **oracle** for placement
+//! semantics; the production hot path is the placement-identical
+//! [`VecPackEngine`](crate::binpacking::index::VecPackEngine)
+//! (`O(log m)` expected per item, property-tested in
+//! `rust/tests/binpacking_multidim_equivalence.rs`).
 
 use std::fmt;
 
@@ -20,11 +33,17 @@ pub enum Resource {
 
 pub const DIMS: usize = 3;
 
-/// A point in resource space, each component in `[0, 1]` of a worker.
+/// A point in resource space, in reference-VM units (`1.0` = the whole
+/// reference flavor in that dimension).
 #[derive(Clone, Copy, PartialEq, Debug, Default)]
 pub struct ResourceVec(pub [f64; DIMS]);
 
 impl ResourceVec {
+    /// No demand in any dimension.
+    pub const ZERO: ResourceVec = ResourceVec([0.0; DIMS]);
+    /// The reference flavor's capacity (the paper's unit bin).
+    pub const UNIT: ResourceVec = ResourceVec([1.0; DIMS]);
+
     pub fn new(cpu: f64, ram: f64, net: f64) -> Self {
         ResourceVec([cpu, ram, net])
     }
@@ -37,6 +56,10 @@ impl ResourceVec {
         self.0[r as usize]
     }
 
+    pub fn set(&mut self, r: Resource, v: f64) {
+        self.0[r as usize] = v;
+    }
+
     pub fn add(&self, rhs: &ResourceVec) -> ResourceVec {
         let mut out = [0.0; DIMS];
         for d in 0..DIMS {
@@ -45,15 +68,41 @@ impl ResourceVec {
         ResourceVec(out)
     }
 
-    /// Component-wise `self + item <= 1 + eps`.
+    /// Component-wise minimum with `cap` — clamp a demand to a capacity.
+    pub fn clamp_to(&self, cap: &ResourceVec) -> ResourceVec {
+        let mut out = [0.0; DIMS];
+        for d in 0..DIMS {
+            out[d] = self.0[d].min(cap.0[d]);
+        }
+        ResourceVec(out)
+    }
+
+    /// Component-wise `used + self <= 1 + eps` (unit-capacity fit).
     pub fn fits_into(&self, used: &ResourceVec, eps: f64) -> bool {
-        (0..DIMS).all(|d| used.0[d] + self.0[d] <= 1.0 + eps)
+        self.fits_within(used, &ResourceVec::UNIT, eps)
+    }
+
+    /// Component-wise `used + self <= cap + eps`.
+    pub fn fits_within(&self, used: &ResourceVec, cap: &ResourceVec, eps: f64) -> bool {
+        (0..DIMS).all(|d| used.0[d] + self.0[d] <= cap.0[d] + eps)
     }
 
     /// The dominant (largest) component — used for size-ordering
     /// heuristics.
     pub fn dominant(&self) -> f64 {
         self.0.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Index of the dominant component (lowest index on ties) — the
+    /// dimension the indexed engine keys its candidate search on.
+    pub fn dominant_dim(&self) -> usize {
+        let mut best = 0;
+        for d in 1..DIMS {
+            if self.0[d] > self.0[best] {
+                best = d;
+            }
+        }
+        best
     }
 }
 
@@ -87,16 +136,47 @@ impl VecItem {
     }
 }
 
-/// A multi-dimensional bin.
-#[derive(Clone, Debug, Default)]
+/// A multi-dimensional bin with a per-flavor capacity vector.
+#[derive(Clone, Debug)]
 pub struct VecBin {
+    /// Flavor capacity in reference-VM units (`UNIT` = the reference VM).
+    pub capacity: ResourceVec,
     pub used: ResourceVec,
     pub items: Vec<VecItem>,
 }
 
+impl Default for VecBin {
+    fn default() -> Self {
+        VecBin::new(ResourceVec::UNIT)
+    }
+}
+
 impl VecBin {
+    /// An empty bin of the given flavor capacity.
+    pub fn new(capacity: ResourceVec) -> Self {
+        VecBin {
+            capacity,
+            used: ResourceVec::ZERO,
+            items: Vec::new(),
+        }
+    }
+
+    /// A pre-loaded bin (live worker): `used` is clamped into capacity.
+    pub fn with_load(capacity: ResourceVec, used: ResourceVec) -> Self {
+        VecBin {
+            capacity,
+            used: used.clamp_to(&capacity),
+            items: Vec::new(),
+        }
+    }
+
+    /// Residual capacity in dimension `d` (never negative).
+    pub fn residual(&self, d: usize) -> f64 {
+        (self.capacity.0[d] - self.used.0[d]).max(0.0)
+    }
+
     pub fn fits(&self, item: &VecItem) -> bool {
-        item.size.fits_into(&self.used, 1e-9)
+        item.size.fits_within(&self.used, &self.capacity, 1e-9)
     }
 
     pub fn push(&mut self, item: VecItem) {
@@ -121,8 +201,11 @@ impl VecPacking {
     pub fn check(&self, items: &[VecItem]) -> Result<(), String> {
         for (i, b) in self.bins.iter().enumerate() {
             for d in 0..DIMS {
-                if b.used.0[d] > 1.0 + 1e-6 {
-                    return Err(format!("bin {i} dim {d} overflows: {}", b.used.0[d]));
+                if b.used.0[d] > b.capacity.0[d] + 1e-6 {
+                    return Err(format!(
+                        "bin {i} dim {d} overflows: {} > cap {}",
+                        b.used.0[d], b.capacity.0[d]
+                    ));
                 }
             }
         }
@@ -134,35 +217,82 @@ impl VecPacking {
 }
 
 /// Multi-dimensional First-Fit (online; lowest-index bin where every
-/// component fits).
-pub fn first_fit_md(items: &[VecItem], initial: Vec<VecBin>) -> VecPacking {
+/// component fits) over possibly heterogeneous `initial` bins; bins opened
+/// beyond them get `new_capacity` (the flavor the cloud would provision).
+/// This is the naive `O(n·m)` oracle the indexed engine is property-tested
+/// against.
+///
+/// Items are fit-tested against existing bins at their **true** size (a
+/// demand bigger than the provisioning flavor may still fit a larger
+/// live flavor); only when nothing fits and a `new_capacity` bin must
+/// open is the item clamped into that flavor — a demand larger than a
+/// whole new VM gets the whole VM instead of wedging the stream.
+pub fn first_fit_md_in(
+    items: &[VecItem],
+    initial: Vec<VecBin>,
+    new_capacity: ResourceVec,
+) -> VecPacking {
     let mut bins = initial;
     let mut assignments = Vec::with_capacity(items.len());
     for item in items {
-        let idx = match bins.iter().position(|b| b.fits(item)) {
-            Some(i) => i,
+        let (idx, item) = match bins.iter().position(|b| b.fits(item)) {
+            Some(i) => (i, *item),
             None => {
-                bins.push(VecBin::default());
-                bins.len() - 1
+                bins.push(VecBin::new(new_capacity));
+                (bins.len() - 1, clamp_to_flavor(*item, &new_capacity))
             }
         };
-        bins[idx].push(*item);
+        bins[idx].push(item);
         assignments.push(idx);
     }
     VecPacking { assignments, bins }
 }
 
-/// Lower bound on the optimal bin count: the tightest single dimension.
+/// An item as a freshly opened `capacity` bin will host it: clamped
+/// component-wise into the flavor (shared by the oracle and the indexed
+/// engine so their placements and bin loads stay identical). Constructed
+/// directly rather than through [`VecItem::new`]: demand lying entirely
+/// in dimensions the flavor cannot provision clamps to a zero-footprint
+/// placement (the VM hosts the item; the model cannot account the
+/// unprovisionable demand) — not a panic.
+pub(crate) fn clamp_to_flavor(item: VecItem, capacity: &ResourceVec) -> VecItem {
+    VecItem {
+        id: item.id,
+        size: item.size.clamp_to(capacity),
+    }
+}
+
+/// Unit-capacity First-Fit (the paper's homogeneous setting).
+pub fn first_fit_md(items: &[VecItem], initial: Vec<VecBin>) -> VecPacking {
+    first_fit_md_in(items, initial, ResourceVec::UNIT)
+}
+
+/// Lower bound on the optimal bin count at unit capacity: the tightest
+/// single dimension.
 pub fn ideal_bins_md(items: &[VecItem]) -> usize {
+    ideal_bins_md_in(items, &ResourceVec::UNIT)
+}
+
+/// Lower bound on the optimal count of `cap`-flavor bins: per dimension,
+/// `ceil(Σ demand / cap)`, maximized over dimensions. A dimension the
+/// flavor cannot provision at all (zero capacity) is skipped when nothing
+/// demands it; with positive demand no finite count of such bins exists,
+/// which surfaces as `usize::MAX` rather than a silently understated
+/// bound.
+pub fn ideal_bins_md_in(items: &[VecItem], cap: &ResourceVec) -> usize {
     let mut per_dim = [0.0f64; DIMS];
     for it in items {
         for d in 0..DIMS {
             per_dim[d] += it.size.0[d];
         }
     }
-    per_dim
-        .iter()
-        .map(|s| (s - 1e-9).ceil().max(0.0) as usize)
+    (0..DIMS)
+        .map(|d| {
+            if cap.0[d] <= 0.0 {
+                return if per_dim[d] > 1e-9 { usize::MAX } else { 0 };
+            }
+            ((per_dim[d] / cap.0[d]) - 1e-9).ceil().max(0.0) as usize
+        })
         .max()
         .unwrap_or(0)
 }
@@ -218,6 +348,64 @@ mod tests {
     }
 
     #[test]
+    fn heterogeneous_capacity_is_respected() {
+        // A half-size flavor (SSC.large-like) takes one 0.3-RAM item, not
+        // two; the second spills to the unit bin behind it.
+        let half = ResourceVec::new(0.5, 0.5, 1.0);
+        let initial = vec![VecBin::new(half), VecBin::new(ResourceVec::UNIT)];
+        let items = vec![item(0, 0.1, 0.3, 0.0), item(1, 0.1, 0.3, 0.0)];
+        let p = first_fit_md_in(&items, initial, ResourceVec::UNIT);
+        p.check(&items).unwrap();
+        assert_eq!(p.assignments, vec![0, 1], "RAM cap 0.5 fits one 0.3 item");
+    }
+
+    #[test]
+    fn new_bins_open_at_the_provisioning_flavor() {
+        let small = ResourceVec::new(0.25, 0.25, 1.0);
+        let items = vec![item(0, 0.2, 0.1, 0.0), item(1, 0.2, 0.1, 0.0)];
+        let p = first_fit_md_in(&items, Vec::new(), small);
+        p.check(&items).unwrap();
+        // 0.2 cpu on a 0.25-cpu flavor: one item per bin.
+        assert_eq!(p.assignments, vec![0, 1]);
+        assert_eq!(p.bins[0].capacity, small);
+        assert_eq!(p.bins[1].capacity, small);
+    }
+
+    #[test]
+    fn ideal_bins_scales_with_flavor_capacity() {
+        let items = vec![item(0, 0.4, 0.1, 0.0), item(1, 0.4, 0.1, 0.0)];
+        assert_eq!(ideal_bins_md(&items), 1);
+        // The same demand needs two half-size flavors (cpu 0.8 / cap 0.5).
+        assert_eq!(
+            ideal_bins_md_in(&items, &ResourceVec::new(0.5, 0.5, 1.0)),
+            2
+        );
+    }
+
+    #[test]
+    fn ideal_bins_flags_unprovisionable_demand() {
+        // Positive net demand against a flavor with zero net capacity:
+        // no finite bin count exists — not a silently understated bound.
+        let items = vec![item(0, 0.1, 0.1, 0.5)];
+        let netless = ResourceVec::new(0.5, 0.5, 0.0);
+        assert_eq!(ideal_bins_md_in(&items, &netless), usize::MAX);
+        // With zero demand there, the dimension is simply skipped.
+        let cpu_ram = vec![item(1, 0.6, 0.1, 0.0)];
+        assert_eq!(ideal_bins_md_in(&cpu_ram, &netless), 2);
+    }
+
+    #[test]
+    fn preloaded_bin_clamps_into_capacity() {
+        let b = VecBin::with_load(
+            ResourceVec::new(0.5, 0.5, 1.0),
+            ResourceVec::new(0.7, 0.2, 0.0),
+        );
+        assert!((b.used.get(Resource::Cpu) - 0.5).abs() < 1e-12);
+        assert!((b.residual(Resource::Cpu as usize)).abs() < 1e-12);
+        assert!((b.residual(Resource::Ram as usize) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
     fn prop_no_dimension_overflows() {
         testkit::forall_no_shrink(
             Config::default(),
@@ -258,5 +446,52 @@ mod tests {
     #[should_panic(expected = "out of [0,1]")]
     fn rejects_oversized_dimension() {
         let _ = item(0, 0.5, 1.2, 0.0);
+    }
+
+    #[test]
+    fn oversized_item_gets_the_whole_new_flavor() {
+        // Nothing fits 0.4 CPU on a 0.25-CPU flavor: the item takes the
+        // whole new VM (clamped) instead of wedging the stream.
+        let items = vec![item(0, 0.4, 0.1, 0.0)];
+        let p = first_fit_md_in(&items, Vec::new(), ResourceVec::new(0.25, 0.25, 1.0));
+        p.check(&items).unwrap();
+        assert_eq!(p.assignments, vec![0]);
+        assert!((p.bins[0].used.get(Resource::Cpu) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn oversized_item_still_fits_a_larger_live_flavor_unclamped() {
+        // A demand above the provisioning flavor must be fit-tested at its
+        // true size against bigger live bins — clamping before the fit
+        // check would overcommit them.
+        let big = vec![item(0, 0.1, 0.8, 0.0), item(1, 0.1, 0.8, 0.0)];
+        let small = ResourceVec::new(0.5, 0.5, 1.0);
+        let initial = vec![VecBin::new(ResourceVec::UNIT)];
+        let p = first_fit_md_in(&big, initial, small);
+        p.check(&big).unwrap();
+        // First takes the Xlarge at full 0.8 RAM; the second does NOT
+        // also squeeze in (0.8 + 0.8 > 1.0) — it opens a clamped bin.
+        assert_eq!(p.assignments, vec![0, 1]);
+        assert!((p.bins[0].used.get(Resource::Ram) - 0.8).abs() < 1e-12);
+        assert!((p.bins[1].used.get(Resource::Ram) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unprovisionable_demand_clamps_to_zero_footprint_not_panic() {
+        // Net-only demand against a netless flavor: the item parks on a
+        // new bin with zero accounted footprint instead of panicking.
+        let items = vec![item(0, 0.0, 0.0, 0.5)];
+        let netless = ResourceVec::new(0.5, 0.5, 0.0);
+        let p = first_fit_md_in(&items, Vec::new(), netless);
+        p.check(&items).unwrap();
+        assert_eq!(p.assignments, vec![0]);
+        assert_eq!(p.bins[0].used.dominant(), 0.0);
+    }
+
+    #[test]
+    fn dominant_dim_lowest_index_on_ties() {
+        assert_eq!(ResourceVec::new(0.5, 0.5, 0.1).dominant_dim(), 0);
+        assert_eq!(ResourceVec::new(0.1, 0.5, 0.2).dominant_dim(), 1);
+        assert_eq!(ResourceVec::new(0.1, 0.2, 0.5).dominant_dim(), 2);
     }
 }

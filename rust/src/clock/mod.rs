@@ -105,6 +105,14 @@ impl Periodic {
 
     /// Returns true (and re-arms) if the period elapsed. The first call
     /// always fires, anchoring the cadence at the caller's start time.
+    ///
+    /// Re-arming advances the anchor by **whole periods**, not to the
+    /// observation time: under a coarse tick (e.g. a 1000 ms period
+    /// sampled every 400 ms) anchoring at `now` would drift the cadence
+    /// to 0, 1200, 2400 ms — a 20 % stretch that biases every
+    /// rate-of-change computed from the fired samples (the load
+    /// predictor's ROC). Whole-period advancement keeps the long-run rate
+    /// at exactly one firing per period.
     pub fn fire(&mut self, now: Millis) -> bool {
         match self.last {
             None => {
@@ -112,7 +120,8 @@ impl Periodic {
                 true
             }
             Some(last) if now.0 >= last.0 + self.period.0 => {
-                self.last = Some(now);
+                let whole = (now.0 - last.0) / self.period.0;
+                self.last = Some(Millis(last.0 + whole * self.period.0));
                 true
             }
             _ => false,
@@ -170,6 +179,42 @@ mod tests {
         assert!(p.fire(Millis(100)));
         assert!(!p.fire(Millis(150)));
         assert!(p.fire(Millis(210)));
+    }
+
+    #[test]
+    fn periodic_coarse_tick_does_not_drift() {
+        // Regression: a 1000 ms period sampled on a 400 ms tick used to
+        // re-anchor at the observation time and fire at 0, 1200, 2400 …
+        // (a 20 % cadence stretch). Whole-period re-arming keeps the
+        // long-run rate at one firing per period.
+        let mut p = Periodic::new(Millis(1000));
+        let mut fires = Vec::new();
+        let mut t = 0;
+        while t <= 12_000 {
+            if p.fire(Millis(t)) {
+                fires.push(t);
+            }
+            t += 400;
+        }
+        // 13 firings over [0, 12 s] at a 1 s period (the drifting
+        // implementation managed only 11).
+        assert_eq!(fires.len(), 13, "fires at {fires:?}");
+        assert_eq!(fires.first(), Some(&0));
+        assert_eq!(fires.last(), Some(&12_000));
+        // No observation-time anchoring: gaps average exactly one period.
+        let span = fires.last().unwrap() - fires.first().unwrap();
+        assert_eq!(span / (fires.len() as u64 - 1), 1000);
+    }
+
+    #[test]
+    fn periodic_skips_missed_periods_without_bursting() {
+        // A long stall must not cause catch-up firings: one fire, anchor
+        // advanced by whole periods past the stall.
+        let mut p = Periodic::new(Millis(100));
+        assert!(p.fire(Millis(0)));
+        assert!(p.fire(Millis(1050)), "stall of 10.5 periods fires once");
+        assert!(!p.fire(Millis(1060)));
+        assert!(p.fire(Millis(1100)), "cadence stays on the 100 ms grid");
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! VM active, terminate VM, quota errors. This module reproduces exactly
 //! those observables with deterministic, configurable latencies.
 
+use crate::binpacking::ResourceVec;
 use crate::types::{IdGen, Millis, VmId};
 use crate::util::rng::Rng;
 
@@ -34,6 +35,17 @@ impl Flavor {
             Flavor::Small => "SSC.small",
             Flavor::Large => "SSC.large",
             Flavor::Xlarge => "SSC.xlarge",
+        }
+    }
+
+    /// Capacity vector in reference-VM units (reference = SSC.xlarge, the
+    /// paper's worker flavor): CPU and RAM scale with the flavor size;
+    /// every flavor hangs off the same NIC.
+    pub fn capacity(self) -> ResourceVec {
+        match self {
+            Flavor::Small => ResourceVec::new(0.125, 0.125, 1.0),
+            Flavor::Large => ResourceVec::new(0.5, 0.5, 1.0),
+            Flavor::Xlarge => ResourceVec::UNIT,
         }
     }
 }
@@ -73,6 +85,10 @@ pub struct CloudConfig {
     /// Uniform jitter applied to boot latency (±).
     pub boot_jitter: Millis,
     pub flavor: Flavor,
+    /// Heterogeneous provisioning: successful VM requests round-robin
+    /// through these flavors. Empty (the default) means every VM is
+    /// `flavor` — the paper's homogeneous setup.
+    pub flavor_cycle: Vec<Flavor>,
     pub seed: u64,
 }
 
@@ -83,6 +99,7 @@ impl Default for CloudConfig {
             boot_delay: Millis::from_secs(45),
             boot_jitter: Millis::from_secs(10),
             flavor: Flavor::Xlarge,
+            flavor_cycle: Vec::new(),
             seed: 0x5EED,
         }
     }
@@ -94,6 +111,8 @@ pub struct SimCloud {
     vms: Vec<Vm>,
     ids: IdGen,
     rng: Rng,
+    /// Successful provisioning requests so far (drives the flavor cycle).
+    provisioned: usize,
     /// Count of rejected requests (observable for Fig 10's retry shape).
     pub rejected_requests: u64,
 }
@@ -106,6 +125,7 @@ impl SimCloud {
             vms: Vec::new(),
             ids: IdGen::new(),
             rng,
+            provisioned: 0,
             rejected_requests: 0,
         }
     }
@@ -135,9 +155,15 @@ impl SimCloud {
         let ready_at =
             now + self.cfg.boot_delay.saturating_sub(self.cfg.boot_jitter) + Millis(jitter);
         let id = VmId(self.ids.next_id());
+        let flavor = if self.cfg.flavor_cycle.is_empty() {
+            self.cfg.flavor
+        } else {
+            self.cfg.flavor_cycle[self.provisioned % self.cfg.flavor_cycle.len()]
+        };
+        self.provisioned += 1;
         self.vms.push(Vm {
             id,
-            flavor: self.cfg.flavor,
+            flavor,
             state: VmState::Booting { ready_at },
             requested_at: now,
         });
@@ -149,6 +175,20 @@ impl SimCloud {
         if let Some(vm) = self.vms.iter_mut().find(|v| v.id == id) {
             vm.state = VmState::Terminated;
         }
+    }
+
+    /// Cancel the most recently requested VM still booting, if any —
+    /// the autoscaler's scale-thrash valve (cancelling a boot is free;
+    /// the newest request is the one furthest from being ready).
+    pub fn cancel_newest_booting(&mut self) -> Option<VmId> {
+        let id = self
+            .vms
+            .iter()
+            .rev()
+            .find(|v| matches!(v.state, VmState::Booting { .. }))
+            .map(|v| v.id)?;
+        self.terminate_vm(id);
+        Some(id)
     }
 
     /// Advance boot progress; returns VMs that became active this tick.
@@ -264,5 +304,49 @@ mod tests {
         assert_eq!(Flavor::Xlarge.cores(), 8);
         assert_eq!(Flavor::Small.cores(), 1);
         assert_eq!(Flavor::Xlarge.name(), "SSC.xlarge");
+    }
+
+    #[test]
+    fn flavor_capacity_scales_with_cores() {
+        use crate::binpacking::Resource;
+        for f in [Flavor::Small, Flavor::Large, Flavor::Xlarge] {
+            let cap = f.capacity();
+            assert!(
+                (cap.get(Resource::Cpu) - f.cores() as f64 / Flavor::Xlarge.cores() as f64)
+                    .abs()
+                    < 1e-12
+            );
+            assert_eq!(cap.get(Resource::Net), 1.0, "same NIC on every flavor");
+        }
+    }
+
+    #[test]
+    fn flavor_cycle_round_robins() {
+        let mut c = SimCloud::new(CloudConfig {
+            quota: 10,
+            flavor_cycle: vec![Flavor::Xlarge, Flavor::Large],
+            ..CloudConfig::default()
+        });
+        let ids: Vec<_> = (0..4).map(|_| c.request_vm(Millis(0)).unwrap()).collect();
+        let flavors: Vec<_> = ids.iter().map(|id| c.vm(*id).unwrap().flavor).collect();
+        assert_eq!(
+            flavors,
+            vec![Flavor::Xlarge, Flavor::Large, Flavor::Xlarge, Flavor::Large]
+        );
+    }
+
+    #[test]
+    fn cancel_newest_booting_frees_quota() {
+        let mut c = cloud(2);
+        let a = c.request_vm(Millis(0)).unwrap();
+        let b = c.request_vm(Millis(10)).unwrap();
+        assert_eq!(c.cancel_newest_booting(), Some(b), "newest request first");
+        assert_eq!(c.vm(b).unwrap().state, VmState::Terminated);
+        assert!(matches!(c.vm(a).unwrap().state, VmState::Booting { .. }));
+        // Quota slot freed; nothing to cancel once all boots are gone.
+        assert!(c.request_vm(Millis(20)).is_ok());
+        c.cancel_newest_booting();
+        c.cancel_newest_booting();
+        assert_eq!(c.cancel_newest_booting(), None);
     }
 }

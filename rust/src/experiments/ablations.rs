@@ -1,7 +1,9 @@
-//! A1–A3: ablations over the IRM's design choices (DESIGN.md §Perf /
-//! per-experiment index). These quantify the decisions the paper makes:
+//! A1–A4: ablations over the IRM's design choices (DESIGN.md §Perf /
+//! per-experiment index). A1–A3 quantify the decisions the paper makes:
 //! First-Fit as the packing rule, the log-proportional idle buffer, and
-//! the profiler's moving-average window.
+//! the profiler's moving-average window. A4 quantifies the paper's stated
+//! future work: CPU-only vs multi-dimensional (CPU/RAM/net) vector
+//! packing on a heterogeneous VM-flavor mix.
 
 use std::fmt::Write as _;
 use std::path::Path;
@@ -9,14 +11,16 @@ use std::path::Path;
 use anyhow::Result;
 
 use crate::binpacking::{
-    analysis, BestFit, BinPacker, FirstFit, FirstFitDecreasing, Harmonic, Item, NextFit, WorstFit,
+    analysis, first_fit_md_in, BestFit, BinPacker, FirstFit, FirstFitDecreasing, Harmonic, Item,
+    NextFit, Resource, ResourceVec, VecBin, VecItem, VecPacking, WorstFit,
 };
+use crate::cloud::Flavor;
 use crate::experiments::{microscopy, Report};
-use crate::irm::{BufferPolicy, PackerChoice};
+use crate::irm::{BufferPolicy, PackerChoice, ResourceModel};
 use crate::sim::SimCluster;
 use crate::types::Millis;
 use crate::util::rng::Rng;
-use crate::workload::{MicroscopyConfig, MicroscopyTrace};
+use crate::workload::{microscopy as microscopy_wl, MicroscopyConfig, MicroscopyTrace};
 
 /// A1 — algorithm quality on bin-packing instances shaped like the IRM's
 /// (item sizes = profiled CPU fractions), plus end-to-end makespan impact.
@@ -222,6 +226,176 @@ pub fn profiler(out: &Path, seed: u64) -> Result<Report> {
     Ok(report)
 }
 
+/// A4 — resource model: CPU-only vs multi-dimensional vector packing on a
+/// heterogeneous flavor mix (the paper's stated future work, ISSUE 2's
+/// headline ablation).
+///
+/// Two layers:
+/// 1. **Instance-level** — RAM-heavy vector items through (a) scalar
+///    First-Fit on the CPU dimension (capacity-blind) and (b) vector
+///    First-Fit; report bins, per-dimension load and the worst RAM
+///    overcommit the CPU-only packing would inflict.
+/// 2. **End-to-end** — the 300-image microscopy batch on an
+///    Xlarge/Large flavor cycle under both `ResourceModel`s; the
+///    `ram.overcommit_pp` series shows the capacity-blind model
+///    over-packing RAM while the vector model stays within every
+///    flavor's capacity (at the price of more, smaller bins).
+pub fn multidim(out: &Path, seed: u64) -> Result<Report> {
+    let mut report = Report::new("A4 — resource-model ablation (CPU-only vs vector packing)");
+
+    // --- 1. Instance-level: IRM-shaped vector items (CellProfiler-like:
+    // one reference core, RAM-heavy, light network).
+    let mut rng = Rng::seeded(seed);
+    let items: Vec<VecItem> = (0..400)
+        .map(|i| {
+            VecItem::new(
+                i as u64,
+                ResourceVec::new(
+                    rng.uniform(0.08, 0.2),
+                    rng.uniform(0.2, 0.4),
+                    rng.uniform(0.01, 0.1),
+                ),
+            )
+        })
+        .collect();
+
+    // CPU-only: scalar First-Fit sees only the CPU dimension, then the
+    // placement is costed against full unit bins.
+    let cpu_only: VecPacking = {
+        let scalar: Vec<Item> = items
+            .iter()
+            .map(|it| Item::new(it.id, it.size.get(Resource::Cpu)))
+            .collect();
+        let packing = FirstFit.pack(&scalar, Vec::new());
+        let mut bins: Vec<VecBin> = (0..packing.bins.len()).map(|_| VecBin::default()).collect();
+        for (i, &b) in packing.assignments.iter().enumerate() {
+            // Capacity-blind placement: record the full vector without a
+            // fit check (that is the point).
+            bins[b].used = bins[b].used.add(&items[i].size);
+            bins[b].items.push(items[i]);
+        }
+        VecPacking {
+            assignments: packing.assignments,
+            bins,
+        }
+    };
+    let vector = first_fit_md_in(&items, Vec::new(), ResourceVec::UNIT);
+    if let Err(e) = vector.check(&items) {
+        anyhow::bail!("vector packing invalid: {e}");
+    }
+
+    let s_cpu = analysis::stats_md(&cpu_only, &items);
+    let s_vec = analysis::stats_md(&vector, &items);
+    report.line(format!(
+        "{:<10} {:>5} {:>6} {:>18} {:>16}",
+        "model", "bins", "ratio", "mean load c/r/n", "worst RAM over"
+    ));
+    for (name, s) in [("cpu-only", &s_cpu), ("vector", &s_vec)] {
+        report.line(format!(
+            "{name:<10} {:>5} {:>6.3} {:>5.2}/{:>4.2}/{:>4.2}     {:>10.3}",
+            s.bins_used,
+            s.ratio,
+            s.mean_load[0],
+            s.mean_load[1],
+            s.mean_load[2],
+            s.overcommit[Resource::Ram as usize],
+        ));
+    }
+    let mut csv = String::from("model,bins,ratio,ram_overcommit\n");
+    let _ = writeln!(
+        csv,
+        "cpu-only,{},{:.4},{:.4}",
+        s_cpu.bins_used, s_cpu.ratio, s_cpu.overcommit[Resource::Ram as usize]
+    );
+    let _ = writeln!(
+        csv,
+        "vector,{},{:.4},{:.4}",
+        s_vec.bins_used, s_vec.ratio, s_vec.overcommit[Resource::Ram as usize]
+    );
+
+    report.check(
+        "cpu-only packing overcommits RAM",
+        s_cpu.overcommit[Resource::Ram as usize] > 0.0,
+        format!("{:.3} over unit RAM", s_cpu.overcommit[Resource::Ram as usize]),
+    );
+    report.check(
+        "vector packing respects every dimension",
+        s_vec.overcommit.iter().all(|&o| o <= 1e-9),
+        "no dimension overflows",
+    );
+    report.check(
+        "vector pays bins for correctness, within the FF bound",
+        s_vec.bins_used >= s_cpu.bins_used && s_vec.ratio <= 1.7 + 0.2,
+        format!("{} vs {} bins", s_vec.bins_used, s_cpu.bins_used),
+    );
+
+    // --- 2. End-to-end on a heterogeneous Xlarge/Large flavor cycle. ---
+    report.line(String::new());
+    report.line("end-to-end (300-image batch, Xlarge/Large flavor cycle):".to_string());
+    let mut rows: Vec<(&str, f64, f64, f64)> = Vec::new();
+    for (label, model) in [
+        ("cpu-only", ResourceModel::CpuOnly),
+        (
+            "vector",
+            ResourceModel::Vector {
+                // Plan new bins at the smallest flavor the cycle may
+                // deliver (conservative; the next control cycle
+                // reconciles against what actually booted).
+                new_vm_capacity: Flavor::Large.capacity(),
+            },
+        ),
+    ] {
+        let mut cfg = microscopy::cluster_config(seed);
+        cfg.cloud.flavor_cycle = vec![Flavor::Xlarge, Flavor::Large];
+        cfg.irm.resource_model = model;
+        cfg.irm.image_resources = vec![microscopy_wl::resource_profile()];
+        let trace = MicroscopyTrace::new(MicroscopyConfig {
+            n_images: 300,
+            ..MicroscopyConfig::default()
+        })
+        .run_trace(seed);
+        let mut cluster = SimCluster::new(cfg);
+        trace.schedule_into(&mut cluster);
+        let makespan = cluster
+            .run_to_completion(trace.len(), Millis::from_secs(4000))
+            .map(|m| m.as_secs_f64())
+            .unwrap_or(f64::NAN);
+        let overcommit = cluster
+            .recorder
+            .get("ram.overcommit_pp")
+            .map(|s| s.max())
+            .unwrap_or(0.0);
+        let peak = cluster
+            .recorder
+            .get("workers.current")
+            .map(|s| s.max())
+            .unwrap_or(0.0);
+        report.line(format!(
+            "  {label:<10} makespan {makespan:>6.0}s | peak workers {peak} | worst RAM overcommit {overcommit:>5.1} pp"
+        ));
+        let _ = writeln!(csv, "e2e-{label},{makespan:.1},{peak},{overcommit:.2}");
+        rows.push((label, makespan, peak, overcommit));
+    }
+    std::fs::write(out.join("ablation_multidim.csv"), csv)?;
+
+    report.check(
+        "both models complete the batch",
+        rows.iter().all(|(_, m, _, _)| m.is_finite()),
+        format!("{:.0}s / {:.0}s", rows[0].1, rows[1].1),
+    );
+    report.check(
+        "cpu-only over-packs RAM on the flavor mix",
+        rows[0].3 > 0.0,
+        format!("worst overcommit {:.1} pp", rows[0].3),
+    );
+    report.check(
+        "vector packing never exceeds a flavor's RAM",
+        rows[1].3 <= 1e-6,
+        format!("worst overcommit {:.2} pp", rows[1].3),
+    );
+    Ok(report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -231,6 +405,14 @@ mod tests {
         let tmp = std::env::temp_dir().join("hio_abl_test");
         std::fs::create_dir_all(&tmp).unwrap();
         let report = packer(&tmp, 3).unwrap();
+        assert!(report.all_passed(), "{}", report.render());
+    }
+
+    #[test]
+    fn multidim_ablation_runs() {
+        let tmp = std::env::temp_dir().join("hio_abl_md_test");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let report = multidim(&tmp, 3).unwrap();
         assert!(report.all_passed(), "{}", report.render());
     }
 }

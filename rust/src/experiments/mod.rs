@@ -97,6 +97,10 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("ablation-packer", "A1: packing-algorithm choice"),
     ("ablation-buffer", "A2: idle-worker buffer policy"),
     ("ablation-profiler", "A3: profiler window / report cadence"),
+    (
+        "ablation-multidim",
+        "A4: CPU-only vs multi-dimensional vector packing on a heterogeneous flavor mix",
+    ),
 ];
 
 /// Run one experiment (or "all") writing outputs under `out_dir`.
@@ -114,6 +118,7 @@ pub fn run(name: &str, out_dir: &str, seed: u64) -> Result<Vec<Report>> {
         "ablation-packer" => vec![ablations::packer(out, seed)?],
         "ablation-buffer" => vec![ablations::buffer(out, seed)?],
         "ablation-profiler" => vec![ablations::profiler(out, seed)?],
+        "ablation-multidim" => vec![ablations::multidim(out, seed)?],
         "all" => {
             let mut all = Vec::new();
             all.push(synthetic::run(out, seed, "fig3")?);
@@ -128,6 +133,7 @@ pub fn run(name: &str, out_dir: &str, seed: u64) -> Result<Vec<Report>> {
             all.push(ablations::packer(out, seed)?);
             all.push(ablations::buffer(out, seed)?);
             all.push(ablations::profiler(out, seed)?);
+            all.push(ablations::multidim(out, seed)?);
             all
         }
         other => bail!(

@@ -8,17 +8,49 @@
 //! resulting in a mapping of where to host the queued PEs and how many
 //! worker VMs are needed to host these."
 
-use crate::binpacking::{EngineRule, Item, PackEngine, EPS};
-use crate::irm::config::PackerChoice;
+use crate::binpacking::{
+    EngineRule, Item, PackEngine, Resource, ResourceVec, VecItem, VecPackEngine, EPS,
+};
+use crate::irm::config::{PackerChoice, ResourceModel};
 use crate::irm::container_queue::ContainerRequest;
 use crate::types::{CpuFraction, ImageName, WorkerId};
 
 /// The allocator's view of one active worker: identity plus the scheduled
-/// load of PEs already hosted there (sum of their profiled item sizes).
+/// load of PEs already hosted there (sum of their profiled item sizes) —
+/// as the scalar CPU fraction the paper packs on, and as the full resource
+/// vector with the worker's flavor capacity for the vector model.
 #[derive(Clone, Debug)]
 pub struct WorkerBin {
     pub worker: WorkerId,
     pub scheduled: CpuFraction,
+    /// Full scheduled resource vector (its CPU component mirrors
+    /// `scheduled`).
+    pub scheduled_vec: ResourceVec,
+    /// The worker's flavor capacity in reference-VM units (`UNIT` in the
+    /// paper's homogeneous setup).
+    pub capacity: ResourceVec,
+}
+
+impl WorkerBin {
+    /// A unit-capacity, CPU-only worker view (the paper's model).
+    pub fn cpu(worker: WorkerId, scheduled: CpuFraction) -> Self {
+        WorkerBin {
+            worker,
+            scheduled,
+            scheduled_vec: ResourceVec::cpu(scheduled.value()),
+            capacity: ResourceVec::UNIT,
+        }
+    }
+
+    /// A flavor-capacity worker view with a full scheduled vector.
+    pub fn vector(worker: WorkerId, scheduled_vec: ResourceVec, capacity: ResourceVec) -> Self {
+        WorkerBin {
+            worker,
+            scheduled: CpuFraction::new(scheduled_vec.get(Resource::Cpu)),
+            scheduled_vec,
+            capacity,
+        }
+    }
 }
 
 /// One hosting decision: start `request`'s image on `worker`.
@@ -37,20 +69,37 @@ pub struct PackOutcome {
     /// that do not exist yet) — the caller requeues them.
     pub pending_new_workers: Vec<ContainerRequest>,
     /// Total bins the packing needed (active + new) — the worker target
-    /// before the idle buffer is added (Fig 10's "target" input).
+    /// before the idle buffer is added (Fig 10's "target" input). Under
+    /// the vector model, `bins_needed − active` counts bins of the
+    /// **provisioning flavor** (`ResourceModel::Vector::new_vm_capacity`),
+    /// i.e. it is a per-flavor VM target for the autoscaler.
     pub bins_needed: usize,
     /// Scheduled load per active worker *after* this packing run (the
     /// "Bin-packing scheduled CPU usage" series of Figs 4/8).
     pub scheduled: Vec<(WorkerId, CpuFraction)>,
+    /// Scheduled resource vector per active worker after this run — the
+    /// multi-dimensional companion of `scheduled` (its CPU component
+    /// mirrors it; RAM/net are zero under the CPU-only model).
+    pub scheduled_vec: Vec<(WorkerId, ResourceVec)>,
 }
 
-/// The bin-packing manager. Owns a **live** [`PackEngine`]: the rule index
-/// (segment tree / ordered residual map / class buckets) persists across
+/// The rule engine behind one allocator: the scalar indexed engine (the
+/// paper's CPU-only model, any Any-Fit/Harmonic rule) or the
+/// multi-dimensional engine (vector First-Fit over CPU/RAM/net with
+/// flavor capacities).
+enum Engine {
+    Scalar(PackEngine),
+    Vector(VecPackEngine),
+}
+
+/// The bin-packing manager. Owns a **live** engine: the rule index
+/// (segment tree / ordered residual map / class buckets — or the
+/// per-dimension residual trees under the vector model) persists across
 /// scheduling rounds, so each run costs `O(w + r log m)` — reconcile the
 /// observed worker loads in place, then place each request in `O(log m)` —
 /// instead of rebuilding `Vec<Bin>` and linear-scanning every bin per item.
 pub struct Allocator {
-    engine: PackEngine,
+    engine: Engine,
     name: &'static str,
     /// Scratch: this round's bin index per request (reused across runs).
     assignments: Vec<usize>,
@@ -60,18 +109,37 @@ pub struct Allocator {
 }
 
 impl Allocator {
+    /// A CPU-only allocator (the paper's model).
     pub fn new(choice: PackerChoice) -> Self {
-        // Placement decisions are identical to the naive Any-Fit scans
-        // (property-tested, §Perf L3); only the lookup structure differs.
-        let (rule, name) = match choice {
-            PackerChoice::FirstFit => (EngineRule::First, "first-fit-tree"),
-            PackerChoice::NextFit => (EngineRule::Next, "next-fit-indexed"),
-            PackerChoice::BestFit => (EngineRule::Best, "best-fit-indexed"),
-            PackerChoice::WorstFit => (EngineRule::Worst, "worst-fit-indexed"),
-            PackerChoice::Harmonic(k) => (EngineRule::Harmonic(k), "harmonic-k-indexed"),
+        Self::with_model(choice, ResourceModel::CpuOnly)
+    }
+
+    /// An allocator for the configured resource model. Under
+    /// [`ResourceModel::Vector`] the packing rule is vector First-Fit
+    /// (the paper's rule generalized); `choice` selects the scalar rule
+    /// otherwise.
+    pub fn with_model(choice: PackerChoice, model: ResourceModel) -> Self {
+        let (engine, name) = match model {
+            ResourceModel::CpuOnly => {
+                // Placement decisions are identical to the naive Any-Fit
+                // scans (property-tested, §Perf L3); only the lookup
+                // structure differs.
+                let (rule, name) = match choice {
+                    PackerChoice::FirstFit => (EngineRule::First, "first-fit-tree"),
+                    PackerChoice::NextFit => (EngineRule::Next, "next-fit-indexed"),
+                    PackerChoice::BestFit => (EngineRule::Best, "best-fit-indexed"),
+                    PackerChoice::WorstFit => (EngineRule::Worst, "worst-fit-indexed"),
+                    PackerChoice::Harmonic(k) => (EngineRule::Harmonic(k), "harmonic-k-indexed"),
+                };
+                (Engine::Scalar(PackEngine::new(rule, Vec::new())), name)
+            }
+            ResourceModel::Vector { new_vm_capacity } => (
+                Engine::Vector(VecPackEngine::new(Vec::new(), new_vm_capacity)),
+                "vector-first-fit-indexed",
+            ),
         };
         Allocator {
-            engine: PackEngine::new(rule, Vec::new()),
+            engine,
             name,
             assignments: Vec::new(),
             runs: 0,
@@ -91,26 +159,81 @@ impl Allocator {
 
         // Reconcile the live engine to the observed loads: bins and index
         // storage are reused; only changed loads touch the index.
-        self.engine
-            .sync_used(workers.iter().map(|w| w.scheduled.value().min(1.0)));
-
         self.assignments.clear();
-        for (i, r) in requests.iter().enumerate() {
-            let item = Item::new(i as u64, r.estimate.value().clamp(1e-3, 1.0));
-            self.assignments.push(self.engine.insert(item));
+        match &mut self.engine {
+            Engine::Scalar(engine) => {
+                engine.sync_used(workers.iter().map(|w| w.scheduled.value().min(1.0)));
+                for (i, r) in requests.iter().enumerate() {
+                    let item = Item::new(i as u64, r.estimate.value().clamp(1e-3, 1.0));
+                    self.assignments.push(engine.insert(item));
+                }
+            }
+            Engine::Vector(engine) => {
+                engine.sync(workers.iter().map(|w| (w.scheduled_vec, w.capacity)));
+                for (i, r) in requests.iter().enumerate() {
+                    // Reference-unit demand with the scalar model's CPU
+                    // floor; the engine fit-tests existing (possibly
+                    // larger) flavors at this true size and only clamps
+                    // into the provisioning flavor when it has to open a
+                    // new bin (a demand larger than a whole new VM gets
+                    // the whole VM).
+                    let mut size = r.estimate_vec;
+                    size.set(Resource::Cpu, size.get(Resource::Cpu).max(1e-3));
+                    let size = size.clamp_to(&ResourceVec::UNIT);
+                    self.assignments.push(engine.insert(VecItem::new(i as u64, size)));
+                }
+            }
         }
 
-        let bins = self.engine.bins();
-        let mut outcome = PackOutcome {
-            bins_needed: bins.iter().filter(|b| b.used > EPS).count().max(
-                // A pre-loaded worker counts as a needed bin even if this
-                // run placed nothing new on it.
-                workers
-                    .iter()
-                    .filter(|w| w.scheduled.value() > 1e-9)
-                    .count(),
-            ),
-            ..PackOutcome::default()
+        // A pre-loaded worker counts as a needed bin even if this run
+        // placed nothing new on it. The occupancy threshold is the bin
+        // model's EPS on both sides (engine bins and pre-loaded workers) —
+        // they once used separate literals.
+        let preloaded = workers
+            .iter()
+            .filter(|w| w.scheduled.value() > EPS)
+            .count();
+        let mut outcome = match &self.engine {
+            Engine::Scalar(engine) => {
+                let bins = engine.bins();
+                PackOutcome {
+                    bins_needed: bins.iter().filter(|b| b.used > EPS).count().max(preloaded),
+                    scheduled: workers
+                        .iter()
+                        .enumerate()
+                        .map(|(i, w)| (w.worker, CpuFraction::new(bins[i].used)))
+                        .collect(),
+                    scheduled_vec: workers
+                        .iter()
+                        .enumerate()
+                        .map(|(i, w)| (w.worker, ResourceVec::cpu(bins[i].used)))
+                        .collect(),
+                    ..PackOutcome::default()
+                }
+            }
+            Engine::Vector(engine) => {
+                let bins = engine.bins();
+                PackOutcome {
+                    bins_needed: bins
+                        .iter()
+                        .filter(|b| b.used.dominant() > EPS)
+                        .count()
+                        .max(preloaded),
+                    scheduled: workers
+                        .iter()
+                        .enumerate()
+                        .map(|(i, w)| {
+                            (w.worker, CpuFraction::new(bins[i].used.get(Resource::Cpu)))
+                        })
+                        .collect(),
+                    scheduled_vec: workers
+                        .iter()
+                        .enumerate()
+                        .map(|(i, w)| (w.worker, bins[i].used))
+                        .collect(),
+                    ..PackOutcome::default()
+                }
+            }
         };
 
         for (i, req) in requests.into_iter().enumerate() {
@@ -127,26 +250,21 @@ impl Allocator {
             }
         }
 
-        // Scheduled view after this run, for the active workers only.
-        outcome.scheduled = workers
-            .iter()
-            .enumerate()
-            .map(|(i, w)| (w.worker, CpuFraction::new(bins[i].used)))
-            .collect();
-
         outcome
     }
 }
 
-/// Helper: compute each worker's scheduled load from the images of the PEs
-/// it currently hosts and a per-image estimator.
-pub fn scheduled_load(
+/// Helper: compute a worker's scheduled resource vector from the images
+/// of the PEs it currently hosts and a per-image estimator (the IRM's
+/// per-cycle `WorkerBin` input; the CPU component is the paper's scalar
+/// scheduled load).
+pub fn scheduled_resources(
     pe_images: &[ImageName],
-    estimate: impl Fn(&ImageName) -> CpuFraction,
-) -> CpuFraction {
+    estimate: impl Fn(&ImageName) -> ResourceVec,
+) -> ResourceVec {
     pe_images
         .iter()
-        .fold(CpuFraction::ZERO, |acc, img| acc + estimate(img))
+        .fold(ResourceVec::ZERO, |acc, img| acc.add(&estimate(img)))
 }
 
 #[cfg(test)]
@@ -173,11 +291,22 @@ mod tests {
         loads
             .iter()
             .enumerate()
-            .map(|(i, &l)| WorkerBin {
-                worker: WorkerId(i as u64),
-                scheduled: CpuFraction::new(l),
-            })
+            .map(|(i, &l)| WorkerBin::cpu(WorkerId(i as u64), CpuFraction::new(l)))
             .collect()
+    }
+
+    fn vec_requests(profiles: &[(f64, f64, f64)]) -> Vec<ContainerRequest> {
+        let mut q = ContainerQueue::new();
+        for &(cpu, ram, net) in profiles {
+            q.push_vec(
+                ImageName::new("img"),
+                ResourceVec::new(cpu, ram, net),
+                10,
+                RequestOrigin::AutoScale,
+                Millis(0),
+            );
+        }
+        q.drain()
     }
 
     #[test]
@@ -249,16 +378,129 @@ mod tests {
     }
 
     #[test]
-    fn scheduled_load_helper_sums() {
+    fn bins_needed_occupancy_threshold_unified_on_eps() {
+        // The engine-bin count and the pre-loaded-worker count once used
+        // separate occupancy literals (`EPS` vs a hardcoded `1e-9` that
+        // happened to be equal). Both now share the symbol; this pins the
+        // boundary so the two counts can never diverge if `EPS` moves —
+        // no packing run to paper over a difference.
+        let mut alloc = Allocator::new(PackerChoice::FirstFit);
+        // Dust below the threshold: an idle bin on both counts.
+        let out = alloc.pack(Vec::new(), &workers(&[EPS * 0.5, 0.0]));
+        assert_eq!(out.bins_needed, 0);
+        // Just above: occupied on both counts.
+        let out = alloc.pack(Vec::new(), &workers(&[EPS * 4.0, 0.0]));
+        assert_eq!(out.bins_needed, 1);
+    }
+
+    #[test]
+    fn vector_mode_spills_on_the_ram_dimension() {
+        // CPU alone would pack both requests onto worker 0; RAM is the
+        // binding dimension and must force the spill.
+        let mut alloc = Allocator::with_model(
+            PackerChoice::FirstFit,
+            ResourceModel::Vector {
+                new_vm_capacity: ResourceVec::UNIT,
+            },
+        );
+        let reqs = vec_requests(&[(0.2, 0.8, 0.0), (0.2, 0.8, 0.0)]);
+        let out = alloc.pack(reqs, &workers(&[0.0, 0.0]));
+        assert_eq!(out.allocations.len(), 2);
+        assert_eq!(out.allocations[0].worker, WorkerId(0));
+        assert_eq!(out.allocations[1].worker, WorkerId(1), "RAM-bound spill");
+        assert_eq!(out.bins_needed, 2);
+        // The vector telemetry carries the RAM dimension.
+        assert!((out.scheduled_vec[0].1.get(Resource::Ram) - 0.8).abs() < 1e-9);
+        assert!((out.scheduled[0].1.value() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vector_mode_respects_flavor_capacity() {
+        // Worker 0 is a half-size flavor: one 0.3-RAM PE fills its 0.5 RAM
+        // capacity past the next request; worker 1 (unit flavor) takes it.
+        let mut alloc = Allocator::with_model(
+            PackerChoice::FirstFit,
+            ResourceModel::Vector {
+                new_vm_capacity: ResourceVec::UNIT,
+            },
+        );
+        let half = ResourceVec::new(0.5, 0.5, 1.0);
+        let bins = vec![
+            WorkerBin::vector(WorkerId(0), ResourceVec::new(0.1, 0.3, 0.0), half),
+            WorkerBin::vector(WorkerId(1), ResourceVec::ZERO, ResourceVec::UNIT),
+        ];
+        let out = alloc.pack(vec_requests(&[(0.1, 0.3, 0.0)]), &bins);
+        assert_eq!(out.allocations[0].worker, WorkerId(1));
+    }
+
+    #[test]
+    fn vector_mode_pending_bins_use_the_provisioning_flavor() {
+        // No workers: every request pends; bins_needed counts bins of the
+        // provisioning flavor (RAM cap 0.5 → one 0.3-RAM request per new
+        // VM), i.e. a per-flavor VM target.
+        let mut alloc = Allocator::with_model(
+            PackerChoice::FirstFit,
+            ResourceModel::Vector {
+                new_vm_capacity: ResourceVec::new(0.5, 0.5, 1.0),
+            },
+        );
+        let out = alloc.pack(vec_requests(&[(0.1, 0.3, 0.0), (0.1, 0.3, 0.0)]), &[]);
+        assert_eq!(out.allocations.len(), 0);
+        assert_eq!(out.pending_new_workers.len(), 2);
+        assert_eq!(out.bins_needed, 2);
+    }
+
+    #[test]
+    fn vector_mode_clamps_oversized_demand_to_the_flavor() {
+        // A request demanding more RAM than a whole new VM gets the whole
+        // VM rather than wedging the queue forever.
+        let mut alloc = Allocator::with_model(
+            PackerChoice::FirstFit,
+            ResourceModel::Vector {
+                new_vm_capacity: ResourceVec::new(0.5, 0.5, 1.0),
+            },
+        );
+        let out = alloc.pack(vec_requests(&[(0.2, 0.9, 0.0)]), &[]);
+        assert_eq!(out.pending_new_workers.len(), 1);
+        assert_eq!(out.bins_needed, 1);
+    }
+
+    #[test]
+    fn vector_mode_reduces_to_scalar_on_cpu_only_requests() {
+        let mut vector = Allocator::with_model(
+            PackerChoice::FirstFit,
+            ResourceModel::Vector {
+                new_vm_capacity: ResourceVec::UNIT,
+            },
+        );
+        let mut scalar = Allocator::new(PackerChoice::FirstFit);
+        let loads = [0.4, 0.7, 0.0];
+        let a = vector.pack(requests(5, 0.3), &workers(&loads));
+        let b = scalar.pack(requests(5, 0.3), &workers(&loads));
+        let w = |out: &PackOutcome| {
+            out.allocations
+                .iter()
+                .map(|al| al.worker)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(w(&a), w(&b));
+        assert_eq!(a.bins_needed, b.bins_needed);
+        assert_eq!(a.pending_new_workers.len(), b.pending_new_workers.len());
+    }
+
+    #[test]
+    fn scheduled_resources_helper_sums() {
         let imgs = vec![ImageName::new("a"), ImageName::new("a"), ImageName::new("b")];
-        let load = scheduled_load(&imgs, |img| {
+        let load = scheduled_resources(&imgs, |img| {
             if img.as_str() == "a" {
-                CpuFraction::new(0.2)
+                ResourceVec::new(0.2, 0.1, 0.0)
             } else {
-                CpuFraction::new(0.5)
+                ResourceVec::new(0.5, 0.3, 0.1)
             }
         });
-        assert!((load.value() - 0.9).abs() < 1e-12);
+        assert!((load.get(Resource::Cpu) - 0.9).abs() < 1e-12);
+        assert!((load.get(Resource::Ram) - 0.5).abs() < 1e-12);
+        assert!((load.get(Resource::Net) - 0.1).abs() < 1e-12);
     }
 
     #[test]

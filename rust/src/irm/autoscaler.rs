@@ -3,6 +3,23 @@
 //! addition whether more or fewer worker nodes are needed for the current
 //! workload autonomously"), with the log-proportional idle-worker buffer
 //! for headroom.
+//!
+//! ## `bins_needed` as a per-flavor VM target
+//!
+//! The scaler is resource-model agnostic: it balances a *count* of bins
+//! against a *count* of VMs. Under the CPU-only model those are unit bins.
+//! Under the vector model (`ResourceModel::Vector`), the allocator opens
+//! every bin beyond the active workers at the configured
+//! `new_vm_capacity` flavor — so `bins_needed − active` counts VMs **of
+//! that flavor**, and `request_vms` asks the cloud for exactly that
+//! flavor's worth of capacity. Whatever flavor the cloud actually
+//! delivers (a heterogeneous `flavor_cycle`), the next control cycle
+//! re-packs against the real per-worker capacities, converging the same
+//! way the CPU-only loop does.
+//!
+//! Scale-down is two-staged: a transient `supply > target` first cancels
+//! in-flight boot requests ([`ScalePlan::cancel_boots`]) and only then —
+//! for excess not explained by boots — terminates graced-empty workers.
 
 use std::collections::HashMap;
 
@@ -21,6 +38,12 @@ pub struct WorkerState {
 pub struct ScalePlan {
     /// How many new VMs to request from the cloud this cycle.
     pub request_vms: usize,
+    /// In-flight boot requests to cancel (newest first) before any live
+    /// worker is touched. Cancelling a boot is free; terminating a live
+    /// worker throws away a provisioned VM — when a transient
+    /// `supply > target` is caused by boots the scaler itself requested,
+    /// the boots must absorb the excess (the scale-thrash fix).
+    pub cancel_boots: usize,
     /// Workers to drain + terminate (highest-index empty workers first).
     pub terminate: Vec<WorkerId>,
     /// The computed target (bins needed + idle buffer) — Fig 10's "target
@@ -80,11 +103,19 @@ impl AutoScaler {
         if supply < target {
             plan.request_vms = target - supply;
         } else if supply > target {
-            // Scale down: only terminate workers that are empty and have
-            // been empty past the grace period; highest index first (the
-            // packing concentrates load on low indices, so high-index bins
-            // are the ones bin-packing freed).
             let mut excess = supply - target;
+            // First absorb the excess by cancelling in-flight boot
+            // requests: counting booting VMs in `supply` (correct for
+            // scale-up) used to terminate live graced-empty workers while
+            // the boots that caused the excess were still provisioning —
+            // the cluster then paid a full boot delay to win the capacity
+            // back (scale-thrash).
+            plan.cancel_boots = excess.min(booting);
+            excess -= plan.cancel_boots;
+            // Then scale down for real: only terminate workers that are
+            // empty and have been empty past the grace period; highest
+            // index first (the packing concentrates load on low indices,
+            // so high-index bins are the ones bin-packing freed).
             let mut candidates: Vec<WorkerId> = workers
                 .iter()
                 .filter(|w| w.pe_count == 0)
@@ -189,6 +220,37 @@ mod tests {
         // t=12s even though it was first empty at t=0.
         let p = s.plan(Millis::from_secs(12), 0, &workers(&[0]), 5);
         assert!(p.terminate.is_empty());
+    }
+
+    #[test]
+    fn transient_boot_excess_cancels_boots_not_workers() {
+        // Regression (scale-thrash): demand drops right after a scale-up
+        // burst. Supply (active + booting) now exceeds target, but the
+        // excess is exactly the in-flight boots — the plan must cancel
+        // them and leave every live worker alone, even ones past grace.
+        let mut s = scaler();
+        let w = workers(&[2, 1, 0, 0]); // workers 2,3 empty
+        s.plan(Millis(0), 6, &w, 0); // start grace clocks
+        // At t=30s: bins_needed 1, buffer_for(4)=3 → target 4; supply
+        // 4 + 3 booting = 7 → excess 3. Workers 2,3 are graced-empty —
+        // the old planner would have killed both.
+        let p = s.plan(Millis::from_secs(30), 1, &w, 3);
+        assert_eq!(p.target_workers, 4);
+        assert_eq!(p.cancel_boots, 3, "boots absorb the whole excess");
+        assert!(p.terminate.is_empty(), "no live worker terminated");
+    }
+
+    #[test]
+    fn excess_beyond_boots_still_terminates_graced_workers() {
+        let mut s = scaler();
+        let w = workers(&[1, 0, 0, 0, 0]);
+        s.plan(Millis(0), 0, &w, 0);
+        // target = 0 + buffer_for(5)=3; supply 5 + 1 booting = 6 →
+        // excess 3: cancel the 1 boot, then terminate 2 graced-empty
+        // workers (highest index first).
+        let p = s.plan(Millis::from_secs(30), 0, &w, 1);
+        assert_eq!(p.cancel_boots, 1);
+        assert_eq!(p.terminate, vec![WorkerId(4), WorkerId(3)]);
     }
 
     #[test]

@@ -1,6 +1,8 @@
-//! IRM configuration — the analogue of [15] §4.3 / Table 1's tunables.
+//! IRM configuration — the analogue of [15] §4.3 / Table 1's tunables,
+//! plus the multi-resource extension (the paper's stated future work).
 
-use crate::types::{CpuFraction, Millis};
+use crate::binpacking::ResourceVec;
+use crate::types::{CpuFraction, ImageName, Millis};
 
 /// Which packing algorithm the bin-packing manager runs (First-Fit in the
 /// paper; the rest exist for the A1 ablation). Every choice maps onto the
@@ -13,6 +15,34 @@ pub enum PackerChoice {
     WorstFit,
     /// Harmonic with `k` classes (k ≥ 2).
     Harmonic(usize),
+}
+
+/// Which resource model the bin-packing manager packs on.
+///
+/// Under `Vector` the item is the full CPU/RAM/net vector (CPU from the
+/// live profiler, RAM/net from [`IrmConfig::image_resources`]), bins carry
+/// their VM flavor's capacity vector, and the rule is vector First-Fit
+/// (the paper's rule generalized — `PackerChoice` selects the scalar rule
+/// only). All quantities are in reference-VM units: `1.0` in a dimension
+/// is the whole reference flavor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ResourceModel {
+    /// Scalar CPU-only packing at unit capacity (the paper's model).
+    CpuOnly,
+    /// Multi-dimensional packing over CPU, RAM and network with
+    /// heterogeneous bin capacities.
+    Vector {
+        /// Capacity of the VMs the autoscaler will request for bins the
+        /// packing opens beyond the active workers. `bins_needed − active`
+        /// therefore counts VMs **of this flavor** — a per-flavor VM
+        /// target. Choose the smallest flavor the cloud may deliver for a
+        /// conservative plan: live workers are always fit-tested at each
+        /// request's true size; only a request that must open a new bin
+        /// is clamped into this flavor (a demand larger than a whole new
+        /// VM gets the whole VM), and the next control cycle reconciles
+        /// against the capacities actually provisioned.
+        new_vm_capacity: ResourceVec,
+    },
 }
 
 /// Idle-worker buffer policy (§V-A: "a small buffer of idle workers are
@@ -82,6 +112,13 @@ pub struct IrmConfig {
     /// configurable rate").
     pub binpack_interval: Millis,
     pub packer: PackerChoice,
+    /// CPU-only (the paper) or multi-dimensional vector packing.
+    pub resource_model: ResourceModel,
+    /// Per-image non-CPU demand profile (RAM/net, reference-VM units) for
+    /// the vector model — workload metadata, not profiled live (the CPU
+    /// component is ignored; the profiler owns it). Unlisted images demand
+    /// CPU only.
+    pub image_resources: Vec<(ImageName, ResourceVec)>,
     pub buffer_policy: BufferPolicy,
     pub load_predictor: LoadPredictorConfig,
     /// TTL for container host requests (requeues burn one unit).
@@ -102,6 +139,8 @@ impl Default for IrmConfig {
         IrmConfig {
             binpack_interval: Millis::from_secs(2),
             packer: PackerChoice::FirstFit,
+            resource_model: ResourceModel::CpuOnly,
+            image_resources: Vec::new(),
             buffer_policy: BufferPolicy::Logarithmic,
             load_predictor: LoadPredictorConfig::default(),
             request_ttl: 100,

@@ -11,6 +11,7 @@
 
 use std::collections::VecDeque;
 
+use crate::binpacking::{Resource, ResourceVec};
 use crate::profiler::WorkerProfiler;
 use crate::types::{CpuFraction, ImageName, Millis};
 
@@ -31,6 +32,10 @@ pub struct ContainerRequest {
     pub ttl: u32,
     /// Current item-size metric (refreshed from the profiler while queued).
     pub estimate: CpuFraction,
+    /// Full resource-vector metric for the multi-dimensional model: the
+    /// CPU component mirrors `estimate` (and is refreshed with it); RAM
+    /// and network come from the image's configured resource profile.
+    pub estimate_vec: ResourceVec,
     pub origin: RequestOrigin,
     pub enqueued_at: Millis,
     pub requeues: u32,
@@ -50,11 +55,30 @@ impl ContainerQueue {
         ContainerQueue::default()
     }
 
-    /// Enqueue a fresh request.
+    /// Enqueue a fresh CPU-only request (the paper's model).
     pub fn push(
         &mut self,
         image: ImageName,
         estimate: CpuFraction,
+        ttl: u32,
+        origin: RequestOrigin,
+        now: Millis,
+    ) -> u64 {
+        self.push_vec(
+            image,
+            ResourceVec::cpu(estimate.value()),
+            ttl,
+            origin,
+            now,
+        )
+    }
+
+    /// Enqueue a fresh request with a full resource-vector estimate (the
+    /// scalar `estimate` is its CPU component).
+    pub fn push_vec(
+        &mut self,
+        image: ImageName,
+        estimate_vec: ResourceVec,
         ttl: u32,
         origin: RequestOrigin,
         now: Millis,
@@ -65,7 +89,8 @@ impl ContainerQueue {
             id,
             image,
             ttl,
-            estimate,
+            estimate: CpuFraction::new(estimate_vec.get(Resource::Cpu)),
+            estimate_vec,
             origin,
             enqueued_at: now,
             requeues: 0,
@@ -87,10 +112,13 @@ impl ContainerQueue {
     }
 
     /// Periodic metric refresh (§V-B1/§V-B3: updated averages are
-    /// propagated to requests waiting in the queue).
+    /// propagated to requests waiting in the queue). The profiler owns the
+    /// CPU dimension; RAM/net keep their enqueue-time profile.
     pub fn refresh_estimates(&mut self, profiler: &WorkerProfiler) {
         for req in &mut self.queue {
             req.estimate = profiler.estimate(&req.image);
+            req.estimate_vec
+                .set(Resource::Cpu, req.estimate.value());
         }
     }
 

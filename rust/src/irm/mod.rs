@@ -23,6 +23,7 @@ pub mod config;
 pub mod container_queue;
 pub mod load_predictor;
 
+use crate::binpacking::{Resource, ResourceVec};
 use crate::clock::Periodic;
 use crate::master::Master;
 use crate::profiler::{ProfilerConfig, WorkerProfiler};
@@ -31,7 +32,7 @@ use crate::types::{CpuFraction, ImageName, Millis, WorkerId};
 
 pub use allocator::{Allocation, Allocator, PackOutcome, WorkerBin};
 pub use autoscaler::{AutoScaler, ScalePlan, WorkerState};
-pub use config::{BufferPolicy, IrmConfig, LoadPredictorConfig, PackerChoice};
+pub use config::{BufferPolicy, IrmConfig, LoadPredictorConfig, PackerChoice, ResourceModel};
 pub use container_queue::{ContainerQueue, ContainerRequest, RequestOrigin};
 pub use load_predictor::{LoadPredictor, ScaleDecision};
 
@@ -41,6 +42,11 @@ pub struct ClusterView {
     /// Active workers in id order, with the images of the PEs they host
     /// (booting PEs included — their capacity is already committed).
     pub workers: Vec<(WorkerId, Vec<ImageName>)>,
+    /// Per-worker flavor capacity in reference-VM units, parallel to
+    /// `workers`. Empty (or short) means unit capacity — the paper's
+    /// homogeneous setup, and the only thing the CPU-only model ever
+    /// sees.
+    pub capacities: Vec<ResourceVec>,
     /// VMs requested but still provisioning.
     pub booting_vms: usize,
 }
@@ -52,11 +58,18 @@ pub struct IrmUpdate {
     pub start_pes: Vec<Allocation>,
     /// Request this many new VMs.
     pub request_vms: usize,
+    /// Cancel this many in-flight VM boot requests (newest first) — the
+    /// autoscaler absorbs a transient over-supply here before it ever
+    /// terminates a live worker.
+    pub cancel_boots: usize,
     /// Drain and terminate these workers' VMs.
     pub terminate_workers: Vec<WorkerId>,
     /// Telemetry: scheduled CPU per active worker after the latest packing
     /// run (Figs 4/8 series), empty if no run happened this cycle.
     pub scheduled: Vec<(WorkerId, CpuFraction)>,
+    /// Telemetry: full scheduled resource vector per active worker (RAM
+    /// and net are zero under the CPU-only model).
+    pub scheduled_vec: Vec<(WorkerId, ResourceVec)>,
     /// Telemetry: the latest worker target (Fig 10).
     pub target_workers: Option<usize>,
     /// Telemetry: bins needed by the latest packing (Fig 10 "active bins"
@@ -78,6 +91,7 @@ pub struct Irm {
     /// Last packing telemetry, re-reported between runs so the recorded
     /// series are continuous.
     last_scheduled: Vec<(WorkerId, CpuFraction)>,
+    last_scheduled_vec: Vec<(WorkerId, ResourceVec)>,
     last_bins_needed: usize,
     last_target: usize,
     /// Reused per-cycle buffers (the control loop runs every sim tick —
@@ -90,7 +104,7 @@ impl Irm {
     pub fn new(cfg: IrmConfig) -> Self {
         Irm {
             queue: ContainerQueue::new(),
-            allocator: Allocator::new(cfg.packer),
+            allocator: Allocator::with_model(cfg.packer, cfg.resource_model),
             predictor: LoadPredictor::new(cfg.load_predictor),
             scaler: AutoScaler::new(cfg.buffer_policy, cfg.worker_drain_grace),
             profiler: WorkerProfiler::new(ProfilerConfig {
@@ -101,6 +115,7 @@ impl Irm {
             binpack_timer: Periodic::new(cfg.binpack_interval),
             cfg,
             last_scheduled: Vec::new(),
+            last_scheduled_vec: Vec::new(),
             last_bins_needed: 0,
             last_target: 0,
             bins_buf: Vec::new(),
@@ -115,14 +130,35 @@ impl Irm {
 
     /// Manual hosting request (user-initiated, e.g. pre-warming an image).
     pub fn host_request(&mut self, image: ImageName, now: Millis) {
-        let est = self.profiler.estimate(&image);
+        let est = self.resource_estimate(&image);
         self.queue
-            .push(image, est, self.cfg.request_ttl, RequestOrigin::Manual, now);
+            .push_vec(image, est, self.cfg.request_ttl, RequestOrigin::Manual, now);
+    }
+
+    /// Full resource-vector estimate for an image: CPU from the live
+    /// profiler, RAM/net from the configured per-image profile (workload
+    /// metadata; zero when unlisted).
+    pub fn resource_estimate(&self, image: &ImageName) -> ResourceVec {
+        let mut vec = self
+            .cfg
+            .image_resources
+            .iter()
+            .find(|(img, _)| img == image)
+            .map(|(_, r)| *r)
+            .unwrap_or(ResourceVec::ZERO);
+        vec.set(Resource::Cpu, self.profiler.estimate(image).value());
+        vec
     }
 
     /// Latest scheduled view (continuous between packing runs).
     pub fn scheduled_view(&self) -> &[(WorkerId, CpuFraction)] {
         &self.last_scheduled
+    }
+
+    /// Latest scheduled resource vectors (continuous between packing
+    /// runs; RAM/net are zero under the CPU-only model).
+    pub fn scheduled_vec_view(&self) -> &[(WorkerId, ResourceVec)] {
+        &self.last_scheduled_vec
     }
 
     pub fn last_target(&self) -> usize {
@@ -159,13 +195,18 @@ impl Irm {
             self.queue.refresh_estimates(&self.profiler);
             let requests = self.queue.drain();
             self.bins_buf.clear();
-            for (id, images) in &view.workers {
-                self.bins_buf.push(WorkerBin {
-                    worker: *id,
-                    scheduled: allocator::scheduled_load(images, |img| {
-                        self.profiler.estimate(img)
-                    }),
-                });
+            for (i, (id, images)) in view.workers.iter().enumerate() {
+                // Unlisted capacities (short or empty vector) mean the
+                // unit reference flavor.
+                let capacity = view
+                    .capacities
+                    .get(i)
+                    .copied()
+                    .unwrap_or(ResourceVec::UNIT);
+                let scheduled_vec =
+                    allocator::scheduled_resources(images, |img| self.resource_estimate(img));
+                self.bins_buf
+                    .push(WorkerBin::vector(*id, scheduled_vec, capacity));
             }
             let outcome = self.allocator.pack(requests, &self.bins_buf);
             for req in outcome.pending_new_workers {
@@ -174,10 +215,12 @@ impl Irm {
                 self.queue.requeue(req);
             }
             self.last_scheduled = outcome.scheduled.clone();
+            self.last_scheduled_vec = outcome.scheduled_vec.clone();
             self.last_bins_needed = outcome.bins_needed;
             update.start_pes = outcome.allocations;
             update.bins_needed = Some(outcome.bins_needed);
             update.scheduled = outcome.scheduled;
+            update.scheduled_vec = outcome.scheduled_vec;
         }
 
         // --- 3. Auto-scaler: worker supply vs bins needed. ---
@@ -191,6 +234,7 @@ impl Irm {
             .plan(now, self.last_bins_needed, &self.states_buf, view.booting_vms);
         self.last_target = plan.target_workers;
         update.request_vms = plan.request_vms;
+        update.cancel_boots = plan.cancel_boots;
         update.terminate_workers = plan.terminate;
         update.target_workers = Some(plan.target_workers);
 
@@ -229,9 +273,9 @@ impl Irm {
                 .saturating_sub(hosted + queued)
                 .min(waiting.saturating_sub(queued));
             let n = share.min(room);
-            let est = self.profiler.estimate(image);
+            let est = self.resource_estimate(image);
             for _ in 0..n {
-                self.queue.push(
+                self.queue.push_vec(
                     image.clone(),
                     est,
                     self.cfg.request_ttl,
@@ -259,6 +303,7 @@ mod tests {
                     )
                 })
                 .collect(),
+            capacities: Vec::new(),
             booting_vms: booting,
         }
     }
@@ -393,6 +438,70 @@ mod tests {
         // A cycle between packing runs keeps the last view.
         irm.control_cycle(Millis(1500), &mut master, &view(&[(0, &["img"])], 0));
         assert_eq!(irm.scheduled_view(), sched.as_slice());
+    }
+
+    #[test]
+    fn vector_model_limits_pes_by_ram_profile() {
+        // Same workload twice: the CPU-only model packs by the 0.1 CPU
+        // estimate (all 8 requested PEs land on the one worker); the
+        // vector model sees the 0.4 RAM profile and stops at 2.
+        let run = |model: ResourceModel| {
+            let mut cfg = fast_cfg();
+            cfg.resource_model = model;
+            cfg.image_resources =
+                vec![(ImageName::new("img"), ResourceVec::new(0.0, 0.4, 0.05))];
+            cfg.default_estimate = CpuFraction::new(0.1);
+            let mut irm = Irm::new(cfg);
+            let mut master = Master::new();
+            flood_backlog(&mut master, "img", 50);
+            irm.control_cycle(Millis(0), &mut master, &view(&[], 0));
+            let update =
+                irm.control_cycle(Millis(1000), &mut master, &view(&[(0, &[])], 0));
+            update.start_pes.len()
+        };
+        let cpu_only = run(ResourceModel::CpuOnly);
+        let vector = run(ResourceModel::Vector {
+            new_vm_capacity: ResourceVec::UNIT,
+        });
+        assert!(cpu_only >= 8, "cpu-only packs by cpu: got {cpu_only}");
+        assert_eq!(vector, 2, "0.4 RAM per PE: two fit a unit worker");
+    }
+
+    #[test]
+    fn vector_model_respects_view_capacities() {
+        // A half-RAM flavor takes one 0.4-RAM PE where the unit flavor
+        // takes two.
+        let mut cfg = fast_cfg();
+        cfg.resource_model = ResourceModel::Vector {
+            new_vm_capacity: ResourceVec::UNIT,
+        };
+        cfg.image_resources = vec![(ImageName::new("img"), ResourceVec::new(0.0, 0.4, 0.0))];
+        cfg.default_estimate = CpuFraction::new(0.1);
+        let mut irm = Irm::new(cfg);
+        let mut master = Master::new();
+        flood_backlog(&mut master, "img", 50);
+        irm.control_cycle(Millis(0), &mut master, &view(&[], 0));
+        let mut v = view(&[(0, &[])], 0);
+        v.capacities = vec![crate::binpacking::ResourceVec::new(0.5, 0.5, 1.0)];
+        let update = irm.control_cycle(Millis(1000), &mut master, &v);
+        assert_eq!(update.start_pes.len(), 1, "half flavor fits one 0.4-RAM PE");
+        // Telemetry carries the vector view.
+        assert!(
+            (irm.scheduled_vec_view()[0].1.get(Resource::Ram) - 0.4).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn cancel_boots_flow_through_update() {
+        let mut irm = Irm::new(fast_cfg());
+        let mut master = Master::new();
+        // No demand, no workers, but 5 boots in flight: target is the
+        // 1-worker standing buffer → 4 boots cancelled, nothing killed.
+        let update = irm.control_cycle(Millis(0), &mut master, &view(&[], 5));
+        assert_eq!(update.target_workers, Some(1));
+        assert_eq!(update.cancel_boots, 4);
+        assert!(update.terminate_workers.is_empty());
+        assert_eq!(update.request_vms, 0);
     }
 
     #[test]

@@ -13,6 +13,7 @@
 
 use std::collections::{HashMap, HashSet};
 
+use crate::binpacking::{Resource, ResourceVec};
 use crate::cloud::{CloudConfig, SimCloud};
 use crate::connector::LocalConnector;
 use crate::irm::{ClusterView, Irm, IrmConfig};
@@ -89,6 +90,10 @@ pub struct SimCluster {
     /// indices across churn, like the paper's b1..bm).
     used_slots: Vec<bool>,
     vm_of_worker: HashMap<WorkerId, VmId>,
+    /// Flavor capacity per live worker, cached at registration — the
+    /// per-tick paths (view refresh, report scaling, sampling) must not
+    /// rescan the cloud's ever-growing VM list.
+    worker_capacity: HashMap<WorkerId, ResourceVec>,
     connector: LocalConnector,
     /// Per-worker docker image cache: completed pulls. Keyed by worker
     /// slot so it can be carried across runs (the paper keeps HIO — and
@@ -121,6 +126,7 @@ impl SimCluster {
             workers: Vec::new(),
             used_slots: Vec::new(),
             vm_of_worker: HashMap::new(),
+            worker_capacity: HashMap::new(),
             connector: LocalConnector::new(),
             pulled_images: HashSet::new(),
             pulls_in_flight: HashMap::new(),
@@ -140,6 +146,16 @@ impl SimCluster {
     /// Position of worker `id` in the (id-sorted) worker list.
     fn worker_pos(&self, id: WorkerId) -> Option<usize> {
         self.workers.binary_search_by_key(&id, |w| w.id).ok()
+    }
+
+    /// Flavor capacity of worker `id` in reference-VM units, from the
+    /// registration-time cache (unit if unknown — defensive only; every
+    /// worker is cached when its VM becomes active).
+    fn flavor_capacity_of(&self, id: WorkerId) -> ResourceVec {
+        self.worker_capacity
+            .get(&id)
+            .copied()
+            .unwrap_or(ResourceVec::UNIT)
     }
 
     /// Schedule a stream arrival at absolute sim time `at`.
@@ -253,6 +269,14 @@ impl SimCluster {
                 self.cfg.seed ^ (0x9E37 + vm.0 * 7919),
             );
             self.vm_of_worker.insert(id, vm);
+            // Cache the flavor capacity once, at registration — the only
+            // place the cloud's VM list is consulted for it.
+            let capacity = self
+                .cloud
+                .vm(vm)
+                .map(|v| v.flavor.capacity())
+                .unwrap_or(ResourceVec::UNIT);
+            self.worker_capacity.insert(id, capacity);
             // Register with the master immediately (empty report) so the
             // registry knows the worker exists.
             self.master.ingest_report(crate::protocol::WorkerReport {
@@ -279,7 +303,28 @@ impl SimCluster {
         for (wid, event) in self.worker_events.drain(..) {
             match event {
                 WorkerEvent::Report(report) => {
-                    self.irm.ingest_report(&report);
+                    // Workers measure CPU as a fraction of *themselves*;
+                    // the profiler works in reference-VM units. On the
+                    // homogeneous (unit-flavor) path the two coincide and
+                    // the report is forwarded as-is; a smaller flavor's
+                    // report is rescaled first (heterogeneous runs only —
+                    // the steady-state tick stays allocation-free).
+                    let cpu_cap = self
+                        .worker_capacity
+                        .get(&wid)
+                        .copied()
+                        .unwrap_or(ResourceVec::UNIT)
+                        .get(Resource::Cpu);
+                    if (cpu_cap - 1.0).abs() > 1e-9 {
+                        let mut scaled = report.clone();
+                        scaled.total_cpu = CpuFraction::new(report.total_cpu.value() * cpu_cap);
+                        for (_, v) in &mut scaled.per_image {
+                            *v = CpuFraction::new(v.value() * cpu_cap);
+                        }
+                        self.irm.ingest_report(&scaled);
+                    } else {
+                        self.irm.ingest_report(&report);
+                    }
                     self.master.ingest_report(report);
                 }
                 WorkerEvent::JobCompleted {
@@ -325,10 +370,24 @@ impl SimCluster {
         let update = self.irm.control_cycle(now, &mut self.master, &self.view);
 
         for alloc in update.start_pes {
+            // Image demand is configured in reference-VM units; the worker
+            // normalizes CPU to its own flavor (a one-reference-core PE
+            // occupies 1/4 of an SSC.large, 1/8 of the SSC.xlarge
+            // reference).
             let demand = self.demand_for(&alloc.request.image);
+            let cpu_cap = self
+                .flavor_capacity_of(alloc.worker)
+                .get(Resource::Cpu)
+                .max(1e-6);
+            let local_demand = CpuFraction::new(demand.value() / cpu_cap);
             let pull = self.pull_wait(alloc.worker, &alloc.request.image, now);
             if let Some(pos) = self.worker_pos(alloc.worker) {
-                self.workers[pos].start_pe_with_pull(alloc.request.image.clone(), demand, now, pull);
+                self.workers[pos].start_pe_with_pull(
+                    alloc.request.image.clone(),
+                    local_demand,
+                    now,
+                    pull,
+                );
             } else {
                 // Worker vanished (scale-down race): requeue per §V-B2.
                 self.irm.queue.requeue(alloc.request);
@@ -338,6 +397,13 @@ impl SimCluster {
             // Quota failures are counted inside the cloud (Fig 10 retries).
             let _ = self.cloud.request_vm(now);
         }
+        for _ in 0..update.cancel_boots {
+            // Scale-thrash valve: a transient over-supply absorbs the
+            // boots it caused instead of terminating live workers.
+            if self.cloud.cancel_newest_booting().is_none() {
+                break;
+            }
+        }
         for wid in update.terminate_workers {
             if let Some(pos) = self.worker_pos(wid) {
                 let w = self.workers.remove(pos);
@@ -345,6 +411,7 @@ impl SimCluster {
                 if let Some(vm) = self.vm_of_worker.remove(&wid) {
                     self.cloud.terminate_vm(vm);
                 }
+                self.worker_capacity.remove(&wid);
                 self.master.registry_mut().remove(wid);
                 self.release_slot(wid);
             }
@@ -358,10 +425,11 @@ impl SimCluster {
 
     /// Rebuild the IRM's cluster view **in place**: the outer vector and
     /// the per-worker image vectors are reused; only the Arc-backed image
-    /// names are (cheaply) cloned.
+    /// names are (cheaply) cloned (capacities are `Copy`).
     fn refresh_view(&mut self) {
         let n = self.workers.len();
         self.view.workers.truncate(n);
+        self.view.capacities.clear();
         for (i, w) in self.workers.iter().enumerate() {
             let images = w
                 .pes()
@@ -377,6 +445,14 @@ impl SimCluster {
             } else {
                 self.view.workers.push((w.id, images.collect()));
             }
+        }
+        for w in &self.workers {
+            let cap = self
+                .worker_capacity
+                .get(&w.id)
+                .copied()
+                .unwrap_or(ResourceVec::UNIT);
+            self.view.capacities.push(cap);
         }
         self.view.booting_vms = self.cloud.booting_vms().len();
     }
@@ -408,7 +484,13 @@ impl SimCluster {
                         .filter(|p| p.state() != crate::protocol::PeState::Stopping)
                         .map(|p| self.irm.profiler.estimate(&p.image).value())
                         .sum();
-                    (w.last_total_cpu.value(), sched)
+                    // Workers measure CPU as a fraction of themselves;
+                    // the scheduled series (profiler estimates) is in
+                    // reference-VM units — scale measured to match, or
+                    // every non-unit flavor's error_pp series reads a
+                    // systematic offset.
+                    let cpu_cap = self.flavor_capacity_of(w.id).get(Resource::Cpu);
+                    (w.last_total_cpu.value() * cpu_cap, sched)
                 }
                 _ => (0.0, 0.0),
             };
@@ -417,6 +499,32 @@ impl SimCluster {
             self.recorder.record(&names.scheduled, now, scheduled);
             self.recorder
                 .record(&names.error_pp, now, (scheduled - measured) * 100.0);
+        }
+        // Worst per-worker RAM overcommit (percentage points of the
+        // reference VM): how far the *actual placement* exceeds the
+        // worker's flavor RAM — the signal the multi-dim ablation
+        // compares across resource models (zero when packing respects
+        // RAM; positive when a capacity-blind model over-packs it). Only
+        // aggregated when the workload carries RAM profiles at all —
+        // without them every PE's RAM is zero and the per-PE sweep would
+        // be pure hot-path waste recording a constant.
+        if !self.cfg.irm.image_resources.is_empty() {
+            let ram_overcommit = self
+                .workers
+                .iter()
+                .map(|w| {
+                    let cap = self.flavor_capacity_of(w.id).get(Resource::Ram);
+                    let scheduled: f64 = w
+                        .pes()
+                        .iter()
+                        .filter(|p| p.state() != crate::protocol::PeState::Stopping)
+                        .map(|p| self.irm.resource_estimate(&p.image).get(Resource::Ram))
+                        .sum();
+                    scheduled - cap
+                })
+                .fold(0.0f64, f64::max);
+            self.recorder
+                .record("ram.overcommit_pp", now, ram_overcommit * 100.0);
         }
         self.recorder
             .record("queue.len", now, self.master.backlog_len() as f64);
@@ -460,6 +568,7 @@ impl SimCluster {
         if let Some(vm) = self.vm_of_worker.remove(&id) {
             self.cloud.terminate_vm(vm);
         }
+        self.worker_capacity.remove(&id);
         self.master.registry_mut().remove(id);
         self.release_slot(id);
         true
@@ -668,6 +777,42 @@ mod tests {
             let s = c.recorder.get(name).expect(name);
             assert!(s.len() >= 60, "{name} has {} samples", s.len());
         }
+    }
+
+    #[test]
+    fn heterogeneous_vector_cluster_respects_ram() {
+        use crate::cloud::Flavor;
+        use crate::irm::ResourceModel;
+        let mut cfg = ClusterConfig {
+            cloud: CloudConfig {
+                quota: 5,
+                boot_delay: Millis::from_secs(5),
+                boot_jitter: Millis(1000),
+                flavor_cycle: vec![Flavor::Xlarge, Flavor::Large],
+                ..CloudConfig::default()
+            },
+            worker: WorkerConfig {
+                container_boot: Millis(2000),
+                container_boot_jitter: Millis(500),
+                container_idle_timeout: Millis::from_secs(5),
+                measure_noise_std: 0.0,
+                ..WorkerConfig::default()
+            },
+            ..ClusterConfig::default()
+        };
+        cfg.irm.resource_model = ResourceModel::Vector {
+            new_vm_capacity: Flavor::Large.capacity(),
+        };
+        cfg.irm.image_resources =
+            vec![(ImageName::new("img"), ResourceVec::new(0.0, 0.4, 0.05))];
+        let mut c = SimCluster::new(cfg);
+        burst(&mut c, 40, Millis(0), Millis::from_secs(10));
+        let makespan = c.run_to_completion(40, Millis::from_secs(1800));
+        assert!(makespan.is_some(), "heterogeneous vector cluster completes");
+        // Vector packing must never exceed any worker's flavor RAM: the
+        // overcommit series stays at or below zero the whole run.
+        let worst = c.recorder.get("ram.overcommit_pp").unwrap().max();
+        assert!(worst <= 1e-6, "RAM overcommitted by {worst} pp");
     }
 
     #[test]

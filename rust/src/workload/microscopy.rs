@@ -13,6 +13,7 @@
 //! pixel path is exercised by the PJRT end-to-end example, which generates
 //! fluorescence-like images via [`ImageGen`](crate::workload::ImageGen)).
 
+use crate::binpacking::ResourceVec;
 use crate::sim::Arrival;
 use crate::types::{ImageName, Millis};
 use crate::util::rng::Rng;
@@ -55,6 +56,15 @@ impl Default for MicroscopyConfig {
 /// The container image every microscopy message requires.
 pub fn cellprofiler_image() -> ImageName {
     ImageName::new("cellprofiler:3.1.9")
+}
+
+/// Per-PE non-CPU resource profile of the CellProfiler image, in
+/// reference-VM units — the workload metadata the multi-resource IRM packs
+/// on (`IrmConfig::image_resources`). Image analysis is RAM-heavy (the
+/// whole plate is decompressed in memory) and network-light; the CPU
+/// dimension is zero because the live profiler owns it.
+pub fn resource_profile() -> (ImageName, ResourceVec) {
+    (cellprofiler_image(), ResourceVec::new(0.0, 0.30, 0.05))
 }
 
 /// The materialized dataset: per-image fixed properties.
@@ -159,6 +169,15 @@ mod tests {
         // 767 images at 50/s -> whole batch within ~16 s.
         assert!(trace.end() <= Millis::from_secs(16));
         assert_eq!(trace.len(), 767);
+    }
+
+    #[test]
+    fn resource_profile_is_ram_heavy_cpu_free() {
+        use crate::binpacking::Resource;
+        let (img, r) = resource_profile();
+        assert_eq!(img, cellprofiler_image());
+        assert_eq!(r.get(Resource::Cpu), 0.0, "profiler owns CPU");
+        assert!(r.get(Resource::Ram) > r.get(Resource::Net));
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! regular small batches of jobs and two peaks of large batches to
 //! introduce different levels of intensity in pressure to the IRM."
 
+use crate::binpacking::ResourceVec;
 use crate::sim::Arrival;
 use crate::types::{ImageName, Millis};
 use crate::util::rng::Rng;
@@ -67,6 +68,20 @@ impl SyntheticWorkload {
             ImageName::new("busy-40s"),
             ImageName::new("busy-80s"),
         ]
+    }
+
+    /// Per-class non-CPU resource profiles (reference-VM units) for the
+    /// multi-resource IRM: longer workloads hold more working-set RAM;
+    /// network stays light (the CPU dimension is zero — the live profiler
+    /// owns it).
+    pub fn resource_profiles() -> Vec<(ImageName, ResourceVec)> {
+        let rams = [0.10, 0.15, 0.20, 0.30];
+        let nets = [0.02, 0.02, 0.05, 0.05];
+        Self::images()
+            .into_iter()
+            .zip(rams.into_iter().zip(nets))
+            .map(|(img, (ram, net))| (img, ResourceVec::new(0.0, ram, net)))
+            .collect()
     }
 
     /// Materialize the arrival trace.
@@ -149,6 +164,20 @@ mod tests {
         let peak0 = count_in(0.29, 0.33);
         let quiet = count_in(0.45, 0.49);
         assert!(peak0 > quiet * 3, "peak {peak0} vs quiet {quiet}");
+    }
+
+    #[test]
+    fn resource_profiles_cover_every_class() {
+        use crate::binpacking::Resource;
+        let profiles = SyntheticWorkload::resource_profiles();
+        assert_eq!(profiles.len(), 4);
+        for (img, r) in &profiles {
+            assert!(SyntheticWorkload::images().contains(img));
+            assert_eq!(r.get(Resource::Cpu), 0.0, "profiler owns CPU");
+            assert!(r.get(Resource::Ram) > 0.0 && r.get(Resource::Ram) <= 1.0);
+        }
+        // Longer workloads hold more RAM.
+        assert!(profiles[3].1.get(Resource::Ram) > profiles[0].1.get(Resource::Ram));
     }
 
     #[test]

@@ -1,0 +1,228 @@
+//! Multi-dimensional placement-equivalence properties: the indexed vector
+//! engine ([`VecPackEngine`]) must make **exactly** the same decisions as
+//! the naive `first_fit_md_in` oracle, over random vector item streams and
+//! random *flavor mixes* (heterogeneous bin capacities, pre-loaded bins,
+//! live-engine rounds through `sync`) — the vector mirror of
+//! `rust/tests/binpacking_equivalence.rs`.
+
+use harmonicio::binpacking::{
+    first_fit_md_in, first_fit_md_indexed, FirstFit, Item, ResourceVec, VecBin, VecItem,
+    VecPackEngine,
+};
+use harmonicio::testkit::{self, Config};
+use harmonicio::util::rng::Rng;
+
+/// The flavor palette instances draw from (reference = the unit flavor;
+/// mirrors the SSC flavors plus an odd asymmetric one).
+const FLAVORS: [ResourceVec; 4] = [
+    ResourceVec([1.0, 1.0, 1.0]),
+    ResourceVec([0.5, 0.5, 1.0]),
+    ResourceVec([0.125, 0.125, 1.0]),
+    ResourceVec([0.75, 0.4, 0.6]),
+];
+
+fn rand_flavor(rng: &mut Rng) -> ResourceVec {
+    FLAVORS[rng.below(FLAVORS.len() as u64) as usize]
+}
+
+/// Random instance: a flavor mix of pre-loaded bins (about a quarter
+/// exactly empty — idle workers), an item stream that always fits the
+/// provisioning flavor, and the provisioning flavor itself.
+#[allow(clippy::type_complexity)]
+fn gen_instance(rng: &mut Rng) -> (Vec<(ResourceVec, ResourceVec)>, Vec<ResourceVec>, ResourceVec) {
+    let new_capacity = rand_flavor(rng);
+    let bins: Vec<(ResourceVec, ResourceVec)> = (0..rng.below(12))
+        .map(|_| {
+            let cap = rand_flavor(rng);
+            let used = if rng.below(4) == 0 {
+                ResourceVec::ZERO
+            } else {
+                ResourceVec::new(
+                    rng.uniform(0.0, cap.0[0]),
+                    rng.uniform(0.0, cap.0[1]),
+                    rng.uniform(0.0, cap.0[2]),
+                )
+            };
+            (cap, used)
+        })
+        .collect();
+    let items: Vec<ResourceVec> = (0..rng.below(60))
+        .map(|_| {
+            // CPU is always demanded (a container without CPU does not
+            // exist). Most items fit the provisioning flavor; the rest
+            // range up to the full reference VM, exercising the
+            // larger-live-flavor fit and the clamp-at-open paths.
+            if rng.below(4) == 0 {
+                ResourceVec::new(
+                    rng.uniform(0.01, 1.0),
+                    rng.uniform(0.0, 1.0),
+                    rng.uniform(0.0, 1.0),
+                )
+            } else {
+                ResourceVec::new(
+                    rng.uniform(0.01, new_capacity.0[0]),
+                    rng.uniform(0.0, new_capacity.0[1]),
+                    rng.uniform(0.0, new_capacity.0[2]),
+                )
+            }
+        })
+        .collect();
+    (bins, items, new_capacity)
+}
+
+fn materialize(bins: &[(ResourceVec, ResourceVec)]) -> Vec<VecBin> {
+    bins.iter()
+        .map(|(cap, used)| VecBin::with_load(*cap, *used))
+        .collect()
+}
+
+fn vec_items(sizes: &[ResourceVec]) -> Vec<VecItem> {
+    sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| VecItem::new(i as u64, s))
+        .collect()
+}
+
+#[test]
+fn prop_indexed_pack_equals_naive_pack() {
+    testkit::forall_no_shrink(
+        Config {
+            cases: 300,
+            ..Config::default()
+        },
+        gen_instance,
+        |(bins, sizes, new_cap)| {
+            let its = vec_items(sizes);
+            let a = first_fit_md_in(&its, materialize(bins), *new_cap);
+            let b = first_fit_md_indexed(&its, materialize(bins), *new_cap);
+            a.check(&its).map_err(|e| format!("naive: {e}"))?;
+            b.check(&its).map_err(|e| format!("indexed: {e}"))?;
+            if a.assignments != b.assignments {
+                return Err(format!(
+                    "diverged (new_cap {new_cap}):\n  naive   {:?}\n  indexed {:?}",
+                    a.assignments, b.assignments
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_engine_insert_stream_equals_batch() {
+    // Feeding items one at a time through a held engine must reproduce the
+    // batch placements (the IRM inserts per request).
+    testkit::forall_no_shrink(
+        Config {
+            cases: 200,
+            ..Config::default()
+        },
+        gen_instance,
+        |(bins, sizes, new_cap)| {
+            let its = vec_items(sizes);
+            let mut engine = VecPackEngine::new(materialize(bins), *new_cap);
+            let got: Vec<usize> = its.iter().map(|it| engine.insert(*it)).collect();
+            let want = first_fit_md_in(&its, materialize(bins), *new_cap).assignments;
+            if got != want {
+                return Err(format!("engine {got:?} != naive {want:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_live_engine_rounds_equal_fresh_packs() {
+    // The IRM pattern: one engine reconciled (`sync`) to a new worker
+    // population every round must place like a from-scratch pack.
+    testkit::forall_no_shrink(
+        Config {
+            cases: 60,
+            ..Config::default()
+        },
+        |rng| {
+            let rounds = 1 + rng.below(5) as usize;
+            (0..rounds).map(|_| gen_instance(rng)).collect::<Vec<_>>()
+        },
+        |rounds| {
+            let mut engine = VecPackEngine::new(Vec::new(), ResourceVec::UNIT);
+            for (bins, sizes, _new_cap) in rounds {
+                // The provisioning flavor is fixed per engine; the worker
+                // population (flavor mix) changes every round.
+                let its = vec_items(sizes);
+                engine.sync(
+                    bins.iter()
+                        .map(|(cap, used)| (*used, *cap))
+                        .collect::<Vec<_>>(),
+                );
+                let got: Vec<usize> = its.iter().map(|it| engine.insert(*it)).collect();
+                let want =
+                    first_fit_md_in(&its, materialize(bins), ResourceVec::UNIT).assignments;
+                if got != want {
+                    return Err(format!(
+                        "live engine diverged on a later round: {got:?} != {want:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cpu_only_items_reduce_to_scalar_first_fit() {
+    // With zero RAM/net demand and unit bins, vector First-Fit must be
+    // indistinguishable from the scalar engine's First-Fit.
+    testkit::forall_no_shrink(
+        Config {
+            cases: 150,
+            ..Config::default()
+        },
+        |rng| testkit::gen_item_sizes(rng, 60),
+        |sizes| {
+            let md: Vec<VecItem> = sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| VecItem::new(i as u64, ResourceVec::cpu(s)))
+                .collect();
+            let scalar: Vec<Item> = sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| Item::new(i as u64, s))
+                .collect();
+            use harmonicio::binpacking::BinPacker;
+            let a = first_fit_md_indexed(&md, Vec::new(), ResourceVec::UNIT);
+            let b = FirstFit.pack(&scalar, Vec::new());
+            if a.assignments != b.assignments {
+                return Err(format!(
+                    "vector {:?} != scalar {:?}",
+                    a.assignments, b.assignments
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn indexed_scales_on_a_large_heterogeneous_stream() {
+    // Deterministic sanity at a size where the naive scan is still
+    // feasible: 10⁴ RAM-heavy items over a flavor mix.
+    let mut rng = Rng::seeded(0xD1CE);
+    let (bins, _, _) = gen_instance(&mut rng);
+    let sizes: Vec<ResourceVec> = (0..10_000)
+        .map(|_| {
+            ResourceVec::new(
+                rng.uniform(0.01, 0.2),
+                rng.uniform(0.0, 0.35),
+                rng.uniform(0.0, 0.1),
+            )
+        })
+        .collect();
+    let its = vec_items(&sizes);
+    let a = first_fit_md_in(&its, materialize(&bins), ResourceVec::UNIT);
+    let b = first_fit_md_indexed(&its, materialize(&bins), ResourceVec::UNIT);
+    assert_eq!(a.assignments, b.assignments);
+    assert_eq!(a.bins_used(), b.bins_used());
+}

@@ -8,7 +8,7 @@ fn all_figures_reproduce_with_passing_checks() {
     std::fs::create_dir_all(&out).unwrap();
     let reports =
         harmonicio::experiments::run("all", out.to_str().unwrap(), 42).expect("suite runs");
-    assert_eq!(reports.len(), 12, "all 12 experiments ran");
+    assert_eq!(reports.len(), 13, "all 13 experiments ran");
     let mut failed = Vec::new();
     for r in &reports {
         for c in &r.checks {
@@ -33,6 +33,7 @@ fn all_figures_reproduce_with_passing_checks() {
         "ablation_packer.csv",
         "ablation_buffer.csv",
         "ablation_profiler.csv",
+        "ablation_multidim.csv",
     ] {
         let path = out.join(fig);
         let meta = std::fs::metadata(&path).unwrap_or_else(|_| panic!("{fig} missing"));

@@ -1,14 +1,18 @@
 #!/usr/bin/env bash
 # Perf + hygiene gate: formatting, lints, and the bin-packing benchmark
-# trajectory. Run from the repo root (where Cargo.toml lives):
+# trajectory — scalar Any-Fit naive-vs-indexed, the multi-dimensional
+# (vector) naive-vs-indexed section, and the 10^5-10^6 scaling runs. Run
+# from the repo root (where Cargo.toml lives):
 #
 #   ./scripts/bench_check.sh [--quick]
 #
 # --quick shrinks the bench budget (BENCH_MEASURE_MS) for smoke runs.
 #
 # Emits BENCH_binpacking.json at the repo root (copied from
-# results/bench_binpacking.json, which cargo bench writes) so every PR
-# leaves a comparable perf artifact behind.
+# results/bench_binpacking.json, which cargo bench writes — the multi-dim
+# section lands in the same merged artifact) so every PR leaves a
+# comparable perf artifact behind. For the fmt+clippy+build+test CI gate
+# without benchmarks, use ./scripts/ci_check.sh.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# One-command CI gate: formatting, lints, release build and the tier-1
+# test suite — exactly what the PR driver enforces. Run from anywhere:
+#
+#   ./scripts/ci_check.sh
+#
+# (Benchmarks are NOT part of this gate; run ./scripts/bench_check.sh for
+# the perf trajectory artifact.)
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo fmt --check"
+cargo fmt --check
+
+echo "== cargo clippy -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "== cargo build --release"
+cargo build --release
+
+echo "== cargo test -q"
+cargo test -q
+
+echo "== ci_check: all green"
