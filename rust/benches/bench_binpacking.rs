@@ -11,9 +11,9 @@ use std::time::Duration;
 
 use harmonicio::bench::{black_box, Bencher};
 use harmonicio::binpacking::{
-    analysis, first_fit_md_in, BestFit, Bin, BinPacker, EngineRule, FirstFit, FirstFitDecreasing,
-    FirstFitTree, Harmonic, IndexedPacker, Item, NextFit, PackEngine, ResourceVec, VecItem,
-    VecPackEngine, WorstFit,
+    analysis, first_fit_md_in, pack_md_in, pack_md_indexed, BestFit, Bin, BinPacker, EngineRule,
+    FirstFit, FirstFitDecreasing, FirstFitTree, Harmonic, IndexedPacker, Item, NextFit,
+    PackEngine, ResourceVec, VecItem, VecPackEngine, VecRule, WorstFit,
 };
 use harmonicio::util::rng::Rng;
 
@@ -161,6 +161,44 @@ fn main() {
             black_box(VecPackEngine::new(Vec::new(), large).pack_all(black_box(&md)));
         }
     });
+
+    // --- The rest of the vector family (ISSUE 3): Best-/Worst-Fit walk
+    // every keyed-dimension candidate (no asymptotic win over the naive
+    // scan — the walk only prunes; correctness is property-pinned), and
+    // Harmonic's buckets are O(1) per item against the naive hash probe.
+    // Naive baselines and the O(n·m)-ish indexed Best/Worst run under the
+    // reduced heavy budget; quick runs skip the whole section.
+    if !quick {
+        let md_small = md_instance(5_000, 17);
+        let mut heavy = Bencher::with_budget(Duration::from_millis(0), Duration::from_secs(2), 3);
+        for (label, rule) in [
+            ("md-best-fit", VecRule::Best),
+            ("md-worst-fit", VecRule::Worst),
+            ("md-harmonic-7", VecRule::Harmonic(7)),
+        ] {
+            heavy.bench_throughput(&format!("{label}-naive/5000"), Some(5_000), |iters| {
+                for _ in 0..iters {
+                    black_box(pack_md_in(
+                        rule,
+                        black_box(&md_small),
+                        Vec::new(),
+                        ResourceVec::UNIT,
+                    ));
+                }
+            });
+            heavy.bench_throughput(&format!("{label}-indexed/5000"), Some(5_000), |iters| {
+                for _ in 0..iters {
+                    black_box(pack_md_indexed(
+                        rule,
+                        black_box(&md_small),
+                        Vec::new(),
+                        ResourceVec::UNIT,
+                    ));
+                }
+            });
+        }
+        b.absorb(heavy);
+    }
     report_md_speedup(&b);
 
     // Indexed-only scaling runs: 10⁵–10⁶ items (the regime the synthetic
@@ -259,7 +297,7 @@ fn report_speedups(b: &Bencher) {
     }
 }
 
-/// Same, for the multi-dimensional engine.
+/// Same, for the multi-dimensional engine — the whole vector family.
 fn report_md_speedup(b: &Bencher) {
     let median = |name: &str| {
         b.results()
@@ -267,13 +305,17 @@ fn report_md_speedup(b: &Bencher) {
             .find(|m| m.name == name)
             .map(|m| m.median_ns)
     };
-    if let (Some(naive), Some(indexed)) = (
-        median("md-first-fit-naive/20000"),
-        median("md-first-fit-indexed/20000"),
-    ) {
-        println!(
-            "speedup md-first-fit naive/indexed = {:.1}x",
-            naive / indexed
-        );
+    for (rule, n) in [
+        ("md-first-fit", 20_000),
+        ("md-best-fit", 5_000),
+        ("md-worst-fit", 5_000),
+        ("md-harmonic-7", 5_000),
+    ] {
+        if let (Some(naive), Some(indexed)) = (
+            median(&format!("{rule}-naive/{n}")),
+            median(&format!("{rule}-indexed/{n}")),
+        ) {
+            println!("speedup {rule:<14} naive/indexed = {:.1}x", naive / indexed);
+        }
     }
 }

@@ -21,12 +21,15 @@
 //! the lowest bin index); `rust/tests/binpacking_equivalence.rs` proves it
 //! property-wise over random item streams and pre-populated bins.
 //!
-//! The **multi-dimensional** counterpart is [`VecPackEngine`]: vector
-//! First-Fit over CPU/RAM/net with heterogeneous (VM-flavor) bin
-//! capacities — one residual tree per dimension, candidate walk keyed on
-//! the item's dominant dimension, full fit check across all dimensions
-//! (`rust/tests/binpacking_multidim_equivalence.rs` proves it against the
-//! naive `first_fit_md_in` oracle).
+//! The **multi-dimensional** counterpart is [`VecPackEngine`]: the whole
+//! vector Any-Fit family plus Harmonic
+//! ([`VecRule`](crate::binpacking::multidim::VecRule)) over CPU/RAM/net
+//! with heterogeneous (VM-flavor) bin capacities — one residual tree per
+//! dimension, candidate walk keyed on the item's dominant dimension, full
+//! fit check across all dimensions
+//! (`rust/tests/binpacking_multidim_equivalence.rs` proves every rule
+//! against its naive oracle in
+//! [`multidim`](crate::binpacking::multidim)).
 
 mod harmonic_buckets;
 mod residual_map;
@@ -36,7 +39,7 @@ mod vec_engine;
 pub use harmonic_buckets::HarmonicBuckets;
 pub use residual_map::ResidualMap;
 pub use residual_tree::ResidualTree;
-pub use vec_engine::{first_fit_md_indexed, VecPackEngine};
+pub use vec_engine::{first_fit_md_indexed, pack_md_indexed, VecPackEngine};
 
 use super::algorithms::{any_fit_insert, harmonic_insert, AnyFit};
 use super::{Bin, BinPacker, Item, Packing};

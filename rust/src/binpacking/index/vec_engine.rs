@@ -1,36 +1,64 @@
-//! The multi-dimensional indexed engine: vector First-Fit over
-//! heterogeneous-capacity bins in `O(log m)` expected per placement.
+//! The multi-dimensional indexed engine: the vector Any-Fit family plus
+//! Harmonic over heterogeneous-capacity bins.
 //!
 //! One [`ResidualTree`] per resource dimension tracks each bin's residual
 //! capacity in that dimension. A placement keys its candidate search on
 //! the item's **dominant dimension** (its largest component — the
 //! strongest pruner): [`ResidualTree::first_fit_from`] yields, in index
 //! order, exactly the bins whose keyed residual fits, and each candidate
-//! is then fit-checked over **all** dimensions. Bins the walk skips could
-//! not have fit anyway (the keyed dimension must fit too), so the first
-//! fully fitting candidate is the lowest-index fitting bin — placement-
-//! identical to the naive
-//! [`first_fit_md_in`](crate::binpacking::multidim::first_fit_md_in)
-//! oracle, which
-//! `rust/tests/binpacking_multidim_equivalence.rs` proves property-wise
-//! over random item streams and random flavor mixes.
+//! is then fit-checked over **all** dimensions.
 //!
-//! The walk visits one candidate in the common case (IRM streams key on
-//! the binding dimension most of the time). An adversarial stream — keyed
-//! dimension loose on every bin while another dimension binds — pays one
-//! `O(log m)` query per rejected candidate, i.e. `O(m log m)` worst case
-//! per item, a log factor *over* the naive scan; prefer the naive oracle
-//! for such shapes.
+//! * **First-Fit** stops at the first fully fitting candidate — bins the
+//!   walk skips could not have fit anyway (the keyed dimension must fit
+//!   too), so that candidate is the lowest-index fitting bin, placement-
+//!   identical to the naive
+//!   [`first_fit_md_in`](crate::binpacking::multidim::first_fit_md_in)
+//!   oracle. The walk visits one candidate in the common case (IRM
+//!   streams key on the binding dimension most of the time).
+//! * **Best-/Worst-Fit** walk *every* keyed-dimension candidate and keep
+//!   the extreme of the residual norm (`Σ_d residual_d`, strict
+//!   improvement → lowest index on ties) — the same selection as the
+//!   naive oracles, with the walk pruning bins that cannot fit the keyed
+//!   dimension. Adversarial streams degrade to the naive scan's cost plus
+//!   a log factor; prefer the oracles for such shapes.
+//! * **Next-Fit** keeps an open-bin cursor (`O(1)`).
+//! * **Harmonic(k)** keeps per-`(dominant dimension, class)` open buckets
+//!   plus the ordered set of claimable empty bins (`O(log m)`).
+//!
+//! `rust/tests/binpacking_multidim_equivalence.rs` proves every rule
+//! placement-identical to its naive oracle over random item streams and
+//! random flavor mixes.
+
+use std::collections::{BTreeSet, HashMap};
 
 use super::residual_tree::ResidualTree;
 use crate::binpacking::multidim::{
-    clamp_to_flavor, ResourceVec, VecBin, VecItem, VecPacking, DIMS,
+    clamp_to_flavor, harmonic_md_class, ResourceVec, VecBin, VecItem, VecPacking, VecRule, DIMS,
 };
 
+/// Per-rule engine state beyond the shared residual trees.
+#[derive(Clone, Debug)]
+enum VecRuleState {
+    First,
+    /// Most recently opened bin (usize::MAX when no bin is open).
+    Next { cursor: usize },
+    Best,
+    Worst,
+    Harmonic {
+        k: usize,
+        /// Open bin per `(dominant dimension, class)` bucket: bin index +
+        /// item count inside.
+        open: HashMap<(usize, usize), (usize, usize)>,
+        /// Claimable empty bins (pre-loaded idle workers), ordered so the
+        /// lowest fitting index is claimed first.
+        free: BTreeSet<usize>,
+    },
+}
+
 /// A stateful, indexed multi-dimensional bin-packer: bins plus one
-/// residual tree per dimension, kept consistent across
-/// [`insert`](VecPackEngine::insert) calls. The vector analogue of
-/// [`PackEngine`](super::PackEngine) (First-Fit only — the paper's rule).
+/// residual tree per dimension (and the rule's own state), kept
+/// consistent across [`insert`](VecPackEngine::insert) calls. The vector
+/// analogue of [`PackEngine`](super::PackEngine).
 #[derive(Clone, Debug)]
 pub struct VecPackEngine {
     bins: Vec<VecBin>,
@@ -38,13 +66,24 @@ pub struct VecPackEngine {
     /// cloud will provision for the IRM's `pending_new_workers`.
     new_capacity: ResourceVec,
     trees: Vec<ResidualTree>,
+    rule: VecRuleState,
 }
 
 impl VecPackEngine {
-    /// Build an engine over `initial` bins (possibly pre-loaded, possibly
-    /// heterogeneous). `new_capacity` must be non-zero in the CPU
-    /// dimension (every real container demands CPU).
+    /// A vector First-Fit engine (the paper's rule generalized) — see
+    /// [`with_rule`](Self::with_rule) for the rest of the family.
     pub fn new(initial: Vec<VecBin>, new_capacity: ResourceVec) -> VecPackEngine {
+        Self::with_rule(VecRule::First, initial, new_capacity)
+    }
+
+    /// Build an engine running `rule` over `initial` bins (possibly
+    /// pre-loaded, possibly heterogeneous). `new_capacity` must be
+    /// non-zero in the CPU dimension (every real container demands CPU).
+    pub fn with_rule(
+        rule: VecRule,
+        initial: Vec<VecBin>,
+        new_capacity: ResourceVec,
+    ) -> VecPackEngine {
         assert!(
             new_capacity.0[0] > 0.0,
             "provisioning flavor must have CPU capacity"
@@ -57,11 +96,39 @@ impl VecPackEngine {
                 tree.set(i, b.residual(d));
             }
         }
+        let rule = match rule {
+            VecRule::First => VecRuleState::First,
+            VecRule::Next => VecRuleState::Next {
+                cursor: initial.len().wrapping_sub(1),
+            },
+            VecRule::Best => VecRuleState::Best,
+            VecRule::Worst => VecRuleState::Worst,
+            VecRule::Harmonic(k) => {
+                assert!(k >= 2, "harmonic needs k >= 2");
+                VecRuleState::Harmonic {
+                    k,
+                    open: HashMap::new(),
+                    free: Self::free_bins(&initial),
+                }
+            }
+        };
         VecPackEngine {
             bins: initial,
             new_capacity,
             trees,
+            rule,
         }
+    }
+
+    /// Indices of claimable (empty, item-free) bins. The emptiness
+    /// threshold is the bin model's shared `EPS` — the same symbol the
+    /// naive oracle's free-bin scan uses, so the two can never drift.
+    fn free_bins(bins: &[VecBin]) -> BTreeSet<usize> {
+        bins.iter()
+            .enumerate()
+            .filter(|(_, b)| b.used.dominant() <= crate::binpacking::EPS && b.items.is_empty())
+            .map(|(i, _)| i)
+            .collect()
     }
 
     pub fn bins(&self) -> &[VecBin] {
@@ -85,34 +152,131 @@ impl VecPackEngine {
         self.bins
     }
 
-    /// Place one item into the lowest-index bin where every dimension
-    /// fits, opening a `new_capacity` bin when none does. Existing bins
-    /// are fit-tested at the item's **true** size (a demand above the
-    /// provisioning flavor may still fit a larger live flavor); only an
-    /// item landing in a freshly opened bin is clamped into that flavor —
-    /// a demand larger than a whole new VM gets the whole VM. Identical
-    /// to the oracle's semantics.
-    pub fn insert(&mut self, item: VecItem) -> usize {
-        let key = item.size.dominant_dim();
-        let need = item.size.0[key];
-        let mut lo = 0;
-        let chosen = loop {
+    /// The lowest-index bin where every dimension of `item` fits, walking
+    /// keyed-dimension candidates from `lo` (First-Fit's select, and the
+    /// starting point of Best-/Worst-Fit's full walk).
+    fn first_fitting_from(&self, item: &VecItem, key: usize, need: f64, lo: usize) -> Option<usize> {
+        let mut lo = lo;
+        loop {
             match self.trees[key].first_fit_from(need, lo) {
-                Some(i) if self.bins[i].fits(&item) => break Some(i),
+                Some(i) if self.bins[i].fits(item) => break Some(i),
                 // Keyed dimension fits but another is binding: resume the
                 // walk past this bin.
                 Some(i) => lo = i + 1,
                 None => break None,
             }
+        }
+    }
+
+    /// Best-/Worst-Fit select: walk every fully fitting candidate, keep
+    /// the strict extreme of the residual norm (lowest index on ties —
+    /// identical to the naive oracles' scan order and tie-break).
+    fn extreme_fitting(
+        &self,
+        item: &VecItem,
+        key: usize,
+        need: f64,
+        better: impl Fn(f64, f64) -> bool,
+    ) -> Option<usize> {
+        let mut chosen: Option<(usize, f64)> = None;
+        let mut lo = 0;
+        while let Some(i) = self.first_fitting_from(item, key, need, lo) {
+            let norm = self.bins[i].residual_norm();
+            match chosen {
+                Some((_, cur)) if !better(norm, cur) => {}
+                _ => chosen = Some((i, norm)),
+            }
+            lo = i + 1;
+        }
+        chosen.map(|(i, _)| i)
+    }
+
+    /// Place one item per the engine's rule, opening a `new_capacity` bin
+    /// when the rule finds no open bin. Existing bins are fit-tested at
+    /// the item's **true** size (a demand above the provisioning flavor
+    /// may still fit a larger live flavor); only an item landing in a
+    /// freshly opened bin is clamped into that flavor — a demand larger
+    /// than a whole new VM gets the whole VM. Identical to the naive
+    /// oracles' semantics, rule by rule.
+    pub fn insert(&mut self, item: VecItem) -> usize {
+        use std::cmp::Ordering;
+        let key = item.size.dominant_dim();
+        let need = item.size.0[key];
+        // Harmonic classifies on the original (pre-clamp) size — so does
+        // the oracle, keeping bucket keys identical even when an
+        // oversized demand is later clamped into a freshly opened flavor.
+        let class = match &self.rule {
+            VecRuleState::Harmonic { k, .. } => Some(harmonic_md_class(&item.size, *k)),
+            _ => None,
+        };
+        let chosen = match &self.rule {
+            VecRuleState::First => self.first_fitting_from(&item, key, need, 0),
+            VecRuleState::Next { cursor } => {
+                let c = *cursor;
+                if c < self.bins.len() && self.bins[c].fits(&item) {
+                    Some(c)
+                } else {
+                    None
+                }
+            }
+            VecRuleState::Best => self.extreme_fitting(&item, key, need, |cand, cur| {
+                cand.total_cmp(&cur) == Ordering::Less
+            }),
+            VecRuleState::Worst => self.extreme_fitting(&item, key, need, |cand, cur| {
+                cand.total_cmp(&cur) == Ordering::Greater
+            }),
+            VecRuleState::Harmonic { open, .. } => {
+                let class = class.expect("classified above");
+                match open.get(&class) {
+                    Some(&(idx, count)) if count < class.1 && self.bins[idx].fits(&item) => {
+                        Some(idx)
+                    }
+                    _ => None,
+                }
+            }
         };
         let (idx, item) = match chosen {
-            Some(i) => (i, item),
+            Some(idx) => {
+                if let VecRuleState::Harmonic { open, .. } = &mut self.rule {
+                    if let Some(entry) = open.get_mut(&class.expect("classified above")) {
+                        entry.1 += 1;
+                    }
+                }
+                (idx, item)
+            }
             None => {
-                self.bins.push(VecBin::new(self.new_capacity));
-                (
-                    self.bins.len() - 1,
-                    clamp_to_flavor(item, &self.new_capacity),
-                )
+                // Harmonic claims the lowest-index empty bin the item
+                // fits before opening a fresh one (matching the oracle);
+                // every other rule opens a new bin directly.
+                let claimed = match &mut self.rule {
+                    VecRuleState::Harmonic { free, .. } => {
+                        let bins = &self.bins;
+                        let found = free.iter().copied().find(|&i| bins[i].fits(&item));
+                        if let Some(i) = found {
+                            free.remove(&i);
+                        }
+                        found
+                    }
+                    _ => None,
+                };
+                let (idx, item) = match claimed {
+                    Some(i) => (i, item),
+                    None => {
+                        self.bins.push(VecBin::new(self.new_capacity));
+                        (
+                            self.bins.len() - 1,
+                            clamp_to_flavor(item, &self.new_capacity),
+                        )
+                    }
+                };
+                match &mut self.rule {
+                    VecRuleState::Next { cursor } => *cursor = idx,
+                    VecRuleState::Harmonic { open, .. } => {
+                        open.insert(class.expect("classified above"), (idx, 1));
+                    }
+                    _ => {}
+                }
+                (idx, item)
             }
         };
         self.bins[idx].push(item);
@@ -140,7 +304,10 @@ impl VecPackEngine {
     /// analogue of [`PackEngine::sync_used`](super::PackEngine::sync_used):
     /// all storage is reused and the per-bin item lists are cleared —
     /// placement-equivalent to a fresh engine over `VecBin::with_load`
-    /// bins, without the allocations.
+    /// bins, without the allocations. Rule state resets to batch-start
+    /// semantics over the new view (Next-Fit's cursor to the last bin;
+    /// Harmonic re-offers the now-empty bins — idle workers — as
+    /// claimable).
     pub fn sync<I>(&mut self, state: I)
     where
         I: IntoIterator<Item = (ResourceVec, ResourceVec)>,
@@ -168,6 +335,14 @@ impl VecPackEngine {
                 tree.set(i, self.bins[i].residual(d));
             }
         }
+        match &mut self.rule {
+            VecRuleState::Next { cursor } => *cursor = n.wrapping_sub(1),
+            VecRuleState::Harmonic { open, free, .. } => {
+                open.clear();
+                *free = Self::free_bins(&self.bins);
+            }
+            _ => {}
+        }
     }
 }
 
@@ -181,10 +356,24 @@ pub fn first_fit_md_indexed(
     VecPackEngine::new(initial, new_capacity).pack_all(items)
 }
 
+/// Batch convenience for any rule — the indexed counterpart of
+/// [`pack_md_in`](crate::binpacking::multidim::pack_md_in).
+pub fn pack_md_indexed(
+    rule: VecRule,
+    items: &[VecItem],
+    initial: Vec<VecBin>,
+    new_capacity: ResourceVec,
+) -> VecPacking {
+    VecPackEngine::with_rule(rule, initial, new_capacity).pack_all(items)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::binpacking::multidim::{first_fit_md_in, Resource};
+    use crate::binpacking::multidim::{
+        best_fit_md_in, first_fit_md_in, harmonic_md_in, next_fit_md_in, pack_md_in,
+        worst_fit_md_in, Resource,
+    };
 
     fn item(id: u64, cpu: f64, ram: f64, net: f64) -> VecItem {
         VecItem::new(id, ResourceVec::new(cpu, ram, net))
@@ -265,5 +454,92 @@ mod tests {
     #[should_panic(expected = "CPU capacity")]
     fn rejects_cpuless_provisioning_flavor() {
         let _ = VecPackEngine::new(Vec::new(), ResourceVec::new(0.0, 1.0, 1.0));
+    }
+
+    #[test]
+    fn best_and_worst_match_oracles_on_mixed_bins() {
+        let bins = || {
+            vec![
+                VecBin::with_load(ResourceVec::UNIT, ResourceVec::new(0.5, 0.1, 0.0)),
+                VecBin::with_load(ResourceVec::new(0.5, 0.5, 1.0), ResourceVec::new(0.1, 0.2, 0.0)),
+                VecBin::new(ResourceVec::UNIT),
+            ]
+        };
+        let items = vec![
+            item(0, 0.2, 0.2, 0.0),
+            item(1, 0.3, 0.1, 0.1),
+            item(2, 0.1, 0.6, 0.0),
+        ];
+        let a = best_fit_md_in(&items, bins(), ResourceVec::UNIT);
+        let b = pack_md_indexed(VecRule::Best, &items, bins(), ResourceVec::UNIT);
+        assert_eq!(a.assignments, b.assignments, "best");
+        let a = worst_fit_md_in(&items, bins(), ResourceVec::UNIT);
+        let b = pack_md_indexed(VecRule::Worst, &items, bins(), ResourceVec::UNIT);
+        assert_eq!(a.assignments, b.assignments, "worst");
+    }
+
+    #[test]
+    fn next_and_harmonic_match_oracles() {
+        let items = vec![
+            item(0, 0.6, 0.1, 0.0),
+            item(1, 0.6, 0.1, 0.0),
+            item(2, 0.3, 0.1, 0.0),
+            item(3, 0.1, 0.4, 0.0),
+            item(4, 0.1, 0.4, 0.0),
+        ];
+        let a = next_fit_md_in(&items, Vec::new(), ResourceVec::UNIT);
+        let b = pack_md_indexed(VecRule::Next, &items, Vec::new(), ResourceVec::UNIT);
+        assert_eq!(a.assignments, b.assignments, "next");
+        let a = harmonic_md_in(&items, Vec::new(), ResourceVec::UNIT, 7);
+        let b = pack_md_indexed(VecRule::Harmonic(7), &items, Vec::new(), ResourceVec::UNIT);
+        assert_eq!(a.assignments, b.assignments, "harmonic");
+    }
+
+    #[test]
+    fn harmonic_engine_keeps_buckets_across_inserts_and_sync_resets() {
+        let mut e = VecPackEngine::with_rule(VecRule::Harmonic(7), Vec::new(), ResourceVec::UNIT);
+        let a = e.insert(item(0, 0.1, 0.35, 0.0));
+        let b = e.insert(item(1, 0.1, 0.34, 0.0));
+        assert_eq!(a, b, "same (ram, 2) bucket across separate inserts");
+        // After a sync the buckets reset and the emptied bins are
+        // claimable again — batch-start semantics over the new view.
+        e.sync(vec![(ResourceVec::ZERO, ResourceVec::UNIT)]);
+        let got = e.insert(item(2, 0.1, 0.35, 0.0));
+        let want = harmonic_md_in(
+            &[item(2, 0.1, 0.35, 0.0)],
+            vec![VecBin::new(ResourceVec::UNIT)],
+            ResourceVec::UNIT,
+            7,
+        )
+        .assignments[0];
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn every_rule_reduces_to_first_fit_free_semantics_on_empty_start() {
+        // Sanity: with no initial bins and one item, every rule opens bin
+        // 0 and clamps identically.
+        let small = ResourceVec::new(0.25, 0.25, 1.0);
+        for rule in [
+            VecRule::First,
+            VecRule::Next,
+            VecRule::Best,
+            VecRule::Worst,
+            VecRule::Harmonic(7),
+        ] {
+            let items = vec![item(0, 0.4, 0.1, 0.0)];
+            let p = pack_md_indexed(rule, &items, Vec::new(), small);
+            let q = pack_md_in(rule, &items, Vec::new(), small);
+            assert_eq!(p.assignments, vec![0], "{rule:?}");
+            assert_eq!(q.assignments, vec![0], "{rule:?}");
+            assert!(
+                (p.bins[0].used.get(Resource::Cpu) - 0.25).abs() < 1e-12,
+                "{rule:?} clamps into the flavor"
+            );
+            assert!(
+                (q.bins[0].used.get(Resource::Cpu) - 0.25).abs() < 1e-12,
+                "{rule:?} oracle clamps too"
+            );
+        }
     }
 }

@@ -46,12 +46,14 @@
 //! ## Multi-dimensional (vector) packing
 //!
 //! The paper's stated future work — packing over CPU, RAM and network at
-//! once — lives in [`multidim`] (naive oracle, [`ResourceVec`] items,
-//! heterogeneous [`VecBin`] flavor capacities) and
+//! once — lives in [`multidim`] ([`ResourceVec`] items, heterogeneous
+//! [`VecBin`] flavor capacities, and naive oracles for the whole vector
+//! Any-Fit family plus Harmonic — [`multidim::VecRule`]) and
 //! [`index::VecPackEngine`] (the indexed engine the IRM runs when
 //! `IrmConfig::resource_model` selects
-//! [`ResourceModel::Vector`](crate::irm::config::ResourceModel)).
-//! `rust/tests/binpacking_multidim_equivalence.rs` keeps oracle and
+//! [`ResourceModel::Vector`](crate::irm::config::ResourceModel); every
+//! scalar `PackerChoice` maps onto its vector twin).
+//! `rust/tests/binpacking_multidim_equivalence.rs` keeps oracles and
 //! engine in lock-step over random flavor mixes.
 
 pub mod algorithms;
@@ -65,10 +67,13 @@ pub use algorithms::{
     Harmonic, NextFit, WorstFit,
 };
 pub use first_fit_tree::FirstFitTree;
-pub use index::{first_fit_md_indexed, EngineRule, IndexedPacker, PackEngine, VecPackEngine};
+pub use index::{
+    first_fit_md_indexed, pack_md_indexed, EngineRule, IndexedPacker, PackEngine, VecPackEngine,
+};
 pub use multidim::{
-    first_fit_md, first_fit_md_in, ideal_bins_md, ideal_bins_md_in, Resource, ResourceVec, VecBin,
-    VecItem, VecPacking,
+    best_fit_md_in, first_fit_md, first_fit_md_in, harmonic_md_in, ideal_bins_md,
+    ideal_bins_md_in, next_fit_md_in, pack_md_in, worst_fit_md_in, Resource, ResourceVec, VecBin,
+    VecItem, VecPacking, VecRule,
 };
 pub use analysis::{ideal_bins, performance_ratio, stats_md, PackingStats, VecPackingStats};
 

@@ -20,8 +20,36 @@
 //! [`VecPackEngine`](crate::binpacking::index::VecPackEngine)
 //! (`O(log m)` expected per item, property-tested in
 //! `rust/tests/binpacking_multidim_equivalence.rs`).
+//!
+//! ## The vector Any-Fit family
+//!
+//! Every scalar rule has a vector twin ([`VecRule`], selected in the IRM
+//! through `PackerChoice` exactly like the scalar rules):
+//!
+//! * **First-Fit** — lowest-index bin where every component fits.
+//! * **Next-Fit** — only the most recently opened bin is considered.
+//! * **Best-/Worst-Fit** — among the fitting bins, pick the extreme of the
+//!   **residual norm** `Σ_d residual_d` (the L1 norm of the residual
+//!   vector): Best minimizes it (tightest bin overall), Worst maximizes it
+//!   (emptiest). Ties break toward the lowest bin index, comparisons use
+//!   `total_cmp`. On CPU-only items over equal-capacity bins the non-CPU
+//!   residual terms are constant across bins, so the selection reduces
+//!   exactly to the scalar Best-/Worst-Fit residual ordering.
+//! * **Harmonic(k)** — class buckets keyed on the item's **dominant
+//!   dimension**: class = `(dominant_dim, j)` with the dominant component
+//!   in `(1/(j+1), 1/j]`. A class-`(d,j)` bin accepts at most `j` items,
+//!   all of that class; empty pre-loaded bins (idle workers) are claimable
+//!   by the lowest index *where the item fits*, loaded pre-loaded bins
+//!   stay closed — the flavor-aware generalization of the scalar rule.
+//!
+//! The naive scans here ([`pack_md_in`] dispatches over them) remain the
+//! property-test oracles for the indexed
+//! [`VecPackEngine`](crate::binpacking::index::VecPackEngine) twins.
 
+use std::collections::HashMap;
 use std::fmt;
+
+use super::algorithms::harmonic_class;
 
 /// Resource dimensions used by the extended profiler.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -175,6 +203,14 @@ impl VecBin {
         (self.capacity.0[d] - self.used.0[d]).max(0.0)
     }
 
+    /// L1 norm of the residual vector (`Σ_d residual_d`) — the selection
+    /// key of vector Best-/Worst-Fit. On CPU-only items over
+    /// equal-capacity bins the non-CPU terms are constant, so ordering by
+    /// this norm reduces to the scalar residual ordering.
+    pub fn residual_norm(&self) -> f64 {
+        (0..DIMS).map(|d| self.residual(d)).sum()
+    }
+
     pub fn fits(&self, item: &VecItem) -> bool {
         item.size.fits_within(&self.used, &self.capacity, 1e-9)
     }
@@ -265,6 +301,205 @@ pub(crate) fn clamp_to_flavor(item: VecItem, capacity: &ResourceVec) -> VecItem 
 /// Unit-capacity First-Fit (the paper's homogeneous setting).
 pub fn first_fit_md(items: &[VecItem], initial: Vec<VecBin>) -> VecPacking {
     first_fit_md_in(items, initial, ResourceVec::UNIT)
+}
+
+/// Which vector packing rule runs (the vector twins of the scalar
+/// `PackerChoice` family — see the module-level notes for each rule's
+/// selection criterion).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VecRule {
+    First,
+    Next,
+    Best,
+    Worst,
+    /// Harmonic with `k` classes per dominant dimension (k ≥ 2).
+    Harmonic(usize),
+}
+
+/// Dispatch over the naive vector oracles — one `O(n·m)` reference scan
+/// per rule, mirroring [`first_fit_md_in`]'s signature and open/clamp
+/// semantics.
+pub fn pack_md_in(
+    rule: VecRule,
+    items: &[VecItem],
+    initial: Vec<VecBin>,
+    new_capacity: ResourceVec,
+) -> VecPacking {
+    match rule {
+        VecRule::First => first_fit_md_in(items, initial, new_capacity),
+        VecRule::Next => next_fit_md_in(items, initial, new_capacity),
+        VecRule::Best => best_fit_md_in(items, initial, new_capacity),
+        VecRule::Worst => worst_fit_md_in(items, initial, new_capacity),
+        VecRule::Harmonic(k) => harmonic_md_in(items, initial, new_capacity, k),
+    }
+}
+
+/// Multi-dimensional Next-Fit: only the most recently opened bin is
+/// considered (the last `initial` bin at batch start); everything else
+/// follows [`first_fit_md_in`]'s open/clamp semantics. Naive oracle.
+pub fn next_fit_md_in(
+    items: &[VecItem],
+    initial: Vec<VecBin>,
+    new_capacity: ResourceVec,
+) -> VecPacking {
+    let mut bins = initial;
+    let mut cursor = bins.len().saturating_sub(1);
+    let mut assignments = Vec::with_capacity(items.len());
+    for item in items {
+        let fits_cursor = cursor < bins.len() && bins[cursor].fits(item);
+        let (idx, item) = if fits_cursor {
+            (cursor, *item)
+        } else {
+            bins.push(VecBin::new(new_capacity));
+            cursor = bins.len() - 1;
+            (cursor, clamp_to_flavor(*item, &new_capacity))
+        };
+        bins[idx].push(item);
+        assignments.push(idx);
+    }
+    VecPacking { assignments, bins }
+}
+
+/// Shared Best-/Worst-Fit scan: pick the fitting bin whose residual norm
+/// is strictly "better" than the best seen so far (strictness keeps the
+/// lowest index on ties; `total_cmp` keeps the scan total on NaN).
+fn extreme_fit_md_in(
+    items: &[VecItem],
+    initial: Vec<VecBin>,
+    new_capacity: ResourceVec,
+    better: impl Fn(f64, f64) -> bool,
+) -> VecPacking {
+    let mut bins = initial;
+    let mut assignments = Vec::with_capacity(items.len());
+    for item in items {
+        let mut chosen: Option<(usize, f64)> = None;
+        for (i, b) in bins.iter().enumerate() {
+            if !b.fits(item) {
+                continue;
+            }
+            let norm = b.residual_norm();
+            match chosen {
+                Some((_, cur)) if !better(norm, cur) => {}
+                _ => chosen = Some((i, norm)),
+            }
+        }
+        let (idx, item) = match chosen {
+            Some((i, _)) => (i, *item),
+            None => {
+                bins.push(VecBin::new(new_capacity));
+                (bins.len() - 1, clamp_to_flavor(*item, &new_capacity))
+            }
+        };
+        bins[idx].push(item);
+        assignments.push(idx);
+    }
+    VecPacking { assignments, bins }
+}
+
+/// Multi-dimensional Best-Fit: the fitting bin minimizing the residual
+/// norm (tightest overall). Naive oracle.
+pub fn best_fit_md_in(
+    items: &[VecItem],
+    initial: Vec<VecBin>,
+    new_capacity: ResourceVec,
+) -> VecPacking {
+    use std::cmp::Ordering;
+    extreme_fit_md_in(items, initial, new_capacity, |cand, cur| {
+        cand.total_cmp(&cur) == Ordering::Less
+    })
+}
+
+/// Multi-dimensional Worst-Fit: the fitting bin maximizing the residual
+/// norm (emptiest overall). Naive oracle.
+pub fn worst_fit_md_in(
+    items: &[VecItem],
+    initial: Vec<VecBin>,
+    new_capacity: ResourceVec,
+) -> VecPacking {
+    use std::cmp::Ordering;
+    extreme_fit_md_in(items, initial, new_capacity, |cand, cur| {
+        cand.total_cmp(&cur) == Ordering::Greater
+    })
+}
+
+/// The harmonic class bucket of an item: keyed on the dominant dimension
+/// and the harmonic class of its value. Computed on the item's **true**
+/// size (an item clamped into a freshly opened flavor keeps its original
+/// class — both the oracle and the engine classify before clamping).
+pub(crate) fn harmonic_md_class(size: &ResourceVec, k: usize) -> (usize, usize) {
+    let d = size.dominant_dim();
+    (d, harmonic_class(size.0[d], k))
+}
+
+/// Multi-dimensional Harmonic(k): per dominant-dimension class bucket
+/// `(d, j)`, items pack Next-Fit into class-pure bins of at most `j`
+/// items. Loaded pre-loaded bins are closed (their contents cannot be
+/// classified); **empty** pre-loaded bins are claimed — lowest index
+/// where the item fits — when a class opens a bin; otherwise a
+/// `new_capacity` bin opens with [`first_fit_md_in`]'s clamp semantics.
+/// Naive oracle.
+pub fn harmonic_md_in(
+    items: &[VecItem],
+    initial: Vec<VecBin>,
+    new_capacity: ResourceVec,
+    k: usize,
+) -> VecPacking {
+    assert!(k >= 2, "harmonic needs k >= 2");
+    let mut bins = initial;
+    // Per class bucket: open bin index + item count inside.
+    let mut open: HashMap<(usize, usize), (usize, usize)> = HashMap::new();
+    // Claimable empty bins only ever come from `initial` (bins opened
+    // mid-pack take an item immediately); track the count so the per-open
+    // scan is skipped once they are gone.
+    let mut free_candidates = bins
+        .iter()
+        .filter(|b| b.used.dominant() <= super::EPS && b.items.is_empty())
+        .count();
+    let mut assignments = Vec::with_capacity(items.len());
+    for item in items {
+        let class = harmonic_md_class(&item.size, k);
+        let capacity_items = class.1;
+        let reuse = match open.get(&class) {
+            Some(&(idx, count)) if count < capacity_items && bins[idx].fits(item) => {
+                Some((idx, count))
+            }
+            _ => None,
+        };
+        let (idx, item) = match reuse {
+            Some((idx, count)) => {
+                open.insert(class, (idx, count + 1));
+                (idx, *item)
+            }
+            None => {
+                // A new class bin claims the lowest-index empty bin the
+                // item fits (an idle worker is trivially class-pure; a
+                // too-small flavor stays free for smaller classes).
+                let claimed = if free_candidates > 0 {
+                    bins.iter().position(|b| {
+                        b.used.dominant() <= super::EPS && b.items.is_empty() && b.fits(item)
+                    })
+                } else {
+                    None
+                };
+                match claimed {
+                    Some(i) => {
+                        free_candidates -= 1;
+                        open.insert(class, (i, 1));
+                        (i, *item)
+                    }
+                    None => {
+                        bins.push(VecBin::new(new_capacity));
+                        let i = bins.len() - 1;
+                        open.insert(class, (i, 1));
+                        (i, clamp_to_flavor(*item, &new_capacity))
+                    }
+                }
+            }
+        };
+        bins[idx].push(item);
+        assignments.push(idx);
+    }
+    VecPacking { assignments, bins }
 }
 
 /// Lower bound on the optimal bin count at unit capacity: the tightest
@@ -493,5 +728,101 @@ mod tests {
         assert_eq!(ResourceVec::new(0.5, 0.5, 0.1).dominant_dim(), 0);
         assert_eq!(ResourceVec::new(0.1, 0.5, 0.2).dominant_dim(), 1);
         assert_eq!(ResourceVec::new(0.1, 0.2, 0.5).dominant_dim(), 2);
+    }
+
+    #[test]
+    fn next_fit_md_never_looks_back() {
+        let items = vec![
+            item(0, 0.6, 0.1, 0.0),
+            item(1, 0.6, 0.1, 0.0),
+            item(2, 0.3, 0.1, 0.0),
+        ];
+        let p = next_fit_md_in(&items, Vec::new(), ResourceVec::UNIT);
+        p.check(&items).unwrap();
+        // 0.3 fits bin 0, but only the current (last) bin is open.
+        assert_eq!(p.assignments, vec![0, 1, 1]);
+    }
+
+    #[test]
+    fn best_fit_md_picks_tightest_worst_picks_emptiest() {
+        let loaded = |cpu: f64| VecBin::with_load(ResourceVec::UNIT, ResourceVec::cpu(cpu));
+        let items = vec![item(0, 0.2, 0.1, 0.0)];
+        let p = best_fit_md_in(&items, vec![loaded(0.5), loaded(0.7)], ResourceVec::UNIT);
+        assert_eq!(p.assignments, vec![1], "least residual norm");
+        let p = worst_fit_md_in(&items, vec![loaded(0.5), loaded(0.7)], ResourceVec::UNIT);
+        assert_eq!(p.assignments, vec![0], "most residual norm");
+    }
+
+    #[test]
+    fn best_fit_md_ram_can_outweigh_cpu() {
+        // Bin 0 is CPU-tighter but RAM-empty; bin 1 is tighter *overall*
+        // (smaller residual norm) — the vector rule must see all
+        // dimensions, not just CPU.
+        let bins = vec![
+            VecBin::with_load(ResourceVec::UNIT, ResourceVec::new(0.6, 0.0, 0.0)),
+            VecBin::with_load(ResourceVec::UNIT, ResourceVec::new(0.5, 0.6, 0.0)),
+        ];
+        let items = vec![item(0, 0.2, 0.1, 0.0)];
+        let p = best_fit_md_in(&items, bins, ResourceVec::UNIT);
+        assert_eq!(p.assignments, vec![1]);
+    }
+
+    #[test]
+    fn harmonic_md_buckets_by_dominant_dimension() {
+        // Two RAM-dominant class-2 items share a bin; the CPU-dominant
+        // class-2 item gets its own bucket even though it would fit.
+        let items = vec![
+            item(0, 0.1, 0.4, 0.0),
+            item(1, 0.1, 0.4, 0.0),
+            item(2, 0.4, 0.1, 0.0),
+        ];
+        let p = harmonic_md_in(&items, Vec::new(), ResourceVec::UNIT, 7);
+        p.check(&items).unwrap();
+        assert_eq!(p.assignments[0], p.assignments[1], "same (ram, 2) bucket");
+        assert_ne!(p.assignments[2], p.assignments[0], "(cpu, 2) is a new bucket");
+    }
+
+    #[test]
+    fn harmonic_md_claims_fitting_empty_bins_only() {
+        // The empty half-flavor bin cannot fit a 0.6-RAM item; the empty
+        // unit bin behind it is claimed instead. The loaded bin is closed.
+        let half = ResourceVec::new(0.5, 0.5, 1.0);
+        let initial = vec![
+            VecBin::with_load(ResourceVec::UNIT, ResourceVec::new(0.1, 0.1, 0.0)),
+            VecBin::new(half),
+            VecBin::new(ResourceVec::UNIT),
+        ];
+        let items = vec![item(0, 0.1, 0.6, 0.0), item(1, 0.1, 0.3, 0.0)];
+        let p = harmonic_md_in(&items, initial, ResourceVec::UNIT, 7);
+        p.check(&items).unwrap();
+        assert_eq!(p.assignments[0], 2, "skips the too-small free flavor");
+        assert_eq!(p.assignments[1], 1, "class (ram,3) claims the half flavor");
+    }
+
+    #[test]
+    fn vector_rules_reduce_to_scalar_on_cpu_only_items() {
+        use crate::binpacking::{BestFit, BinPacker, Harmonic, NextFit, WorstFit};
+        let sizes = [0.5, 0.7, 0.5, 0.2, 0.4, 0.2, 0.5, 0.1, 0.6];
+        let md: Vec<VecItem> = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| VecItem::new(i as u64, ResourceVec::cpu(s)))
+            .collect();
+        let scalar: Vec<crate::binpacking::Item> = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| crate::binpacking::Item::new(i as u64, s))
+            .collect();
+        let cases: Vec<(VecRule, Box<dyn BinPacker>)> = vec![
+            (VecRule::Next, Box::new(NextFit)),
+            (VecRule::Best, Box::new(BestFit)),
+            (VecRule::Worst, Box::new(WorstFit)),
+            (VecRule::Harmonic(7), Box::new(Harmonic { k: 7 })),
+        ];
+        for (rule, packer) in &cases {
+            let a = pack_md_in(*rule, &md, Vec::new(), ResourceVec::UNIT);
+            let b = packer.pack(&scalar, Vec::new());
+            assert_eq!(a.assignments, b.assignments, "{rule:?}");
+        }
     }
 }

@@ -5,6 +5,28 @@
 //! The IRM only ever observes the cloud through: request VM → (eventually)
 //! VM active, terminate VM, quota errors. This module reproduces exactly
 //! those observables with deterministic, configurable latencies.
+//!
+//! ## Pricing model
+//!
+//! Every flavor carries a nominal on-demand price
+//! ([`Flavor::price_per_hour`], overridable per deployment via
+//! [`CloudConfig::pricing`]). The defaults scale linearly with core count
+//! off the reference flavor (SSC.xlarge at $0.50/h) — the public-cloud
+//! convention within one instance family. [`SimCloud`] accrues a running
+//! **cost ledger** ([`SimCloud::cost_usd`]): on every [`SimCloud::tick`]
+//! each VM that is booting or active is billed for the wall-clock since
+//! the previous tick, clipped to its own provisioning request time
+//! (providers bill from the request, not from readiness). Terminated —
+//! including boot-cancelled — VMs stop accruing at the tick that
+//! observes them terminated, so cancelling a boot can never double-bill,
+//! and the ledger is monotone non-decreasing by construction. Billing
+//! granularity is the tick: live time between the last tick and a
+//! mid-interval termination is *not* billed — a conservative bias
+//! bounded by one tick interval (100 ms under the simulator's cadence)
+//! and applied identically to every arm of a cost comparison. The
+//! cost-aware autoscaler plans against these prices and prefers
+//! cancelling the costliest in-flight boot
+//! ([`SimCloud::cancel_costliest_booting`]).
 
 use crate::binpacking::ResourceVec;
 use crate::types::{IdGen, Millis, VmId};
@@ -48,6 +70,18 @@ impl Flavor {
             Flavor::Xlarge => ResourceVec::UNIT,
         }
     }
+
+    /// Nominal on-demand price in USD per hour. Defaults scale linearly
+    /// with core count off the SSC.xlarge reference at $0.50/h (the
+    /// within-family convention of public-cloud price lists); deployments
+    /// with different price sheets override via [`CloudConfig::pricing`].
+    pub fn price_per_hour(self) -> f64 {
+        match self {
+            Flavor::Small => 0.0625,
+            Flavor::Large => 0.25,
+            Flavor::Xlarge => 0.50,
+        }
+    }
 }
 
 /// Lifecycle of a simulated VM.
@@ -89,6 +123,9 @@ pub struct CloudConfig {
     /// through these flavors. Empty (the default) means every VM is
     /// `flavor` — the paper's homogeneous setup.
     pub flavor_cycle: Vec<Flavor>,
+    /// Per-flavor price overrides in USD/hour; flavors not listed bill at
+    /// their [`Flavor::price_per_hour`] default.
+    pub pricing: Vec<(Flavor, f64)>,
     pub seed: u64,
 }
 
@@ -100,8 +137,21 @@ impl Default for CloudConfig {
             boot_jitter: Millis::from_secs(10),
             flavor: Flavor::Xlarge,
             flavor_cycle: Vec::new(),
+            pricing: Vec::new(),
             seed: 0x5EED,
         }
+    }
+}
+
+impl CloudConfig {
+    /// Effective USD/hour for a flavor: the override when listed, the
+    /// flavor's nominal price otherwise.
+    pub fn price_of(&self, flavor: Flavor) -> f64 {
+        self.pricing
+            .iter()
+            .find(|(f, _)| *f == flavor)
+            .map(|(_, p)| *p)
+            .unwrap_or_else(|| flavor.price_per_hour())
     }
 }
 
@@ -115,6 +165,13 @@ pub struct SimCloud {
     provisioned: usize,
     /// Count of rejected requests (observable for Fig 10's retry shape).
     pub rejected_requests: u64,
+    /// Accrued spend in USD (see the module-level pricing notes): every
+    /// tick bills each booting/active VM for the time since the previous
+    /// tick. Monotone non-decreasing; a cancelled boot stops accruing at
+    /// the tick that sees it terminated.
+    cost_usd: f64,
+    /// End of the last billed interval.
+    billed_until: Millis,
 }
 
 impl SimCloud {
@@ -127,11 +184,19 @@ impl SimCloud {
             rng,
             provisioned: 0,
             rejected_requests: 0,
+            cost_usd: 0.0,
+            billed_until: Millis::ZERO,
         }
     }
 
     pub fn config(&self) -> &CloudConfig {
         &self.cfg
+    }
+
+    /// Accrued spend in USD across every VM ever provisioned (billed on
+    /// tick; see the module-level pricing notes).
+    pub fn cost_usd(&self) -> f64 {
+        self.cost_usd
     }
 
     fn alive(&self) -> usize {
@@ -141,8 +206,23 @@ impl SimCloud {
             .count()
     }
 
-    /// Request a new VM. Either starts booting or fails on quota.
+    /// Request a new VM of the deployment's default flavor (round-robin
+    /// through `flavor_cycle` when configured). Either starts booting or
+    /// fails on quota.
     pub fn request_vm(&mut self, now: Millis) -> Result<VmId, CloudError> {
+        let flavor = if self.cfg.flavor_cycle.is_empty() {
+            self.cfg.flavor
+        } else {
+            self.cfg.flavor_cycle[self.provisioned % self.cfg.flavor_cycle.len()]
+        };
+        self.request_vm_of(now, flavor)
+    }
+
+    /// Request a new VM of an explicit flavor — the cost-aware
+    /// autoscaler's provisioning path (the flavor cycle is bypassed, but
+    /// its position still advances one slot per successful request, like
+    /// any other provision).
+    pub fn request_vm_of(&mut self, now: Millis, flavor: Flavor) -> Result<VmId, CloudError> {
         if self.alive() >= self.cfg.quota {
             self.rejected_requests += 1;
             return Err(CloudError::QuotaExceeded);
@@ -155,11 +235,6 @@ impl SimCloud {
         let ready_at =
             now + self.cfg.boot_delay.saturating_sub(self.cfg.boot_jitter) + Millis(jitter);
         let id = VmId(self.ids.next_id());
-        let flavor = if self.cfg.flavor_cycle.is_empty() {
-            self.cfg.flavor
-        } else {
-            self.cfg.flavor_cycle[self.provisioned % self.cfg.flavor_cycle.len()]
-        };
         self.provisioned += 1;
         self.vms.push(Vm {
             id,
@@ -191,8 +266,45 @@ impl SimCloud {
         Some(id)
     }
 
+    /// Cancel the *priciest* VM still booting (ties broken toward the
+    /// newest request), if any — the cost-aware scale-thrash valve: every
+    /// cancelled boot saves its hourly rate, so the most expensive
+    /// in-flight boot absorbs the excess first.
+    pub fn cancel_costliest_booting(&mut self) -> Option<VmId> {
+        let mut chosen: Option<(VmId, f64)> = None;
+        // Reverse walk + strict improvement: the newest booting VM at the
+        // maximum price wins.
+        for v in self.vms.iter().rev() {
+            if !matches!(v.state, VmState::Booting { .. }) {
+                continue;
+            }
+            let price = self.cfg.price_of(v.flavor);
+            match chosen {
+                Some((_, best)) if price.total_cmp(&best).is_le() => {}
+                _ => chosen = Some((v.id, price)),
+            }
+        }
+        let (id, _) = chosen?;
+        self.terminate_vm(id);
+        Some(id)
+    }
+
     /// Advance boot progress; returns VMs that became active this tick.
+    /// Also accrues the cost ledger: every VM not yet observed terminated
+    /// bills for the interval since the previous tick, clipped to its own
+    /// provisioning request time (a VM requested mid-interval is not
+    /// billed for time before it existed).
     pub fn tick(&mut self, now: Millis) -> Vec<VmId> {
+        if now > self.billed_until {
+            for vm in &self.vms {
+                if !matches!(vm.state, VmState::Terminated) {
+                    let from = self.billed_until.max(vm.requested_at);
+                    let dt_hours = (now.saturating_sub(from)).as_secs_f64() / 3600.0;
+                    self.cost_usd += self.cfg.price_of(vm.flavor) * dt_hours;
+                }
+            }
+            self.billed_until = now;
+        }
         let mut ready = Vec::new();
         for vm in &mut self.vms {
             if let VmState::Booting { ready_at } = vm.state {
@@ -333,6 +445,109 @@ mod tests {
             flavors,
             vec![Flavor::Xlarge, Flavor::Large, Flavor::Xlarge, Flavor::Large]
         );
+    }
+
+    #[test]
+    fn pricing_defaults_scale_with_cores_and_overrides_win() {
+        assert!((Flavor::Xlarge.price_per_hour() - 0.50).abs() < 1e-12);
+        assert!((Flavor::Large.price_per_hour() - 0.25).abs() < 1e-12);
+        assert!((Flavor::Small.price_per_hour() - 0.0625).abs() < 1e-12);
+        let cfg = CloudConfig {
+            pricing: vec![(Flavor::Large, 0.30)],
+            ..CloudConfig::default()
+        };
+        assert!((cfg.price_of(Flavor::Large) - 0.30).abs() < 1e-12, "override");
+        assert!(
+            (cfg.price_of(Flavor::Xlarge) - 0.50).abs() < 1e-12,
+            "unlisted flavors keep the nominal price"
+        );
+    }
+
+    #[test]
+    fn cost_ledger_bills_boot_to_termination() {
+        let mut c = SimCloud::new(CloudConfig {
+            quota: 4,
+            boot_delay: Millis::from_secs(40),
+            boot_jitter: Millis::ZERO,
+            flavor: Flavor::Xlarge,
+            ..CloudConfig::default()
+        });
+        let id = c.request_vm(Millis(0)).unwrap();
+        assert_eq!(c.cost_usd(), 0.0, "nothing billed before the first tick");
+        // One hour of a single Xlarge (billed through boot + active).
+        c.tick(Millis::from_secs(3600));
+        assert!((c.cost_usd() - 0.50).abs() < 1e-9, "got {}", c.cost_usd());
+        c.terminate_vm(id);
+        c.tick(Millis::from_secs(7200));
+        assert!(
+            (c.cost_usd() - 0.50).abs() < 1e-9,
+            "terminated VMs stop accruing"
+        );
+        // A VM requested mid-interval bills only from its request time:
+        // half an hour, not the whole gap since the previous tick.
+        c.request_vm(Millis::from_secs(9000)).unwrap();
+        c.tick(Millis::from_secs(10_800));
+        assert!(
+            (c.cost_usd() - 0.75).abs() < 1e-9,
+            "mid-interval request over-billed: {}",
+            c.cost_usd()
+        );
+    }
+
+    #[test]
+    fn cost_ledger_never_double_bills_a_cancelled_boot() {
+        let mut c = SimCloud::new(CloudConfig {
+            quota: 4,
+            boot_delay: Millis::from_secs(3600),
+            boot_jitter: Millis::ZERO,
+            flavor: Flavor::Large,
+            ..CloudConfig::default()
+        });
+        c.request_vm(Millis(0)).unwrap();
+        c.tick(Millis::from_secs(1800)); // half an hour booting
+        let at_cancel = c.cost_usd();
+        assert!((at_cancel - 0.125).abs() < 1e-9, "got {at_cancel}");
+        assert!(c.cancel_newest_booting().is_some());
+        // Ticking far past the original ready time adds nothing.
+        c.tick(Millis::from_secs(7200));
+        assert_eq!(c.cost_usd(), at_cancel, "cancelled boot billed once");
+        assert!(c.cost_usd() >= 0.0);
+    }
+
+    #[test]
+    fn cancel_costliest_prefers_expensive_flavor_then_newest() {
+        let mut c = SimCloud::new(CloudConfig {
+            quota: 5,
+            flavor_cycle: vec![Flavor::Large, Flavor::Xlarge, Flavor::Large],
+            ..CloudConfig::default()
+        });
+        let _large_a = c.request_vm(Millis(0)).unwrap();
+        let xlarge = c.request_vm(Millis(10)).unwrap();
+        let large_b = c.request_vm(Millis(20)).unwrap();
+        assert_eq!(
+            c.cancel_costliest_booting(),
+            Some(xlarge),
+            "the $0.50/h boot absorbs the excess before either $0.25/h one"
+        );
+        // Among the remaining equal-priced boots the newest goes first.
+        assert_eq!(c.cancel_costliest_booting(), Some(large_b));
+        c.cancel_costliest_booting();
+        assert_eq!(c.cancel_costliest_booting(), None);
+    }
+
+    #[test]
+    fn request_vm_of_overrides_the_cycle_but_advances_it() {
+        let mut c = SimCloud::new(CloudConfig {
+            quota: 10,
+            flavor_cycle: vec![Flavor::Xlarge, Flavor::Large],
+            ..CloudConfig::default()
+        });
+        let a = c.request_vm_of(Millis(0), Flavor::Small).unwrap();
+        assert_eq!(c.vm(a).unwrap().flavor, Flavor::Small);
+        // The explicit request consumed one cycle slot: the next default
+        // request lands on the cycle's second entry.
+        let b = c.request_vm(Millis(0)).unwrap();
+        assert_eq!(c.vm(b).unwrap().flavor, Flavor::Large);
     }
 
     #[test]

@@ -1,9 +1,11 @@
-//! A1–A4: ablations over the IRM's design choices (DESIGN.md §Perf /
+//! A1–A5: ablations over the IRM's design choices (DESIGN.md §Perf /
 //! per-experiment index). A1–A3 quantify the decisions the paper makes:
 //! First-Fit as the packing rule, the log-proportional idle buffer, and
 //! the profiler's moving-average window. A4 quantifies the paper's stated
 //! future work: CPU-only vs multi-dimensional (CPU/RAM/net) vector
-//! packing on a heterogeneous VM-flavor mix.
+//! packing on a heterogeneous VM-flavor mix. A5 quantifies cost-aware
+//! flavor choice: single planning flavor vs the greedy
+//! $/satisfied-unit mix over the Xlarge/Large catalog.
 
 use std::fmt::Write as _;
 use std::path::Path;
@@ -16,7 +18,7 @@ use crate::binpacking::{
 };
 use crate::cloud::Flavor;
 use crate::experiments::{microscopy, Report};
-use crate::irm::{BufferPolicy, PackerChoice, ResourceModel};
+use crate::irm::{BufferPolicy, FlavorOption, PackerChoice, ResourceModel};
 use crate::sim::SimCluster;
 use crate::types::Millis;
 use crate::util::rng::Rng;
@@ -396,6 +398,124 @@ pub fn multidim(out: &Path, seed: u64) -> Result<Report> {
     Ok(report)
 }
 
+/// A5 — cost-aware flavor choice: the 300-image microscopy batch over
+/// the Xlarge/Large flavor universe, vector packing in both arms.
+///
+/// * **single-flavor** — the PR-2 setup: one planning flavor (the
+///   paper's SSC.xlarge worker), every VM request anonymous and served
+///   as Xlarge — capacity planned blind to price.
+/// * **cost-aware** — the IRM carries the Xlarge/Large catalog
+///   ([`IrmConfig::flavor_catalog`](crate::irm::IrmConfig)) and requests
+///   an explicit greedy $/satisfied-unit mix (conservatively planning
+///   new bins at the smaller flavor); the scale-thrash valve cancels the
+///   costliest boot first.
+///
+/// With the CellProfiler profile PEs tile both flavors exactly (4 per
+/// Xlarge, 2 per Large — equal $/hosted-PE at nominal prices), so the
+/// spend difference isolates what cost-awareness actually buys: cheap
+/// tails for fractional residual demand, and idle-buffer headroom held
+/// at $0.25/h instead of $0.50/h.
+///
+/// Reported per arm: `cost_usd` (the cloud ledger at batch completion),
+/// deadline misses (created→completed > 30 min — generous: the metric
+/// must flag starvation regressions, not tune the planner), worst RAM
+/// overcommit, makespan and peak workers. The headline check: cost-aware
+/// strictly lowers `cost_usd` with no increase in deadline misses.
+pub fn cost(out: &Path, seed: u64) -> Result<Report> {
+    let mut report = Report::new("A5 — cost-aware flavor choice (single-flavor vs catalog mix)");
+    let deadline = Millis::from_secs(1800);
+    let boot = Millis::from_secs(45);
+    let mut csv =
+        String::from("model,cost_usd,deadline_misses,makespan_s,peak_workers,ram_overcommit_pp\n");
+    let mut rows: Vec<(&str, f64, usize, f64, f64, f64)> = Vec::new();
+    for (label, catalog) in [
+        ("single-flavor", Vec::new()),
+        (
+            "cost-aware",
+            vec![
+                FlavorOption::nominal(Flavor::Xlarge, boot),
+                FlavorOption::nominal(Flavor::Large, boot),
+            ],
+        ),
+    ] {
+        let cost_aware = !catalog.is_empty();
+        let mut cfg = microscopy::cluster_config(seed);
+        // Headroom over the paper's 5-VM quota so neither arm is
+        // quota-starved into a different completion regime: the
+        // comparison is about *what* gets bought, not *whether*.
+        cfg.cloud.quota = 10;
+        cfg.cloud.flavor = Flavor::Xlarge;
+        cfg.irm.resource_model = ResourceModel::Vector {
+            new_vm_capacity: if cost_aware {
+                // Plan new bins at the smallest flavor the planner may
+                // buy; the next control cycle reconciles against what
+                // actually booted.
+                Flavor::Large.capacity()
+            } else {
+                Flavor::Xlarge.capacity()
+            },
+        };
+        cfg.irm.image_resources = vec![microscopy_wl::resource_profile()];
+        cfg.irm.flavor_catalog = catalog;
+        let trace = MicroscopyTrace::new(MicroscopyConfig {
+            n_images: 300,
+            ..MicroscopyConfig::default()
+        })
+        .run_trace(seed);
+        let mut cluster = SimCluster::new(cfg);
+        trace.schedule_into(&mut cluster);
+        let makespan = cluster
+            .run_to_completion(trace.len(), Millis::from_secs(6000))
+            .map(|m| m.as_secs_f64())
+            .unwrap_or(f64::NAN);
+        let cost = cluster.cloud.cost_usd();
+        let misses = cluster.deadline_misses(deadline);
+        let peak = cluster
+            .recorder
+            .get("workers.current")
+            .map(|s| s.max())
+            .unwrap_or(0.0);
+        let overcommit = cluster
+            .recorder
+            .get("ram.overcommit_pp")
+            .map(|s| s.max())
+            .unwrap_or(0.0);
+        report.line(format!(
+            "{label:<14} cost ${cost:>6.2} | misses {misses:>3} | makespan {makespan:>6.0}s | \
+             peak workers {peak} | worst RAM overcommit {overcommit:>5.2} pp"
+        ));
+        let _ = writeln!(
+            csv,
+            "{label},{cost:.4},{misses},{makespan:.1},{peak},{overcommit:.2}"
+        );
+        rows.push((label, cost, misses, makespan, peak, overcommit));
+    }
+    std::fs::write(out.join("ablation_cost.csv"), csv)?;
+
+    let (single, aware) = (&rows[0], &rows[1]);
+    report.check(
+        "both arms complete the batch",
+        single.3.is_finite() && aware.3.is_finite(),
+        format!("{:.0}s / {:.0}s", single.3, aware.3),
+    );
+    report.check(
+        "cost-aware flavor choice strictly lowers cost",
+        aware.1 < single.1,
+        format!("${:.2} vs ${:.2}", aware.1, single.1),
+    );
+    report.check(
+        "no increase in deadline misses",
+        aware.2 <= single.2,
+        format!("{} vs {}", aware.2, single.2),
+    );
+    report.check(
+        "vector packing keeps RAM within flavor capacity in both arms",
+        single.5 <= 1e-6 && aware.5 <= 1e-6,
+        format!("{:.2} / {:.2} pp", single.5, aware.5),
+    );
+    Ok(report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -413,6 +533,14 @@ mod tests {
         let tmp = std::env::temp_dir().join("hio_abl_md_test");
         std::fs::create_dir_all(&tmp).unwrap();
         let report = multidim(&tmp, 3).unwrap();
+        assert!(report.all_passed(), "{}", report.render());
+    }
+
+    #[test]
+    fn cost_ablation_runs() {
+        let tmp = std::env::temp_dir().join("hio_abl_cost_test");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let report = cost(&tmp, 3).unwrap();
         assert!(report.all_passed(), "{}", report.render());
     }
 }

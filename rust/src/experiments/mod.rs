@@ -101,6 +101,10 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
         "ablation-multidim",
         "A4: CPU-only vs multi-dimensional vector packing on a heterogeneous flavor mix",
     ),
+    (
+        "ablation-cost",
+        "A5: single-flavor vs cost-aware flavor-mix autoscaling on the Xlarge/Large catalog",
+    ),
 ];
 
 /// Run one experiment (or "all") writing outputs under `out_dir`.
@@ -119,6 +123,7 @@ pub fn run(name: &str, out_dir: &str, seed: u64) -> Result<Vec<Report>> {
         "ablation-buffer" => vec![ablations::buffer(out, seed)?],
         "ablation-profiler" => vec![ablations::profiler(out, seed)?],
         "ablation-multidim" => vec![ablations::multidim(out, seed)?],
+        "ablation-cost" => vec![ablations::cost(out, seed)?],
         "all" => {
             let mut all = Vec::new();
             all.push(synthetic::run(out, seed, "fig3")?);
@@ -134,6 +139,7 @@ pub fn run(name: &str, out_dir: &str, seed: u64) -> Result<Vec<Report>> {
             all.push(ablations::buffer(out, seed)?);
             all.push(ablations::profiler(out, seed)?);
             all.push(ablations::multidim(out, seed)?);
+            all.push(ablations::cost(out, seed)?);
             all
         }
         other => bail!(

@@ -9,7 +9,7 @@
 //! worker VMs are needed to host these."
 
 use crate::binpacking::{
-    EngineRule, Item, PackEngine, Resource, ResourceVec, VecItem, VecPackEngine, EPS,
+    EngineRule, Item, PackEngine, Resource, ResourceVec, VecItem, VecPackEngine, VecRule, EPS,
 };
 use crate::irm::config::{PackerChoice, ResourceModel};
 use crate::irm::container_queue::ContainerRequest;
@@ -74,6 +74,11 @@ pub struct PackOutcome {
     /// **provisioning flavor** (`ResourceModel::Vector::new_vm_capacity`),
     /// i.e. it is a per-flavor VM target for the autoscaler.
     pub bins_needed: usize,
+    /// Summed resource demand of `pending_new_workers` (each request at
+    /// the size it was offered to the packer — its true demand, before
+    /// any clamp into a freshly opened flavor) — the residual demand
+    /// vector the cost-aware flavor planner covers.
+    pub pending_demand: ResourceVec,
     /// Scheduled load per active worker *after* this packing run (the
     /// "Bin-packing scheduled CPU usage" series of Figs 4/8).
     pub scheduled: Vec<(WorkerId, CpuFraction)>,
@@ -115,9 +120,9 @@ impl Allocator {
     }
 
     /// An allocator for the configured resource model. Under
-    /// [`ResourceModel::Vector`] the packing rule is vector First-Fit
-    /// (the paper's rule generalized); `choice` selects the scalar rule
-    /// otherwise.
+    /// [`ResourceModel::Vector`] the packing rule is `choice`'s vector
+    /// twin (every scalar rule has one); `choice` selects the scalar
+    /// rule otherwise.
     pub fn with_model(choice: PackerChoice, model: ResourceModel) -> Self {
         let (engine, name) = match model {
             ResourceModel::CpuOnly => {
@@ -133,10 +138,21 @@ impl Allocator {
                 };
                 (Engine::Scalar(PackEngine::new(rule, Vec::new())), name)
             }
-            ResourceModel::Vector { new_vm_capacity } => (
-                Engine::Vector(VecPackEngine::new(Vec::new(), new_vm_capacity)),
-                "vector-first-fit-indexed",
-            ),
+            ResourceModel::Vector { new_vm_capacity } => {
+                let (rule, name) = match choice {
+                    PackerChoice::FirstFit => (VecRule::First, "vector-first-fit-indexed"),
+                    PackerChoice::NextFit => (VecRule::Next, "vector-next-fit-indexed"),
+                    PackerChoice::BestFit => (VecRule::Best, "vector-best-fit-indexed"),
+                    PackerChoice::WorstFit => (VecRule::Worst, "vector-worst-fit-indexed"),
+                    PackerChoice::Harmonic(k) => {
+                        (VecRule::Harmonic(k), "vector-harmonic-k-indexed")
+                    }
+                };
+                (
+                    Engine::Vector(VecPackEngine::with_rule(rule, Vec::new(), new_vm_capacity)),
+                    name,
+                )
+            }
         };
         Allocator {
             engine,
@@ -149,6 +165,21 @@ impl Allocator {
 
     pub fn algorithm(&self) -> &'static str {
         self.name
+    }
+
+    /// The demand vector a request is offered to the engine at: the
+    /// scalar model's CPU floor applied, clamped into the reference VM.
+    /// (An item that must open a new bin may be clamped further into the
+    /// provisioning flavor by the engine — the offered size is the true
+    /// demand, which is also what the flavor planner must cover.)
+    fn offered_size(req: &ContainerRequest, vector_model: bool) -> ResourceVec {
+        if vector_model {
+            let mut size = req.estimate_vec;
+            size.set(Resource::Cpu, size.get(Resource::Cpu).max(1e-3));
+            size.clamp_to(&ResourceVec::UNIT)
+        } else {
+            ResourceVec::cpu(req.estimate.value().clamp(1e-3, 1.0))
+        }
     }
 
     /// One bin-packing run over the waiting `requests`, against the current
@@ -164,22 +195,20 @@ impl Allocator {
             Engine::Scalar(engine) => {
                 engine.sync_used(workers.iter().map(|w| w.scheduled.value().min(1.0)));
                 for (i, r) in requests.iter().enumerate() {
-                    let item = Item::new(i as u64, r.estimate.value().clamp(1e-3, 1.0));
+                    let size = Self::offered_size(r, false);
+                    let item = Item::new(i as u64, size.get(Resource::Cpu));
                     self.assignments.push(engine.insert(item));
                 }
             }
             Engine::Vector(engine) => {
                 engine.sync(workers.iter().map(|w| (w.scheduled_vec, w.capacity)));
                 for (i, r) in requests.iter().enumerate() {
-                    // Reference-unit demand with the scalar model's CPU
-                    // floor; the engine fit-tests existing (possibly
-                    // larger) flavors at this true size and only clamps
-                    // into the provisioning flavor when it has to open a
-                    // new bin (a demand larger than a whole new VM gets
-                    // the whole VM).
-                    let mut size = r.estimate_vec;
-                    size.set(Resource::Cpu, size.get(Resource::Cpu).max(1e-3));
-                    let size = size.clamp_to(&ResourceVec::UNIT);
+                    // Reference-unit demand; the engine fit-tests
+                    // existing (possibly larger) flavors at this true
+                    // size and only clamps into the provisioning flavor
+                    // when it has to open a new bin (a demand larger than
+                    // a whole new VM gets the whole VM).
+                    let size = Self::offered_size(r, true);
                     self.assignments.push(engine.insert(VecItem::new(i as u64, size)));
                 }
             }
@@ -236,6 +265,7 @@ impl Allocator {
             }
         };
 
+        let vector_model = matches!(self.engine, Engine::Vector(_));
         for (i, req) in requests.into_iter().enumerate() {
             let bin_idx = self.assignments[i];
             if bin_idx < workers.len() {
@@ -245,7 +275,12 @@ impl Allocator {
                 });
             } else {
                 // Landed in a bin beyond the active workers: needs a VM
-                // that does not exist yet.
+                // that does not exist yet. Accumulate the demand at the
+                // size it was offered to the packer — the true demand the
+                // flavor planner must cover (a clamp-at-open may have
+                // recorded a smaller footprint in the hypothetical bin).
+                let size = Self::offered_size(&req, vector_model);
+                outcome.pending_demand = outcome.pending_demand.add(&size);
                 outcome.pending_new_workers.push(req);
             }
         }
@@ -525,6 +560,70 @@ mod tests {
             Allocator::new(PackerChoice::Harmonic(7)).algorithm(),
             "harmonic-k-indexed"
         );
+    }
+
+    #[test]
+    fn vector_algorithm_names_reflect_the_rule() {
+        let model = ResourceModel::Vector {
+            new_vm_capacity: ResourceVec::UNIT,
+        };
+        assert_eq!(
+            Allocator::with_model(PackerChoice::FirstFit, model).algorithm(),
+            "vector-first-fit-indexed"
+        );
+        assert_eq!(
+            Allocator::with_model(PackerChoice::BestFit, model).algorithm(),
+            "vector-best-fit-indexed"
+        );
+        assert_eq!(
+            Allocator::with_model(PackerChoice::Harmonic(7), model).algorithm(),
+            "vector-harmonic-k-indexed"
+        );
+    }
+
+    #[test]
+    fn vector_best_fit_choice_packs_tightest_worker() {
+        let mk = |choice| {
+            Allocator::with_model(
+                choice,
+                ResourceModel::Vector {
+                    new_vm_capacity: ResourceVec::UNIT,
+                },
+            )
+        };
+        let bins = || {
+            vec![
+                WorkerBin::vector(WorkerId(0), ResourceVec::new(0.5, 0.1, 0.0), ResourceVec::UNIT),
+                WorkerBin::vector(WorkerId(1), ResourceVec::new(0.7, 0.2, 0.0), ResourceVec::UNIT),
+            ]
+        };
+        let reqs = || vec_requests(&[(0.2, 0.1, 0.0)]);
+        let out = mk(PackerChoice::BestFit).pack(reqs(), &bins());
+        assert_eq!(out.allocations[0].worker, WorkerId(1), "least residual norm");
+        let out = mk(PackerChoice::WorstFit).pack(reqs(), &bins());
+        assert_eq!(out.allocations[0].worker, WorkerId(0), "most residual norm");
+    }
+
+    #[test]
+    fn pending_demand_sums_unplaceable_requests() {
+        // No workers: both requests pend; the residual demand vector sums
+        // their packed sizes (the flavor planner's input).
+        let mut alloc = Allocator::with_model(
+            PackerChoice::FirstFit,
+            ResourceModel::Vector {
+                new_vm_capacity: ResourceVec::UNIT,
+            },
+        );
+        let out = alloc.pack(vec_requests(&[(0.2, 0.3, 0.0), (0.1, 0.4, 0.1)]), &[]);
+        assert_eq!(out.pending_new_workers.len(), 2);
+        let d = out.pending_demand;
+        assert!((d.get(Resource::Cpu) - 0.3).abs() < 1e-9);
+        assert!((d.get(Resource::Ram) - 0.7).abs() < 1e-9);
+        assert!((d.get(Resource::Net) - 0.1).abs() < 1e-9);
+        // Everything placed → zero residual demand.
+        let out = alloc.pack(vec_requests(&[(0.2, 0.3, 0.0)]), &workers(&[0.0]));
+        assert!(out.pending_new_workers.is_empty());
+        assert_eq!(out.pending_demand.dominant(), 0.0);
     }
 
     #[test]

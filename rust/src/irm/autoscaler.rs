@@ -20,10 +20,40 @@
 //! Scale-down is two-staged: a transient `supply > target` first cancels
 //! in-flight boot requests ([`ScalePlan::cancel_boots`]) and only then —
 //! for excess not explained by boots — terminates graced-empty workers.
+//! Under a cost-aware plan the cancellation order is by price: the
+//! costliest in-flight boot absorbs the excess first (the harness maps
+//! `cancel_boots` onto `SimCloud::cancel_costliest_booting`).
+//!
+//! ## Cost-aware flavor choice ([`FlavorPlanner`])
+//!
+//! With a [`flavor_catalog`](crate::irm::config::IrmConfig::flavor_catalog)
+//! configured, the single planning flavor is replaced by a greedy mix:
+//! while residual demand remains, pick the flavor minimizing
+//!
+//! ```text
+//! price_per_hour / min(capacity[d], demand[d])     d = demand's dominant dim
+//! ```
+//!
+//! — dollars per *satisfied* reference unit, not per installed unit. This
+//! is the right knapsack relaxation for the covering problem the scaler
+//! faces: demand must be covered along its binding (dominant) dimension,
+//! and capacity beyond the remaining demand in that dimension satisfies
+//! nothing this cycle, so it must not subsidize a flavor's score — pricing
+//! installed capacity instead would always favor the biggest flavor and
+//! collapse back to single-flavor planning. Greedy on this density is the
+//! classic LP-relaxation rounding for min-cost covering: each pick is the
+//! cheapest way to buy the next unit of the binding dimension, and
+//! repeating it on the shrinking residual yields the fractional-optimal
+//! mix up to one final VM of rounding. Ties break toward the shorter boot
+//! latency (equally priced capacity that arrives sooner is strictly
+//! better for deadlines), then toward the larger keyed capacity (fewer
+//! VMs, fewer boots).
 
 use std::collections::HashMap;
 
-use crate::irm::config::BufferPolicy;
+use crate::binpacking::ResourceVec;
+use crate::cloud::Flavor;
+use crate::irm::config::{BufferPolicy, FlavorOption};
 use crate::types::{Millis, WorkerId};
 
 /// A worker as the autoscaler sees it.
@@ -36,9 +66,16 @@ pub struct WorkerState {
 /// Scale plan for one control cycle.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ScalePlan {
-    /// How many new VMs to request from the cloud this cycle.
+    /// How many new VMs to request from the cloud this cycle (always
+    /// `request_flavors.len()` when a flavor mix was planned).
     pub request_vms: usize,
-    /// In-flight boot requests to cancel (newest first) before any live
+    /// Cost-aware flavor choice for the requested VMs, in request order.
+    /// Empty on the homogeneous path (no catalog configured) — the
+    /// harness then requests `request_vms` VMs of the cloud's default
+    /// flavor.
+    pub request_flavors: Vec<Flavor>,
+    /// In-flight boot requests to cancel (costliest first, newest on
+    /// ties — newest-first on a homogeneous cloud) before any live
     /// worker is touched. Cancelling a boot is free; terminating a live
     /// worker throws away a provisioned VM — when a transient
     /// `supply > target` is caused by boots the scaler itself requested,
@@ -138,6 +175,144 @@ impl AutoScaler {
             }
         }
         plan
+    }
+
+    /// [`plan`](Self::plan), then turn the scale-up count into a
+    /// cost-aware flavor mix of exactly that many VMs: greedy
+    /// $/satisfied-unit picks cover `residual_demand` (the demand vector
+    /// of the requests that could not be placed on live workers), and
+    /// the remaining slots — the idle buffer — pad at the cheapest rate.
+    /// The *count* stays the homogeneous plan's (keeping the supply
+    /// feedback loop unchanged); the *capacity shape* of the request is
+    /// the planner's, which is what lets a crashed Xlarge come back as
+    /// Larges or vice versa.
+    pub fn plan_with_flavors(
+        &mut self,
+        now: Millis,
+        bins_needed: usize,
+        workers: &[WorkerState],
+        booting: usize,
+        residual_demand: ResourceVec,
+        planner: &FlavorPlanner,
+    ) -> ScalePlan {
+        let mut plan = self.plan(now, bins_needed, workers, booting);
+        if plan.request_vms > 0 {
+            plan.request_flavors = planner.plan_mix(residual_demand, plan.request_vms);
+            plan.request_vms = plan.request_flavors.len();
+        }
+        plan
+    }
+}
+
+/// The cost-aware flavor-choice planner (see the module-level notes for
+/// the greedy criterion and why it is the right knapsack relaxation).
+#[derive(Clone, Debug)]
+pub struct FlavorPlanner {
+    options: Vec<FlavorOption>,
+}
+
+/// Numerical floor below which a demand component counts as satisfied —
+/// the bin model's shared epsilon, so planner and packer agree on what
+/// "no demand" means.
+const DEMAND_EPS: f64 = crate::binpacking::EPS;
+
+impl FlavorPlanner {
+    /// A planner over a non-empty flavor catalog.
+    pub fn new(options: Vec<FlavorOption>) -> Self {
+        assert!(!options.is_empty(), "flavor catalog must not be empty");
+        FlavorPlanner { options }
+    }
+
+    pub fn options(&self) -> &[FlavorOption] {
+        &self.options
+    }
+
+    /// The catalog entry minimizing $/satisfied-unit along dimension `d`
+    /// for the remaining demand `need` (ties: shorter boot, then larger
+    /// keyed capacity — strict improvement keeps the earliest catalog
+    /// entry on full ties).
+    fn best_for(&self, d: usize, need: f64) -> Option<&FlavorOption> {
+        let mut chosen: Option<(&FlavorOption, f64)> = None;
+        for opt in &self.options {
+            let satisfied = opt.capacity.0[d].min(need);
+            if satisfied <= 0.0 {
+                continue;
+            }
+            let score = opt.price_per_hour / satisfied;
+            let better = match chosen {
+                None => true,
+                Some((cur, cur_score)) => match score.total_cmp(&cur_score) {
+                    std::cmp::Ordering::Less => true,
+                    std::cmp::Ordering::Greater => false,
+                    std::cmp::Ordering::Equal => {
+                        (opt.boot_delay, -opt.capacity.0[d]) < (cur.boot_delay, -cur.capacity.0[d])
+                    }
+                },
+            };
+            if better {
+                chosen = Some((opt, score));
+            }
+        }
+        chosen.map(|(opt, _)| opt)
+    }
+
+    /// The cheapest catalog entry by absolute hourly price (ties: shorter
+    /// boot, then larger CPU capacity) — what idle-buffer VMs pad with: a
+    /// buffer slot counts one VM regardless of flavor, so the cheapest
+    /// flavor buys the same headroom count for the least spend.
+    fn cheapest(&self) -> &FlavorOption {
+        let mut chosen = &self.options[0];
+        for opt in &self.options[1..] {
+            if (
+                opt.price_per_hour.total_cmp(&chosen.price_per_hour),
+                opt.boot_delay,
+                -opt.capacity.0[0],
+            ) < (
+                std::cmp::Ordering::Equal,
+                chosen.boot_delay,
+                -chosen.capacity.0[0],
+            ) {
+                chosen = opt;
+            }
+        }
+        chosen
+    }
+
+    /// Choose exactly `vms` flavors: greedy $/satisfied-unit picks while
+    /// residual demand remains, cheapest-rate padding for the slots left
+    /// over (idle buffer headroom). Capping the mix at the count-based
+    /// ask keeps the cost-aware loop's supply dynamics **identical** to
+    /// the homogeneous path — over-requesting to cover demand would read
+    /// as `supply > target` next cycle and get the freshly planned boots
+    /// cancelled (thrash); demand beyond `vms` VMs simply re-pends and
+    /// the next cycle re-plans, exactly like the legacy loop converges.
+    /// Demand in dimensions no catalog flavor can provision is dropped
+    /// (no finite mix exists — mirroring `ideal_bins_md_in`'s
+    /// unprovisionable-dimension semantics, minus the panic).
+    pub fn plan_mix(&self, residual_demand: ResourceVec, vms: usize) -> Vec<Flavor> {
+        let mut demand = residual_demand;
+        let mut mix = Vec::with_capacity(vms);
+        while mix.len() < vms {
+            let d = demand.dominant_dim();
+            let need = demand.0[d];
+            if need <= DEMAND_EPS {
+                // Demand covered (or none): the remaining slots are idle
+                // buffer, bought at the cheapest hourly rate.
+                mix.push(self.cheapest().flavor);
+                continue;
+            }
+            let Some(opt) = self.best_for(d, need) else {
+                // Unprovisionable dominant dimension: drop it and retry
+                // the rest of the vector.
+                demand.0[d] = 0.0;
+                continue;
+            };
+            mix.push(opt.flavor);
+            for dim in 0..demand.0.len() {
+                demand.0[dim] = (demand.0[dim] - opt.capacity.0[dim]).max(0.0);
+            }
+        }
+        mix
     }
 }
 
@@ -268,5 +443,115 @@ mod tests {
         let plan = s.plan(Millis(0), 2, &workers(&[1, 1]), 0);
         assert_eq!(plan.target_workers, 2);
         assert_eq!(plan.request_vms, 0);
+    }
+
+    fn catalog() -> FlavorPlanner {
+        let boot = Millis::from_secs(45);
+        FlavorPlanner::new(vec![
+            FlavorOption::nominal(Flavor::Xlarge, boot),
+            FlavorOption::nominal(Flavor::Large, boot),
+        ])
+    }
+
+    #[test]
+    fn planner_small_demand_buys_the_cheap_flavor() {
+        // 0.3 reference units of RAM-dominant demand: a $0.25/h Large
+        // satisfies it at $0.83/unit vs the Xlarge's $1.67/unit.
+        let mix = catalog().plan_mix(ResourceVec::new(0.1, 0.3, 0.0), 1);
+        assert_eq!(mix, vec![Flavor::Large]);
+    }
+
+    #[test]
+    fn planner_large_demand_prefers_fewer_big_vms_on_price_ties() {
+        // 1.0 unit of demand: Xlarge $0.50/unit == Large $0.50/unit (it
+        // satisfies only 0.5) — the tie breaks to the bigger flavor
+        // (same boot latency, fewer VMs), then the 0-residual loop ends.
+        let mix = catalog().plan_mix(ResourceVec::new(1.0, 0.2, 0.0), 1);
+        assert_eq!(mix, vec![Flavor::Xlarge]);
+    }
+
+    #[test]
+    fn planner_fills_the_exact_count_demand_first_then_padding() {
+        // 1.6 units of CPU demand over 3 slots: one Xlarge covers the
+        // first whole unit ($0.50/u tie → bigger flavor), then Larges
+        // cover the 0.6 tail ($0.50/u beats the Xlarge's $0.83/u on the
+        // 0.6, then $2.50/u vs $5.00/u on the last 0.1).
+        let mix = catalog().plan_mix(ResourceVec::new(1.6, 0.2, 0.1), 3);
+        assert_eq!(mix, vec![Flavor::Xlarge, Flavor::Large, Flavor::Large]);
+        // The count-based ask caps the mix: leftover demand re-pends and
+        // the next control cycle re-plans (legacy supply dynamics).
+        let mix = catalog().plan_mix(ResourceVec::new(1.6, 0.2, 0.1), 1);
+        assert_eq!(mix, vec![Flavor::Xlarge]);
+    }
+
+    #[test]
+    fn planner_pads_buffer_vms_at_the_cheapest_rate() {
+        // No residual demand but three buffer VMs wanted: all Large.
+        let mix = catalog().plan_mix(ResourceVec::ZERO, 3);
+        assert_eq!(mix, vec![Flavor::Large, Flavor::Large, Flavor::Large]);
+    }
+
+    #[test]
+    fn planner_tie_breaks_on_boot_latency() {
+        // Same $/unit, but the Large boots faster: it wins the tie for a
+        // whole unit of demand (two of them beat one slow Xlarge).
+        let p = FlavorPlanner::new(vec![
+            FlavorOption::nominal(Flavor::Xlarge, Millis::from_secs(90)),
+            FlavorOption::nominal(Flavor::Large, Millis::from_secs(30)),
+        ]);
+        let mix = p.plan_mix(ResourceVec::new(1.0, 0.0, 0.0), 2);
+        assert_eq!(mix, vec![Flavor::Large, Flavor::Large]);
+    }
+
+    #[test]
+    fn planner_drops_unprovisionable_dimensions() {
+        // Net-only demand against CPU/RAM flavors (net capacity exists on
+        // both, so use a catalog with zero net instead).
+        let boot = Millis::from_secs(45);
+        let p = FlavorPlanner::new(vec![FlavorOption {
+            flavor: Flavor::Large,
+            capacity: ResourceVec::new(0.5, 0.5, 0.0),
+            price_per_hour: 0.25,
+            boot_delay: boot,
+        }]);
+        // Dominant dim is net (unprovisionable) → dropped; CPU 0.3 still
+        // covered by one Large.
+        let mix = p.plan_mix(ResourceVec::new(0.3, 0.0, 0.9), 1);
+        assert_eq!(mix, vec![Flavor::Large]);
+    }
+
+    #[test]
+    fn plan_with_flavors_keeps_scale_down_and_fills_flavors_on_scale_up() {
+        let mut s = scaler();
+        let planner = catalog();
+        // Scale-up: 3 bins needed, 1 active (buffer 1) → 3 VMs asked;
+        // RAM-dominant residual demand of 0.8 → Large (0.8>0.5... first
+        // pick satisfies 0.5 at $0.50/u vs Xlarge $0.625/u) then 0.3 →
+        // Large again; padded to 3 with a cheap Large.
+        let plan = s.plan_with_flavors(
+            Millis(0),
+            3,
+            &workers(&[2]),
+            0,
+            ResourceVec::new(0.2, 0.8, 0.1),
+            &planner,
+        );
+        assert_eq!(plan.request_vms, plan.request_flavors.len());
+        assert_eq!(plan.request_flavors.len(), 3);
+        assert!(plan.request_flavors.iter().all(|f| *f == Flavor::Large));
+        // Scale-down path: flavors stay empty, cancels/terminations as in
+        // the count-based plan.
+        let mut s = scaler();
+        let plan = s.plan_with_flavors(
+            Millis(0),
+            0,
+            &workers(&[1]),
+            3,
+            ResourceVec::ZERO,
+            &planner,
+        );
+        assert_eq!(plan.request_vms, 0);
+        assert!(plan.request_flavors.is_empty());
+        assert!(plan.cancel_boots > 0);
     }
 }

@@ -1,12 +1,16 @@
 //! IRM configuration — the analogue of [15] §4.3 / Table 1's tunables,
-//! plus the multi-resource extension (the paper's stated future work).
+//! plus the multi-resource extension (the paper's stated future work) and
+//! the cost-aware flavor catalog.
 
 use crate::binpacking::ResourceVec;
+use crate::cloud::Flavor;
 use crate::types::{CpuFraction, ImageName, Millis};
 
 /// Which packing algorithm the bin-packing manager runs (First-Fit in the
 /// paper; the rest exist for the A1 ablation). Every choice maps onto the
-/// indexed engine (`O(log m)` per placement) in the allocator.
+/// indexed engine (`O(log m)` per placement) in the allocator — and under
+/// [`ResourceModel::Vector`] onto its vector twin
+/// ([`VecRule`](crate::binpacking::multidim::VecRule)).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PackerChoice {
     FirstFit,
@@ -15,6 +19,36 @@ pub enum PackerChoice {
     WorstFit,
     /// Harmonic with `k` classes (k ≥ 2).
     Harmonic(usize),
+}
+
+/// One provisionable VM flavor as the cost-aware autoscaler sees it: what
+/// the cloud calls it, what it can host, what it costs, and how long it
+/// takes to arrive. The catalog of these
+/// ([`IrmConfig::flavor_catalog`]) is deployment metadata — mirror it
+/// from the cloud's price sheet
+/// ([`Flavor::price_per_hour`](crate::cloud::Flavor::price_per_hour) /
+/// `CloudConfig::pricing`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlavorOption {
+    pub flavor: Flavor,
+    /// Capacity vector in reference-VM units.
+    pub capacity: ResourceVec,
+    pub price_per_hour: f64,
+    /// Nominal provisioning latency (the planner's tie-breaker: at equal
+    /// $/satisfied-unit, capacity that arrives sooner wins).
+    pub boot_delay: Millis,
+}
+
+impl FlavorOption {
+    /// The catalog entry for a [`Flavor`] at its nominal price.
+    pub fn nominal(flavor: Flavor, boot_delay: Millis) -> Self {
+        FlavorOption {
+            flavor,
+            capacity: flavor.capacity(),
+            price_per_hour: flavor.price_per_hour(),
+            boot_delay,
+        }
+    }
 }
 
 /// Which resource model the bin-packing manager packs on.
@@ -119,6 +153,14 @@ pub struct IrmConfig {
     /// component is ignored; the profiler owns it). Unlisted images demand
     /// CPU only.
     pub image_resources: Vec<(ImageName, ResourceVec)>,
+    /// Cost-aware heterogeneous provisioning: when non-empty, the
+    /// autoscaler replaces the single planning flavor with a greedy
+    /// flavor-mix choice over this catalog (minimize $/satisfied
+    /// reference unit along the residual demand's dominant dimension —
+    /// see [`FlavorPlanner`](crate::irm::autoscaler::FlavorPlanner)), and
+    /// `IrmUpdate::request_flavors` carries the chosen mix. Empty (the
+    /// default) keeps the paper's homogeneous request path.
+    pub flavor_catalog: Vec<FlavorOption>,
     pub buffer_policy: BufferPolicy,
     pub load_predictor: LoadPredictorConfig,
     /// TTL for container host requests (requeues burn one unit).
@@ -141,6 +183,7 @@ impl Default for IrmConfig {
             packer: PackerChoice::FirstFit,
             resource_model: ResourceModel::CpuOnly,
             image_resources: Vec::new(),
+            flavor_catalog: Vec::new(),
             buffer_policy: BufferPolicy::Logarithmic,
             load_predictor: LoadPredictorConfig::default(),
             request_ttl: 100,

@@ -25,14 +25,17 @@ pub mod load_predictor;
 
 use crate::binpacking::{Resource, ResourceVec};
 use crate::clock::Periodic;
+use crate::cloud::Flavor;
 use crate::master::Master;
 use crate::profiler::{ProfilerConfig, WorkerProfiler};
 use crate::protocol::WorkerReport;
 use crate::types::{CpuFraction, ImageName, Millis, WorkerId};
 
 pub use allocator::{Allocation, Allocator, PackOutcome, WorkerBin};
-pub use autoscaler::{AutoScaler, ScalePlan, WorkerState};
-pub use config::{BufferPolicy, IrmConfig, LoadPredictorConfig, PackerChoice, ResourceModel};
+pub use autoscaler::{AutoScaler, FlavorPlanner, ScalePlan, WorkerState};
+pub use config::{
+    BufferPolicy, FlavorOption, IrmConfig, LoadPredictorConfig, PackerChoice, ResourceModel,
+};
 pub use container_queue::{ContainerQueue, ContainerRequest, RequestOrigin};
 pub use load_predictor::{LoadPredictor, ScaleDecision};
 
@@ -58,9 +61,16 @@ pub struct IrmUpdate {
     pub start_pes: Vec<Allocation>,
     /// Request this many new VMs.
     pub request_vms: usize,
-    /// Cancel this many in-flight VM boot requests (newest first) — the
-    /// autoscaler absorbs a transient over-supply here before it ever
-    /// terminates a live worker.
+    /// Cost-aware flavor per requested VM, in request order — filled only
+    /// when a `flavor_catalog` is configured (then always `request_vms`
+    /// long). Empty means the cloud's default flavor path.
+    pub request_flavors: Vec<Flavor>,
+    /// Cancel this many in-flight VM boot requests — the autoscaler
+    /// absorbs a transient over-supply here before it ever terminates a
+    /// live worker. Cancellation order is the harness's choice of valve:
+    /// costliest boot first (ties → newest), so every cancellation saves
+    /// the most spend (`SimCloud::cancel_costliest_booting`; on a
+    /// homogeneous cloud this degenerates to newest-first).
     pub cancel_boots: usize,
     /// Drain and terminate these workers' VMs.
     pub terminate_workers: Vec<WorkerId>,
@@ -87,12 +97,19 @@ pub struct Irm {
     pub predictor: LoadPredictor,
     pub scaler: AutoScaler,
     pub profiler: WorkerProfiler,
+    /// Cost-aware flavor choice (present iff the config carries a
+    /// catalog).
+    flavor_planner: Option<FlavorPlanner>,
     binpack_timer: Periodic,
     /// Last packing telemetry, re-reported between runs so the recorded
     /// series are continuous.
     last_scheduled: Vec<(WorkerId, CpuFraction)>,
     last_scheduled_vec: Vec<(WorkerId, ResourceVec)>,
     last_bins_needed: usize,
+    /// Residual demand of the latest packing's unplaceable requests (the
+    /// flavor planner's covering target, continuous between runs like the
+    /// other packing telemetry).
+    last_pending_demand: ResourceVec,
     last_target: usize,
     /// Reused per-cycle buffers (the control loop runs every sim tick —
     /// it must not rebuild vectors it can refill).
@@ -112,11 +129,14 @@ impl Irm {
                 default_estimate: cfg.default_estimate,
                 ..ProfilerConfig::default()
             }),
+            flavor_planner: (!cfg.flavor_catalog.is_empty())
+                .then(|| FlavorPlanner::new(cfg.flavor_catalog.clone())),
             binpack_timer: Periodic::new(cfg.binpack_interval),
             cfg,
             last_scheduled: Vec::new(),
             last_scheduled_vec: Vec::new(),
             last_bins_needed: 0,
+            last_pending_demand: ResourceVec::ZERO,
             last_target: 0,
             bins_buf: Vec::new(),
             states_buf: Vec::new(),
@@ -217,6 +237,7 @@ impl Irm {
             self.last_scheduled = outcome.scheduled.clone();
             self.last_scheduled_vec = outcome.scheduled_vec.clone();
             self.last_bins_needed = outcome.bins_needed;
+            self.last_pending_demand = outcome.pending_demand;
             update.start_pes = outcome.allocations;
             update.bins_needed = Some(outcome.bins_needed);
             update.scheduled = outcome.scheduled;
@@ -229,11 +250,22 @@ impl Irm {
             worker: *id,
             pe_count: images.len(),
         }));
-        let plan = self
-            .scaler
-            .plan(now, self.last_bins_needed, &self.states_buf, view.booting_vms);
+        let plan = match &self.flavor_planner {
+            Some(planner) => self.scaler.plan_with_flavors(
+                now,
+                self.last_bins_needed,
+                &self.states_buf,
+                view.booting_vms,
+                self.last_pending_demand,
+                planner,
+            ),
+            None => self
+                .scaler
+                .plan(now, self.last_bins_needed, &self.states_buf, view.booting_vms),
+        };
         self.last_target = plan.target_workers;
         update.request_vms = plan.request_vms;
+        update.request_flavors = plan.request_flavors;
         update.cancel_boots = plan.cancel_boots;
         update.terminate_workers = plan.terminate;
         update.target_workers = Some(plan.target_workers);
@@ -502,6 +534,37 @@ mod tests {
         assert_eq!(update.cancel_boots, 4);
         assert!(update.terminate_workers.is_empty());
         assert_eq!(update.request_vms, 0);
+    }
+
+    #[test]
+    fn flavor_catalog_fills_request_flavors() {
+        use crate::cloud::Flavor;
+        let mut cfg = fast_cfg();
+        cfg.resource_model = ResourceModel::Vector {
+            new_vm_capacity: Flavor::Large.capacity(),
+        };
+        cfg.image_resources = vec![(ImageName::new("img"), ResourceVec::new(0.0, 0.3, 0.05))];
+        cfg.flavor_catalog = vec![
+            FlavorOption::nominal(Flavor::Xlarge, Millis::from_secs(45)),
+            FlavorOption::nominal(Flavor::Large, Millis::from_secs(45)),
+        ];
+        let mut irm = Irm::new(cfg);
+        let mut master = Master::new();
+        flood_backlog(&mut master, "img", 50);
+        let update = irm.control_cycle(Millis(0), &mut master, &view(&[], 0));
+        assert!(update.request_vms > 0);
+        assert_eq!(
+            update.request_flavors.len(),
+            update.request_vms,
+            "one flavor per requested VM"
+        );
+        // Without a catalog the flavor list stays empty (legacy path).
+        let mut legacy = Irm::new(fast_cfg());
+        let mut master = Master::new();
+        flood_backlog(&mut master, "img", 50);
+        let update = legacy.control_cycle(Millis(0), &mut master, &view(&[], 0));
+        assert!(update.request_vms > 0);
+        assert!(update.request_flavors.is_empty());
     }
 
     #[test]

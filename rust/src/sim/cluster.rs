@@ -393,14 +393,23 @@ impl SimCluster {
                 self.irm.queue.requeue(alloc.request);
             }
         }
-        for _ in 0..update.request_vms {
-            // Quota failures are counted inside the cloud (Fig 10 retries).
-            let _ = self.cloud.request_vm(now);
+        if update.request_flavors.is_empty() {
+            for _ in 0..update.request_vms {
+                // Quota failures are counted inside the cloud (Fig 10
+                // retries).
+                let _ = self.cloud.request_vm(now);
+            }
+        } else {
+            // Cost-aware path: the IRM chose a flavor per VM.
+            for flavor in &update.request_flavors {
+                let _ = self.cloud.request_vm_of(now, *flavor);
+            }
         }
         for _ in 0..update.cancel_boots {
             // Scale-thrash valve: a transient over-supply absorbs the
-            // boots it caused instead of terminating live workers.
-            if self.cloud.cancel_newest_booting().is_none() {
+            // boots it caused instead of terminating live workers —
+            // costliest boot first, so every cancellation saves the most.
+            if self.cloud.cancel_costliest_booting().is_none() {
                 break;
             }
         }
@@ -541,6 +550,10 @@ impl SimCluster {
             .record("bins.active", now, active_bins as f64);
         self.recorder
             .record("cloud.rejected", now, self.cloud.rejected_requests as f64);
+        // Running spend (the cost-aware ablation's headline series; the
+        // ledger is monotone non-decreasing by construction).
+        self.recorder
+            .record("cloud.cost_usd", now, self.cloud.cost_usd());
         self.recorder.record(
             "completions",
             now,
@@ -621,6 +634,27 @@ impl SimCluster {
         } else {
             None
         }
+    }
+
+    /// Total flavor capacity of the live workers, in reference-VM units —
+    /// what "replacing capacity" means on a heterogeneous mix (a crashed
+    /// Xlarge may come back as two Larges: fewer or more VMs, same
+    /// reference units).
+    pub fn total_capacity(&self) -> ResourceVec {
+        self.workers
+            .iter()
+            .fold(ResourceVec::ZERO, |acc, w| {
+                acc.add(&self.flavor_capacity_of(w.id))
+            })
+    }
+
+    /// Completions whose created→completed latency exceeded `deadline`
+    /// (the cost ablation's service-level metric).
+    pub fn deadline_misses(&self, deadline: Millis) -> usize {
+        self.completions
+            .iter()
+            .filter(|c| c.completed_at - c.created_at > deadline)
+            .count()
     }
 
     /// Mean message latency (created → completed).
@@ -813,6 +847,62 @@ mod tests {
         // overcommit series stays at or below zero the whole run.
         let worst = c.recorder.get("ram.overcommit_pp").unwrap().max();
         assert!(worst <= 1e-6, "RAM overcommitted by {worst} pp");
+    }
+
+    #[test]
+    fn cost_aware_cluster_completes_and_bills_monotonically() {
+        use crate::cloud::Flavor;
+        use crate::irm::{FlavorOption, ResourceModel};
+        let mut cfg = ClusterConfig {
+            cloud: CloudConfig {
+                quota: 6,
+                boot_delay: Millis::from_secs(5),
+                boot_jitter: Millis(1000),
+                ..CloudConfig::default()
+            },
+            worker: WorkerConfig {
+                container_boot: Millis(2000),
+                container_boot_jitter: Millis(500),
+                container_idle_timeout: Millis::from_secs(5),
+                measure_noise_std: 0.0,
+                ..WorkerConfig::default()
+            },
+            ..ClusterConfig::default()
+        };
+        cfg.irm.resource_model = ResourceModel::Vector {
+            new_vm_capacity: Flavor::Large.capacity(),
+        };
+        cfg.irm.image_resources = vec![(ImageName::new("img"), ResourceVec::new(0.0, 0.3, 0.05))];
+        cfg.irm.flavor_catalog = vec![
+            FlavorOption::nominal(Flavor::Xlarge, Millis::from_secs(5)),
+            FlavorOption::nominal(Flavor::Large, Millis::from_secs(5)),
+        ];
+        let mut c = SimCluster::new(cfg);
+        burst(&mut c, 40, Millis(0), Millis::from_secs(10));
+        // Sample the ledger along the way: monotone, never negative.
+        let mut last_cost = 0.0;
+        for t in 1..=300 {
+            c.run_until(Millis::from_secs(t * 5));
+            let cost = c.cloud.cost_usd();
+            assert!(cost >= last_cost, "ledger went backwards: {last_cost} -> {cost}");
+            last_cost = cost;
+            if c.completions.len() >= 40 {
+                break;
+            }
+        }
+        assert_eq!(c.completions.len(), 40, "cost-aware cluster completes");
+        assert!(last_cost > 0.0, "work was billed");
+        // The chosen mix is heterogeneous metadata the cloud honored:
+        // every live worker's capacity is a catalog flavor's, and the
+        // capacity accessor sums them.
+        let caps = [Flavor::Xlarge.capacity(), Flavor::Large.capacity()];
+        let mut sum = ResourceVec::ZERO;
+        for w in c.workers() {
+            let wcap = c.flavor_capacity_of(w.id);
+            assert!(caps.contains(&wcap), "worker {:?} capacity {wcap}", w.id);
+            sum = sum.add(&wcap);
+        }
+        assert_eq!(c.total_capacity(), sum);
     }
 
     #[test]

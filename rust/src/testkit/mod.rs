@@ -1,12 +1,30 @@
 //! Property-based testing mini-framework (no proptest in the offline
 //! closure). Provides seeded case generation, a `forall` runner with
-//! counterexample reporting and simple input shrinking for integer and
-//! f64-vector cases.
+//! counterexample reporting and simple input shrinking for integer,
+//! f64-vector and resource-vector cases.
 //!
 //! Used by the bin-packing, IRM and simulation tests to check invariants
 //! (no bin overflow, routing correctness, conservation of work) over
 //! thousands of random cases per property.
+//!
+//! ## Reproducing failures
+//!
+//! Case `i` draws from `Rng::seeded(seed ^ (i · φ))`, so every case is a
+//! pure function of one derived seed. On failure, `forall` prints that
+//! derived seed next to the (shrunk) counterexample:
+//!
+//! ```text
+//! property failed (case 37, seed 0xc0ffee):
+//!   reproduce with: TESTKIT_SEED=0x1b2c3d4e cargo test <name>
+//! ```
+//!
+//! Setting that **one env var** re-derives the failing input as case 0 of
+//! the next run (`seed ^ 0 = seed`), so the failure reproduces first
+//! regardless of `TESTKIT_CASES`. `TESTKIT_CASES=N` independently cranks
+//! the per-property case count (the CI deep pass runs
+//! `TESTKIT_CASES=2000` via `scripts/ci_check.sh --deep`).
 
+use crate::binpacking::ResourceVec;
 use crate::util::rng::Rng;
 
 /// Configuration for a property run.
@@ -15,6 +33,17 @@ pub struct Config {
     pub cases: usize,
     pub seed: u64,
     pub max_shrink_iters: usize,
+}
+
+/// Parse a `TESTKIT_SEED` value: decimal, or hex with an `0x` prefix —
+/// the exact format the failure messages print, so a panic's
+/// `TESTKIT_SEED=0x…` line can be pasted back verbatim.
+fn parse_seed(v: &str) -> Option<u64> {
+    if let Some(hex) = v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        v.parse().ok()
+    }
 }
 
 impl Default for Config {
@@ -26,7 +55,7 @@ impl Default for Config {
             .unwrap_or(200);
         let seed = std::env::var("TESTKIT_SEED")
             .ok()
-            .and_then(|v| v.parse().ok())
+            .and_then(|v| parse_seed(&v))
             .unwrap_or(0xC0FFEE);
         Config {
             cases,
@@ -54,7 +83,8 @@ pub fn forall<T: Clone + std::fmt::Debug>(
     mut prop: impl FnMut(&T) -> Result<(), String>,
 ) {
     for case in 0..cfg.cases {
-        let mut rng = Rng::seeded(cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B9));
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B9);
+        let mut rng = Rng::seeded(case_seed);
         let input = gen(&mut rng);
         if let Err(msg) = prop(&input) {
             // Greedy shrink: repeatedly take the first smaller input that
@@ -77,7 +107,9 @@ pub fn forall<T: Clone + std::fmt::Debug>(
                 break;
             }
             panic!(
-                "property failed (case {case}, seed {:#x}):\n  input: {:?}\n  error: {best_msg}",
+                "property failed (case {case}, seed {:#x}):\n  \
+                 reproduce with: TESTKIT_SEED={case_seed:#x} cargo test <this test>\n  \
+                 input: {:?}\n  error: {best_msg}",
                 cfg.seed, best
             );
         }
@@ -124,6 +156,66 @@ pub fn shrink_u64(x: &u64) -> Vec<u64> {
     } else {
         vec![x / 2, x - 1]
     }
+}
+
+/// Generate a stream of CPU/RAM/net resource profiles — the
+/// multi-dimensional packer's item domain. CPU is always demanded (a
+/// container without CPU does not exist); RAM and net mix zeros (the
+/// scalar-reduction regime), light demands and near-full components, so
+/// dominant-dimension keying, cross-dimension binding and clamp-at-open
+/// paths all get exercised.
+pub fn gen_resource_vecs(rng: &mut Rng, max_len: usize) -> Vec<ResourceVec> {
+    let n = rng.below(max_len as u64 + 1) as usize;
+    (0..n)
+        .map(|_| {
+            let cpu = match rng.below(3) {
+                0 => rng.uniform(0.01, 0.15),
+                1 => rng.uniform(0.15, 0.5),
+                _ => rng.uniform(0.5, 1.0),
+            };
+            let ram = if rng.below(4) == 0 {
+                0.0
+            } else {
+                rng.uniform(0.0, 1.0)
+            };
+            let net = if rng.below(4) == 0 {
+                0.0
+            } else {
+                rng.uniform(0.0, 0.6)
+            };
+            ResourceVec::new(cpu, ram, net)
+        })
+        .collect()
+}
+
+/// Shrinker for resource-vector streams: drop halves, drop single
+/// elements, then halve every component while keeping CPU in the item
+/// domain (`VecItem` demands a positive dominant component and the
+/// engines a positive CPU demand).
+pub fn shrink_resource_vecs(xs: &Vec<ResourceVec>) -> Vec<Vec<ResourceVec>> {
+    let mut out = Vec::new();
+    let n = xs.len();
+    if n == 0 {
+        return out;
+    }
+    out.push(xs[..n / 2].to_vec());
+    out.push(xs[n / 2..].to_vec());
+    if n <= 8 {
+        for i in 0..n {
+            let mut c = xs.clone();
+            c.remove(i);
+            out.push(c);
+        }
+    }
+    let halved: Vec<ResourceVec> = xs
+        .iter()
+        .map(|v| ResourceVec::new((v.0[0] / 2.0).max(0.01), v.0[1] / 2.0, v.0[2] / 2.0))
+        .collect();
+    if halved != *xs {
+        out.push(halved);
+    }
+    out.retain(|c| !c.is_empty() || xs.is_empty());
+    out
 }
 
 /// Generate a vector of item sizes in `(0, 1]` — the bin-packing input
@@ -231,5 +323,90 @@ mod tests {
     fn shrink_u64_towards_zero() {
         assert!(shrink_u64(&0).is_empty());
         assert_eq!(shrink_u64(&10), vec![5, 9]);
+    }
+
+    #[test]
+    fn seed_parses_in_both_printed_formats() {
+        assert_eq!(parse_seed("12648430"), Some(0xC0FFEE));
+        assert_eq!(parse_seed("0xc0ffee"), Some(0xC0FFEE));
+        assert_eq!(parse_seed("0XC0FFEE"), Some(0xC0FFEE));
+        assert_eq!(parse_seed("not a seed"), None);
+    }
+
+    #[test]
+    fn gen_resource_vecs_in_domain() {
+        let mut rng = Rng::seeded(5);
+        for _ in 0..100 {
+            for v in gen_resource_vecs(&mut rng, 40) {
+                assert!(v.0[0] > 0.0 && v.0[0] <= 1.0, "cpu {} outside (0,1]", v.0[0]);
+                assert!((0.0..=1.0).contains(&v.0[1]), "ram {}", v.0[1]);
+                assert!((0.0..=1.0).contains(&v.0[2]), "net {}", v.0[2]);
+            }
+        }
+    }
+
+    #[test]
+    fn shrink_resource_vecs_reduces_and_stays_in_domain() {
+        let mut rng = Rng::seeded(6);
+        let xs = loop {
+            let xs = gen_resource_vecs(&mut rng, 20);
+            if xs.len() >= 4 {
+                break xs;
+            }
+        };
+        let shrunk = shrink_resource_vecs(&xs);
+        assert!(!shrunk.is_empty());
+        for cand in &shrunk {
+            assert!(cand.len() <= xs.len());
+            for v in cand {
+                assert!(v.0[0] > 0.0, "shrinking must keep CPU demanded");
+            }
+        }
+        assert!(shrink_resource_vecs(&Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn failure_panic_names_the_reproduction_seed() {
+        // The derived case seed printed in the panic must regenerate the
+        // failing input as case 0 when fed back through TESTKIT_SEED.
+        let result = std::panic::catch_unwind(|| {
+            forall_no_shrink(
+                Config {
+                    cases: 100,
+                    seed: 0xC0FFEE,
+                    max_shrink_iters: 0,
+                },
+                |rng| rng.below(1000),
+                |&x| {
+                    if x < 900 {
+                        Ok(())
+                    } else {
+                        Err(format!("{x} too big"))
+                    }
+                },
+            )
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("expected a failure"),
+        };
+        let seed_hex = msg
+            .split("TESTKIT_SEED=")
+            .nth(1)
+            .and_then(|s| s.split_whitespace().next())
+            .expect("panic names TESTKIT_SEED");
+        let case_seed = u64::from_str_radix(seed_hex.trim_start_matches("0x"), 16).unwrap();
+        // Re-derive case 0 under that seed: it must be the failing input.
+        let failing: u64 = msg
+            .split("input: ")
+            .nth(1)
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        let mut rng = Rng::seeded(case_seed);
+        assert_eq!(rng.below(1000), failing, "one env var reproduces the case");
     }
 }

@@ -61,10 +61,12 @@ pub fn cellprofiler_image() -> ImageName {
 /// Per-PE non-CPU resource profile of the CellProfiler image, in
 /// reference-VM units — the workload metadata the multi-resource IRM packs
 /// on (`IrmConfig::image_resources`). Image analysis is RAM-heavy (the
-/// whole plate is decompressed in memory) and network-light; the CPU
-/// dimension is zero because the live profiler owns it.
+/// whole plate is decompressed in memory: a quarter of the reference VM's
+/// memory per PE, so PEs tile both SSC flavors exactly — 4 per Xlarge,
+/// 2 per Large) and network-light; the CPU dimension is zero because the
+/// live profiler owns it.
 pub fn resource_profile() -> (ImageName, ResourceVec) {
-    (cellprofiler_image(), ResourceVec::new(0.0, 0.30, 0.05))
+    (cellprofiler_image(), ResourceVec::new(0.0, 0.25, 0.05))
 }
 
 /// The materialized dataset: per-image fixed properties.

@@ -1,16 +1,28 @@
 //! Multi-dimensional placement-equivalence properties: the indexed vector
 //! engine ([`VecPackEngine`]) must make **exactly** the same decisions as
-//! the naive `first_fit_md_in` oracle, over random vector item streams and
-//! random *flavor mixes* (heterogeneous bin capacities, pre-loaded bins,
-//! live-engine rounds through `sync`) — the vector mirror of
-//! `rust/tests/binpacking_equivalence.rs`.
+//! the naive oracles — First-, Next-, Best-, Worst-Fit and Harmonic(k) —
+//! over random vector item streams and random *flavor mixes*
+//! (heterogeneous bin capacities, pre-loaded bins, live-engine rounds
+//! through `sync`) — the vector mirror of
+//! `rust/tests/binpacking_equivalence.rs`. Any failure prints a
+//! `TESTKIT_SEED=…` line that reproduces it with one env var.
 
 use harmonicio::binpacking::{
-    first_fit_md_in, first_fit_md_indexed, FirstFit, Item, ResourceVec, VecBin, VecItem,
-    VecPackEngine,
+    first_fit_md_in, first_fit_md_indexed, pack_md_in, pack_md_indexed, FirstFit, Item,
+    ResourceVec, VecBin, VecItem, VecPackEngine, VecRule,
 };
 use harmonicio::testkit::{self, Config};
 use harmonicio::util::rng::Rng;
+
+/// Every vector rule under test (the scalar family's twins).
+const RULES: [VecRule; 6] = [
+    VecRule::First,
+    VecRule::Next,
+    VecRule::Best,
+    VecRule::Worst,
+    VecRule::Harmonic(3),
+    VecRule::Harmonic(7),
+];
 
 /// The flavor palette instances draw from (reference = the unit flavor;
 /// mirrors the SSC flavors plus an odd asymmetric one).
@@ -163,6 +175,107 @@ fn prop_live_engine_rounds_equal_fresh_packs() {
                     return Err(format!(
                         "live engine diverged on a later round: {got:?} != {want:?}"
                     ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_vec_rules_equal_their_naive_oracles() {
+    // The ISSUE-3 acceptance gate: ≥ 500 random cases in the default run
+    // (TESTKIT_CASES raises it further — the ci_check.sh --deep budget
+    // applies here), every rule placement-identical to its naive oracle
+    // over random flavor mixes, pre-loaded bins and clamp-at-open item
+    // streams.
+    testkit::forall_no_shrink(
+        Config {
+            cases: Config::default().cases.max(520),
+            ..Config::default()
+        },
+        gen_instance,
+        |(bins, sizes, new_cap)| {
+            let its = vec_items(sizes);
+            for rule in RULES {
+                let a = pack_md_in(rule, &its, materialize(bins), *new_cap);
+                let b = pack_md_indexed(rule, &its, materialize(bins), *new_cap);
+                a.check(&its).map_err(|e| format!("{rule:?} naive: {e}"))?;
+                b.check(&its).map_err(|e| format!("{rule:?} indexed: {e}"))?;
+                if a.assignments != b.assignments {
+                    return Err(format!(
+                        "{rule:?} diverged (new_cap {new_cap}):\n  naive   {:?}\n  indexed {:?}",
+                        a.assignments, b.assignments
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_vec_rules_equal_oracles_on_generated_profiles() {
+    // Same equivalence over the shared testkit generator (shrinkable item
+    // streams, unit bins) — a failing stream shrinks to a minimal one.
+    testkit::forall(
+        Config {
+            cases: Config::default().cases.max(150),
+            ..Config::default()
+        },
+        |rng| testkit::gen_resource_vecs(rng, 40),
+        testkit::shrink_resource_vecs,
+        |sizes| {
+            let its = vec_items(sizes);
+            for rule in RULES {
+                let a = pack_md_in(rule, &its, Vec::new(), ResourceVec::UNIT);
+                let b = pack_md_indexed(rule, &its, Vec::new(), ResourceVec::UNIT);
+                if a.assignments != b.assignments {
+                    return Err(format!(
+                        "{rule:?}: naive {:?} != indexed {:?}",
+                        a.assignments, b.assignments
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_live_engine_rounds_equal_fresh_packs_per_rule() {
+    // The IRM pattern for every rule: one engine reconciled (`sync`) to a
+    // new worker population each round must place like a from-scratch
+    // pack with that rule. Budgeted at a fifth of the configured cases
+    // (each case is a multi-round, multi-rule pack) so the --deep pass
+    // still scales it.
+    testkit::forall_no_shrink(
+        Config {
+            cases: (Config::default().cases / 5).max(40),
+            ..Config::default()
+        },
+        |rng| {
+            let rounds = 1 + rng.below(4) as usize;
+            (0..rounds).map(|_| gen_instance(rng)).collect::<Vec<_>>()
+        },
+        |rounds| {
+            for rule in RULES {
+                let mut engine = VecPackEngine::with_rule(rule, Vec::new(), ResourceVec::UNIT);
+                for (bins, sizes, _new_cap) in rounds {
+                    let its = vec_items(sizes);
+                    engine.sync(
+                        bins.iter()
+                            .map(|(cap, used)| (*used, *cap))
+                            .collect::<Vec<_>>(),
+                    );
+                    let got: Vec<usize> = its.iter().map(|it| engine.insert(*it)).collect();
+                    let want =
+                        pack_md_in(rule, &its, materialize(bins), ResourceVec::UNIT).assignments;
+                    if got != want {
+                        return Err(format!(
+                            "{rule:?} live engine diverged on a later round: {got:?} != {want:?}"
+                        ));
+                    }
                 }
             }
             Ok(())

@@ -1,6 +1,7 @@
 //! The whole figure suite as an integration test: every experiment's shape
 //! checks must pass at the default seed (the same gate `repro experiment
-//! all` enforces).
+//! all` enforces), and the A4/A5 headline metrics are pinned per seed by
+//! a golden snapshot so planner refactors can't silently shift results.
 
 #[test]
 fn all_figures_reproduce_with_passing_checks() {
@@ -8,7 +9,7 @@ fn all_figures_reproduce_with_passing_checks() {
     std::fs::create_dir_all(&out).unwrap();
     let reports =
         harmonicio::experiments::run("all", out.to_str().unwrap(), 42).expect("suite runs");
-    assert_eq!(reports.len(), 13, "all 13 experiments ran");
+    assert_eq!(reports.len(), 14, "all 14 experiments ran");
     let mut failed = Vec::new();
     for r in &reports {
         for c in &r.checks {
@@ -34,6 +35,7 @@ fn all_figures_reproduce_with_passing_checks() {
         "ablation_buffer.csv",
         "ablation_profiler.csv",
         "ablation_multidim.csv",
+        "ablation_cost.csv",
     ] {
         let path = out.join(fig);
         let meta = std::fs::metadata(&path).unwrap_or_else(|_| panic!("{fig} missing"));
@@ -52,4 +54,59 @@ fn figures_are_deterministic_per_seed() {
     let a = std::fs::read_to_string(out_a.join("fig5.csv")).unwrap();
     let b = std::fs::read_to_string(out_b.join("fig5.csv")).unwrap();
     assert_eq!(a, b, "same seed → identical figure data");
+}
+
+/// Golden regression pin for the A4/A5 headline metrics at seed 42: the
+/// full metric CSVs (overcommit_pp, cost_usd, deadline misses, makespans,
+/// peak workers) are snapshotted under `rust/tests/golden/` and compared
+/// byte-for-byte — the experiments are deterministic per seed, so any
+/// diff is a behavior change in the packing/planning stack, not noise.
+///
+/// Bootstrap/refresh protocol: when a golden file is missing (first run
+/// on a fresh checkout) it is written and the test passes with a notice —
+/// **commit the generated file** so later refactors compare against it.
+/// To intentionally re-baseline after a deliberate planner change, run
+/// with `GOLDEN_UPDATE=1` and commit the diff; a mismatch without that
+/// env var is a regression failure. Independently of the snapshot, the
+/// test always re-runs each experiment a second time in-process and
+/// requires byte-identical CSVs, so per-seed determinism is enforced
+/// even before a golden is committed.
+#[test]
+fn golden_ablation_metrics_pinned_per_seed() {
+    let out_a = std::env::temp_dir().join("hio_golden_ablations_a");
+    let out_b = std::env::temp_dir().join("hio_golden_ablations_b");
+    for out in [&out_a, &out_b] {
+        std::fs::create_dir_all(out).unwrap();
+        harmonicio::experiments::run("ablation-multidim", out.to_str().unwrap(), 42).unwrap();
+        harmonicio::experiments::run("ablation-cost", out.to_str().unwrap(), 42).unwrap();
+    }
+
+    let golden_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden");
+    std::fs::create_dir_all(&golden_dir).unwrap();
+    let update = std::env::var("GOLDEN_UPDATE").map(|v| v == "1").unwrap_or(false);
+    for csv in ["ablation_multidim.csv", "ablation_cost.csv"] {
+        let produced = std::fs::read_to_string(out_a.join(csv)).unwrap();
+        let rerun = std::fs::read_to_string(out_b.join(csv)).unwrap();
+        assert_eq!(
+            produced, rerun,
+            "{csv} not deterministic at seed 42 — a golden pin is meaningless"
+        );
+        let golden_path = golden_dir.join(format!("{csv}.seed42.golden"));
+        if update || !golden_path.exists() {
+            std::fs::write(&golden_path, &produced).unwrap();
+            eprintln!(
+                "golden: wrote {} — commit it to pin these metrics",
+                golden_path.display()
+            );
+            continue;
+        }
+        let golden = std::fs::read_to_string(&golden_path).unwrap();
+        assert_eq!(
+            produced, golden,
+            "{csv} diverged from its seed-42 golden pin \
+             ({}). If the change is intentional, re-baseline with \
+             GOLDEN_UPDATE=1 and commit the new golden.",
+            golden_path.display()
+        );
+    }
 }

@@ -2,13 +2,25 @@
 # One-command CI gate: formatting, lints, release build and the tier-1
 # test suite — exactly what the PR driver enforces. Run from anywhere:
 #
-#   ./scripts/ci_check.sh
+#   ./scripts/ci_check.sh [--deep]
+#
+# --deep additionally runs the property suites in release mode at
+# TESTKIT_CASES=2000 (the deep fuzz pass for the packing-equivalence and
+# IRM invariants; any failure prints a TESTKIT_SEED=… line that
+# reproduces it with one env var). The default gate already runs every
+# test — including the multidim-equivalence and chaos suites — at the
+# standard case budget.
 #
 # (Benchmarks are NOT part of this gate; run ./scripts/bench_check.sh for
 # the perf trajectory artifact.)
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+DEEP=0
+if [[ "${1:-}" == "--deep" ]]; then
+    DEEP=1
+fi
 
 echo "== cargo fmt --check"
 cargo fmt --check
@@ -21,5 +33,10 @@ cargo build --release
 
 echo "== cargo test -q"
 cargo test -q
+
+if [[ "$DEEP" == "1" ]]; then
+    echo "== deep property pass (TESTKIT_CASES=2000, release)"
+    TESTKIT_CASES=2000 cargo test --release -q
+fi
 
 echo "== ci_check: all green"
