@@ -255,6 +255,59 @@ fn main() {
         black_box(FirstFit.pack_one(Item::new(0, 0.3), &mut bins));
     });
 
+    // --- Profiler ingest (ISSUE 4): the per-report cost of the
+    // multi-dimensional ResourceProfiler — every worker reports every
+    // report_interval, so ingest sits on the control-loop hot path. One
+    // logical iteration ingests a 20-worker × 4-image fleet's reports
+    // (reported as items/s where an item is one report).
+    println!("\n# profiler ingest (vector pipeline)");
+    {
+        use harmonicio::profiler::{ProfilerConfig, ResourceProfiler};
+        use harmonicio::protocol::WorkerReport;
+        use harmonicio::types::{CpuFraction, ImageName, Millis, WorkerId};
+        let images: Vec<ImageName> = (0..4).map(|i| ImageName::new(format!("img-{i}"))).collect();
+        let mut rng = Rng::seeded(37);
+        let reports: Vec<WorkerReport> = (0..20u64)
+            .map(|w| WorkerReport {
+                worker: WorkerId(w),
+                at: Millis(w * 7),
+                total_cpu: CpuFraction::new(rng.uniform(0.1, 0.9)),
+                per_image: images
+                    .iter()
+                    .map(|img| {
+                        (
+                            img.clone(),
+                            ResourceVec::new(
+                                rng.uniform(0.05, 0.3),
+                                rng.uniform(0.1, 0.4),
+                                rng.uniform(0.01, 0.1),
+                            ),
+                        )
+                    })
+                    .collect(),
+                pes: Vec::new(),
+            })
+            .collect();
+        let mut profiler = ResourceProfiler::new(ProfilerConfig::default());
+        b.bench_throughput("profiler-ingest/20w-4img", Some(reports.len() as u64), |iters| {
+            for _ in 0..iters {
+                for r in &reports {
+                    profiler.ingest(black_box(r));
+                }
+            }
+        });
+        // The cold path: every ingest allocates the per-image windows.
+        b.bench_throughput("profiler-ingest-cold/20w-4img", Some(reports.len() as u64), |iters| {
+            for _ in 0..iters {
+                let mut fresh = ResourceProfiler::new(ProfilerConfig::default());
+                for r in &reports {
+                    fresh.ingest(black_box(r));
+                }
+                black_box(fresh.samples_ingested);
+            }
+        });
+    }
+
     // Quality summary (printed alongside the timings) — indexed variants
     // must report identical packing quality to their oracles.
     println!("\n# quality on 1000-item IRM-shaped instance");

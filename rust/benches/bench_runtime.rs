@@ -45,7 +45,10 @@ fn main() {
             worker: WorkerId(w),
             at: Millis(0),
             total_cpu: CpuFraction::new(0.5),
-            per_image: vec![(image.clone(), CpuFraction::new(0.125))],
+            per_image: vec![(
+                image.clone(),
+                harmonicio::binpacking::ResourceVec::cpu(0.125),
+            )],
             pes: (0..8)
                 .map(|p| PeStatus {
                     pe: PeId(w * 100 + p),

@@ -73,7 +73,7 @@ pub use index::{
 pub use multidim::{
     best_fit_md_in, first_fit_md, first_fit_md_in, harmonic_md_in, ideal_bins_md,
     ideal_bins_md_in, next_fit_md_in, pack_md_in, worst_fit_md_in, Resource, ResourceVec, VecBin,
-    VecItem, VecPacking, VecRule,
+    VecItem, VecPacking, VecRule, DIMS,
 };
 pub use analysis::{ideal_bins, performance_ratio, stats_md, PackingStats, VecPackingStats};
 

@@ -13,20 +13,19 @@
 //! [`CloudConfig::pricing`]). The defaults scale linearly with core count
 //! off the reference flavor (SSC.xlarge at $0.50/h) — the public-cloud
 //! convention within one instance family. [`SimCloud`] accrues a running
-//! **cost ledger** ([`SimCloud::cost_usd`]): on every [`SimCloud::tick`]
-//! each VM that is booting or active is billed for the wall-clock since
-//! the previous tick, clipped to its own provisioning request time
-//! (providers bill from the request, not from readiness). Terminated —
-//! including boot-cancelled — VMs stop accruing at the tick that
-//! observes them terminated, so cancelling a boot can never double-bill,
-//! and the ledger is monotone non-decreasing by construction. Billing
-//! granularity is the tick: live time between the last tick and a
-//! mid-interval termination is *not* billed — a conservative bias
-//! bounded by one tick interval (100 ms under the simulator's cadence)
-//! and applied identically to every arm of a cost comparison. The
-//! cost-aware autoscaler plans against these prices and prefers
-//! cancelling the costliest in-flight boot
-//! ([`SimCloud::cancel_costliest_booting`]).
+//! **cost ledger** ([`SimCloud::cost_usd`]): every VM carries its own
+//! billed-through watermark starting at its provisioning request time
+//! (providers bill from the request, not from readiness). Each
+//! [`SimCloud::tick`] advances every live VM's watermark to `now`;
+//! termination — explicit, and boot cancellation alike — bills the
+//! partial interval from the watermark to the termination instant before
+//! the VM stops accruing, so **no live time is ever forfeited** and a
+//! cancelled boot can never double-bill. The ledger is monotone
+//! non-decreasing by construction, and a VM's lifetime cost is exactly
+//! `price × (terminated_at − requested_at)` regardless of how the tick
+//! grid straddles either endpoint. The cost-aware autoscaler plans
+//! against these prices and prefers cancelling the costliest in-flight
+//! boot ([`SimCloud::cancel_costliest_booting`]).
 
 use crate::binpacking::ResourceVec;
 use crate::types::{IdGen, Millis, VmId};
@@ -99,6 +98,9 @@ pub struct Vm {
     pub flavor: Flavor,
     pub state: VmState,
     pub requested_at: Millis,
+    /// End of the last billed interval for this VM (starts at
+    /// `requested_at`; frozen at the termination instant).
+    billed_until: Millis,
 }
 
 /// Provisioning errors surfaced to the autoscaler.
@@ -165,13 +167,10 @@ pub struct SimCloud {
     provisioned: usize,
     /// Count of rejected requests (observable for Fig 10's retry shape).
     pub rejected_requests: u64,
-    /// Accrued spend in USD (see the module-level pricing notes): every
-    /// tick bills each booting/active VM for the time since the previous
-    /// tick. Monotone non-decreasing; a cancelled boot stops accruing at
-    /// the tick that sees it terminated.
+    /// Accrued spend in USD (see the module-level pricing notes):
+    /// per-VM watermark billing — ticks advance live VMs, termination
+    /// bills the partial interval. Monotone non-decreasing.
     cost_usd: f64,
-    /// End of the last billed interval.
-    billed_until: Millis,
 }
 
 impl SimCloud {
@@ -185,7 +184,6 @@ impl SimCloud {
             provisioned: 0,
             rejected_requests: 0,
             cost_usd: 0.0,
-            billed_until: Millis::ZERO,
         }
     }
 
@@ -241,28 +239,42 @@ impl SimCloud {
             flavor,
             state: VmState::Booting { ready_at },
             requested_at: now,
+            billed_until: now,
         });
         Ok(id)
     }
 
-    /// Terminate a VM (idempotent; terminating a booting VM cancels it).
-    pub fn terminate_vm(&mut self, id: VmId) {
+    /// Terminate a VM at sim time `now` (idempotent; terminating a
+    /// booting VM cancels it). The partial interval since the VM's last
+    /// billed tick is billed here — sub-tick live time is never
+    /// forfeited, and a later tick cannot re-bill it (the watermark
+    /// freezes at the termination instant).
+    pub fn terminate_vm(&mut self, id: VmId, now: Millis) {
         if let Some(vm) = self.vms.iter_mut().find(|v| v.id == id) {
+            if matches!(vm.state, VmState::Terminated) {
+                return;
+            }
+            if now > vm.billed_until {
+                let dt_hours = (now - vm.billed_until).as_secs_f64() / 3600.0;
+                self.cost_usd += self.cfg.price_of(vm.flavor) * dt_hours;
+                vm.billed_until = now;
+            }
             vm.state = VmState::Terminated;
         }
     }
 
     /// Cancel the most recently requested VM still booting, if any —
-    /// the autoscaler's scale-thrash valve (cancelling a boot is free;
-    /// the newest request is the one furthest from being ready).
-    pub fn cancel_newest_booting(&mut self) -> Option<VmId> {
+    /// the autoscaler's scale-thrash valve (cancelling a boot is free
+    /// going forward; the time it already spent provisioning is billed
+    /// like any other live time).
+    pub fn cancel_newest_booting(&mut self, now: Millis) -> Option<VmId> {
         let id = self
             .vms
             .iter()
             .rev()
             .find(|v| matches!(v.state, VmState::Booting { .. }))
             .map(|v| v.id)?;
-        self.terminate_vm(id);
+        self.terminate_vm(id, now);
         Some(id)
     }
 
@@ -270,7 +282,7 @@ impl SimCloud {
     /// newest request), if any — the cost-aware scale-thrash valve: every
     /// cancelled boot saves its hourly rate, so the most expensive
     /// in-flight boot absorbs the excess first.
-    pub fn cancel_costliest_booting(&mut self) -> Option<VmId> {
+    pub fn cancel_costliest_booting(&mut self, now: Millis) -> Option<VmId> {
         let mut chosen: Option<(VmId, f64)> = None;
         // Reverse walk + strict improvement: the newest booting VM at the
         // maximum price wins.
@@ -285,25 +297,23 @@ impl SimCloud {
             }
         }
         let (id, _) = chosen?;
-        self.terminate_vm(id);
+        self.terminate_vm(id, now);
         Some(id)
     }
 
     /// Advance boot progress; returns VMs that became active this tick.
-    /// Also accrues the cost ledger: every VM not yet observed terminated
-    /// bills for the interval since the previous tick, clipped to its own
-    /// provisioning request time (a VM requested mid-interval is not
-    /// billed for time before it existed).
+    /// Also accrues the cost ledger: every live VM bills from its own
+    /// billed-through watermark to `now` (the watermark starts at the
+    /// provisioning request — a VM requested mid-interval is not billed
+    /// for time before it existed, and a VM terminated mid-interval was
+    /// already billed through its termination instant).
     pub fn tick(&mut self, now: Millis) -> Vec<VmId> {
-        if now > self.billed_until {
-            for vm in &self.vms {
-                if !matches!(vm.state, VmState::Terminated) {
-                    let from = self.billed_until.max(vm.requested_at);
-                    let dt_hours = (now.saturating_sub(from)).as_secs_f64() / 3600.0;
-                    self.cost_usd += self.cfg.price_of(vm.flavor) * dt_hours;
-                }
+        for vm in &mut self.vms {
+            if !matches!(vm.state, VmState::Terminated) && now > vm.billed_until {
+                let dt_hours = (now - vm.billed_until).as_secs_f64() / 3600.0;
+                self.cost_usd += self.cfg.price_of(vm.flavor) * dt_hours;
+                vm.billed_until = now;
             }
-            self.billed_until = now;
         }
         let mut ready = Vec::new();
         for vm in &mut self.vms {
@@ -386,7 +396,7 @@ mod tests {
         assert_eq!(c.rejected_requests, 1);
         // Terminating frees quota.
         let active = c.booting_vms()[0];
-        c.terminate_vm(active);
+        c.terminate_vm(active, Millis(0));
         assert!(c.request_vm(Millis(0)).is_ok());
     }
 
@@ -394,10 +404,12 @@ mod tests {
     fn terminate_is_idempotent() {
         let mut c = cloud(3);
         let id = c.request_vm(Millis(0)).unwrap();
-        c.terminate_vm(id);
-        c.terminate_vm(id);
+        c.terminate_vm(id, Millis(1000));
+        let billed = c.cost_usd();
+        c.terminate_vm(id, Millis::from_secs(3600));
         assert_eq!(c.vm(id).unwrap().state, VmState::Terminated);
         assert!(c.active_vms().is_empty());
+        assert_eq!(c.cost_usd(), billed, "re-terminating bills nothing");
     }
 
     #[test]
@@ -477,7 +489,7 @@ mod tests {
         // One hour of a single Xlarge (billed through boot + active).
         c.tick(Millis::from_secs(3600));
         assert!((c.cost_usd() - 0.50).abs() < 1e-9, "got {}", c.cost_usd());
-        c.terminate_vm(id);
+        c.terminate_vm(id, Millis::from_secs(3600));
         c.tick(Millis::from_secs(7200));
         assert!(
             (c.cost_usd() - 0.50).abs() < 1e-9,
@@ -507,11 +519,98 @@ mod tests {
         c.tick(Millis::from_secs(1800)); // half an hour booting
         let at_cancel = c.cost_usd();
         assert!((at_cancel - 0.125).abs() < 1e-9, "got {at_cancel}");
-        assert!(c.cancel_newest_booting().is_some());
+        assert!(c.cancel_newest_booting(Millis::from_secs(1800)).is_some());
         // Ticking far past the original ready time adds nothing.
         c.tick(Millis::from_secs(7200));
         assert_eq!(c.cost_usd(), at_cancel, "cancelled boot billed once");
         assert!(c.cost_usd() >= 0.0);
+    }
+
+    #[test]
+    fn sub_tick_termination_bills_the_partial_interval_exactly() {
+        // Regression (sub-tick billing): the old ledger only billed on
+        // tick, so a VM terminated between ticks forfeited up to one full
+        // tick of live time. A VM's lifetime cost must now be exactly
+        // price × (terminated_at − requested_at) regardless of the grid.
+        let mut c = SimCloud::new(CloudConfig {
+            quota: 4,
+            boot_delay: Millis::from_secs(40),
+            boot_jitter: Millis::ZERO,
+            flavor: Flavor::Xlarge,
+            ..CloudConfig::default()
+        });
+        let id = c.request_vm(Millis(0)).unwrap();
+        c.tick(Millis::from_secs(3600));
+        // Terminate mid-interval, 30 min past the last tick.
+        c.terminate_vm(id, Millis::from_secs(5400));
+        let expected = 0.50 * 1.5; // 1.5 h of an Xlarge
+        assert!(
+            (c.cost_usd() - expected).abs() < 1e-9,
+            "lifetime cost {} != {expected}",
+            c.cost_usd()
+        );
+        // Later ticks bill nothing further for it.
+        c.tick(Millis::from_secs(7200));
+        c.tick(Millis::from_secs(10_800));
+        assert!((c.cost_usd() - expected).abs() < 1e-9, "no post-mortem accrual");
+    }
+
+    #[test]
+    fn sub_tick_cancellation_bills_boot_time_spent() {
+        // Cancelling a boot between ticks bills the provisioning time
+        // actually consumed — cancellation is free going forward, not
+        // retroactively.
+        let mut c = SimCloud::new(CloudConfig {
+            quota: 4,
+            boot_delay: Millis::from_secs(3600),
+            boot_jitter: Millis::ZERO,
+            flavor: Flavor::Large,
+            ..CloudConfig::default()
+        });
+        c.request_vm(Millis(0)).unwrap();
+        c.tick(Millis::from_secs(1800));
+        // Cancel 18 min after the last tick: 0.3 h more at $0.25/h.
+        assert!(c.cancel_newest_booting(Millis::from_secs(2880)).is_some());
+        let expected = 0.25 * 0.8;
+        assert!(
+            (c.cost_usd() - expected).abs() < 1e-9,
+            "got {} want {expected}",
+            c.cost_usd()
+        );
+        c.tick(Millis::from_secs(7200));
+        assert!((c.cost_usd() - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ledger_monotone_under_interleaved_terminate_and_tick() {
+        let mut c = SimCloud::new(CloudConfig {
+            quota: 8,
+            boot_delay: Millis::from_secs(10),
+            boot_jitter: Millis::ZERO,
+            flavor: Flavor::Large,
+            ..CloudConfig::default()
+        });
+        let mut last = 0.0;
+        let mut ids = Vec::new();
+        for step in 1..=20u64 {
+            let now = Millis::from_secs(step * 30);
+            if step % 3 == 0 {
+                if let Ok(id) = c.request_vm(now) {
+                    ids.push(id);
+                }
+            }
+            if step % 4 == 0 {
+                if let Some(id) = ids.pop() {
+                    // Mid-interval termination relative to the next tick.
+                    c.terminate_vm(id, now + Millis(500));
+                }
+            }
+            c.tick(now + Millis(1000));
+            let cost = c.cost_usd();
+            assert!(cost >= last - 1e-12, "ledger regressed: {last} -> {cost}");
+            last = cost;
+        }
+        assert!(last > 0.0);
     }
 
     #[test]
@@ -525,14 +624,14 @@ mod tests {
         let xlarge = c.request_vm(Millis(10)).unwrap();
         let large_b = c.request_vm(Millis(20)).unwrap();
         assert_eq!(
-            c.cancel_costliest_booting(),
+            c.cancel_costliest_booting(Millis(20)),
             Some(xlarge),
             "the $0.50/h boot absorbs the excess before either $0.25/h one"
         );
         // Among the remaining equal-priced boots the newest goes first.
-        assert_eq!(c.cancel_costliest_booting(), Some(large_b));
-        c.cancel_costliest_booting();
-        assert_eq!(c.cancel_costliest_booting(), None);
+        assert_eq!(c.cancel_costliest_booting(Millis(20)), Some(large_b));
+        c.cancel_costliest_booting(Millis(20));
+        assert_eq!(c.cancel_costliest_booting(Millis(20)), None);
     }
 
     #[test]
@@ -555,13 +654,17 @@ mod tests {
         let mut c = cloud(2);
         let a = c.request_vm(Millis(0)).unwrap();
         let b = c.request_vm(Millis(10)).unwrap();
-        assert_eq!(c.cancel_newest_booting(), Some(b), "newest request first");
+        assert_eq!(
+            c.cancel_newest_booting(Millis(10)),
+            Some(b),
+            "newest request first"
+        );
         assert_eq!(c.vm(b).unwrap().state, VmState::Terminated);
         assert!(matches!(c.vm(a).unwrap().state, VmState::Booting { .. }));
         // Quota slot freed; nothing to cancel once all boots are gone.
         assert!(c.request_vm(Millis(20)).is_ok());
-        c.cancel_newest_booting();
-        c.cancel_newest_booting();
-        assert_eq!(c.cancel_newest_booting(), None);
+        c.cancel_newest_booting(Millis(20));
+        c.cancel_newest_booting(Millis(20));
+        assert_eq!(c.cancel_newest_booting(Millis(20)), None);
     }
 }

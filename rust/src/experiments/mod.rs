@@ -105,6 +105,10 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
         "ablation-cost",
         "A5: single-flavor vs cost-aware flavor-mix autoscaling on the Xlarge/Large catalog",
     ),
+    (
+        "ablation-liveprofile",
+        "A6: mis-specified static RAM/net priors vs live multi-resource profiling",
+    ),
 ];
 
 /// Run one experiment (or "all") writing outputs under `out_dir`.
@@ -124,6 +128,7 @@ pub fn run(name: &str, out_dir: &str, seed: u64) -> Result<Vec<Report>> {
         "ablation-profiler" => vec![ablations::profiler(out, seed)?],
         "ablation-multidim" => vec![ablations::multidim(out, seed)?],
         "ablation-cost" => vec![ablations::cost(out, seed)?],
+        "ablation-liveprofile" => vec![ablations::liveprofile(out, seed)?],
         "all" => {
             let mut all = Vec::new();
             all.push(synthetic::run(out, seed, "fig3")?);
@@ -140,6 +145,7 @@ pub fn run(name: &str, out_dir: &str, seed: u64) -> Result<Vec<Report>> {
             all.push(ablations::profiler(out, seed)?);
             all.push(ablations::multidim(out, seed)?);
             all.push(ablations::cost(out, seed)?);
+            all.push(ablations::liveprofile(out, seed)?);
             all
         }
         other => bail!(

@@ -53,8 +53,9 @@ impl FlavorOption {
 
 /// Which resource model the bin-packing manager packs on.
 ///
-/// Under `Vector` the item is the full CPU/RAM/net vector (CPU from the
-/// live profiler, RAM/net from [`IrmConfig::image_resources`]), bins carry
+/// Under `Vector` the item is the full CPU/RAM/net vector — every
+/// dimension live-profiled from worker reports, with
+/// [`IrmConfig::image_resources`] as the cold-start prior — bins carry
 /// their VM flavor's capacity vector, and the rule is vector First-Fit
 /// (the paper's rule generalized — `PackerChoice` selects the scalar rule
 /// only). All quantities are in reference-VM units: `1.0` in a dimension
@@ -122,6 +123,14 @@ pub struct LoadPredictorConfig {
     pub increase_large: usize,
     /// Timeout after scheduling PEs before the predictor reads again.
     pub cooldown: Millis,
+    /// Optional cost-aware scale-up damper: when the cloud's measured
+    /// spend rate (USD/hour, derived from consecutive `cloud.cost_usd`
+    /// ledger samples) is at or above this ceiling, scale-up decisions
+    /// soften one notch — a large increase becomes a small one, a small
+    /// one becomes a hold. Scale-*down* is never damped, so a capped
+    /// budget can still drain. `None` (the default) disables the damper
+    /// entirely.
+    pub cost_ceiling_usd_per_hour: Option<f64>,
 }
 
 impl Default for LoadPredictorConfig {
@@ -135,6 +144,7 @@ impl Default for LoadPredictorConfig {
             increase_small: 2,
             increase_large: 8,
             cooldown: Millis::from_secs(6),
+            cost_ceiling_usd_per_hour: None,
         }
     }
 }
@@ -149,9 +159,13 @@ pub struct IrmConfig {
     /// CPU-only (the paper) or multi-dimensional vector packing.
     pub resource_model: ResourceModel,
     /// Per-image non-CPU demand profile (RAM/net, reference-VM units) for
-    /// the vector model — workload metadata, not profiled live (the CPU
-    /// component is ignored; the profiler owns it). Unlisted images demand
-    /// CPU only.
+    /// the vector model — the **cold-start prior** only: as soon as real
+    /// per-dimension measurements arrive in worker reports, the live
+    /// moving averages overwrite these values (the CPU component is
+    /// ignored; the profiler always owns it). Unlisted images start from
+    /// a zero RAM/net prior. A mis-specified entry therefore only hurts
+    /// during warm-up — the A6 ablation (`ablation-liveprofile`)
+    /// quantifies that window.
     pub image_resources: Vec<(ImageName, ResourceVec)>,
     /// Cost-aware heterogeneous provisioning: when non-empty, the
     /// autoscaler replaces the single planning flavor with a greedy

@@ -12,7 +12,6 @@
 use std::collections::VecDeque;
 
 use crate::binpacking::{Resource, ResourceVec};
-use crate::profiler::WorkerProfiler;
 use crate::types::{CpuFraction, ImageName, Millis};
 
 /// Where a hosting request came from.
@@ -112,13 +111,15 @@ impl ContainerQueue {
     }
 
     /// Periodic metric refresh (§V-B1/§V-B3: updated averages are
-    /// propagated to requests waiting in the queue). The profiler owns the
-    /// CPU dimension; RAM/net keep their enqueue-time profile.
-    pub fn refresh_estimates(&mut self, profiler: &WorkerProfiler) {
+    /// propagated to requests waiting in the queue). The estimator is the
+    /// IRM's live per-image resource estimate — every dimension of a
+    /// waiting request's item size tracks the profiler, not just CPU (a
+    /// request enqueued against a cold-start RAM prior re-sizes as soon
+    /// as real measurements arrive).
+    pub fn refresh_estimates_with(&mut self, estimate: impl Fn(&ImageName) -> ResourceVec) {
         for req in &mut self.queue {
-            req.estimate = profiler.estimate(&req.image);
-            req.estimate_vec
-                .set(Resource::Cpu, req.estimate.value());
+            req.estimate_vec = estimate(&req.image);
+            req.estimate = CpuFraction::new(req.estimate_vec.get(Resource::Cpu));
         }
     }
 
@@ -190,12 +191,15 @@ mod tests {
             worker: WorkerId(0),
             at: Millis(0),
             total_cpu: CpuFraction::new(0.5),
-            per_image: vec![(ImageName::new("img"), CpuFraction::new(0.5))],
+            per_image: vec![(ImageName::new("img"), ResourceVec::new(0.5, 0.3, 0.0))],
             pes: Vec::new(),
         });
-        q.refresh_estimates(&prof);
+        q.refresh_estimates_with(|img| prof.estimate_vec(img, &ResourceVec::ZERO));
         let req = q.drain().pop().unwrap();
         assert!((req.estimate.value() - 0.5).abs() < 1e-9);
+        // The non-CPU dimensions refresh too: the live RAM sample
+        // overwrote the zero enqueue-time profile.
+        assert!((req.estimate_vec.get(Resource::Ram) - 0.3).abs() < 1e-9);
     }
 
     #[test]

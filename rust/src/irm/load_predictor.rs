@@ -37,14 +37,23 @@ impl ScaleDecision {
     }
 }
 
-/// Periodic queue-pressure evaluator with post-action cooldown.
+/// Periodic queue-pressure evaluator with post-action cooldown and an
+/// optional cost-aware scale-up damper (see
+/// [`LoadPredictorConfig::cost_ceiling_usd_per_hour`]).
 pub struct LoadPredictor {
     cfg: LoadPredictorConfig,
     poll: Periodic,
     cooldown_until: Option<Millis>,
+    /// Last observed (time, cumulative spend) ledger sample.
+    last_cost: Option<(Millis, f64)>,
+    /// Measured spend rate in USD/hour from the last two distinct-time
+    /// ledger samples (0 until two samples exist).
+    spend_rate: f64,
     /// Lifetime decisions (observability).
     pub large_increases: u64,
     pub small_increases: u64,
+    /// Lifetime count of decisions softened by the cost damper.
+    pub cost_damped: u64,
 }
 
 impl LoadPredictor {
@@ -53,13 +62,45 @@ impl LoadPredictor {
             poll: Periodic::new(cfg.poll_interval),
             cfg,
             cooldown_until: None,
+            last_cost: None,
+            spend_rate: 0.0,
             large_increases: 0,
             small_increases: 0,
+            cost_damped: 0,
         }
     }
 
     pub fn config(&self) -> &LoadPredictorConfig {
         &self.cfg
+    }
+
+    /// Feed one `cloud.cost_usd` ledger sample. The spend rate is the
+    /// slope between consecutive distinct-time samples; call every
+    /// control cycle (cheap, and a no-op at the same timestamp). With no
+    /// ceiling configured this is pure bookkeeping.
+    pub fn observe_cost(&mut self, at: Millis, cost_usd: f64) {
+        match self.last_cost {
+            Some((t0, c0)) if at > t0 => {
+                let dh = (at - t0).as_secs_f64() / 3600.0;
+                self.spend_rate = ((cost_usd - c0) / dh).max(0.0);
+                self.last_cost = Some((at, cost_usd));
+            }
+            Some(_) => {}
+            None => self.last_cost = Some((at, cost_usd)),
+        }
+    }
+
+    /// The measured spend rate in USD/hour (observability).
+    pub fn spend_rate_usd_per_hour(&self) -> f64 {
+        self.spend_rate
+    }
+
+    /// Whether the cost damper is currently engaged.
+    fn over_cost_ceiling(&self) -> bool {
+        self.cfg
+            .cost_ceiling_usd_per_hour
+            .map(|ceiling| self.spend_rate >= ceiling)
+            .unwrap_or(false)
     }
 
     /// Whether the predictor wants a queue sample this tick.
@@ -85,7 +126,7 @@ impl LoadPredictor {
         //   2. q >= small AND roc >= small           → large increase
         //   3. q >= small (roc low)  — queue exists but stable → small
         //   4. roc >= small (queue short) — growth from idle    → small
-        let decision = if q >= c.queue_large || roc >= c.roc_large {
+        let mut decision = if q >= c.queue_large || roc >= c.roc_large {
             ScaleDecision::LargeIncrease(c.increase_large)
         } else if q >= c.queue_small && roc >= c.roc_small {
             ScaleDecision::LargeIncrease(c.increase_large)
@@ -96,6 +137,23 @@ impl LoadPredictor {
         } else {
             ScaleDecision::Hold
         };
+
+        // Cost-aware damper: over the spend ceiling every scale-up
+        // softens one notch (large → small → hold). Scale-down is never
+        // damped — a capped budget must still be allowed to drain.
+        if self.over_cost_ceiling() {
+            decision = match decision {
+                ScaleDecision::LargeIncrease(_) => {
+                    self.cost_damped += 1;
+                    ScaleDecision::SmallIncrease(c.increase_small)
+                }
+                ScaleDecision::SmallIncrease(_) => {
+                    self.cost_damped += 1;
+                    ScaleDecision::Hold
+                }
+                other => other,
+            };
+        }
 
         match decision {
             ScaleDecision::LargeIncrease(_) => {
@@ -219,5 +277,85 @@ mod tests {
     fn negative_roc_never_scales() {
         let mut p = LoadPredictor::new(cfg());
         assert_eq!(p.evaluate(metrics(0, 0, -3.0)), ScaleDecision::Hold);
+    }
+
+    fn capped_cfg(ceiling: f64) -> LoadPredictorConfig {
+        LoadPredictorConfig {
+            cost_ceiling_usd_per_hour: Some(ceiling),
+            ..cfg()
+        }
+    }
+
+    /// Two ledger samples an hour apart establishing `usd_per_hour`.
+    fn feed_rate(p: &mut LoadPredictor, usd_per_hour: f64) {
+        p.observe_cost(Millis(0), 0.0);
+        p.observe_cost(Millis::from_secs(3600), usd_per_hour);
+    }
+
+    #[test]
+    fn spend_rate_measured_from_ledger_slope() {
+        let mut p = LoadPredictor::new(cfg());
+        assert_eq!(p.spend_rate_usd_per_hour(), 0.0, "no samples yet");
+        p.observe_cost(Millis(0), 1.0);
+        assert_eq!(p.spend_rate_usd_per_hour(), 0.0, "one sample has no slope");
+        p.observe_cost(Millis::from_secs(1800), 1.25);
+        assert!((p.spend_rate_usd_per_hour() - 0.5).abs() < 1e-9);
+        // A same-timestamp re-observation is a no-op, not a divide-by-zero.
+        p.observe_cost(Millis::from_secs(1800), 99.0);
+        assert!((p.spend_rate_usd_per_hour() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn damper_off_by_default() {
+        let mut p = LoadPredictor::new(cfg());
+        feed_rate(&mut p, 1000.0); // absurd burn, but no ceiling configured
+        assert_eq!(
+            p.evaluate(metrics(0, 50, 0.0)),
+            ScaleDecision::LargeIncrease(8),
+            "no ceiling -> no damping"
+        );
+        assert_eq!(p.cost_damped, 0);
+    }
+
+    #[test]
+    fn over_ceiling_softens_large_to_small() {
+        let mut p = LoadPredictor::new(capped_cfg(1.0));
+        feed_rate(&mut p, 2.0);
+        assert_eq!(
+            p.evaluate(metrics(0, 50, 0.0)),
+            ScaleDecision::SmallIncrease(2)
+        );
+        assert_eq!(p.cost_damped, 1);
+        assert_eq!(p.small_increases, 1, "counted as the softened outcome");
+        assert_eq!(p.large_increases, 0);
+    }
+
+    #[test]
+    fn over_ceiling_softens_small_to_hold() {
+        let mut p = LoadPredictor::new(capped_cfg(1.0));
+        feed_rate(&mut p, 2.0);
+        assert_eq!(p.evaluate(metrics(0, 5, 0.0)), ScaleDecision::Hold);
+        assert_eq!(p.cost_damped, 1);
+        // Hold starts no cooldown: the predictor keeps watching.
+        assert!(p.wants_sample(Millis::from_secs(3601)));
+    }
+
+    #[test]
+    fn under_ceiling_never_damps() {
+        let mut p = LoadPredictor::new(capped_cfg(1.0));
+        feed_rate(&mut p, 0.5);
+        assert_eq!(
+            p.evaluate(metrics(0, 50, 0.0)),
+            ScaleDecision::LargeIncrease(8)
+        );
+        assert_eq!(p.cost_damped, 0);
+    }
+
+    #[test]
+    fn damper_never_blocks_hold_or_drain() {
+        let mut p = LoadPredictor::new(capped_cfg(0.1));
+        feed_rate(&mut p, 5.0);
+        // No pressure stays Hold (not inflated, not inverted).
+        assert_eq!(p.evaluate(metrics(0, 0, 0.0)), ScaleDecision::Hold);
     }
 }

@@ -23,11 +23,11 @@ pub mod config;
 pub mod container_queue;
 pub mod load_predictor;
 
-use crate::binpacking::{Resource, ResourceVec};
+use crate::binpacking::ResourceVec;
 use crate::clock::Periodic;
 use crate::cloud::Flavor;
 use crate::master::Master;
-use crate::profiler::{ProfilerConfig, WorkerProfiler};
+use crate::profiler::{ProfilerConfig, ResourceProfiler};
 use crate::protocol::WorkerReport;
 use crate::types::{CpuFraction, ImageName, Millis, WorkerId};
 
@@ -52,6 +52,10 @@ pub struct ClusterView {
     pub capacities: Vec<ResourceVec>,
     /// VMs requested but still provisioning.
     pub booting_vms: usize,
+    /// The cloud's accrued spend in USD (the `cloud.cost_usd` ledger) —
+    /// input to the load predictor's optional cost-aware scale-up damper.
+    /// Harnesses without a cost model leave it 0.
+    pub cost_usd: f64,
 }
 
 /// Commands and telemetry produced by one control cycle.
@@ -96,7 +100,7 @@ pub struct Irm {
     pub allocator: Allocator,
     pub predictor: LoadPredictor,
     pub scaler: AutoScaler,
-    pub profiler: WorkerProfiler,
+    pub profiler: ResourceProfiler,
     /// Cost-aware flavor choice (present iff the config carries a
     /// catalog).
     flavor_planner: Option<FlavorPlanner>,
@@ -124,7 +128,7 @@ impl Irm {
             allocator: Allocator::with_model(cfg.packer, cfg.resource_model),
             predictor: LoadPredictor::new(cfg.load_predictor),
             scaler: AutoScaler::new(cfg.buffer_policy, cfg.worker_drain_grace),
-            profiler: WorkerProfiler::new(ProfilerConfig {
+            profiler: ResourceProfiler::new(ProfilerConfig {
                 window: cfg.profiler_window,
                 default_estimate: cfg.default_estimate,
                 ..ProfilerConfig::default()
@@ -155,19 +159,24 @@ impl Irm {
             .push_vec(image, est, self.cfg.request_ttl, RequestOrigin::Manual, now);
     }
 
-    /// Full resource-vector estimate for an image: CPU from the live
-    /// profiler, RAM/net from the configured per-image profile (workload
-    /// metadata; zero when unlisted).
+    /// Full resource-vector estimate for an image, every dimension live:
+    /// CPU from the profiler as always; RAM/net from the profiler's
+    /// per-dimension moving averages wherever real measurements exist,
+    /// falling back to the configured per-image profile
+    /// (`IrmConfig::image_resources`) — a cold-start prior the first live
+    /// samples overwrite — and to zero when unlisted.
     pub fn resource_estimate(&self, image: &ImageName) -> ResourceVec {
-        let mut vec = self
-            .cfg
-            .image_resources
+        let prior = Self::prior_for(&self.cfg.image_resources, image);
+        self.profiler.estimate_vec(image, &prior)
+    }
+
+    /// The configured cold-start prior for an image (zero when unlisted).
+    fn prior_for(image_resources: &[(ImageName, ResourceVec)], image: &ImageName) -> ResourceVec {
+        image_resources
             .iter()
             .find(|(img, _)| img == image)
             .map(|(_, r)| *r)
-            .unwrap_or(ResourceVec::ZERO);
-        vec.set(Resource::Cpu, self.profiler.estimate(image).value());
-        vec
+            .unwrap_or(ResourceVec::ZERO)
     }
 
     /// Latest scheduled view (continuous between packing runs).
@@ -199,6 +208,11 @@ impl Irm {
     ) -> IrmUpdate {
         let mut update = IrmUpdate::default();
 
+        // --- 0. Cost feedback: the predictor tracks the cloud's spend
+        // rate so the optional cost-aware damper can soften scale-ups
+        // (inert unless `cost_ceiling_usd_per_hour` is configured). ---
+        self.predictor.observe_cost(now, view.cost_usd);
+
         // --- 1. Load predictor: queue pressure → PE hosting requests. ---
         if self.predictor.wants_sample(now) {
             let metrics = master.sample_queue(now);
@@ -212,7 +226,14 @@ impl Irm {
 
         // --- 2. Bin-packing run over the waiting requests. ---
         if self.binpack_timer.fire(now) {
-            self.queue.refresh_estimates(&self.profiler);
+            // Refresh every waiting request's full vector estimate from
+            // the live profiler (field-disjoint borrows: the closure
+            // reads the profiler + config while the queue mutates).
+            let profiler = &self.profiler;
+            let image_resources = &self.cfg.image_resources;
+            self.queue.refresh_estimates_with(|img| {
+                profiler.estimate_vec(img, &Self::prior_for(image_resources, img))
+            });
             let requests = self.queue.drain();
             self.bins_buf.clear();
             for (i, (id, images)) in view.workers.iter().enumerate() {
@@ -322,6 +343,7 @@ impl Irm {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::binpacking::Resource;
     use crate::connector::LocalConnector;
 
     fn view(workers: &[(u64, &[&str])], booting: usize) -> ClusterView {
@@ -337,6 +359,7 @@ mod tests {
                 .collect(),
             capacities: Vec::new(),
             booting_vms: booting,
+            cost_usd: 0.0,
         }
     }
 
@@ -420,7 +443,7 @@ mod tests {
                 worker: WorkerId(0),
                 at: Millis(0),
                 total_cpu: CpuFraction::new(0.5),
-                per_image: vec![(ImageName::new("img"), CpuFraction::new(0.5))],
+                per_image: vec![(ImageName::new("img"), ResourceVec::cpu(0.5))],
                 pes: vec![],
             });
         }
@@ -521,6 +544,68 @@ mod tests {
         assert!(
             (irm.scheduled_vec_view()[0].1.get(Resource::Ram) - 0.4).abs() < 1e-9
         );
+    }
+
+    #[test]
+    fn live_ram_profile_overrides_static_prior() {
+        // The configured profile says 0.1 RAM but live measurements say
+        // 0.4: the packer must size items at the live value (2 fit a unit
+        // worker), not the stale prior (which would cram in far more).
+        let mut cfg = fast_cfg();
+        cfg.resource_model = ResourceModel::Vector {
+            new_vm_capacity: ResourceVec::UNIT,
+        };
+        cfg.image_resources = vec![(ImageName::new("img"), ResourceVec::new(0.0, 0.1, 0.02))];
+        cfg.default_estimate = CpuFraction::new(0.1);
+        let mut irm = Irm::new(cfg);
+        for _ in 0..10 {
+            irm.ingest_report(&WorkerReport {
+                worker: WorkerId(0),
+                at: Millis(0),
+                total_cpu: CpuFraction::new(0.1),
+                per_image: vec![(ImageName::new("img"), ResourceVec::new(0.1, 0.4, 0.02))],
+                pes: vec![],
+            });
+        }
+        let est = irm.resource_estimate(&ImageName::new("img"));
+        assert!((est.get(Resource::Ram) - 0.4).abs() < 1e-9, "live overwrites prior");
+        let mut master = Master::new();
+        flood_backlog(&mut master, "img", 50);
+        irm.control_cycle(Millis(0), &mut master, &view(&[], 0));
+        let update = irm.control_cycle(Millis(1000), &mut master, &view(&[(0, &[])], 0));
+        assert_eq!(update.start_pes.len(), 2, "0.4 live RAM: two per unit worker");
+    }
+
+    #[test]
+    fn queued_requests_resize_when_profiles_arrive() {
+        // Requests enqueued against the cold-start prior must re-size on
+        // the next packing run once live RAM samples arrive.
+        let mut cfg = fast_cfg();
+        cfg.resource_model = ResourceModel::Vector {
+            new_vm_capacity: ResourceVec::UNIT,
+        };
+        cfg.image_resources = vec![(ImageName::new("img"), ResourceVec::new(0.0, 0.05, 0.0))];
+        cfg.default_estimate = CpuFraction::new(0.1);
+        let mut irm = Irm::new(cfg);
+        let mut master = Master::new();
+        flood_backlog(&mut master, "img", 50);
+        // Cycle 1 enqueues requests sized by the 0.05-RAM prior.
+        irm.control_cycle(Millis(0), &mut master, &view(&[], 0));
+        assert!(!irm.queue.is_empty());
+        // Live profile arrives before the next packing run.
+        for _ in 0..10 {
+            irm.ingest_report(&WorkerReport {
+                worker: WorkerId(0),
+                at: Millis(500),
+                total_cpu: CpuFraction::new(0.1),
+                per_image: vec![(ImageName::new("img"), ResourceVec::new(0.1, 0.45, 0.0))],
+                pes: vec![],
+            });
+        }
+        let update = irm.control_cycle(Millis(1000), &mut master, &view(&[(0, &[])], 0));
+        // At the refreshed 0.45-RAM size only two requests fit the one
+        // unit worker (the prior would have packed far more).
+        assert_eq!(update.start_pes.len(), 2, "refreshed RAM bounds placements");
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! data"; worker nodes "report to the Master node". These types carry that
 //! same information, with JSON (de)serialization for the TCP mode.
 
+use crate::binpacking::{Resource, ResourceVec};
 use crate::types::{CpuFraction, ImageName, MessageId, Millis, PeId, StreamMessage, WorkerId};
 use crate::util::json::Json;
 
@@ -58,15 +59,19 @@ pub struct PeStatus {
 }
 
 /// Periodic report each worker sends to the master (the worker half of the
-/// paper's worker profiler, §V-B3).
+/// paper's worker profiler, §V-B3 — extended to the full resource vector).
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkerReport {
     pub worker: WorkerId,
     pub at: Millis,
     /// Total measured CPU over the interval (0..1 of the whole VM).
     pub total_cpu: CpuFraction,
-    /// Average CPU per container image across that image's PEs.
-    pub per_image: Vec<(ImageName, CpuFraction)>,
+    /// Average measured usage per container image across that image's
+    /// PEs: CPU as a fraction of this worker, RAM/net in reference-VM
+    /// units. CPU-only deployments simply report zero RAM/net (the
+    /// master-side profiler filters them below its per-dimension busy
+    /// floors).
+    pub per_image: Vec<(ImageName, ResourceVec)>,
     pub pes: Vec<PeStatus>,
 }
 
@@ -131,10 +136,12 @@ impl WorkerReport {
             ("total_cpu", Json::num(self.total_cpu.value())),
             (
                 "per_image",
-                Json::arr(self.per_image.iter().map(|(img, cpu)| {
+                Json::arr(self.per_image.iter().map(|(img, usage)| {
                     Json::obj([
                         ("image", Json::str(img.as_str())),
-                        ("cpu", Json::num(cpu.value())),
+                        ("cpu", Json::num(usage.get(Resource::Cpu))),
+                        ("ram", Json::num(usage.get(Resource::Ram))),
+                        ("net", Json::num(usage.get(Resource::Net))),
                     ])
                 })),
             ),
@@ -148,9 +155,18 @@ impl WorkerReport {
             .as_arr()?
             .iter()
             .map(|e| {
+                // RAM/net are optional on the wire: reports from CPU-only
+                // peers (the pre-vector protocol) parse as zero-RAM/net.
+                // A key that is *present* must be numeric, though — a
+                // malformed value rejects the report like a malformed cpu
+                // would, instead of silently reading as "no demand".
+                let dim = |key: &str| match e.get(key) {
+                    None => Some(0.0),
+                    Some(j) => j.as_f64(),
+                };
                 Some((
                     ImageName::new(e.get("image")?.as_str()?),
-                    CpuFraction::new(e.get("cpu")?.as_f64()?),
+                    ResourceVec::new(e.get("cpu")?.as_f64()?, dim("ram")?, dim("net")?),
                 ))
             })
             .collect::<Option<Vec<_>>>()?;
@@ -202,8 +218,11 @@ mod tests {
             at: Millis(5000),
             total_cpu: CpuFraction::new(0.62),
             per_image: vec![
-                (ImageName::new("cellprofiler"), CpuFraction::new(0.12)),
-                (ImageName::new("busy"), CpuFraction::new(0.25)),
+                (
+                    ImageName::new("cellprofiler"),
+                    ResourceVec::new(0.12, 0.25, 0.04),
+                ),
+                (ImageName::new("busy"), ResourceVec::cpu(0.25)),
             ],
             pes: vec![
                 PeStatus {
@@ -271,6 +290,36 @@ mod tests {
     #[test]
     fn from_json_rejects_missing_fields() {
         let j = Json::parse(r#"{"worker": 1}"#).unwrap();
+        assert!(WorkerReport::from_json(&j).is_none());
+    }
+
+    #[test]
+    fn per_image_parses_legacy_cpu_only_entries() {
+        // A report from a pre-vector peer carries no ram/net keys: it must
+        // parse as zero RAM/net, not be rejected.
+        let j = Json::parse(
+            r#"{"worker": 1, "at": 0, "total_cpu": 0.5,
+                "per_image": [{"image": "img", "cpu": 0.25}], "pes": []}"#,
+        )
+        .unwrap();
+        let r = WorkerReport::from_json(&j).expect("legacy entry parses");
+        let (img, usage) = &r.per_image[0];
+        assert_eq!(img.as_str(), "img");
+        assert_eq!(usage.get(Resource::Cpu), 0.25);
+        assert_eq!(usage.get(Resource::Ram), 0.0);
+        assert_eq!(usage.get(Resource::Net), 0.0);
+    }
+
+    #[test]
+    fn per_image_rejects_malformed_present_dimensions() {
+        // Absent ram/net keys are the legacy protocol; a *present* but
+        // non-numeric value is corruption and must reject the report —
+        // reading it as 0 would silently pin the image to its prior.
+        let j = Json::parse(
+            r#"{"worker": 1, "at": 0, "total_cpu": 0.5,
+                "per_image": [{"image": "img", "cpu": 0.25, "ram": "oops"}], "pes": []}"#,
+        )
+        .unwrap();
         assert!(WorkerReport::from_json(&j).is_none());
     }
 }

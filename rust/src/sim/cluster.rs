@@ -22,7 +22,7 @@ use crate::metrics::Recorder;
 use crate::protocol::RouteDecision;
 use crate::sim::EventQueue;
 use crate::types::{CpuFraction, ImageName, MessageId, Millis, VmId, WorkerId};
-use crate::worker::{Worker, WorkerConfig, WorkerEvent};
+use crate::worker::{ProcessingEngine, Worker, WorkerConfig, WorkerEvent};
 
 /// Full cluster configuration.
 #[derive(Clone)]
@@ -33,6 +33,12 @@ pub struct ClusterConfig {
     /// Busy CPU demand per image (fraction of the whole VM). Unlisted
     /// images default to one core (1/cores).
     pub image_demand: Vec<(ImageName, CpuFraction)>,
+    /// Ground-truth non-CPU usage per image (RAM/net a busy PE actually
+    /// holds, reference-VM units) — what the workers *measure* and report,
+    /// independent of whatever prior the IRM was configured with
+    /// (`IrmConfig::image_resources`). Mis-matching the two on purpose is
+    /// exactly the A6 ablation. Unlisted images hold nothing.
+    pub image_resource_usage: Vec<(ImageName, ResourceVec)>,
     /// Simulation step.
     pub dt: Millis,
     pub seed: u64,
@@ -47,6 +53,7 @@ impl Default for ClusterConfig {
             worker: WorkerConfig::default(),
             cloud: CloudConfig::default(),
             image_demand: Vec::new(),
+            image_resource_usage: Vec::new(),
             dt: Millis(100),
             seed: 42,
             sample_interval: Millis::from_secs(1),
@@ -76,6 +83,13 @@ struct SlotSeries {
     measured: String,
     scheduled: String,
     error_pp: String,
+}
+
+/// Cached per-image profiler series names (`profile.<image>.<dim>`),
+/// built once for the images the IRM carries priors for.
+struct ProfileSeries {
+    image: ImageName,
+    dims: [String; 3],
 }
 
 /// The simulated cluster.
@@ -114,10 +128,26 @@ pub struct SimCluster {
     worker_events: Vec<(WorkerId, WorkerEvent)>,
     event_scratch: Vec<WorkerEvent>,
     slot_series: Vec<SlotSeries>,
+    profile_series: Vec<ProfileSeries>,
 }
 
 impl SimCluster {
     pub fn new(cfg: ClusterConfig) -> Self {
+        // `profile.<image>.<dim>` series names, one set per image the IRM
+        // carries a resource prior for — formatted once, not per sample.
+        let profile_series = cfg
+            .irm
+            .image_resources
+            .iter()
+            .map(|(img, _)| ProfileSeries {
+                image: img.clone(),
+                dims: [
+                    format!("profile.{img}.cpu"),
+                    format!("profile.{img}.ram"),
+                    format!("profile.{img}.net"),
+                ],
+            })
+            .collect();
         SimCluster {
             master: Master::new(),
             irm: Irm::new(cfg.irm.clone()),
@@ -139,6 +169,7 @@ impl SimCluster {
             worker_events: Vec::new(),
             event_scratch: Vec::new(),
             slot_series: Vec::new(),
+            profile_series,
             cfg,
         }
     }
@@ -171,6 +202,17 @@ impl SimCluster {
             .find(|(img, _)| img == image)
             .map(|(_, d)| *d)
             .unwrap_or(CpuFraction::new(1.0 / self.cfg.worker.cores as f64))
+    }
+
+    /// Ground-truth RAM/net a busy PE of this image holds (config lookup,
+    /// reference-VM units; zero when unlisted — the CPU-only workloads).
+    fn usage_for(&self, image: &ImageName) -> ResourceVec {
+        self.cfg
+            .image_resource_usage
+            .iter()
+            .find(|(img, _)| img == image)
+            .map(|(_, u)| *u)
+            .unwrap_or(ResourceVec::ZERO)
     }
 
     /// How long a container start at `now` must wait for the image to be
@@ -308,7 +350,10 @@ impl SimCluster {
                     // homogeneous (unit-flavor) path the two coincide and
                     // the report is forwarded as-is; a smaller flavor's
                     // report is rescaled first (heterogeneous runs only —
-                    // the steady-state tick stays allocation-free).
+                    // the steady-state tick stays allocation-free). The
+                    // RAM/net components are already in reference units
+                    // (the PE's footprint is flavor-independent), so only
+                    // the CPU component rescales.
                     let cpu_cap = self
                         .worker_capacity
                         .get(&wid)
@@ -318,8 +363,9 @@ impl SimCluster {
                     if (cpu_cap - 1.0).abs() > 1e-9 {
                         let mut scaled = report.clone();
                         scaled.total_cpu = CpuFraction::new(report.total_cpu.value() * cpu_cap);
-                        for (_, v) in &mut scaled.per_image {
-                            *v = CpuFraction::new(v.value() * cpu_cap);
+                        for (_, usage) in &mut scaled.per_image {
+                            let cpu = usage.get(Resource::Cpu) * cpu_cap;
+                            usage.set(Resource::Cpu, cpu);
                         }
                         self.irm.ingest_report(&scaled);
                     } else {
@@ -380,11 +426,15 @@ impl SimCluster {
                 .get(Resource::Cpu)
                 .max(1e-6);
             let local_demand = CpuFraction::new(demand.value() / cpu_cap);
+            // Ground-truth RAM/net footprint (reference units) — what the
+            // worker will measure and report for live profiling.
+            let aux = self.usage_for(&alloc.request.image);
             let pull = self.pull_wait(alloc.worker, &alloc.request.image, now);
             if let Some(pos) = self.worker_pos(alloc.worker) {
-                self.workers[pos].start_pe_with_pull(
+                self.workers[pos].start_pe_full(
                     alloc.request.image.clone(),
                     local_demand,
+                    aux,
                     now,
                     pull,
                 );
@@ -409,7 +459,7 @@ impl SimCluster {
             // Scale-thrash valve: a transient over-supply absorbs the
             // boots it caused instead of terminating live workers —
             // costliest boot first, so every cancellation saves the most.
-            if self.cloud.cancel_costliest_booting().is_none() {
+            if self.cloud.cancel_costliest_booting(now).is_none() {
                 break;
             }
         }
@@ -418,7 +468,7 @@ impl SimCluster {
                 let w = self.workers.remove(pos);
                 debug_assert_eq!(w.pe_count(), 0, "terminating a non-empty worker");
                 if let Some(vm) = self.vm_of_worker.remove(&wid) {
-                    self.cloud.terminate_vm(vm);
+                    self.cloud.terminate_vm(vm, now);
                 }
                 self.worker_capacity.remove(&wid);
                 self.master.registry_mut().remove(wid);
@@ -464,6 +514,30 @@ impl SimCluster {
             self.view.capacities.push(cap);
         }
         self.view.booting_vms = self.cloud.booting_vms().len();
+        self.view.cost_usd = self.cloud.cost_usd();
+    }
+
+    /// Worst per-worker RAM overcommit in reference units for a per-PE
+    /// RAM size function — the one aggregation behind both overcommit
+    /// series (`ram.overcommit_pp` at the packer's estimates,
+    /// `ram.overcommit_actual_pp` at ground-truth footprints). Sharing
+    /// the sweep makes the A6 comparison structural: the two series can
+    /// only ever differ in the size source, never in which PEs or
+    /// capacities they count.
+    fn worst_ram_overcommit(&self, ram_of: impl Fn(&ProcessingEngine) -> f64) -> f64 {
+        self.workers
+            .iter()
+            .map(|w| {
+                let cap = self.flavor_capacity_of(w.id).get(Resource::Ram);
+                let held: f64 = w
+                    .pes()
+                    .iter()
+                    .filter(|p| p.state() != crate::protocol::PeState::Stopping)
+                    .map(&ram_of)
+                    .sum();
+                held - cap
+            })
+            .fold(0.0f64, f64::max)
     }
 
     fn sample(&mut self, now: Millis) {
@@ -519,21 +593,35 @@ impl SimCluster {
         // be pure hot-path waste recording a constant.
         if !self.cfg.irm.image_resources.is_empty() {
             let ram_overcommit = self
-                .workers
-                .iter()
-                .map(|w| {
-                    let cap = self.flavor_capacity_of(w.id).get(Resource::Ram);
-                    let scheduled: f64 = w
-                        .pes()
-                        .iter()
-                        .filter(|p| p.state() != crate::protocol::PeState::Stopping)
-                        .map(|p| self.irm.resource_estimate(&p.image).get(Resource::Ram))
-                        .sum();
-                    scheduled - cap
-                })
-                .fold(0.0f64, f64::max);
+                .worst_ram_overcommit(|p| self.irm.resource_estimate(&p.image).get(Resource::Ram));
             self.recorder
                 .record("ram.overcommit_pp", now, ram_overcommit * 100.0);
+        }
+        // The same aggregation at ground-truth sizes: the *committed*
+        // footprint — what the hosted (non-stopping) PEs pin whenever
+        // they run, regardless of their instantaneous phase — against
+        // the flavor's RAM. Under a backlog every hosted PE cycles busy,
+        // so a positive value here is real memory pressure, not an idle
+        // artifact; the gap to the series above is what a mis-specified
+        // static prior costs, and what live profiling (A6) closes. Only
+        // aggregated when the workload carries ground-truth profiles.
+        if !self.cfg.image_resource_usage.is_empty() {
+            let actual_overcommit =
+                self.worst_ram_overcommit(|p| p.busy_aux.get(Resource::Ram));
+            self.recorder
+                .record("ram.overcommit_actual_pp", now, actual_overcommit * 100.0);
+        }
+        // Live profiler estimates per prior-carrying image — the
+        // convergence series the A6 ablation reads (`profile.<image>.<dim>`
+        // tracks prior → live takeover per dimension).
+        for ps in &self.profile_series {
+            let est = self.irm.resource_estimate(&ps.image);
+            self.recorder
+                .record(&ps.dims[0], now, est.get(Resource::Cpu));
+            self.recorder
+                .record(&ps.dims[1], now, est.get(Resource::Ram));
+            self.recorder
+                .record(&ps.dims[2], now, est.get(Resource::Net));
         }
         self.recorder
             .record("queue.len", now, self.master.backlog_len() as f64);
@@ -579,7 +667,7 @@ impl SimCluster {
             }
         }
         if let Some(vm) = self.vm_of_worker.remove(&id) {
-            self.cloud.terminate_vm(vm);
+            self.cloud.terminate_vm(vm, self.now);
         }
         self.worker_capacity.remove(&id);
         self.master.registry_mut().remove(id);
@@ -847,6 +935,57 @@ mod tests {
         // overcommit series stays at or below zero the whole run.
         let worst = c.recorder.get("ram.overcommit_pp").unwrap().max();
         assert!(worst <= 1e-6, "RAM overcommitted by {worst} pp");
+    }
+
+    #[test]
+    fn live_profiling_converges_to_ground_truth_ram() {
+        use crate::irm::ResourceModel;
+        // The IRM is configured with a wrong cold-start prior (0.05 RAM)
+        // while the workload really pins 0.3: live reports must overwrite
+        // the prior and the convergence/overcommit series must exist.
+        let img = ImageName::new("img");
+        let mut cfg = ClusterConfig {
+            cloud: CloudConfig {
+                quota: 4,
+                boot_delay: Millis::from_secs(5),
+                boot_jitter: Millis(1000),
+                ..CloudConfig::default()
+            },
+            worker: WorkerConfig {
+                container_boot: Millis(2000),
+                container_boot_jitter: Millis(500),
+                container_idle_timeout: Millis::from_secs(5),
+                measure_noise_std: 0.0,
+                ..WorkerConfig::default()
+            },
+            ..ClusterConfig::default()
+        };
+        cfg.irm.resource_model = ResourceModel::Vector {
+            new_vm_capacity: ResourceVec::UNIT,
+        };
+        cfg.irm.image_resources = vec![(img.clone(), ResourceVec::new(0.0, 0.05, 0.0))];
+        cfg.image_resource_usage = vec![(img.clone(), ResourceVec::new(0.0, 0.3, 0.05))];
+        let mut c = SimCluster::new(cfg);
+        burst(&mut c, 30, Millis(0), Millis::from_secs(10));
+        c.run_to_completion(30, Millis::from_secs(1800))
+            .expect("completes");
+        let est = c.irm.resource_estimate(&img);
+        assert!(
+            (est.get(Resource::Ram) - 0.3).abs() <= 0.03,
+            "live RAM estimate {} should track the 0.3 truth, not the 0.05 prior",
+            est.get(Resource::Ram)
+        );
+        // The convergence series start at the prior and end near truth.
+        let ram_series = c
+            .recorder
+            .get("profile.img.ram")
+            .expect("profile series recorded");
+        assert!((ram_series.points.first().unwrap().1 - 0.05).abs() < 1e-9);
+        assert!((ram_series.points.last().unwrap().1 - 0.3).abs() <= 0.03);
+        assert!(
+            c.recorder.get("ram.overcommit_actual_pp").is_some(),
+            "actual-overcommit series recorded when ground truth is configured"
+        );
     }
 
     #[test]

@@ -12,6 +12,7 @@ pub mod agent;
 pub mod live;
 pub mod pe;
 
+use crate::binpacking::{Resource, ResourceVec};
 use crate::clock::Periodic;
 use crate::protocol::{PeStatus, WorkerReport};
 use crate::types::{CpuFraction, IdGen, ImageName, Millis, PeId, StreamMessage, VmId, WorkerId};
@@ -43,6 +44,11 @@ pub struct WorkerConfig {
     pub idle_cpu: CpuFraction,
     /// Std-dev of OS measurement noise on total CPU (0 disables).
     pub measure_noise_std: f64,
+    /// Relative std-dev of measurement noise on the non-CPU dimensions of
+    /// the per-image report (RAM/net; 0 disables). Only drawn for images
+    /// whose PEs actually hold RAM/net, so CPU-only deployments keep a
+    /// byte-identical rng stream.
+    pub resource_noise_std: f64,
     /// VM cores (capacity is normalized to 1.0 = all cores).
     pub cores: u32,
 }
@@ -58,6 +64,7 @@ impl Default for WorkerConfig {
             report_interval: Millis::from_secs(1),
             idle_cpu: CpuFraction::new(0.004),
             measure_noise_std: 0.01,
+            resource_noise_std: 0.02,
             cores: 8,
         }
     }
@@ -129,6 +136,21 @@ impl Worker {
         now: Millis,
         extra_boot: Millis,
     ) -> PeId {
+        self.start_pe_full(image, busy_demand, ResourceVec::ZERO, now, extra_boot)
+    }
+
+    /// Start a new PE with a full resource footprint: `busy_demand` is
+    /// CPU normalized to this worker; `busy_aux` is the RAM/net the PE
+    /// holds while busy, in reference-VM units (what the periodic report
+    /// carries so the master can profile the full vector live).
+    pub fn start_pe_full(
+        &mut self,
+        image: ImageName,
+        busy_demand: CpuFraction,
+        busy_aux: ResourceVec,
+        now: Millis,
+        extra_boot: Millis,
+    ) -> PeId {
         let jitter = if self.cfg.container_boot_jitter.0 == 0 {
             Millis::ZERO
         } else {
@@ -141,10 +163,11 @@ impl Worker {
             + jitter
             + extra_boot;
         let id = PeId(self.pe_ids.next_id() | (self.id.0 << 32));
-        self.pes.push(ProcessingEngine::new(
+        self.pes.push(ProcessingEngine::with_aux(
             id,
             image,
             busy_demand,
+            busy_aux,
             self.cfg.idle_cpu,
             now,
             boot,
@@ -328,6 +351,10 @@ impl Worker {
 
     /// Build the report from busy-time-averaged CPU per PE.
     fn report(&mut self, now: Millis) -> WorkerReport {
+        // Worker-side busy heuristic: a PE whose interval-averaged CPU
+        // sits below this is treated as idle for the per-image pool (the
+        // master-side profiler has its own, configurable floors).
+        const BUSY_CPU: f64 = 0.02;
         let avg_for = |id: PeId, fallback: f64| -> f64 {
             self.acc_cpu_ms
                 .iter()
@@ -346,28 +373,61 @@ impl Worker {
             })
             .collect();
 
-        // Per-image average over that image's PEs (the paper's §V-B3). The
-        // busy-demand estimate only makes sense over PEs that actually
-        // worked in the interval; all-idle intervals report the raw mean
-        // (which the master-side profiler filters below its busy floor).
+        // Per-image average over that image's PEs (the paper's §V-B3,
+        // extended to the full resource vector). The busy-demand estimate
+        // only makes sense over PEs that actually worked in the interval;
+        // all-idle intervals report the raw mean (which the master-side
+        // profiler filters below its per-dimension busy floors).
         let mut images: Vec<ImageName> = self.pes.iter().map(|p| p.image.clone()).collect();
         images.sort();
         images.dedup();
-        let per_image = images
-            .into_iter()
-            .map(|img| {
-                let vals: Vec<f64> = self
-                    .pes
-                    .iter()
-                    .filter(|p| p.image == img)
-                    .map(|p| avg_for(p.id, p.granted.value()))
-                    .collect();
-                let busy: Vec<f64> = vals.iter().copied().filter(|v| *v > 0.02).collect();
-                let pool = if busy.is_empty() { &vals } else { &busy };
-                let mean = pool.iter().sum::<f64>() / pool.len().max(1) as f64;
-                (img, CpuFraction::new(mean))
-            })
-            .collect();
+        let mut per_image = Vec::with_capacity(images.len());
+        for img in images {
+            let vals: Vec<(f64, ResourceVec)> = self
+                .pes
+                .iter()
+                .filter(|p| p.image == img)
+                .map(|p| {
+                    // Busy-time-averaged footprint, mirroring the CPU
+                    // average: a PE that worked this interval held its
+                    // busy footprint while doing so — sampling the phase
+                    // it happens to be in at the report instant would
+                    // dilute the estimate whenever a job completes just
+                    // before the report fires. Only busy-pool entries
+                    // are ever read below, so the footprint is always
+                    // `busy_aux`.
+                    (avg_for(p.id, p.granted.value()), p.busy_aux)
+                })
+                .collect();
+            let busy: Vec<(f64, ResourceVec)> =
+                vals.iter().copied().filter(|(v, _)| *v > BUSY_CPU).collect();
+            let pool = if busy.is_empty() { &vals } else { &busy };
+            let n = pool.len().max(1) as f64;
+            let cpu = pool.iter().map(|(v, _)| *v).sum::<f64>() / n;
+            // RAM/net come from the busy pool only: the all-idle fallback
+            // exists so the CPU series stays observable, but an idle
+            // interval has no busy *footprint* to report — averaging the
+            // idle/stopping leftovers in would emit diluted samples that
+            // pass the master's RAM floor and drag the busy estimate
+            // below truth.
+            let nb = busy.len().max(1) as f64;
+            let mut ram = busy.iter().map(|(_, a)| a.get(Resource::Ram)).sum::<f64>() / nb;
+            let mut net = busy.iter().map(|(_, a)| a.get(Resource::Net)).sum::<f64>() / nb;
+            // Measurement noise on the non-CPU dimensions — drawn only
+            // when there is something to measure, so CPU-only runs keep
+            // a byte-identical rng stream.
+            if self.cfg.resource_noise_std > 0.0 {
+                if ram > 0.0 {
+                    let f = 1.0 + self.rng.normal_with(0.0, self.cfg.resource_noise_std);
+                    ram = (ram * f).max(0.0);
+                }
+                if net > 0.0 {
+                    let f = 1.0 + self.rng.normal_with(0.0, self.cfg.resource_noise_std);
+                    net = (net * f).max(0.0);
+                }
+            }
+            per_image.push((img, ResourceVec::new(cpu, ram, net)));
+        }
 
         WorkerReport {
             worker: self.id,
@@ -394,6 +454,7 @@ mod tests {
             report_interval: Millis::from_secs(1),
             idle_cpu: CpuFraction::new(0.0),
             measure_noise_std: 0.0,
+            resource_noise_std: 0.0,
             cores: 8,
         }
     }
@@ -528,9 +589,74 @@ mod tests {
             .collect();
         assert!(reports.len() >= 2);
         let last = reports.last().unwrap();
-        let (rimg, cpu) = &last.per_image[0];
+        let (rimg, usage) = &last.per_image[0];
         assert_eq!(rimg, &img);
-        assert!((cpu.value() - 0.25).abs() < 0.02, "avg {}", cpu.value());
+        let cpu = usage.get(Resource::Cpu);
+        assert!((cpu - 0.25).abs() < 0.02, "avg {cpu}");
+        // A CPU-only PE reports zero RAM/net.
+        assert_eq!(usage.get(Resource::Ram), 0.0);
+        assert_eq!(usage.get(Resource::Net), 0.0);
+    }
+
+    #[test]
+    fn busy_pe_reports_its_resource_vector() {
+        let mut w = Worker::new(WorkerId(0), VmId(0), quiet_cfg(), 1);
+        let img = ImageName::new("img");
+        let pe = w.start_pe_full(
+            img.clone(),
+            CpuFraction::new(0.25),
+            ResourceVec::new(0.0, 0.3, 0.05),
+            Millis(0),
+            Millis::ZERO,
+        );
+        run_until(&mut w, Millis(0), Millis(2000), Millis(100));
+        w.deliver(pe, msg(1, 30_000), Millis(2000)).unwrap();
+        let events = run_until(&mut w, Millis(2100), Millis(4000), Millis(100));
+        let last = events
+            .iter()
+            .filter_map(|e| match e {
+                WorkerEvent::Report(r) => Some(r),
+                _ => None,
+            })
+            .last()
+            .expect("reported");
+        let (_, usage) = &last.per_image[0];
+        // Noise disabled in quiet_cfg: the busy footprint comes back
+        // exactly.
+        assert!((usage.get(Resource::Ram) - 0.3).abs() < 1e-9);
+        assert!((usage.get(Resource::Net) - 0.05).abs() < 1e-9);
+        assert!(usage.get(Resource::Cpu) > 0.2);
+    }
+
+    #[test]
+    fn resource_noise_jitters_but_stays_nonnegative() {
+        let mut cfg = quiet_cfg();
+        cfg.resource_noise_std = 0.1;
+        let mut w = Worker::new(WorkerId(0), VmId(0), cfg, 9);
+        let img = ImageName::new("img");
+        let pe = w.start_pe_full(
+            img.clone(),
+            CpuFraction::new(0.25),
+            ResourceVec::new(0.0, 0.3, 0.05),
+            Millis(0),
+            Millis::ZERO,
+        );
+        run_until(&mut w, Millis(0), Millis(2000), Millis(100));
+        w.deliver(pe, msg(1, 60_000), Millis(2000)).unwrap();
+        let events = run_until(&mut w, Millis(2100), Millis(8000), Millis(100));
+        let rams: Vec<f64> = events
+            .iter()
+            .filter_map(|e| match e {
+                WorkerEvent::Report(r) => r.per_image.first().map(|(_, u)| u.get(Resource::Ram)),
+                _ => None,
+            })
+            .collect();
+        assert!(rams.len() >= 3);
+        assert!(rams.iter().all(|r| *r >= 0.0));
+        // Samples scatter around the truth instead of repeating it.
+        assert!(rams.iter().any(|r| (r - 0.3).abs() > 1e-6), "{rams:?}");
+        let mean = rams.iter().sum::<f64>() / rams.len() as f64;
+        assert!((mean - 0.3).abs() < 0.1, "mean {mean}");
     }
 
     #[test]

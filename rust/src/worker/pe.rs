@@ -7,6 +7,7 @@
 //! after a configurable idle timeout ("After a time of being idle, a PE
 //! will self-terminate gracefully in order to free the resources").
 
+use crate::binpacking::ResourceVec;
 use crate::protocol::PeState;
 use crate::types::{CpuFraction, ImageName, Millis, PeId, StreamMessage};
 
@@ -40,6 +41,13 @@ pub struct ProcessingEngine {
     /// CPU fraction of the *whole VM* the PE demands while busy (a
     /// single-core container on an 8-core worker demands 0.125).
     pub busy_demand: CpuFraction,
+    /// Non-CPU resources the PE holds while busy, in **reference-VM
+    /// units** (the CPU component is unused — `busy_demand` owns it,
+    /// normalized to this worker). RAM is the decompressed working set,
+    /// net the streaming bandwidth; both are what the worker-side
+    /// profiler measures and reports so the master can pack on live
+    /// vectors instead of static guesses.
+    pub busy_aux: ResourceVec,
     /// Background CPU while idle (container overhead).
     pub idle_cpu: CpuFraction,
     pub phase: PePhase,
@@ -58,10 +66,34 @@ impl ProcessingEngine {
         now: Millis,
         boot_delay: Millis,
     ) -> Self {
+        Self::with_aux(
+            id,
+            image,
+            busy_demand,
+            ResourceVec::ZERO,
+            idle_cpu,
+            now,
+            boot_delay,
+        )
+    }
+
+    /// A PE whose busy phase also holds the given RAM/net footprint (the
+    /// heterogeneous/vector workloads; CPU-only callers use [`Self::new`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_aux(
+        id: PeId,
+        image: ImageName,
+        busy_demand: CpuFraction,
+        busy_aux: ResourceVec,
+        idle_cpu: CpuFraction,
+        now: Millis,
+        boot_delay: Millis,
+    ) -> Self {
         ProcessingEngine {
             id,
             image,
             busy_demand,
+            busy_aux,
             idle_cpu,
             phase: PePhase::Booting {
                 ready_at: now + boot_delay,
@@ -95,6 +127,28 @@ impl ProcessingEngine {
             PePhase::Idle { .. } => self.idle_cpu,
             PePhase::Stopping { .. } => CpuFraction::new(self.busy_demand.value() * 0.5),
             _ => CpuFraction::ZERO,
+        }
+    }
+
+    /// Non-CPU resources held in the current phase, in reference-VM
+    /// units — the *instantaneous* phase model, mirroring the CPU demand
+    /// model: the full busy footprint while processing, half while a
+    /// stopping container flushes, nothing while booting or idle. (The
+    /// worker's periodic report averages over busy time instead —
+    /// [`busy_aux`](Self::busy_aux) for PEs that worked in the interval —
+    /// so a job completing just before the report fires cannot dilute
+    /// the profiled estimate.)
+    pub fn aux_usage(&self) -> ResourceVec {
+        match self.phase {
+            PePhase::Busy { .. } => self.busy_aux,
+            PePhase::Stopping { .. } => {
+                let mut half = self.busy_aux;
+                for v in &mut half.0 {
+                    *v *= 0.5;
+                }
+                half
+            }
+            _ => ResourceVec::ZERO,
         }
     }
 
@@ -165,5 +219,35 @@ mod tests {
         assert_eq!(p.demand().value(), 0.125);
         p.phase = PePhase::Terminated;
         assert_eq!(p.demand().value(), 0.0);
+    }
+
+    #[test]
+    fn aux_usage_by_phase() {
+        use crate::binpacking::Resource;
+        let mut p = ProcessingEngine::with_aux(
+            PeId(1),
+            ImageName::new("img"),
+            CpuFraction::new(0.125),
+            ResourceVec::new(0.0, 0.25, 0.05),
+            CpuFraction::new(0.004),
+            Millis(0),
+            Millis(2000),
+        );
+        assert_eq!(p.aux_usage(), ResourceVec::ZERO, "booting holds nothing");
+        p.phase = PePhase::Idle { since: Millis(0) };
+        assert_eq!(p.aux_usage(), ResourceVec::ZERO, "idle holds nothing");
+        p.deliver(msg(500), Millis(0)).unwrap();
+        assert!((p.aux_usage().get(Resource::Ram) - 0.25).abs() < 1e-12);
+        assert!((p.aux_usage().get(Resource::Net) - 0.05).abs() < 1e-12);
+        p.phase = PePhase::Stopping { until: Millis(100) };
+        assert!((p.aux_usage().get(Resource::Ram) - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cpu_only_pe_has_zero_aux() {
+        let mut p = pe(Millis(0));
+        p.phase = PePhase::Idle { since: Millis(0) };
+        p.deliver(msg(500), Millis(0)).unwrap();
+        assert_eq!(p.aux_usage(), ResourceVec::ZERO);
     }
 }

@@ -219,12 +219,16 @@ fn cost_ledger_monotone_through_crash_and_cancel_churn() {
                 assert_eq!(c.accounted_messages(), 120, "conservation after crash");
             }
         } else {
+            // The last tick ran at `t`, so cancelling at `t` has no
+            // unbilled partial interval: the ledger must not move (the
+            // double-billing bait — and with sub-tick billing, the
+            // cancellation instant is billed exactly once, here as zero).
             let before = c.cloud.cost_usd();
-            c.cloud.cancel_costliest_booting();
+            c.cloud.cancel_costliest_booting(c.now());
             assert_eq!(
                 c.cloud.cost_usd(),
                 before,
-                "cancellation itself must not touch the ledger"
+                "cancelling at the already-billed instant must not touch the ledger"
             );
         }
     }

@@ -1,8 +1,12 @@
 #!/usr/bin/env bash
 # Perf + hygiene gate: formatting, lints, and the bin-packing benchmark
 # trajectory — scalar Any-Fit naive-vs-indexed, the multi-dimensional
-# (vector) naive-vs-indexed section, and the 10^5-10^6 scaling runs. Run
-# from the repo root (where Cargo.toml lives):
+# (vector) naive-vs-indexed section, the 10^5-10^6 scaling runs, and the
+# profiler-ingest section (the vector telemetry pipeline's control-loop
+# hot path: ResourceProfiler::ingest over a 20-worker fleet's reports).
+# All sections land in the same merged BENCH_binpacking.json artifact, so
+# the perf trajectory has data points for the packer *and* the profiler.
+# Run from the repo root (where Cargo.toml lives):
 #
 #   ./scripts/bench_check.sh [--quick]
 #

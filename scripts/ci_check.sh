@@ -31,12 +31,38 @@ cargo clippy --all-targets -- -D warnings
 echo "== cargo build --release"
 cargo build --release
 
+echo "== cargo doc --no-deps -q"
+cargo doc --no-deps -q
+
 echo "== cargo test -q"
 cargo test -q
 
 if [[ "$DEEP" == "1" ]]; then
     echo "== deep property pass (TESTKIT_CASES=2000, release)"
     TESTKIT_CASES=2000 cargo test --release -q
+fi
+
+echo "== golden snapshots present"
+# The A4/A5/A6 golden pins must be committed, not just bootstrapped: a
+# checkout without them only enforces determinism, never values. The test
+# run above bootstraps missing files; failing here forces them into git.
+missing=0
+for g in ablation_multidim.csv.seed42.golden \
+         ablation_cost.csv.seed42.golden \
+         ablation_liveprofile.csv.seed42.golden; do
+    if [[ ! -f "rust/tests/golden/$g" ]]; then
+        echo "error: rust/tests/golden/$g is missing" >&2
+        missing=1
+    elif ! git ls-files --error-unmatch "rust/tests/golden/$g" >/dev/null 2>&1; then
+        echo "error: rust/tests/golden/$g exists but is not committed — " \
+             "commit it so the pin enforces values, not just determinism" >&2
+        missing=1
+    fi
+done
+if [[ "$missing" == "1" ]]; then
+    echo "error: golden files absent from git; the test run bootstrapped" \
+         "them under rust/tests/golden/ — review and commit them" >&2
+    exit 1
 fi
 
 echo "== ci_check: all green"
