@@ -26,6 +26,27 @@
 //! grid straddles either endpoint. The cost-aware autoscaler plans
 //! against these prices and prefers cancelling the costliest in-flight
 //! boot ([`SimCloud::cancel_costliest_booting`]).
+//!
+//! ## Spot / preemptible tier
+//!
+//! Every flavor also quotes a discounted **spot** rate
+//! ([`Flavor::spot_price_per_hour`], nominally 30% of on-demand —
+//! override via [`CloudConfig::spot_pricing`]). Spot capacity is
+//! reclaimable: a spot VM's reclamation instant is drawn once, at
+//! provisioning time, from an exponential lifetime with the flavor's
+//! hazard rate ([`Flavor::spot_hazard_per_hour`] /
+//! [`CloudConfig::spot_hazard`], expected preemptions per hour) using
+//! the cloud's seeded RNG — runs are exactly reproducible, and a zero
+//! hazard draws nothing at all, so on-demand-only (and hazard-0) runs
+//! keep today's RNG stream byte-for-byte. When the reclamation instant
+//! comes within [`CloudConfig::preemption_notice`] of the clock, the
+//! cloud emits a [`SpotEvent::Preempted`] notice (the short drain
+//! window real providers give); at the instant itself the VM is
+//! terminated provider-side — billed through exactly that instant at
+//! the spot rate — and a [`SpotEvent::Reclaimed`] follows. Spot spend
+//! accrues into the same monotone ledger as on-demand (the *blended*
+//! rate the load predictor's cost damper observes) and is additionally
+//! broken out in [`SimCloud::spot_cost_usd`].
 
 use crate::binpacking::ResourceVec;
 use crate::types::{IdGen, Millis, VmId};
@@ -81,6 +102,37 @@ impl Flavor {
             Flavor::Xlarge => 0.50,
         }
     }
+
+    /// Nominal spot (preemptible) price in USD per hour — a uniform 70%
+    /// discount off the on-demand rate, the middle of the public-cloud
+    /// spot band. Uniformity matters for the hazard-0 degeneracy: it
+    /// preserves every relative price, so a spot-capable planner with
+    /// nothing to fear picks exactly the flavors the on-demand planner
+    /// picks. Deployments override via [`CloudConfig::spot_pricing`].
+    pub fn spot_price_per_hour(self) -> f64 {
+        self.price_per_hour() * 0.3
+    }
+
+    /// Nominal spot preemption hazard in expected reclaims per hour of
+    /// VM lifetime. Bigger flavors are reclaimed more often (the
+    /// provider hunts large contiguous capacity first). Override via
+    /// [`CloudConfig::spot_hazard`].
+    pub fn spot_hazard_per_hour(self) -> f64 {
+        match self {
+            Flavor::Small => 0.2,
+            Flavor::Large => 0.3,
+            Flavor::Xlarge => 0.4,
+        }
+    }
+}
+
+/// Billing tier of a provisioned VM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PriceTier {
+    /// Full price, never reclaimed by the provider.
+    OnDemand,
+    /// Discounted rate; reclaimable with a short notice window.
+    Spot,
 }
 
 /// Lifecycle of a simulated VM.
@@ -97,10 +149,40 @@ pub struct Vm {
     pub id: VmId,
     pub flavor: Flavor,
     pub state: VmState,
+    /// On-demand or spot — decides the billing rate and whether the
+    /// provider may reclaim it.
+    pub tier: PriceTier,
     pub requested_at: Millis,
     /// End of the last billed interval for this VM (starts at
     /// `requested_at`; frozen at the termination instant).
     billed_until: Millis,
+    /// Provider-chosen reclamation instant for spot VMs, drawn at
+    /// provisioning time from the flavor's hazard (`None` = never
+    /// preempted: on-demand, or spot under a zero hazard).
+    preempt_at: Option<Millis>,
+    /// Whether the preemption notice was already emitted.
+    notice_sent: bool,
+}
+
+impl Vm {
+    /// The provider's reclamation instant, if this spot VM will be
+    /// preempted at all (observability / tests).
+    pub fn preempt_at(&self) -> Option<Millis> {
+        self.preempt_at
+    }
+}
+
+/// Spot lifecycle events surfaced by [`SimCloud::take_spot_events`],
+/// in emission order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpotEvent {
+    /// `vm` entered its preemption notice window: the provider reclaims
+    /// it at `notice`. The autoscaler treats this like a grace-drain —
+    /// stop placing containers, requeue the VM's hosted work elsewhere.
+    Preempted { vm: VmId, notice: Millis },
+    /// The provider reclaimed `vm`: it is already terminated and billed
+    /// through exactly its reclamation instant.
+    Reclaimed { vm: VmId },
 }
 
 /// Provisioning errors surfaced to the autoscaler.
@@ -128,6 +210,18 @@ pub struct CloudConfig {
     /// Per-flavor price overrides in USD/hour; flavors not listed bill at
     /// their [`Flavor::price_per_hour`] default.
     pub pricing: Vec<(Flavor, f64)>,
+    /// Per-flavor **spot** price overrides in USD/hour; flavors not
+    /// listed bill at their [`Flavor::spot_price_per_hour`] default.
+    pub spot_pricing: Vec<(Flavor, f64)>,
+    /// Per-flavor spot preemption-hazard overrides (expected reclaims
+    /// per hour); flavors not listed use
+    /// [`Flavor::spot_hazard_per_hour`]. An override of `0.0` makes
+    /// that flavor's spot tier preemption-free — and draws nothing from
+    /// the RNG, keeping trajectories byte-identical to on-demand runs.
+    pub spot_hazard: Vec<(Flavor, f64)>,
+    /// Warning the provider gives between the preemption notice and the
+    /// reclaim (GCP gives 30 s, AWS two minutes).
+    pub preemption_notice: Millis,
     pub seed: u64,
 }
 
@@ -140,6 +234,9 @@ impl Default for CloudConfig {
             flavor: Flavor::Xlarge,
             flavor_cycle: Vec::new(),
             pricing: Vec::new(),
+            spot_pricing: Vec::new(),
+            spot_hazard: Vec::new(),
+            preemption_notice: Millis::from_secs(30),
             seed: 0x5EED,
         }
     }
@@ -155,6 +252,57 @@ impl CloudConfig {
             .map(|(_, p)| *p)
             .unwrap_or_else(|| flavor.price_per_hour())
     }
+
+    /// Effective spot USD/hour for a flavor: the override when listed,
+    /// the flavor's nominal spot price otherwise.
+    pub fn spot_price_of(&self, flavor: Flavor) -> f64 {
+        self.spot_pricing
+            .iter()
+            .find(|(f, _)| *f == flavor)
+            .map(|(_, p)| *p)
+            .unwrap_or_else(|| flavor.spot_price_per_hour())
+    }
+
+    /// Effective spot preemption hazard (reclaims/hour) for a flavor.
+    pub fn hazard_of(&self, flavor: Flavor) -> f64 {
+        self.spot_hazard
+            .iter()
+            .find(|(f, _)| *f == flavor)
+            .map(|(_, h)| *h)
+            .unwrap_or_else(|| flavor.spot_hazard_per_hour())
+    }
+
+    /// The billing rate of a VM given its tier.
+    fn rate_of(&self, vm: &Vm) -> f64 {
+        match vm.tier {
+            PriceTier::OnDemand => self.price_of(vm.flavor),
+            PriceTier::Spot => self.spot_price_of(vm.flavor),
+        }
+    }
+}
+
+/// Advance `vm`'s billed-through watermark to `now`, accruing the
+/// interval into the blended ledger — and into the spot share when the
+/// VM bills at the spot tier. The *single* billing routine: the tick
+/// sweep and every termination path price an interval through here, so
+/// the two ledgers can never diverge on how time is priced.
+fn bill_vm_until(
+    cfg: &CloudConfig,
+    vm: &mut Vm,
+    now: Millis,
+    cost_usd: &mut f64,
+    spot_cost_usd: &mut f64,
+) {
+    if now <= vm.billed_until {
+        return;
+    }
+    let dt_hours = (now - vm.billed_until).as_secs_f64() / 3600.0;
+    let amount = cfg.rate_of(vm) * dt_hours;
+    *cost_usd += amount;
+    if vm.tier == PriceTier::Spot {
+        *spot_cost_usd += amount;
+    }
+    vm.billed_until = now;
 }
 
 /// The simulated provider. Deterministic for a given seed + call sequence.
@@ -167,10 +315,19 @@ pub struct SimCloud {
     provisioned: usize,
     /// Count of rejected requests (observable for Fig 10's retry shape).
     pub rejected_requests: u64,
+    /// Lifetime count of provider-initiated spot reclaims (the
+    /// `cloud.preemptions` series).
+    pub preemptions: u64,
     /// Accrued spend in USD (see the module-level pricing notes):
     /// per-VM watermark billing — ticks advance live VMs, termination
     /// bills the partial interval. Monotone non-decreasing.
     cost_usd: f64,
+    /// The spot share of `cost_usd` (also monotone; the
+    /// `cloud.spot_cost_usd` series).
+    spot_cost_usd: f64,
+    /// Spot lifecycle events since the last
+    /// [`take_spot_events`](Self::take_spot_events) drain.
+    spot_events: Vec<SpotEvent>,
 }
 
 impl SimCloud {
@@ -183,7 +340,10 @@ impl SimCloud {
             rng,
             provisioned: 0,
             rejected_requests: 0,
+            preemptions: 0,
             cost_usd: 0.0,
+            spot_cost_usd: 0.0,
+            spot_events: Vec::new(),
         }
     }
 
@@ -192,9 +352,27 @@ impl SimCloud {
     }
 
     /// Accrued spend in USD across every VM ever provisioned (billed on
-    /// tick; see the module-level pricing notes).
+    /// tick; see the module-level pricing notes). Blended: spot VMs
+    /// accrue into this same ledger at their discounted rate.
     pub fn cost_usd(&self) -> f64 {
         self.cost_usd
+    }
+
+    /// The spot-billed share of [`cost_usd`](Self::cost_usd) (monotone
+    /// non-decreasing; always ≤ the total).
+    pub fn spot_cost_usd(&self) -> f64 {
+        self.spot_cost_usd
+    }
+
+    /// Drain the spot lifecycle events (notices and reclaims) emitted
+    /// since the last drain, in emission order. Rarely non-empty, and
+    /// the swap with an empty vector never allocates — the steady-state
+    /// tick stays allocation-free.
+    pub fn take_spot_events(&mut self) -> Vec<SpotEvent> {
+        if self.spot_events.is_empty() {
+            return Vec::new();
+        }
+        std::mem::take(&mut self.spot_events)
     }
 
     fn alive(&self) -> usize {
@@ -221,6 +399,25 @@ impl SimCloud {
     /// its position still advances one slot per successful request, like
     /// any other provision).
     pub fn request_vm_of(&mut self, now: Millis, flavor: Flavor) -> Result<VmId, CloudError> {
+        self.request_vm_tier(now, flavor, PriceTier::OnDemand)
+    }
+
+    /// Request a new **spot** VM of an explicit flavor: billed at the
+    /// discounted spot rate, reclaimable by the provider. The
+    /// reclamation instant is drawn here, once, from an exponential
+    /// lifetime at the flavor's hazard rate — deterministic per seed,
+    /// and a zero hazard draws nothing (the VM is never preempted and
+    /// the RNG stream matches an on-demand run exactly).
+    pub fn request_vm_spot(&mut self, now: Millis, flavor: Flavor) -> Result<VmId, CloudError> {
+        self.request_vm_tier(now, flavor, PriceTier::Spot)
+    }
+
+    fn request_vm_tier(
+        &mut self,
+        now: Millis,
+        flavor: Flavor,
+        tier: PriceTier,
+    ) -> Result<VmId, CloudError> {
         if self.alive() >= self.cfg.quota {
             self.rejected_requests += 1;
             return Err(CloudError::QuotaExceeded);
@@ -232,14 +429,32 @@ impl SimCloud {
         };
         let ready_at =
             now + self.cfg.boot_delay.saturating_sub(self.cfg.boot_jitter) + Millis(jitter);
+        let preempt_at = if tier == PriceTier::Spot {
+            let hazard = self.cfg.hazard_of(flavor);
+            if hazard > 0.0 {
+                // Memoryless lifetime: mean 1/hazard hours from the
+                // provisioning request (providers reclaim capacity they
+                // are still assembling, too — a preempted boot is a
+                // failed boot).
+                let hours = self.rng.exponential(1.0 / hazard);
+                Some(now + Millis::from_secs_f64(hours * 3600.0))
+            } else {
+                None
+            }
+        } else {
+            None
+        };
         let id = VmId(self.ids.next_id());
         self.provisioned += 1;
         self.vms.push(Vm {
             id,
             flavor,
             state: VmState::Booting { ready_at },
+            tier,
             requested_at: now,
             billed_until: now,
+            preempt_at,
+            notice_sent: false,
         });
         Ok(id)
     }
@@ -254,11 +469,7 @@ impl SimCloud {
             if matches!(vm.state, VmState::Terminated) {
                 return;
             }
-            if now > vm.billed_until {
-                let dt_hours = (now - vm.billed_until).as_secs_f64() / 3600.0;
-                self.cost_usd += self.cfg.price_of(vm.flavor) * dt_hours;
-                vm.billed_until = now;
-            }
+            bill_vm_until(&self.cfg, vm, now, &mut self.cost_usd, &mut self.spot_cost_usd);
             vm.state = VmState::Terminated;
         }
     }
@@ -281,7 +492,9 @@ impl SimCloud {
     /// Cancel the *priciest* VM still booting (ties broken toward the
     /// newest request), if any — the cost-aware scale-thrash valve: every
     /// cancelled boot saves its hourly rate, so the most expensive
-    /// in-flight boot absorbs the excess first.
+    /// in-flight boot absorbs the excess first. "Priciest" is the rate
+    /// actually being billed — a spot boot competes at its discounted
+    /// rate, so equal-flavor on-demand boots are cancelled before it.
     pub fn cancel_costliest_booting(&mut self, now: Millis) -> Option<VmId> {
         let mut chosen: Option<(VmId, f64)> = None;
         // Reverse walk + strict improvement: the newest booting VM at the
@@ -290,7 +503,7 @@ impl SimCloud {
             if !matches!(v.state, VmState::Booting { .. }) {
                 continue;
             }
-            let price = self.cfg.price_of(v.flavor);
+            let price = self.cfg.rate_of(v);
             match chosen {
                 Some((_, best)) if price.total_cmp(&best).is_le() => {}
                 _ => chosen = Some((v.id, price)),
@@ -308,11 +521,29 @@ impl SimCloud {
     /// for time before it existed, and a VM terminated mid-interval was
     /// already billed through its termination instant).
     pub fn tick(&mut self, now: Millis) -> Vec<VmId> {
+        // Provider reclaims first: a spot VM whose reclamation instant
+        // has passed is terminated — and billed — at *that* instant, not
+        // at `now` (the billing sweep below would otherwise overrun it).
+        // A reclaimed boot never becomes ready.
+        let mut due: Option<Vec<(VmId, Millis)>> = None;
+        for vm in &self.vms {
+            if matches!(vm.state, VmState::Terminated) {
+                continue;
+            }
+            if let Some(at) = vm.preempt_at {
+                if at <= now {
+                    due.get_or_insert_with(Vec::new).push((vm.id, at));
+                }
+            }
+        }
+        for (id, at) in due.into_iter().flatten() {
+            self.terminate_vm(id, at);
+            self.preemptions += 1;
+            self.spot_events.push(SpotEvent::Reclaimed { vm: id });
+        }
         for vm in &mut self.vms {
-            if !matches!(vm.state, VmState::Terminated) && now > vm.billed_until {
-                let dt_hours = (now - vm.billed_until).as_secs_f64() / 3600.0;
-                self.cost_usd += self.cfg.price_of(vm.flavor) * dt_hours;
-                vm.billed_until = now;
+            if !matches!(vm.state, VmState::Terminated) {
+                bill_vm_until(&self.cfg, vm, now, &mut self.cost_usd, &mut self.spot_cost_usd);
             }
         }
         let mut ready = Vec::new();
@@ -321,6 +552,20 @@ impl SimCloud {
                 if now >= ready_at {
                     vm.state = VmState::Active;
                     ready.push(vm.id);
+                }
+            }
+        }
+        // Preemption notices: a live spot VM whose reclamation instant
+        // falls within the notice window announces it exactly once.
+        let notice = self.cfg.preemption_notice;
+        for vm in &mut self.vms {
+            if matches!(vm.state, VmState::Terminated) || vm.notice_sent {
+                continue;
+            }
+            if let Some(at) = vm.preempt_at {
+                if now + notice >= at {
+                    vm.notice_sent = true;
+                    self.spot_events.push(SpotEvent::Preempted { vm: vm.id, notice: at });
                 }
             }
         }
@@ -647,6 +892,141 @@ mod tests {
         // request lands on the cycle's second entry.
         let b = c.request_vm(Millis(0)).unwrap();
         assert_eq!(c.vm(b).unwrap().flavor, Flavor::Large);
+    }
+
+    #[test]
+    fn spot_vm_bills_at_the_discounted_rate_into_the_blended_ledger() {
+        let mut c = SimCloud::new(CloudConfig {
+            quota: 4,
+            boot_delay: Millis::from_secs(40),
+            boot_jitter: Millis::ZERO,
+            spot_hazard: vec![
+                (Flavor::Small, 0.0),
+                (Flavor::Large, 0.0),
+                (Flavor::Xlarge, 0.0),
+            ],
+            ..CloudConfig::default()
+        });
+        let spot = c.request_vm_spot(Millis(0), Flavor::Xlarge).unwrap();
+        assert_eq!(c.vm(spot).unwrap().tier, PriceTier::Spot);
+        c.request_vm_of(Millis(0), Flavor::Xlarge).unwrap();
+        c.tick(Millis::from_secs(3600));
+        // One hour each: $0.15 spot + $0.50 on-demand, blended.
+        assert!((c.cost_usd() - 0.65).abs() < 1e-9, "got {}", c.cost_usd());
+        assert!(
+            (c.spot_cost_usd() - 0.15).abs() < 1e-9,
+            "spot share {}",
+            c.spot_cost_usd()
+        );
+        // Spot overrides win like on-demand ones do.
+        let cfg = CloudConfig {
+            spot_pricing: vec![(Flavor::Xlarge, 0.2)],
+            ..CloudConfig::default()
+        };
+        assert!((cfg.spot_price_of(Flavor::Xlarge) - 0.2).abs() < 1e-12);
+        assert!((cfg.spot_price_of(Flavor::Large) - 0.075).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spot_preemption_notice_then_reclaim_billed_exactly() {
+        let mut c = SimCloud::new(CloudConfig {
+            quota: 4,
+            boot_delay: Millis::from_secs(5),
+            boot_jitter: Millis::ZERO,
+            // Mean spot lifetime 1/2 hour — the exact instant is drawn
+            // from the seeded RNG and read back below.
+            spot_hazard: vec![(Flavor::Xlarge, 2.0)],
+            preemption_notice: Millis::from_secs(30),
+            ..CloudConfig::default()
+        });
+        let id = c.request_vm_spot(Millis(0), Flavor::Xlarge).unwrap();
+        let at = c.vm(id).unwrap().preempt_at().expect("hazard > 0 draws a lifetime");
+        assert!(at > Millis::ZERO);
+        // Ticking just outside the notice window emits nothing.
+        if at > Millis::from_secs(40) {
+            let before = at - Millis::from_secs(31);
+            c.tick(before);
+            assert!(c.take_spot_events().is_empty(), "no notice before the window");
+        }
+        // Inside the window: exactly one notice carrying the reclaim instant.
+        c.tick(at - Millis::from_secs(10));
+        assert_eq!(
+            c.take_spot_events(),
+            vec![SpotEvent::Preempted { vm: id, notice: at }]
+        );
+        c.tick(at - Millis::from_secs(5));
+        assert!(c.take_spot_events().is_empty(), "notice emitted once");
+        // Past the instant: reclaimed, terminated, billed through `at`
+        // exactly — not through the (later) tick.
+        c.tick(at + Millis::from_secs(120));
+        assert_eq!(c.take_spot_events(), vec![SpotEvent::Reclaimed { vm: id }]);
+        assert_eq!(c.vm(id).unwrap().state, VmState::Terminated);
+        assert_eq!(c.preemptions, 1);
+        let expected = Flavor::Xlarge.spot_price_per_hour() * at.as_secs_f64() / 3600.0;
+        assert!(
+            (c.cost_usd() - expected).abs() < 1e-9,
+            "billed {} want {expected}",
+            c.cost_usd()
+        );
+        assert!((c.spot_cost_usd() - expected).abs() < 1e-9);
+        // Later ticks accrue nothing for it.
+        c.tick(at + Millis::from_secs(7200));
+        assert!((c.cost_usd() - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_hazard_spot_keeps_the_rng_stream_byte_identical() {
+        // Two clouds, same seed: one requests on-demand, the other spot
+        // with a zero hazard. The spot path must not consume any extra
+        // RNG draws, so the *next* VM's boot jitter matches exactly —
+        // the hazard-0 degeneracy the A7 ablation pins end-to-end.
+        let mk = |spot: bool| {
+            let mut c = SimCloud::new(CloudConfig {
+                quota: 4,
+                spot_hazard: vec![(Flavor::Xlarge, 0.0)],
+                ..CloudConfig::default()
+            });
+            let first = if spot {
+                c.request_vm_spot(Millis(0), Flavor::Xlarge).unwrap()
+            } else {
+                c.request_vm_of(Millis(0), Flavor::Xlarge).unwrap()
+            };
+            assert_eq!(c.vm(first).unwrap().preempt_at(), None);
+            let second = c.request_vm_of(Millis(10), Flavor::Xlarge).unwrap();
+            match c.vm(second).unwrap().state {
+                VmState::Booting { ready_at } => ready_at,
+                _ => unreachable!(),
+            }
+        };
+        assert_eq!(mk(false), mk(true));
+    }
+
+    #[test]
+    fn explicitly_terminated_spot_vm_emits_no_reclaim() {
+        // The autoscaler draining a noticed worker and terminating its
+        // VM itself must not double-count as a provider reclaim.
+        let mut c = SimCloud::new(CloudConfig {
+            quota: 4,
+            boot_delay: Millis::from_secs(5),
+            boot_jitter: Millis::ZERO,
+            // Mean lifetime 100 h: the drawn reclaim instant is far past
+            // the explicit termination below for any plausible draw.
+            spot_hazard: vec![(Flavor::Xlarge, 0.01)],
+            ..CloudConfig::default()
+        });
+        let id = c.request_vm_spot(Millis(0), Flavor::Xlarge).unwrap();
+        let at = c.vm(id).unwrap().preempt_at().unwrap();
+        c.tick(Millis::from_secs(1));
+        c.take_spot_events();
+        c.terminate_vm(id, Millis::from_secs(2));
+        c.tick(at + Millis::from_secs(60));
+        assert!(
+            c.take_spot_events()
+                .iter()
+                .all(|e| !matches!(e, SpotEvent::Reclaimed { .. })),
+            "terminated VMs are never reclaimed"
+        );
+        assert_eq!(c.preemptions, 0);
     }
 
     #[test]

@@ -8,7 +8,10 @@
 //! $/satisfied-unit mix over the Xlarge/Large catalog. A6 quantifies
 //! live multi-resource profiling: a deliberately mis-specified static
 //! RAM prior overcommits real memory until the live per-dimension
-//! moving averages take over.
+//! moving averages take over. A7 quantifies the spot/preemptible tier:
+//! on-demand-only planning vs a spot-aware mix under preemption risk,
+//! with the hazard-0 arm pinning byte-identical degeneration to
+//! today's behavior.
 
 use std::fmt::Write as _;
 use std::path::Path;
@@ -21,7 +24,7 @@ use crate::binpacking::{
 };
 use crate::cloud::Flavor;
 use crate::experiments::{microscopy, Report};
-use crate::irm::{BufferPolicy, FlavorOption, PackerChoice, ResourceModel};
+use crate::irm::{BufferPolicy, FlavorOption, PackerChoice, ResourceModel, SpotPolicy};
 use crate::sim::SimCluster;
 use crate::types::Millis;
 use crate::util::rng::Rng;
@@ -651,6 +654,199 @@ pub fn liveprofile(out: &Path, seed: u64) -> Result<Report> {
     Ok(report)
 }
 
+/// A7 — the spot/preemptible tier (ISSUE 5's headline ablation), on the
+/// Xlarge/Large microscopy mix with vector packing in every arm.
+///
+/// Three arms, identical workload and quota:
+///
+/// * **on-demand** — the A5 cost-aware setup exactly: the Xlarge/Large
+///   catalog with no spot market. Today's behavior.
+/// * **spot-hazard0** — the same catalog with its spot tier *enabled*
+///   (nominal 70%-off rates) but the hazard forced to zero everywhere
+///   and `max_spot_fraction = 1.0`. With nothing to fear and a uniform
+///   discount the planner picks the *same flavors* at the spot tier,
+///   the cloud draws *nothing extra* from its RNG, and the run's
+///   trajectories — makespan, completions, the whole `workers.current`
+///   series — must be **byte-identical** to the on-demand arm, at a
+///   strictly lower bill. This is the degeneracy pin: the entire spot
+///   machinery vanishes behaviorally when the risk does.
+/// * **spot-aware** — real risk: one expected reclaim per spot VM-hour
+///   (`hazard = 1.0`, planner and cloud agreeing), at most 60% of each
+///   planned round on spot, and a $0.02/expected-preemption rework
+///   penalty in the effective rate. Preemptions now actually occur
+///   (notice → grace-drain → requeue → reference-unit replacement);
+///   the headline check is that the blended bill still lands strictly
+///   below the on-demand arm's while the deadline-miss increase stays
+///   bounded.
+pub fn spot(out: &Path, seed: u64) -> Result<Report> {
+    let mut report =
+        Report::new("A7 — spot/preemptible tier (on-demand-only vs spot-aware planning)");
+    let deadline = Millis::from_secs(1800);
+    let boot = Millis::from_secs(45);
+    // The risky arm's hazard: one expected reclaim per spot VM-hour —
+    // enough to matter across the batch, not enough to starve it.
+    let hazard = 1.0;
+    let spot_catalog = |h: f64| {
+        vec![
+            FlavorOption {
+                spot_hazard_per_hour: h,
+                ..FlavorOption::nominal_spot(Flavor::Xlarge, boot)
+            },
+            FlavorOption {
+                spot_hazard_per_hour: h,
+                ..FlavorOption::nominal_spot(Flavor::Large, boot)
+            },
+        ]
+    };
+    struct Arm {
+        cost: f64,
+        spot_cost: f64,
+        preemptions: u64,
+        misses: usize,
+        makespan: f64,
+        peak: f64,
+        workers_series: Vec<(Millis, f64)>,
+    }
+    let arms: Vec<(&str, Vec<FlavorOption>, SpotPolicy, f64)> = vec![
+        (
+            "on-demand",
+            vec![
+                FlavorOption::nominal(Flavor::Xlarge, boot),
+                FlavorOption::nominal(Flavor::Large, boot),
+            ],
+            SpotPolicy::default(),
+            0.0,
+        ),
+        (
+            "spot-hazard0",
+            spot_catalog(0.0),
+            SpotPolicy {
+                max_spot_fraction: 1.0,
+                rework_penalty_usd: 0.0,
+            },
+            0.0,
+        ),
+        (
+            "spot-aware",
+            spot_catalog(hazard),
+            SpotPolicy {
+                max_spot_fraction: 0.6,
+                rework_penalty_usd: 0.02,
+            },
+            hazard,
+        ),
+    ];
+    let mut csv = String::from(
+        "model,cost_usd,spot_cost_usd,preemptions,deadline_misses,makespan_s,peak_workers\n",
+    );
+    let mut results: Vec<Arm> = Vec::new();
+    for (label, catalog, policy, cloud_hazard) in &arms {
+        let mut cfg = microscopy::cluster_config(seed);
+        // Same headroom rationale as A5: the comparison is about what
+        // gets bought, not whether the quota starves an arm.
+        cfg.cloud.quota = 10;
+        cfg.cloud.flavor = Flavor::Xlarge;
+        cfg.cloud.spot_hazard = vec![
+            (Flavor::Small, *cloud_hazard),
+            (Flavor::Large, *cloud_hazard),
+            (Flavor::Xlarge, *cloud_hazard),
+        ];
+        cfg.irm.resource_model = ResourceModel::Vector {
+            new_vm_capacity: Flavor::Large.capacity(),
+        };
+        cfg.irm.image_resources = vec![microscopy_wl::resource_profile()];
+        cfg.irm.flavor_catalog = catalog.clone();
+        cfg.irm.spot_policy = *policy;
+        let trace = MicroscopyTrace::new(MicroscopyConfig {
+            n_images: 300,
+            ..MicroscopyConfig::default()
+        })
+        .run_trace(seed);
+        let mut cluster = SimCluster::new(cfg);
+        trace.schedule_into(&mut cluster);
+        let makespan = cluster
+            .run_to_completion(trace.len(), Millis::from_secs(6000))
+            .map(|m| m.as_secs_f64())
+            .unwrap_or(f64::NAN);
+        let arm = Arm {
+            cost: cluster.cloud.cost_usd(),
+            spot_cost: cluster.cloud.spot_cost_usd(),
+            preemptions: cluster.cloud.preemptions,
+            misses: cluster.deadline_misses(deadline),
+            makespan,
+            peak: cluster
+                .recorder
+                .get("workers.current")
+                .map(|s| s.max())
+                .unwrap_or(0.0),
+            workers_series: cluster
+                .recorder
+                .get("workers.current")
+                .map(|s| s.points.clone())
+                .unwrap_or_default(),
+        };
+        report.line(format!(
+            "{label:<14} cost ${:>6.2} (spot ${:>5.2}) | preemptions {:>2} | misses {:>3} | \
+             makespan {makespan:>6.0}s | peak workers {}",
+            arm.cost, arm.spot_cost, arm.preemptions, arm.misses, arm.peak
+        ));
+        let _ = writeln!(
+            csv,
+            "{label},{:.4},{:.4},{},{},{makespan:.1},{}",
+            arm.cost, arm.spot_cost, arm.preemptions, arm.misses, arm.peak
+        );
+        results.push(arm);
+    }
+    std::fs::write(out.join("ablation_spot.csv"), csv)?;
+
+    let (od, degen, aware) = (&results[0], &results[1], &results[2]);
+    report.check(
+        "all arms complete the batch",
+        od.makespan.is_finite() && degen.makespan.is_finite() && aware.makespan.is_finite(),
+        format!(
+            "{:.0}s / {:.0}s / {:.0}s",
+            od.makespan, degen.makespan, aware.makespan
+        ),
+    );
+    report.check(
+        "hazard=0 reproduces the on-demand trajectories byte-identically",
+        degen.makespan == od.makespan
+            && degen.preemptions == 0
+            && degen.workers_series == od.workers_series,
+        format!(
+            "makespan {:.1}s vs {:.1}s, {} vs {} worker samples",
+            degen.makespan,
+            od.makespan,
+            degen.workers_series.len(),
+            od.workers_series.len()
+        ),
+    );
+    report.check(
+        "hazard=0 spot billing is strictly cheaper for the same run",
+        degen.cost < od.cost && degen.spot_cost > 0.0,
+        format!("${:.2} vs ${:.2}", degen.cost, od.cost),
+    );
+    report.check(
+        "spot-aware planning strictly lowers cost under real preemption risk",
+        aware.cost < od.cost,
+        format!("${:.2} vs ${:.2}", aware.cost, od.cost),
+    );
+    report.check(
+        "deadline-miss increase bounded by the risk penalty",
+        aware.misses <= od.misses + 15,
+        format!("{} vs {} (bound +15 of 300)", aware.misses, od.misses),
+    );
+    report.check(
+        "spot share never exceeds the blended ledger",
+        degen.spot_cost <= degen.cost + 1e-9 && aware.spot_cost <= aware.cost + 1e-9,
+        format!(
+            "${:.2}/${:.2} and ${:.2}/${:.2}",
+            degen.spot_cost, degen.cost, aware.spot_cost, aware.cost
+        ),
+    );
+    Ok(report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -684,6 +880,14 @@ mod tests {
         let tmp = std::env::temp_dir().join("hio_abl_liveprofile_test");
         std::fs::create_dir_all(&tmp).unwrap();
         let report = liveprofile(&tmp, 3).unwrap();
+        assert!(report.all_passed(), "{}", report.render());
+    }
+
+    #[test]
+    fn spot_ablation_runs() {
+        let tmp = std::env::temp_dir().join("hio_abl_spot_test");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let report = spot(&tmp, 3).unwrap();
         assert!(report.all_passed(), "{}", report.render());
     }
 }

@@ -224,6 +224,25 @@ pub fn run(out: &Path, seed: u64, fig: &str) -> Result<Report> {
     Ok(report)
 }
 
+/// First-run vs later-run makespan statistics for the warm-up report:
+/// `(first, rest_mean, rest_spread)`. `None` when fewer than two runs
+/// exist — the comparison is undefined then, and the naive
+/// `secs[1..].iter().sum() / (secs.len() - 1)` arithmetic it replaces
+/// panicked on an empty series (slice out of range, and `len - 1`
+/// underflow) and produced a NaN mean on a singleton (0 / 0).
+fn warmup_stats(secs: &[f64]) -> Option<(f64, f64, f64)> {
+    let (first, rest) = secs.split_first()?;
+    if rest.is_empty() {
+        return None;
+    }
+    let rest_mean = rest.iter().sum::<f64>() / rest.len() as f64;
+    let rest_spread = rest
+        .iter()
+        .map(|s| (s - rest_mean).abs())
+        .fold(0.0f64, f64::max);
+    Some((*first, rest_mean, rest_spread))
+}
+
 /// E9: the warm-up effect — run 1 slower than the profiled runs.
 pub fn warmup(out: &Path, seed: u64) -> Result<Report> {
     let runs = ten_runs(seed, 10);
@@ -236,12 +255,16 @@ pub fn warmup(out: &Path, seed: u64) -> Result<Report> {
             .collect::<Vec<_>>()
             .join(", ")
     ));
-    let first = secs[0];
-    let rest_mean = secs[1..].iter().sum::<f64>() / (secs.len() - 1) as f64;
-    let rest_spread = secs[1..]
-        .iter()
-        .map(|s| (s - rest_mean).abs())
-        .fold(0.0f64, f64::max);
+    let Some((first, rest_mean, rest_spread)) = warmup_stats(&secs) else {
+        // Degenerate protocol (fewer than two runs): fail loudly instead
+        // of comparing against a NaN mean.
+        report.check(
+            "warm-up comparison needs at least two runs",
+            false,
+            format!("{} run(s) recorded", secs.len()),
+        );
+        return Ok(report);
+    };
     report.line(format!(
         "run 1: {first:.0}s | runs 2-10 mean: {rest_mean:.0}s (max dev {rest_spread:.0}s)"
     ));
@@ -290,5 +313,23 @@ mod tests {
         let current = runs.last.recorder.get("workers.current").unwrap().max();
         assert_eq!(current, 5.0, "quota saturated");
         assert!(runs.last.cloud.rejected_requests > 0, "IRM kept retrying");
+    }
+
+    #[test]
+    fn warmup_stats_guards_degenerate_series() {
+        // Regression: the inline arithmetic this helper replaced
+        // panicked on an empty series (`secs[1..]` out of range, then
+        // `len - 1` usize underflow) and divided 0 by 0 on a singleton
+        // — a NaN that poisoned every downstream check.
+        assert_eq!(warmup_stats(&[]), None);
+        assert_eq!(warmup_stats(&[42.0]), None);
+        // The well-defined cases are unchanged.
+        let (first, mean, spread) = warmup_stats(&[4.0, 2.0, 2.0, 2.0]).unwrap();
+        assert_eq!(first, 4.0);
+        assert_eq!(mean, 2.0);
+        assert_eq!(spread, 0.0);
+        let (_, mean, spread) = warmup_stats(&[5.0, 1.0, 3.0]).unwrap();
+        assert_eq!(mean, 2.0);
+        assert_eq!(spread, 1.0);
     }
 }

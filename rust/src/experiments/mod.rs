@@ -109,6 +109,10 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
         "ablation-liveprofile",
         "A6: mis-specified static RAM/net priors vs live multi-resource profiling",
     ),
+    (
+        "ablation-spot",
+        "A7: on-demand-only vs spot-aware (preemption-risk-priced) flavor planning",
+    ),
 ];
 
 /// Run one experiment (or "all") writing outputs under `out_dir`.
@@ -129,6 +133,7 @@ pub fn run(name: &str, out_dir: &str, seed: u64) -> Result<Vec<Report>> {
         "ablation-multidim" => vec![ablations::multidim(out, seed)?],
         "ablation-cost" => vec![ablations::cost(out, seed)?],
         "ablation-liveprofile" => vec![ablations::liveprofile(out, seed)?],
+        "ablation-spot" => vec![ablations::spot(out, seed)?],
         "all" => {
             let mut all = Vec::new();
             all.push(synthetic::run(out, seed, "fig3")?);
@@ -146,6 +151,7 @@ pub fn run(name: &str, out_dir: &str, seed: u64) -> Result<Vec<Report>> {
             all.push(ablations::multidim(out, seed)?);
             all.push(ablations::cost(out, seed)?);
             all.push(ablations::liveprofile(out, seed)?);
+            all.push(ablations::spot(out, seed)?);
             all
         }
         other => bail!(

@@ -48,12 +48,28 @@
 //! latency (equally priced capacity that arrives sooner is strictly
 //! better for deadlines), then toward the larger keyed capacity (fewer
 //! VMs, fewer boots).
+//!
+//! ## Spot tier ([`SpotPolicy`])
+//!
+//! A catalog entry with a spot market
+//! ([`FlavorOption::spot_price_per_hour`]) enters the same greedy as a
+//! *second candidate* of the same flavor, scored at its **effective
+//! rate** `spot_price + hazard × rework_penalty_usd`: the discounted
+//! rent plus the expected hourly cost of redoing the in-flight work a
+//! preemption destroys (hazard = expected reclaims/hour). Spot picks
+//! are capped at `floor(max_spot_fraction × vms)` per planned round, so
+//! one correlated reclaim can never take out more than that share of a
+//! scale-up burst. With `max_spot_fraction = 0` (the default), or a
+//! penalty large enough that every effective spot rate meets or exceeds
+//! its on-demand price, the mix degenerates to exactly the on-demand
+//! plan — the hazard-0 byte-identity the A7 ablation pins. On full
+//! score ties the safer on-demand candidate wins.
 
 use std::collections::HashMap;
 
 use crate::binpacking::ResourceVec;
 use crate::cloud::Flavor;
-use crate::irm::config::{BufferPolicy, FlavorOption};
+use crate::irm::config::{BufferPolicy, FlavorOption, SpotPolicy};
 use crate::types::{Millis, WorkerId};
 
 /// A worker as the autoscaler sees it.
@@ -63,17 +79,39 @@ pub struct WorkerState {
     pub pe_count: usize,
 }
 
+/// One planned VM purchase: which flavor, and at which pricing tier —
+/// the flavor planner's output unit. The harness maps it onto
+/// `SimCloud::request_vm_of` / `request_vm_spot`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlannedVm {
+    pub flavor: Flavor,
+    /// Buy the discounted, preemptible tier.
+    pub spot: bool,
+}
+
+impl PlannedVm {
+    /// An on-demand purchase (the only tier pre-spot plans produced).
+    pub fn on_demand(flavor: Flavor) -> Self {
+        PlannedVm { flavor, spot: false }
+    }
+
+    /// A spot-tier purchase.
+    pub fn spot(flavor: Flavor) -> Self {
+        PlannedVm { flavor, spot: true }
+    }
+}
+
 /// Scale plan for one control cycle.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ScalePlan {
     /// How many new VMs to request from the cloud this cycle (always
     /// `request_flavors.len()` when a flavor mix was planned).
     pub request_vms: usize,
-    /// Cost-aware flavor choice for the requested VMs, in request order.
-    /// Empty on the homogeneous path (no catalog configured) — the
-    /// harness then requests `request_vms` VMs of the cloud's default
-    /// flavor.
-    pub request_flavors: Vec<Flavor>,
+    /// Cost-aware flavor (and pricing-tier) choice for the requested
+    /// VMs, in request order. Empty on the homogeneous path (no catalog
+    /// configured) — the harness then requests `request_vms` VMs of the
+    /// cloud's default flavor, on-demand.
+    pub request_flavors: Vec<PlannedVm>,
     /// In-flight boot requests to cancel (costliest first, newest on
     /// ties — newest-first on a homogeneous cloud) before any live
     /// worker is touched. Cancelling a boot is free; terminating a live
@@ -205,10 +243,12 @@ impl AutoScaler {
 }
 
 /// The cost-aware flavor-choice planner (see the module-level notes for
-/// the greedy criterion and why it is the right knapsack relaxation).
+/// the greedy criterion and why it is the right knapsack relaxation, and
+/// for how the spot tier enters the same greedy).
 #[derive(Clone, Debug)]
 pub struct FlavorPlanner {
     options: Vec<FlavorOption>,
+    policy: SpotPolicy,
 }
 
 /// Numerical floor below which a demand component counts as satisfied —
@@ -217,97 +257,148 @@ pub struct FlavorPlanner {
 const DEMAND_EPS: f64 = crate::binpacking::EPS;
 
 impl FlavorPlanner {
-    /// A planner over a non-empty flavor catalog.
+    /// A planner over a non-empty flavor catalog, on-demand only (the
+    /// default [`SpotPolicy`] never buys spot).
     pub fn new(options: Vec<FlavorOption>) -> Self {
+        Self::with_policy(options, SpotPolicy::default())
+    }
+
+    /// A planner over a non-empty flavor catalog with an explicit
+    /// spot-purchase policy.
+    pub fn with_policy(options: Vec<FlavorOption>, policy: SpotPolicy) -> Self {
         assert!(!options.is_empty(), "flavor catalog must not be empty");
-        FlavorPlanner { options }
+        FlavorPlanner { options, policy }
     }
 
     pub fn options(&self) -> &[FlavorOption] {
         &self.options
     }
 
-    /// The catalog entry minimizing $/satisfied-unit along dimension `d`
-    /// for the remaining demand `need` (ties: shorter boot, then larger
-    /// keyed capacity — strict improvement keeps the earliest catalog
-    /// entry on full ties).
-    fn best_for(&self, d: usize, need: f64) -> Option<&FlavorOption> {
-        let mut chosen: Option<(&FlavorOption, f64)> = None;
+    /// The hourly rate a candidate competes at: the on-demand price, or
+    /// the spot price plus the expected-rework risk premium
+    /// (`hazard × rework_penalty_usd`). `None` when the flavor has no
+    /// spot market and the spot tier was asked for.
+    fn effective_rate(&self, opt: &FlavorOption, spot: bool) -> Option<f64> {
+        if spot {
+            opt.spot_price_per_hour
+                .map(|p| p + opt.spot_hazard_per_hour * self.policy.rework_penalty_usd)
+        } else {
+            Some(opt.price_per_hour)
+        }
+    }
+
+    /// The single candidate-selection routine behind both the
+    /// demand-covering pick and the buffer padding: walk every
+    /// (flavor, tier) candidate — spot only while `allow_spot` holds
+    /// (the per-round spot budget) — and keep the one minimizing
+    /// `score_of(opt, effective_rate)` under the shared tie-break:
+    /// shorter boot, then larger capacity along `tie_dim`, then the
+    /// safer on-demand tier (strict improvement keeps the earliest
+    /// catalog entry on full ties). `score_of` returning `None` skips a
+    /// candidate.
+    fn select_candidate(
+        &self,
+        allow_spot: bool,
+        tie_dim: usize,
+        mut score_of: impl FnMut(&FlavorOption, f64) -> Option<f64>,
+    ) -> Option<(&FlavorOption, bool)> {
+        let mut chosen: Option<(&FlavorOption, bool, f64)> = None;
         for opt in &self.options {
+            for spot in [false, true] {
+                if spot && !allow_spot {
+                    continue;
+                }
+                let Some(rate) = self.effective_rate(opt, spot) else {
+                    continue;
+                };
+                let Some(score) = score_of(opt, rate) else {
+                    continue;
+                };
+                let better = match &chosen {
+                    None => true,
+                    Some((cur, cur_spot, cur_score)) => match score.total_cmp(cur_score) {
+                        std::cmp::Ordering::Less => true,
+                        std::cmp::Ordering::Greater => false,
+                        std::cmp::Ordering::Equal => {
+                            (opt.boot_delay, -opt.capacity.0[tie_dim], spot)
+                                < (cur.boot_delay, -cur.capacity.0[tie_dim], *cur_spot)
+                        }
+                    },
+                };
+                if better {
+                    chosen = Some((opt, spot, score));
+                }
+            }
+        }
+        chosen.map(|(opt, spot, _)| (opt, spot))
+    }
+
+    /// The (catalog entry, tier) minimizing effective-$/satisfied-unit
+    /// along dimension `d` for the remaining demand `need`.
+    fn best_for(&self, d: usize, need: f64, allow_spot: bool) -> Option<(&FlavorOption, bool)> {
+        self.select_candidate(allow_spot, d, |opt, rate| {
             let satisfied = opt.capacity.0[d].min(need);
             if satisfied <= 0.0 {
-                continue;
+                None
+            } else {
+                Some(rate / satisfied)
             }
-            let score = opt.price_per_hour / satisfied;
-            let better = match chosen {
-                None => true,
-                Some((cur, cur_score)) => match score.total_cmp(&cur_score) {
-                    std::cmp::Ordering::Less => true,
-                    std::cmp::Ordering::Greater => false,
-                    std::cmp::Ordering::Equal => {
-                        (opt.boot_delay, -opt.capacity.0[d]) < (cur.boot_delay, -cur.capacity.0[d])
-                    }
-                },
-            };
-            if better {
-                chosen = Some((opt, score));
-            }
-        }
-        chosen.map(|(opt, _)| opt)
+        })
     }
 
-    /// The cheapest catalog entry by absolute hourly price (ties: shorter
-    /// boot, then larger CPU capacity) — what idle-buffer VMs pad with: a
-    /// buffer slot counts one VM regardless of flavor, so the cheapest
-    /// flavor buys the same headroom count for the least spend.
-    fn cheapest(&self) -> &FlavorOption {
-        let mut chosen = &self.options[0];
-        for opt in &self.options[1..] {
-            if (
-                opt.price_per_hour.total_cmp(&chosen.price_per_hour),
-                opt.boot_delay,
-                -opt.capacity.0[0],
-            ) < (
-                std::cmp::Ordering::Equal,
-                chosen.boot_delay,
-                -chosen.capacity.0[0],
-            ) {
-                chosen = opt;
-            }
-        }
-        chosen
+    /// The cheapest (catalog entry, tier) by absolute effective hourly
+    /// rate (capacity ties keyed on CPU) — what idle-buffer VMs pad
+    /// with: a buffer slot counts one VM regardless of flavor, so the
+    /// cheapest rate buys the same headroom count for the least spend.
+    /// Idle headroom is also the ideal spot workload — nothing in
+    /// flight to lose — but the same per-round budget still applies.
+    fn cheapest(&self, allow_spot: bool) -> (&FlavorOption, bool) {
+        self.select_candidate(allow_spot, 0, |_, rate| Some(rate))
+            .expect("catalog is non-empty")
     }
 
-    /// Choose exactly `vms` flavors: greedy $/satisfied-unit picks while
-    /// residual demand remains, cheapest-rate padding for the slots left
-    /// over (idle buffer headroom). Capping the mix at the count-based
-    /// ask keeps the cost-aware loop's supply dynamics **identical** to
-    /// the homogeneous path — over-requesting to cover demand would read
-    /// as `supply > target` next cycle and get the freshly planned boots
-    /// cancelled (thrash); demand beyond `vms` VMs simply re-pends and
-    /// the next cycle re-plans, exactly like the legacy loop converges.
-    /// Demand in dimensions no catalog flavor can provision is dropped
-    /// (no finite mix exists — mirroring `ideal_bins_md_in`'s
-    /// unprovisionable-dimension semantics, minus the panic).
-    pub fn plan_mix(&self, residual_demand: ResourceVec, vms: usize) -> Vec<Flavor> {
+    /// Choose exactly `vms` purchases: greedy effective-$/satisfied-unit
+    /// picks while residual demand remains, cheapest-rate padding for
+    /// the slots left over (idle buffer headroom). Capping the mix at
+    /// the count-based ask keeps the cost-aware loop's supply dynamics
+    /// **identical** to the homogeneous path — over-requesting to cover
+    /// demand would read as `supply > target` next cycle and get the
+    /// freshly planned boots cancelled (thrash); demand beyond `vms` VMs
+    /// simply re-pends and the next cycle re-plans, exactly like the
+    /// legacy loop converges. Demand in dimensions no catalog flavor can
+    /// provision is dropped (no finite mix exists — mirroring
+    /// `ideal_bins_md_in`'s unprovisionable-dimension semantics, minus
+    /// the panic). At most `floor(max_spot_fraction × vms)` of the picks
+    /// are spot.
+    pub fn plan_mix(&self, residual_demand: ResourceVec, vms: usize) -> Vec<PlannedVm> {
+        let spot_budget = if self.policy.max_spot_fraction > 0.0 {
+            (self.policy.max_spot_fraction * vms as f64).floor() as usize
+        } else {
+            0
+        };
+        let mut spot_used = 0usize;
         let mut demand = residual_demand;
         let mut mix = Vec::with_capacity(vms);
         while mix.len() < vms {
+            let allow_spot = spot_used < spot_budget;
             let d = demand.dominant_dim();
             let need = demand.0[d];
             if need <= DEMAND_EPS {
                 // Demand covered (or none): the remaining slots are idle
-                // buffer, bought at the cheapest hourly rate.
-                mix.push(self.cheapest().flavor);
+                // buffer, bought at the cheapest effective rate.
+                let (opt, spot) = self.cheapest(allow_spot);
+                spot_used += spot as usize;
+                mix.push(PlannedVm { flavor: opt.flavor, spot });
                 continue;
             }
-            let Some(opt) = self.best_for(d, need) else {
+            let Some((opt, spot)) = self.best_for(d, need, allow_spot) else {
                 // Unprovisionable dominant dimension: drop it and retry
                 // the rest of the vector.
                 demand.0[d] = 0.0;
                 continue;
             };
-            mix.push(opt.flavor);
+            spot_used += spot as usize;
+            mix.push(PlannedVm { flavor: opt.flavor, spot });
             for dim in 0..demand.0.len() {
                 demand.0[dim] = (demand.0[dim] - opt.capacity.0[dim]).max(0.0);
             }
@@ -453,12 +544,16 @@ mod tests {
         ])
     }
 
+    fn od(flavor: Flavor) -> PlannedVm {
+        PlannedVm::on_demand(flavor)
+    }
+
     #[test]
     fn planner_small_demand_buys_the_cheap_flavor() {
         // 0.3 reference units of RAM-dominant demand: a $0.25/h Large
         // satisfies it at $0.83/unit vs the Xlarge's $1.67/unit.
         let mix = catalog().plan_mix(ResourceVec::new(0.1, 0.3, 0.0), 1);
-        assert_eq!(mix, vec![Flavor::Large]);
+        assert_eq!(mix, vec![od(Flavor::Large)]);
     }
 
     #[test]
@@ -467,7 +562,7 @@ mod tests {
         // satisfies only 0.5) — the tie breaks to the bigger flavor
         // (same boot latency, fewer VMs), then the 0-residual loop ends.
         let mix = catalog().plan_mix(ResourceVec::new(1.0, 0.2, 0.0), 1);
-        assert_eq!(mix, vec![Flavor::Xlarge]);
+        assert_eq!(mix, vec![od(Flavor::Xlarge)]);
     }
 
     #[test]
@@ -477,18 +572,24 @@ mod tests {
         // cover the 0.6 tail ($0.50/u beats the Xlarge's $0.83/u on the
         // 0.6, then $2.50/u vs $5.00/u on the last 0.1).
         let mix = catalog().plan_mix(ResourceVec::new(1.6, 0.2, 0.1), 3);
-        assert_eq!(mix, vec![Flavor::Xlarge, Flavor::Large, Flavor::Large]);
+        assert_eq!(
+            mix,
+            vec![od(Flavor::Xlarge), od(Flavor::Large), od(Flavor::Large)]
+        );
         // The count-based ask caps the mix: leftover demand re-pends and
         // the next control cycle re-plans (legacy supply dynamics).
         let mix = catalog().plan_mix(ResourceVec::new(1.6, 0.2, 0.1), 1);
-        assert_eq!(mix, vec![Flavor::Xlarge]);
+        assert_eq!(mix, vec![od(Flavor::Xlarge)]);
     }
 
     #[test]
     fn planner_pads_buffer_vms_at_the_cheapest_rate() {
         // No residual demand but three buffer VMs wanted: all Large.
         let mix = catalog().plan_mix(ResourceVec::ZERO, 3);
-        assert_eq!(mix, vec![Flavor::Large, Flavor::Large, Flavor::Large]);
+        assert_eq!(
+            mix,
+            vec![od(Flavor::Large), od(Flavor::Large), od(Flavor::Large)]
+        );
     }
 
     #[test]
@@ -500,7 +601,7 @@ mod tests {
             FlavorOption::nominal(Flavor::Large, Millis::from_secs(30)),
         ]);
         let mix = p.plan_mix(ResourceVec::new(1.0, 0.0, 0.0), 2);
-        assert_eq!(mix, vec![Flavor::Large, Flavor::Large]);
+        assert_eq!(mix, vec![od(Flavor::Large), od(Flavor::Large)]);
     }
 
     #[test]
@@ -512,12 +613,121 @@ mod tests {
             flavor: Flavor::Large,
             capacity: ResourceVec::new(0.5, 0.5, 0.0),
             price_per_hour: 0.25,
+            spot_price_per_hour: None,
+            spot_hazard_per_hour: 0.0,
             boot_delay: boot,
         }]);
         // Dominant dim is net (unprovisionable) → dropped; CPU 0.3 still
         // covered by one Large.
         let mix = p.plan_mix(ResourceVec::new(0.3, 0.0, 0.9), 1);
-        assert_eq!(mix, vec![Flavor::Large]);
+        assert_eq!(mix, vec![od(Flavor::Large)]);
+    }
+
+    fn spot_catalog(policy: SpotPolicy) -> FlavorPlanner {
+        let boot = Millis::from_secs(45);
+        FlavorPlanner::with_policy(
+            vec![
+                FlavorOption::nominal_spot(Flavor::Xlarge, boot),
+                FlavorOption::nominal_spot(Flavor::Large, boot),
+            ],
+            policy,
+        )
+    }
+
+    #[test]
+    fn spot_picks_capped_by_max_spot_fraction() {
+        // 3.0 CPU units over 4 slots at fraction 0.5: floor(0.5×4) = 2
+        // spot picks (the cheaper effective rate goes first), then the
+        // budget is spent and the rest buys on-demand.
+        let p = spot_catalog(SpotPolicy {
+            max_spot_fraction: 0.5,
+            rework_penalty_usd: 0.0,
+        });
+        let mix = p.plan_mix(ResourceVec::new(3.0, 0.2, 0.1), 4);
+        assert_eq!(mix.len(), 4);
+        assert_eq!(mix.iter().filter(|v| v.spot).count(), 2, "budget floor(0.5×4)");
+        assert!(mix[0].spot && mix[1].spot, "discounted picks go first");
+        assert!(!mix[2].spot && !mix[3].spot);
+        // Uniform discount preserves the flavor choice: whole-unit
+        // demand buys Xlarges in both tiers, and the one post-demand
+        // buffer slot pads at the cheapest (Large) on-demand rate.
+        assert_eq!(
+            mix.iter().map(|v| v.flavor).collect::<Vec<_>>(),
+            vec![Flavor::Xlarge, Flavor::Xlarge, Flavor::Xlarge, Flavor::Large]
+        );
+    }
+
+    #[test]
+    fn fraction_zero_reproduces_the_on_demand_mix_exactly() {
+        // Spot metadata present but a zero budget: the plan must be
+        // byte-identical to the spot-free planner's (the degeneracy the
+        // A7 ablation pins end-to-end).
+        let spotless = catalog();
+        let p = spot_catalog(SpotPolicy::default());
+        for demand in [
+            ResourceVec::ZERO,
+            ResourceVec::new(0.3, 0.1, 0.0),
+            ResourceVec::new(1.6, 0.2, 0.1),
+            ResourceVec::new(0.1, 2.4, 0.3),
+        ] {
+            for vms in [1usize, 2, 4] {
+                assert_eq!(p.plan_mix(demand, vms), spotless.plan_mix(demand, vms));
+            }
+        }
+    }
+
+    #[test]
+    fn risk_penalty_prices_spot_out() {
+        // Xlarge spot $0.15 + hazard 0.4 × $1.00 = $0.55 effective —
+        // worse than the $0.50 on-demand rate, so even an unlimited spot
+        // budget buys on-demand.
+        let boot = Millis::from_secs(45);
+        let p = FlavorPlanner::with_policy(
+            vec![FlavorOption::nominal_spot(Flavor::Xlarge, boot)],
+            SpotPolicy {
+                max_spot_fraction: 1.0,
+                rework_penalty_usd: 1.0,
+            },
+        );
+        let mix = p.plan_mix(ResourceVec::new(1.0, 0.0, 0.0), 2);
+        assert_eq!(mix, vec![od(Flavor::Xlarge), od(Flavor::Xlarge)]);
+        // At a negligible penalty the same demand goes spot.
+        let p = FlavorPlanner::with_policy(
+            vec![FlavorOption::nominal_spot(Flavor::Xlarge, boot)],
+            SpotPolicy {
+                max_spot_fraction: 1.0,
+                rework_penalty_usd: 0.01,
+            },
+        );
+        let mix = p.plan_mix(ResourceVec::new(1.0, 0.0, 0.0), 2);
+        assert!(mix.iter().all(|v| v.spot && v.flavor == Flavor::Xlarge));
+    }
+
+    #[test]
+    fn buffer_padding_buys_the_cheapest_effective_rate() {
+        // Idle headroom with an open spot budget pads at the Large spot
+        // rate ($0.075/h — the cheapest candidate of the four).
+        let p = spot_catalog(SpotPolicy {
+            max_spot_fraction: 1.0,
+            rework_penalty_usd: 0.0,
+        });
+        let mix = p.plan_mix(ResourceVec::ZERO, 2);
+        assert_eq!(
+            mix,
+            vec![PlannedVm::spot(Flavor::Large), PlannedVm::spot(Flavor::Large)]
+        );
+    }
+
+    #[test]
+    fn single_vm_rounds_spot_budget_down() {
+        // floor(0.5 × 1) = 0: a lone replacement VM is never gambled on
+        // spot under a half-fleet policy.
+        let p = spot_catalog(SpotPolicy {
+            max_spot_fraction: 0.5,
+            rework_penalty_usd: 0.0,
+        });
+        let mix = p.plan_mix(ResourceVec::new(1.0, 0.0, 0.0), 1);
+        assert_eq!(mix, vec![od(Flavor::Xlarge)]);
     }
 
     #[test]
@@ -538,7 +748,10 @@ mod tests {
         );
         assert_eq!(plan.request_vms, plan.request_flavors.len());
         assert_eq!(plan.request_flavors.len(), 3);
-        assert!(plan.request_flavors.iter().all(|f| *f == Flavor::Large));
+        assert!(plan
+            .request_flavors
+            .iter()
+            .all(|p| *p == od(Flavor::Large)));
         // Scale-down path: flavors stay empty, cancels/terminations as in
         // the count-based plan.
         let mut s = scaler();

@@ -34,21 +34,66 @@ pub struct FlavorOption {
     /// Capacity vector in reference-VM units.
     pub capacity: ResourceVec,
     pub price_per_hour: f64,
+    /// Discounted spot rate in USD/hour when a spot market exists for
+    /// this flavor; `None` means on-demand only (the planner never
+    /// considers a spot purchase of it). Mirror the cloud's spot price
+    /// sheet ([`Flavor::spot_price_per_hour`](crate::cloud::Flavor) /
+    /// `CloudConfig::spot_pricing`).
+    pub spot_price_per_hour: Option<f64>,
+    /// Expected preemptions per hour of this flavor's spot tier — what
+    /// the planner's risk penalty multiplies (expected-rework cost =
+    /// hazard × [`SpotPolicy::rework_penalty_usd`]). Mirror
+    /// `CloudConfig::spot_hazard`.
+    pub spot_hazard_per_hour: f64,
     /// Nominal provisioning latency (the planner's tie-breaker: at equal
     /// $/satisfied-unit, capacity that arrives sooner wins).
     pub boot_delay: Millis,
 }
 
 impl FlavorOption {
-    /// The catalog entry for a [`Flavor`] at its nominal price.
+    /// The catalog entry for a [`Flavor`] at its nominal on-demand
+    /// price, with no spot market.
     pub fn nominal(flavor: Flavor, boot_delay: Millis) -> Self {
         FlavorOption {
             flavor,
             capacity: flavor.capacity(),
             price_per_hour: flavor.price_per_hour(),
+            spot_price_per_hour: None,
+            spot_hazard_per_hour: 0.0,
             boot_delay,
         }
     }
+
+    /// The catalog entry for a [`Flavor`] with both tiers at their
+    /// nominal prices and the flavor's nominal preemption hazard.
+    pub fn nominal_spot(flavor: Flavor, boot_delay: Millis) -> Self {
+        FlavorOption {
+            spot_price_per_hour: Some(flavor.spot_price_per_hour()),
+            spot_hazard_per_hour: flavor.spot_hazard_per_hour(),
+            ..Self::nominal(flavor, boot_delay)
+        }
+    }
+}
+
+/// How aggressively the [`FlavorPlanner`](crate::irm::FlavorPlanner)
+/// may buy spot capacity. The default (`max_spot_fraction = 0.0`) never
+/// buys spot — the planner then behaves exactly as before this knob
+/// existed.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SpotPolicy {
+    /// Upper bound on the spot share of each planned VM mix: at most
+    /// `floor(max_spot_fraction × vms)` of a round's picks may be spot
+    /// (`1.0` = the whole mix; `0.0`, the default, disables spot).
+    /// Bounding per round bounds the blast radius of a correlated
+    /// reclaim.
+    pub max_spot_fraction: f64,
+    /// Expected rework cost in USD charged per expected preemption: a
+    /// spot candidate competes at the effective rate
+    /// `spot_price + hazard × rework_penalty_usd` — the discounted rent
+    /// plus the expected hourly cost of redoing the in-flight work a
+    /// reclaim destroys. A large enough penalty prices spot out
+    /// entirely; `0.0` trusts the raw discount.
+    pub rework_penalty_usd: f64,
 }
 
 /// Which resource model the bin-packing manager packs on.
@@ -175,6 +220,10 @@ pub struct IrmConfig {
     /// `IrmUpdate::request_flavors` carries the chosen mix. Empty (the
     /// default) keeps the paper's homogeneous request path.
     pub flavor_catalog: Vec<FlavorOption>,
+    /// Spot-purchase policy for the flavor planner: how much of each
+    /// planned mix may be spot, and the risk penalty spot candidates
+    /// carry. The default disables spot purchases entirely.
+    pub spot_policy: SpotPolicy,
     pub buffer_policy: BufferPolicy,
     pub load_predictor: LoadPredictorConfig,
     /// TTL for container host requests (requeues burn one unit).
@@ -198,6 +247,7 @@ impl Default for IrmConfig {
             resource_model: ResourceModel::CpuOnly,
             image_resources: Vec::new(),
             flavor_catalog: Vec::new(),
+            spot_policy: SpotPolicy::default(),
             buffer_policy: BufferPolicy::Logarithmic,
             load_predictor: LoadPredictorConfig::default(),
             request_ttl: 100,

@@ -21,6 +21,10 @@ pub enum RequestOrigin {
     AutoScale,
     /// An explicit user request (stream connector "host this image").
     Manual,
+    /// A spot preemption notice: the request re-hosts a PE whose worker
+    /// the provider is about to reclaim
+    /// ([`Irm::preemption_notice`](crate::irm::Irm::preemption_notice)).
+    Preempted,
 }
 
 /// One container hosting request.

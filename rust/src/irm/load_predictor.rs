@@ -77,7 +77,10 @@ impl LoadPredictor {
     /// Feed one `cloud.cost_usd` ledger sample. The spend rate is the
     /// slope between consecutive distinct-time samples; call every
     /// control cycle (cheap, and a no-op at the same timestamp). With no
-    /// ceiling configured this is pure bookkeeping.
+    /// ceiling configured this is pure bookkeeping. The ledger blends
+    /// every pricing tier — spot VMs accrue into it at their discounted
+    /// rate — so the damper reacts to the spend actually being billed,
+    /// not the nominal on-demand worth of the fleet.
     pub fn observe_cost(&mut self, at: Millis, cost_usd: f64) {
         match self.last_cost {
             Some((t0, c0)) if at > t0 => {
@@ -184,6 +187,7 @@ mod tests {
             increase_small: 2,
             increase_large: 8,
             cooldown: Millis::from_secs(5),
+            cost_ceiling_usd_per_hour: None,
         }
     }
 

@@ -23,18 +23,20 @@ pub mod config;
 pub mod container_queue;
 pub mod load_predictor;
 
+use std::collections::HashSet;
+
 use crate::binpacking::ResourceVec;
 use crate::clock::Periodic;
-use crate::cloud::Flavor;
 use crate::master::Master;
 use crate::profiler::{ProfilerConfig, ResourceProfiler};
 use crate::protocol::WorkerReport;
 use crate::types::{CpuFraction, ImageName, Millis, WorkerId};
 
 pub use allocator::{Allocation, Allocator, PackOutcome, WorkerBin};
-pub use autoscaler::{AutoScaler, FlavorPlanner, ScalePlan, WorkerState};
+pub use autoscaler::{AutoScaler, FlavorPlanner, PlannedVm, ScalePlan, WorkerState};
 pub use config::{
     BufferPolicy, FlavorOption, IrmConfig, LoadPredictorConfig, PackerChoice, ResourceModel,
+    SpotPolicy,
 };
 pub use container_queue::{ContainerQueue, ContainerRequest, RequestOrigin};
 pub use load_predictor::{LoadPredictor, ScaleDecision};
@@ -65,10 +67,11 @@ pub struct IrmUpdate {
     pub start_pes: Vec<Allocation>,
     /// Request this many new VMs.
     pub request_vms: usize,
-    /// Cost-aware flavor per requested VM, in request order — filled only
-    /// when a `flavor_catalog` is configured (then always `request_vms`
-    /// long). Empty means the cloud's default flavor path.
-    pub request_flavors: Vec<Flavor>,
+    /// Cost-aware flavor (and pricing tier) per requested VM, in request
+    /// order — filled only when a `flavor_catalog` is configured (then
+    /// always `request_vms` long). Empty means the cloud's default
+    /// flavor path, on-demand.
+    pub request_flavors: Vec<PlannedVm>,
     /// Cancel this many in-flight VM boot requests — the autoscaler
     /// absorbs a transient over-supply here before it ever terminates a
     /// live worker. Cancellation order is the harness's choice of valve:
@@ -104,6 +107,13 @@ pub struct Irm {
     /// Cost-aware flavor choice (present iff the config carries a
     /// catalog).
     flavor_planner: Option<FlavorPlanner>,
+    /// Workers under a spot preemption notice: the packer stops placing
+    /// containers on them and the autoscaler stops counting them as
+    /// supply, so replacement capacity is planned — in reference units,
+    /// via the requeued requests' resource vectors — before the
+    /// provider reclaims them. Entries clear themselves when the worker
+    /// leaves the cluster view.
+    draining: HashSet<WorkerId>,
     binpack_timer: Periodic,
     /// Last packing telemetry, re-reported between runs so the recorded
     /// series are continuous.
@@ -134,7 +144,8 @@ impl Irm {
                 ..ProfilerConfig::default()
             }),
             flavor_planner: (!cfg.flavor_catalog.is_empty())
-                .then(|| FlavorPlanner::new(cfg.flavor_catalog.clone())),
+                .then(|| FlavorPlanner::with_policy(cfg.flavor_catalog.clone(), cfg.spot_policy)),
+            draining: HashSet::new(),
             binpack_timer: Periodic::new(cfg.binpack_interval),
             cfg,
             last_scheduled: Vec::new(),
@@ -157,6 +168,36 @@ impl Irm {
         let est = self.resource_estimate(&image);
         self.queue
             .push_vec(image, est, self.cfg.request_ttl, RequestOrigin::Manual, now);
+    }
+
+    /// A spot preemption notice for `worker`, which currently hosts
+    /// `hosted` (one entry per PE): treat it like a grace-drain. The
+    /// worker is marked draining — the packer stops placing containers
+    /// on it and the autoscaler stops counting it as supply — and one
+    /// hosting request per hosted PE re-enters the container queue at
+    /// its live resource estimate, so the replacement is planned in
+    /// **reference units** of the capacity about to vanish, not in VM
+    /// count. Idempotent per notice: a second call for a worker already
+    /// draining requeues nothing (no double-hosting).
+    pub fn preemption_notice(&mut self, worker: WorkerId, hosted: &[ImageName], now: Millis) {
+        if !self.draining.insert(worker) {
+            return;
+        }
+        for image in hosted {
+            let est = self.resource_estimate(image);
+            self.queue.push_vec(
+                image.clone(),
+                est,
+                self.cfg.request_ttl,
+                RequestOrigin::Preempted,
+                now,
+            );
+        }
+    }
+
+    /// Whether `worker` is currently draining under a preemption notice.
+    pub fn is_draining(&self, worker: WorkerId) -> bool {
+        self.draining.contains(&worker)
     }
 
     /// Full resource-vector estimate for an image, every dimension live:
@@ -208,9 +249,18 @@ impl Irm {
     ) -> IrmUpdate {
         let mut update = IrmUpdate::default();
 
+        // Drop drain marks for workers that left the cluster (the
+        // provider reclaimed them, or they were terminated).
+        if !self.draining.is_empty() {
+            self.draining
+                .retain(|id| view.workers.iter().any(|(w, _)| w == id));
+        }
+
         // --- 0. Cost feedback: the predictor tracks the cloud's spend
         // rate so the optional cost-aware damper can soften scale-ups
-        // (inert unless `cost_ceiling_usd_per_hour` is configured). ---
+        // (inert unless `cost_ceiling_usd_per_hour` is configured). The
+        // observed ledger is the *blended* spot + on-demand spend, so a
+        // capped budget reacts to what is actually being billed. ---
         self.predictor.observe_cost(now, view.cost_usd);
 
         // --- 1. Load predictor: queue pressure → PE hosting requests. ---
@@ -237,6 +287,12 @@ impl Irm {
             let requests = self.queue.drain();
             self.bins_buf.clear();
             for (i, (id, images)) in view.workers.iter().enumerate() {
+                // A draining (preemption-noticed) worker is a closed
+                // bin: nothing new may be placed on capacity the
+                // provider is about to reclaim.
+                if self.draining.contains(id) {
+                    continue;
+                }
                 // Unlisted capacities (short or empty vector) mean the
                 // unit reference flavor.
                 let capacity = view
@@ -265,12 +321,21 @@ impl Irm {
             update.scheduled_vec = outcome.scheduled_vec;
         }
 
-        // --- 3. Auto-scaler: worker supply vs bins needed. ---
+        // --- 3. Auto-scaler: worker supply vs bins needed. Draining
+        // workers are not supply — their capacity is already lost to the
+        // pending reclaim, and excluding them both plans the
+        // replacement now and keeps them off the termination candidate
+        // list (the provider terminates them; we just stop using them).
         self.states_buf.clear();
-        self.states_buf.extend(view.workers.iter().map(|(id, images)| WorkerState {
-            worker: *id,
-            pe_count: images.len(),
-        }));
+        self.states_buf.extend(
+            view.workers
+                .iter()
+                .filter(|(id, _)| !self.draining.contains(id))
+                .map(|(id, images)| WorkerState {
+                    worker: *id,
+                    pe_count: images.len(),
+                }),
+        );
         let plan = match &self.flavor_planner {
             Some(planner) => self.scaler.plan_with_flavors(
                 now,
@@ -309,9 +374,17 @@ impl Irm {
             return;
         }
         let waiting_total: usize = backlog.iter().map(|(_, n)| n).sum();
+        if waiting_total == 0 {
+            // An all-zero backlog (possible if a backlog source ever
+            // reports images with zero waiting messages) would make
+            // every share 0/0 = NaN below; today that NaN only became 0
+            // by accident of `as usize` truncation. No demand — nothing
+            // to enqueue.
+            return;
+        }
         for (image, waiting) in &backlog {
             // Proportional share, at least 1 for any waiting image.
-            let share = ((total * waiting) as f64 / waiting_total as f64).ceil() as usize;
+            let share = Self::proportional_share(total, *waiting, waiting_total);
             let hosted: usize = view
                 .workers
                 .iter()
@@ -337,6 +410,19 @@ impl Irm {
                 );
             }
         }
+    }
+
+    /// One image's ceil-proportional share of a `total` PE increase,
+    /// given `waiting` of `waiting_total` backlog messages. The
+    /// `waiting_total == 0` case is guarded **explicitly**: the 0/0
+    /// division would yield NaN, which `as usize` happens to truncate
+    /// to 0 today — an invariant this helper (and its boundary test)
+    /// keeps from silently drifting under refactors.
+    fn proportional_share(total: usize, waiting: usize, waiting_total: usize) -> usize {
+        if waiting_total == 0 {
+            return 0;
+        }
+        ((total * waiting) as f64 / waiting_total as f64).ceil() as usize
     }
 }
 
@@ -659,5 +745,69 @@ mod tests {
         flood_backlog(&mut master, "img", 3);
         let _ = irm.control_cycle(Millis(0), &mut master, &view(&[], 0));
         assert!(irm.queue.len() <= 3, "queued {}", irm.queue.len());
+    }
+
+    #[test]
+    fn proportional_share_guards_the_zero_backlog_boundary() {
+        // Regression: 0/0 is NaN, and `NaN as usize` truncates to 0 —
+        // the guard must make that 0 explicit, not accidental.
+        assert_eq!(Irm::proportional_share(8, 0, 0), 0);
+        assert_eq!(Irm::proportional_share(0, 0, 0), 0);
+        // Normal proportional rounding is unchanged.
+        assert_eq!(Irm::proportional_share(8, 1, 2), 4);
+        assert_eq!(Irm::proportional_share(3, 1, 3), 1);
+        assert_eq!(Irm::proportional_share(3, 2, 3), 2);
+        assert_eq!(Irm::proportional_share(1, 1, 3), 1, "ceil: any waiting image gets one");
+    }
+
+    #[test]
+    fn preemption_notice_requeues_hosted_pes_exactly_once() {
+        let mut irm = Irm::new(fast_cfg());
+        let hosted = [ImageName::new("img"), ImageName::new("img")];
+        irm.preemption_notice(WorkerId(0), &hosted, Millis(0));
+        assert!(irm.is_draining(WorkerId(0)));
+        assert_eq!(irm.queue.len(), 2, "one request per hosted PE");
+        // A duplicate notice for the same worker must not double-host.
+        irm.preemption_notice(WorkerId(0), &hosted, Millis(10));
+        assert_eq!(irm.queue.len(), 2, "idempotent per worker");
+        let drained = irm.queue.drain();
+        assert!(drained
+            .iter()
+            .all(|r| r.origin == RequestOrigin::Preempted));
+    }
+
+    #[test]
+    fn draining_worker_receives_no_new_containers_and_is_not_supply() {
+        let mut irm = Irm::new(fast_cfg());
+        let mut master = Master::new();
+        // Worker 0 hosts two PEs and gets a preemption notice; worker 1
+        // is empty and healthy.
+        let hosted = [ImageName::new("img"), ImageName::new("img")];
+        irm.preemption_notice(WorkerId(0), &hosted, Millis(0));
+        let v = view(&[(0, &["img", "img"]), (1, &[])], 0);
+        let update = irm.control_cycle(Millis(0), &mut master, &v);
+        // Both requeued 0.5-sized requests fit worker 1 — and only
+        // worker 1: the draining bin is closed.
+        assert_eq!(update.start_pes.len(), 2);
+        assert!(
+            update.start_pes.iter().all(|a| a.worker == WorkerId(1)),
+            "draining worker must not receive placements: {:?}",
+            update.start_pes.iter().map(|a| a.worker).collect::<Vec<_>>()
+        );
+        // The draining worker is neither supply nor a termination
+        // candidate (the provider reclaims it; we just stop using it).
+        assert!(!update.terminate_workers.contains(&WorkerId(0)));
+    }
+
+    #[test]
+    fn drain_mark_clears_when_the_worker_leaves_the_view() {
+        let mut irm = Irm::new(fast_cfg());
+        let mut master = Master::new();
+        irm.preemption_notice(WorkerId(0), &[ImageName::new("img")], Millis(0));
+        assert!(irm.is_draining(WorkerId(0)));
+        // The provider reclaimed it: the worker is gone from the view.
+        irm.control_cycle(Millis(0), &mut master, &view(&[(1, &[])], 0));
+        assert!(!irm.is_draining(WorkerId(0)), "stale drain mark cleared");
+        // The slot id can now be reused by a fresh worker safely.
     }
 }

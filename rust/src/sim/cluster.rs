@@ -14,7 +14,7 @@
 use std::collections::{HashMap, HashSet};
 
 use crate::binpacking::{Resource, ResourceVec};
-use crate::cloud::{CloudConfig, SimCloud};
+use crate::cloud::{CloudConfig, SimCloud, SpotEvent};
 use crate::connector::LocalConnector;
 use crate::irm::{ClusterView, Irm, IrmConfig};
 use crate::master::Master;
@@ -117,6 +117,13 @@ pub struct SimCluster {
     /// image on one node share the single registry pull and all wait for
     /// it (docker semantics).
     pulls_in_flight: HashMap<(WorkerId, ImageName), Millis>,
+    /// Spot VMs whose preemption notice arrived while they were still
+    /// booting: the drain mark is applied the moment the worker
+    /// registers (a noticed boot that still becomes ready must be born
+    /// draining, not packed onto). Entries clear on registration or
+    /// reclaim; a noticed boot cancelled by the autoscaler leaves a
+    /// stale `VmId` behind, which is harmless (ids are never reused).
+    noticed_while_booting: HashSet<VmId>,
     arrivals: EventQueue<Arrival>,
     pub completions: Vec<Completion>,
     pub failed_deliveries: u64,
@@ -160,6 +167,7 @@ impl SimCluster {
             connector: LocalConnector::new(),
             pulled_images: HashSet::new(),
             pulls_in_flight: HashMap::new(),
+            noticed_while_booting: HashSet::new(),
             arrivals: EventQueue::new(),
             completions: Vec::new(),
             failed_deliveries: 0,
@@ -177,6 +185,16 @@ impl SimCluster {
     /// Position of worker `id` in the (id-sorted) worker list.
     fn worker_pos(&self, id: WorkerId) -> Option<usize> {
         self.workers.binary_search_by_key(&id, |w| w.id).ok()
+    }
+
+    /// The worker backing a VM, if it registered (a booting VM has
+    /// none). Rare-path reverse lookup (spot events only) — the forward
+    /// map stays the only per-tick structure.
+    fn worker_of_vm(&self, vm: VmId) -> Option<WorkerId> {
+        self.vm_of_worker
+            .iter()
+            .find(|(_, v)| **v == vm)
+            .map(|(w, _)| *w)
     }
 
     /// Flavor capacity of worker `id` in reference-VM units, from the
@@ -330,6 +348,50 @@ impl SimCluster {
             });
             self.workers.push(worker);
             self.workers.sort_by_key(|w| w.id);
+            // A boot that was preemption-noticed while provisioning
+            // registers already draining: the reclaim clock is running,
+            // so this worker must never be packed onto or counted as
+            // supply (it hosts nothing yet — nothing to requeue).
+            if self.noticed_while_booting.remove(&vm) {
+                self.irm.preemption_notice(id, &[], now);
+            }
+        }
+        // Spot lifecycle: a preemption notice puts the worker into
+        // grace-drain (the IRM stops packing onto it and requeues its
+        // hosted PEs elsewhere); the reclaim itself is handled like a
+        // hardware failure — in-flight messages are recovered onto the
+        // master backlog, the slot frees, and the autoscaler's
+        // replacement (already planned at notice time) takes over. A
+        // notice can also hit a VM still booting — buffered above so the
+        // drain mark lands the moment the worker registers — and a
+        // reclaim can, in which case the VM simply never becomes a
+        // worker.
+        for event in self.cloud.take_spot_events() {
+            match event {
+                SpotEvent::Preempted { vm, notice: _ } => {
+                    if let Some(wid) = self.worker_of_vm(vm) {
+                        if let Some(pos) = self.worker_pos(wid) {
+                            let hosted: Vec<ImageName> = self.workers[pos]
+                                .pes()
+                                .iter()
+                                .filter(|p| {
+                                    p.state() != crate::protocol::PeState::Stopping
+                                })
+                                .map(|p| p.image.clone())
+                                .collect();
+                            self.irm.preemption_notice(wid, &hosted, now);
+                        }
+                    } else {
+                        self.noticed_while_booting.insert(vm);
+                    }
+                }
+                SpotEvent::Reclaimed { vm } => {
+                    self.noticed_while_booting.remove(&vm);
+                    if let Some(wid) = self.worker_of_vm(vm) {
+                        self.fail_worker(wid);
+                    }
+                }
+            }
         }
 
         // --- 3. Workers advance (reused event buffers — no per-tick
@@ -450,9 +512,14 @@ impl SimCluster {
                 let _ = self.cloud.request_vm(now);
             }
         } else {
-            // Cost-aware path: the IRM chose a flavor per VM.
-            for flavor in &update.request_flavors {
-                let _ = self.cloud.request_vm_of(now, *flavor);
+            // Cost-aware path: the IRM chose a flavor — and a pricing
+            // tier — per VM.
+            for planned in &update.request_flavors {
+                let _ = if planned.spot {
+                    self.cloud.request_vm_spot(now, planned.flavor)
+                } else {
+                    self.cloud.request_vm_of(now, planned.flavor)
+                };
             }
         }
         for _ in 0..update.cancel_boots {
@@ -639,9 +706,15 @@ impl SimCluster {
         self.recorder
             .record("cloud.rejected", now, self.cloud.rejected_requests as f64);
         // Running spend (the cost-aware ablation's headline series; the
-        // ledger is monotone non-decreasing by construction).
+        // ledger is monotone non-decreasing by construction), with the
+        // spot share and the provider-reclaim count alongside (the A7
+        // spot ablation's series).
         self.recorder
             .record("cloud.cost_usd", now, self.cloud.cost_usd());
+        self.recorder
+            .record("cloud.spot_cost_usd", now, self.cloud.spot_cost_usd());
+        self.recorder
+            .record("cloud.preemptions", now, self.cloud.preemptions as f64);
         self.recorder.record(
             "completions",
             now,
@@ -1042,6 +1115,145 @@ mod tests {
             sum = sum.add(&wcap);
         }
         assert_eq!(c.total_capacity(), sum);
+    }
+
+    #[test]
+    fn spot_cluster_preempts_recovers_and_bills_the_discounted_rate() {
+        use crate::cloud::Flavor;
+        use crate::irm::{FlavorOption, ResourceModel, SpotPolicy};
+        // Spot-everything fleet under an aggressive hazard (mean VM
+        // lifetime two minutes): preemptions must actually occur, the
+        // notice → drain → reclaim → replace loop must conserve every
+        // message, and the ledger must carry a nonzero spot share.
+        let hazard = 30.0;
+        let boot = Millis::from_secs(5);
+        let mut cfg = ClusterConfig {
+            cloud: CloudConfig {
+                quota: 6,
+                boot_delay: boot,
+                boot_jitter: Millis(1000),
+                spot_hazard: vec![
+                    (Flavor::Small, hazard),
+                    (Flavor::Large, hazard),
+                    (Flavor::Xlarge, hazard),
+                ],
+                preemption_notice: Millis::from_secs(10),
+                ..CloudConfig::default()
+            },
+            worker: WorkerConfig {
+                container_boot: Millis(2000),
+                container_boot_jitter: Millis(500),
+                container_idle_timeout: Millis::from_secs(5),
+                measure_noise_std: 0.0,
+                ..WorkerConfig::default()
+            },
+            ..ClusterConfig::default()
+        };
+        cfg.irm.resource_model = ResourceModel::Vector {
+            new_vm_capacity: Flavor::Large.capacity(),
+        };
+        cfg.irm.image_resources = vec![(ImageName::new("img"), ResourceVec::new(0.0, 0.3, 0.05))];
+        cfg.irm.flavor_catalog = vec![
+            FlavorOption {
+                spot_hazard_per_hour: hazard,
+                ..FlavorOption::nominal_spot(Flavor::Xlarge, boot)
+            },
+            FlavorOption {
+                spot_hazard_per_hour: hazard,
+                ..FlavorOption::nominal_spot(Flavor::Large, boot)
+            },
+        ];
+        cfg.irm.spot_policy = SpotPolicy {
+            max_spot_fraction: 1.0,
+            rework_penalty_usd: 0.001,
+        };
+        // Enough work (~500 reference-seconds) that several spot VM
+        // lifetimes elapse before the batch drains.
+        let mut c = SimCluster::new(cfg);
+        burst(&mut c, 200, Millis(0), Millis::from_secs(20));
+        let makespan = c.run_to_completion(200, Millis::from_secs(4000));
+        assert!(makespan.is_some(), "drained through spot churn");
+        assert_eq!(c.completions.len(), 200);
+        assert_eq!(c.accounted_messages(), 200, "conservation through preemptions");
+        assert!(
+            c.cloud.preemptions >= 1,
+            "a two-minute mean lifetime must reclaim something"
+        );
+        assert!(c.cloud.spot_cost_usd() > 0.0, "spot capacity was billed");
+        assert!(
+            c.cloud.spot_cost_usd() <= c.cloud.cost_usd() + 1e-12,
+            "the spot share never exceeds the blended total"
+        );
+        // The series exist for the experiment layer.
+        assert!(c.recorder.get("cloud.preemptions").is_some());
+        assert!(c.recorder.get("cloud.spot_cost_usd").is_some());
+    }
+
+    #[test]
+    fn notice_during_boot_registers_the_worker_draining() {
+        use crate::cloud::Flavor;
+        use crate::irm::{FlavorOption, ResourceModel, SpotPolicy};
+        // A notice window (1 h) far longer than the boot delay means
+        // every spot VM is preemption-noticed while still provisioning
+        // (hazard 30/h puts the reclaim inside the window essentially
+        // surely). Regression: such notices used to be dropped — the
+        // worker then registered clean and was packed onto doomed
+        // capacity. It must be born draining and receive nothing.
+        let hazard = 30.0;
+        let boot = Millis::from_secs(5);
+        let mut cfg = ClusterConfig {
+            cloud: CloudConfig {
+                quota: 4,
+                boot_delay: boot,
+                boot_jitter: Millis(1000),
+                spot_hazard: vec![
+                    (Flavor::Small, hazard),
+                    (Flavor::Large, hazard),
+                    (Flavor::Xlarge, hazard),
+                ],
+                preemption_notice: Millis::from_secs(3600),
+                ..CloudConfig::default()
+            },
+            ..ClusterConfig::default()
+        };
+        cfg.irm.resource_model = ResourceModel::Vector {
+            new_vm_capacity: Flavor::Large.capacity(),
+        };
+        cfg.irm.flavor_catalog = vec![
+            FlavorOption {
+                spot_hazard_per_hour: hazard,
+                ..FlavorOption::nominal_spot(Flavor::Xlarge, boot)
+            },
+            FlavorOption {
+                spot_hazard_per_hour: hazard,
+                ..FlavorOption::nominal_spot(Flavor::Large, boot)
+            },
+        ];
+        cfg.irm.spot_policy = SpotPolicy {
+            max_spot_fraction: 1.0,
+            rework_penalty_usd: 0.0,
+        };
+        let mut c = SimCluster::new(cfg);
+        burst(&mut c, 20, Millis(0), Millis::from_secs(8));
+        // Check the invariant at every tick: whatever registers must
+        // already be draining, and must never receive a container.
+        let mut saw_worker = false;
+        let mut t = Millis::ZERO;
+        c.tick(t);
+        for _ in 0..300 {
+            t = t + Millis(100);
+            c.tick(t);
+            for w in c.workers() {
+                saw_worker = true;
+                assert!(
+                    c.irm.is_draining(w.id),
+                    "worker {:?} was noticed mid-boot and must be born draining",
+                    w.id
+                );
+                assert_eq!(w.pe_count(), 0, "no containers placed on doomed capacity");
+            }
+        }
+        assert!(saw_worker, "spot workers registered at some point");
     }
 
     #[test]

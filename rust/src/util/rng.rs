@@ -177,9 +177,24 @@ mod tests {
         let mut r = Rng::seeded(17);
         let n = 20_001;
         let mut xs: Vec<f64> = (0..n).map(|_| r.lognormal(15.0, 0.3)).collect();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         let med = xs[n / 2];
         assert!((med - 15.0).abs() < 0.5, "median={med}");
+    }
+
+    #[test]
+    fn total_cmp_sort_survives_nan_inputs() {
+        // Regression (the last survivor of the NaN-safety sweep): the
+        // median computation above once sorted with
+        // `partial_cmp(..).unwrap()`, which panics on the first NaN it
+        // compares. `total_cmp` gives f64 a total order instead —
+        // positive NaNs sort after every finite value — so a
+        // NaN-polluted series degrades to a skewed median rather than a
+        // crash.
+        let mut xs = vec![3.0, f64::NAN, 1.0, 2.0, f64::NAN];
+        xs.sort_by(f64::total_cmp);
+        assert_eq!(&xs[..3], &[1.0, 2.0, 3.0]);
+        assert!(xs[3].is_nan() && xs[4].is_nan());
     }
 
     #[test]

@@ -5,12 +5,16 @@
 //! crashes on an Xlarge/Large mix are answered in *reference units* of
 //! capacity (not VM count), and the cloud's cost ledger stays monotone —
 //! no negative spend, no double-billed cancelled boot — through arbitrary
-//! crash/cancel churn.
+//! crash/cancel churn. The spot cases add the provider-initiated failure
+//! mode: preemption notices grace-drain workers, requeued containers are
+//! never lost or double-hosted, reclaimed capacity is replaced in
+//! reference units, and both the blended ledger and its spot share stay
+//! monotone under preempt/cancel/crash churn.
 
 use harmonicio::binpacking::Resource;
 use harmonicio::cloud::{CloudConfig, Flavor};
 use harmonicio::experiments::microscopy;
-use harmonicio::irm::{FlavorOption, ResourceModel};
+use harmonicio::irm::{FlavorOption, ResourceModel, SpotPolicy};
 use harmonicio::sim::{Arrival, ClusterConfig, SimCluster};
 use harmonicio::types::{ImageName, Millis, WorkerId};
 use harmonicio::util::rng::Rng;
@@ -122,6 +126,10 @@ fn failing_unknown_worker_is_noop() {
 /// A cost-aware heterogeneous cluster: Xlarge/Large catalog + cycle,
 /// vector packing, RAM-carrying workload.
 fn hetero_cluster(quota: usize) -> SimCluster {
+    SimCluster::new(hetero_cfg(quota))
+}
+
+fn hetero_cfg(quota: usize) -> ClusterConfig {
     let mut cfg: ClusterConfig = microscopy::cluster_config(7);
     cfg.cloud = CloudConfig {
         quota,
@@ -147,7 +155,7 @@ fn hetero_cluster(quota: usize) -> SimCluster {
         FlavorOption::nominal(Flavor::Xlarge, Millis::from_secs(8)),
         FlavorOption::nominal(Flavor::Large, Millis::from_secs(8)),
     ];
-    SimCluster::new(cfg)
+    cfg
 }
 
 #[test]
@@ -190,6 +198,148 @@ fn heterogeneous_crashes_replace_capacity_not_vm_count() {
         (doubled - doubled.round()).abs() < 1e-6,
         "capacity {cap_after} is not a sum of Xlarge/Large units"
     );
+}
+
+/// The spot variant of [`hetero_cluster`]: the whole fleet may be
+/// bought spot, under an aggressive preemption hazard (mean spot VM
+/// lifetime `3600/hazard_per_hour` seconds) so provider reclaims
+/// actually churn the run.
+fn spot_cluster(quota: usize, hazard_per_hour: f64) -> SimCluster {
+    let mut cfg = hetero_cfg(quota);
+    let boot = Millis::from_secs(8);
+    cfg.cloud.spot_hazard = vec![
+        (Flavor::Small, hazard_per_hour),
+        (Flavor::Large, hazard_per_hour),
+        (Flavor::Xlarge, hazard_per_hour),
+    ];
+    cfg.cloud.preemption_notice = Millis::from_secs(10);
+    cfg.irm.flavor_catalog = vec![
+        FlavorOption {
+            spot_hazard_per_hour: hazard_per_hour,
+            ..FlavorOption::nominal_spot(Flavor::Xlarge, boot)
+        },
+        FlavorOption {
+            spot_hazard_per_hour: hazard_per_hour,
+            ..FlavorOption::nominal_spot(Flavor::Large, boot)
+        },
+    ];
+    cfg.irm.spot_policy = SpotPolicy {
+        max_spot_fraction: 1.0,
+        rework_penalty_usd: 0.001,
+    };
+    SimCluster::new(cfg)
+}
+
+#[test]
+fn spot_preemptions_never_lose_or_double_host_messages() {
+    // Mean spot lifetime two minutes on an all-spot fleet: the
+    // notice → grace-drain → requeue → reclaim → replace loop runs many
+    // times. At every checkpoint each message must be exactly one of
+    // completed / backlogged / in-flight (never lost, never cloned into
+    // two PEs), and the whole batch must still drain.
+    let mut c = spot_cluster(8, 30.0);
+    burst(&mut c, 150, 12);
+    let mut t = Millis::ZERO;
+    for _ in 0..20 {
+        t = t + Millis::from_secs(15);
+        c.run_until(t);
+        assert_eq!(
+            c.accounted_messages(),
+            150,
+            "conservation violated under preemption churn at {t}"
+        );
+    }
+    assert!(
+        c.cloud.preemptions >= 1,
+        "a two-minute mean lifetime over 300 s must reclaim something"
+    );
+    let makespan = c.run_to_completion(150, Millis::from_secs(6000));
+    assert!(makespan.is_some(), "drained despite spot churn");
+    assert_eq!(c.completions.len(), 150, "every message completed exactly once");
+}
+
+#[test]
+fn preempted_capacity_is_replaced_in_reference_units() {
+    // Under sustained backlog pressure, whatever the provider reclaims
+    // must come back as *capacity* (reference units), not as a VM
+    // count — and only in catalog-flavor quanta.
+    // ~800·30s·0.125 = 3000 ref-seconds against ≤ 8 mixed VMs: the
+    // backlog outlasts the whole churn window by a wide margin.
+    let mut c = spot_cluster(8, 30.0);
+    burst(&mut c, 800, 30);
+    c.run_until(Millis::from_secs(80));
+    assert!(c.master.backlog_len() > 0, "still under pressure");
+    let cap_early = c.total_capacity().get(Resource::Cpu);
+    assert!(cap_early > 0.0);
+    // Let preemptions and replacements churn for a while.
+    c.run_until(Millis::from_secs(380));
+    assert!(c.master.backlog_len() > 0, "pressure sustained through churn");
+    assert!(c.cloud.preemptions >= 1, "churn actually happened");
+    // Capacity is a sum of catalog-flavor capacities (0.5 / 1.0
+    // reference CPUs): doubling it must land on an integer.
+    let cap_late = c.total_capacity().get(Resource::Cpu);
+    let doubled = cap_late * 2.0;
+    assert!(
+        (doubled - doubled.round()).abs() < 1e-6,
+        "capacity {cap_late} is not a sum of Xlarge/Large units"
+    );
+    // The autoscaler kept the fleet useful: messages keep completing
+    // through the churn window (capacity was genuinely replaced, not
+    // just counted).
+    assert!(
+        !c.completions.is_empty(),
+        "work progressed through preemption churn"
+    );
+    assert_eq!(c.accounted_messages(), 800, "conservation held throughout");
+}
+
+#[test]
+fn cost_ledger_monotone_under_preempt_cancel_crash_churn() {
+    // All three failure modes interleaved — provider reclaims (spot),
+    // operator crashes, and cost-valve boot cancellations — must keep
+    // both the blended ledger and its spot share monotone, and the spot
+    // share must never exceed the total.
+    let mut c = spot_cluster(6, 20.0);
+    burst(&mut c, 120, 12);
+    let mut rng = Rng::seeded(13);
+    let mut last_cost = 0.0_f64;
+    let mut last_spot = 0.0_f64;
+    let mut t = Millis::ZERO;
+    for round in 0..16 {
+        t = t + Millis::from_secs(15);
+        c.run_until(t);
+        let cost = c.cloud.cost_usd();
+        let spot = c.cloud.spot_cost_usd();
+        assert!(cost >= 0.0 && spot >= 0.0);
+        assert!(
+            cost >= last_cost - 1e-12,
+            "ledger regressed at round {round}: {last_cost} -> {cost}"
+        );
+        assert!(
+            spot >= last_spot - 1e-12,
+            "spot ledger regressed at round {round}: {last_spot} -> {spot}"
+        );
+        assert!(spot <= cost + 1e-9, "spot share exceeds the blended total");
+        last_cost = cost;
+        last_spot = spot;
+        match round % 3 {
+            0 => {
+                let ids: Vec<WorkerId> = c.workers().iter().map(|w| w.id).collect();
+                if !ids.is_empty() {
+                    c.fail_worker(ids[rng.below(ids.len() as u64) as usize]);
+                }
+            }
+            1 => {
+                c.cloud.cancel_costliest_booting(c.now());
+            }
+            _ => {} // let scheduled preemptions do the damage
+        }
+        assert_eq!(c.accounted_messages(), 120, "conservation after chaos round");
+    }
+    assert!(last_cost > 0.0, "the run was billed at all");
+    let makespan = c.run_to_completion(120, Millis::from_secs(6000));
+    assert!(makespan.is_some(), "drained despite preempt/cancel/crash churn");
+    assert!(c.cloud.cost_usd() >= last_cost);
 }
 
 #[test]

@@ -9,7 +9,7 @@ fn all_figures_reproduce_with_passing_checks() {
     std::fs::create_dir_all(&out).unwrap();
     let reports =
         harmonicio::experiments::run("all", out.to_str().unwrap(), 42).expect("suite runs");
-    assert_eq!(reports.len(), 15, "all 15 experiments ran");
+    assert_eq!(reports.len(), 16, "all 16 experiments ran");
     let mut failed = Vec::new();
     for r in &reports {
         for c in &r.checks {
@@ -37,6 +37,7 @@ fn all_figures_reproduce_with_passing_checks() {
         "ablation_multidim.csv",
         "ablation_cost.csv",
         "ablation_liveprofile.csv",
+        "ablation_spot.csv",
     ] {
         let path = out.join(fig);
         let meta = std::fs::metadata(&path).unwrap_or_else(|_| panic!("{fig} missing"));
@@ -57,9 +58,10 @@ fn figures_are_deterministic_per_seed() {
     assert_eq!(a, b, "same seed → identical figure data");
 }
 
-/// Golden regression pin for the A4/A5/A6 headline metrics at seed 42:
-/// the full metric CSVs (overcommit_pp, cost_usd, deadline misses,
-/// makespans, peak workers, live-profile convergence) are snapshotted
+/// Golden regression pin for the A4/A5/A6/A7 headline metrics at seed
+/// 42: the full metric CSVs (overcommit_pp, cost_usd, spot spend and
+/// preemption counts, deadline misses, makespans, peak workers,
+/// live-profile convergence) are snapshotted
 /// under `rust/tests/golden/` and compared byte-for-byte — the
 /// experiments are deterministic per seed, so any diff is a behavior
 /// change in the packing/planning/profiling stack, not noise. The
@@ -85,6 +87,7 @@ fn golden_ablation_metrics_pinned_per_seed() {
         harmonicio::experiments::run("ablation-multidim", out.to_str().unwrap(), 42).unwrap();
         harmonicio::experiments::run("ablation-cost", out.to_str().unwrap(), 42).unwrap();
         harmonicio::experiments::run("ablation-liveprofile", out.to_str().unwrap(), 42).unwrap();
+        harmonicio::experiments::run("ablation-spot", out.to_str().unwrap(), 42).unwrap();
     }
 
     let golden_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden");
@@ -94,6 +97,7 @@ fn golden_ablation_metrics_pinned_per_seed() {
         "ablation_multidim.csv",
         "ablation_cost.csv",
         "ablation_liveprofile.csv",
+        "ablation_spot.csv",
     ] {
         let produced = std::fs::read_to_string(out_a.join(csv)).unwrap();
         let rerun = std::fs::read_to_string(out_b.join(csv)).unwrap();
