@@ -272,6 +272,7 @@ fn main() {
                 worker: WorkerId(w),
                 at: Millis(w * 7),
                 total_cpu: CpuFraction::new(rng.uniform(0.1, 0.9)),
+                progress: Vec::new(),
                 per_image: images
                     .iter()
                     .map(|img| {

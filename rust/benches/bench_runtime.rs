@@ -45,6 +45,7 @@ fn main() {
             worker: WorkerId(w),
             at: Millis(0),
             total_cpu: CpuFraction::new(0.5),
+            progress: Vec::new(),
             per_image: vec![(
                 image.clone(),
                 harmonicio::binpacking::ResourceVec::cpu(0.125),

@@ -47,6 +47,30 @@
 //! accrues into the same monotone ledger as on-demand (the *blended*
 //! rate the load predictor's cost damper observes) and is additionally
 //! broken out in [`SimCloud::spot_cost_usd`].
+//!
+//! ## Failure domains (zones)
+//!
+//! Real spot capacity is not reclaimed independently per VM: providers
+//! harvest whole pools, so reclamations arrive in correlated waves per
+//! availability zone. [`CloudConfig::zone_hazard`] declares the zone
+//! catalog — entry `i` is [`Zone`]`(i)`'s *correlated* hazard, the
+//! expected zone-wide reclamation events per hour. At construction the
+//! cloud draws each hazardous zone's failure schedule (a seeded renewal
+//! process with exponential inter-event times) from a **separate** RNG
+//! stream; a zone hazard of `0.0` — and the empty catalog default —
+//! draws nothing at all, so legacy runs keep today's RNG streams
+//! byte-for-byte. Every VM carries the [`Zone`] it was placed in
+//! ([`SimCloud::request_vm_placed`]; unplaced requests land in
+//! `Zone(0)`, which is what makes a diversity-blind planner "naive
+//! single-zone"). At each scheduled instant the zone fails: **every
+//! spot VM alive in it** is reclaimed at exactly that instant — same
+//! notice window, same billed-through-the-instant semantics as an
+//! individual reclaim — and counted in
+//! [`SimCloud::zone_preemptions`]. On-demand VMs ride through zone
+//! failures (the provider honors their contract), and spot VMs
+//! provisioned *after* an instant are only exposed to the zone's next
+//! scheduled failure. [`SpotEvent`]s are zone-tagged so the scheduling
+//! plane can drain a whole failure domain at once.
 
 use crate::binpacking::ResourceVec;
 use crate::types::{IdGen, Millis, VmId};
@@ -126,6 +150,19 @@ impl Flavor {
     }
 }
 
+/// A failure domain (availability zone): the unit of correlated spot
+/// reclamation. `Zone(i)` indexes entry `i` of
+/// [`CloudConfig::zone_hazard`]; zones beyond the catalog (and every
+/// zone of the empty default catalog) simply have no correlated hazard.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Zone(pub u32);
+
+impl std::fmt::Display for Zone {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "z{}", self.0)
+    }
+}
+
 /// Billing tier of a provisioned VM.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PriceTier {
@@ -152,14 +189,22 @@ pub struct Vm {
     /// On-demand or spot — decides the billing rate and whether the
     /// provider may reclaim it.
     pub tier: PriceTier,
+    /// The failure domain this VM was placed in (`Zone(0)` when the
+    /// request did not ask for one).
+    pub zone: Zone,
     pub requested_at: Millis,
     /// End of the last billed interval for this VM (starts at
     /// `requested_at`; frozen at the termination instant).
     billed_until: Millis,
-    /// Provider-chosen reclamation instant for spot VMs, drawn at
-    /// provisioning time from the flavor's hazard (`None` = never
-    /// preempted: on-demand, or spot under a zero hazard).
+    /// Provider-chosen reclamation instant for spot VMs: the earlier of
+    /// the individual exponential-lifetime draw and the zone's next
+    /// scheduled correlated failure (`None` = never preempted:
+    /// on-demand, or spot with no hazard of either kind).
     preempt_at: Option<Millis>,
+    /// Whether `preempt_at` is the zone's correlated failure instant
+    /// (counted in [`SimCloud::zone_preemptions`] on reclaim) rather
+    /// than the individual draw.
+    zone_correlated: bool,
     /// Whether the preemption notice was already emitted.
     notice_sent: bool,
 }
@@ -176,13 +221,15 @@ impl Vm {
 /// in emission order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SpotEvent {
-    /// `vm` entered its preemption notice window: the provider reclaims
-    /// it at `notice`. The autoscaler treats this like a grace-drain —
-    /// stop placing containers, requeue the VM's hosted work elsewhere.
-    Preempted { vm: VmId, notice: Millis },
-    /// The provider reclaimed `vm`: it is already terminated and billed
-    /// through exactly its reclamation instant.
-    Reclaimed { vm: VmId },
+    /// `vm` (placed in `zone`) entered its preemption notice window: the
+    /// provider reclaims it at `notice`. The autoscaler treats this like
+    /// a grace-drain — stop placing containers, requeue the VM's hosted
+    /// work elsewhere. A correlated zone failure emits one notice per
+    /// spot VM in the zone, all carrying the same instant.
+    Preempted { vm: VmId, zone: Zone, notice: Millis },
+    /// The provider reclaimed `vm` from `zone`: it is already terminated
+    /// and billed through exactly its reclamation instant.
+    Reclaimed { vm: VmId, zone: Zone },
 }
 
 /// Provisioning errors surfaced to the autoscaler.
@@ -222,6 +269,12 @@ pub struct CloudConfig {
     /// Warning the provider gives between the preemption notice and the
     /// reclaim (GCP gives 30 s, AWS two minutes).
     pub preemption_notice: Millis,
+    /// Failure-domain catalog: entry `i` is [`Zone`]`(i)`'s correlated
+    /// spot hazard in expected zone-wide reclamation events per hour.
+    /// Empty (the default) models a single zone 0 with no correlated
+    /// hazard — and, like a `0.0` entry, draws nothing from any RNG, so
+    /// legacy trajectories stay byte-identical.
+    pub zone_hazard: Vec<f64>,
     pub seed: u64,
 }
 
@@ -237,6 +290,7 @@ impl Default for CloudConfig {
             spot_pricing: Vec::new(),
             spot_hazard: Vec::new(),
             preemption_notice: Millis::from_secs(30),
+            zone_hazard: Vec::new(),
             seed: 0x5EED,
         }
     }
@@ -261,6 +315,12 @@ impl CloudConfig {
             .find(|(f, _)| *f == flavor)
             .map(|(_, p)| *p)
             .unwrap_or_else(|| flavor.spot_price_per_hour())
+    }
+
+    /// Number of failure domains this deployment spans (at least the
+    /// single implicit zone 0).
+    pub fn zone_count(&self) -> usize {
+        self.zone_hazard.len().max(1)
     }
 
     /// Effective spot preemption hazard (reclaims/hour) for a flavor.
@@ -318,6 +378,13 @@ pub struct SimCloud {
     /// Lifetime count of provider-initiated spot reclaims (the
     /// `cloud.preemptions` series).
     pub preemptions: u64,
+    /// The subset of `preemptions` caused by correlated zone failures
+    /// (the `cloud.zone_preemptions` series; always ≤ `preemptions`).
+    pub zone_preemptions: u64,
+    /// Per-zone correlated failure instants, ascending, drawn once at
+    /// construction from a dedicated RNG stream (empty for zones with a
+    /// zero hazard — zero draws, so legacy streams are untouched).
+    zone_failures: Vec<Vec<Millis>>,
     /// Accrued spend in USD (see the module-level pricing notes):
     /// per-VM watermark billing — ticks advance live VMs, termination
     /// bills the partial interval. Monotone non-decreasing.
@@ -330,9 +397,37 @@ pub struct SimCloud {
     spot_events: Vec<SpotEvent>,
 }
 
+/// Horizon (in hours) over which zone failure schedules are drawn at
+/// construction, and a hard cap on events per zone: simulated runs are
+/// minutes-to-hours, so a bounded schedule is indistinguishable from an
+/// unbounded renewal process while keeping construction O(1)-ish.
+const ZONE_FAILURE_HORIZON_HOURS: f64 = 240.0;
+const MAX_ZONE_FAILURES: usize = 4096;
+
+/// Seed salt for the zone-failure RNG stream: correlated-failure draws
+/// must never share a stream with boot jitter / individual lifetimes,
+/// or configuring zones would shift every existing trajectory.
+const ZONE_SEED_SALT: u64 = 0x5A4F_4E45; // "ZONE"
+
 impl SimCloud {
     pub fn new(cfg: CloudConfig) -> Self {
         let rng = Rng::seeded(cfg.seed);
+        let mut zone_rng = Rng::seeded(cfg.seed ^ ZONE_SEED_SALT);
+        let mut zone_failures = Vec::with_capacity(cfg.zone_hazard.len());
+        for &hazard in &cfg.zone_hazard {
+            let mut schedule = Vec::new();
+            if hazard > 0.0 {
+                let mut t_hours = 0.0f64;
+                while schedule.len() < MAX_ZONE_FAILURES {
+                    t_hours += zone_rng.exponential(1.0 / hazard);
+                    if t_hours >= ZONE_FAILURE_HORIZON_HOURS {
+                        break;
+                    }
+                    schedule.push(Millis::from_secs_f64(t_hours * 3600.0));
+                }
+            }
+            zone_failures.push(schedule);
+        }
         SimCloud {
             cfg,
             vms: Vec::new(),
@@ -341,6 +436,8 @@ impl SimCloud {
             provisioned: 0,
             rejected_requests: 0,
             preemptions: 0,
+            zone_preemptions: 0,
+            zone_failures,
             cost_usd: 0.0,
             spot_cost_usd: 0.0,
             spot_events: Vec::new(),
@@ -349,6 +446,15 @@ impl SimCloud {
 
     pub fn config(&self) -> &CloudConfig {
         &self.cfg
+    }
+
+    /// The seeded correlated-failure schedule of a zone, ascending
+    /// (observability / tests; empty for unknown or hazard-free zones).
+    pub fn zone_failures(&self, zone: Zone) -> &[Millis] {
+        self.zone_failures
+            .get(zone.0 as usize)
+            .map(|s| s.as_slice())
+            .unwrap_or(&[])
     }
 
     /// Accrued spend in USD across every VM ever provisioned (billed on
@@ -418,10 +524,28 @@ impl SimCloud {
         flavor: Flavor,
         tier: PriceTier,
     ) -> Result<VmId, CloudError> {
+        self.request_vm_placed(now, flavor, tier, None)
+    }
+
+    /// Request a VM with an explicit failure-domain placement — the
+    /// diversity-aware planner's provisioning path. `None` (and every
+    /// legacy request path) lands in `Zone(0)`, which is exactly what
+    /// makes a diversity-blind spot plan "naive single-zone". A spot
+    /// VM's reclamation instant is the earlier of its individual
+    /// exponential-lifetime draw and the zone's next scheduled
+    /// correlated failure after `now`.
+    pub fn request_vm_placed(
+        &mut self,
+        now: Millis,
+        flavor: Flavor,
+        tier: PriceTier,
+        zone: Option<Zone>,
+    ) -> Result<VmId, CloudError> {
         if self.alive() >= self.cfg.quota {
             self.rejected_requests += 1;
             return Err(CloudError::QuotaExceeded);
         }
+        let zone = zone.unwrap_or(Zone(0));
         let jitter = if self.cfg.boot_jitter.0 == 0 {
             0
         } else {
@@ -429,7 +553,7 @@ impl SimCloud {
         };
         let ready_at =
             now + self.cfg.boot_delay.saturating_sub(self.cfg.boot_jitter) + Millis(jitter);
-        let preempt_at = if tier == PriceTier::Spot {
+        let individual = if tier == PriceTier::Spot {
             let hazard = self.cfg.hazard_of(flavor);
             if hazard > 0.0 {
                 // Memoryless lifetime: mean 1/hazard hours from the
@@ -444,6 +568,21 @@ impl SimCloud {
         } else {
             None
         };
+        // Only the zone's *next* failure threatens this VM: instants
+        // already past belong to failures the VM was not alive for.
+        let zone_fail = if tier == PriceTier::Spot {
+            self.zone_failures
+                .get(zone.0 as usize)
+                .and_then(|s| s.iter().find(|t| **t > now).copied())
+        } else {
+            None
+        };
+        let (preempt_at, zone_correlated) = match (individual, zone_fail) {
+            (Some(i), Some(z)) if z <= i => (Some(z), true),
+            (Some(i), _) => (Some(i), false),
+            (None, Some(z)) => (Some(z), true),
+            (None, None) => (None, false),
+        };
         let id = VmId(self.ids.next_id());
         self.provisioned += 1;
         self.vms.push(Vm {
@@ -451,9 +590,11 @@ impl SimCloud {
             flavor,
             state: VmState::Booting { ready_at },
             tier,
+            zone,
             requested_at: now,
             billed_until: now,
             preempt_at,
+            zone_correlated,
             notice_sent: false,
         });
         Ok(id)
@@ -525,21 +666,25 @@ impl SimCloud {
         // has passed is terminated — and billed — at *that* instant, not
         // at `now` (the billing sweep below would otherwise overrun it).
         // A reclaimed boot never becomes ready.
-        let mut due: Option<Vec<(VmId, Millis)>> = None;
+        let mut due: Option<Vec<(VmId, Millis, Zone, bool)>> = None;
         for vm in &self.vms {
             if matches!(vm.state, VmState::Terminated) {
                 continue;
             }
             if let Some(at) = vm.preempt_at {
                 if at <= now {
-                    due.get_or_insert_with(Vec::new).push((vm.id, at));
+                    due.get_or_insert_with(Vec::new)
+                        .push((vm.id, at, vm.zone, vm.zone_correlated));
                 }
             }
         }
-        for (id, at) in due.into_iter().flatten() {
+        for (id, at, zone, correlated) in due.into_iter().flatten() {
             self.terminate_vm(id, at);
             self.preemptions += 1;
-            self.spot_events.push(SpotEvent::Reclaimed { vm: id });
+            if correlated {
+                self.zone_preemptions += 1;
+            }
+            self.spot_events.push(SpotEvent::Reclaimed { vm: id, zone });
         }
         for vm in &mut self.vms {
             if !matches!(vm.state, VmState::Terminated) {
@@ -565,7 +710,11 @@ impl SimCloud {
             if let Some(at) = vm.preempt_at {
                 if now + notice >= at {
                     vm.notice_sent = true;
-                    self.spot_events.push(SpotEvent::Preempted { vm: vm.id, notice: at });
+                    self.spot_events.push(SpotEvent::Preempted {
+                        vm: vm.id,
+                        zone: vm.zone,
+                        notice: at,
+                    });
                 }
             }
         }
@@ -952,14 +1101,21 @@ mod tests {
         c.tick(at - Millis::from_secs(10));
         assert_eq!(
             c.take_spot_events(),
-            vec![SpotEvent::Preempted { vm: id, notice: at }]
+            vec![SpotEvent::Preempted {
+                vm: id,
+                zone: Zone(0),
+                notice: at
+            }]
         );
         c.tick(at - Millis::from_secs(5));
         assert!(c.take_spot_events().is_empty(), "notice emitted once");
         // Past the instant: reclaimed, terminated, billed through `at`
         // exactly — not through the (later) tick.
         c.tick(at + Millis::from_secs(120));
-        assert_eq!(c.take_spot_events(), vec![SpotEvent::Reclaimed { vm: id }]);
+        assert_eq!(
+            c.take_spot_events(),
+            vec![SpotEvent::Reclaimed { vm: id, zone: Zone(0) }]
+        );
         assert_eq!(c.vm(id).unwrap().state, VmState::Terminated);
         assert_eq!(c.preemptions, 1);
         let expected = Flavor::Xlarge.spot_price_per_hour() * at.as_secs_f64() / 3600.0;
@@ -1027,6 +1183,111 @@ mod tests {
             "terminated VMs are never reclaimed"
         );
         assert_eq!(c.preemptions, 0);
+    }
+
+    #[test]
+    fn zone_failure_reclaims_every_spot_vm_in_the_zone_only() {
+        // Zone 0 carries a huge correlated hazard (first failure within
+        // seconds for any plausible draw at mean 1/3600 h); zone 1 has
+        // none. The failure must take exactly the zone-0 *spot* VMs —
+        // the on-demand VM in the zone and the spot VM next door ride
+        // through — billed through exactly the scheduled instant.
+        let mut c = SimCloud::new(CloudConfig {
+            quota: 8,
+            boot_delay: Millis::from_secs(5),
+            boot_jitter: Millis::ZERO,
+            spot_hazard: vec![
+                (Flavor::Small, 0.0),
+                (Flavor::Large, 0.0),
+                (Flavor::Xlarge, 0.0),
+            ],
+            zone_hazard: vec![3600.0, 0.0],
+            preemption_notice: Millis::from_secs(2),
+            ..CloudConfig::default()
+        });
+        let at = c.zone_failures(Zone(0))[0];
+        assert!(c.zone_failures(Zone(1)).is_empty(), "hazard 0 draws nothing");
+        let s0a = c
+            .request_vm_placed(Millis(0), Flavor::Xlarge, PriceTier::Spot, Some(Zone(0)))
+            .unwrap();
+        let s0b = c
+            .request_vm_placed(Millis(0), Flavor::Large, PriceTier::Spot, Some(Zone(0)))
+            .unwrap();
+        let od0 = c
+            .request_vm_placed(Millis(0), Flavor::Xlarge, PriceTier::OnDemand, Some(Zone(0)))
+            .unwrap();
+        let s1 = c
+            .request_vm_placed(Millis(0), Flavor::Xlarge, PriceTier::Spot, Some(Zone(1)))
+            .unwrap();
+        assert_eq!(c.vm(s0a).unwrap().preempt_at(), Some(at));
+        assert_eq!(c.vm(s0b).unwrap().preempt_at(), Some(at));
+        assert_eq!(c.vm(od0).unwrap().preempt_at(), None);
+        assert_eq!(c.vm(s1).unwrap().preempt_at(), None);
+        c.tick(at + Millis::from_secs(60));
+        let events = c.take_spot_events();
+        let reclaimed: Vec<_> = events
+            .iter()
+            .filter_map(|e| match e {
+                SpotEvent::Reclaimed { vm, zone } => Some((*vm, *zone)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(reclaimed, vec![(s0a, Zone(0)), (s0b, Zone(0))]);
+        assert_eq!(c.preemptions, 2);
+        assert_eq!(c.zone_preemptions, 2);
+        assert_eq!(c.vm(s0a).unwrap().state, VmState::Terminated);
+        assert_eq!(c.vm(s0b).unwrap().state, VmState::Terminated);
+        assert_eq!(c.vm(od0).unwrap().state, VmState::Active);
+        assert_eq!(c.vm(s1).unwrap().state, VmState::Active);
+        // Billed through exactly the failure instant at the spot rates.
+        let hours = at.as_secs_f64() / 3600.0;
+        let expected_spot = (Flavor::Xlarge.spot_price_per_hour()
+            + Flavor::Large.spot_price_per_hour())
+            * hours;
+        assert!(
+            (c.spot_cost_usd()
+                - expected_spot
+                - Flavor::Xlarge.spot_price_per_hour() * (hours + 60.0 / 3600.0))
+                .abs()
+                < 1e-9,
+            "zone-reclaimed VMs billed through the instant, survivor through the tick"
+        );
+        // A spot VM provisioned after the failure is exposed only to the
+        // zone's *next* scheduled instant.
+        let later = c
+            .request_vm_placed(at + Millis::from_secs(90), Flavor::Xlarge, PriceTier::Spot, Some(Zone(0)))
+            .unwrap();
+        let next = c
+            .zone_failures(Zone(0))
+            .iter()
+            .copied()
+            .find(|t| *t > at + Millis::from_secs(90));
+        assert_eq!(c.vm(later).unwrap().preempt_at(), next);
+    }
+
+    #[test]
+    fn zone_hazard_zero_keeps_the_rng_stream_byte_identical() {
+        // A populated zone catalog with all-zero hazards must not shift
+        // the main RNG stream: the next VM's boot jitter matches a
+        // zone-free cloud draw for draw — the A8 degenerate-arm pin.
+        let mk = |zones: Vec<f64>| {
+            let mut c = SimCloud::new(CloudConfig {
+                quota: 4,
+                zone_hazard: zones,
+                spot_hazard: vec![(Flavor::Xlarge, 0.0)],
+                ..CloudConfig::default()
+            });
+            let first = c
+                .request_vm_placed(Millis(0), Flavor::Xlarge, PriceTier::Spot, Some(Zone(2)))
+                .unwrap();
+            assert_eq!(c.vm(first).unwrap().preempt_at(), None);
+            let second = c.request_vm_of(Millis(10), Flavor::Xlarge).unwrap();
+            match c.vm(second).unwrap().state {
+                VmState::Booting { ready_at } => ready_at,
+                _ => unreachable!(),
+            }
+        };
+        assert_eq!(mk(vec![0.0, 0.0, 0.0]), mk(Vec::new()));
     }
 
     #[test]

@@ -149,6 +149,7 @@ mod tests {
             at: Millis(0),
             total_cpu: CpuFraction::ZERO,
             per_image: Vec::new(),
+            progress: Vec::new(),
             pes: vec![PeStatus {
                 pe: PeId(1),
                 image: ImageName::new("img"),

@@ -1,4 +1,4 @@
-//! A1–A6: ablations over the IRM's design choices (DESIGN.md §Perf /
+//! A1–A8: ablations over the IRM's design choices (DESIGN.md §Perf /
 //! per-experiment index). A1–A3 quantify the decisions the paper makes:
 //! First-Fit as the packing rule, the log-proportional idle buffer, and
 //! the profiler's moving-average window. A4 quantifies the paper's stated
@@ -11,7 +11,11 @@
 //! moving averages take over. A7 quantifies the spot/preemptible tier:
 //! on-demand-only planning vs a spot-aware mix under preemption risk,
 //! with the hazard-0 arm pinning byte-identical degeneration to
-//! today's behavior.
+//! today's behavior. A8 quantifies the zone failure-domain layer:
+//! correlated spot reclamation in a hot zone under naive single-zone
+//! placement vs diversity-aware spread and checkpoint/restore, with a
+//! zones-declared-but-hazard-0 arm pinning byte-identical degeneration
+//! to the zone-free run.
 
 use std::fmt::Write as _;
 use std::path::Path;
@@ -82,9 +86,18 @@ pub fn packer(out: &Path, seed: u64) -> Result<Report> {
     }
     std::fs::write(out.join("ablation_packer.csv"), csv)?;
 
-    let ff = ratios.iter().find(|(n, _)| n == "first-fit").unwrap().1;
-    let nf = ratios.iter().find(|(n, _)| n == "next-fit").unwrap().1;
-    let ffd = ratios.iter().find(|(n, _)| n == "ffd (offline)").unwrap().1;
+    // A missing row degrades to NaN (the checks then FAIL with the real
+    // numbers in the detail line) instead of panicking mid-report.
+    let ratio_of = |name: &str| {
+        ratios
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, r)| *r)
+            .unwrap_or(f64::NAN)
+    };
+    let ff = ratio_of("first-fit");
+    let nf = ratio_of("next-fit");
+    let ffd = ratio_of("ffd (offline)");
     report.check(
         "first-fit beats next-fit",
         ff <= nf,
@@ -122,7 +135,7 @@ pub fn packer(out: &Path, seed: u64) -> Result<Report> {
         report.line(format!("  {label:<12} {makespan:>7.0}s"));
         e2e.push((label, makespan));
     }
-    let ff_t = e2e[0].1;
+    let ff_t = e2e.first().map(|(_, t)| *t).unwrap_or(f64::NAN);
     report.check(
         "first-fit competitive end-to-end",
         e2e.iter().all(|(_, t)| ff_t <= t * 1.10),
@@ -723,6 +736,7 @@ pub fn spot(out: &Path, seed: u64) -> Result<Report> {
             SpotPolicy {
                 max_spot_fraction: 1.0,
                 rework_penalty_usd: 0.0,
+                ..SpotPolicy::default()
             },
             0.0,
         ),
@@ -732,6 +746,7 @@ pub fn spot(out: &Path, seed: u64) -> Result<Report> {
             SpotPolicy {
                 max_spot_fraction: 0.6,
                 rework_penalty_usd: 0.02,
+                ..SpotPolicy::default()
             },
             hazard,
         ),
@@ -847,6 +862,248 @@ pub fn spot(out: &Path, seed: u64) -> Result<Report> {
     Ok(report)
 }
 
+/// A8 — region-scale resilience: correlated zone failures vs
+/// diversity-aware spread and checkpoint/restore (ISSUE 6's tentpole).
+///
+/// Five arms, identical workload, quota and spot catalog (individual
+/// spot hazard 1.0/h, exactly A7's risky arm):
+///
+/// * **spot-baseline** — A7's spot-aware configuration with no zone
+///   topology declared at all. The reference trajectories.
+/// * **zones-degenerate** — three zones declared, every hazard 0, the
+///   spread budget wide open. Placement gains zone tags but no zone
+///   ever fails, the cloud draws nothing extra from its RNG, and the
+///   spread never downgrades a pick — so the run must be
+///   **byte-identical** to the baseline: same worker series, same
+///   makespan, same bill. The degeneracy pin for the whole zone layer.
+/// * **zone-naive** — one hot zone (8 correlated reclaims/hour) and two
+///   quiet ones (0.25/h), spreading disabled: every spot VM lands in
+///   the default zone 0 — the hot one — so each zone failure reclaims
+///   the entire spot fleet at once.
+/// * **zone-diverse** — same hazards, diversity-aware spread with at
+///   most 40% of each round's spot units in any one zone. A zone
+///   failure now clips at most ~40% of the spot capacity; the headline
+///   checks are a strictly lower realized bill and no more deadline
+///   misses than the naive arm.
+/// * **diverse-ckpt** — the diverse arm plus 2-second progress
+///   checkpoints: preempted work resumes from the last snapshot
+///   instead of restarting from scratch, so the rework ledger
+///   (`sim.rework_s`) must shrink versus the diverse arm.
+pub fn zonefail(out: &Path, seed: u64) -> Result<Report> {
+    let mut report = Report::new(
+        "A8 — zone-failure resilience (correlated preemption, diversity, checkpoints)",
+    );
+    let deadline = Millis::from_secs(1800);
+    let boot = Millis::from_secs(45);
+    // Individual (uncorrelated) spot hazard, as in A7's risky arm; the
+    // zone layer's correlated hazard rides on top of it.
+    let hazard = 1.0;
+    // Zone 0 suffers a correlated reclaim about every 7.5 minutes —
+    // frequent enough to hit the batch several times; zones 1–2 are an
+    // order of magnitude quieter.
+    let hot = vec![8.0, 0.25, 0.25];
+    let spot_catalog = || {
+        vec![
+            FlavorOption {
+                spot_hazard_per_hour: hazard,
+                ..FlavorOption::nominal_spot(Flavor::Xlarge, boot)
+            },
+            FlavorOption {
+                spot_hazard_per_hour: hazard,
+                ..FlavorOption::nominal_spot(Flavor::Large, boot)
+            },
+        ]
+    };
+    let aware = SpotPolicy {
+        max_spot_fraction: 0.6,
+        rework_penalty_usd: 0.02,
+        ..SpotPolicy::default()
+    };
+    struct Arm {
+        cost: f64,
+        spot_cost: f64,
+        preemptions: u64,
+        zone_preemptions: u64,
+        rework_s: f64,
+        dropped: u64,
+        misses: usize,
+        makespan: f64,
+        peak: f64,
+        workers_series: Vec<(Millis, f64)>,
+    }
+    // (label, zone hazards, planner policy, checkpoint period)
+    let arms: Vec<(&str, Vec<f64>, SpotPolicy, Millis)> = vec![
+        ("spot-baseline", Vec::new(), aware, Millis::ZERO),
+        (
+            "zones-degenerate",
+            vec![0.0, 0.0, 0.0],
+            SpotPolicy {
+                zones: 3,
+                max_zone_fraction: 1.0,
+                ..aware
+            },
+            Millis::ZERO,
+        ),
+        ("zone-naive", hot.clone(), aware, Millis::ZERO),
+        (
+            "zone-diverse",
+            hot.clone(),
+            SpotPolicy {
+                zones: 3,
+                max_zone_fraction: 0.4,
+                ..aware
+            },
+            Millis::ZERO,
+        ),
+        (
+            "diverse-ckpt",
+            hot,
+            SpotPolicy {
+                zones: 3,
+                max_zone_fraction: 0.4,
+                ..aware
+            },
+            Millis::from_secs(2),
+        ),
+    ];
+    let mut csv = String::from(
+        "model,cost_usd,spot_cost_usd,preemptions,zone_preemptions,rework_s,\
+         requeue_dropped,deadline_misses,makespan_s,peak_workers\n",
+    );
+    let mut results: Vec<Arm> = Vec::new();
+    for (label, zone_hazard, policy, ckpt) in &arms {
+        let mut cfg = microscopy::cluster_config(seed);
+        // Same headroom rationale as A5/A7: the comparison is about
+        // where capacity lands, not whether the quota starves an arm.
+        cfg.cloud.quota = 10;
+        cfg.cloud.flavor = Flavor::Xlarge;
+        cfg.cloud.spot_hazard = vec![
+            (Flavor::Small, hazard),
+            (Flavor::Large, hazard),
+            (Flavor::Xlarge, hazard),
+        ];
+        cfg.cloud.zone_hazard = zone_hazard.clone();
+        cfg.worker.checkpoint_period = *ckpt;
+        cfg.irm.resource_model = ResourceModel::Vector {
+            new_vm_capacity: Flavor::Large.capacity(),
+        };
+        cfg.irm.image_resources = vec![microscopy_wl::resource_profile()];
+        cfg.irm.flavor_catalog = spot_catalog();
+        cfg.irm.spot_policy = *policy;
+        let trace = MicroscopyTrace::new(MicroscopyConfig {
+            n_images: 300,
+            ..MicroscopyConfig::default()
+        })
+        .run_trace(seed);
+        let mut cluster = SimCluster::new(cfg);
+        trace.schedule_into(&mut cluster);
+        let makespan = cluster
+            .run_to_completion(trace.len(), Millis::from_secs(9000))
+            .map(|m| m.as_secs_f64())
+            .unwrap_or(f64::NAN);
+        let arm = Arm {
+            cost: cluster.cloud.cost_usd(),
+            spot_cost: cluster.cloud.spot_cost_usd(),
+            preemptions: cluster.cloud.preemptions,
+            zone_preemptions: cluster.cloud.zone_preemptions,
+            rework_s: cluster.rework_ms as f64 / 1000.0,
+            dropped: cluster.irm.queue.dropped_preempted,
+            misses: cluster.deadline_misses(deadline),
+            makespan,
+            peak: cluster
+                .recorder
+                .get("workers.current")
+                .map(|s| s.max())
+                .unwrap_or(0.0),
+            workers_series: cluster
+                .recorder
+                .get("workers.current")
+                .map(|s| s.points.clone())
+                .unwrap_or_default(),
+        };
+        report.line(format!(
+            "{label:<17} cost ${:>6.2} (spot ${:>5.2}) | preempt {:>3} (zone {:>2}) | \
+             rework {:>6.1}s | misses {:>3} | makespan {makespan:>6.0}s",
+            arm.cost, arm.spot_cost, arm.preemptions, arm.zone_preemptions, arm.rework_s, arm.misses
+        ));
+        let _ = writeln!(
+            csv,
+            "{label},{:.4},{:.4},{},{},{:.1},{},{},{makespan:.1},{}",
+            arm.cost,
+            arm.spot_cost,
+            arm.preemptions,
+            arm.zone_preemptions,
+            arm.rework_s,
+            arm.dropped,
+            arm.misses,
+            arm.peak
+        );
+        results.push(arm);
+    }
+    std::fs::write(out.join("ablation_zonefail.csv"), csv)?;
+
+    let (base, degen, naive, diverse, ckpt) = match &results[..] {
+        [a, b, c, d, e] => (a, b, c, d, e),
+        _ => anyhow::bail!("expected five arms, got {}", results.len()),
+    };
+    report.check(
+        "all arms complete the batch",
+        results.iter().all(|a| a.makespan.is_finite()),
+        format!(
+            "{:.0}s / {:.0}s / {:.0}s / {:.0}s / {:.0}s",
+            base.makespan, degen.makespan, naive.makespan, diverse.makespan, ckpt.makespan
+        ),
+    );
+    report.check(
+        "hazard-0 zones reproduce the zone-free run byte-identically",
+        degen.workers_series == base.workers_series
+            && degen.makespan == base.makespan
+            && degen.cost == base.cost
+            && degen.zone_preemptions == 0,
+        format!(
+            "makespan {:.1}s vs {:.1}s, ${:.2} vs ${:.2}, {} vs {} worker samples",
+            degen.makespan,
+            base.makespan,
+            degen.cost,
+            base.cost,
+            degen.workers_series.len(),
+            base.workers_series.len()
+        ),
+    );
+    report.check(
+        "correlated failures actually fire in the hot zone",
+        naive.zone_preemptions > 0,
+        format!(
+            "{} zone preemptions of {} total",
+            naive.zone_preemptions, naive.preemptions
+        ),
+    );
+    report.check(
+        "diversity strictly lowers realized cost under correlated risk",
+        diverse.cost < naive.cost,
+        format!("${:.2} vs ${:.2}", diverse.cost, naive.cost),
+    );
+    report.check(
+        "diversity does not trade cost for deadlines",
+        diverse.misses <= naive.misses,
+        format!("{} vs {} misses of 300", diverse.misses, naive.misses),
+    );
+    report.check(
+        "checkpoints shrink the rework ledger",
+        diverse.rework_s > 0.0 && ckpt.rework_s < diverse.rework_s,
+        format!(
+            "{:.1}s with checkpoints vs {:.1}s from scratch",
+            ckpt.rework_s, diverse.rework_s
+        ),
+    );
+    report.check(
+        "spot share never exceeds the blended ledger",
+        results.iter().all(|a| a.spot_cost <= a.cost + 1e-9),
+        "per-tier ledgers consistent in every arm",
+    );
+    Ok(report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -888,6 +1145,14 @@ mod tests {
         let tmp = std::env::temp_dir().join("hio_abl_spot_test");
         std::fs::create_dir_all(&tmp).unwrap();
         let report = spot(&tmp, 3).unwrap();
+        assert!(report.all_passed(), "{}", report.render());
+    }
+
+    #[test]
+    fn zonefail_ablation_runs() {
+        let tmp = std::env::temp_dir().join("hio_abl_zonefail_test");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let report = zonefail(&tmp, 3).unwrap();
         assert!(report.all_passed(), "{}", report.render());
     }
 }

@@ -113,6 +113,10 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
         "ablation-spot",
         "A7: on-demand-only vs spot-aware (preemption-risk-priced) flavor planning",
     ),
+    (
+        "ablation-zonefail",
+        "A8: correlated zone failures — naive single-zone vs diversity-aware spread and checkpoint/restore",
+    ),
 ];
 
 /// Run one experiment (or "all") writing outputs under `out_dir`.
@@ -134,6 +138,7 @@ pub fn run(name: &str, out_dir: &str, seed: u64) -> Result<Vec<Report>> {
         "ablation-cost" => vec![ablations::cost(out, seed)?],
         "ablation-liveprofile" => vec![ablations::liveprofile(out, seed)?],
         "ablation-spot" => vec![ablations::spot(out, seed)?],
+        "ablation-zonefail" => vec![ablations::zonefail(out, seed)?],
         "all" => {
             let mut all = Vec::new();
             all.push(synthetic::run(out, seed, "fig3")?);
@@ -152,6 +157,7 @@ pub fn run(name: &str, out_dir: &str, seed: u64) -> Result<Vec<Report>> {
             all.push(ablations::cost(out, seed)?);
             all.push(ablations::liveprofile(out, seed)?);
             all.push(ablations::spot(out, seed)?);
+            all.push(ablations::zonefail(out, seed)?);
             all
         }
         other => bail!(

@@ -64,11 +64,30 @@
 //! its on-demand price, the mix degenerates to exactly the on-demand
 //! plan — the hazard-0 byte-identity the A7 ablation pins. On full
 //! score ties the safer on-demand candidate wins.
+//!
+//! ## Diversity-aware zone spread
+//!
+//! The per-round spot cap bounds how much of a burst is *preemptible*;
+//! it says nothing about how much is *correlated*. With
+//! [`SpotPolicy::zones`] > 1 the planner additionally spreads each
+//! round's spot picks across failure domains, least-loaded zone first
+//! (load = spot reference-units already assigned this round, a pick's
+//! weight being its capacity's CPU component), under the
+//! max-correlated-loss budget [`SpotPolicy::max_zone_fraction`]: no
+//! zone may end the round holding more than that fraction of the
+//! round's spot reference-units, except that an *empty* zone may always
+//! take one pick (the integrality slack — without it a one-VM round
+//! could never buy spot at any fraction < 1). A spot pick no zone can
+//! absorb within the budget is downgraded to on-demand: the blast
+//! radius bound dominates the discount. Tier and flavor choice happen
+//! *before* the spread, so with an open budget the diversity pass only
+//! tags zones — the plan is otherwise byte-identical to the unspread
+//! one (the A8 degenerate-arm pin).
 
 use std::collections::HashMap;
 
 use crate::binpacking::ResourceVec;
-use crate::cloud::Flavor;
+use crate::cloud::{Flavor, Zone};
 use crate::irm::config::{BufferPolicy, FlavorOption, SpotPolicy};
 use crate::types::{Millis, WorkerId};
 
@@ -79,25 +98,46 @@ pub struct WorkerState {
     pub pe_count: usize,
 }
 
-/// One planned VM purchase: which flavor, and at which pricing tier —
-/// the flavor planner's output unit. The harness maps it onto
-/// `SimCloud::request_vm_of` / `request_vm_spot`.
+/// One planned VM purchase: which flavor, at which pricing tier, and —
+/// for diversity-aware spot plans — in which failure domain. The
+/// harness maps it onto `SimCloud::request_vm_placed` /
+/// `request_vm_of` / `request_vm_spot`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PlannedVm {
     pub flavor: Flavor,
     /// Buy the discounted, preemptible tier.
     pub spot: bool,
+    /// Explicit failure-domain placement (`None` lets the cloud default
+    /// to zone 0 — every pre-zone plan and every on-demand pick).
+    pub zone: Option<Zone>,
 }
 
 impl PlannedVm {
     /// An on-demand purchase (the only tier pre-spot plans produced).
     pub fn on_demand(flavor: Flavor) -> Self {
-        PlannedVm { flavor, spot: false }
+        PlannedVm {
+            flavor,
+            spot: false,
+            zone: None,
+        }
     }
 
-    /// A spot-tier purchase.
+    /// A spot-tier purchase with no explicit placement.
     pub fn spot(flavor: Flavor) -> Self {
-        PlannedVm { flavor, spot: true }
+        PlannedVm {
+            flavor,
+            spot: true,
+            zone: None,
+        }
+    }
+
+    /// A spot-tier purchase placed in an explicit failure domain.
+    pub fn spot_in(flavor: Flavor, zone: Zone) -> Self {
+        PlannedVm {
+            flavor,
+            spot: true,
+            zone: Some(zone),
+        }
     }
 }
 
@@ -388,7 +428,11 @@ impl FlavorPlanner {
                 // buffer, bought at the cheapest effective rate.
                 let (opt, spot) = self.cheapest(allow_spot);
                 spot_used += spot as usize;
-                mix.push(PlannedVm { flavor: opt.flavor, spot });
+                mix.push(PlannedVm {
+                    flavor: opt.flavor,
+                    spot,
+                    zone: None,
+                });
                 continue;
             }
             let Some((opt, spot)) = self.best_for(d, need, allow_spot) else {
@@ -398,12 +442,81 @@ impl FlavorPlanner {
                 continue;
             };
             spot_used += spot as usize;
-            mix.push(PlannedVm { flavor: opt.flavor, spot });
+            mix.push(PlannedVm {
+                flavor: opt.flavor,
+                spot,
+                zone: None,
+            });
             for dim in 0..demand.0.len() {
                 demand.0[dim] = (demand.0[dim] - opt.capacity.0[dim]).max(0.0);
             }
         }
+        self.spread_spot_across_zones(&mut mix);
         mix
+    }
+
+    /// A planned pick's reference-unit weight for the diversity budget:
+    /// the capacity's CPU component (1.0 = one reference VM). Unknown
+    /// flavors (never produced by `plan_mix` itself) weigh a full unit.
+    fn reference_units_of(&self, flavor: Flavor) -> f64 {
+        self.options
+            .iter()
+            .find(|o| o.flavor == flavor)
+            .map(|o| o.capacity.0[0])
+            .unwrap_or(1.0)
+    }
+
+    /// Diversity pass (see the module-level notes): assign each spot
+    /// pick to the least-loaded failure domain — ties to the lowest
+    /// zone id — subject to the max-correlated-loss budget, downgrading
+    /// picks no zone can absorb to on-demand. A no-op when the policy
+    /// declares fewer than two zones: picks stay unplaced and the cloud
+    /// defaults them to zone 0 (the naive single-zone plan).
+    fn spread_spot_across_zones(&self, mix: &mut [PlannedVm]) {
+        if self.policy.zones < 2 {
+            return;
+        }
+        let total_units: f64 = mix
+            .iter()
+            .filter(|p| p.spot)
+            .map(|p| self.reference_units_of(p.flavor))
+            .sum();
+        if total_units <= 0.0 {
+            return;
+        }
+        // The budget a single zone may hold; <= 0.0 disables the check
+        // (pure round-robin spread).
+        let cap = if self.policy.max_zone_fraction > 0.0 {
+            Some(self.policy.max_zone_fraction * total_units)
+        } else {
+            None
+        };
+        let mut load = vec![0.0f64; self.policy.zones];
+        for pick in mix.iter_mut().filter(|p| p.spot) {
+            let units = self.reference_units_of(pick.flavor);
+            // Least-loaded zone, lowest id on ties (strict improvement
+            // over a forward walk keeps the earliest zone).
+            let mut best = 0usize;
+            for (z, l) in load.iter().enumerate().skip(1) {
+                if l.total_cmp(&load[best]).is_lt() {
+                    best = z;
+                }
+            }
+            let fits = match cap {
+                // Integrality slack: an empty zone always takes one pick.
+                Some(c) => load[best] == 0.0 || load[best] + units <= c + DEMAND_EPS,
+                None => true,
+            };
+            if fits {
+                load[best] += units;
+                pick.zone = Some(Zone(best as u32));
+            } else {
+                // No zone can absorb this pick within the budget: the
+                // correlated-loss bound beats the discount.
+                pick.spot = false;
+                pick.zone = None;
+            }
+        }
     }
 }
 
@@ -642,6 +755,7 @@ mod tests {
         let p = spot_catalog(SpotPolicy {
             max_spot_fraction: 0.5,
             rework_penalty_usd: 0.0,
+            ..SpotPolicy::default()
         });
         let mix = p.plan_mix(ResourceVec::new(3.0, 0.2, 0.1), 4);
         assert_eq!(mix.len(), 4);
@@ -687,6 +801,7 @@ mod tests {
             SpotPolicy {
                 max_spot_fraction: 1.0,
                 rework_penalty_usd: 1.0,
+                ..SpotPolicy::default()
             },
         );
         let mix = p.plan_mix(ResourceVec::new(1.0, 0.0, 0.0), 2);
@@ -697,6 +812,7 @@ mod tests {
             SpotPolicy {
                 max_spot_fraction: 1.0,
                 rework_penalty_usd: 0.01,
+                ..SpotPolicy::default()
             },
         );
         let mix = p.plan_mix(ResourceVec::new(1.0, 0.0, 0.0), 2);
@@ -710,6 +826,7 @@ mod tests {
         let p = spot_catalog(SpotPolicy {
             max_spot_fraction: 1.0,
             rework_penalty_usd: 0.0,
+            ..SpotPolicy::default()
         });
         let mix = p.plan_mix(ResourceVec::ZERO, 2);
         assert_eq!(
@@ -725,9 +842,129 @@ mod tests {
         let p = spot_catalog(SpotPolicy {
             max_spot_fraction: 0.5,
             rework_penalty_usd: 0.0,
+            ..SpotPolicy::default()
         });
         let mix = p.plan_mix(ResourceVec::new(1.0, 0.0, 0.0), 1);
         assert_eq!(mix, vec![od(Flavor::Xlarge)]);
+    }
+
+    #[test]
+    fn zone_spread_assigns_least_loaded_zone_first() {
+        // 4 whole units of demand, all-spot budget, 3 zones: picks land
+        // z0, z1, z2, z0 — round-robin by load, lowest id on ties.
+        let p = spot_catalog(SpotPolicy {
+            max_spot_fraction: 1.0,
+            rework_penalty_usd: 0.0,
+            zones: 3,
+            max_zone_fraction: 0.5,
+        });
+        let mix = p.plan_mix(ResourceVec::new(4.0, 0.2, 0.1), 4);
+        assert_eq!(
+            mix,
+            vec![
+                PlannedVm::spot_in(Flavor::Xlarge, Zone(0)),
+                PlannedVm::spot_in(Flavor::Xlarge, Zone(1)),
+                PlannedVm::spot_in(Flavor::Xlarge, Zone(2)),
+                PlannedVm::spot_in(Flavor::Xlarge, Zone(0)),
+            ]
+        );
+    }
+
+    #[test]
+    fn zone_budget_downgrades_overflow_to_on_demand() {
+        // Two zones at a 0.5 budget over 3 equal spot picks: z0 and z1
+        // take one each (1/3 ≤ 0.5 after the round), but the third pick
+        // would push either zone to 2/3 — above the correlated-loss
+        // budget — so it is bought on-demand instead.
+        let p = spot_catalog(SpotPolicy {
+            max_spot_fraction: 1.0,
+            rework_penalty_usd: 0.0,
+            zones: 2,
+            max_zone_fraction: 0.5,
+        });
+        let mix = p.plan_mix(ResourceVec::new(3.0, 0.2, 0.1), 3);
+        assert_eq!(
+            mix,
+            vec![
+                PlannedVm::spot_in(Flavor::Xlarge, Zone(0)),
+                PlannedVm::spot_in(Flavor::Xlarge, Zone(1)),
+                od(Flavor::Xlarge),
+            ]
+        );
+    }
+
+    #[test]
+    fn zone_spread_weighs_picks_in_reference_units() {
+        // Fractional RAM demand buys a Large, and the buffer pads at the
+        // cheap Large spot rate (0.5 units each): with 2 zones and a 0.5
+        // budget, four Large spot picks spread two per zone (1.0 of 2.0
+        // total units each — exactly at the budget), none downgraded.
+        let p = spot_catalog(SpotPolicy {
+            max_spot_fraction: 1.0,
+            rework_penalty_usd: 0.0,
+            zones: 2,
+            max_zone_fraction: 0.5,
+        });
+        let mix = p.plan_mix(ResourceVec::new(0.1, 0.3, 0.0), 4);
+        assert_eq!(
+            mix,
+            vec![
+                PlannedVm::spot_in(Flavor::Large, Zone(0)),
+                PlannedVm::spot_in(Flavor::Large, Zone(1)),
+                PlannedVm::spot_in(Flavor::Large, Zone(0)),
+                PlannedVm::spot_in(Flavor::Large, Zone(1)),
+            ]
+        );
+    }
+
+    #[test]
+    fn zoneless_policy_plans_are_unchanged_by_the_diversity_pass() {
+        // zones < 2 leaves the whole mix untouched — tiers, flavors and
+        // (absent) placements are byte-identical to the pre-zone planner
+        // (the naive single-zone plan the A8 ablation measures against).
+        for zones in [0usize, 1] {
+            let p = spot_catalog(SpotPolicy {
+                max_spot_fraction: 0.5,
+                rework_penalty_usd: 0.0,
+                zones,
+                max_zone_fraction: 0.4,
+            });
+            let baseline = spot_catalog(SpotPolicy {
+                max_spot_fraction: 0.5,
+                rework_penalty_usd: 0.0,
+                ..SpotPolicy::default()
+            });
+            for vms in [1usize, 2, 4] {
+                assert_eq!(
+                    p.plan_mix(ResourceVec::new(3.0, 0.2, 0.1), vms),
+                    baseline.plan_mix(ResourceVec::new(3.0, 0.2, 0.1), vms)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn open_zone_budget_only_tags_zones() {
+        // With max_zone_fraction disabled (0.0) the spread never
+        // downgrades: stripping the zone tags recovers the unspread
+        // plan exactly (tier/flavor choice happens before the spread).
+        let spread = spot_catalog(SpotPolicy {
+            max_spot_fraction: 1.0,
+            rework_penalty_usd: 0.0,
+            zones: 3,
+            max_zone_fraction: 0.0,
+        });
+        let plain = spot_catalog(SpotPolicy {
+            max_spot_fraction: 1.0,
+            rework_penalty_usd: 0.0,
+            ..SpotPolicy::default()
+        });
+        let mut spread_mix = spread.plan_mix(ResourceVec::new(2.5, 0.3, 0.1), 4);
+        let plain_mix = plain.plan_mix(ResourceVec::new(2.5, 0.3, 0.1), 4);
+        for v in &mut spread_mix {
+            v.zone = None;
+        }
+        assert_eq!(spread_mix, plain_mix);
     }
 
     #[test]

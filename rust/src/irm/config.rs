@@ -94,6 +94,24 @@ pub struct SpotPolicy {
     /// reclaim destroys. A large enough penalty prices spot out
     /// entirely; `0.0` trusts the raw discount.
     pub rework_penalty_usd: f64,
+    /// Number of failure domains (cloud zones) the planner may spread
+    /// spot purchases across — mirror
+    /// [`CloudConfig::zone_count`](crate::cloud::CloudConfig::zone_count).
+    /// `0` or `1` (the default) disables diversity-aware placement
+    /// entirely: every spot request goes unplaced and the cloud lands it
+    /// in zone 0 — the naive single-zone plan.
+    pub zones: usize,
+    /// Max-correlated-loss budget: no zone may hold more than this
+    /// fraction of a planned round's spot reference-units (a pick's
+    /// reference-unit weight is its capacity's CPU component — `1.0` =
+    /// one reference VM). Spot picks are assigned least-loaded-zone
+    /// first; a pick no zone can absorb within the budget is downgraded
+    /// to on-demand (diversity caps the blast radius *before* price).
+    /// Every empty zone may always take one pick — the integrality
+    /// slack without which small rounds could never buy spot at all.
+    /// `<= 0.0` (the default) disables the budget check while `zones`
+    /// still spreads round-robin.
+    pub max_zone_fraction: f64,
 }
 
 /// Which resource model the bin-packing manager packs on.

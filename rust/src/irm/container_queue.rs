@@ -42,6 +42,14 @@ pub struct ContainerRequest {
     pub origin: RequestOrigin,
     pub enqueued_at: Millis,
     pub requeues: u32,
+    /// Last checkpointed progress fraction of the work the request is
+    /// re-hosting, in `[0, 1]` — non-zero only on
+    /// [`RequestOrigin::Preempted`] requests whose PE had snapshotted
+    /// progress before the preemption notice. Carried so the restored
+    /// PE resumes from the checkpoint instead of re-running from
+    /// scratch (the harness's requeued in-flight messages shrink their
+    /// service demand by the same fraction).
+    pub checkpoint: f64,
 }
 
 /// FIFO container queue with TTL-guarded requeue.
@@ -49,8 +57,16 @@ pub struct ContainerRequest {
 pub struct ContainerQueue {
     queue: VecDeque<ContainerRequest>,
     next_id: u64,
-    /// Requests dropped because their TTL reached zero.
+    /// Requests dropped because their TTL reached zero (the
+    /// `irm.requeue_dropped` series).
     pub dropped: u64,
+    /// The subset of `dropped` that were [`RequestOrigin::Preempted`]
+    /// re-hosting requests — losing one silently means preempted work
+    /// never gets its capacity back, so the first such drop also logs a
+    /// warning (once per queue).
+    pub dropped_preempted: u64,
+    /// Whether the one-shot preempted-drop warning already fired.
+    warned_preempted_drop: bool,
 }
 
 impl ContainerQueue {
@@ -97,15 +113,50 @@ impl ContainerQueue {
             origin,
             enqueued_at: now,
             requeues: 0,
+            checkpoint: 0.0,
         });
         id
     }
 
+    /// Enqueue a [`RequestOrigin::Preempted`] re-hosting request carrying
+    /// the preempted PE's last checkpointed progress fraction (clamped to
+    /// `[0, 1]`; `0.0` = no checkpoint, resume from scratch).
+    pub fn push_preempted(
+        &mut self,
+        image: ImageName,
+        estimate_vec: ResourceVec,
+        ttl: u32,
+        now: Millis,
+        checkpoint: f64,
+    ) -> u64 {
+        let id = self.push_vec(image, estimate_vec, ttl, RequestOrigin::Preempted, now);
+        if let Some(req) = self.queue.back_mut() {
+            req.checkpoint = checkpoint.clamp(0.0, 1.0);
+        }
+        id
+    }
+
     /// Requeue after a failed hosting attempt; burns one TTL unit and drops
-    /// the request (counted) when TTL is exhausted.
+    /// the request (counted) when TTL is exhausted. Dropping a *preempted*
+    /// re-hosting request is loud: it means a preemption's capacity
+    /// replacement was abandoned, so the first occurrence logs a warning
+    /// and every occurrence is counted separately (`dropped_preempted`).
     pub fn requeue(&mut self, mut req: ContainerRequest) {
         if req.ttl == 0 {
             self.dropped += 1;
+            if req.origin == RequestOrigin::Preempted {
+                self.dropped_preempted += 1;
+                if !self.warned_preempted_drop {
+                    self.warned_preempted_drop = true;
+                    eprintln!(
+                        "irm: dropping preempted re-hosting request for image '{}' \
+                         after TTL exhaustion ({} requeues) — preempted capacity \
+                         will not be replaced (warning logged once)",
+                        req.image.as_str(),
+                        req.requeues
+                    );
+                }
+            }
             return;
         }
         req.ttl -= 1;
@@ -196,6 +247,7 @@ mod tests {
             at: Millis(0),
             total_cpu: CpuFraction::new(0.5),
             per_image: vec![(ImageName::new("img"), ResourceVec::new(0.5, 0.3, 0.0))],
+            progress: Vec::new(),
             pes: Vec::new(),
         });
         q.refresh_estimates_with(|img| prof.estimate_vec(img, &ResourceVec::ZERO));
@@ -204,6 +256,38 @@ mod tests {
         // The non-CPU dimensions refresh too: the live RAM sample
         // overwrote the zero enqueue-time profile.
         assert!((req.estimate_vec.get(Resource::Ram) - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn preempted_drop_is_counted_separately() {
+        let mut q = req_queue();
+        q.push(ImageName::new("plain"), CpuFraction::new(0.1), 0, RequestOrigin::AutoScale, Millis(0));
+        q.push_preempted(ImageName::new("pre"), ResourceVec::cpu(0.1), 0, Millis(0), 0.4);
+        let reqs = q.drain();
+        for r in reqs {
+            q.requeue(r); // both TTL-exhausted → dropped
+        }
+        assert_eq!(q.dropped, 2, "every TTL-exhausted drop is counted");
+        assert_eq!(q.dropped_preempted, 1, "preempted drops counted separately");
+    }
+
+    #[test]
+    fn preempted_requests_carry_their_checkpoint() {
+        let mut q = req_queue();
+        q.push_preempted(ImageName::new("img"), ResourceVec::cpu(0.25), 3, Millis(5), 0.6);
+        q.push_preempted(ImageName::new("img"), ResourceVec::cpu(0.25), 3, Millis(5), 1.7);
+        q.push(ImageName::new("img"), CpuFraction::new(0.25), 3, RequestOrigin::AutoScale, Millis(5));
+        let reqs = q.drain();
+        assert_eq!(reqs[0].origin, RequestOrigin::Preempted);
+        assert!((reqs[0].checkpoint - 0.6).abs() < 1e-12);
+        assert_eq!(reqs[1].checkpoint, 1.0, "checkpoint clamps into [0, 1]");
+        assert_eq!(reqs[2].checkpoint, 0.0, "fresh requests start uncheckpointed");
+        // The checkpoint survives a requeue round-trip.
+        let mut pre = reqs.into_iter().next().unwrap();
+        pre.ttl = 2;
+        q.requeue(pre);
+        let pre = q.drain().pop().unwrap();
+        assert!((pre.checkpoint - 0.6).abs() < 1e-12);
     }
 
     #[test]

@@ -171,27 +171,33 @@ impl Irm {
     }
 
     /// A spot preemption notice for `worker`, which currently hosts
-    /// `hosted` (one entry per PE): treat it like a grace-drain. The
-    /// worker is marked draining — the packer stops placing containers
-    /// on it and the autoscaler stops counting it as supply — and one
-    /// hosting request per hosted PE re-enters the container queue at
-    /// its live resource estimate, so the replacement is planned in
-    /// **reference units** of the capacity about to vanish, not in VM
-    /// count. Idempotent per notice: a second call for a worker already
-    /// draining requeues nothing (no double-hosting).
-    pub fn preemption_notice(&mut self, worker: WorkerId, hosted: &[ImageName], now: Millis) {
+    /// `hosted` (one `(image, checkpoint)` entry per PE — the checkpoint
+    /// being the PE's last snapshotted progress fraction, `0.0` when
+    /// uncheckpointed or idle): treat it like a grace-drain. The worker
+    /// is marked draining — the packer stops placing containers on it
+    /// and the autoscaler stops counting it as supply — and one hosting
+    /// request per hosted PE re-enters the container queue at its live
+    /// resource estimate, so the replacement is planned in **reference
+    /// units** of the capacity about to vanish, not in VM count. The
+    /// requeued request carries the checkpoint, so the restored PE's
+    /// work resumes from the snapshot rather than re-running from
+    /// scratch. Idempotent per notice: a second call for a worker
+    /// already draining requeues nothing (no double-hosting). A whole
+    /// zone failing simply means one notice per worker in the zone —
+    /// each drains independently under the same machinery.
+    pub fn preemption_notice(
+        &mut self,
+        worker: WorkerId,
+        hosted: &[(ImageName, f64)],
+        now: Millis,
+    ) {
         if !self.draining.insert(worker) {
             return;
         }
-        for image in hosted {
+        for (image, checkpoint) in hosted {
             let est = self.resource_estimate(image);
-            self.queue.push_vec(
-                image.clone(),
-                est,
-                self.cfg.request_ttl,
-                RequestOrigin::Preempted,
-                now,
-            );
+            self.queue
+                .push_preempted(image.clone(), est, self.cfg.request_ttl, now, *checkpoint);
         }
     }
 
@@ -530,6 +536,7 @@ mod tests {
                 at: Millis(0),
                 total_cpu: CpuFraction::new(0.5),
                 per_image: vec![(ImageName::new("img"), ResourceVec::cpu(0.5))],
+                progress: vec![],
                 pes: vec![],
             });
         }
@@ -650,6 +657,7 @@ mod tests {
                 at: Millis(0),
                 total_cpu: CpuFraction::new(0.1),
                 per_image: vec![(ImageName::new("img"), ResourceVec::new(0.1, 0.4, 0.02))],
+                progress: vec![],
                 pes: vec![],
             });
         }
@@ -685,6 +693,7 @@ mod tests {
                 at: Millis(500),
                 total_cpu: CpuFraction::new(0.1),
                 per_image: vec![(ImageName::new("img"), ResourceVec::new(0.1, 0.45, 0.0))],
+                progress: vec![],
                 pes: vec![],
             });
         }
@@ -763,7 +772,7 @@ mod tests {
     #[test]
     fn preemption_notice_requeues_hosted_pes_exactly_once() {
         let mut irm = Irm::new(fast_cfg());
-        let hosted = [ImageName::new("img"), ImageName::new("img")];
+        let hosted = [(ImageName::new("img"), 0.6), (ImageName::new("img"), 0.0)];
         irm.preemption_notice(WorkerId(0), &hosted, Millis(0));
         assert!(irm.is_draining(WorkerId(0)));
         assert_eq!(irm.queue.len(), 2, "one request per hosted PE");
@@ -774,6 +783,9 @@ mod tests {
         assert!(drained
             .iter()
             .all(|r| r.origin == RequestOrigin::Preempted));
+        // Each request carries the checkpoint of the PE it replaces.
+        assert_eq!(drained[0].checkpoint, 0.6);
+        assert_eq!(drained[1].checkpoint, 0.0);
     }
 
     #[test]
@@ -782,7 +794,7 @@ mod tests {
         let mut master = Master::new();
         // Worker 0 hosts two PEs and gets a preemption notice; worker 1
         // is empty and healthy.
-        let hosted = [ImageName::new("img"), ImageName::new("img")];
+        let hosted = [(ImageName::new("img"), 0.0), (ImageName::new("img"), 0.0)];
         irm.preemption_notice(WorkerId(0), &hosted, Millis(0));
         let v = view(&[(0, &["img", "img"]), (1, &[])], 0);
         let update = irm.control_cycle(Millis(0), &mut master, &v);
@@ -803,7 +815,7 @@ mod tests {
     fn drain_mark_clears_when_the_worker_leaves_the_view() {
         let mut irm = Irm::new(fast_cfg());
         let mut master = Master::new();
-        irm.preemption_notice(WorkerId(0), &[ImageName::new("img")], Millis(0));
+        irm.preemption_notice(WorkerId(0), &[(ImageName::new("img"), 0.0)], Millis(0));
         assert!(irm.is_draining(WorkerId(0)));
         // The provider reclaimed it: the worker is gone from the view.
         irm.control_cycle(Millis(0), &mut master, &view(&[(1, &[])], 0));

@@ -194,6 +194,7 @@ mod tests {
             at: Millis(0),
             total_cpu: CpuFraction::ZERO,
             per_image: Vec::new(),
+            progress: Vec::new(),
             pes: idle
                 .iter()
                 .map(|(pe, img)| PeStatus {

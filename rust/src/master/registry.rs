@@ -154,6 +154,7 @@ mod tests {
             at: Millis(at),
             total_cpu: CpuFraction::new(0.3),
             per_image: Vec::new(),
+            progress: Vec::new(),
             pes: pes
                 .iter()
                 .map(|(pe, img, state)| PeStatus {

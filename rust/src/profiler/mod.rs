@@ -201,6 +201,7 @@ mod tests {
             at: Millis(0),
             total_cpu: CpuFraction::new(usage.get(Resource::Cpu)),
             per_image: vec![(ImageName::new(image), usage)],
+            progress: Vec::new(),
             pes: Vec::new(),
         }
     }

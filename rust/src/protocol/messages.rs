@@ -72,6 +72,12 @@ pub struct WorkerReport {
     /// master-side profiler filters them below its per-dimension busy
     /// floors).
     pub per_image: Vec<(ImageName, ResourceVec)>,
+    /// Furthest checkpointed progress fraction per image (0..=1), from
+    /// the worker's periodic checkpointer. Empty when checkpointing is
+    /// disabled — and absent on the wire, so legacy peers interoperate
+    /// in both directions (an absent key parses as empty; a present but
+    /// malformed one rejects the report).
+    pub progress: Vec<(ImageName, f64)>,
     pub pes: Vec<PeStatus>,
 }
 
@@ -130,7 +136,7 @@ impl PeStatus {
 
 impl WorkerReport {
     pub fn to_json(&self) -> Json {
-        Json::obj([
+        let mut fields = vec![
             ("worker", Json::num(self.worker.0 as f64)),
             ("at", Json::num(self.at.0 as f64)),
             ("total_cpu", Json::num(self.total_cpu.value())),
@@ -145,8 +151,22 @@ impl WorkerReport {
                     ])
                 })),
             ),
-            ("pes", Json::arr(self.pes.iter().map(|p| p.to_json()))),
-        ])
+        ];
+        // Only checkpointing workers emit the key: checkpoint-free
+        // reports stay byte-identical to the legacy wire format.
+        if !self.progress.is_empty() {
+            fields.push((
+                "progress",
+                Json::arr(self.progress.iter().map(|(img, frac)| {
+                    Json::obj([
+                        ("image", Json::str(img.as_str())),
+                        ("frac", Json::num(*frac)),
+                    ])
+                })),
+            ));
+        }
+        fields.push(("pes", Json::arr(self.pes.iter().map(|p| p.to_json()))));
+        Json::obj(fields)
     }
 
     pub fn from_json(v: &Json) -> Option<WorkerReport> {
@@ -170,6 +190,23 @@ impl WorkerReport {
                 ))
             })
             .collect::<Option<Vec<_>>>()?;
+        // Checkpoint progress is optional on the wire (absent from
+        // checkpoint-free and legacy peers → empty), but a key that is
+        // present must be well-formed — a corrupt entry rejects the
+        // report instead of silently dropping restart state.
+        let progress = match v.get("progress") {
+            None => Vec::new(),
+            Some(j) => j
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    Some((
+                        ImageName::new(e.get("image")?.as_str()?),
+                        e.get("frac")?.as_f64()?,
+                    ))
+                })
+                .collect::<Option<Vec<_>>>()?,
+        };
         let pes = v
             .get("pes")?
             .as_arr()?
@@ -181,6 +218,7 @@ impl WorkerReport {
             at: Millis(v.get("at")?.as_u64()?),
             total_cpu: CpuFraction::new(v.get("total_cpu")?.as_f64()?),
             per_image,
+            progress,
             pes,
         })
     }
@@ -224,6 +262,7 @@ mod tests {
                 ),
                 (ImageName::new("busy"), ResourceVec::cpu(0.25)),
             ],
+            progress: vec![(ImageName::new("cellprofiler"), 0.4)],
             pes: vec![
                 PeStatus {
                     pe: PeId(1),
@@ -308,6 +347,40 @@ mod tests {
         assert_eq!(usage.get(Resource::Cpu), 0.25);
         assert_eq!(usage.get(Resource::Ram), 0.0);
         assert_eq!(usage.get(Resource::Net), 0.0);
+    }
+
+    #[test]
+    fn progress_absent_parses_as_empty_and_roundtrips_away() {
+        // Legacy / checkpoint-free reports carry no "progress" key.
+        let j = Json::parse(
+            r#"{"worker": 1, "at": 0, "total_cpu": 0.5,
+                "per_image": [{"image": "img", "cpu": 0.25}], "pes": []}"#,
+        )
+        .unwrap();
+        let r = WorkerReport::from_json(&j).expect("legacy report parses");
+        assert!(r.progress.is_empty());
+        // And an empty progress vec stays off the wire entirely.
+        assert!(!r.to_json().to_string().contains("progress"));
+    }
+
+    #[test]
+    fn progress_malformed_rejects_the_report() {
+        // A present "progress" key must be well-formed: a non-numeric
+        // fraction is corruption, not a legacy peer.
+        let j = Json::parse(
+            r#"{"worker": 1, "at": 0, "total_cpu": 0.5,
+                "per_image": [{"image": "img", "cpu": 0.25}],
+                "progress": [{"image": "img", "frac": "oops"}], "pes": []}"#,
+        )
+        .unwrap();
+        assert!(WorkerReport::from_json(&j).is_none());
+        let j = Json::parse(
+            r#"{"worker": 1, "at": 0, "total_cpu": 0.5,
+                "per_image": [{"image": "img", "cpu": 0.25}],
+                "progress": 7, "pes": []}"#,
+        )
+        .unwrap();
+        assert!(WorkerReport::from_json(&j).is_none());
     }
 
     #[test]

@@ -127,6 +127,12 @@ pub struct SimCluster {
     arrivals: EventQueue<Arrival>,
     pub completions: Vec<Completion>,
     pub failed_deliveries: u64,
+    /// Work-milliseconds lost to failures and re-done by replacement
+    /// PEs: for every message recovered off a dead worker, the progress
+    /// beyond its last checkpoint. Monotone; the `sim.rework_s` series.
+    /// Checkpointing (`WorkerConfig::checkpoint_period`) exists to shrink
+    /// exactly this number.
+    pub rework_ms: u64,
     sample_timer: crate::clock::Periodic,
     now: Millis,
     /// Reused per-tick buffers (§Perf: the tick loop is allocation-free at
@@ -171,6 +177,7 @@ impl SimCluster {
             arrivals: EventQueue::new(),
             completions: Vec::new(),
             failed_deliveries: 0,
+            rework_ms: 0,
             sample_timer: crate::clock::Periodic::new(cfg.sample_interval),
             now: Millis::ZERO,
             view: ClusterView::default(),
@@ -344,6 +351,7 @@ impl SimCluster {
                 at: now,
                 total_cpu: CpuFraction::ZERO,
                 per_image: Vec::new(),
+                progress: Vec::new(),
                 pes: Vec::new(),
             });
             self.workers.push(worker);
@@ -365,19 +373,28 @@ impl SimCluster {
         // notice can also hit a VM still booting — buffered above so the
         // drain mark lands the moment the worker registers — and a
         // reclaim can, in which case the VM simply never becomes a
-        // worker.
+        // worker. A correlated zone failure is nothing special here: the
+        // cloud emits one event per spot VM in the zone and each drains
+        // or fails through this same loop.
         for event in self.cloud.take_spot_events() {
             match event {
-                SpotEvent::Preempted { vm, notice: _ } => {
+                SpotEvent::Preempted {
+                    vm,
+                    zone: _,
+                    notice: _,
+                } => {
                     if let Some(wid) = self.worker_of_vm(vm) {
                         if let Some(pos) = self.worker_pos(wid) {
-                            let hosted: Vec<ImageName> = self.workers[pos]
+                            // Each re-hosting request carries the PE's
+                            // last checkpoint so the replacement resumes
+                            // from the snapshot.
+                            let hosted: Vec<(ImageName, f64)> = self.workers[pos]
                                 .pes()
                                 .iter()
                                 .filter(|p| {
                                     p.state() != crate::protocol::PeState::Stopping
                                 })
-                                .map(|p| p.image.clone())
+                                .map(|p| (p.image.clone(), p.checkpoint))
                                 .collect();
                             self.irm.preemption_notice(wid, &hosted, now);
                         }
@@ -385,7 +402,7 @@ impl SimCluster {
                         self.noticed_while_booting.insert(vm);
                     }
                 }
-                SpotEvent::Reclaimed { vm } => {
+                SpotEvent::Reclaimed { vm, zone: _ } => {
                     self.noticed_while_booting.remove(&vm);
                     if let Some(wid) = self.worker_of_vm(vm) {
                         self.fail_worker(wid);
@@ -512,14 +529,19 @@ impl SimCluster {
                 let _ = self.cloud.request_vm(now);
             }
         } else {
-            // Cost-aware path: the IRM chose a flavor — and a pricing
-            // tier — per VM.
+            // Cost-aware path: the IRM chose a flavor, a pricing tier
+            // and (for diversity-spread spot picks) a failure-domain
+            // placement per VM. `zone: None` lands in `Zone(0)` — the
+            // naive single-zone default every legacy plan gets.
             for planned in &update.request_flavors {
-                let _ = if planned.spot {
-                    self.cloud.request_vm_spot(now, planned.flavor)
+                let tier = if planned.spot {
+                    crate::cloud::PriceTier::Spot
                 } else {
-                    self.cloud.request_vm_of(now, planned.flavor)
+                    crate::cloud::PriceTier::OnDemand
                 };
+                let _ = self
+                    .cloud
+                    .request_vm_placed(now, planned.flavor, tier, planned.zone);
             }
         }
         for _ in 0..update.cancel_boots {
@@ -715,6 +737,21 @@ impl SimCluster {
             .record("cloud.spot_cost_usd", now, self.cloud.spot_cost_usd());
         self.recorder
             .record("cloud.preemptions", now, self.cloud.preemptions as f64);
+        // Region-scale resilience series (the A8 zone-failure ablation):
+        // correlated-preemption count, work re-done after failures, and
+        // preempted re-hosting requests the queue had to give up on.
+        self.recorder.record(
+            "cloud.zone_preemptions",
+            now,
+            self.cloud.zone_preemptions as f64,
+        );
+        self.recorder
+            .record("sim.rework_s", now, self.rework_ms as f64 / 1000.0);
+        self.recorder.record(
+            "irm.requeue_dropped",
+            now,
+            self.irm.queue.dropped_preempted as f64,
+        );
         self.recorder.record(
             "completions",
             now,
@@ -726,6 +763,16 @@ impl SimCluster {
     /// not a graceful scale-down). Messages its busy PEs were processing
     /// are recovered onto the master backlog so nothing is lost; the
     /// cloud slot frees and the autoscaler replaces the capacity.
+    ///
+    /// Checkpoint/restore: a recovered message resumes from its PE's last
+    /// checkpoint — its remaining service demand shrinks by the
+    /// checkpointed fraction of the original demand. Work done beyond
+    /// the checkpoint is lost and will be re-done by the replacement;
+    /// that loss accumulates in [`rework_ms`](Self::rework_ms) (the
+    /// `sim.rework_s` series). With checkpointing disabled every
+    /// checkpoint is 0.0: messages requeue at full demand and the whole
+    /// in-flight run counts as rework — byte-identical recovery to the
+    /// pre-checkpoint harness.
     pub fn fail_worker(&mut self, id: WorkerId) -> bool {
         let Some(pos) = self.workers.iter().position(|w| w.id == id) else {
             return false;
@@ -734,8 +781,18 @@ impl SimCluster {
         // Recover in-flight messages (the reliability contract: the
         // master's backlog re-dispatches work that lost its PE).
         for pe in worker.pes() {
-            if let crate::worker::PePhase::Busy { msg, .. } = &pe.phase {
-                self.master.requeue_front(msg.clone());
+            if let crate::worker::PePhase::Busy { msg, remaining, .. } = &pe.phase {
+                let total = msg.service_demand.0;
+                let done = total.saturating_sub(remaining.0);
+                // The snapshot can never sit ahead of live progress, but
+                // clamp anyway so rework stays non-negative under any
+                // caller-injected checkpoint state.
+                let kept = (((pe.checkpoint.clamp(0.0, 1.0)) * total as f64).round() as u64)
+                    .min(done);
+                self.rework_ms += done - kept;
+                let mut resumed = msg.clone();
+                resumed.service_demand = Millis(total - kept);
+                self.master.requeue_front(resumed);
                 self.failed_deliveries += 1;
             }
         }
@@ -1166,6 +1223,7 @@ mod tests {
         cfg.irm.spot_policy = SpotPolicy {
             max_spot_fraction: 1.0,
             rework_penalty_usd: 0.001,
+            ..SpotPolicy::default()
         };
         // Enough work (~500 reference-seconds) that several spot VM
         // lifetimes elapse before the batch drains.
@@ -1232,6 +1290,7 @@ mod tests {
         cfg.irm.spot_policy = SpotPolicy {
             max_spot_fraction: 1.0,
             rework_penalty_usd: 0.0,
+            ..SpotPolicy::default()
         };
         let mut c = SimCluster::new(cfg);
         burst(&mut c, 20, Millis(0), Millis::from_secs(8));
@@ -1254,6 +1313,54 @@ mod tests {
             }
         }
         assert!(saw_worker, "spot workers registered at some point");
+    }
+
+    #[test]
+    fn ttl_expired_preempted_drop_is_counted_and_recorded() {
+        // A preempted re-hosting request that can never be placed (quota
+        // 0: no worker will ever exist) burns its TTL in the packer and
+        // is dropped. The drop must be counted separately from ordinary
+        // TTL drops and surfaced as the `irm.requeue_dropped` series —
+        // silently losing preempted capacity is the regression this pins.
+        let mut c = fast_cluster(0);
+        c.irm.queue.push_preempted(
+            ImageName::new("img"),
+            ResourceVec::cpu(0.5),
+            2,
+            Millis(0),
+            0.4,
+        );
+        c.run_until(Millis::from_secs(30));
+        assert_eq!(c.irm.queue.dropped_preempted, 1);
+        let s = c.recorder.get("irm.requeue_dropped").expect("series");
+        assert_eq!(s.points.last().expect("sampled").1, 1.0);
+    }
+
+    #[test]
+    fn checkpointing_cuts_rework_on_worker_failure() {
+        // Same seed, same workload, same kill time; the only difference
+        // is the checkpoint period. The checkpointer draws no rng and
+        // changes no scheduling, so both runs evolve identically up to
+        // the failure — the rework gap is purely what the snapshots
+        // preserved.
+        let run = |period: Millis| {
+            let mut c = fast_cluster(3);
+            c.cfg.worker.checkpoint_period = period;
+            burst(&mut c, 40, Millis(0), Millis::from_secs(30));
+            c.run_until(Millis::from_secs(50));
+            let ids: Vec<WorkerId> = c.workers().iter().map(|w| w.id).collect();
+            for id in ids {
+                c.fail_worker(id);
+            }
+            c.rework_ms
+        };
+        let scratch = run(Millis::ZERO);
+        let checkpointed = run(Millis::from_secs(1));
+        assert!(scratch > 0, "jobs were in flight when the workers died");
+        assert!(
+            checkpointed < scratch,
+            "snapshots must cut rework: {checkpointed} vs {scratch}"
+        );
     }
 
     #[test]

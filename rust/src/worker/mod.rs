@@ -51,6 +51,16 @@ pub struct WorkerConfig {
     pub resource_noise_std: f64,
     /// VM cores (capacity is normalized to 1.0 = all cores).
     pub cores: u32,
+    /// Checkpoint cadence for busy PEs: every period the worker snapshots
+    /// each busy PE's live progress fraction into its
+    /// [`checkpoint`](ProcessingEngine::checkpoint), and the periodic
+    /// report surfaces the per-image snapshots so the master can carry
+    /// them into preemption re-hosting requests (work since the last
+    /// snapshot is lost on preemption; work up to it is not redone).
+    /// `Millis(0)` disables checkpointing entirely — the default, which
+    /// keeps legacy runs byte-identical: no snapshots, no `progress`
+    /// entries in reports, no extra rng draws.
+    pub checkpoint_period: Millis,
 }
 
 impl Default for WorkerConfig {
@@ -66,6 +76,7 @@ impl Default for WorkerConfig {
             measure_noise_std: 0.01,
             resource_noise_std: 0.02,
             cores: 8,
+            checkpoint_period: Millis::ZERO,
         }
     }
 }
@@ -93,6 +104,9 @@ pub struct Worker {
     pe_ids: IdGen,
     rng: Rng,
     report_timer: Periodic,
+    /// Snapshot timer for the checkpointer; `None` when
+    /// `checkpoint_period` is zero (checkpointing disabled).
+    checkpoint_timer: Option<Periodic>,
     last_tick: Option<Millis>,
     /// Integrated (cpu·ms, busy·ms) per PE since the last report. Demand
     /// estimates average over *busy time only* so partially-busy intervals
@@ -107,6 +121,11 @@ pub struct Worker {
 impl Worker {
     pub fn new(id: WorkerId, vm: VmId, cfg: WorkerConfig, seed: u64) -> Self {
         let report_interval = cfg.report_interval;
+        let checkpoint_timer = if cfg.checkpoint_period.0 > 0 {
+            Some(Periodic::new(cfg.checkpoint_period))
+        } else {
+            None
+        };
         Worker {
             id,
             vm,
@@ -115,6 +134,7 @@ impl Worker {
             pe_ids: IdGen::new(),
             rng: Rng::seeded(seed),
             report_timer: Periodic::new(report_interval),
+            checkpoint_timer,
             last_tick: None,
             acc_cpu_ms: Vec::new(),
             acc_window_ms: 0.0,
@@ -215,6 +235,17 @@ impl Worker {
         &self.pes
     }
 
+    /// `(image, last checkpoint)` for every hosted PE — what a preemption
+    /// notice hands the IRM so each re-hosting request carries the
+    /// progress snapshot of the PE it replaces. Uncheckpointed, idle and
+    /// booting PEs report `0.0` (their replacement starts from scratch).
+    pub fn hosted_with_checkpoints(&self) -> Vec<(ImageName, f64)> {
+        self.pes
+            .iter()
+            .map(|p| (p.image.clone(), p.checkpoint))
+            .collect()
+    }
+
     pub fn pe_count(&self) -> usize {
         self.pes.len()
     }
@@ -302,11 +333,25 @@ impl Worker {
                         std::mem::replace(&mut p.phase, PePhase::Idle { since: now })
                     {
                         p.jobs_done += 1;
+                        p.checkpoint = 0.0;
                         events.push(WorkerEvent::JobCompleted {
                             pe: p.id,
                             msg,
                             completed_at: now,
                         });
+                    }
+                }
+            }
+        }
+
+        // 3b. Checkpointer: snapshot every busy PE's live progress on the
+        // configured cadence. Runs after completions so a message that
+        // just finished is never snapshotted.
+        if let Some(timer) = &mut self.checkpoint_timer {
+            if timer.fire(now) {
+                for p in &mut self.pes {
+                    if matches!(p.phase, PePhase::Busy { .. }) {
+                        p.checkpoint = p.progress();
                     }
                 }
             }
@@ -429,11 +474,33 @@ impl Worker {
             per_image.push((img, ResourceVec::new(cpu, ram, net)));
         }
 
+        // Per-image checkpoint progress: the furthest snapshot among the
+        // image's PEs. Only emitted when the checkpointer is enabled, so
+        // legacy (checkpoint-free) reports stay byte-identical on the
+        // wire.
+        let progress: Vec<(ImageName, f64)> = if self.checkpoint_timer.is_some() {
+            per_image
+                .iter()
+                .map(|(img, _)| {
+                    let best = self
+                        .pes
+                        .iter()
+                        .filter(|p| &p.image == img)
+                        .map(|p| p.checkpoint)
+                        .fold(0.0f64, f64::max);
+                    (img.clone(), best)
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+
         WorkerReport {
             worker: self.id,
             at: now,
             total_cpu: self.last_total_cpu,
             per_image,
+            progress,
             pes,
         }
     }
@@ -456,6 +523,7 @@ mod tests {
             measure_noise_std: 0.0,
             resource_noise_std: 0.0,
             cores: 8,
+            checkpoint_period: Millis::ZERO,
         }
     }
 
@@ -657,6 +725,59 @@ mod tests {
         assert!(rams.iter().any(|r| (r - 0.3).abs() > 1e-6), "{rams:?}");
         let mean = rams.iter().sum::<f64>() / rams.len() as f64;
         assert!((mean - 0.3).abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn checkpointer_snapshots_busy_progress_and_reports_it() {
+        let mut cfg = quiet_cfg();
+        cfg.checkpoint_period = Millis(1000);
+        let mut w = Worker::new(WorkerId(0), VmId(0), cfg, 1);
+        let img = ImageName::new("img");
+        let pe = w.start_pe(img.clone(), CpuFraction::new(0.25), Millis(0));
+        run_until(&mut w, Millis(0), Millis(2000), Millis(100));
+        w.deliver(pe, msg(1, 10_000), Millis(2000)).unwrap();
+        let events = run_until(&mut w, Millis(2100), Millis(7000), Millis(100));
+        // ~5 s into a 10 s job, the last snapshot sits near the live
+        // progress and strictly behind it (snapshots lag by up to a
+        // period — the work at risk on preemption).
+        let hosted = w.hosted_with_checkpoints();
+        assert_eq!(hosted.len(), 1);
+        let (himg, ckpt) = &hosted[0];
+        assert_eq!(himg, &img);
+        assert!(*ckpt > 0.2 && *ckpt <= 0.5, "checkpoint {ckpt}");
+        assert!(*ckpt <= w.pes()[0].progress() + 1e-12);
+        // The periodic report surfaces the snapshot per image.
+        let last = events
+            .iter()
+            .filter_map(|e| match e {
+                WorkerEvent::Report(r) => Some(r),
+                _ => None,
+            })
+            .last()
+            .expect("reported");
+        assert_eq!(last.progress.len(), 1);
+        assert_eq!(last.progress[0].0, img);
+        assert!(last.progress[0].1 > 0.0);
+    }
+
+    #[test]
+    fn disabled_checkpointer_reports_no_progress_entries() {
+        let mut w = Worker::new(WorkerId(0), VmId(0), quiet_cfg(), 1);
+        let img = ImageName::new("img");
+        let pe = w.start_pe(img.clone(), CpuFraction::new(0.25), Millis(0));
+        run_until(&mut w, Millis(0), Millis(2000), Millis(100));
+        w.deliver(pe, msg(1, 10_000), Millis(2000)).unwrap();
+        let events = run_until(&mut w, Millis(2100), Millis(5000), Millis(100));
+        let last = events
+            .iter()
+            .filter_map(|e| match e {
+                WorkerEvent::Report(r) => Some(r),
+                _ => None,
+            })
+            .last()
+            .expect("reported");
+        assert!(last.progress.is_empty(), "legacy reports carry no progress");
+        assert_eq!(w.hosted_with_checkpoints()[0].1, 0.0);
     }
 
     #[test]

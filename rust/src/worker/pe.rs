@@ -55,6 +55,13 @@ pub struct ProcessingEngine {
     /// CPU actually granted in the last tick (set by the worker's
     /// contention model; what the profiler measures).
     pub granted: CpuFraction,
+    /// Last snapshotted progress fraction of the current busy message
+    /// (0.0..=1.0), taken by the worker's periodic checkpointer. `0.0`
+    /// when checkpointing is disabled, the PE is not busy, or no
+    /// snapshot has fired yet. On preemption the re-hosting request
+    /// carries this value so the replacement PE resumes from the
+    /// snapshot instead of re-running the message from scratch.
+    pub checkpoint: f64,
 }
 
 impl ProcessingEngine {
@@ -100,6 +107,28 @@ impl ProcessingEngine {
             },
             jobs_done: 0,
             granted: CpuFraction::ZERO,
+            checkpoint: 0.0,
+        }
+    }
+
+    /// Live progress fraction of the current busy message: work done so
+    /// far over its total service demand, in `0.0..=1.0`. Zero when not
+    /// busy. This is what the periodic checkpointer snapshots into
+    /// [`checkpoint`](Self::checkpoint) — the live value itself is not
+    /// recoverable after a preemption (state since the last snapshot is
+    /// lost), which is exactly the gap the checkpoint period trades
+    /// against overhead.
+    pub fn progress(&self) -> f64 {
+        match &self.phase {
+            PePhase::Busy { msg, remaining, .. } => {
+                let total = msg.service_demand.0;
+                if total == 0 {
+                    0.0
+                } else {
+                    (1.0 - remaining.0 as f64 / total as f64).clamp(0.0, 1.0)
+                }
+            }
+            _ => 0.0,
         }
     }
 
@@ -160,6 +189,7 @@ impl ProcessingEngine {
                 msg,
                 started_at: now,
             };
+            self.checkpoint = 0.0;
             Ok(())
         } else {
             Err(msg)
@@ -241,6 +271,24 @@ mod tests {
         assert!((p.aux_usage().get(Resource::Net) - 0.05).abs() < 1e-12);
         p.phase = PePhase::Stopping { until: Millis(100) };
         assert!((p.aux_usage().get(Resource::Ram) - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn progress_tracks_remaining_and_resets_on_deliver() {
+        let mut p = pe(Millis(0));
+        assert_eq!(p.progress(), 0.0, "not busy");
+        p.phase = PePhase::Idle { since: Millis(0) };
+        p.deliver(msg(1000), Millis(0)).unwrap();
+        assert_eq!(p.progress(), 0.0, "just started");
+        if let PePhase::Busy { remaining, .. } = &mut p.phase {
+            *remaining = Millis(250);
+        }
+        assert!((p.progress() - 0.75).abs() < 1e-12);
+        p.checkpoint = 0.75;
+        // Finishing and accepting a new message clears the old snapshot.
+        p.phase = PePhase::Idle { since: Millis(1000) };
+        p.deliver(msg(1000), Millis(1000)).unwrap();
+        assert_eq!(p.checkpoint, 0.0);
     }
 
     #[test]

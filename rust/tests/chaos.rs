@@ -9,10 +9,15 @@
 //! mode: preemption notices grace-drain workers, requeued containers are
 //! never lost or double-hosted, reclaimed capacity is replaced in
 //! reference units, and both the blended ledger and its spot share stay
-//! monotone under preempt/cancel/crash churn.
+//! monotone under preempt/cancel/crash churn. The zone cases inject the
+//! *correlated* failure mode — a whole failure domain reclaiming every
+//! spot VM it hosts in a single tick, repeatedly — and pin the same
+//! invariants (conservation, exactly-once completion, monotone ledgers,
+//! catalog-quantum replacement) plus the diversity contract: a spread
+//! fleet rides through a zone kill with quiet-zone capacity intact.
 
 use harmonicio::binpacking::Resource;
-use harmonicio::cloud::{CloudConfig, Flavor};
+use harmonicio::cloud::{CloudConfig, Flavor, Zone};
 use harmonicio::experiments::microscopy;
 use harmonicio::irm::{FlavorOption, ResourceModel, SpotPolicy};
 use harmonicio::sim::{Arrival, ClusterConfig, SimCluster};
@@ -226,6 +231,36 @@ fn spot_cluster(quota: usize, hazard_per_hour: f64) -> SimCluster {
     cfg.irm.spot_policy = SpotPolicy {
         max_spot_fraction: 1.0,
         rework_penalty_usd: 0.001,
+        ..SpotPolicy::default()
+    };
+    SimCluster::new(cfg)
+}
+
+/// The zone-aware variant of [`spot_cluster`]: an all-spot fleet with
+/// three failure domains and all *correlated* hazard concentrated in
+/// zone 0 (individual spot hazard zero, isolating the correlated path).
+/// `zones = 0` leaves spreading off — every spot VM lands in the hot
+/// default zone 0 — while `zones = 3` spreads each planning round with
+/// at most `max_zone_fraction` of its spot units in any one zone.
+fn zoned_cluster(
+    quota: usize,
+    zone0_per_hour: f64,
+    zones: usize,
+    max_zone_fraction: f64,
+) -> SimCluster {
+    let mut cfg = hetero_cfg(quota);
+    let boot = Millis::from_secs(8);
+    cfg.cloud.zone_hazard = vec![zone0_per_hour, 0.0, 0.0];
+    cfg.cloud.preemption_notice = Millis::from_secs(10);
+    cfg.irm.flavor_catalog = vec![
+        FlavorOption::nominal_spot(Flavor::Xlarge, boot),
+        FlavorOption::nominal_spot(Flavor::Large, boot),
+    ];
+    cfg.irm.spot_policy = SpotPolicy {
+        max_spot_fraction: 1.0,
+        rework_penalty_usd: 0.001,
+        zones,
+        max_zone_fraction,
     };
     SimCluster::new(cfg)
 }
@@ -387,4 +422,112 @@ fn cost_ledger_monotone_through_crash_and_cancel_churn() {
     let makespan = c.run_to_completion(120, Millis::from_secs(4000));
     assert!(makespan.is_some(), "drained despite crash/cancel churn");
     assert!(c.cloud.cost_usd() >= last_cost);
+}
+
+#[test]
+fn zone_kill_reclaims_fleet_conserves_messages_and_ledger() {
+    // Naive single-zone placement: every spot VM sits in the hot zone,
+    // so each scheduled zone failure reclaims the whole spot fleet in
+    // one tick. The zone-failure schedule is drawn at construction, so
+    // the test walks the actual instants instead of guessing times.
+    let mut c = zoned_cluster(8, 30.0, 0, 0.0);
+    burst(&mut c, 150, 12);
+    let schedule: Vec<Millis> = c.cloud.zone_failures(Zone(0)).to_vec();
+    assert!(!schedule.is_empty(), "the hot zone drew a failure schedule");
+    let mut last_cost = 0.0_f64;
+    let mut last_spot = 0.0_f64;
+    for &at in schedule.iter().take(4) {
+        c.run_until(at + Millis::from_secs(15));
+        assert_eq!(
+            c.accounted_messages(),
+            150,
+            "conservation after the zone kill at {at}"
+        );
+        let (cost, spot) = (c.cloud.cost_usd(), c.cloud.spot_cost_usd());
+        assert!(
+            cost >= last_cost - 1e-12 && spot >= last_spot - 1e-12,
+            "ledgers monotone through the zone kill at {at}"
+        );
+        assert!(spot <= cost + 1e-9, "spot share exceeds the blended total");
+        last_cost = cost;
+        last_spot = spot;
+    }
+    assert!(
+        c.cloud.zone_preemptions >= 1,
+        "a zone kill actually reclaimed spot VMs"
+    );
+    let makespan = c.run_to_completion(150, Millis::from_secs(6000));
+    assert!(makespan.is_some(), "drained despite repeated whole-zone kills");
+    assert_eq!(c.completions.len(), 150, "every message completed exactly once");
+}
+
+#[test]
+fn diverse_spread_limits_zone_blast_radius() {
+    // Same hot zone, but the planner spreads: at most 40% of each
+    // round's spot units in any one zone, so a zone kill can never take
+    // the whole fleet — quiet-zone capacity must ride straight through
+    // the reclaim tick, and replacements stay in catalog quanta.
+    let mut c = zoned_cluster(8, 30.0, 3, 0.4);
+    burst(&mut c, 800, 30);
+    let schedule: Vec<Millis> = c.cloud.zone_failures(Zone(0)).to_vec();
+    assert!(!schedule.is_empty(), "the hot zone drew a failure schedule");
+    c.run_until(Millis::from_secs(80));
+    assert!(c.master.backlog_len() > 0, "still under pressure");
+    // Walk the first few kills that land after the fleet ramped.
+    let ramped = Millis::from_secs(80);
+    for &at in schedule.iter().filter(|&&at| at >= ramped).take(3) {
+        c.run_until(at + Millis(100));
+        assert!(
+            c.total_capacity().get(Resource::Cpu) > 0.0,
+            "diversity keeps quiet-zone capacity through the kill at {at}"
+        );
+        assert_eq!(c.accounted_messages(), 800, "conservation after zone kill");
+        let doubled = c.total_capacity().get(Resource::Cpu) * 2.0;
+        assert!(
+            (doubled - doubled.round()).abs() < 1e-6,
+            "capacity is not a sum of Xlarge/Large units after the kill"
+        );
+    }
+    assert!(
+        c.cloud.zone_preemptions >= 1,
+        "zone kills actually reclaimed spread spot VMs"
+    );
+    assert!(
+        !c.completions.is_empty(),
+        "work progressed through correlated churn"
+    );
+}
+
+#[test]
+fn deep_repeated_zone_kills_conserve_everything() {
+    // Deep chaos at an aggressive cadence (mean one whole-zone kill per
+    // minute on a spread fleet). Scaled by TESTKIT_CASES like the
+    // property suites, so `ci_check.sh --deep` cranks the churn window.
+    let cases: usize = std::env::var("TESTKIT_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(600);
+    let rounds = (cases / 100).max(6);
+    let mut c = zoned_cluster(6, 60.0, 3, 0.5);
+    burst(&mut c, 120, 10);
+    let mut t = Millis::ZERO;
+    let mut last_cost = 0.0_f64;
+    for round in 0..rounds {
+        t = t + Millis::from_secs(20);
+        c.run_until(t);
+        assert_eq!(
+            c.accounted_messages(),
+            120,
+            "conservation at zone-churn round {round}"
+        );
+        let cost = c.cloud.cost_usd();
+        assert!(
+            cost >= last_cost - 1e-12,
+            "ledger regressed at zone-churn round {round}: {last_cost} -> {cost}"
+        );
+        last_cost = cost;
+    }
+    let makespan = c.run_to_completion(120, Millis::from_secs(6000));
+    assert!(makespan.is_some(), "drained despite repeated zone kills");
+    assert_eq!(c.completions.len(), 120, "every message completed exactly once");
 }

@@ -9,7 +9,7 @@ fn all_figures_reproduce_with_passing_checks() {
     std::fs::create_dir_all(&out).unwrap();
     let reports =
         harmonicio::experiments::run("all", out.to_str().unwrap(), 42).expect("suite runs");
-    assert_eq!(reports.len(), 16, "all 16 experiments ran");
+    assert_eq!(reports.len(), 17, "all 17 experiments ran");
     let mut failed = Vec::new();
     for r in &reports {
         for c in &r.checks {
@@ -38,6 +38,7 @@ fn all_figures_reproduce_with_passing_checks() {
         "ablation_cost.csv",
         "ablation_liveprofile.csv",
         "ablation_spot.csv",
+        "ablation_zonefail.csv",
     ] {
         let path = out.join(fig);
         let meta = std::fs::metadata(&path).unwrap_or_else(|_| panic!("{fig} missing"));
@@ -58,9 +59,10 @@ fn figures_are_deterministic_per_seed() {
     assert_eq!(a, b, "same seed → identical figure data");
 }
 
-/// Golden regression pin for the A4/A5/A6/A7 headline metrics at seed
+/// Golden regression pin for the A4–A8 headline metrics at seed
 /// 42: the full metric CSVs (overcommit_pp, cost_usd, spot spend and
-/// preemption counts, deadline misses, makespans, peak workers,
+/// preemption counts, zone preemptions, rework seconds, deadline
+/// misses, makespans, peak workers,
 /// live-profile convergence) are snapshotted
 /// under `rust/tests/golden/` and compared byte-for-byte — the
 /// experiments are deterministic per seed, so any diff is a behavior
@@ -88,6 +90,7 @@ fn golden_ablation_metrics_pinned_per_seed() {
         harmonicio::experiments::run("ablation-cost", out.to_str().unwrap(), 42).unwrap();
         harmonicio::experiments::run("ablation-liveprofile", out.to_str().unwrap(), 42).unwrap();
         harmonicio::experiments::run("ablation-spot", out.to_str().unwrap(), 42).unwrap();
+        harmonicio::experiments::run("ablation-zonefail", out.to_str().unwrap(), 42).unwrap();
     }
 
     let golden_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden");
@@ -98,6 +101,7 @@ fn golden_ablation_metrics_pinned_per_seed() {
         "ablation_cost.csv",
         "ablation_liveprofile.csv",
         "ablation_spot.csv",
+        "ablation_zonefail.csv",
     ] {
         let produced = std::fs::read_to_string(out_a.join(csv)).unwrap();
         let rerun = std::fs::read_to_string(out_b.join(csv)).unwrap();
