@@ -94,7 +94,8 @@ impl Bencher {
             if Instant::now() >= warm_end && dt >= Duration::from_micros(10) {
                 let target = self.measure / self.samples as u32;
                 let scale = target.as_secs_f64() / dt.as_secs_f64().max(1e-9);
-                iters = ((iters as f64 * scale).ceil() as u64).clamp(1, 1_000_000_000);
+                iters = crate::util::cast::f64_to_u64((iters as f64 * scale).ceil())
+                    .clamp(1, 1_000_000_000);
                 break;
             }
             if dt < Duration::from_millis(1) {
@@ -109,10 +110,10 @@ impl Bencher {
             let dt = t0.elapsed();
             per_iter_ns.push(dt.as_nanos() as f64 / iters as f64);
         }
-        per_iter_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        per_iter_ns.sort_by(|a, b| a.total_cmp(b));
         let median = per_iter_ns[per_iter_ns.len() / 2];
         let mut devs: Vec<f64> = per_iter_ns.iter().map(|x| (x - median).abs()).collect();
-        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        devs.sort_by(|a, b| a.total_cmp(b));
         let mad = devs[devs.len() / 2];
 
         let m = Measurement {

@@ -1,0 +1,123 @@
+//! `pallas_lint` — CLI front-end for the [`harmonicio::lint`] engine.
+//!
+//! ```text
+//! pallas_lint [--deep] [--rules] [--file <path> --as <virtual-rel>] [root]
+//! ```
+//!
+//! * default: walk `<root>/rust/src/**` (root defaults to the current
+//!   directory) and print every finding as `file:line: RULE: message`;
+//!   exit 1 when anything is found, 0 when clean.
+//! * `--deep`: extend the scan to `rust/tests/**` and `rust/benches/**`
+//!   (float-hazard rules only; `rust/tests/lint_fixtures/` is excluded —
+//!   those snippets are known-bad on purpose).
+//! * `--file P --as REL`: lint a single file as if it lived at `REL`
+//!   under `rust/src/` — how the self-test corpus exercises module
+//!   scoping without planting bad code in the real tree.
+//! * `--rules`: print the rule catalog and exit.
+//!
+//! `scripts/ci_check.sh` runs this before the tier-1 tests.
+
+use harmonicio::lint::{self, FileCtx};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut deep = false;
+    let mut file: Option<String> = None;
+    let mut virt: Option<String> = None;
+    let mut root: Option<PathBuf> = None;
+    let mut i = 0usize;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--deep" => deep = true,
+            "--rules" => {
+                for (id, summary) in lint::RULES {
+                    println!("{id:<5} {summary}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--file" => {
+                i += 1;
+                file = args.get(i).cloned();
+            }
+            "--as" => {
+                i += 1;
+                virt = args.get(i).cloned();
+            }
+            "--help" | "-h" => {
+                eprintln!(
+                    "usage: pallas_lint [--deep] [--rules] \
+                     [--file <path> --as <virtual-rel>] [root]"
+                );
+                return ExitCode::SUCCESS;
+            }
+            other if root.is_none() && !other.starts_with('-') => {
+                root = Some(PathBuf::from(other));
+            }
+            other => {
+                eprintln!("pallas_lint: unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+        i += 1;
+    }
+
+    let findings = if let Some(path) = file {
+        let rel = match virt {
+            Some(v) => v,
+            None => {
+                eprintln!("pallas_lint: --file requires --as <virtual-rel>");
+                return ExitCode::from(2);
+            }
+        };
+        let src = match std::fs::read_to_string(&path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("pallas_lint: cannot read {path}: {e}");
+                return ExitCode::from(2);
+            }
+        };
+        let found = lint::lint_source(&rel, &path, &src, FileCtx::Source);
+        report(&found, 1);
+        found
+    } else {
+        let root = root.unwrap_or_else(|| PathBuf::from("."));
+        if !root.join("rust").join("src").is_dir() {
+            eprintln!(
+                "pallas_lint: {} does not look like the repo root (no rust/src)",
+                root.display()
+            );
+            return ExitCode::from(2);
+        }
+        match lint::lint_tree(&root, deep) {
+            Ok((found, scanned)) => {
+                report(&found, scanned);
+                found
+            }
+            Err(e) => {
+                eprintln!("pallas_lint: scan failed: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    };
+
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn report(findings: &[lint::Finding], scanned: usize) {
+    for f in findings {
+        println!("{f}");
+    }
+    println!(
+        "pallas-lint: {} finding{} ({} file{} scanned)",
+        findings.len(),
+        if findings.len() == 1 { "" } else { "s" },
+        scanned,
+        if scanned == 1 { "" } else { "s" },
+    );
+}

@@ -109,7 +109,7 @@ pub fn any_fit_insert(rule: AnyFit, bins: &mut Vec<Bin>, item: Item) -> usize {
 /// The harmonic class of a size: `j` with `size ∈ (1/(j+1), 1/j]`, sizes
 /// ≤ `1/k` collapsing into class `k`.
 pub(crate) fn harmonic_class(size: f64, k: usize) -> usize {
-    let j = (1.0 / size).floor() as usize;
+    let j = crate::util::cast::f64_to_usize((1.0 / size).floor());
     j.clamp(1, k)
 }
 

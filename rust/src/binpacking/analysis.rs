@@ -9,7 +9,7 @@ use super::{BinPacker, Item, Packing, EPS};
 pub fn ideal_bins(items: &[Item]) -> usize {
     let total: f64 = items.iter().map(|i| i.size).sum();
     // Tolerate float dust (e.g. ten 0.1-items must be 1 bin, not 2).
-    (total - 1e-9).ceil().max(0.0) as usize
+    crate::util::cast::f64_to_usize((total - EPS).ceil().max(0.0))
 }
 
 /// `bins_used / ideal` — an (over)estimate of the performance ratio R for

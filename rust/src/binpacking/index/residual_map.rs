@@ -68,9 +68,10 @@ impl ResidualMap {
     /// Drop all bins at index ≥ `len`.
     pub fn truncate(&mut self, len: usize) {
         while self.residuals.len() > len {
-            let idx = self.residuals.len() - 1;
-            let old = self.residuals.pop().unwrap();
-            self.set.remove(&(key(old), idx));
+            if let Some(old) = self.residuals.pop() {
+                // post-pop len == the popped bin's index
+                self.set.remove(&(key(old), self.residuals.len()));
+            }
         }
     }
 

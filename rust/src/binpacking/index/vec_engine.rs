@@ -225,20 +225,17 @@ impl VecPackEngine {
             VecRuleState::Worst => self.extreme_fitting(&item, key, need, |cand, cur| {
                 cand.total_cmp(&cur) == Ordering::Greater
             }),
-            VecRuleState::Harmonic { open, .. } => {
-                let class = class.expect("classified above");
-                match open.get(&class) {
-                    Some(&(idx, count)) if count < class.1 && self.bins[idx].fits(&item) => {
-                        Some(idx)
-                    }
-                    _ => None,
-                }
-            }
+            VecRuleState::Harmonic { open, .. } => class.and_then(|cls| match open.get(&cls) {
+                Some(&(idx, count)) if count < cls.1 && self.bins[idx].fits(&item) => Some(idx),
+                _ => None,
+            }),
         };
         let (idx, item) = match chosen {
             Some(idx) => {
-                if let VecRuleState::Harmonic { open, .. } = &mut self.rule {
-                    if let Some(entry) = open.get_mut(&class.expect("classified above")) {
+                if let (VecRuleState::Harmonic { open, .. }, Some(cls)) =
+                    (&mut self.rule, class)
+                {
+                    if let Some(entry) = open.get_mut(&cls) {
                         entry.1 += 1;
                     }
                 }
@@ -269,10 +266,10 @@ impl VecPackEngine {
                         )
                     }
                 };
-                match &mut self.rule {
-                    VecRuleState::Next { cursor } => *cursor = idx,
-                    VecRuleState::Harmonic { open, .. } => {
-                        open.insert(class.expect("classified above"), (idx, 1));
+                match (&mut self.rule, class) {
+                    (VecRuleState::Next { cursor }, _) => *cursor = idx,
+                    (VecRuleState::Harmonic { open, .. }, Some(cls)) => {
+                        open.insert(cls, (idx, 1));
                     }
                     _ => {}
                 }

@@ -109,6 +109,12 @@ pub struct Bin {
 /// and a worker loaded to 0.999999 must still count as full.
 pub const EPS: f64 = 1e-9;
 
+/// Looser tolerance used by invariant *checks* (`Packing::check`,
+/// `VecPacking::check`, the ablation overcommit assertions): accumulated
+/// float dust across a whole packing can exceed [`EPS`], but anything past
+/// this slack is a real accounting bug.
+pub const CHECK_SLACK: f64 = 1e-6;
+
 impl Bin {
     pub fn new() -> Self {
         Bin::default()
@@ -154,11 +160,11 @@ impl Packing {
     pub fn check(&self, items: &[Item]) -> Result<(), String> {
         for (i, b) in self.bins.iter().enumerate() {
             let sum: f64 = b.items.iter().map(|it| it.size).sum();
-            if b.used > 1.0 + 1e-6 {
+            if b.used > 1.0 + CHECK_SLACK {
                 return Err(format!("bin {i} overflows: used={}", b.used));
             }
             // `used` may include pre-existing load not in `items`.
-            if sum > b.used + 1e-6 {
+            if sum > b.used + CHECK_SLACK {
                 return Err(format!(
                     "bin {i} accounting broken: items sum {sum} > used {}",
                     b.used

@@ -50,6 +50,7 @@ use std::collections::HashMap;
 use std::fmt;
 
 use super::algorithms::harmonic_class;
+use super::{CHECK_SLACK, EPS};
 
 /// Resource dimensions used by the extended profiler.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -212,7 +213,7 @@ impl VecBin {
     }
 
     pub fn fits(&self, item: &VecItem) -> bool {
-        item.size.fits_within(&self.used, &self.capacity, 1e-9)
+        item.size.fits_within(&self.used, &self.capacity, EPS)
     }
 
     pub fn push(&mut self, item: VecItem) {
@@ -237,7 +238,7 @@ impl VecPacking {
     pub fn check(&self, items: &[VecItem]) -> Result<(), String> {
         for (i, b) in self.bins.iter().enumerate() {
             for d in 0..DIMS {
-                if b.used.0[d] > b.capacity.0[d] + 1e-6 {
+                if b.used.0[d] > b.capacity.0[d] + CHECK_SLACK {
                     return Err(format!(
                         "bin {i} dim {d} overflows: {} > cap {}",
                         b.used.0[d], b.capacity.0[d]
@@ -524,9 +525,9 @@ pub fn ideal_bins_md_in(items: &[VecItem], cap: &ResourceVec) -> usize {
     (0..DIMS)
         .map(|d| {
             if cap.0[d] <= 0.0 {
-                return if per_dim[d] > 1e-9 { usize::MAX } else { 0 };
+                return if per_dim[d] > EPS { usize::MAX } else { 0 };
             }
-            ((per_dim[d] / cap.0[d]) - 1e-9).ceil().max(0.0) as usize
+            crate::util::cast::f64_to_usize(((per_dim[d] / cap.0[d]) - EPS).ceil().max(0.0))
         })
         .max()
         .unwrap_or(0)

@@ -495,6 +495,7 @@ impl SimCloud {
         let flavor = if self.cfg.flavor_cycle.is_empty() {
             self.cfg.flavor
         } else {
+            // pallas-lint: allow(P2, index is taken modulo the cycle length, which the branch guarantees is non-zero)
             self.cfg.flavor_cycle[self.provisioned % self.cfg.flavor_cycle.len()]
         };
         self.request_vm_of(now, flavor)

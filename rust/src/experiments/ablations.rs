@@ -24,7 +24,7 @@ use anyhow::Result;
 
 use crate::binpacking::{
     analysis, first_fit_md_in, BestFit, BinPacker, FirstFit, FirstFitDecreasing, Harmonic, Item,
-    NextFit, Resource, ResourceVec, VecBin, VecItem, VecPacking, WorstFit,
+    NextFit, Resource, ResourceVec, VecBin, VecItem, VecPacking, WorstFit, CHECK_SLACK, EPS,
 };
 use crate::cloud::Flavor;
 use crate::experiments::{microscopy, Report};
@@ -341,7 +341,7 @@ pub fn multidim(out: &Path, seed: u64) -> Result<Report> {
     );
     report.check(
         "vector packing respects every dimension",
-        s_vec.overcommit.iter().all(|&o| o <= 1e-9),
+        s_vec.overcommit.iter().all(|&o| o <= EPS),
         "no dimension overflows",
     );
     report.check(
@@ -411,7 +411,7 @@ pub fn multidim(out: &Path, seed: u64) -> Result<Report> {
     );
     report.check(
         "vector packing never exceeds a flavor's RAM",
-        rows[1].3 <= 1e-6,
+        rows[1].3 <= CHECK_SLACK,
         format!("worst overcommit {:.2} pp", rows[1].3),
     );
     Ok(report)
@@ -529,7 +529,7 @@ pub fn cost(out: &Path, seed: u64) -> Result<Report> {
     );
     report.check(
         "vector packing keeps RAM within flavor capacity in both arms",
-        single.5 <= 1e-6 && aware.5 <= 1e-6,
+        single.5 <= CHECK_SLACK && aware.5 <= CHECK_SLACK,
         format!("{:.2} / {:.2} pp", single.5, aware.5),
     );
     Ok(report)
@@ -646,7 +646,7 @@ pub fn liveprofile(out: &Path, seed: u64) -> Result<Report> {
     );
     report.check(
         "static arm never learns (estimate pinned to the prior)",
-        (statik.2 - wrong_prior.get(Resource::Ram)).abs() < 1e-9,
+        (statik.2 - wrong_prior.get(Resource::Ram)).abs() < EPS,
         format!("estimate {:.3}", statik.2),
     );
     report.check(
@@ -656,7 +656,7 @@ pub fn liveprofile(out: &Path, seed: u64) -> Result<Report> {
     );
     report.check(
         "live profiling eliminates the steady-state overcommit",
-        live.3 <= 1e-6,
+        live.3 <= CHECK_SLACK,
         format!("{:.2} pp after warm-up", live.3),
     );
     report.check(
@@ -853,7 +853,7 @@ pub fn spot(out: &Path, seed: u64) -> Result<Report> {
     );
     report.check(
         "spot share never exceeds the blended ledger",
-        degen.spot_cost <= degen.cost + 1e-9 && aware.spot_cost <= aware.cost + 1e-9,
+        degen.spot_cost <= degen.cost + EPS && aware.spot_cost <= aware.cost + EPS,
         format!(
             "${:.2}/${:.2} and ${:.2}/${:.2}",
             degen.spot_cost, degen.cost, aware.spot_cost, aware.cost
@@ -1098,7 +1098,7 @@ pub fn zonefail(out: &Path, seed: u64) -> Result<Report> {
     );
     report.check(
         "spot share never exceeds the blended ledger",
-        results.iter().all(|a| a.spot_cost <= a.cost + 1e-9),
+        results.iter().all(|a| a.spot_cost <= a.cost + EPS),
         "per-tier ledgers consistent in every arm",
     );
     Ok(report)

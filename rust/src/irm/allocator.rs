@@ -8,6 +8,8 @@
 //! resulting in a mapping of where to host the queued PEs and how many
 //! worker VMs are needed to host these."
 
+// pallas-lint: allow-file(P2, bins[i] pairs with workers.iter().enumerate() and the engine keeps one bin per worker; workers[bin_idx] is range-guarded)
+
 use crate::binpacking::{
     EngineRule, Item, PackEngine, Resource, ResourceVec, VecItem, VecPackEngine, VecRule, EPS,
 };

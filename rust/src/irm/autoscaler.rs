@@ -84,7 +84,9 @@
 //! tags zones — the plan is otherwise byte-identical to the unspread
 //! one (the A8 degenerate-arm pin).
 
-use std::collections::HashMap;
+// pallas-lint: allow-file(P2, indices come from dominant_dim()/0..DIMS loops and catalog scans bounded by construction)
+
+use std::collections::BTreeMap;
 
 use crate::binpacking::ResourceVec;
 use crate::cloud::{Flavor, Zone};
@@ -170,7 +172,9 @@ pub struct ScalePlan {
 pub struct AutoScaler {
     policy: BufferPolicy,
     drain_grace: Millis,
-    empty_since: HashMap<WorkerId, Millis>,
+    // BTreeMap, not HashMap: `.retain` and the drain scan iterate it, and
+    // iteration order must be deterministic (lint rule D1).
+    empty_since: BTreeMap<WorkerId, Millis>,
 }
 
 impl AutoScaler {
@@ -178,7 +182,7 @@ impl AutoScaler {
         AutoScaler {
             policy,
             drain_grace,
-            empty_since: HashMap::new(),
+            empty_since: BTreeMap::new(),
         }
     }
 
@@ -392,9 +396,9 @@ impl FlavorPlanner {
     /// cheapest rate buys the same headroom count for the least spend.
     /// Idle headroom is also the ideal spot workload — nothing in
     /// flight to lose — but the same per-round budget still applies.
-    fn cheapest(&self, allow_spot: bool) -> (&FlavorOption, bool) {
+    /// `None` only on an empty catalog, which the constructor rejects.
+    fn cheapest(&self, allow_spot: bool) -> Option<(&FlavorOption, bool)> {
         self.select_candidate(allow_spot, 0, |_, rate| Some(rate))
-            .expect("catalog is non-empty")
     }
 
     /// Choose exactly `vms` purchases: greedy effective-$/satisfied-unit
@@ -412,7 +416,7 @@ impl FlavorPlanner {
     /// are spot.
     pub fn plan_mix(&self, residual_demand: ResourceVec, vms: usize) -> Vec<PlannedVm> {
         let spot_budget = if self.policy.max_spot_fraction > 0.0 {
-            (self.policy.max_spot_fraction * vms as f64).floor() as usize
+            crate::util::cast::f64_to_usize((self.policy.max_spot_fraction * vms as f64).floor())
         } else {
             0
         };
@@ -426,7 +430,9 @@ impl FlavorPlanner {
             if need <= DEMAND_EPS {
                 // Demand covered (or none): the remaining slots are idle
                 // buffer, bought at the cheapest effective rate.
-                let (opt, spot) = self.cheapest(allow_spot);
+                let Some((opt, spot)) = self.cheapest(allow_spot) else {
+                    break;
+                };
                 spot_used += spot as usize;
                 mix.push(PlannedVm {
                     flavor: opt.flavor,

@@ -158,12 +158,13 @@ pub enum BufferPolicy {
 
 impl BufferPolicy {
     pub fn buffer_for(&self, active_workers: usize) -> usize {
+        use crate::util::cast::f64_to_usize;
         match self {
             BufferPolicy::Logarithmic => {
-                ((active_workers as f64 + 1.0).log2().ceil() as usize).max(1)
+                f64_to_usize((active_workers as f64 + 1.0).log2().ceil()).max(1)
             }
             BufferPolicy::None => 0,
-            BufferPolicy::Linear(frac) => (frac * active_workers as f64).ceil() as usize,
+            BufferPolicy::Linear(frac) => f64_to_usize((frac * active_workers as f64).ceil()),
         }
     }
 }

@@ -23,7 +23,7 @@ pub mod config;
 pub mod container_queue;
 pub mod load_predictor;
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 use crate::binpacking::ResourceVec;
 use crate::clock::Periodic;
@@ -113,7 +113,9 @@ pub struct Irm {
     /// via the requeued requests' resource vectors — before the
     /// provider reclaims them. Entries clear themselves when the worker
     /// leaves the cluster view.
-    draining: HashSet<WorkerId>,
+    // BTreeSet, not HashSet: the drain-mark cleanup iterates it via
+    // `.retain`, and iteration order must be deterministic (lint rule D1).
+    draining: BTreeSet<WorkerId>,
     binpack_timer: Periodic,
     /// Last packing telemetry, re-reported between runs so the recorded
     /// series are continuous.
@@ -145,7 +147,7 @@ impl Irm {
             }),
             flavor_planner: (!cfg.flavor_catalog.is_empty())
                 .then(|| FlavorPlanner::with_policy(cfg.flavor_catalog.clone(), cfg.spot_policy)),
-            draining: HashSet::new(),
+            draining: BTreeSet::new(),
             binpack_timer: Periodic::new(cfg.binpack_interval),
             cfg,
             last_scheduled: Vec::new(),
@@ -428,7 +430,7 @@ impl Irm {
         if waiting_total == 0 {
             return 0;
         }
-        ((total * waiting) as f64 / waiting_total as f64).ceil() as usize
+        crate::util::cast::f64_to_usize(((total * waiting) as f64 / waiting_total as f64).ceil())
     }
 }
 

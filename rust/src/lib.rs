@@ -40,6 +40,7 @@
 //! | [`metrics`] | time-series recording, CSV + ASCII plots |
 //! | [`experiments`] | one driver per paper figure (Figs 3–10, headline) |
 //! | [`protocol`], [`transport`] | wire protocol + TCP for distributed mode |
+//! | [`lint`] | `pallas-lint`: determinism/panic-safety static analysis (CI gate) |
 //! | [`util`], [`testkit`], [`bench`] | substrates: JSON, RNG, CLI, property testing, bench harness |
 
 pub mod bench;
@@ -49,6 +50,7 @@ pub mod cloud;
 pub mod connector;
 pub mod experiments;
 pub mod irm;
+pub mod lint;
 pub mod master;
 pub mod metrics;
 pub mod profiler;

@@ -1,0 +1,471 @@
+//! A small hand-rolled Rust lexer for `pallas-lint`.
+//!
+//! Zero dependencies by design (the build is offline — no `syn`, no
+//! registry): this tokenizer understands exactly as much Rust as the rule
+//! engine needs to avoid false positives — line/nested-block comments,
+//! string/raw-string/char literals (so `"unwrap()"` in a message is not a
+//! finding), lifetimes vs char literals, hex/float numeric literals, and
+//! multi-char `::` paths. Everything else is a one-character punct token.
+//!
+//! Comments are not discarded blindly: any line comment containing the
+//! `pallas-lint` pragma marker is parsed into a [`Pragma`] so the engine
+//! can suppress findings with a written reason.
+
+/// Token classification — deliberately coarse; the rules pattern-match on
+/// `Ident`/`Punct` sequences and literal kinds, never on full syntax.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`self`, `for`, `as` included).
+    Ident,
+    /// Integer literal (`42`, `0x9E37`, `1_000u64`).
+    Int,
+    /// Float literal (`1e-9`, `0.25`, `1.0f64`).
+    Float,
+    /// String / raw string / byte string literal (content dropped).
+    Str,
+    /// Char or byte-char literal.
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// Punctuation. Single char except `::`, kept whole for path matching.
+    Punct,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// An `allow(RULE, reason)` pragma lifted out of a pallas-lint comment.
+#[derive(Debug, Clone)]
+pub struct Pragma {
+    pub line: u32,
+    /// Rule id (`"D1"`, …, or `"all"`); empty when `malformed`.
+    pub rule: String,
+    /// The written justification; the engine rejects empty reasons.
+    pub reason: String,
+    /// `allow-file(...)` — applies to the whole file, not one line.
+    pub file_level: bool,
+    /// Marker present but unparseable; surfaced as a finding.
+    pub malformed: bool,
+}
+
+/// Lexer output: the token stream plus any pragmas found in comments.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub pragmas: Vec<Pragma>,
+}
+
+/// Tokenize `src`. Never fails: unrecognized bytes become `Punct` tokens,
+/// and an unterminated literal simply consumes to end-of-file — a lint
+/// must degrade gracefully on code it half-understands.
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if peek(&b, i + 1) == Some('/') => {
+                let start = i + 2;
+                while i < b.len() && b[i] != '\n' {
+                    i += 1;
+                }
+                let comment: String = b[start..i].iter().collect();
+                if let Some(p) = parse_pragma(&comment, line) {
+                    out.pragmas.push(p);
+                }
+            }
+            '/' if peek(&b, i + 1) == Some('*') => {
+                let mut depth = 1u32;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == '\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == '/' && peek(&b, i + 1) == Some('*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == '*' && peek(&b, i + 1) == Some('/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            '"' => {
+                let l = line;
+                i = skip_string(&b, i, &mut line);
+                out.toks.push(tok(TokKind::Str, "\"\"", l));
+            }
+            'r' | 'b' if starts_raw_or_byte_literal(&b, i) => {
+                let l = line;
+                i = skip_prefixed_literal(&b, i, &mut line, &mut out, l);
+                // token (if any) pushed by the helper
+            }
+            '\'' => {
+                let l = line;
+                i = lex_quote(&b, i, &mut line, &mut out, l);
+            }
+            c if c.is_ascii_digit() => {
+                let l = line;
+                let (ni, text, kind) = lex_number(&b, i);
+                i = ni;
+                out.toks.push(tok(kind, &text, l));
+            }
+            c if c == '_' || c.is_alphabetic() => {
+                let start = i;
+                while i < b.len() && (b[i] == '_' || b[i].is_alphanumeric()) {
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                out.toks.push(tok(TokKind::Ident, &text, line));
+            }
+            ':' if peek(&b, i + 1) == Some(':') => {
+                out.toks.push(tok(TokKind::Punct, "::", line));
+                i += 2;
+            }
+            _ => {
+                out.toks.push(tok(TokKind::Punct, &c.to_string(), line));
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+fn tok(kind: TokKind, text: &str, line: u32) -> Tok {
+    Tok { kind, text: text.to_string(), line }
+}
+
+fn peek(b: &[char], i: usize) -> Option<char> {
+    b.get(i).copied()
+}
+
+/// Does `r`/`b` at `i` begin a raw string (`r"`, `r#"`), byte string
+/// (`b"`, `br"`), or byte char (`b'`)? (`r#ident` is a raw identifier and
+/// `results` is a plain one — both fall through to the ident path.)
+fn starts_raw_or_byte_literal(b: &[char], i: usize) -> bool {
+    let mut j = i;
+    if b[j] == 'b' {
+        j += 1;
+        match peek(b, j) {
+            Some('\'') | Some('"') => return true,
+            Some('r') => j += 1,
+            _ => return false,
+        }
+    } else {
+        j += 1; // past 'r'
+    }
+    // At this point we are past `r` (or `br`): raw string needs `#*"`.
+    let mut k = j;
+    while peek(b, k) == Some('#') {
+        k += 1;
+    }
+    // `r#ident` has exactly one `#` then an ident char — raw identifier.
+    if k == j + 1 && peek(b, k).map(|c| c == '_' || c.is_alphabetic()).unwrap_or(false) {
+        return false;
+    }
+    peek(b, k) == Some('"')
+}
+
+/// Consume a literal that starts with `r`/`b`/`br` and push its token.
+fn skip_prefixed_literal(
+    b: &[char],
+    mut i: usize,
+    line: &mut u32,
+    out: &mut Lexed,
+    l: u32,
+) -> usize {
+    if b[i] == 'b' && peek(b, i + 1) == Some('\'') {
+        // byte char b'x'
+        let ni = skip_char_literal(b, i + 1, line);
+        out.toks.push(tok(TokKind::Char, "''", l));
+        return ni;
+    }
+    // r"..." / r#"..."# / br#"..."# — count hashes, then scan for `"#*`.
+    while i < b.len() && b[i] != '"' && b[i] != '#' {
+        i += 1; // past r / br
+    }
+    let mut hashes = 0usize;
+    while peek(b, i) == Some('#') {
+        hashes += 1;
+        i += 1;
+    }
+    i += 1; // opening quote
+    while i < b.len() {
+        if b[i] == '\n' {
+            *line += 1;
+            i += 1;
+            continue;
+        }
+        if b[i] == '"' {
+            let mut k = 0usize;
+            while k < hashes && peek(b, i + 1 + k) == Some('#') {
+                k += 1;
+            }
+            if k == hashes {
+                i += 1 + hashes;
+                break;
+            }
+        }
+        i += 1;
+    }
+    out.toks.push(tok(TokKind::Str, "\"\"", l));
+    i
+}
+
+/// Consume a `"..."` string with escapes; returns index past the closing
+/// quote. Tracks embedded newlines.
+fn skip_string(b: &[char], mut i: usize, line: &mut u32) -> usize {
+    i += 1; // opening quote
+    while i < b.len() {
+        match b[i] {
+            '\\' => i += 2,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            '"' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// `'` is ambiguous: lifetime (`'a`, `'static`) or char (`'x'`, `'\n'`).
+fn lex_quote(b: &[char], i: usize, line: &mut u32, out: &mut Lexed, l: u32) -> usize {
+    // Lifetime: 'ident NOT followed by a closing quote ('a' is a char).
+    if let Some(c1) = peek(b, i + 1) {
+        if c1 == '_' || c1.is_alphabetic() {
+            let mut j = i + 2;
+            while peek(b, j).map(|c| c == '_' || c.is_alphanumeric()).unwrap_or(false) {
+                j += 1;
+            }
+            if peek(b, j) != Some('\'') {
+                let text: String = b[i..j].iter().collect();
+                out.toks.push(tok(TokKind::Lifetime, &text, l));
+                return j;
+            }
+        }
+    }
+    let ni = skip_char_literal(b, i, line);
+    out.toks.push(tok(TokKind::Char, "''", l));
+    ni
+}
+
+/// Consume `'...'` starting at the opening quote.
+fn skip_char_literal(b: &[char], mut i: usize, line: &mut u32) -> usize {
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            '\\' => i += 2,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            '\'' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Lex a numeric literal at `i`; returns (next index, text, kind).
+/// `0..n` ranges are respected: a lone `.` is only consumed when a digit
+/// follows, so `for d in 0..DIMS` never produces a float.
+fn lex_number(b: &[char], mut i: usize) -> (usize, String, TokKind) {
+    let start = i;
+    let mut float = false;
+    if b[i] == '0'
+        && matches!(peek(b, i + 1), Some('x') | Some('X') | Some('o') | Some('b'))
+    {
+        i += 2;
+        while i < b.len() && (b[i] == '_' || b[i].is_ascii_alphanumeric()) {
+            i += 1;
+        }
+        let text: String = b[start..i].iter().collect();
+        return (i, text, TokKind::Int);
+    }
+    while i < b.len() && (b[i] == '_' || b[i].is_ascii_digit()) {
+        i += 1;
+    }
+    if peek(b, i) == Some('.') && peek(b, i + 1).map(|c| c.is_ascii_digit()).unwrap_or(false) {
+        float = true;
+        i += 1;
+        while i < b.len() && (b[i] == '_' || b[i].is_ascii_digit()) {
+            i += 1;
+        }
+    }
+    if matches!(peek(b, i), Some('e') | Some('E')) {
+        let mut j = i + 1;
+        if matches!(peek(b, j), Some('+') | Some('-')) {
+            j += 1;
+        }
+        if peek(b, j).map(|c| c.is_ascii_digit()).unwrap_or(false) {
+            float = true;
+            i = j;
+            while i < b.len() && (b[i] == '_' || b[i].is_ascii_digit()) {
+                i += 1;
+            }
+        }
+    }
+    // Type suffix (u64, f64, usize, …) rides along in the token text.
+    let suffix_start = i;
+    while i < b.len() && (b[i] == '_' || b[i].is_ascii_alphanumeric()) {
+        i += 1;
+    }
+    let suffix: String = b[suffix_start..i].iter().collect();
+    if suffix.starts_with('f') {
+        float = true;
+    }
+    let text: String = b[start..i].iter().collect();
+    (i, text, if float { TokKind::Float } else { TokKind::Int })
+}
+
+/// Parse the pragma marker out of one line comment's text.
+/// Returns `None` when the marker is absent entirely.
+fn parse_pragma(comment: &str, line: u32) -> Option<Pragma> {
+    let idx = comment.find("pallas-lint:")?;
+    let rest = comment[idx + "pallas-lint:".len()..].trim();
+    let malformed = Pragma {
+        line,
+        rule: String::new(),
+        reason: String::new(),
+        file_level: false,
+        malformed: true,
+    };
+    let (file_level, body) = if let Some(r) = rest.strip_prefix("allow-file(") {
+        (true, r)
+    } else if let Some(r) = rest.strip_prefix("allow(") {
+        (false, r)
+    } else {
+        return Some(malformed);
+    };
+    let body = match body.rfind(')') {
+        Some(end) => &body[..end],
+        None => return Some(malformed),
+    };
+    let (rule, reason) = match body.split_once(',') {
+        Some((r, why)) => (r.trim(), why.trim()),
+        None => return Some(malformed),
+    };
+    if rule.is_empty() || reason.is_empty() {
+        return Some(malformed);
+    }
+    Some(Pragma {
+        line,
+        rule: rule.to_string(),
+        reason: reason.to_string(),
+        file_level,
+        malformed: false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_hide_tokens() {
+        let src = "// unwrap()\nlet s = \"unwrap()\"; /* partial_cmp */ s.len();";
+        let ids = idents(src);
+        assert!(!ids.contains(&"unwrap".to_string()));
+        assert!(!ids.contains(&"partial_cmp".to_string()));
+        assert!(ids.contains(&"len".to_string()));
+    }
+
+    #[test]
+    fn nested_block_comment_terminates() {
+        let ids = idents("/* a /* b */ still comment */ real");
+        assert_eq!(ids, vec!["real"]);
+    }
+
+    #[test]
+    fn lifetime_vs_char() {
+        let lexed = lex("fn f<'a>(x: &'a str) { let c = 'a'; }");
+        let lifetimes: Vec<_> =
+            lexed.toks.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        let chars: Vec<_> = lexed.toks.iter().filter(|t| t.kind == TokKind::Char).collect();
+        assert_eq!(lifetimes.len(), 2);
+        assert_eq!(chars.len(), 1);
+    }
+
+    #[test]
+    fn numbers_classify_and_ranges_survive() {
+        let lexed = lex("let e = 1e-9; let h = 0x9E37_79B9; for d in 0..DIMS {}");
+        let kinds: Vec<_> = lexed
+            .toks
+            .iter()
+            .filter(|t| matches!(t.kind, TokKind::Int | TokKind::Float))
+            .map(|t| (t.kind, t.text.clone()))
+            .collect();
+        assert_eq!(kinds[0], (TokKind::Float, "1e-9".to_string()));
+        assert_eq!(kinds[1], (TokKind::Int, "0x9E37_79B9".to_string()));
+        assert_eq!(kinds[2], (TokKind::Int, "0".to_string()));
+        // `..` stayed punctuation and DIMS is an ident:
+        assert!(lexed.toks.iter().any(|t| t.kind == TokKind::Ident && t.text == "DIMS"));
+    }
+
+    #[test]
+    fn raw_strings_and_float_suffix() {
+        let lexed = lex(r###"let r = r#"unwrap() "quoted""#; let f = 1f64;"###);
+        assert!(!lexed.toks.iter().any(|t| t.text == "unwrap"));
+        assert!(lexed
+            .toks
+            .iter()
+            .any(|t| t.kind == TokKind::Float && t.text == "1f64"));
+    }
+
+    #[test]
+    fn raw_identifier_is_ident_not_string() {
+        let lexed = lex("let r#type = 1;");
+        assert!(lexed.toks.iter().any(|t| t.kind == TokKind::Ident && t.text == "type"));
+    }
+
+    #[test]
+    fn pragmas_parse() {
+        let src = "\
+// pallas-lint: allow(D1, keys are sorted two lines up)
+// pallas-lint: allow-file(P2, indices structurally in-bounds)
+// pallas-lint: allow(F1)
+// plain comment
+";
+        let lexed = lex(src);
+        assert_eq!(lexed.pragmas.len(), 3);
+        assert_eq!(lexed.pragmas[0].rule, "D1");
+        assert!(!lexed.pragmas[0].file_level);
+        assert!(lexed.pragmas[1].file_level);
+        assert_eq!(lexed.pragmas[1].rule, "P2");
+        assert!(lexed.pragmas[2].malformed, "missing reason must be malformed");
+    }
+
+    #[test]
+    fn line_numbers_track_multiline_constructs() {
+        let src = "/* two\nlines */\nlet x = 1;\n\"str\nacross\"\nfinal_ident";
+        let lexed = lex(src);
+        let last = lexed.toks.iter().find(|t| t.text == "final_ident").unwrap();
+        assert_eq!(last.line, 6);
+    }
+}

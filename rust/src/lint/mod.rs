@@ -1,0 +1,871 @@
+//! `pallas-lint` — the repo-specific determinism & panic-safety rule engine.
+//!
+//! Every ablation (A4–A8) is pinned by byte-identical seed-42 golden
+//! snapshots and RNG-stream-identity arms. The invariants that make those
+//! pins hold were, before this module, tribal knowledge enforced by
+//! whichever reviewer remembered PR 2/5/6's hand-fixed instances. This
+//! engine makes them mechanical (see `docs/linting.md` for the catalog):
+//!
+//! * **D1** — no `HashMap`/`HashSet` iteration in determinism-critical
+//!   modules unless the statement provably sorts or a pragma explains why.
+//! * **D2** — no `Instant::now` / `SystemTime` / `thread_rng` outside the
+//!   live-transport allowlist; sim paths use virtual [`crate::clock`] and
+//!   the seeded [`crate::util::rng::Rng`].
+//! * **F1** — no `partial_cmp` (float sorts panic or lie under NaN); use
+//!   `total_cmp`, or pragma a genuinely-total hand-written impl.
+//! * **F2** — no bare `as usize`/`as u64`/… on float expressions (NaN
+//!   truncates to 0 silently — the PR 5 bug class); route through
+//!   [`crate::util::cast`].
+//! * **P1** — no `.unwrap()` / `.expect()` in hot-path modules.
+//! * **P2** — no direct indexing in scheduling-plane modules (the
+//!   bin-packing kernel is exempt; see the catalog).
+//! * **C1** — no duplicated epsilon-magnitude float literals (the PR 2
+//!   bug class); name them next to `binpacking::EPS`.
+//!
+//! Suppression is always written down:
+//! `// pallas-lint: allow(D1, <reason>)` on the finding's line or the line
+//! above, or `// pallas-lint: allow-file(P2, <reason>)` anywhere in the
+//! file. A pragma with no reason is itself a finding (rule `LINT`).
+//!
+//! The engine is token-based (see [`lexer`]), not a parser: each rule is a
+//! short pattern over the token stream. `#[cfg(test)]` / `#[test]` items
+//! are skipped by matching the attribute and the brace extent of the item
+//! that follows.
+
+pub mod lexer;
+
+use lexer::{lex, Pragma, Tok, TokKind};
+use std::path::{Path, PathBuf};
+
+/// Modules whose behavior feeds golden snapshots / series output (D1, C1).
+const CRITICAL: &[&str] =
+    &["sim", "irm", "cloud", "profiler", "binpacking", "worker", "experiments"];
+/// Live-transport / harness files where wall-clock & entropy are the point.
+/// `bench` is the wall-clock measurement harness by definition; it is never
+/// on a sim path.
+const WALLCLOCK_ALLOW: &[&str] =
+    &["master/live", "worker/live", "worker/agent", "runtime", "clock", "main", "bench"];
+/// Hot-path modules where a panic kills a run mid-experiment (P1).
+const HOT: &[&str] = &["sim", "irm", "binpacking", "worker", "profiler", "cloud"];
+/// Live-side files exempt from P1/P2: they already run behind socket error
+/// handling and mutex poisoning is fatal by design.
+const HOT_EXEMPT: &[&str] = &["worker/live", "worker/agent"];
+/// Scheduling-plane modules where P2 (no direct indexing) applies. The
+/// `binpacking` kernel is deliberately exempt: index arithmetic is its
+/// idiom and it is property-tested against naive oracles.
+const INDEX_SCOPE: &[&str] = &["sim", "irm", "worker", "profiler", "cloud"];
+
+/// `(id, one-line summary)` — the catalog printed by `pallas_lint --rules`.
+pub const RULES: &[(&str, &str)] = &[
+    ("D1", "no HashMap/HashSet iteration in determinism-critical modules"),
+    ("D2", "no Instant::now/SystemTime/thread_rng outside the live allowlist"),
+    ("F1", "no partial_cmp — use total_cmp or pragma a proven-total impl"),
+    ("F2", "no bare `as <int>` casts on float expressions — use util::cast"),
+    ("P1", "no unwrap()/expect() in hot-path modules"),
+    ("P2", "no direct indexing in scheduling-plane modules"),
+    ("C1", "no duplicated epsilon-magnitude float literals"),
+    ("LINT", "pragma must be well-formed: allow(RULE, reason)"),
+];
+
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "drain",
+    "retain",
+];
+const INT_CAST_TARGETS: &[&str] =
+    &["usize", "u64", "u32", "u16", "u8", "i64", "i32", "i16", "i8", "isize"];
+const FLOAT_METHODS: &[&str] = &[
+    "ceil",
+    "floor",
+    "round",
+    "trunc",
+    "fract",
+    "sqrt",
+    "cbrt",
+    "abs",
+    "powi",
+    "powf",
+    "exp",
+    "exp2",
+    "ln",
+    "log",
+    "log2",
+    "log10",
+    "mul_add",
+    "recip",
+    "hypot",
+    "signum",
+    "to_degrees",
+    "to_radians",
+    "as_secs_f64",
+];
+/// Float-returning only when an argument is a float (`x.max(0.0)`).
+const FLOAT_METHODS_IF_FLOAT_ARG: &[&str] = &["max", "min", "clamp"];
+/// Keywords that may precede `[` without it being an index expression.
+const NON_INDEX_KEYWORDS: &[&str] = &[
+    "if", "in", "as", "match", "return", "else", "mut", "ref", "move", "let", "const",
+    "static", "use", "pub", "fn", "impl", "where", "for", "while", "loop", "break",
+    "continue", "type", "struct", "enum", "trait", "mod", "unsafe", "dyn", "await", "box",
+];
+/// C1 fires below this magnitude (catches 1e-6/1e-9 tolerance literals
+/// while leaving ordinary fractions like 0.005 alone).
+const C1_THRESHOLD: f64 = 1e-5;
+
+/// One lint finding. `file` is repo-relative, `line` 1-based.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// How a file participates in the scan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FileCtx {
+    /// Production source under `rust/src/**` — the full catalog applies.
+    Source,
+    /// Deep-scan extras (`rust/tests/`, `rust/benches/`): float hazards
+    /// (F1/F2) still matter there, panics and wall-clock do not.
+    TestOnly,
+}
+
+/// Is `rel` (path relative to `rust/src`, `/`-separated) inside one of
+/// `mods`? Matches the module dir (`sim/…`), the module file (`sim.rs`)
+/// and sub-file entries like `worker/live` → `worker/live.rs`.
+fn in_modules(rel: &str, mods: &[&str]) -> bool {
+    mods.iter().any(|m| match rel.strip_prefix(m) {
+        Some(rest) => rest.is_empty() || rest.starts_with('/') || rest == ".rs",
+        None => false,
+    })
+}
+
+/// Lint one file's source text. `rel` is the path relative to `rust/src`
+/// (used for module classification); `display` is the path printed in
+/// findings (repo-relative in tree mode).
+pub fn lint_source(rel: &str, display: &str, src: &str, ctx: FileCtx) -> Vec<Finding> {
+    let lexed = lex(src);
+    let toks = &lexed.toks;
+    let in_test = test_mask(toks);
+
+    let is_critical = ctx == FileCtx::Source && in_modules(rel, CRITICAL);
+    let d2_applies = ctx == FileCtx::Source && !in_modules(rel, WALLCLOCK_ALLOW);
+    let is_hot = ctx == FileCtx::Source
+        && in_modules(rel, HOT)
+        && !in_modules(rel, HOT_EXEMPT);
+    let p2_applies = ctx == FileCtx::Source
+        && in_modules(rel, INDEX_SCOPE)
+        && !in_modules(rel, HOT_EXEMPT);
+
+    let mut raw: Vec<Finding> = Vec::new();
+    let mut push = |line: u32, rule: &'static str, message: String| {
+        raw.push(Finding { file: display.to_string(), line, rule, message });
+    };
+
+    pragma_findings(&lexed.pragmas, &mut push);
+
+    let hash_names = if is_critical { collect_hash_names(toks) } else { Vec::new() };
+
+    for i in 0..toks.len() {
+        if in_test[i] {
+            continue;
+        }
+        let t = &toks[i];
+        if t.kind != TokKind::Ident && !(t.kind == TokKind::Punct && t.text == "[") {
+            if t.kind == TokKind::Float && is_critical {
+                rule_c1(toks, i, &mut push);
+            }
+            continue;
+        }
+
+        // D1 — unordered-container iteration.
+        if is_critical && !hash_names.is_empty() {
+            rule_d1(toks, i, &hash_names, &mut push);
+        }
+        // D2 — wall clock / entropy.
+        if d2_applies {
+            rule_d2(toks, i, &mut push);
+        }
+        // F1 — partial_cmp.
+        if t.kind == TokKind::Ident && t.text == "partial_cmp" {
+            let is_def = i > 0 && toks[i - 1].text == "fn";
+            let msg = if is_def {
+                "hand-written `partial_cmp` — prove it consistent with Ord/Eq \
+                 (total, no NaN partiality) and suppress with a pragma"
+                    .to_string()
+            } else {
+                "`partial_cmp` on floats returns None under NaN and panics or lies \
+                 downstream — use `total_cmp`"
+                    .to_string()
+            };
+            push(t.line, "F1", msg);
+        }
+        // F2 — float expression cast to integer.
+        rule_f2(toks, i, &mut push);
+        // P1 — unwrap/expect in hot paths.
+        if is_hot && t.kind == TokKind::Ident && (t.text == "unwrap" || t.text == "expect") {
+            let prev_dot = i > 0 && toks[i - 1].text == ".";
+            let called = toks.get(i + 1).map(|n| n.text == "(").unwrap_or(false);
+            if prev_dot && called {
+                push(
+                    t.line,
+                    "P1",
+                    format!(
+                        "`.{}()` can panic mid-experiment in a hot-path module — handle \
+                         the None/Err branch explicitly",
+                        t.text
+                    ),
+                );
+            }
+        }
+        // P2 — direct indexing in the scheduling plane.
+        if p2_applies && t.kind == TokKind::Punct && t.text == "[" {
+            rule_p2(toks, i, &mut push);
+        }
+    }
+
+    apply_pragmas(raw, &lexed.pragmas)
+}
+
+/// Convenience wrapper used by the self-test fixtures: lint with the same
+/// path for classification and display.
+pub fn lint_virtual(rel: &str, src: &str) -> Vec<Finding> {
+    lint_source(rel, rel, src, FileCtx::Source)
+}
+
+// ---------------------------------------------------------------- rules --
+
+/// Mark every token inside a `#[test]` / `#[cfg(test)]`-gated item.
+fn test_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].text == "#" && toks.get(i + 1).map(|t| t.text == "[").unwrap_or(false) {
+            // Find the attribute's closing `]` (bracket depth).
+            let mut j = i + 2;
+            let mut depth = 1i32;
+            let mut idents: Vec<&str> = Vec::new();
+            while j < toks.len() && depth > 0 {
+                match toks[j].text.as_str() {
+                    "[" => depth += 1,
+                    "]" => depth -= 1,
+                    _ => {
+                        if toks[j].kind == TokKind::Ident {
+                            idents.push(&toks[j].text);
+                        }
+                    }
+                }
+                j += 1;
+            }
+            let is_test_attr = idents == ["test"]
+                || (idents.first() == Some(&"cfg")
+                    && idents.iter().any(|s| *s == "test")
+                    && !idents.iter().any(|s| *s == "not"));
+            if is_test_attr {
+                // Extent: first `{` after the attr (match to its `}`), or a
+                // terminating `;` for brace-less items.
+                let mut k = j;
+                let mut bdepth = 0i32;
+                let mut entered = false;
+                while k < toks.len() {
+                    match toks[k].text.as_str() {
+                        "{" => {
+                            bdepth += 1;
+                            entered = true;
+                        }
+                        "}" => bdepth -= 1,
+                        ";" if !entered => {
+                            k += 1;
+                            break;
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                    if entered && bdepth == 0 {
+                        break;
+                    }
+                }
+                for m in mask.iter_mut().take(k).skip(i) {
+                    *m = true;
+                }
+                i = k;
+                continue;
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    mask
+}
+
+/// Names declared (or bound) as `HashMap`/`HashSet` in this file.
+fn collect_hash_names(toks: &[Tok]) -> Vec<String> {
+    let mut names = Vec::new();
+    for i in 0..toks.len() {
+        if toks[i].kind != TokKind::Ident {
+            continue;
+        }
+        let is_decl = matches!(
+            toks.get(i + 1),
+            Some(t) if t.kind == TokKind::Punct && (t.text == ":" || t.text == "=")
+        );
+        if !is_decl {
+            continue;
+        }
+        // Scan the declaration window: to `;`/`{`, or `,`/`)` outside `<>`.
+        let mut angle = 0i32;
+        for t in toks.iter().skip(i + 2).take(40) {
+            match t.text.as_str() {
+                "<" => angle += 1,
+                ">" => angle -= 1,
+                ";" | "{" => break,
+                "," | ")" if angle <= 0 => break,
+                _ => {}
+            }
+            if t.kind == TokKind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
+                if !names.contains(&toks[i].text) {
+                    names.push(toks[i].text.clone());
+                }
+                break;
+            }
+        }
+    }
+    names
+}
+
+/// Is the hash-named ident at `i` actually *this* file's container?
+/// Accepts bare `name` and `self.name`; rejects `other.name` (a field of
+/// some foreign struct that merely shares the name).
+fn own_receiver(toks: &[Tok], i: usize) -> bool {
+    if i == 0 || toks[i - 1].text != "." {
+        return true;
+    }
+    i >= 2 && toks[i - 2].text == "self"
+}
+
+fn rule_d1(toks: &[Tok], i: usize, hash_names: &[String], push: &mut impl FnMut(u32, &'static str, String)) {
+    let t = &toks[i];
+    // Pattern A: `name.iter_method(`.
+    if t.kind == TokKind::Ident
+        && hash_names.iter().any(|n| *n == t.text)
+        && own_receiver(toks, i)
+        && toks.get(i + 1).map(|n| n.text == ".").unwrap_or(false)
+    {
+        if let Some(m) = toks.get(i + 2) {
+            if ITER_METHODS.contains(&m.text.as_str())
+                && toks.get(i + 3).map(|n| n.text == "(").unwrap_or(false)
+                && !sorts_nearby(toks, i)
+            {
+                push(
+                    t.line,
+                    "D1",
+                    format!(
+                        "`{}.{}()` iterates a HashMap/HashSet in a determinism-critical \
+                         module — use BTreeMap/BTreeSet or collect-and-sort the keys",
+                        t.text, m.text
+                    ),
+                );
+            }
+        }
+    }
+    // Pattern B: `for … in … name … {` where `name` is the iterated map.
+    if t.kind == TokKind::Ident && t.text == "for" {
+        let in_at = toks
+            .iter()
+            .enumerate()
+            .skip(i + 1)
+            .take(15)
+            .find(|(_, t)| t.kind == TokKind::Ident && t.text == "in")
+            .map(|(j, _)| j);
+        if let Some(j) = in_at {
+            for k in j + 1..toks.len().min(j + 25) {
+                if toks[k].text == "{" {
+                    break;
+                }
+                if toks[k].kind == TokKind::Ident
+                    && hash_names.iter().any(|n| *n == toks[k].text)
+                    && own_receiver(toks, k)
+                {
+                    // The map itself is iterated when `{` follows directly;
+                    // `.iter()` chains are caught by pattern A.
+                    if toks.get(k + 1).map(|n| n.text == "{").unwrap_or(false) {
+                        push(
+                            toks[k].line,
+                            "D1",
+                            format!(
+                                "for-loop over HashMap/HashSet `{}` in a determinism-critical \
+                                 module — iteration order is nondeterministic",
+                                toks[k].text
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// "Provably sorts first" heuristic: a `sort*` call or a `BTree*` type
+/// appears within the next few statements of the iteration site (the
+/// collect-then-sort idiom). Anything subtler needs a pragma.
+fn sorts_nearby(toks: &[Tok], i: usize) -> bool {
+    toks.iter().skip(i).take(40).any(|t| {
+        t.kind == TokKind::Ident && (t.text.starts_with("sort") || t.text.starts_with("BTree"))
+    })
+}
+
+fn rule_d2(toks: &[Tok], i: usize, push: &mut impl FnMut(u32, &'static str, String)) {
+    let t = &toks[i];
+    if t.kind != TokKind::Ident {
+        return;
+    }
+    let what = match t.text.as_str() {
+        "Instant"
+            if toks.get(i + 1).map(|n| n.text == "::").unwrap_or(false)
+                && toks.get(i + 2).map(|n| n.text == "now").unwrap_or(false) =>
+        {
+            "Instant::now"
+        }
+        "SystemTime" => "SystemTime",
+        "thread_rng" => "thread_rng",
+        _ => return,
+    };
+    push(
+        t.line,
+        "D2",
+        format!(
+            "wall-clock/entropy source `{what}` outside the live-transport allowlist — \
+             sim paths must use the virtual Clock and the seeded util::rng::Rng"
+        ),
+    );
+}
+
+fn rule_f2(toks: &[Tok], i: usize, push: &mut impl FnMut(u32, &'static str, String)) {
+    let t = &toks[i];
+    if t.kind != TokKind::Ident || t.text != "as" || i == 0 {
+        return;
+    }
+    let ty = match toks.get(i + 1) {
+        Some(n) if n.kind == TokKind::Ident && INT_CAST_TARGETS.contains(&n.text.as_str()) => {
+            n.text.clone()
+        }
+        _ => return,
+    };
+    let prev = &toks[i - 1];
+    let flagged = match prev.kind {
+        TokKind::Float => true,
+        TokKind::Punct if prev.text == ")" => {
+            // Walk back to the matching `(`; a float-method call or a float
+            // literal inside the group marks the whole cast as float-typed.
+            let open = match matching_open(toks, i - 1) {
+                Some(o) => o,
+                None => return,
+            };
+            let method_call = open >= 2
+                && toks[open - 1].kind == TokKind::Ident
+                && toks[open - 2].text == ".";
+            if method_call {
+                let m = &toks[open - 1].text;
+                FLOAT_METHODS.contains(&m.as_str())
+                    || (FLOAT_METHODS_IF_FLOAT_ARG.contains(&m.as_str())
+                        && toks[open..i - 1].iter().any(|t| t.kind == TokKind::Float))
+            } else {
+                toks[open..i - 1].iter().any(|t| {
+                    t.kind == TokKind::Float
+                        || (t.kind == TokKind::Ident
+                            && FLOAT_METHODS.contains(&t.text.as_str()))
+                })
+            }
+        }
+        _ => false,
+    };
+    if flagged {
+        push(
+            prev.line,
+            "F2",
+            format!(
+                "float expression cast with `as {ty}` silently maps NaN to 0 — route \
+                 through util::cast (debug-asserts the no-NaN precondition)"
+            ),
+        );
+    }
+}
+
+/// Index of the `(` matching the `)` at `close`, scanning backward.
+fn matching_open(toks: &[Tok], close: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    for j in (0..=close).rev() {
+        match toks[j].text.as_str() {
+            ")" => depth += 1,
+            "(" => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(j);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn rule_p2(toks: &[Tok], i: usize, push: &mut impl FnMut(u32, &'static str, String)) {
+    if i == 0 {
+        return;
+    }
+    let prev = &toks[i - 1];
+    let indexes = match prev.kind {
+        TokKind::Ident => !NON_INDEX_KEYWORDS.contains(&prev.text.as_str()),
+        TokKind::Punct => prev.text == ")" || prev.text == "]",
+        TokKind::Int => true, // tuple access: `pair.0[d]`
+        _ => false,
+    };
+    if indexes {
+        push(
+            toks[i].line,
+            "P2",
+            "direct index can panic in a scheduling-plane module — prefer `.get()`, or \
+             pragma with the in-bounds argument"
+                .to_string(),
+        );
+    }
+}
+
+fn rule_c1(toks: &[Tok], i: usize, push: &mut impl FnMut(u32, &'static str, String)) {
+    let t = &toks[i];
+    let val = match parse_float(&t.text) {
+        Some(v) => v,
+        None => return,
+    };
+    if val == 0.0 || val.abs() >= C1_THRESHOLD {
+        return;
+    }
+    if in_const_statement(toks, i) || in_assert_macro(toks, i) {
+        return;
+    }
+    push(
+        t.line,
+        "C1",
+        format!(
+            "magic epsilon-magnitude literal `{}` — name it next to binpacking::EPS so \
+             duplicated tolerances cannot drift apart",
+            t.text
+        ),
+    );
+}
+
+fn parse_float(text: &str) -> Option<f64> {
+    let s: String = text.chars().filter(|c| *c != '_').collect();
+    let s = s.strip_suffix("f64").or_else(|| s.strip_suffix("f32")).unwrap_or(&s);
+    s.parse::<f64>().ok()
+}
+
+/// Is token `i` inside a `const`/`static` declaration statement?
+fn in_const_statement(toks: &[Tok], i: usize) -> bool {
+    for j in (0..i).rev().take(30) {
+        match toks[j].text.as_str() {
+            ";" | "{" | "}" => return false,
+            "const" | "static" => return true,
+            _ => {}
+        }
+    }
+    false
+}
+
+/// Is token `i` inside an `assert!`-family macro invocation? Tolerance
+/// literals inside checks are the *consumers* of named constants, not the
+/// behavior-feeding duplicates C1 exists to catch.
+fn in_assert_macro(toks: &[Tok], i: usize) -> bool {
+    let mut depth = 0i32;
+    for j in (0..i).rev().take(250) {
+        match toks[j].text.as_str() {
+            ")" => depth += 1,
+            "(" => {
+                if depth == 0 {
+                    if j >= 2
+                        && toks[j - 1].text == "!"
+                        && (toks[j - 2].text.starts_with("assert")
+                            || toks[j - 2].text.starts_with("debug_assert"))
+                    {
+                        return true;
+                    }
+                    // Some other call's argument list — keep walking out.
+                } else {
+                    depth -= 1;
+                }
+            }
+            ";" => {
+                if depth == 0 {
+                    return false;
+                }
+            }
+            _ => {}
+        }
+    }
+    false
+}
+
+// -------------------------------------------------------------- pragmas --
+
+fn pragma_findings(pragmas: &[Pragma], push: &mut impl FnMut(u32, &'static str, String)) {
+    for p in pragmas {
+        if p.malformed {
+            push(
+                p.line,
+                "LINT",
+                "malformed pallas-lint pragma — expected \
+                 `// pallas-lint: allow(RULE, reason)` with a non-empty reason"
+                    .to_string(),
+            );
+        } else if p.rule != "all" && !RULES.iter().any(|(id, _)| *id == p.rule) {
+            push(
+                p.line,
+                "LINT",
+                format!("pragma names unknown rule `{}` — see `pallas_lint --rules`", p.rule),
+            );
+        }
+    }
+}
+
+/// Drop findings covered by a well-formed pragma; dedup and order the rest.
+fn apply_pragmas(raw: Vec<Finding>, pragmas: &[Pragma]) -> Vec<Finding> {
+    let mut out: Vec<Finding> = Vec::new();
+    'next: for f in raw {
+        if f.rule != "LINT" {
+            for p in pragmas.iter().filter(|p| !p.malformed) {
+                let rule_match = p.rule == "all" || p.rule == f.rule;
+                let covered = if p.file_level {
+                    rule_match
+                } else {
+                    rule_match && (f.line == p.line || f.line == p.line + 1)
+                };
+                if covered {
+                    continue 'next;
+                }
+            }
+        }
+        if !out.contains(&f) {
+            out.push(f);
+        }
+    }
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    out
+}
+
+// ------------------------------------------------------------ tree walk --
+
+/// All `.rs` files under `dir`, recursively, in sorted order (stable
+/// output across filesystems).
+fn rs_files(dir: &Path, skip_dir: Option<&str>, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            if skip_dir.is_some_and(|s| p.file_name().and_then(|n| n.to_str()) == Some(s)) {
+                continue;
+            }
+            rs_files(&p, skip_dir, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the repo tree rooted at `root` (the directory holding `rust/`).
+/// `deep` extends the scan from `rust/src/**` to `rust/tests/**` and
+/// `rust/benches/**` (float-hazard rules only; the fixture corpus under
+/// `rust/tests/lint_fixtures/` is excluded — it is known-bad on purpose).
+pub fn lint_tree(root: &Path, deep: bool) -> std::io::Result<(Vec<Finding>, usize)> {
+    let src_root = root.join("rust").join("src");
+    let mut files = Vec::new();
+    rs_files(&src_root, None, &mut files)?;
+    let mut jobs: Vec<(PathBuf, String, FileCtx)> = files
+        .into_iter()
+        .map(|p| {
+            let rel = rel_slash(&p, &src_root);
+            (p, rel, FileCtx::Source)
+        })
+        .collect();
+    if deep {
+        for extra in ["tests", "benches"] {
+            let dir = root.join("rust").join(extra);
+            if !dir.is_dir() {
+                continue;
+            }
+            let mut fs = Vec::new();
+            rs_files(&dir, Some("lint_fixtures"), &mut fs)?;
+            for p in fs {
+                let rel = format!("{extra}/{}", rel_slash(&p, &dir));
+                jobs.push((p, rel, FileCtx::TestOnly));
+            }
+        }
+    }
+    let scanned = jobs.len();
+    let mut findings = Vec::new();
+    for (path, rel, ctx) in jobs {
+        let src = std::fs::read_to_string(&path)?;
+        let display = rel_slash(&path, root);
+        findings.extend(lint_source(&rel, &display, &src, ctx));
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok((findings, scanned))
+}
+
+fn rel_slash(p: &Path, base: &Path) -> String {
+    let rel = p.strip_prefix(base).unwrap_or(p);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_at(findings: &[Finding]) -> Vec<(&'static str, u32)> {
+        findings.iter().map(|f| (f.rule, f.line)).collect()
+    }
+
+    #[test]
+    fn d1_flags_hash_iteration_in_critical_module() {
+        let src = "struct S { m: HashMap<u32, u32> }\n\
+                   impl S { fn f(&self) { for (k, v) in &self.m { use_(k, v); } } }\n";
+        let f = lint_virtual("sim/x.rs", src);
+        assert_eq!(rules_at(&f), vec![("D1", 2)]);
+    }
+
+    #[test]
+    fn d1_ignores_non_critical_modules_and_foreign_receivers() {
+        let src = "struct S { m: HashMap<u32, u32> }\n\
+                   impl S { fn f(&self) { self.m.retain(|_, _| true); } }\n";
+        assert!(lint_virtual("metrics/x.rs", src).is_empty());
+        // `report.per_image` is a Vec on a foreign struct that happens to
+        // share a hash-declared name in this file.
+        let src2 = "struct P { per_image: HashMap<u32, u32> }\n\
+                    fn g(report: &Report) { for (i, u) in &report.per_image { h(i, u); } }\n";
+        assert!(lint_virtual("profiler/x.rs", src2).is_empty());
+    }
+
+    #[test]
+    fn d1_sort_idiom_suppresses() {
+        let src = "fn f(m: &HashMap<u32, u32>) {\n\
+                   let mut ks: Vec<_> = m.keys().copied().collect();\n\
+                   ks.sort_unstable();\n}\n";
+        assert!(lint_virtual("irm/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d1_pragma_suppresses_with_reason() {
+        let src = "fn f(m: &HashMap<u32, u32>) {\n\
+                   // pallas-lint: allow(D1, order folds into a commutative sum)\n\
+                   let s: u32 = m.values().sum();\n}\n";
+        assert!(lint_virtual("irm/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d2_allowlist_and_violation() {
+        let src = "fn f() { let t = Instant::now(); g(t); }\n";
+        assert_eq!(rules_at(&lint_virtual("sim/x.rs", src)), vec![("D2", 1)]);
+        assert!(lint_virtual("worker/live.rs", src).is_empty());
+        assert!(lint_virtual("main.rs", src).is_empty());
+    }
+
+    #[test]
+    fn f1_flags_calls_everywhere_including_defs() {
+        let src = "fn f(a: f64, b: f64) -> bool { a.partial_cmp(&b).is_some() }\n";
+        assert_eq!(rules_at(&lint_virtual("metrics/x.rs", src)), vec![("F1", 1)]);
+    }
+
+    #[test]
+    fn f2_flags_float_method_and_literal_casts_only() {
+        let src = "fn f(x: f64, n: usize) -> usize {\n\
+                   let a = (x * 2.0).ceil() as usize;\n\
+                   let b = 1.5 as usize;\n\
+                   let c = x.max(0.0) as usize;\n\
+                   let d = (n / 2) as usize;\n\
+                   a + b + c + d\n}\n";
+        assert_eq!(
+            rules_at(&lint_virtual("metrics/x.rs", src)),
+            vec![("F2", 2), ("F2", 3), ("F2", 4)]
+        );
+    }
+
+    #[test]
+    fn p1_hot_module_only_and_unwrap_or_is_fine() {
+        let src = "fn f(o: Option<u32>) -> u32 { o.unwrap() }\n\
+                   fn g(o: Option<u32>) -> u32 { o.unwrap_or(0) }\n";
+        assert_eq!(rules_at(&lint_virtual("sim/x.rs", src)), vec![("P1", 1)]);
+        assert!(lint_virtual("metrics/x.rs", src).is_empty());
+        assert!(lint_virtual("worker/agent.rs", src).is_empty());
+    }
+
+    #[test]
+    fn p2_scheduling_plane_only_binpacking_exempt() {
+        let src = "fn f(v: &[u32], i: usize) -> u32 { v[i] }\n";
+        assert_eq!(rules_at(&lint_virtual("irm/x.rs", src)), vec![("P2", 1)]);
+        assert!(lint_virtual("binpacking/x.rs", src).is_empty());
+        // Array types/literals are not index expressions.
+        let src2 = "fn g() -> [f64; 4] { [0.0; 4] }\n";
+        assert!(lint_virtual("irm/x.rs", src2).is_empty());
+    }
+
+    #[test]
+    fn c1_flags_magic_eps_but_not_consts_or_asserts() {
+        let src = "const EPS: f64 = 1e-9;\n\
+                   fn f(x: f64) -> bool { x > 1e-9 }\n\
+                   fn g(x: f64) { assert!(x < 1e-6, \"tolerance\"); }\n";
+        assert_eq!(rules_at(&lint_virtual("binpacking/x.rs", src)), vec![("C1", 2)]);
+        assert!(lint_virtual("metrics/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_items_are_skipped() {
+        let src = "#[cfg(test)]\nmod tests {\n\
+                   fn f(o: Option<u32>) -> u32 { o.unwrap() }\n}\n\
+                   fn hot(o: Option<u32>) -> u32 { o.unwrap() }\n";
+        assert_eq!(rules_at(&lint_virtual("sim/x.rs", src)), vec![("P1", 5)]);
+    }
+
+    #[test]
+    fn cfg_not_test_items_are_scanned() {
+        let src = "#[cfg(not(test))]\nfn hot(o: Option<u32>) -> u32 { o.unwrap() }\n";
+        assert_eq!(rules_at(&lint_virtual("sim/x.rs", src)), vec![("P1", 2)]);
+    }
+
+    #[test]
+    fn file_pragma_and_malformed_pragma() {
+        let src = "// pallas-lint: allow-file(P2, ring indices are masked to capacity)\n\
+                   fn f(v: &[u32], i: usize) -> u32 { v[i] }\n\
+                   // pallas-lint: allow(P2)\n";
+        let f = lint_virtual("irm/x.rs", src);
+        assert_eq!(rules_at(&f), vec![("LINT", 3)], "P2 suppressed, bad pragma surfaced");
+    }
+
+    #[test]
+    fn test_only_ctx_applies_float_rules_only() {
+        let src = "fn f(o: Option<f64>) -> usize { o.unwrap().ceil() as usize }\n";
+        let f = lint_source("tests/t.rs", "rust/tests/t.rs", src, FileCtx::TestOnly);
+        assert_eq!(rules_at(&f), vec![("F2", 1)]);
+    }
+}

@@ -34,7 +34,9 @@
 //! independently — a CPU-busy report whose RAM is idle noise contributes
 //! a CPU sample and nothing else.
 
-use std::collections::HashMap;
+// pallas-lint: allow-file(P2, per-dimension arrays are [_; DIMS] indexed by d in 0..DIMS or Resource discriminants)
+
+use std::collections::BTreeMap;
 
 use crate::binpacking::{Resource, ResourceVec, DIMS};
 use crate::protocol::WorkerReport;
@@ -77,7 +79,9 @@ impl Default for ProfilerConfig {
 #[derive(Clone)]
 pub struct ResourceProfiler {
     cfg: ProfilerConfig,
-    per_image: HashMap<ImageName, [RingBuf<f64>; DIMS]>,
+    // BTreeMap, not HashMap: today only keyed lookups, but any future walk
+    // over the windows must come out in deterministic order (lint rule D1).
+    per_image: BTreeMap<ImageName, [RingBuf<f64>; DIMS]>,
     /// Lifetime count of ingested samples across all dimensions
     /// (observability).
     pub samples_ingested: u64,
@@ -91,7 +95,7 @@ impl ResourceProfiler {
     pub fn new(cfg: ProfilerConfig) -> Self {
         ResourceProfiler {
             cfg,
-            per_image: HashMap::new(),
+            per_image: BTreeMap::new(),
             samples_ingested: 0,
         }
     }

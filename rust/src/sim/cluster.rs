@@ -11,7 +11,9 @@
 //!    resulting commands;
 //! 6. the recorder samples every figure series.
 
-use std::collections::{HashMap, HashSet};
+// pallas-lint: allow-file(P2, workers[pos] comes from worker_pos()/iter().position() lookups and slot/series indices are bounded by the vectors grown in lockstep)
+
+use std::collections::{BTreeMap, HashMap, HashSet};
 
 use crate::binpacking::{Resource, ResourceVec};
 use crate::cloud::{CloudConfig, SimCloud, SpotEvent};
@@ -23,6 +25,11 @@ use crate::protocol::RouteDecision;
 use crate::sim::EventQueue;
 use crate::types::{CpuFraction, ImageName, MessageId, Millis, VmId, WorkerId};
 use crate::worker::{ProcessingEngine, Worker, WorkerConfig, WorkerEvent};
+
+/// Floor for a worker's CPU capacity when normalizing a reference-unit
+/// demand onto its flavor — guards the division against a degenerate
+/// zero-capacity flavor.
+const MIN_CPU_CAP: f64 = 1e-6;
 
 /// Full cluster configuration.
 #[derive(Clone)]
@@ -103,7 +110,9 @@ pub struct SimCluster {
     /// Lowest-free-slot worker index assignment (bins keep stable, low
     /// indices across churn, like the paper's b1..bm).
     used_slots: Vec<bool>,
-    vm_of_worker: HashMap<WorkerId, VmId>,
+    // BTreeMap, not HashMap: `worker_of_vm` scans it, and scan order must
+    // be deterministic (lint rule D1).
+    vm_of_worker: BTreeMap<WorkerId, VmId>,
     /// Flavor capacity per live worker, cached at registration — the
     /// per-tick paths (view refresh, report scaling, sampling) must not
     /// rescan the cloud's ever-growing VM list.
@@ -168,7 +177,7 @@ impl SimCluster {
             recorder: Recorder::new(),
             workers: Vec::new(),
             used_slots: Vec::new(),
-            vm_of_worker: HashMap::new(),
+            vm_of_worker: BTreeMap::new(),
             worker_capacity: HashMap::new(),
             connector: LocalConnector::new(),
             pulled_images: HashSet::new(),
@@ -439,7 +448,7 @@ impl SimCluster {
                         .copied()
                         .unwrap_or(ResourceVec::UNIT)
                         .get(Resource::Cpu);
-                    if (cpu_cap - 1.0).abs() > 1e-9 {
+                    if (cpu_cap - 1.0).abs() > crate::binpacking::EPS {
                         let mut scaled = report.clone();
                         scaled.total_cpu = CpuFraction::new(report.total_cpu.value() * cpu_cap);
                         for (_, usage) in &mut scaled.per_image {
@@ -503,7 +512,7 @@ impl SimCluster {
             let cpu_cap = self
                 .flavor_capacity_of(alloc.worker)
                 .get(Resource::Cpu)
-                .max(1e-6);
+                .max(MIN_CPU_CAP);
             let local_demand = CpuFraction::new(demand.value() / cpu_cap);
             // Ground-truth RAM/net footprint (reference units) — what the
             // worker will measure and report for live profiling.
@@ -787,8 +796,10 @@ impl SimCluster {
                 // The snapshot can never sit ahead of live progress, but
                 // clamp anyway so rework stays non-negative under any
                 // caller-injected checkpoint state.
-                let kept = (((pe.checkpoint.clamp(0.0, 1.0)) * total as f64).round() as u64)
-                    .min(done);
+                let kept = crate::util::cast::f64_to_u64(
+                    ((pe.checkpoint.clamp(0.0, 1.0)) * total as f64).round(),
+                )
+                .min(done);
                 self.rework_ms += done - kept;
                 let mut resumed = msg.clone();
                 resumed.service_demand = Millis(total - kept);

@@ -36,6 +36,7 @@ impl<T> Ord for Entry<T> {
 }
 
 impl<T> PartialOrd for Entry<T> {
+    // pallas-lint: allow(F1, delegates to the total Ord::cmp over integer keys — no NaN partiality can leak in)
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
@@ -83,8 +84,9 @@ impl<T> EventQueue<T> {
             .map(|e| e.at <= now)
             .unwrap_or(false)
         {
-            let e = self.heap.pop().unwrap();
-            due.push((e.at, e.payload));
+            if let Some(e) = self.heap.pop() {
+                due.push((e.at, e.payload));
+            }
         }
         due
     }
@@ -155,5 +157,58 @@ mod tests {
         assert_eq!(q.pop_due(Millis(10)).len(), 1);
         q.schedule(Millis(5), 2); // earlier than already-popped; still fine
         assert_eq!(q.pop_due(Millis(10))[0].1, 2);
+    }
+
+    /// The hand-written `PartialOrd` (an F1 lint exception) must stay
+    /// consistent with `Ord`/`Eq`: total on every pair, antisymmetric,
+    /// and `Some(cmp)` exactly — the properties that make heap order
+    /// well-defined.
+    #[test]
+    fn entry_partial_cmp_agrees_with_cmp() {
+        let entries: Vec<Entry<()>> = [(0u64, 0u64), (0, 1), (1, 0), (1, 1), (7, 3)]
+            .iter()
+            .map(|&(at, seq)| Entry {
+                at: Millis(at),
+                seq,
+                payload: (),
+            })
+            .collect();
+        for a in &entries {
+            for b in &entries {
+                assert_eq!(a.partial_cmp(b), Some(a.cmp(b)));
+                assert_eq!(a.cmp(b).reverse(), b.cmp(a), "antisymmetry");
+                assert_eq!(a.cmp(b) == Ordering::Equal, a == b, "Eq consistency");
+            }
+        }
+    }
+
+    /// Property: draining the queue equals a *stable* sort of the inputs
+    /// by time — i.e. time order with FIFO tie-breaks — for arbitrary
+    /// interleavings of duplicated timestamps.
+    #[test]
+    fn prop_drain_matches_stable_sort() {
+        use crate::testkit::{self, Config};
+        testkit::forall_no_shrink(
+            Config::default(),
+            |rng| {
+                let n = rng.below(120) as usize;
+                // Narrow time range to force plenty of ties.
+                (0..n).map(|_| rng.below(16)).collect::<Vec<u64>>()
+            },
+            |times| {
+                let mut q = EventQueue::new();
+                let mut expect: Vec<(Millis, usize)> = Vec::new();
+                for (i, &t) in times.iter().enumerate() {
+                    q.schedule(Millis(t), i);
+                    expect.push((Millis(t), i));
+                }
+                expect.sort_by_key(|&(t, _)| t); // stable: FIFO within ties
+                let got = q.pop_due(Millis(u64::MAX));
+                if got != expect {
+                    return Err(format!("heap order diverged: {got:?} vs {expect:?}"));
+                }
+                Ok(())
+            },
+        );
     }
 }

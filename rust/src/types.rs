@@ -19,7 +19,7 @@ impl Millis {
     }
 
     pub fn from_secs_f64(s: f64) -> Self {
-        Millis((s.max(0.0) * 1000.0).round() as u64)
+        Millis(crate::util::cast::f64_to_u64((s.max(0.0) * 1000.0).round()))
     }
 
     pub fn as_secs_f64(self) -> f64 {

@@ -1,0 +1,52 @@
+//! Checked float→integer conversions — the only sanctioned cast sites.
+//!
+//! Rust's `as` casts from floats saturate (and map NaN to 0) since 1.45,
+//! which silently turned the PR 5 NaN-propagation bug into "demand is
+//! zero" instead of a crash. `pallas-lint` rule F2 bans bare
+//! `<float expr> as usize/u64/…`; callers route through these helpers,
+//! which pin the no-NaN precondition with a `debug_assert!` (free in
+//! release, loud in every `cargo test`) and otherwise compile to the
+//! identical saturating cast — so golden snapshots are unaffected.
+
+/// Convert a non-NaN `f64` to `usize` with saturating semantics.
+#[inline]
+pub fn f64_to_usize(x: f64) -> usize {
+    debug_assert!(!x.is_nan(), "NaN reached an integer cast");
+    x as usize
+}
+
+/// Convert a non-NaN `f64` to `u64` with saturating semantics.
+#[inline]
+pub fn f64_to_u64(x: f64) -> u64 {
+    debug_assert!(!x.is_nan(), "NaN reached an integer cast");
+    x as u64
+}
+
+/// Convert a non-NaN `f64` to `i64` with saturating semantics.
+#[inline]
+pub fn f64_to_i64(x: f64) -> i64 {
+    debug_assert!(!x.is_nan(), "NaN reached an integer cast");
+    x as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn saturating_semantics_match_as_casts() {
+        assert_eq!(f64_to_usize(3.9), 3);
+        assert_eq!(f64_to_usize(-1.0), 0);
+        assert_eq!(f64_to_u64(f64::INFINITY), u64::MAX);
+        assert_eq!(f64_to_u64(-0.5), 0);
+        assert_eq!(f64_to_i64(-3.9), -3);
+        assert_eq!(f64_to_i64(f64::NEG_INFINITY), i64::MIN);
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN reached an integer cast")]
+    #[cfg(debug_assertions)]
+    fn nan_is_loud_in_debug() {
+        let _ = f64_to_u64(f64::NAN);
+    }
+}

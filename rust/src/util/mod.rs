@@ -1,6 +1,7 @@
 //! Substrate utilities built from scratch (the offline crate closure has no
 //! serde/clap/rand, so these are first-class parts of the system).
 
+pub mod cast;
 pub mod cli;
 pub mod json;
 pub mod ringbuf;

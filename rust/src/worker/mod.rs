@@ -306,7 +306,8 @@ impl Worker {
                 } = p.phase
                 {
                     // Service progresses at the throttle factor.
-                    let progress = Millis(((dt.0 as f64) * factor).round() as u64);
+                    let progress =
+                        Millis(crate::util::cast::f64_to_u64(((dt.0 as f64) * factor).round()));
                     *remaining = remaining.saturating_sub(progress.max(Millis(1)));
                 }
             }

@@ -39,7 +39,7 @@ impl ImageGen {
         let hi = 0.9 * s as f64;
         let two_sigma2 = 2.0 * self.nucleus_sigma * self.nucleus_sigma;
         // Render each blob only inside its 4-sigma bounding box: O(n·k²).
-        let radius = (4.0 * self.nucleus_sigma).ceil() as i64;
+        let radius = crate::util::cast::f64_to_i64((4.0 * self.nucleus_sigma).ceil());
         for _ in 0..n_nuclei {
             let cy = self.rng.uniform(lo, hi);
             let cx = self.rng.uniform(lo, hi);

@@ -1,0 +1,15 @@
+//@ virtual-path: binpacking/c1_magic_eps.rs
+//! True positive: an unnamed epsilon-magnitude tolerance literal in
+//! behavior-feeding code (the PR 2 bug class: duplicated tolerances
+//! drift apart). Naming it in a `const` or consuming it inside an
+//! `assert!` check is fine.
+
+pub const EPS: f64 = 1e-9;
+
+fn nearly_full(residual: f64) -> bool {
+    residual <= 1e-9 //~ C1
+}
+
+fn check(over: f64) {
+    assert!(over <= 1e-6, "invariant holds to checker slack");
+}

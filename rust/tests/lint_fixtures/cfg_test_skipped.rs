@@ -1,0 +1,16 @@
+//@ virtual-path: sim/cfg_test_skipped.rs
+//! Negative: `#[cfg(test)]` / `#[test]` items are exempt from the
+//! catalog — a panic in a test is the test failing, not a run dying.
+
+fn hot(o: Option<u32>) -> u32 {
+    o.unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let v: Option<u32> = Some(3);
+        assert_eq!(v.unwrap(), 3);
+    }
+}

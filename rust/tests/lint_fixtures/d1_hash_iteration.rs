@@ -1,0 +1,28 @@
+//@ virtual-path: sim/d1_hash_iteration.rs
+//! True positives: HashMap/HashSet iteration in a determinism-critical
+//! module. Iteration order depends on the hasher's per-process seed, so
+//! any behavior fed by it breaks the seed-42 golden snapshots.
+
+use std::collections::{HashMap, HashSet};
+
+struct State {
+    scores: HashMap<u64, f64>,
+}
+
+impl State {
+    fn total(&self) -> f64 {
+        let mut acc = 0.0;
+        for (_, v) in &self.scores { //~ D1
+            acc += v;
+        }
+        acc
+    }
+
+    fn prune(&mut self) {
+        self.scores.retain(|_, v| *v > 0.5); //~ D1
+    }
+}
+
+fn visit(seen: HashSet<u64>) -> Vec<u64> {
+    seen.into_iter().collect() //~ D1
+}

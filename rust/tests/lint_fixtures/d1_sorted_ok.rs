@@ -1,0 +1,15 @@
+//@ virtual-path: sim/d1_sorted_ok.rs
+//! Negatives: the collect-then-sort idiom and BTree containers are both
+//! deterministic, so D1 stays quiet.
+
+use std::collections::{BTreeMap, HashMap};
+
+fn ordered_keys(m: &HashMap<u64, f64>) -> Vec<u64> {
+    let mut ks: Vec<u64> = m.keys().copied().collect();
+    ks.sort_unstable();
+    ks
+}
+
+fn walk(bt: &BTreeMap<u64, f64>) -> f64 {
+    bt.values().sum()
+}

@@ -1,0 +1,8 @@
+//@ virtual-path: bench/d2_allowlisted.rs
+//! Negative: the bench harness measures wall time by definition, so the
+//! same code that is a D2 violation in `irm/` is clean here.
+
+fn measure() -> u128 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos()
+}

@@ -1,0 +1,22 @@
+//@ virtual-path: irm/d2_wallclock.rs
+//! True positives: wall-clock and ambient entropy on a sim-reachable path.
+//! These make runs irreproducible; sim code must take time from the
+//! virtual Clock and randomness from the seeded util::rng::Rng.
+
+fn elapsed_ns() -> u128 {
+    let t0 = std::time::Instant::now(); //~ D2
+    t0.elapsed().as_nanos()
+}
+
+fn wall_secs() -> u64 {
+    let now = std::time::SystemTime::now(); //~ D2
+    match now.duration_since(std::time::UNIX_EPOCH) {
+        Ok(d) => d.as_secs(),
+        Err(_) => 0,
+    }
+}
+
+fn roll() -> u64 {
+    let mut r = rand::thread_rng(); //~ D2
+    r.gen()
+}

@@ -1,0 +1,18 @@
+//@ virtual-path: metrics/f1_partial_cmp.rs
+//! F1 fires everywhere (not just critical modules): a float sort through
+//! `partial_cmp(..).unwrap()` panics on the first NaN. A hand-written
+//! `partial_cmp` that provably delegates to a total order may be
+//! pragma'd.
+
+fn sort_scores(xs: &mut Vec<f64>) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); //~ F1
+}
+
+struct Key(u64);
+
+impl PartialOrd for Key {
+    // pallas-lint: allow(F1, delegates to the total Ord impl over u64)
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.0.cmp(&other.0))
+    }
+}

@@ -1,0 +1,16 @@
+//@ virtual-path: worker/f2_float_casts.rs
+//! True positives: bare `as` casts on float expressions. `f64 as u64`
+//! maps NaN to 0 silently — the PR 5 bug class — so float-typed values
+//! must route through util::cast, which debug-asserts the precondition.
+
+fn quantize(x: f64) -> u64 {
+    (x * 1000.0).round() as u64 //~ F2
+}
+
+fn bucket(x: f64) -> usize {
+    x.floor() as usize //~ F2
+}
+
+fn ok_int(n: usize) -> u64 {
+    n as u64
+}

@@ -1,0 +1,15 @@
+//@ virtual-path: cloud/p1_unwrap_hot.rs
+//! True positives: panicking Option/Result access in a hot-path module
+//! kills a multi-hour experiment run mid-flight.
+
+fn first_price(prices: &[f64]) -> f64 {
+    *prices.first().unwrap() //~ P1
+}
+
+fn parse_quota(s: &str) -> u32 {
+    s.parse().expect("quota must be an integer") //~ P1
+}
+
+fn safe(prices: &[f64]) -> f64 {
+    prices.first().copied().unwrap_or(0.0)
+}

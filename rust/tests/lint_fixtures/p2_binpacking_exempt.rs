@@ -1,0 +1,7 @@
+//@ virtual-path: binpacking/p2_binpacking_exempt.rs
+//! Negative: index arithmetic is the bin-packing kernel's idiom and the
+//! kernel is property-tested against naive oracles, so P2 exempts it.
+
+fn load(bins: &[f64], idx: usize) -> f64 {
+    bins[idx]
+}

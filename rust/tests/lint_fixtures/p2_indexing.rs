@@ -1,0 +1,11 @@
+//@ virtual-path: sim/p2_indexing.rs
+//! True positive: direct indexing in a scheduling-plane module; the
+//! `.get()` form on the same data is the clean alternative.
+
+fn pick(workers: &[u32], pos: usize) -> u32 {
+    workers[pos] //~ P2
+}
+
+fn safe(workers: &[u32], pos: usize) -> u32 {
+    workers.get(pos).copied().unwrap_or(0)
+}

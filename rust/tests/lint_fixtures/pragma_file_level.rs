@@ -1,0 +1,13 @@
+//@ virtual-path: irm/pragma_file_level.rs
+//! Negative: a file-level pragma with a written-down reason suppresses
+//! its rule across the whole file.
+
+// pallas-lint: allow-file(P2, indices are produced by enumerate() over the same vector)
+
+fn sum_at(xs: &[f64], picks: &[usize]) -> f64 {
+    let mut acc = 0.0;
+    for &i in picks {
+        acc += xs[i];
+    }
+    acc
+}

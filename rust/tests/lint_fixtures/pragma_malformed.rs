@@ -1,0 +1,9 @@
+//@ virtual-path: metrics/pragma_malformed.rs
+//! True positives: a pragma without a reason, or naming an unknown rule,
+//! is itself a finding (rule LINT) — suppressions must be auditable.
+
+// pallas-lint: allow(P2) //~ LINT
+
+// pallas-lint: allow(Q9, no such rule) //~ LINT
+
+fn noop() {}

@@ -1,0 +1,139 @@
+//! Self-test for the `pallas-lint` engine: every fixture under
+//! `rust/tests/lint_fixtures/` declares its own expected findings inline,
+//! so the corpus doubles as executable documentation of each rule.
+//!
+//! Fixture format:
+//! * line 1 is `//@ virtual-path: <rel>` — the path under `rust/src/` the
+//!   snippet pretends to live at (drives module-scope classification);
+//! * any line may end with `//~ RULE [RULE…]` — the findings expected on
+//!   exactly that line;
+//! * a fixture with no markers asserts zero findings (a negative case).
+//!
+//! The corpus is excluded from both the normal and `--deep` tree scans
+//! (it is known-bad on purpose) and from compilation (`Cargo.toml`
+//! declares targets explicitly), so planting violations there is safe.
+
+use harmonicio::lint;
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/lint_fixtures")
+}
+
+fn fixtures() -> Vec<PathBuf> {
+    let mut out: Vec<PathBuf> = std::fs::read_dir(fixture_dir())
+        .expect("fixture corpus present")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("rs"))
+        .collect();
+    out.sort();
+    assert!(out.len() >= 10, "fixture corpus unexpectedly small: {}", out.len());
+    out
+}
+
+/// Pull the virtual path out of the header line and the `(line, rule)`
+/// expectation set out of the `//~` markers.
+fn parse_expectations(src: &str) -> (String, BTreeSet<(u32, String)>) {
+    let header = src.lines().next().expect("non-empty fixture");
+    let rel = header
+        .strip_prefix("//@ virtual-path: ")
+        .expect("fixture must start with `//@ virtual-path: <rel>`")
+        .trim()
+        .to_string();
+    let mut expected = BTreeSet::new();
+    for (idx, line) in src.lines().enumerate() {
+        if let Some(pos) = line.rfind("//~ ") {
+            for rule in line[pos + 4..].split_whitespace() {
+                expected.insert((idx as u32 + 1, rule.to_string()));
+            }
+        }
+    }
+    (rel, expected)
+}
+
+#[test]
+fn fixtures_produce_exactly_the_marked_findings() {
+    for path in fixtures() {
+        let src = std::fs::read_to_string(&path).unwrap();
+        let (rel, expected) = parse_expectations(&src);
+        let got: BTreeSet<(u32, String)> = lint::lint_virtual(&rel, &src)
+            .into_iter()
+            .map(|f| (f.line, f.rule.to_string()))
+            .collect();
+        assert_eq!(
+            got,
+            expected,
+            "fixture {} (linted as {rel}) disagrees with its //~ markers",
+            path.display()
+        );
+    }
+}
+
+#[test]
+fn every_rule_has_fixture_coverage() {
+    let mut hit: BTreeSet<String> = BTreeSet::new();
+    for path in fixtures() {
+        let src = std::fs::read_to_string(&path).unwrap();
+        let (_, expected) = parse_expectations(&src);
+        hit.extend(expected.into_iter().map(|(_, rule)| rule));
+    }
+    for (id, _) in lint::RULES {
+        assert!(hit.contains(*id), "no fixture exercises rule {id}");
+    }
+}
+
+#[test]
+fn binary_is_clean_on_this_repo() {
+    let out = Command::new(env!("CARGO_BIN_EXE_pallas_lint"))
+        .arg(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn pallas_lint");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "pallas_lint found violations in the tree:\n{stdout}");
+    assert!(stdout.contains("0 findings"), "unexpected summary:\n{stdout}");
+}
+
+#[test]
+fn binary_fails_on_a_known_bad_fixture() {
+    let fixture = fixture_dir().join("p1_unwrap_hot.rs");
+    let out = Command::new(env!("CARGO_BIN_EXE_pallas_lint"))
+        .args(["--file", fixture.to_str().unwrap(), "--as", "cloud/p1_unwrap_hot.rs"])
+        .output()
+        .expect("spawn pallas_lint");
+    assert_eq!(out.status.code(), Some(1), "known-bad fixture must exit 1");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("P1"), "expected P1 findings:\n{stdout}");
+}
+
+#[test]
+fn deep_scan_is_clean_and_deterministic() {
+    let run = || {
+        Command::new(env!("CARGO_BIN_EXE_pallas_lint"))
+            .args(["--deep", env!("CARGO_MANIFEST_DIR")])
+            .output()
+            .expect("spawn pallas_lint")
+    };
+    let first = run();
+    assert!(
+        first.status.success(),
+        "deep scan found violations:\n{}",
+        String::from_utf8_lossy(&first.stdout)
+    );
+    let second = run();
+    assert_eq!(first.stdout, second.stdout, "lint output must be byte-identical across runs");
+}
+
+#[test]
+fn rules_flag_prints_the_catalog() {
+    let out = Command::new(env!("CARGO_BIN_EXE_pallas_lint"))
+        .arg("--rules")
+        .output()
+        .expect("spawn pallas_lint");
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for (id, _) in lint::RULES {
+        assert!(stdout.contains(id), "catalog missing rule {id}:\n{stdout}");
+    }
+}

@@ -34,10 +34,19 @@ cargo build --release
 echo "== cargo doc --no-deps -q"
 cargo doc --no-deps -q
 
+# pallas-lint runs before the test suite: a determinism violation makes
+# every golden-pinned result below it meaningless. See docs/linting.md
+# for the rule catalog and pragma syntax.
+echo "== pallas-lint (determinism & panic-safety rules)"
+cargo run --release --bin pallas_lint
+
 echo "== cargo test -q"
 cargo test -q
 
 if [[ "$DEEP" == "1" ]]; then
+    echo "== pallas-lint --deep (tests + benches, float-hazard rules)"
+    cargo run --release --bin pallas_lint -- --deep
+
     echo "== deep property pass (TESTKIT_CASES=2000, release)"
     TESTKIT_CASES=2000 cargo test --release -q
 fi
