@@ -309,6 +309,54 @@ fn main() {
         });
     }
 
+    // --- Sharded scheduling plane (ISSUE 8): one whole-fleet control
+    // tick under 1 vs 4 vs 8 consistent-hash IRM shards. Each logical
+    // iteration streams one message per image into the master and runs
+    // one coordinator cycle (admission + every shard's packing
+    // sub-round) over a 256-worker view — the wall-clock companion to
+    // the A9 ablation's deterministic work-unit proxy (reported as
+    // items/s where an item is one worker scheduled).
+    println!("\n# sharded control-plane tick (256 workers, 64 streams)");
+    {
+        use harmonicio::connector::LocalConnector;
+        use harmonicio::irm::{ClusterView, IrmConfig, ShardedIrm};
+        use harmonicio::master::Master;
+        use harmonicio::types::{ImageName, Millis, WorkerId};
+        let images: Vec<ImageName> = (0..64)
+            .map(|i| ImageName::new(format!("stream-{i:02}")))
+            .collect();
+        let view = ClusterView {
+            workers: (0..256).map(|i| (WorkerId(i), Vec::new())).collect(),
+            capacities: Vec::new(),
+            booting_vms: 0,
+            cost_usd: 0.0,
+        };
+        for &shards in &[1usize, 4, 8] {
+            let mut cfg = IrmConfig::default();
+            // Fire the packer on every cycle so the benched tick always
+            // includes the packing sub-rounds, not just admission.
+            cfg.binpack_interval = Millis(1);
+            cfg.sharding.shards = shards;
+            let mut irm = ShardedIrm::new(cfg);
+            let mut master = Master::new();
+            let mut conn = LocalConnector::new();
+            let mut now = 0u64;
+            b.bench_throughput(
+                &format!("sharded-tick/{shards}shards/256w"),
+                Some(256),
+                |iters| {
+                    for _ in 0..iters {
+                        for img in &images {
+                            conn.stream(&mut master, img, 1 << 20, Millis(5000), Millis(now));
+                        }
+                        now += 1000;
+                        black_box(irm.control_cycle(Millis(now), &mut master, &view));
+                    }
+                },
+            );
+        }
+    }
+
     // Quality summary (printed alongside the timings) — indexed variants
     // must report identical packing quality to their oracles.
     println!("\n# quality on 1000-item IRM-shaped instance");

@@ -30,7 +30,7 @@ use crate::cloud::Flavor;
 use crate::experiments::{microscopy, Report};
 use crate::irm::{BufferPolicy, FlavorOption, PackerChoice, ResourceModel, SpotPolicy};
 use crate::sim::SimCluster;
-use crate::types::Millis;
+use crate::types::{CpuFraction, ImageName, Millis};
 use crate::util::rng::Rng;
 use crate::workload::{microscopy as microscopy_wl, MicroscopyConfig, MicroscopyTrace};
 
@@ -217,7 +217,7 @@ pub fn profiler(out: &Path, seed: u64) -> Result<Report> {
             let trace = dataset.run_trace(seed ^ run_idx as u64);
             let mut cluster = SimCluster::new(cfg);
             if let Some(p) = carried.take() {
-                cluster.irm.profiler = p;
+                cluster.irm.set_profiler(p);
             }
             if let Some(c) = cache.take() {
                 cluster.pulled_images = c;
@@ -228,7 +228,7 @@ pub fn profiler(out: &Path, seed: u64) -> Result<Report> {
                 .map(|m| m.as_secs_f64())
                 .unwrap_or(f64::NAN);
             makespans.push(m);
-            carried = Some(cluster.irm.profiler.clone());
+            carried = Some(cluster.irm.profiler().clone());
             cache = Some(cluster.pulled_images.clone());
         }
         report.line(format!(
@@ -588,12 +588,13 @@ pub fn liveprofile(out: &Path, seed: u64) -> Result<Report> {
             // Static arm: disable live profiling of the non-CPU
             // dimensions (floors above any possible measurement) — CPU
             // stays live, exactly the pre-PR pipeline.
-            cluster.irm.profiler =
-                crate::profiler::ResourceProfiler::new(crate::profiler::ProfilerConfig {
+            cluster.irm.set_profiler(crate::profiler::ResourceProfiler::new(
+                crate::profiler::ProfilerConfig {
                     window: cluster.cfg.irm.profiler_window,
                     default_estimate: cluster.cfg.irm.default_estimate,
                     busy_floors: [0.02, f64::INFINITY, f64::INFINITY],
-                });
+                },
+            ));
         }
         trace.schedule_into(&mut cluster);
         let makespan = cluster
@@ -1007,7 +1008,7 @@ pub fn zonefail(out: &Path, seed: u64) -> Result<Report> {
             preemptions: cluster.cloud.preemptions,
             zone_preemptions: cluster.cloud.zone_preemptions,
             rework_s: cluster.rework_ms as f64 / 1000.0,
-            dropped: cluster.irm.queue.dropped_preempted,
+            dropped: cluster.irm.dropped_preempted(),
             misses: cluster.deadline_misses(deadline),
             makespan,
             peak: cluster
@@ -1104,6 +1105,175 @@ pub fn zonefail(out: &Path, seed: u64) -> Result<Report> {
     Ok(report)
 }
 
+/// A9 — sharded scheduling plane: the same many-stream workload under
+/// the legacy single scheduling loop, the one-shard coordinator (which
+/// must be byte-identical to it), and a four-shard plane. The
+/// deterministic packing-work proxy (drained requests + open bins per
+/// round, critical path = the largest shard's sub-round) pins the ~1/N
+/// per-tick scaling without wall clocks; makespan/cost bound the
+/// placement-quality delta of hash-partitioned queues and worker slices.
+pub fn shard(out: &Path, seed: u64) -> Result<Report> {
+    let mut report = Report::new(
+        "A9 — sharded scheduling plane (1 vs N consistent-hash IRM shards)",
+    );
+    // 16 distinct streams: enough for the hash ring to spread work over
+    // every shard of the four-shard arm.
+    let n_streams = 16usize;
+    let msgs_per_stream = 24usize;
+    let total = n_streams * msgs_per_stream;
+    struct Arm {
+        makespan: f64,
+        cost: f64,
+        completions: usize,
+        critical_work: u64,
+        total_work: u64,
+        migrations: u64,
+        dropped: u64,
+        workers_series: Vec<(Millis, f64)>,
+    }
+    let arms: Vec<(&str, usize)> = vec![("unsharded", 0), ("shard-1", 1), ("shard-4", 4)];
+    let mut csv = String::from(
+        "arm,shards,makespan_s,cost_usd,completions,critical_work,total_work,\
+         migrations,requeue_dropped\n",
+    );
+    let mut results: Vec<Arm> = Vec::new();
+    for (label, shards) in &arms {
+        let mut cfg = microscopy::cluster_config(seed);
+        // Headroom so the comparison is about scheduling-plane shape,
+        // not quota starvation (same rationale as A5/A7/A8).
+        cfg.cloud.quota = 10;
+        cfg.irm.sharding.shards = *shards;
+        cfg.image_demand = (0..n_streams)
+            .map(|i| {
+                (
+                    ImageName::new(format!("stream-{i:02}")),
+                    CpuFraction::new(0.125),
+                )
+            })
+            .collect();
+        let mut cluster = SimCluster::new(cfg);
+        // Staggered per-stream bursts (all streams live at once — the
+        // shape sharding exists for).
+        for i in 0..n_streams {
+            let image = ImageName::new(format!("stream-{i:02}"));
+            for j in 0..msgs_per_stream {
+                cluster.schedule_arrival(
+                    Millis(j as u64 * 500),
+                    crate::sim::Arrival {
+                        image: image.clone(),
+                        payload_bytes: 4 << 20,
+                        service_demand: Millis::from_secs(8),
+                    },
+                );
+            }
+        }
+        let makespan = cluster
+            .run_to_completion(total, Millis::from_secs(4000))
+            .map(|m| m.as_secs_f64())
+            .unwrap_or(f64::NAN);
+        let migrations = cluster
+            .irm
+            .sharded()
+            .map(|s| s.migrations())
+            .unwrap_or(0);
+        let arm = Arm {
+            makespan,
+            cost: cluster.cloud.cost_usd(),
+            completions: cluster.completions.len(),
+            critical_work: cluster.sched_critical_work,
+            total_work: cluster.sched_pack_work,
+            migrations,
+            dropped: cluster.irm.dropped_preempted(),
+            workers_series: cluster
+                .recorder
+                .get("workers.current")
+                .map(|s| s.points.clone())
+                .unwrap_or_default(),
+        };
+        report.line(format!(
+            "{label:<10} shards {shards} | makespan {makespan:>6.0}s | cost ${:>6.2} | \
+             critical work {:>6} of {:>6} | migrations {:>2}",
+            arm.cost, arm.critical_work, arm.total_work, arm.migrations
+        ));
+        let _ = writeln!(
+            csv,
+            "{label},{shards},{makespan:.1},{:.4},{},{},{},{},{}",
+            arm.cost,
+            arm.completions,
+            arm.critical_work,
+            arm.total_work,
+            arm.migrations,
+            arm.dropped
+        );
+        results.push(arm);
+    }
+    std::fs::write(out.join("ablation_shard.csv"), csv)?;
+
+    let (base, one, four) = match &results[..] {
+        [a, b, c] => (a, b, c),
+        _ => anyhow::bail!("expected three arms, got {}", results.len()),
+    };
+    report.check(
+        "all arms complete the batch",
+        results.iter().all(|a| a.makespan.is_finite()),
+        format!(
+            "{:.0}s / {:.0}s / {:.0}s",
+            base.makespan, one.makespan, four.makespan
+        ),
+    );
+    report.check(
+        "every message completes exactly once in every arm",
+        results.iter().all(|a| a.completions == total),
+        format!(
+            "{} / {} / {} of {total}",
+            base.completions, one.completions, four.completions
+        ),
+    );
+    report.check(
+        "one shard degenerates byte-identically to the legacy scheduler",
+        one.workers_series == base.workers_series
+            && one.makespan == base.makespan
+            && one.cost == base.cost
+            && one.critical_work == base.critical_work
+            && one.total_work == base.total_work
+            && one.migrations == 0,
+        format!(
+            "makespan {:.1}s vs {:.1}s, ${:.2} vs ${:.2}, work {} vs {}",
+            one.makespan, base.makespan, one.cost, base.cost, one.critical_work, base.critical_work
+        ),
+    );
+    report.check(
+        "unsharded critical path equals its total work (single sub-round)",
+        base.critical_work == base.total_work,
+        format!("{} vs {}", base.critical_work, base.total_work),
+    );
+    report.check(
+        "four shards shrink the per-tick critical path (~1/N of the work)",
+        four.critical_work > 0
+            && (four.critical_work as f64) < 0.7 * (base.critical_work as f64),
+        format!(
+            "critical {} vs unsharded {} ({:.2}x)",
+            four.critical_work,
+            base.critical_work,
+            four.critical_work as f64 / (base.critical_work as f64).max(1.0)
+        ),
+    );
+    report.check(
+        "placement-quality delta of four shards stays bounded",
+        four.makespan <= 1.5 * base.makespan && four.cost <= 1.5 * base.cost,
+        format!(
+            "makespan {:.1}s vs {:.1}s, ${:.2} vs ${:.2}",
+            four.makespan, base.makespan, four.cost, base.cost
+        ),
+    );
+    report.check(
+        "no preempted capacity silently lost in any arm",
+        results.iter().all(|a| a.dropped == 0),
+        "irm.requeue_dropped is zero everywhere",
+    );
+    Ok(report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1153,6 +1323,14 @@ mod tests {
         let tmp = std::env::temp_dir().join("hio_abl_zonefail_test");
         std::fs::create_dir_all(&tmp).unwrap();
         let report = zonefail(&tmp, 3).unwrap();
+        assert!(report.all_passed(), "{}", report.render());
+    }
+
+    #[test]
+    fn shard_ablation_runs() {
+        let tmp = std::env::temp_dir().join("hio_abl_shard_test");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let report = shard(&tmp, 3).unwrap();
         assert!(report.all_passed(), "{}", report.render());
     }
 }

@@ -64,7 +64,7 @@ pub fn ten_runs(seed: u64, n_runs: usize) -> TenRuns {
         let trace = dataset.run_trace(seed ^ run_idx as u64);
         let mut cluster = SimCluster::new(cluster_config(seed ^ (run_idx as u64) << 8));
         if let Some(p) = carried_profiler.take() {
-            cluster.irm.profiler = p;
+            cluster.irm.set_profiler(p);
         }
         if let Some(c) = carried_cache.take() {
             cluster.pulled_images = c;
@@ -74,7 +74,7 @@ pub fn ten_runs(seed: u64, n_runs: usize) -> TenRuns {
             .run_to_completion(trace.len(), Millis::from_secs(4000))
             .expect("the batch must complete");
         makespans.push(makespan);
-        carried_profiler = Some(cluster.irm.profiler.clone());
+        carried_profiler = Some(cluster.irm.profiler().clone());
         carried_cache = Some(cluster.pulled_images.clone());
         last = Some(cluster);
     }

@@ -117,6 +117,10 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
         "ablation-zonefail",
         "A8: correlated zone failures — naive single-zone vs diversity-aware spread and checkpoint/restore",
     ),
+    (
+        "ablation-shard",
+        "A9: sharded scheduling plane — 1 vs N consistent-hash IRM shards with batched packing rounds",
+    ),
 ];
 
 /// Run one experiment (or "all") writing outputs under `out_dir`.
@@ -139,6 +143,7 @@ pub fn run(name: &str, out_dir: &str, seed: u64) -> Result<Vec<Report>> {
         "ablation-liveprofile" => vec![ablations::liveprofile(out, seed)?],
         "ablation-spot" => vec![ablations::spot(out, seed)?],
         "ablation-zonefail" => vec![ablations::zonefail(out, seed)?],
+        "ablation-shard" => vec![ablations::shard(out, seed)?],
         "all" => {
             let mut all = Vec::new();
             all.push(synthetic::run(out, seed, "fig3")?);
@@ -158,6 +163,7 @@ pub fn run(name: &str, out_dir: &str, seed: u64) -> Result<Vec<Report>> {
             all.push(ablations::liveprofile(out, seed)?);
             all.push(ablations::spot(out, seed)?);
             all.push(ablations::zonefail(out, seed)?);
+            all.push(ablations::shard(out, seed)?);
             all
         }
         other => bail!(

@@ -213,6 +213,37 @@ impl Default for LoadPredictorConfig {
     }
 }
 
+/// Sharded scheduling plane configuration (the
+/// [`ShardedIrm`](crate::irm::ShardedIrm) coordinator). The default —
+/// `shards: 0` — keeps the legacy single-loop scheduler; `shards: 1` runs
+/// the coordinator machinery with one shard (byte-identical to the legacy
+/// loop, the A9 degeneracy pin); `shards: N` consistent-hashes streams
+/// across N independent packing shards, each owning a disjoint slice of
+/// the worker fleet.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardingConfig {
+    /// Number of IRM shards (0 = legacy unsharded scheduler).
+    pub shards: usize,
+    /// How often the rebalancer may consider migrating a stream between
+    /// shards (each firing migrates at most one stream).
+    pub rebalance_interval: Millis,
+    /// Hysteresis band of the rebalancer: it only acts when the
+    /// most-loaded shard's load exceeds the least-loaded shard's by more
+    /// than this fraction (`0.25` = 25% imbalance tolerated before any
+    /// stream moves). A wide band trades balance for placement stability.
+    pub rebalance_hysteresis: f64,
+}
+
+impl Default for ShardingConfig {
+    fn default() -> Self {
+        ShardingConfig {
+            shards: 0,
+            rebalance_interval: Millis::from_secs(10),
+            rebalance_hysteresis: 0.25,
+        }
+    }
+}
+
 /// Top-level IRM configuration.
 #[derive(Clone, Debug)]
 pub struct IrmConfig {
@@ -256,6 +287,8 @@ pub struct IrmConfig {
     pub default_estimate: CpuFraction,
     /// Profiler moving-average window (last N measurements).
     pub profiler_window: usize,
+    /// Sharded scheduling plane (0 shards = the legacy single loop).
+    pub sharding: ShardingConfig,
 }
 
 impl Default for IrmConfig {
@@ -277,6 +310,7 @@ impl Default for IrmConfig {
             // profiler converges — the warm-up effect the paper reports.
             default_estimate: CpuFraction::new(0.5),
             profiler_window: 10,
+            sharding: ShardingConfig::default(),
         }
     }
 }

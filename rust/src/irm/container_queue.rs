@@ -9,7 +9,7 @@
 //! periodic bin-packing algorithm. The queue holds requests both from
 //! auto-scaling decisions and manual hosting requests from users."
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::binpacking::{Resource, ResourceVec};
 use crate::types::{CpuFraction, ImageName, Millis};
@@ -184,6 +184,35 @@ impl ContainerQueue {
         self.queue.drain(..).collect()
     }
 
+    /// Extract every waiting request for one image, preserving their
+    /// relative order — the shard rebalancer's migration path. Unlike a
+    /// `drain` + `requeue` round-trip this burns **no** TTL: migrating a
+    /// stream between shards is not a failed hosting attempt.
+    pub fn take_for(&mut self, image: &ImageName) -> Vec<ContainerRequest> {
+        let mut taken = Vec::new();
+        let mut kept = VecDeque::with_capacity(self.queue.len());
+        for req in self.queue.drain(..) {
+            if &req.image == image {
+                taken.push(req);
+            } else {
+                kept.push_back(req);
+            }
+        }
+        self.queue = kept;
+        taken
+    }
+
+    /// Adopt a request migrated from another queue **verbatim**: origin,
+    /// TTL, checkpoint, requeue count and enqueue time all survive — a
+    /// preempted re-hosting request rebalanced to another shard must not
+    /// be reborn as a fresh request (that would silently re-run its
+    /// checkpointed work and reset its TTL clock). The local id counter
+    /// advances past the adopted id so locally minted ids stay unique.
+    pub fn accept_transfer(&mut self, req: ContainerRequest) {
+        self.next_id = self.next_id.max(req.id.saturating_add(1));
+        self.queue.push_back(req);
+    }
+
     pub fn len(&self) -> usize {
         self.queue.len()
     }
@@ -195,6 +224,17 @@ impl ContainerQueue {
     /// Queued requests per image (to bound PE auto-scaling).
     pub fn count_for(&self, image: &ImageName) -> usize {
         self.queue.iter().filter(|r| &r.image == image).count()
+    }
+
+    /// Queued requests per image over the whole queue, in image order
+    /// (BTreeMap so the shard rebalancer's heaviest-stream scan is
+    /// deterministic — lint rule D1).
+    pub fn image_counts(&self) -> BTreeMap<ImageName, usize> {
+        let mut counts = BTreeMap::new();
+        for req in &self.queue {
+            *counts.entry(req.image.clone()).or_insert(0) += 1;
+        }
+        counts
     }
 }
 
@@ -288,6 +328,52 @@ mod tests {
         q.requeue(pre);
         let pre = q.drain().pop().unwrap();
         assert!((pre.checkpoint - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transfer_preserves_origin_ttl_checkpoint_and_requeue_clock() {
+        // Regression (shard rebalancing): a preempted request migrated to
+        // another queue must keep its identity — origin, remaining TTL,
+        // checkpoint and requeue count — not be reborn fresh.
+        let mut src = req_queue();
+        src.push_preempted(ImageName::new("pre"), ResourceVec::cpu(0.25), 5, Millis(7), 0.6);
+        src.push(ImageName::new("other"), CpuFraction::new(0.1), 3, RequestOrigin::AutoScale, Millis(8));
+        // Burn one TTL via a failed hosting attempt first, so the
+        // migrated request carries non-default clocks.
+        let mut reqs = src.drain();
+        let other = reqs.pop().unwrap();
+        src.requeue(reqs.pop().unwrap()); // pre: ttl 5 → 4, requeues 1
+        src.queue.push_front(other); // restore FIFO order for the test
+        let taken = src.take_for(&ImageName::new("pre"));
+        assert_eq!(taken.len(), 1);
+        assert_eq!(src.len(), 1, "unrelated requests stay behind");
+        let mut dst = req_queue();
+        dst.push(ImageName::new("local"), CpuFraction::new(0.1), 3, RequestOrigin::Manual, Millis(0));
+        for req in taken {
+            dst.accept_transfer(req);
+        }
+        let migrated = dst.drain().pop().unwrap();
+        assert_eq!(migrated.origin, RequestOrigin::Preempted, "origin survives");
+        assert_eq!(migrated.ttl, 4, "migration burns no TTL");
+        assert_eq!(migrated.requeues, 1, "requeue clock survives");
+        assert!((migrated.checkpoint - 0.6).abs() < 1e-12, "checkpoint survives");
+        assert_eq!(migrated.enqueued_at, Millis(7), "enqueue time survives");
+        // Locally minted ids stay unique after adopting a foreign id.
+        let next = dst.push(ImageName::new("x"), CpuFraction::new(0.1), 3, RequestOrigin::Manual, Millis(9));
+        assert!(next > migrated.id);
+    }
+
+    #[test]
+    fn take_for_preserves_relative_order() {
+        let mut q = req_queue();
+        q.push(ImageName::new("a"), CpuFraction::new(0.1), 3, RequestOrigin::AutoScale, Millis(0));
+        q.push(ImageName::new("b"), CpuFraction::new(0.1), 3, RequestOrigin::AutoScale, Millis(1));
+        q.push(ImageName::new("a"), CpuFraction::new(0.1), 3, RequestOrigin::AutoScale, Millis(2));
+        let taken = q.take_for(&ImageName::new("a"));
+        assert_eq!(taken.len(), 2);
+        assert!(taken[0].id < taken[1].id, "FIFO order preserved in the extraction");
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.drain().pop().unwrap().image.as_str(), "b");
     }
 
     #[test]

@@ -22,6 +22,7 @@ pub mod autoscaler;
 pub mod config;
 pub mod container_queue;
 pub mod load_predictor;
+pub mod shard;
 
 use std::collections::BTreeSet;
 
@@ -36,10 +37,11 @@ pub use allocator::{Allocation, Allocator, PackOutcome, WorkerBin};
 pub use autoscaler::{AutoScaler, FlavorPlanner, PlannedVm, ScalePlan, WorkerState};
 pub use config::{
     BufferPolicy, FlavorOption, IrmConfig, LoadPredictorConfig, PackerChoice, ResourceModel,
-    SpotPolicy,
+    ShardingConfig, SpotPolicy,
 };
 pub use container_queue::{ContainerQueue, ContainerRequest, RequestOrigin};
 pub use load_predictor::{LoadPredictor, ScaleDecision};
+pub use shard::{Scheduler, ShardedIrm};
 
 /// The IRM's per-cycle view of the cluster (provided by the harness).
 #[derive(Clone, Debug, Default)]
@@ -94,6 +96,30 @@ pub struct IrmUpdate {
     pub bins_needed: Option<usize>,
     /// Telemetry: load-predictor decision this cycle, if it polled.
     pub scale_decision: Option<ScaleDecision>,
+    /// Telemetry: deterministic packing work on the cycle's critical path
+    /// (drained requests + open bins, the dominant cost of one packing
+    /// round). Unsharded this equals
+    /// [`total_pack_work`](Self::total_pack_work); under N shards the
+    /// sub-rounds are independent,
+    /// so the critical path is the *largest* shard's work — the ~1/N
+    /// per-tick scaling the A9 ablation pins without wall clocks. Zero on
+    /// cycles where no packing round fired.
+    pub critical_path_work: u64,
+    /// Telemetry: total packing work across every sub-round this cycle.
+    pub total_pack_work: u64,
+}
+
+/// Result of one bin-packing round (the legacy loop's step 2, extracted
+/// so the sharded coordinator can run one round per shard over its slice
+/// of the fleet). Telemetry mirrors [`PackOutcome`]; `work_units` is the
+/// round's deterministic cost measure (drained requests + open bins).
+pub(crate) struct PackRound {
+    pub allocations: Vec<Allocation>,
+    pub bins_needed: usize,
+    pub pending_demand: ResourceVec,
+    pub scheduled: Vec<(WorkerId, CpuFraction)>,
+    pub scheduled_vec: Vec<(WorkerId, ResourceVec)>,
+    pub work_units: u64,
 }
 
 /// The assembled IRM.
@@ -208,6 +234,28 @@ impl Irm {
         self.draining.contains(&worker)
     }
 
+    /// Mark `worker` draining without requeueing anything (the sharded
+    /// coordinator owns the requeue routing). Returns whether the mark is
+    /// new — the caller's idempotence signal.
+    pub(crate) fn mark_draining(&mut self, worker: WorkerId) -> bool {
+        self.draining.insert(worker)
+    }
+
+    /// Remove a drain mark (shard rebalancer moving a draining worker to
+    /// another shard). Returns whether the mark existed.
+    pub(crate) fn unmark_draining(&mut self, worker: WorkerId) -> bool {
+        self.draining.remove(&worker)
+    }
+
+    /// Drop drain marks for workers that left the cluster (the provider
+    /// reclaimed them, or they were terminated).
+    pub(crate) fn retain_drains(&mut self, view: &ClusterView) {
+        if !self.draining.is_empty() {
+            self.draining
+                .retain(|id| view.workers.iter().any(|(w, _)| w == id));
+        }
+    }
+
     /// Full resource-vector estimate for an image, every dimension live:
     /// CPU from the profiler as always; RAM/net from the profiler's
     /// per-dimension moving averages wherever real measurements exist,
@@ -257,12 +305,7 @@ impl Irm {
     ) -> IrmUpdate {
         let mut update = IrmUpdate::default();
 
-        // Drop drain marks for workers that left the cluster (the
-        // provider reclaimed them, or they were terminated).
-        if !self.draining.is_empty() {
-            self.draining
-                .retain(|id| view.workers.iter().any(|(w, _)| w == id));
-        }
+        self.retain_drains(view);
 
         // --- 0. Cost feedback: the predictor tracks the cloud's spend
         // rate so the optional cost-aware damper can soften scale-ups
@@ -282,51 +325,15 @@ impl Irm {
             }
         }
 
-        // --- 2. Bin-packing run over the waiting requests. ---
-        if self.binpack_timer.fire(now) {
-            // Refresh every waiting request's full vector estimate from
-            // the live profiler (field-disjoint borrows: the closure
-            // reads the profiler + config while the queue mutates).
-            let profiler = &self.profiler;
-            let image_resources = &self.cfg.image_resources;
-            self.queue.refresh_estimates_with(|img| {
-                profiler.estimate_vec(img, &Self::prior_for(image_resources, img))
-            });
-            let requests = self.queue.drain();
-            self.bins_buf.clear();
-            for (i, (id, images)) in view.workers.iter().enumerate() {
-                // A draining (preemption-noticed) worker is a closed
-                // bin: nothing new may be placed on capacity the
-                // provider is about to reclaim.
-                if self.draining.contains(id) {
-                    continue;
-                }
-                // Unlisted capacities (short or empty vector) mean the
-                // unit reference flavor.
-                let capacity = view
-                    .capacities
-                    .get(i)
-                    .copied()
-                    .unwrap_or(ResourceVec::UNIT);
-                let scheduled_vec =
-                    allocator::scheduled_resources(images, |img| self.resource_estimate(img));
-                self.bins_buf
-                    .push(WorkerBin::vector(*id, scheduled_vec, capacity));
-            }
-            let outcome = self.allocator.pack(requests, &self.bins_buf);
-            for req in outcome.pending_new_workers {
-                // Failed hosting attempt (target VM does not exist yet):
-                // requeue with TTL decrement, as §V-B2 specifies.
-                self.queue.requeue(req);
-            }
-            self.last_scheduled = outcome.scheduled.clone();
-            self.last_scheduled_vec = outcome.scheduled_vec.clone();
-            self.last_bins_needed = outcome.bins_needed;
-            self.last_pending_demand = outcome.pending_demand;
-            update.start_pes = outcome.allocations;
-            update.bins_needed = Some(outcome.bins_needed);
-            update.scheduled = outcome.scheduled;
-            update.scheduled_vec = outcome.scheduled_vec;
+        // --- 2. Bin-packing run over the waiting requests (the whole
+        // fleet is this scheduler's membership). ---
+        if let Some(round) = self.packing_round(now, view, |_| true) {
+            update.start_pes = round.allocations;
+            update.bins_needed = Some(round.bins_needed);
+            update.scheduled = round.scheduled;
+            update.scheduled_vec = round.scheduled_vec;
+            update.critical_path_work = round.work_units;
+            update.total_pack_work = round.work_units;
         }
 
         // --- 3. Auto-scaler: worker supply vs bins needed. Draining
@@ -367,6 +374,77 @@ impl Irm {
         update
     }
 
+    /// One bin-packing round over this scheduler's waiting requests and
+    /// its slice of the fleet — step 2 of the control loop, extracted so
+    /// the sharded coordinator can run one round per shard. `member`
+    /// selects the workers this scheduler owns (the legacy loop passes
+    /// `|_| true`); capacities are looked up by *full-view* index, so a
+    /// membership filter never misaligns a worker with its flavor.
+    /// Returns `None` when the binpack timer has not fired; otherwise
+    /// stashes the continuous telemetry (`last_*`) and returns the
+    /// round's outcome.
+    pub(crate) fn packing_round(
+        &mut self,
+        now: Millis,
+        view: &ClusterView,
+        member: impl Fn(WorkerId) -> bool,
+    ) -> Option<PackRound> {
+        if !self.binpack_timer.fire(now) {
+            return None;
+        }
+        // Refresh every waiting request's full vector estimate from
+        // the live profiler (field-disjoint borrows: the closure
+        // reads the profiler + config while the queue mutates).
+        let profiler = &self.profiler;
+        let image_resources = &self.cfg.image_resources;
+        self.queue.refresh_estimates_with(|img| {
+            profiler.estimate_vec(img, &Self::prior_for(image_resources, img))
+        });
+        let requests = self.queue.drain();
+        self.bins_buf.clear();
+        for (i, (id, images)) in view.workers.iter().enumerate() {
+            if !member(*id) {
+                continue;
+            }
+            // A draining (preemption-noticed) worker is a closed
+            // bin: nothing new may be placed on capacity the
+            // provider is about to reclaim.
+            if self.draining.contains(id) {
+                continue;
+            }
+            // Unlisted capacities (short or empty vector) mean the
+            // unit reference flavor.
+            let capacity = view
+                .capacities
+                .get(i)
+                .copied()
+                .unwrap_or(ResourceVec::UNIT);
+            let scheduled_vec =
+                allocator::scheduled_resources(images, |img| self.resource_estimate(img));
+            self.bins_buf
+                .push(WorkerBin::vector(*id, scheduled_vec, capacity));
+        }
+        let work_units = (requests.len() + self.bins_buf.len()) as u64;
+        let outcome = self.allocator.pack(requests, &self.bins_buf);
+        for req in outcome.pending_new_workers {
+            // Failed hosting attempt (target VM does not exist yet):
+            // requeue with TTL decrement, as §V-B2 specifies.
+            self.queue.requeue(req);
+        }
+        self.last_scheduled = outcome.scheduled.clone();
+        self.last_scheduled_vec = outcome.scheduled_vec.clone();
+        self.last_bins_needed = outcome.bins_needed;
+        self.last_pending_demand = outcome.pending_demand;
+        Some(PackRound {
+            allocations: outcome.allocations,
+            bins_needed: outcome.bins_needed,
+            pending_demand: outcome.pending_demand,
+            scheduled: outcome.scheduled,
+            scheduled_vec: outcome.scheduled_vec,
+            work_units,
+        })
+    }
+
     /// Split a PE increase across the images waiting in the backlog,
     /// proportionally to their share of waiting messages, bounded so we
     /// never queue more PEs than there are waiting messages per image.
@@ -381,18 +459,8 @@ impl Irm {
         if backlog.is_empty() {
             return;
         }
-        let waiting_total: usize = backlog.iter().map(|(_, n)| n).sum();
-        if waiting_total == 0 {
-            // An all-zero backlog (possible if a backlog source ever
-            // reports images with zero waiting messages) would make
-            // every share 0/0 = NaN below; today that NaN only became 0
-            // by accident of `as usize` truncation. No demand — nothing
-            // to enqueue.
-            return;
-        }
-        for (image, waiting) in &backlog {
-            // Proportional share, at least 1 for any waiting image.
-            let share = Self::proportional_share(total, *waiting, waiting_total);
+        let shares = Self::proportional_shares(total, &backlog);
+        for ((image, waiting), share) in backlog.iter().zip(shares) {
             let hosted: usize = view
                 .workers
                 .iter()
@@ -420,17 +488,49 @@ impl Irm {
         }
     }
 
-    /// One image's ceil-proportional share of a `total` PE increase,
-    /// given `waiting` of `waiting_total` backlog messages. The
-    /// `waiting_total == 0` case is guarded **explicitly**: the 0/0
-    /// division would yield NaN, which `as usize` happens to truncate
-    /// to 0 today — an invariant this helper (and its boundary test)
-    /// keeps from silently drifting under refactors.
-    fn proportional_share(total: usize, waiting: usize, waiting_total: usize) -> usize {
-        if waiting_total == 0 {
-            return 0;
+    /// Largest-remainder (Hamilton) apportionment of a `total` PE
+    /// increase across the backlog, in pure integer arithmetic: every
+    /// image gets the floor of its proportional share, and the leftover
+    /// seats go to the largest fractional remainders (ties → earliest
+    /// backlog entry), so the shares **sum to exactly `total`**.
+    ///
+    /// This replaces the old per-image `ceil`, whose shares could sum
+    /// past `total` and over-admit whenever several images were waiting
+    /// (e.g. `total = 4` over three equal images ceiled to 2+2+2 = 6
+    /// hosting requests for a 4-PE decision) — an error that compounds
+    /// once shards each apply it against a global cap. An all-zero
+    /// backlog returns all-zero shares — the old NaN-from-0/0 boundary,
+    /// still guarded explicitly.
+    pub(crate) fn proportional_shares(total: usize, backlog: &[(ImageName, usize)]) -> Vec<usize> {
+        let waiting_total: usize = backlog.iter().map(|(_, n)| n).sum();
+        if waiting_total == 0 || total == 0 {
+            return vec![0; backlog.len()];
         }
-        crate::util::cast::f64_to_usize(((total * waiting) as f64 / waiting_total as f64).ceil())
+        let mut shares = Vec::with_capacity(backlog.len());
+        // (remainder, index) of each floored share, for the leftover pass.
+        let mut remainders = Vec::with_capacity(backlog.len());
+        let mut floor_sum = 0usize;
+        for (i, (_, waiting)) in backlog.iter().enumerate() {
+            let num = total * waiting;
+            let floor = num / waiting_total;
+            shares.push(floor);
+            floor_sum += floor;
+            remainders.push((num % waiting_total, i));
+        }
+        // leftover = Σremainders / waiting_total < #nonzero-remainders,
+        // so the zero-remainder tail is never reached.
+        let mut leftover = total - floor_sum;
+        remainders.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        for (remainder, i) in remainders {
+            if leftover == 0 || remainder == 0 {
+                break;
+            }
+            if let Some(s) = shares.get_mut(i) {
+                *s += 1;
+            }
+            leftover -= 1;
+        }
+        shares
     }
 }
 
@@ -758,17 +858,62 @@ mod tests {
         assert!(irm.queue.len() <= 3, "queued {}", irm.queue.len());
     }
 
+    fn backlog_of(waiting: &[usize]) -> Vec<(ImageName, usize)> {
+        waiting
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (ImageName::new(format!("img{i}")), *w))
+            .collect()
+    }
+
     #[test]
-    fn proportional_share_guards_the_zero_backlog_boundary() {
-        // Regression: 0/0 is NaN, and `NaN as usize` truncates to 0 —
-        // the guard must make that 0 explicit, not accidental.
-        assert_eq!(Irm::proportional_share(8, 0, 0), 0);
-        assert_eq!(Irm::proportional_share(0, 0, 0), 0);
-        // Normal proportional rounding is unchanged.
-        assert_eq!(Irm::proportional_share(8, 1, 2), 4);
-        assert_eq!(Irm::proportional_share(3, 1, 3), 1);
-        assert_eq!(Irm::proportional_share(3, 2, 3), 2);
-        assert_eq!(Irm::proportional_share(1, 1, 3), 1, "ceil: any waiting image gets one");
+    fn proportional_shares_guard_the_zero_backlog_boundary() {
+        // Regression: the old float path divided 0/0 into NaN, which
+        // `as usize` truncated to 0 by accident — the all-zero backlog
+        // must stay an explicit all-zero result.
+        assert_eq!(Irm::proportional_shares(8, &backlog_of(&[0, 0])), vec![0, 0]);
+        assert_eq!(Irm::proportional_shares(0, &backlog_of(&[0])), vec![0]);
+        assert_eq!(Irm::proportional_shares(0, &backlog_of(&[3, 1])), vec![0, 0]);
+        assert!(Irm::proportional_shares(5, &[]).is_empty());
+    }
+
+    #[test]
+    fn proportional_shares_sum_to_exactly_the_total() {
+        // THE over-admission regression: per-image ceil gave total=4
+        // over three equal images ceil(4/3) = 2 each — six hosting
+        // requests for a four-PE decision. Largest-remainder must give
+        // 2+1+1 (leftover seat to the earliest tie).
+        assert_eq!(Irm::proportional_shares(4, &backlog_of(&[1, 1, 1])), vec![2, 1, 1]);
+        // A 1-PE decision admits one PE, not one per waiting image.
+        assert_eq!(Irm::proportional_shares(1, &backlog_of(&[1, 1, 1])), vec![1, 0, 0]);
+        // Exact divisions stay exact.
+        assert_eq!(Irm::proportional_shares(8, &backlog_of(&[1, 1])), vec![4, 4]);
+        assert_eq!(Irm::proportional_shares(3, &backlog_of(&[2, 1])), vec![2, 1]);
+        // Leftover seats go to the largest remainders first.
+        assert_eq!(Irm::proportional_shares(7, &backlog_of(&[5, 2, 1])), vec![4, 2, 1]);
+        // The sum-to-total invariant, swept across shapes and totals.
+        for total in 0..24usize {
+            for waiting in [
+                &[1usize][..],
+                &[1, 1, 1][..],
+                &[9, 3, 1][..],
+                &[2, 0, 5, 0, 1][..],
+                &[7, 7, 7, 7][..],
+            ] {
+                let shares = Irm::proportional_shares(total, &backlog_of(waiting));
+                let wt: usize = waiting.iter().sum();
+                let expect = if wt == 0 { 0 } else { total };
+                assert_eq!(
+                    shares.iter().sum::<usize>(),
+                    expect,
+                    "shares {shares:?} for total={total} waiting={waiting:?}"
+                );
+                // No image is ever apportioned more than its ceil share.
+                for (share, w) in shares.iter().zip(waiting) {
+                    assert!(*share <= total * w / wt.max(1) + 1);
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,1154 @@
+//! Sharded scheduling plane: N independent IRM packing shards behind one
+//! coordinator — the ROADMAP's "sharded scale-out master" item.
+//!
+//! The paper's master is a single scheduling loop, and so was ours: one
+//! container queue, one packing round per tick, over the whole fleet.
+//! [`ShardedIrm`] splits that plane horizontally:
+//!
+//! * **Streams/images** are consistent-hashed (FNV-1a over the image
+//!   name, 64 virtual nodes per shard) onto shards, so every hosting
+//!   request for an image lands in exactly one shard's container queue.
+//! * **Workers** are assigned to shards on first sight (least-populated
+//!   shard wins ties by index), giving each shard a disjoint slice of the
+//!   fleet. Worker reports route to the owning shard's profiler.
+//! * **Packing** runs as N independent sub-rounds per tick — each shard
+//!   drains its own queue into its own worker slice with its own
+//!   `PackEngine`. The per-tick critical path is the *largest* shard's
+//!   round (`IrmUpdate::critical_path_work`), the ~1/N scaling the A9
+//!   ablation pins.
+//! * **Autoscaling stays global**: shards emit `pending_demand` /
+//!   `bins_needed` summaries which the coordinator aggregates into the
+//!   one `AutoScaler` + `FlavorPlanner` pass, so cost-aware, spot-aware
+//!   and zone-diverse planning are unchanged. The load predictor is
+//!   global too and observes the *aggregated* cost ledger exactly once
+//!   per cycle — per-shard observation would divide the spend slope by N
+//!   and double-damp scale-ups.
+//! * A thin **rebalancer** migrates whole streams (queue entries keep
+//!   origin/TTL/checkpoint via `ContainerQueue::accept_transfer`, and
+//!   workers dedicated to the stream follow it) from the most- to the
+//!   least-loaded shard when the imbalance exceeds a hysteresis band
+//!   ([`rebalance_hysteresis`](crate::irm::ShardingConfig::rebalance_hysteresis)),
+//!   at most one stream per firing of
+//!   [`rebalance_interval`](crate::irm::ShardingConfig::rebalance_interval).
+//!
+//! With one shard the coordinator is byte-identical to the legacy
+//! [`Irm`]: same admission arithmetic, same packing inputs, same scaler
+//! call sequence, and a rebalancer that never engages — pinned by the
+//! degeneracy arm of the A9 ablation and the property test below.
+
+use std::collections::BTreeMap;
+
+use crate::binpacking::ResourceVec;
+use crate::clock::Periodic;
+use crate::irm::config::IrmConfig;
+use crate::irm::{
+    AutoScaler, ClusterView, ContainerRequest, FlavorPlanner, Irm, IrmUpdate, LoadPredictor,
+    RequestOrigin, WorkerState,
+};
+use crate::master::Master;
+use crate::profiler::ResourceProfiler;
+use crate::protocol::WorkerReport;
+use crate::types::{CpuFraction, ImageName, Millis, WorkerId};
+
+/// Slack added to the rebalancer's hysteresis comparison so exact-ratio
+/// boundaries (e.g. both loads zero) never trigger a migration on float
+/// noise (named per lint rule C1).
+const REBALANCE_EPS: f64 = 1e-3;
+
+/// Virtual nodes per shard on the hash ring — enough that the keyspace
+/// split stays within a few percent of uniform at small shard counts.
+const VIRTUAL_NODES: usize = 64;
+
+/// FNV-1a 64-bit: tiny, dependency-free, and stable across platforms and
+/// releases — the ring must hash identically forever or every golden pin
+/// of a sharded run breaks.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        hash ^= u64::from(b);
+        hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    hash
+}
+
+/// Consistent-hash ring over the shard indices.
+struct HashRing {
+    /// `(point, shard)` sorted by point; lookup is a binary search with
+    /// wrap-around.
+    points: Vec<(u64, usize)>,
+}
+
+impl HashRing {
+    fn new(shards: usize) -> Self {
+        let mut points = Vec::with_capacity(shards * VIRTUAL_NODES);
+        for shard in 0..shards {
+            for vnode in 0..VIRTUAL_NODES {
+                let label = format!("shard-{shard}-vnode-{vnode}");
+                points.push((fnv1a(label.as_bytes()), shard));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points }
+    }
+
+    fn shard_for(&self, image: &ImageName) -> usize {
+        let hash = fnv1a(image.as_str().as_bytes());
+        let i = self.points.partition_point(|&(p, _)| p < hash);
+        // Wrap past the last point back to the ring's first.
+        let slot = if i == self.points.len() { 0 } else { i };
+        self.points.get(slot).map(|&(_, s)| s).unwrap_or(0)
+    }
+}
+
+/// N IRM shards behind one coordinator: global admission and
+/// autoscaling, per-shard container queues, profilers and packing
+/// rounds, plus the stream rebalancer. See the module docs for the
+/// architecture.
+pub struct ShardedIrm {
+    cfg: IrmConfig,
+    shards: Vec<Irm>,
+    ring: HashRing,
+    /// Rebalancer stream pins: `image → shard`, overriding the ring.
+    overrides: BTreeMap<ImageName, usize>,
+    /// Worker → owning shard (lazy: assigned on first sight, retained
+    /// only while the worker is in the view).
+    assign: BTreeMap<WorkerId, usize>,
+    /// Global load predictor — observes the aggregated cost ledger once
+    /// per cycle (per-shard observation would double-damp, the bug class
+    /// this field exists to prevent).
+    predictor: LoadPredictor,
+    /// Global autoscaler over the whole fleet's aggregated demand.
+    scaler: AutoScaler,
+    flavor_planner: Option<FlavorPlanner>,
+    rebalance_timer: Periodic,
+    /// Lifetime stream migrations (the `shard.migrations` series).
+    migrations: u64,
+    last_target: usize,
+    /// Aggregated packing telemetry, continuous between rounds like the
+    /// legacy scheduler's.
+    last_bins_needed: usize,
+    last_pending_demand: ResourceVec,
+    states_buf: Vec<WorkerState>,
+}
+
+impl ShardedIrm {
+    /// Build a coordinator with `cfg.sharding.shards` shards (clamped to
+    /// at least one). Every shard is a full [`Irm`] constructed from the
+    /// same config; the coordinator's own predictor/scaler/planner are
+    /// constructed exactly as the legacy scheduler's, so the one-shard
+    /// coordinator replays the legacy loop decision for decision.
+    pub fn new(cfg: IrmConfig) -> Self {
+        let shard_count = cfg.sharding.shards.max(1);
+        let shards: Vec<Irm> = (0..shard_count).map(|_| Irm::new(cfg.clone())).collect();
+        ShardedIrm {
+            ring: HashRing::new(shard_count),
+            shards,
+            overrides: BTreeMap::new(),
+            assign: BTreeMap::new(),
+            predictor: LoadPredictor::new(cfg.load_predictor),
+            scaler: AutoScaler::new(cfg.buffer_policy, cfg.worker_drain_grace),
+            flavor_planner: (!cfg.flavor_catalog.is_empty())
+                .then(|| FlavorPlanner::with_policy(cfg.flavor_catalog.clone(), cfg.spot_policy)),
+            rebalance_timer: Periodic::new(cfg.sharding.rebalance_interval),
+            migrations: 0,
+            last_target: 0,
+            last_bins_needed: 0,
+            last_pending_demand: ResourceVec::ZERO,
+            states_buf: Vec::new(),
+            cfg,
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard owning an image's stream (rebalancer pins override the
+    /// consistent-hash ring).
+    pub fn shard_of_image(&self, image: &ImageName) -> usize {
+        self.overrides
+            .get(image)
+            .copied()
+            .unwrap_or_else(|| self.ring.shard_for(image))
+    }
+
+    /// The shard owning a worker, if the worker has been sighted.
+    pub fn shard_of_worker(&self, worker: WorkerId) -> Option<usize> {
+        self.assign.get(&worker).copied()
+    }
+
+    /// Queued hosting requests in one shard's container queue.
+    pub fn shard_queue_len(&self, shard: usize) -> usize {
+        self.shards.get(shard).map(|s| s.queue.len()).unwrap_or(0)
+    }
+
+    /// Workers currently assigned to one shard.
+    pub fn shard_worker_count(&self, shard: usize) -> usize {
+        self.assign.values().filter(|s| **s == shard).count()
+    }
+
+    /// Bins needed by one shard's latest packing round.
+    pub fn shard_bins_needed(&self, shard: usize) -> usize {
+        self.shards
+            .get(shard)
+            .map(|s| s.last_bins_needed())
+            .unwrap_or(0)
+    }
+
+    /// Lifetime stream migrations performed by the rebalancer.
+    pub fn migrations(&self) -> u64 {
+        self.migrations
+    }
+
+    /// Lifetime scale-up decisions softened by the global cost damper.
+    pub fn cost_damped(&self) -> u64 {
+        self.predictor.cost_damped
+    }
+
+    pub fn last_target(&self) -> usize {
+        self.last_target
+    }
+
+    /// Whether any shard holds a drain mark for `worker`.
+    pub fn is_draining(&self, worker: WorkerId) -> bool {
+        self.shards.iter().any(|s| s.is_draining(worker))
+    }
+
+    /// Preempted re-hosting requests dropped on TTL exhaustion, summed
+    /// across shards (the `irm.requeue_dropped` series).
+    pub fn dropped_preempted(&self) -> u64 {
+        self.shards.iter().map(|s| s.queue.dropped_preempted).sum()
+    }
+
+    /// Route a worker report to the owning shard's profiler.
+    pub fn ingest_report(&mut self, report: &WorkerReport) {
+        let owner = self.assign_worker(report.worker);
+        if let Some(shard) = self.shards.get_mut(owner) {
+            shard.ingest_report(report);
+        }
+    }
+
+    /// Manual hosting request, routed to the image's owner shard.
+    pub fn host_request(&mut self, image: ImageName, now: Millis) {
+        let owner = self.shard_of_image(&image);
+        if let Some(shard) = self.shards.get_mut(owner) {
+            shard.host_request(image, now);
+        }
+    }
+
+    /// A failed hosting attempt at the harness level (target worker
+    /// vanished): requeue into the image's owner shard, burning one TTL
+    /// — the legacy `queue.requeue` path, shard-routed.
+    pub fn requeue_failed(&mut self, req: ContainerRequest) {
+        let owner = self.shard_of_image(&req.image);
+        if let Some(shard) = self.shards.get_mut(owner) {
+            shard.queue.requeue(req);
+        }
+    }
+
+    /// Enqueue a preempted re-hosting request directly (harness/test
+    /// path), routed like every other request for the image.
+    pub fn push_preempted(
+        &mut self,
+        image: ImageName,
+        estimate_vec: ResourceVec,
+        ttl: u32,
+        now: Millis,
+        checkpoint: f64,
+    ) {
+        let owner = self.shard_of_image(&image);
+        if let Some(shard) = self.shards.get_mut(owner) {
+            shard.queue.push_preempted(image, estimate_vec, ttl, now, checkpoint);
+        }
+    }
+
+    /// Install a (carried-over) profiler into every shard.
+    pub fn set_profiler(&mut self, profiler: ResourceProfiler) {
+        for shard in &mut self.shards {
+            shard.profiler = profiler.clone();
+        }
+    }
+
+    /// Shard 0's profiler (carry-over snapshotting; with one shard this
+    /// is *the* profiler).
+    pub fn profiler(&self) -> &ResourceProfiler {
+        match self.shards.first() {
+            Some(shard) => &shard.profiler,
+            None => unreachable!("ShardedIrm::new clamps to at least one shard"),
+        }
+    }
+
+    /// Full resource-vector estimate from the image's owner shard.
+    pub fn resource_estimate(&self, image: &ImageName) -> ResourceVec {
+        let owner = self.shard_of_image(image);
+        match self.shards.get(owner) {
+            Some(shard) => shard.resource_estimate(image),
+            None => ResourceVec::ZERO,
+        }
+    }
+
+    /// CPU estimate from the image's owner shard.
+    pub fn cpu_estimate(&self, image: &ImageName) -> CpuFraction {
+        let owner = self.shard_of_image(image);
+        match self.shards.get(owner) {
+            Some(shard) => shard.profiler.estimate(image),
+            None => CpuFraction::ZERO,
+        }
+    }
+
+    /// Spot preemption notice: drain-mark the worker on its owner shard
+    /// (idempotent per worker) and requeue one re-hosting request per
+    /// hosted PE into each image's owner shard — the requests may fan
+    /// out across shards even though the drain mark does not.
+    pub fn preemption_notice(
+        &mut self,
+        worker: WorkerId,
+        hosted: &[(ImageName, f64)],
+        now: Millis,
+    ) {
+        let owner = self.assign_worker(worker);
+        let newly_marked = self
+            .shards
+            .get_mut(owner)
+            .map(|s| s.mark_draining(worker))
+            .unwrap_or(false);
+        if !newly_marked {
+            return;
+        }
+        let ttl = self.cfg.request_ttl;
+        for (image, checkpoint) in hosted {
+            let img_owner = self.shard_of_image(image);
+            if let Some(shard) = self.shards.get_mut(img_owner) {
+                let est = shard.resource_estimate(image);
+                shard
+                    .queue
+                    .push_preempted(image.clone(), est, ttl, now, *checkpoint);
+            }
+        }
+    }
+
+    /// One coordinator control cycle — the sharded twin of
+    /// [`Irm::control_cycle`]: global cost feedback and admission, N
+    /// independent packing sub-rounds, the rebalancer, then one global
+    /// autoscaling pass over the aggregated demand.
+    pub fn control_cycle(
+        &mut self,
+        now: Millis,
+        master: &mut Master,
+        view: &ClusterView,
+    ) -> IrmUpdate {
+        let mut update = IrmUpdate::default();
+
+        self.refresh_assignments(view);
+        for shard in &mut self.shards {
+            shard.retain_drains(view);
+        }
+
+        // --- 0. Global cost feedback: the *aggregated* ledger, observed
+        // exactly once. Each shard only ever sees its slice of the fleet,
+        // so feeding the damper per shard would under-read the spend
+        // slope N-fold and still damp N times — the double-damping bug
+        // this coordinator exists to avoid. ---
+        self.predictor.observe_cost(now, view.cost_usd);
+
+        // --- 1. Global admission: one queue sample, one apportionment
+        // against the global per-image caps, requests routed to each
+        // image's owner shard. ---
+        if self.predictor.wants_sample(now) {
+            let metrics = master.sample_queue(now);
+            let decision = self.predictor.evaluate(metrics);
+            update.scale_decision = Some(decision);
+            let n = decision.pe_increase();
+            if n > 0 {
+                self.enqueue_pe_requests(n, master, view, now);
+            }
+        }
+
+        // --- 2. Per-shard packing sub-rounds. Shard timers were built
+        // from one config, so they fire in lockstep; each round sees the
+        // full view but only opens bins for its own member workers
+        // (capacity lookup stays by full-view index). ---
+        let assign = &self.assign;
+        let mut fired = false;
+        let mut bins_total = 0usize;
+        let mut pending = ResourceVec::ZERO;
+        let mut critical = 0u64;
+        let mut total_work = 0u64;
+        for (i, shard) in self.shards.iter_mut().enumerate() {
+            let round =
+                shard.packing_round(now, view, |w| assign.get(&w).copied() == Some(i));
+            if let Some(round) = round {
+                fired = true;
+                update.start_pes.extend(round.allocations);
+                update.scheduled.extend(round.scheduled);
+                update.scheduled_vec.extend(round.scheduled_vec);
+                bins_total += round.bins_needed;
+                pending = pending.add(&round.pending_demand);
+                critical = critical.max(round.work_units);
+                total_work += round.work_units;
+            }
+        }
+        if fired {
+            // Disjoint worker slices: sorting restores the legacy
+            // id-ordered telemetry (a no-op at one shard).
+            update.scheduled.sort_by_key(|(w, _)| *w);
+            update.scheduled_vec.sort_by_key(|(w, _)| *w);
+            self.last_bins_needed = bins_total;
+            self.last_pending_demand = pending;
+            update.bins_needed = Some(bins_total);
+            update.critical_path_work = critical;
+            update.total_pack_work = total_work;
+        }
+
+        // --- 2b. Rebalancer: when the most-loaded shard's demand per
+        // owned worker exceeds the least-loaded's by more than the
+        // hysteresis band, migrate its heaviest queued stream (never
+        // engages with one shard). ---
+        if self.shards.len() > 1 && self.rebalance_timer.fire(now) {
+            self.rebalance(view);
+        }
+
+        // --- 3. Global autoscaling over the whole fleet (draining
+        // workers excluded as supply, exactly as the legacy loop). ---
+        self.states_buf.clear();
+        for (id, images) in &view.workers {
+            if self.shards.iter().any(|s| s.is_draining(*id)) {
+                continue;
+            }
+            self.states_buf.push(WorkerState {
+                worker: *id,
+                pe_count: images.len(),
+            });
+        }
+        let plan = match &self.flavor_planner {
+            Some(planner) => self.scaler.plan_with_flavors(
+                now,
+                self.last_bins_needed,
+                &self.states_buf,
+                view.booting_vms,
+                self.last_pending_demand,
+                planner,
+            ),
+            None => self.scaler.plan(
+                now,
+                self.last_bins_needed,
+                &self.states_buf,
+                view.booting_vms,
+            ),
+        };
+        self.last_target = plan.target_workers;
+        update.request_vms = plan.request_vms;
+        update.request_flavors = plan.request_flavors;
+        update.cancel_boots = plan.cancel_boots;
+        update.terminate_workers = plan.terminate;
+        update.target_workers = Some(plan.target_workers);
+
+        update
+    }
+
+    /// Migrate a whole stream to `to`: pin the image, move its queued
+    /// requests verbatim (origin/TTL/checkpoint survive — no rebirth),
+    /// and re-home workers dedicated to the stream together with their
+    /// drain marks. Returns false when the move is a no-op (unknown
+    /// shard, or the stream already lives there).
+    pub fn migrate_stream(&mut self, image: &ImageName, to: usize, view: &ClusterView) -> bool {
+        if to >= self.shards.len() {
+            return false;
+        }
+        let from = self.shard_of_image(image);
+        if from == to {
+            return false;
+        }
+        self.overrides.insert(image.clone(), to);
+        let moved = self
+            .shards
+            .get_mut(from)
+            .map(|s| s.queue.take_for(image))
+            .unwrap_or_default();
+        if let Some(dst) = self.shards.get_mut(to) {
+            for req in moved {
+                dst.queue.accept_transfer(req);
+            }
+        }
+        // Workers hosting only this stream follow it (their
+        // reference-unit capacity belongs to the stream's packing).
+        for (id, images) in &view.workers {
+            let owned = self.assign.get(id).copied() == Some(from);
+            if owned && !images.is_empty() && images.iter().all(|i| i == image) {
+                self.assign.insert(*id, to);
+                let was_draining = self
+                    .shards
+                    .get_mut(from)
+                    .map(|s| s.unmark_draining(*id))
+                    .unwrap_or(false);
+                if was_draining {
+                    if let Some(dst) = self.shards.get_mut(to) {
+                        dst.mark_draining(*id);
+                    }
+                }
+            }
+        }
+        self.migrations += 1;
+        true
+    }
+
+    /// Look up a worker's shard, assigning the least-populated shard
+    /// (ties → lowest index) on first sight.
+    fn assign_worker(&mut self, worker: WorkerId) -> usize {
+        if let Some(s) = self.assign.get(&worker) {
+            return *s;
+        }
+        let mut counts = vec![0usize; self.shards.len()];
+        for s in self.assign.values() {
+            if let Some(c) = counts.get_mut(*s) {
+                *c += 1;
+            }
+        }
+        let target = counts
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, c)| (**c, *i))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        self.assign.insert(worker, target);
+        target
+    }
+
+    /// Retain assignments for live workers; assign newcomers (the view
+    /// is id-ordered, so assignment order is deterministic).
+    fn refresh_assignments(&mut self, view: &ClusterView) {
+        if !self.assign.is_empty() {
+            self.assign
+                .retain(|id, _| view.workers.iter().any(|(w, _)| w == id));
+        }
+        for (id, _) in &view.workers {
+            self.assign_worker(*id);
+        }
+    }
+
+    /// The legacy admission arithmetic, run once globally: shares by
+    /// largest-remainder apportionment over the full backlog, room
+    /// bounded by fleet-wide hosted counts and the *sum* of every
+    /// shard's queued requests, then routed to each image's owner shard.
+    fn enqueue_pe_requests(
+        &mut self,
+        total: usize,
+        master: &Master,
+        view: &ClusterView,
+        now: Millis,
+    ) {
+        let backlog = master.backlog_by_image();
+        if backlog.is_empty() {
+            return;
+        }
+        let shares = Irm::proportional_shares(total, &backlog);
+        for ((image, waiting), share) in backlog.iter().zip(shares) {
+            let hosted: usize = view
+                .workers
+                .iter()
+                .map(|(_, imgs)| imgs.iter().filter(|i| *i == image).count())
+                .sum();
+            let queued: usize = self.shards.iter().map(|s| s.queue.count_for(image)).sum();
+            let room = self
+                .cfg
+                .max_pes_per_image
+                .saturating_sub(hosted + queued)
+                .min(waiting.saturating_sub(queued));
+            let n = share.min(room);
+            if n == 0 {
+                continue;
+            }
+            let owner = self.shard_of_image(image);
+            if let Some(shard) = self.shards.get_mut(owner) {
+                let est = shard.resource_estimate(image);
+                for _ in 0..n {
+                    shard.queue.push_vec(
+                        image.clone(),
+                        est,
+                        self.cfg.request_ttl,
+                        RequestOrigin::AutoScale,
+                        now,
+                    );
+                }
+            }
+        }
+    }
+
+    /// One rebalancing decision: compare per-shard load (bins needed per
+    /// owned worker), and if the spread exceeds the hysteresis band,
+    /// migrate the hot shard's heaviest queued stream to the cold shard.
+    fn rebalance(&mut self, view: &ClusterView) {
+        let mut counts = vec![0usize; self.shards.len()];
+        for s in self.assign.values() {
+            if let Some(c) = counts.get_mut(*s) {
+                *c += 1;
+            }
+        }
+        let mut max_i = 0usize;
+        let mut max_load = f64::NEG_INFINITY;
+        let mut min_i = 0usize;
+        let mut min_load = f64::INFINITY;
+        for (i, shard) in self.shards.iter().enumerate() {
+            let workers = counts.get(i).copied().unwrap_or(0).max(1);
+            let load = shard.last_bins_needed() as f64 / workers as f64;
+            if load > max_load {
+                max_load = load;
+                max_i = i;
+            }
+            if load < min_load {
+                min_load = load;
+                min_i = i;
+            }
+        }
+        if max_i == min_i {
+            return;
+        }
+        let band = min_load * (1.0 + self.cfg.sharding.rebalance_hysteresis) + REBALANCE_EPS;
+        if max_load <= band {
+            return;
+        }
+        // Heaviest queued stream of the hot shard; ties break to the
+        // lexicographically-first image (BTreeMap order + strict >).
+        let mut heaviest: Option<(ImageName, usize)> = None;
+        if let Some(hot) = self.shards.get(max_i) {
+            for (image, n) in hot.queue.image_counts() {
+                let better = match &heaviest {
+                    None => true,
+                    Some((_, best)) => n > *best,
+                };
+                if better {
+                    heaviest = Some((image, n));
+                }
+            }
+        }
+        if let Some((image, _)) = heaviest {
+            self.migrate_stream(&image, min_i, view);
+        }
+    }
+}
+
+/// The scheduler a harness holds: the legacy single loop
+/// (`sharding.shards == 0`, the default) or the sharded coordinator.
+/// Every harness-facing operation delegates, so callers never branch on
+/// the mode themselves.
+pub enum Scheduler {
+    Single(Irm),
+    Sharded(ShardedIrm),
+}
+
+impl Scheduler {
+    /// Build the scheduler the config asks for.
+    pub fn for_config(cfg: IrmConfig) -> Self {
+        if cfg.sharding.shards == 0 {
+            Scheduler::Single(Irm::new(cfg))
+        } else {
+            Scheduler::Sharded(ShardedIrm::new(cfg))
+        }
+    }
+
+    /// The sharded coordinator, when running sharded.
+    pub fn sharded(&self) -> Option<&ShardedIrm> {
+        match self {
+            Scheduler::Sharded(s) => Some(s),
+            Scheduler::Single(_) => None,
+        }
+    }
+
+    pub fn control_cycle(
+        &mut self,
+        now: Millis,
+        master: &mut Master,
+        view: &ClusterView,
+    ) -> IrmUpdate {
+        match self {
+            Scheduler::Single(irm) => irm.control_cycle(now, master, view),
+            Scheduler::Sharded(s) => s.control_cycle(now, master, view),
+        }
+    }
+
+    pub fn ingest_report(&mut self, report: &WorkerReport) {
+        match self {
+            Scheduler::Single(irm) => irm.ingest_report(report),
+            Scheduler::Sharded(s) => s.ingest_report(report),
+        }
+    }
+
+    pub fn preemption_notice(
+        &mut self,
+        worker: WorkerId,
+        hosted: &[(ImageName, f64)],
+        now: Millis,
+    ) {
+        match self {
+            Scheduler::Single(irm) => irm.preemption_notice(worker, hosted, now),
+            Scheduler::Sharded(s) => s.preemption_notice(worker, hosted, now),
+        }
+    }
+
+    pub fn host_request(&mut self, image: ImageName, now: Millis) {
+        match self {
+            Scheduler::Single(irm) => irm.host_request(image, now),
+            Scheduler::Sharded(s) => s.host_request(image, now),
+        }
+    }
+
+    pub fn is_draining(&self, worker: WorkerId) -> bool {
+        match self {
+            Scheduler::Single(irm) => irm.is_draining(worker),
+            Scheduler::Sharded(s) => s.is_draining(worker),
+        }
+    }
+
+    pub fn resource_estimate(&self, image: &ImageName) -> ResourceVec {
+        match self {
+            Scheduler::Single(irm) => irm.resource_estimate(image),
+            Scheduler::Sharded(s) => s.resource_estimate(image),
+        }
+    }
+
+    /// Per-image CPU estimate (the `w<slot>.scheduled` series input).
+    pub fn cpu_estimate(&self, image: &ImageName) -> CpuFraction {
+        match self {
+            Scheduler::Single(irm) => irm.profiler.estimate(image),
+            Scheduler::Sharded(s) => s.cpu_estimate(image),
+        }
+    }
+
+    pub fn last_target(&self) -> usize {
+        match self {
+            Scheduler::Single(irm) => irm.last_target(),
+            Scheduler::Sharded(s) => s.last_target(),
+        }
+    }
+
+    /// Requeue a hosting attempt the harness failed to apply (burns TTL).
+    pub fn requeue_failed(&mut self, req: ContainerRequest) {
+        match self {
+            Scheduler::Single(irm) => irm.queue.requeue(req),
+            Scheduler::Sharded(s) => s.requeue_failed(req),
+        }
+    }
+
+    /// Enqueue a preempted re-hosting request (harness/test path).
+    pub fn push_preempted(
+        &mut self,
+        image: ImageName,
+        estimate_vec: ResourceVec,
+        ttl: u32,
+        now: Millis,
+        checkpoint: f64,
+    ) {
+        match self {
+            Scheduler::Single(irm) => {
+                irm.queue.push_preempted(image, estimate_vec, ttl, now, checkpoint);
+            }
+            Scheduler::Sharded(s) => s.push_preempted(image, estimate_vec, ttl, now, checkpoint),
+        }
+    }
+
+    /// Preempted re-hosting requests dropped on TTL exhaustion.
+    pub fn dropped_preempted(&self) -> u64 {
+        match self {
+            Scheduler::Single(irm) => irm.queue.dropped_preempted,
+            Scheduler::Sharded(s) => s.dropped_preempted(),
+        }
+    }
+
+    /// Install a (carried-over) profiler.
+    pub fn set_profiler(&mut self, profiler: ResourceProfiler) {
+        match self {
+            Scheduler::Single(irm) => irm.profiler = profiler,
+            Scheduler::Sharded(s) => s.set_profiler(profiler),
+        }
+    }
+
+    /// The profiler to snapshot for carry-over (shard 0's when sharded).
+    pub fn profiler(&self) -> &ResourceProfiler {
+        match self {
+            Scheduler::Single(irm) => &irm.profiler,
+            Scheduler::Sharded(s) => s.profiler(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::connector::LocalConnector;
+    use crate::irm::{LoadPredictorConfig, ScaleDecision, ShardingConfig};
+    use crate::testkit;
+    use crate::util::rng::Rng;
+
+    fn fast_cfg(shards: usize) -> IrmConfig {
+        IrmConfig {
+            binpack_interval: Millis(1000),
+            load_predictor: LoadPredictorConfig {
+                poll_interval: Millis(1000),
+                cooldown: Millis(2000),
+                ..LoadPredictorConfig::default()
+            },
+            sharding: ShardingConfig {
+                shards,
+                ..ShardingConfig::default()
+            },
+            ..IrmConfig::default()
+        }
+    }
+
+    fn view_of(workers: &[(u64, Vec<&str>)], booting: usize, cost: f64) -> ClusterView {
+        ClusterView {
+            workers: workers
+                .iter()
+                .map(|(id, imgs)| {
+                    (
+                        WorkerId(*id),
+                        imgs.iter().map(|s| ImageName::new(*s)).collect(),
+                    )
+                })
+                .collect(),
+            capacities: Vec::new(),
+            booting_vms: booting,
+            cost_usd: cost,
+        }
+    }
+
+    fn flood(master: &mut Master, image: &str, n: usize) {
+        let mut conn = LocalConnector::new();
+        for _ in 0..n {
+            conn.stream(
+                master,
+                &ImageName::new(image),
+                1024,
+                Millis(10_000),
+                Millis(0),
+            );
+        }
+    }
+
+    #[test]
+    fn ring_routing_is_total_deterministic_and_covers_every_shard() {
+        let ring = HashRing::new(4);
+        let mut covered = [false; 4];
+        for i in 0..200 {
+            let img = ImageName::new(format!("stream-{i}"));
+            let a = ring.shard_for(&img);
+            let b = ring.shard_for(&img);
+            assert_eq!(a, b, "routing must be stable");
+            assert!(a < 4);
+            covered[a] = true;
+        }
+        assert!(
+            covered.iter().all(|c| *c),
+            "64 vnodes/shard must spread 200 streams over all 4 shards: {covered:?}"
+        );
+    }
+
+    #[test]
+    fn single_shard_coordinator_defers_everything_to_shard_zero() {
+        let sharded = ShardedIrm::new(fast_cfg(1));
+        for i in 0..50 {
+            assert_eq!(sharded.shard_of_image(&ImageName::new(format!("img{i}"))), 0);
+        }
+    }
+
+    /// A compact IrmUpdate fingerprint for decision-for-decision
+    /// comparison (IrmUpdate holds floats and doesn't derive PartialEq).
+    fn fingerprint(u: &IrmUpdate) -> String {
+        let pes: Vec<String> = u
+            .start_pes
+            .iter()
+            .map(|a| format!("{}:{}:{:?}", a.worker.0, a.request.image.as_str(), a.request.origin))
+            .collect();
+        let sched: Vec<String> = u
+            .scheduled
+            .iter()
+            .map(|(w, c)| format!("{}={:.9}", w.0, c.value()))
+            .collect();
+        format!(
+            "pes={pes:?} vms={} flavors={} cancel={} term={:?} target={:?} bins={:?} \
+             dec={:?} sched={sched:?} crit={} total={}",
+            u.request_vms,
+            u.request_flavors.len(),
+            u.cancel_boots,
+            u.terminate_workers,
+            u.target_workers,
+            u.bins_needed,
+            u.scale_decision,
+            u.critical_path_work,
+            u.total_pack_work,
+        )
+    }
+
+    /// Satellite/tentpole pin: one-shard `ShardedIrm` replays the legacy
+    /// `Irm` decision for decision over randomized backlog/fleet
+    /// histories — same placements, same scaler plan, same telemetry.
+    #[test]
+    fn one_shard_coordinator_is_identical_to_legacy_irm() {
+        testkit::forall_no_shrink(
+            testkit::Config {
+                cases: 25,
+                ..testkit::Config::default()
+            },
+            |rng: &mut Rng| {
+                // A script of (time, flood counts per image, worker fleet size).
+                let steps = rng.range(4, 12) as usize;
+                let mut script = Vec::new();
+                for step in 0..steps {
+                    let t = Millis(step as u64 * 500);
+                    let floods: Vec<(usize, usize)> = (0..rng.range(0, 3))
+                        .map(|_| (rng.range(0, 3) as usize, rng.range(1, 20) as usize))
+                        .collect();
+                    let fleet = rng.range(0, 5) as usize;
+                    let booting = rng.range(0, 3) as usize;
+                    let cost = rng.uniform(0.0, 2.0) * step as f64;
+                    script.push((t, floods, fleet, booting, cost));
+                }
+                script
+            },
+            |script| {
+                let mut legacy = Irm::new(fast_cfg(0));
+                let mut sharded = ShardedIrm::new(fast_cfg(1));
+                let mut m_legacy = Master::new();
+                let mut m_sharded = Master::new();
+                let images = ["alpha", "beta", "gamma", "delta"];
+                // Hosted images accumulate per worker as placements land —
+                // applied identically to both runs from the *legacy* updates
+                // (any divergence then shows up in the fingerprints).
+                let mut hosted: Vec<Vec<&str>> = Vec::new();
+                for (t, floods, fleet, booting, cost) in script {
+                    for (img_i, n) in floods {
+                        if let Some(img) = images.get(*img_i) {
+                            flood(&mut m_legacy, img, *n);
+                            flood(&mut m_sharded, img, *n);
+                        }
+                    }
+                    hosted.resize(*fleet, Vec::new());
+                    let workers: Vec<(u64, Vec<&str>)> = hosted
+                        .iter()
+                        .enumerate()
+                        .map(|(i, imgs)| (i as u64, imgs.clone()))
+                        .collect();
+                    let view = view_of(&workers, *booting, *cost);
+                    let a = legacy.control_cycle(*t, &mut m_legacy, &view);
+                    let b = sharded.control_cycle(*t, &mut m_sharded, &view);
+                    if fingerprint(&a) != fingerprint(&b) {
+                        return Err(format!(
+                            "diverged at t={t:?}:\n legacy: {}\nsharded: {}",
+                            fingerprint(&a),
+                            fingerprint(&b)
+                        ));
+                    }
+                    for alloc in &a.start_pes {
+                        if let Some(imgs) = hosted.get_mut(alloc.worker.0 as usize) {
+                            if let Some(&name) =
+                                images.iter().find(|n| **n == alloc.request.image.as_str())
+                            {
+                                imgs.push(name);
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Satellite 3 pin: the cost damper reads the aggregated ledger once
+    /// per cycle, so N shards soften scale-ups exactly as often as one.
+    #[test]
+    fn cost_damper_parity_between_shard_counts() {
+        let run = |shards: usize| {
+            let mut cfg = fast_cfg(shards);
+            cfg.load_predictor.cost_ceiling_usd_per_hour = Some(0.5);
+            let mut irm = ShardedIrm::new(cfg);
+            let mut master = Master::new();
+            let mut decisions = Vec::new();
+            for step in 0..20u64 {
+                flood(&mut master, "alpha", 5);
+                flood(&mut master, "omega", 5);
+                let t = Millis(step * 1000);
+                // Spend climbs fast enough to sit above the ceiling.
+                let view = view_of(&[], 0, step as f64 * 2.0);
+                let update = irm.control_cycle(t, &mut master, &view);
+                decisions.push(update.scale_decision);
+            }
+            (irm.cost_damped(), decisions)
+        };
+        let (damped_1, decisions_1) = run(1);
+        let (damped_4, decisions_4) = run(4);
+        assert!(damped_1 > 0, "the ceiling must actually engage the damper");
+        assert_eq!(
+            damped_1, damped_4,
+            "N shards must damp exactly as often as one — not N times"
+        );
+        assert_eq!(decisions_1, decisions_4, "decision streams identical");
+    }
+
+    #[test]
+    fn cost_damper_engages_under_a_breached_ceiling() {
+        // Sanity companion: without a ceiling, nothing damps.
+        let mut cfg = fast_cfg(2);
+        cfg.load_predictor.cost_ceiling_usd_per_hour = None;
+        let mut irm = ShardedIrm::new(cfg);
+        let mut master = Master::new();
+        for step in 0..10u64 {
+            flood(&mut master, "alpha", 5);
+            let view = view_of(&[], 0, step as f64 * 2.0);
+            irm.control_cycle(Millis(step * 1000), &mut master, &view);
+        }
+        assert_eq!(irm.cost_damped(), 0);
+    }
+
+    /// Satellite 2 regression: preempt → rebalance (migrate) → place,
+    /// with origin, checkpoint and TTL surviving the whole trip.
+    #[test]
+    fn preempted_request_keeps_identity_across_a_shard_migration() {
+        let cfg = fast_cfg(2);
+        let ttl = cfg.request_ttl;
+        let mut irm = ShardedIrm::new(cfg);
+        let mut master = Master::new();
+        let image = ImageName::new("pre-stream");
+        // Three workers: w0 hosts the stream (and will be preempted);
+        // w1/w2 are empty. Assignment is least-populated: w0→s0, w1→s1,
+        // w2→s0 — each shard ends up with at least one healthy worker.
+        let view = view_of(
+            &[(0, vec!["pre-stream"]), (1, vec![]), (2, vec![])],
+            0,
+            0.0,
+        );
+        irm.control_cycle(Millis(0), &mut master, &view);
+        assert_eq!(irm.shard_of_worker(WorkerId(0)), Some(0));
+        assert_eq!(irm.shard_of_worker(WorkerId(1)), Some(1));
+        assert_eq!(irm.shard_of_worker(WorkerId(2)), Some(0));
+
+        irm.preemption_notice(WorkerId(0), &[(image.clone(), 0.7)], Millis(100));
+        assert!(irm.is_draining(WorkerId(0)));
+        let home = irm.shard_of_image(&image);
+        assert_eq!(irm.shard_queue_len(home), 1, "re-hosting request queued at home");
+
+        // Rebalance the stream to the other shard.
+        let target = 1 - home;
+        assert!(irm.migrate_stream(&image, target, &view));
+        assert_eq!(irm.shard_of_image(&image), target, "override pins the stream");
+        assert_eq!(irm.shard_queue_len(home), 0);
+        assert_eq!(irm.shard_queue_len(target), 1);
+
+        // Next packing round places it on the target shard's healthy
+        // worker — still a Preempted request with its checkpoint and an
+        // unburned TTL (migration is not a failed hosting attempt).
+        let update = irm.control_cycle(Millis(1000), &mut master, &view);
+        assert_eq!(update.start_pes.len(), 1);
+        let alloc = &update.start_pes[0];
+        assert_eq!(alloc.request.origin, RequestOrigin::Preempted, "origin survives");
+        assert!((alloc.request.checkpoint - 0.7).abs() < 1e-12, "checkpoint survives");
+        assert_eq!(alloc.request.ttl, ttl, "migration burned no TTL");
+        assert_eq!(
+            irm.shard_of_worker(alloc.worker),
+            Some(target),
+            "placed on the target shard's slice"
+        );
+        assert_ne!(alloc.worker, WorkerId(0), "never onto the draining worker");
+    }
+
+    #[test]
+    fn rebalancer_migrates_the_heaviest_stream_from_hot_to_cold() {
+        let mut cfg = fast_cfg(2);
+        cfg.sharding.rebalance_interval = Millis(1000);
+        cfg.sharding.rebalance_hysteresis = 0.1;
+        let mut irm = ShardedIrm::new(cfg);
+        let mut master = Master::new();
+        // Two workers, one per shard.
+        let view = view_of(&[(0, vec![]), (1, vec![])], 0, 0.0);
+        irm.control_cycle(Millis(0), &mut master, &view);
+        // Pile manual demand onto one shard's stream far past one
+        // worker's capacity, so its bins_needed dwarfs the idle shard's.
+        let image = ImageName::new("hot-stream");
+        let home = irm.shard_of_image(&image);
+        for _ in 0..24 {
+            irm.host_request(image.clone(), Millis(100));
+        }
+        // First cycle: packing measures the hot shard's demand; a later
+        // rebalance firing migrates the stream to the cold shard.
+        irm.control_cycle(Millis(1000), &mut master, &view);
+        let mut migrated = false;
+        for step in 2..8u64 {
+            irm.control_cycle(Millis(step * 1000), &mut master, &view);
+            if irm.migrations() > 0 {
+                migrated = true;
+                break;
+            }
+        }
+        assert!(migrated, "imbalance beyond the band must trigger a migration");
+        assert_eq!(
+            irm.shard_of_image(&image),
+            1 - home,
+            "the hot stream moved to the cold shard"
+        );
+    }
+
+    #[test]
+    fn rebalancer_respects_the_hysteresis_band() {
+        // Same shape but a balanced fleet: no migration ever fires.
+        let mut cfg = fast_cfg(2);
+        cfg.sharding.rebalance_interval = Millis(1000);
+        let mut irm = ShardedIrm::new(cfg);
+        let mut master = Master::new();
+        let view = view_of(&[(0, vec![]), (1, vec![])], 0, 0.0);
+        for step in 0..8u64 {
+            irm.control_cycle(Millis(step * 1000), &mut master, &view);
+        }
+        assert_eq!(irm.migrations(), 0, "no imbalance, no migration");
+    }
+
+    #[test]
+    fn scheduler_for_config_picks_the_mode() {
+        assert!(matches!(
+            Scheduler::for_config(fast_cfg(0)),
+            Scheduler::Single(_)
+        ));
+        let sched = Scheduler::for_config(fast_cfg(4));
+        match &sched {
+            Scheduler::Sharded(s) => assert_eq!(s.shard_count(), 4),
+            Scheduler::Single(_) => panic!("4 shards must build the coordinator"),
+        }
+        assert!(sched.sharded().is_some());
+    }
+
+    #[test]
+    fn worker_assignment_spreads_least_populated_first() {
+        let mut irm = ShardedIrm::new(fast_cfg(3));
+        let mut master = Master::new();
+        let workers: Vec<(u64, Vec<&str>)> = (0..9).map(|i| (i, Vec::new())).collect();
+        let view = view_of(&workers, 0, 0.0);
+        irm.control_cycle(Millis(0), &mut master, &view);
+        for shard in 0..3 {
+            assert_eq!(
+                irm.shard_worker_count(shard),
+                3,
+                "9 workers over 3 shards must balance 3/3/3"
+            );
+        }
+        // Assignments are sticky while the worker lives…
+        assert_eq!(irm.shard_of_worker(WorkerId(0)), Some(0));
+        // …and forgotten when it leaves the view.
+        let view = view_of(&[(8, vec![])], 0, 0.0);
+        irm.control_cycle(Millis(1000), &mut master, &view);
+        assert_eq!(irm.shard_of_worker(WorkerId(0)), None);
+    }
+
+    #[test]
+    fn admission_respects_global_caps_across_shards() {
+        // 3 waiting messages for one image: never more than 3 requests
+        // queued across all shards, whatever the shard count.
+        let mut irm = ShardedIrm::new(fast_cfg(4));
+        let mut master = Master::new();
+        flood(&mut master, "img", 3);
+        let update = irm.control_cycle(Millis(0), &mut master, &view_of(&[], 0, 0.0));
+        assert!(matches!(
+            update.scale_decision,
+            Some(ScaleDecision::SmallIncrease(_)) | Some(ScaleDecision::LargeIncrease(_))
+        ));
+        let queued: usize = (0..4).map(|i| irm.shard_queue_len(i)).sum();
+        assert!(queued <= 3, "queued {queued} for 3 waiting messages");
+    }
+}

@@ -18,7 +18,7 @@ use std::collections::{BTreeMap, HashMap, HashSet};
 use crate::binpacking::{Resource, ResourceVec};
 use crate::cloud::{CloudConfig, SimCloud, SpotEvent};
 use crate::connector::LocalConnector;
-use crate::irm::{ClusterView, Irm, IrmConfig};
+use crate::irm::{ClusterView, IrmConfig, Scheduler};
 use crate::master::Master;
 use crate::metrics::Recorder;
 use crate::protocol::RouteDecision;
@@ -103,7 +103,7 @@ struct ProfileSeries {
 pub struct SimCluster {
     pub cfg: ClusterConfig,
     pub master: Master,
-    pub irm: Irm,
+    pub irm: Scheduler,
     pub cloud: SimCloud,
     pub recorder: Recorder,
     workers: Vec<Worker>,
@@ -142,6 +142,13 @@ pub struct SimCluster {
     /// Checkpointing (`WorkerConfig::checkpoint_period`) exists to shrink
     /// exactly this number.
     pub rework_ms: u64,
+    /// Accumulated per-tick critical-path packing work (largest shard's
+    /// sub-round each cycle) — the deterministic proxy the A9 shard
+    /// ablation compares across shard counts. Unsharded this equals
+    /// `sched_pack_work`.
+    pub sched_critical_work: u64,
+    /// Accumulated total packing work across every shard's sub-rounds.
+    pub sched_pack_work: u64,
     sample_timer: crate::clock::Periodic,
     now: Millis,
     /// Reused per-tick buffers (§Perf: the tick loop is allocation-free at
@@ -151,6 +158,10 @@ pub struct SimCluster {
     event_scratch: Vec<WorkerEvent>,
     slot_series: Vec<SlotSeries>,
     profile_series: Vec<ProfileSeries>,
+    /// Cached `shard<i>.queue` / `shard<i>.workers` series names — one
+    /// pair per configured shard, empty on the unsharded path (names are
+    /// formatted once here, never per sample).
+    shard_series: Vec<[String; 2]>,
 }
 
 impl SimCluster {
@@ -170,9 +181,12 @@ impl SimCluster {
                 ],
             })
             .collect();
+        let shard_series = (0..cfg.irm.sharding.shards)
+            .map(|i| [format!("shard{i}.queue"), format!("shard{i}.workers")])
+            .collect();
         SimCluster {
             master: Master::new(),
-            irm: Irm::new(cfg.irm.clone()),
+            irm: Scheduler::for_config(cfg.irm.clone()),
             cloud: SimCloud::new(cfg.cloud.clone()),
             recorder: Recorder::new(),
             workers: Vec::new(),
@@ -187,6 +201,8 @@ impl SimCluster {
             completions: Vec::new(),
             failed_deliveries: 0,
             rework_ms: 0,
+            sched_critical_work: 0,
+            sched_pack_work: 0,
             sample_timer: crate::clock::Periodic::new(cfg.sample_interval),
             now: Millis::ZERO,
             view: ClusterView::default(),
@@ -194,6 +210,7 @@ impl SimCluster {
             event_scratch: Vec::new(),
             slot_series: Vec::new(),
             profile_series,
+            shard_series,
             cfg,
         }
     }
@@ -502,6 +519,8 @@ impl SimCluster {
         // refcount bumps). ---
         self.refresh_view();
         let update = self.irm.control_cycle(now, &mut self.master, &self.view);
+        self.sched_critical_work += update.critical_path_work;
+        self.sched_pack_work += update.total_pack_work;
 
         for alloc in update.start_pes {
             // Image demand is configured in reference-VM units; the worker
@@ -528,7 +547,7 @@ impl SimCluster {
                 );
             } else {
                 // Worker vanished (scale-down race): requeue per §V-B2.
-                self.irm.queue.requeue(alloc.request);
+                self.irm.requeue_failed(alloc.request);
             }
         }
         if update.request_flavors.is_empty() {
@@ -663,7 +682,7 @@ impl SimCluster {
                         .pes()
                         .iter()
                         .filter(|p| p.state() != crate::protocol::PeState::Stopping)
-                        .map(|p| self.irm.profiler.estimate(&p.image).value())
+                        .map(|p| self.irm.cpu_estimate(&p.image).value())
                         .sum();
                     // Workers measure CPU as a fraction of themselves;
                     // the scheduled series (profiler estimates) is in
@@ -759,13 +778,26 @@ impl SimCluster {
         self.recorder.record(
             "irm.requeue_dropped",
             now,
-            self.irm.queue.dropped_preempted as f64,
+            self.irm.dropped_preempted() as f64,
         );
         self.recorder.record(
             "completions",
             now,
             self.completions.len() as f64,
         );
+        // Sharded-plane series (A9): per-shard queue depth and worker
+        // slice size, plus the rebalancer's migration count — recorded
+        // only when the sharded coordinator is actually running.
+        if let Some(sharded) = self.irm.sharded() {
+            for (i, [queue_name, workers_name]) in self.shard_series.iter().enumerate() {
+                self.recorder
+                    .record(queue_name, now, sharded.shard_queue_len(i) as f64);
+                self.recorder
+                    .record(workers_name, now, sharded.shard_worker_count(i) as f64);
+            }
+            self.recorder
+                .record("shard.migrations", now, sharded.migrations() as f64);
+        }
     }
 
     /// Failure injection: kill a worker VM outright (hardware failure —
@@ -1334,7 +1366,7 @@ mod tests {
         // TTL drops and surfaced as the `irm.requeue_dropped` series —
         // silently losing preempted capacity is the regression this pins.
         let mut c = fast_cluster(0);
-        c.irm.queue.push_preempted(
+        c.irm.push_preempted(
             ImageName::new("img"),
             ResourceVec::cpu(0.5),
             2,
@@ -1342,7 +1374,7 @@ mod tests {
             0.4,
         );
         c.run_until(Millis::from_secs(30));
-        assert_eq!(c.irm.queue.dropped_preempted, 1);
+        assert_eq!(c.irm.dropped_preempted(), 1);
         let s = c.recorder.get("irm.requeue_dropped").expect("series");
         assert_eq!(s.points.last().expect("sampled").1, 1.0);
     }

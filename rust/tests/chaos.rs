@@ -531,3 +531,75 @@ fn deep_repeated_zone_kills_conserve_everything() {
     assert!(makespan.is_some(), "drained despite repeated zone kills");
     assert_eq!(c.completions.len(), 120, "every message completed exactly once");
 }
+
+/// Sharded scheduling plane under total shard-slice loss: every worker
+/// owned by one IRM shard crashes in the same instant. The other
+/// shards' slices must ride through untouched, the coordinator must
+/// re-assign replacement workers and re-route the dead slice's requeued
+/// work, and the global invariants — message conservation and
+/// exactly-once completion — must hold through the whole episode.
+#[test]
+fn sharded_whole_slice_crash_conserves_and_completes_exactly_once() {
+    let mut cfg: ClusterConfig = microscopy::cluster_config(99);
+    cfg.cloud = CloudConfig {
+        quota: 6,
+        boot_delay: Millis::from_secs(8),
+        boot_jitter: Millis(2000),
+        ..CloudConfig::default()
+    };
+    cfg.worker = WorkerConfig {
+        container_boot: Millis(2000),
+        container_boot_jitter: Millis(500),
+        container_idle_timeout: Millis::from_secs(5),
+        image_pull: Millis::ZERO,
+        measure_noise_std: 0.0,
+        ..WorkerConfig::default()
+    };
+    cfg.irm.sharding.shards = 2;
+    let mut c = SimCluster::new(cfg);
+    // Four distinct streams so the hash ring gives every shard work.
+    let total = 120;
+    for img in ["stream-a", "stream-b", "stream-c", "stream-d"] {
+        for _ in 0..30 {
+            c.schedule_arrival(
+                Millis(0),
+                Arrival {
+                    image: ImageName::new(img),
+                    payload_bytes: 4 << 20,
+                    service_demand: Millis::from_secs(8),
+                },
+            );
+        }
+    }
+    c.run_until(Millis::from_secs(60));
+    assert!(c.workers().len() >= 2, "fleet ramped up");
+    // Kill shard 0's whole worker slice in one tick (fall back to the
+    // entire fleet if assignment happened to leave shard 0 empty — an
+    // even harder episode).
+    let victims: Vec<WorkerId> = {
+        let sharded = c.irm.sharded().expect("sharded mode is on");
+        let slice: Vec<WorkerId> = c
+            .workers()
+            .iter()
+            .map(|w| w.id)
+            .filter(|id| sharded.shard_of_worker(*id) == Some(0))
+            .collect();
+        if slice.is_empty() {
+            c.workers().iter().map(|w| w.id).collect()
+        } else {
+            slice
+        }
+    };
+    assert!(!victims.is_empty());
+    for id in victims {
+        assert!(c.fail_worker(id));
+        assert_eq!(
+            c.accounted_messages(),
+            total,
+            "conservation through the slice crash"
+        );
+    }
+    let makespan = c.run_to_completion(total, Millis::from_secs(4000));
+    assert!(makespan.is_some(), "drained after losing a whole shard slice");
+    assert_eq!(c.completions.len(), total, "every message completed exactly once");
+}

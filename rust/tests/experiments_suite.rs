@@ -9,7 +9,7 @@ fn all_figures_reproduce_with_passing_checks() {
     std::fs::create_dir_all(&out).unwrap();
     let reports =
         harmonicio::experiments::run("all", out.to_str().unwrap(), 42).expect("suite runs");
-    assert_eq!(reports.len(), 17, "all 17 experiments ran");
+    assert_eq!(reports.len(), 18, "all 18 experiments ran");
     let mut failed = Vec::new();
     for r in &reports {
         for c in &r.checks {
@@ -39,6 +39,7 @@ fn all_figures_reproduce_with_passing_checks() {
         "ablation_liveprofile.csv",
         "ablation_spot.csv",
         "ablation_zonefail.csv",
+        "ablation_shard.csv",
     ] {
         let path = out.join(fig);
         let meta = std::fs::metadata(&path).unwrap_or_else(|_| panic!("{fig} missing"));
@@ -91,6 +92,7 @@ fn golden_ablation_metrics_pinned_per_seed() {
         harmonicio::experiments::run("ablation-liveprofile", out.to_str().unwrap(), 42).unwrap();
         harmonicio::experiments::run("ablation-spot", out.to_str().unwrap(), 42).unwrap();
         harmonicio::experiments::run("ablation-zonefail", out.to_str().unwrap(), 42).unwrap();
+        harmonicio::experiments::run("ablation-shard", out.to_str().unwrap(), 42).unwrap();
     }
 
     let golden_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden");
@@ -102,6 +104,7 @@ fn golden_ablation_metrics_pinned_per_seed() {
         "ablation_liveprofile.csv",
         "ablation_spot.csv",
         "ablation_zonefail.csv",
+        "ablation_shard.csv",
     ] {
         let produced = std::fs::read_to_string(out_a.join(csv)).unwrap();
         let rerun = std::fs::read_to_string(out_b.join(csv)).unwrap();
@@ -167,7 +170,7 @@ fn vector_warmup_profile_converges_and_carries_over() {
         let trace = dataset.run_trace(17 ^ run_idx);
         let mut cluster = SimCluster::new(cfg);
         if let Some(p) = carried_profiler.take() {
-            cluster.irm.profiler = p;
+            cluster.irm.set_profiler(p);
         }
         if let Some(c) = carried_cache.take() {
             cluster.pulled_images = c;
@@ -184,7 +187,7 @@ fn vector_warmup_profile_converges_and_carries_over() {
                 .map(|s| s.max())
                 .unwrap_or(0.0),
         );
-        carried_profiler = Some(cluster.irm.profiler.clone());
+        carried_profiler = Some(cluster.irm.profiler().clone());
         carried_cache = Some(cluster.pulled_images.clone());
     }
     // Run 1 converged by its end (the E9 warm-up window is bounded).

@@ -52,7 +52,7 @@ if [[ "$DEEP" == "1" ]]; then
 fi
 
 echo "== golden snapshots present"
-# The A4–A8 golden pins must be committed, not just bootstrapped: a
+# The A4–A9 golden pins must be committed, not just bootstrapped: a
 # checkout without them only enforces determinism, never values. The test
 # run above bootstraps missing files; failing here forces them into git.
 missing=0
@@ -60,7 +60,8 @@ for g in ablation_multidim.csv.seed42.golden \
          ablation_cost.csv.seed42.golden \
          ablation_liveprofile.csv.seed42.golden \
          ablation_spot.csv.seed42.golden \
-         ablation_zonefail.csv.seed42.golden; do
+         ablation_zonefail.csv.seed42.golden \
+         ablation_shard.csv.seed42.golden; do
     if [[ ! -f "rust/tests/golden/$g" ]]; then
         echo "error: rust/tests/golden/$g is missing" >&2
         missing=1
