@@ -8,7 +8,7 @@ use harmonicio::bench::{black_box, Bencher};
 use harmonicio::experiments::microscopy;
 use harmonicio::irm::{Allocator, ContainerRequest, PackerChoice, RequestOrigin, WorkerBin};
 use harmonicio::master::{LiveCluster, LiveConfig};
-use harmonicio::sim::SimCluster;
+use harmonicio::sim::{Arrival, EventCore, SimCluster};
 use harmonicio::types::{CpuFraction, ImageName, Millis, WorkerId};
 use harmonicio::workload::{ImageGen, MicroscopyConfig, MicroscopyTrace};
 
@@ -42,6 +42,88 @@ fn main() {
             cluster.tick(black_box(t));
         }
     });
+
+    // --- Event-core comparison (the PR 9 tentpole number): simulated
+    // PE-ticks per wall-second under the wheel core vs the legacy
+    // full-fleet scan, on a cluster under sustained load. The wheel must
+    // hold ≥ 10⁶ PE-ticks/sec; `scripts/bench_check.sh` carries this
+    // section PR-over-PR in BENCH_e2e.json and fails on a >10%
+    // regression of the wheel number. ---
+    for (label, core) in [
+        ("sim/pe_ticks_per_sec_wheel", EventCore::Wheel),
+        ("sim/pe_ticks_per_sec_scan", EventCore::Scan),
+    ] {
+        let mut cfg = microscopy::cluster_config(3);
+        cfg.event_core = core;
+        cfg.worker.measure_noise_std = 0.0; // noise forces every-tick draws on both cores
+        let mut cluster = SimCluster::new(cfg);
+        // Sustained stream (arrivals every 50 ms for ~20k simulated
+        // seconds) so the fleet stays busy through the whole calibrated
+        // measurement window instead of draining mid-bench.
+        for i in 0..400_000u64 {
+            cluster.schedule_arrival(
+                Millis(i * 50),
+                Arrival {
+                    image: ImageName::new("cellprofiler:3.1.9"),
+                    payload_bytes: 4 << 20,
+                    service_demand: Millis::from_secs(10),
+                },
+            );
+        }
+        cluster.run_until(Millis::from_secs(120));
+        let pes_per_tick: u64 = cluster
+            .workers()
+            .iter()
+            .map(|w| w.pe_count() as u64)
+            .sum::<u64>()
+            .max(1);
+        let mut t = cluster.now();
+        b.bench_throughput(label, Some(pes_per_tick), |iters| {
+            for _ in 0..iters {
+                t = t + Millis(100);
+                cluster.tick(black_box(t));
+            }
+        });
+    }
+
+    // Sparse fleet: idle workers whose only deadline is the 5 s report
+    // timer. The scan core still walks the whole fleet every 100 ms
+    // tick; the wheel touches each worker once per report interval —
+    // this is the case the timer hierarchy exists for. Items are
+    // worker-ticks (fleet size per tick).
+    for (label, core) in [
+        ("sim/worker_ticks_per_sec_sparse_wheel", EventCore::Wheel),
+        ("sim/worker_ticks_per_sec_sparse_scan", EventCore::Scan),
+    ] {
+        let mut cfg = microscopy::cluster_config(4);
+        cfg.event_core = core;
+        cfg.cloud.quota = 32;
+        cfg.worker.measure_noise_std = 0.0;
+        // Idle containers never self-terminate, so the ramped fleet
+        // stays hosted (and alive) after the burst drains.
+        cfg.worker.container_idle_timeout = Millis::ZERO;
+        cfg.worker.report_interval = Millis::from_secs(5);
+        let mut cluster = SimCluster::new(cfg);
+        for i in 0..2_000u64 {
+            cluster.schedule_arrival(
+                Millis(i * 10),
+                Arrival {
+                    image: ImageName::new("cellprofiler:3.1.9"),
+                    payload_bytes: 4 << 20,
+                    service_demand: Millis::from_secs(4),
+                },
+            );
+        }
+        cluster.run_until(Millis::from_secs(300));
+        let fleet = cluster.workers().len().max(1) as u64;
+        let mut t = cluster.now();
+        b.bench_throughput(label, Some(fleet), |iters| {
+            for _ in 0..iters {
+                t = t + Millis(100);
+                cluster.tick(black_box(t));
+            }
+        });
+    }
 
     // --- IRM allocator at fleet scale: one scheduling round against 10⁵
     // live workers (the live-engine hot path — reconcile + O(log m)
@@ -124,4 +206,5 @@ fn main() {
     }
 
     b.write_csv("results/bench_e2e.csv").ok();
+    b.write_json("results/bench_e2e.json").ok();
 }

@@ -136,6 +136,17 @@ impl Periodic {
     pub fn reset(&mut self) {
         self.last = None;
     }
+
+    /// Earliest time at which `fire` would return true, or `None` if the
+    /// timer has never fired (in which case any call fires immediately).
+    /// This is the timer's contribution to an event-wheel deadline: a
+    /// caller that next observes the timer at exactly `next_fire()` sees
+    /// the same firing (and the same whole-period re-anchor) as one that
+    /// polled it every tick, because `fire` anchors on the *grid*, not on
+    /// the observation time.
+    pub fn next_fire(&self) -> Option<Millis> {
+        self.last.map(|l| Millis(l.0 + self.period.0))
+    }
 }
 
 #[cfg(test)]
@@ -215,6 +226,21 @@ mod tests {
         assert!(p.fire(Millis(1050)), "stall of 10.5 periods fires once");
         assert!(!p.fire(Millis(1060)));
         assert!(p.fire(Millis(1100)), "cadence stays on the 100 ms grid");
+    }
+
+    #[test]
+    fn next_fire_matches_fire_semantics() {
+        let mut p = Periodic::new(Millis(100));
+        assert_eq!(p.next_fire(), None, "unanchored timer fires on any call");
+        assert!(p.fire(Millis(40)));
+        assert_eq!(p.next_fire(), Some(Millis(140)));
+        // Observing exactly at next_fire() fires and stays on the grid.
+        assert!(p.fire(Millis(140)));
+        assert_eq!(p.next_fire(), Some(Millis(240)));
+        // A late observation fires once and re-arms on the same grid, so
+        // next_fire is always a grid point (140 + k*100).
+        assert!(p.fire(Millis(555)));
+        assert_eq!(p.next_fire(), Some(Millis(640)));
     }
 
     #[test]

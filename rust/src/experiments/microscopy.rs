@@ -137,7 +137,7 @@ pub fn run(out: &Path, seed: u64, fig: &str) -> Result<Report> {
             .join(", ")
     ));
     report.line(format!("csv: {}", csv_path.display()));
-    let names: Vec<String> = rec.series.keys().cloned().collect();
+    let names: Vec<String> = rec.names().into_iter().map(String::from).collect();
     let refs: Vec<&str> = names.iter().map(|s| s.as_str()).take(5).collect();
     report.line(rec.ascii_chart(&refs, 72, 4));
 

@@ -232,6 +232,13 @@ pub struct ShardingConfig {
     /// than this fraction (`0.25` = 25% imbalance tolerated before any
     /// stream moves). A wide band trades balance for placement stability.
     pub rebalance_hysteresis: f64,
+    /// OS threads for the per-shard packing sub-rounds (`0` or `1` =
+    /// serial, the default). The sub-rounds are data-independent (each
+    /// shard owns a disjoint queue and worker slice) and their results
+    /// are merged in shard-index order, so any worker count produces
+    /// byte-identical output to the serial loop — this knob trades
+    /// thread fan-out against packing latency only.
+    pub parallel_workers: usize,
 }
 
 impl Default for ShardingConfig {
@@ -240,6 +247,7 @@ impl Default for ShardingConfig {
             shards: 0,
             rebalance_interval: Millis::from_secs(10),
             rebalance_hysteresis: 0.25,
+            parallel_workers: 0,
         }
     }
 }

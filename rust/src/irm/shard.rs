@@ -43,7 +43,7 @@ use crate::clock::Periodic;
 use crate::irm::config::IrmConfig;
 use crate::irm::{
     AutoScaler, ClusterView, ContainerRequest, FlavorPlanner, Irm, IrmUpdate, LoadPredictor,
-    RequestOrigin, WorkerState,
+    PackRound, RequestOrigin, WorkerState,
 };
 use crate::master::Master;
 use crate::profiler::ResourceProfiler;
@@ -228,6 +228,29 @@ impl ShardedIrm {
         }
     }
 
+    /// Ingest one tick's worth of reports as a batch, grouped by owner
+    /// shard (ascending shard index, original order within a shard).
+    /// Shard profilers are independent, so the regrouping is
+    /// byte-identical to ingesting the batch one report at a time —
+    /// each shard just sees its slice contiguously instead of
+    /// interleaved.
+    pub fn ingest_reports(&mut self, reports: &[&WorkerReport]) {
+        // Resolve owners first: assignment is order-sensitive (first
+        // sight picks the least-populated shard) and must happen in the
+        // batch's original order, exactly as per-report ingest would.
+        let owners: Vec<usize> = reports
+            .iter()
+            .map(|r| self.assign_worker(r.worker))
+            .collect();
+        for (shard_i, shard) in self.shards.iter_mut().enumerate() {
+            for (report, owner) in reports.iter().zip(&owners) {
+                if *owner == shard_i {
+                    shard.ingest_report(report);
+                }
+            }
+        }
+    }
+
     /// Manual hosting request, routed to the image's owner shard.
     pub fn host_request(&mut self, image: ImageName, now: Millis) {
         let owner = self.shard_of_image(&image);
@@ -367,26 +390,70 @@ impl ShardedIrm {
         // --- 2. Per-shard packing sub-rounds. Shard timers were built
         // from one config, so they fire in lockstep; each round sees the
         // full view but only opens bins for its own member workers
-        // (capacity lookup stays by full-view index). ---
+        // (capacity lookup stays by full-view index). The sub-rounds are
+        // data-independent — disjoint queues, disjoint worker slices, a
+        // read-only view/assignment — so `parallel_workers >= 2` may farm
+        // them out to OS threads; results are merged in shard-index order
+        // either way, keeping the cycle byte-identical to the serial
+        // loop. ---
         let assign = &self.assign;
+        let shard_count = self.shards.len();
+        let threads = self.cfg.sharding.parallel_workers.min(shard_count);
+        let rounds: Vec<Option<PackRound>> = if threads >= 2 {
+            let chunk_len = (shard_count + threads - 1) / threads;
+            // pallas-lint: allow(D2, packing sub-rounds are pure functions of shard state and the read-only view; threads only change wall time, results merge in shard-index order)
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(threads);
+                for (ci, chunk) in self.shards.chunks_mut(chunk_len).enumerate() {
+                    let base = ci * chunk_len;
+                    handles.push(scope.spawn(move || {
+                        chunk
+                            .iter_mut()
+                            .enumerate()
+                            .map(|(j, shard)| {
+                                let i = base + j;
+                                shard.packing_round(now, view, |w| {
+                                    assign.get(&w).copied() == Some(i)
+                                })
+                            })
+                            .collect::<Vec<Option<PackRound>>>()
+                    }));
+                }
+                let mut all = Vec::with_capacity(shard_count);
+                // Deterministic join order: chunks are joined (and their
+                // results appended) in shard-index order regardless of
+                // which thread finishes first.
+                for handle in handles {
+                    match handle.join() {
+                        Ok(mut rounds) => all.append(&mut rounds),
+                        Err(payload) => std::panic::resume_unwind(payload),
+                    }
+                }
+                all
+            })
+        } else {
+            self.shards
+                .iter_mut()
+                .enumerate()
+                .map(|(i, shard)| {
+                    shard.packing_round(now, view, |w| assign.get(&w).copied() == Some(i))
+                })
+                .collect()
+        };
         let mut fired = false;
         let mut bins_total = 0usize;
         let mut pending = ResourceVec::ZERO;
         let mut critical = 0u64;
         let mut total_work = 0u64;
-        for (i, shard) in self.shards.iter_mut().enumerate() {
-            let round =
-                shard.packing_round(now, view, |w| assign.get(&w).copied() == Some(i));
-            if let Some(round) = round {
-                fired = true;
-                update.start_pes.extend(round.allocations);
-                update.scheduled.extend(round.scheduled);
-                update.scheduled_vec.extend(round.scheduled_vec);
-                bins_total += round.bins_needed;
-                pending = pending.add(&round.pending_demand);
-                critical = critical.max(round.work_units);
-                total_work += round.work_units;
-            }
+        for round in rounds.into_iter().flatten() {
+            fired = true;
+            update.start_pes.extend(round.allocations);
+            update.scheduled.extend(round.scheduled);
+            update.scheduled_vec.extend(round.scheduled_vec);
+            bins_total += round.bins_needed;
+            pending = pending.add(&round.pending_demand);
+            critical = critical.max(round.work_units);
+            total_work += round.work_units;
         }
         if fired {
             // Disjoint worker slices: sorting restores the legacy
@@ -670,6 +737,20 @@ impl Scheduler {
         match self {
             Scheduler::Single(irm) => irm.ingest_report(report),
             Scheduler::Sharded(s) => s.ingest_report(report),
+        }
+    }
+
+    /// Ingest one tick's report batch (grouped by owner shard on the
+    /// sharded path; the single loop has one profiler, so batch order is
+    /// the ingest order).
+    pub fn ingest_reports(&mut self, reports: &[&WorkerReport]) {
+        match self {
+            Scheduler::Single(irm) => {
+                for report in reports {
+                    irm.ingest_report(report);
+                }
+            }
+            Scheduler::Sharded(s) => s.ingest_reports(reports),
         }
     }
 
@@ -1098,6 +1179,78 @@ mod tests {
             irm.control_cycle(Millis(step * 1000), &mut master, &view);
         }
         assert_eq!(irm.migrations(), 0, "no imbalance, no migration");
+    }
+
+    /// Tentpole pin: the threaded packing sub-rounds merge to exactly the
+    /// serial cycle's output — same placements, same scaler plan, same
+    /// telemetry — across a deterministic multi-cycle script at N=4.
+    #[test]
+    fn parallel_packing_is_byte_identical_to_serial() {
+        let run = |parallel_workers: usize| {
+            let mut cfg = fast_cfg(4);
+            cfg.sharding.parallel_workers = parallel_workers;
+            let mut irm = ShardedIrm::new(cfg);
+            let mut master = Master::new();
+            let workers: Vec<(u64, Vec<&str>)> = (0..8).map(|i| (i, Vec::new())).collect();
+            let mut prints = Vec::new();
+            for step in 0..12u64 {
+                for (i, img) in ["alpha", "beta", "gamma", "delta", "omega"]
+                    .iter()
+                    .enumerate()
+                {
+                    if (step as usize + i) % 2 == 0 {
+                        flood(&mut master, img, 3 + i);
+                    }
+                }
+                let view = view_of(&workers, 1, step as f64 * 0.3);
+                let update = irm.control_cycle(Millis(step * 1000), &mut master, &view);
+                prints.push(fingerprint(&update));
+            }
+            prints
+        };
+        let serial = run(0);
+        assert_eq!(serial, run(4), "4 packing threads must replay the serial cycle");
+        assert_eq!(serial, run(3), "odd thread counts chunk unevenly but merge the same");
+    }
+
+    /// Satellite pin: one batched `ingest_reports` call leaves every
+    /// shard's profiler and every worker assignment exactly where the
+    /// per-report path leaves them.
+    #[test]
+    fn batched_report_ingest_matches_per_report_ingest() {
+        let report = |w: u64, cpu: f64| WorkerReport {
+            worker: WorkerId(w),
+            at: Millis(1000),
+            total_cpu: CpuFraction::new(cpu),
+            per_image: vec![(ImageName::new("img"), ResourceVec::new(cpu, 0.1, 0.0))],
+            progress: Vec::new(),
+            pes: Vec::new(),
+        };
+        let reports: Vec<WorkerReport> =
+            (0..6).map(|w| report(w, 0.1 + w as f64 * 0.05)).collect();
+        let mut per_report = ShardedIrm::new(fast_cfg(3));
+        let mut batched = ShardedIrm::new(fast_cfg(3));
+        for r in &reports {
+            per_report.ingest_report(r);
+        }
+        let refs: Vec<&WorkerReport> = reports.iter().collect();
+        batched.ingest_reports(&refs);
+        let img = ImageName::new("img");
+        for w in 0..6 {
+            assert_eq!(
+                per_report.shard_of_worker(WorkerId(w)),
+                batched.shard_of_worker(WorkerId(w)),
+                "assignment order must survive batching"
+            );
+        }
+        assert_eq!(
+            per_report.resource_estimate(&img),
+            batched.resource_estimate(&img)
+        );
+        assert_eq!(
+            per_report.cpu_estimate(&img).value(),
+            batched.cpu_estimate(&img).value()
+        );
     }
 
     #[test]

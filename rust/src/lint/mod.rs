@@ -8,9 +8,11 @@
 //!
 //! * **D1** — no `HashMap`/`HashSet` iteration in determinism-critical
 //!   modules unless the statement provably sorts or a pragma explains why.
-//! * **D2** — no `Instant::now` / `SystemTime` / `thread_rng` outside the
-//!   live-transport allowlist; sim paths use virtual [`crate::clock`] and
-//!   the seeded [`crate::util::rng::Rng`].
+//! * **D2** — no `Instant::now` / `SystemTime` / `thread_rng` — and no
+//!   `thread::spawn` / `thread::scope` fan-out — outside the live-transport
+//!   allowlist; sim paths use virtual [`crate::clock`] and the seeded
+//!   [`crate::util::rng::Rng`], and any threading must pragma its
+//!   fixed-merge-order argument.
 //! * **F1** — no `partial_cmp` (float sorts panic or lie under NaN); use
 //!   `total_cmp`, or pragma a genuinely-total hand-written impl.
 //! * **F2** — no bare `as usize`/`as u64`/… on float expressions (NaN
@@ -58,7 +60,7 @@ const INDEX_SCOPE: &[&str] = &["sim", "irm", "worker", "profiler", "cloud"];
 /// `(id, one-line summary)` — the catalog printed by `pallas_lint --rules`.
 pub const RULES: &[(&str, &str)] = &[
     ("D1", "no HashMap/HashSet iteration in determinism-critical modules"),
-    ("D2", "no Instant::now/SystemTime/thread_rng outside the live allowlist"),
+    ("D2", "no Instant::now/SystemTime/thread_rng/thread::spawn outside the live allowlist"),
     ("F1", "no partial_cmp — use total_cmp or pragma a proven-total impl"),
     ("F2", "no bare `as <int>` casts on float expressions — use util::cast"),
     ("P1", "no unwrap()/expect() in hot-path modules"),
@@ -442,16 +444,30 @@ fn rule_d2(toks: &[Tok], i: usize, push: &mut impl FnMut(u32, &'static str, Stri
         }
         "SystemTime" => "SystemTime",
         "thread_rng" => "thread_rng",
+        "thread"
+            if toks.get(i + 1).map(|n| n.text == "::").unwrap_or(false)
+                && toks
+                    .get(i + 2)
+                    .map(|n| n.text == "spawn" || n.text == "scope")
+                    .unwrap_or(false) =>
+        {
+            "thread::spawn/scope"
+        }
         _ => return,
     };
-    push(
-        t.line,
-        "D2",
+    let msg = if what == "thread::spawn/scope" {
+        format!(
+            "`{what}` fans out OS threads outside the live allowlist — interleaving is \
+             nondeterministic; prove the results merge in a fixed order (e.g. join in \
+             spawn order) and suppress with a pragma stating that argument"
+        )
+    } else {
         format!(
             "wall-clock/entropy source `{what}` outside the live-transport allowlist — \
              sim paths must use the virtual Clock and the seeded util::rng::Rng"
-        ),
-    );
+        )
+    };
+    push(t.line, "D2", msg);
 }
 
 fn rule_f2(toks: &[Tok], i: usize, push: &mut impl FnMut(u32, &'static str, String)) {
@@ -789,6 +805,21 @@ mod tests {
         assert_eq!(rules_at(&lint_virtual("sim/x.rs", src)), vec![("D2", 1)]);
         assert!(lint_virtual("worker/live.rs", src).is_empty());
         assert!(lint_virtual("main.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d2_flags_thread_fan_out_but_not_scoped_handles() {
+        let src = "fn f() { std::thread::scope(|s| { s.spawn(|| {}); }); }\n\
+                   fn g() { let h = std::thread::spawn(|| {}); h.join(); }\n";
+        assert_eq!(
+            rules_at(&lint_virtual("irm/x.rs", src)),
+            vec![("D2", 1), ("D2", 2)],
+            "the fan-out entry points fire; `s.spawn` inside the scope does not re-fire"
+        );
+        assert!(lint_virtual("bench/x.rs", src).is_empty());
+        let pragmad = "// pallas-lint: allow(D2, rounds merge in shard-index order)\n\
+                       fn f() { std::thread::scope(|s| { s.spawn(|| {}); }); }\n";
+        assert!(lint_virtual("irm/x.rs", pragmad).is_empty());
     }
 
     #[test]

@@ -132,6 +132,7 @@ impl MasterService {
         let d_state = state.clone();
         let d_stop = stop.clone();
         let d_count = dispatched.clone();
+        // pallas-lint: allow(D2, live-master backlog dispatcher — real sockets, off the sim path)
         let dispatcher = std::thread::spawn(move || {
             while !d_stop.load(Ordering::SeqCst) {
                 let (job, workers) = {

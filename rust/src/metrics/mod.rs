@@ -61,10 +61,24 @@ impl TimeSeries {
     }
 }
 
+/// Handle to an interned series name. Obtained once from
+/// [`Recorder::series_id`]; recording through it ([`Recorder::record_id`])
+/// touches no `String` at all, so steady-state sampling is allocation-free
+/// apart from the appended points themselves. Ids are only meaningful for
+/// the recorder that issued them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SeriesId(u32);
+
 /// A set of named series recorded during one experiment run.
+///
+/// Names are interned: the name→id map is consulted (without allocating)
+/// on every `record` call, and a name is copied into the map exactly once
+/// — the first time it is seen. Callers on hot paths should intern up
+/// front and use [`Recorder::record_id`].
 #[derive(Clone, Debug, Default)]
 pub struct Recorder {
-    pub series: BTreeMap<String, TimeSeries>,
+    names: BTreeMap<String, SeriesId>,
+    data: Vec<TimeSeries>,
 }
 
 impl Recorder {
@@ -72,16 +86,38 @@ impl Recorder {
         Recorder::default()
     }
 
+    /// Intern `name`, allocating only if it has never been seen.
+    pub fn series_id(&mut self, name: &str) -> SeriesId {
+        if let Some(id) = self.names.get(name) {
+            return *id;
+        }
+        let id = SeriesId(u32::try_from(self.data.len()).unwrap_or(u32::MAX));
+        assert!(
+            (id.0 as usize) == self.data.len(),
+            "series count exceeds u32 interner range"
+        );
+        self.names.insert(name.to_string(), id);
+        self.data.push(TimeSeries::default());
+        id
+    }
+
+    /// Append a point to an interned series. Allocation-free except for
+    /// the point storage itself.
+    pub fn record_id(&mut self, id: SeriesId, t: Millis, v: f64) {
+        self.data[id.0 as usize].push(t, v);
+    }
+
     pub fn record(&mut self, name: &str, t: Millis, v: f64) {
-        self.series.entry(name.to_string()).or_default().push(t, v);
+        let id = self.series_id(name);
+        self.record_id(id, t, v);
     }
 
     pub fn get(&self, name: &str) -> Option<&TimeSeries> {
-        self.series.get(name)
+        self.names.get(name).map(|id| &self.data[id.0 as usize])
     }
 
     pub fn names(&self) -> Vec<&str> {
-        self.series.keys().map(|s| s.as_str()).collect()
+        self.names.keys().map(|s| s.as_str()).collect()
     }
 
     /// Pointwise difference `a - b` sampled at `a`'s timestamps — the
@@ -99,10 +135,13 @@ impl Recorder {
         out
     }
 
-    /// Long-format CSV: `series,t_ms,value`.
+    /// Long-format CSV: `series,t_ms,value`. Series are emitted in name
+    /// order (the interner map is a `BTreeMap`), so output is independent
+    /// of interning order.
     pub fn to_csv(&self) -> String {
         let mut out = String::from("series,t_ms,value\n");
-        for (name, s) in &self.series {
+        for (name, id) in &self.names {
+            let s = &self.data[id.0 as usize];
             for (t, v) in &s.points {
                 let _ = writeln!(out, "{name},{},{v:.6}", t.0);
             }
@@ -233,6 +272,33 @@ mod tests {
         assert!(csv.starts_with("series,t_ms,value\n"));
         assert!(csv.contains("a,0,1.000000"));
         assert!(csv.contains("b,500,0.250000"));
+    }
+
+    #[test]
+    fn interned_ids_are_stable_and_equivalent_to_names() {
+        let mut r = Recorder::new();
+        let a = r.series_id("a");
+        let b = r.series_id("b");
+        assert_ne!(a, b);
+        assert_eq!(r.series_id("a"), a, "re-interning returns the same id");
+        r.record_id(a, Millis(0), 1.0);
+        r.record("a", Millis(100), 2.0);
+        let s = r.get("a").unwrap();
+        assert_eq!(s.points, vec![(Millis(0), 1.0), (Millis(100), 2.0)]);
+        assert!(r.get("b").unwrap().is_empty());
+    }
+
+    #[test]
+    fn csv_order_is_by_name_not_interning_order() {
+        let mut r = Recorder::new();
+        let z = r.series_id("z");
+        let a = r.series_id("a");
+        r.record_id(z, Millis(0), 1.0);
+        r.record_id(a, Millis(0), 2.0);
+        let csv = r.to_csv();
+        let a_pos = csv.find("a,0").unwrap();
+        let z_pos = csv.find("z,0").unwrap();
+        assert!(a_pos < z_pos, "CSV must stay name-sorted:\n{csv}");
     }
 
     #[test]

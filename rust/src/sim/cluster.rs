@@ -4,7 +4,10 @@
 //! Per tick (default 100 ms):
 //! 1. due stream arrivals are routed via the connector path;
 //! 2. the cloud advances VM boots; ready VMs become workers (bins);
-//! 3. workers advance PEs (contention model), emitting reports/completions;
+//! 3. workers advance PEs (contention model), emitting reports/completions —
+//!    under the default [`EventCore::Wheel`] only workers with a due event
+//!    take a tick (the hierarchical timer wheel in [`crate::sim::wheel`]
+//!    tracks each worker's next deadline; see `rust/src/sim/README.md`);
 //! 4. the master drains its backlog onto idle PEs;
 //! 5. the IRM runs its control cycle (load predictor → container queue →
 //!    bin-packing manager → autoscaler) and the harness applies the
@@ -14,14 +17,16 @@
 // pallas-lint: allow-file(P2, workers[pos] comes from worker_pos()/iter().position() lookups and slot/series indices are bounded by the vectors grown in lockstep)
 
 use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::atomic::{AtomicU8, Ordering};
 
 use crate::binpacking::{Resource, ResourceVec};
 use crate::cloud::{CloudConfig, SimCloud, SpotEvent};
 use crate::connector::LocalConnector;
 use crate::irm::{ClusterView, IrmConfig, Scheduler};
 use crate::master::Master;
-use crate::metrics::Recorder;
-use crate::protocol::RouteDecision;
+use crate::metrics::{Recorder, SeriesId};
+use crate::protocol::{RouteDecision, WorkerReport};
+use crate::sim::wheel::{Handle as WheelHandle, TimerWheel};
 use crate::sim::EventQueue;
 use crate::types::{CpuFraction, ImageName, MessageId, Millis, VmId, WorkerId};
 use crate::worker::{ProcessingEngine, Worker, WorkerConfig, WorkerEvent};
@@ -30,6 +35,40 @@ use crate::worker::{ProcessingEngine, Worker, WorkerConfig, WorkerEvent};
 /// demand onto its flavor — guards the division against a degenerate
 /// zero-capacity flavor.
 const MIN_CPU_CAP: f64 = 1e-6;
+
+/// Which step-3 worker-advance core drives the tick.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventCore {
+    /// Legacy full-fleet scan: every worker ticks every step. Kept as the
+    /// byte-identical oracle the wheel core is pinned against.
+    Scan,
+    /// Hierarchical timer wheel: a tick touches only workers with a due
+    /// event (report timer, boot/idle/stop deadline) plus any worker the
+    /// harness mutated this step. Identical event stream by construction
+    /// (see `sim/README.md` for the skip-correctness argument).
+    Wheel,
+}
+
+/// Process-wide default for [`ClusterConfig::event_core`]. The
+/// determinism-pin suite flips this to run the *entire* experiment
+/// registry under the scan oracle without threading a flag through every
+/// config constructor; everything else runs on the wheel.
+static DEFAULT_EVENT_CORE: AtomicU8 = AtomicU8::new(1);
+
+pub fn set_default_event_core(core: EventCore) {
+    let v = match core {
+        EventCore::Scan => 0,
+        EventCore::Wheel => 1,
+    };
+    DEFAULT_EVENT_CORE.store(v, Ordering::SeqCst);
+}
+
+pub fn default_event_core() -> EventCore {
+    match DEFAULT_EVENT_CORE.load(Ordering::SeqCst) {
+        0 => EventCore::Scan,
+        _ => EventCore::Wheel,
+    }
+}
 
 /// Full cluster configuration.
 #[derive(Clone)]
@@ -51,6 +90,8 @@ pub struct ClusterConfig {
     pub seed: u64,
     /// Sample the figure series every this often.
     pub sample_interval: Millis,
+    /// Worker-advance core (wheel by default; see [`default_event_core`]).
+    pub event_core: EventCore,
 }
 
 impl Default for ClusterConfig {
@@ -64,6 +105,7 @@ impl Default for ClusterConfig {
             dt: Millis(100),
             seed: 42,
             sample_interval: Millis::from_secs(1),
+            event_core: default_event_core(),
         }
     }
 }
@@ -84,19 +126,37 @@ pub struct Completion {
     pub completed_at: Millis,
 }
 
-/// Cached per-slot series names, so sampling doesn't `format!` three
-/// strings per worker slot every second of sim time.
+/// Interned per-slot series ids (`w<slot>.measured/scheduled/error_pp`) —
+/// each name is `format!`ed exactly once, when the slot first appears,
+/// and sampling records through the ids from then on.
 struct SlotSeries {
-    measured: String,
-    scheduled: String,
-    error_pp: String,
+    measured: SeriesId,
+    scheduled: SeriesId,
+    error_pp: SeriesId,
 }
 
-/// Cached per-image profiler series names (`profile.<image>.<dim>`),
+/// Interned per-image profiler series ids (`profile.<image>.<dim>`),
 /// built once for the images the IRM carries priors for.
 struct ProfileSeries {
     image: ImageName,
-    dims: [String; 3],
+    dims: [SeriesId; 3],
+}
+
+/// Interned ids for the fixed-name series every sample records — the
+/// names never hit the recorder's intern map after construction.
+struct FixedSeries {
+    queue_len: SeriesId,
+    workers_current: SeriesId,
+    workers_target: SeriesId,
+    bins_active: SeriesId,
+    cloud_rejected: SeriesId,
+    cloud_cost_usd: SeriesId,
+    cloud_spot_cost_usd: SeriesId,
+    cloud_preemptions: SeriesId,
+    cloud_zone_preemptions: SeriesId,
+    rework_s: SeriesId,
+    requeue_dropped: SeriesId,
+    completions: SeriesId,
 }
 
 /// The simulated cluster.
@@ -151,23 +211,48 @@ pub struct SimCluster {
     pub sched_pack_work: u64,
     sample_timer: crate::clock::Periodic,
     now: Millis,
+    /// Per-worker next-due deadlines (wheel core). Handles are slot-indexed
+    /// (`WorkerId` == slot), so the map is a flat vector with no churn.
+    wheel: TimerWheel<WorkerId>,
+    wheel_handles: Vec<Option<WheelHandle>>,
+    /// Workers that must tick this step regardless of wheel deadlines:
+    /// new registrations and workers touched by exogenous deliveries.
+    forced_due: Vec<WorkerId>,
+    /// Workers whose deadline must be recomputed at end of step (ticked,
+    /// delivered to, or given a new container this step).
+    dirty: Vec<WorkerId>,
+    due_scratch: Vec<WorkerId>,
+    due_ids: Vec<WorkerId>,
     /// Reused per-tick buffers (§Perf: the tick loop is allocation-free at
     /// steady state — no per-tick view rebuild, event vectors or strings).
     view: ClusterView,
     worker_events: Vec<(WorkerId, WorkerEvent)>,
     event_scratch: Vec<WorkerEvent>,
+    /// Worker reports collected during event dispatch and handed to the
+    /// scheduler as one batch per tick (grouped by owner shard inside
+    /// [`Scheduler::ingest_reports`]).
+    report_batch: Vec<WorkerReport>,
+    scaled_reports: Vec<WorkerReport>,
     slot_series: Vec<SlotSeries>,
     profile_series: Vec<ProfileSeries>,
-    /// Cached `shard<i>.queue` / `shard<i>.workers` series names — one
-    /// pair per configured shard, empty on the unsharded path (names are
-    /// formatted once here, never per sample).
-    shard_series: Vec<[String; 2]>,
+    fixed_series: FixedSeries,
+    /// Interned `shard<i>.queue` / `shard<i>.workers` series ids — one
+    /// pair per configured shard plus the migration counter, interned on
+    /// the first sample that sees the sharded coordinator (names are
+    /// formatted once there, never per sample).
+    shard_series: Option<(Vec<[SeriesId; 2]>, SeriesId)>,
+    /// Lazily interned RAM-overcommit ids (the series are conditional on
+    /// the workload carrying resource profiles).
+    ram_overcommit: Option<SeriesId>,
+    ram_overcommit_actual: Option<SeriesId>,
 }
 
 impl SimCluster {
     pub fn new(cfg: ClusterConfig) -> Self {
-        // `profile.<image>.<dim>` series names, one set per image the IRM
-        // carries a resource prior for — formatted once, not per sample.
+        let mut recorder = Recorder::new();
+        // `profile.<image>.<dim>` series ids, one set per image the IRM
+        // carries a resource prior for — formatted and interned once, not
+        // per sample.
         let profile_series = cfg
             .irm
             .image_resources
@@ -175,20 +260,31 @@ impl SimCluster {
             .map(|(img, _)| ProfileSeries {
                 image: img.clone(),
                 dims: [
-                    format!("profile.{img}.cpu"),
-                    format!("profile.{img}.ram"),
-                    format!("profile.{img}.net"),
+                    recorder.series_id(&format!("profile.{img}.cpu")),
+                    recorder.series_id(&format!("profile.{img}.ram")),
+                    recorder.series_id(&format!("profile.{img}.net")),
                 ],
             })
             .collect();
-        let shard_series = (0..cfg.irm.sharding.shards)
-            .map(|i| [format!("shard{i}.queue"), format!("shard{i}.workers")])
-            .collect();
+        let fixed_series = FixedSeries {
+            queue_len: recorder.series_id("queue.len"),
+            workers_current: recorder.series_id("workers.current"),
+            workers_target: recorder.series_id("workers.target"),
+            bins_active: recorder.series_id("bins.active"),
+            cloud_rejected: recorder.series_id("cloud.rejected"),
+            cloud_cost_usd: recorder.series_id("cloud.cost_usd"),
+            cloud_spot_cost_usd: recorder.series_id("cloud.spot_cost_usd"),
+            cloud_preemptions: recorder.series_id("cloud.preemptions"),
+            cloud_zone_preemptions: recorder.series_id("cloud.zone_preemptions"),
+            rework_s: recorder.series_id("sim.rework_s"),
+            requeue_dropped: recorder.series_id("irm.requeue_dropped"),
+            completions: recorder.series_id("completions"),
+        };
         SimCluster {
             master: Master::new(),
             irm: Scheduler::for_config(cfg.irm.clone()),
             cloud: SimCloud::new(cfg.cloud.clone()),
-            recorder: Recorder::new(),
+            recorder,
             workers: Vec::new(),
             used_slots: Vec::new(),
             vm_of_worker: BTreeMap::new(),
@@ -205,14 +301,70 @@ impl SimCluster {
             sched_pack_work: 0,
             sample_timer: crate::clock::Periodic::new(cfg.sample_interval),
             now: Millis::ZERO,
+            wheel: TimerWheel::new(cfg.dt),
+            wheel_handles: Vec::new(),
+            forced_due: Vec::new(),
+            dirty: Vec::new(),
+            due_scratch: Vec::new(),
+            due_ids: Vec::new(),
             view: ClusterView::default(),
             worker_events: Vec::new(),
             event_scratch: Vec::new(),
+            report_batch: Vec::new(),
+            scaled_reports: Vec::new(),
             slot_series: Vec::new(),
             profile_series,
-            shard_series,
+            fixed_series,
+            shard_series: None,
+            ram_overcommit: None,
+            ram_overcommit_actual: None,
             cfg,
         }
+    }
+
+    /// Bring a stale worker up to `target` before acting on it (wheel
+    /// core only). A worker the wheel skipped has had no due events since
+    /// its last tick, so the single catch-up tick is event-free and
+    /// reproduces the per-tick state exactly (see `sim/README.md`); it
+    /// only re-bases `last_tick` so the *next* real tick integrates the
+    /// same `dt` the scan core would.
+    fn catch_up(&mut self, pos: usize, target: Millis) {
+        if self.cfg.event_core != EventCore::Wheel {
+            return;
+        }
+        let w = &mut self.workers[pos];
+        match w.last_tick() {
+            Some(last) if last < target => {
+                self.event_scratch.clear();
+                w.tick_into(target, &mut self.event_scratch);
+                debug_assert!(
+                    self.event_scratch.is_empty(),
+                    "catch-up tick emitted events — worker was due but not fired"
+                );
+            }
+            _ => {}
+        }
+    }
+
+    /// Drop worker `id`'s wheel deadline (worker removed).
+    fn wheel_forget(&mut self, id: WorkerId) {
+        if let Some(slot) = self.wheel_handles.get_mut(id.0 as usize) {
+            if let Some(h) = slot.take() {
+                self.wheel.cancel(h);
+            }
+        }
+    }
+
+    /// Re-arm worker `id`'s wheel deadline at its next due time.
+    fn wheel_rearm(&mut self, id: WorkerId, due: Millis) {
+        let slot = id.0 as usize;
+        if self.wheel_handles.len() <= slot {
+            self.wheel_handles.resize(slot + 1, None);
+        }
+        if let Some(h) = self.wheel_handles[slot].take() {
+            self.wheel.cancel(h);
+        }
+        self.wheel_handles[slot] = Some(self.wheel.schedule(id, due));
     }
 
     /// Position of worker `id` in the (id-sorted) worker list.
@@ -325,6 +477,10 @@ impl SimCluster {
     /// Advance the cluster to `now` (call with monotonically increasing
     /// times, normally from [`StepDriver`](crate::sim::StepDriver)).
     pub fn tick(&mut self, now: Millis) {
+        // The previous step time: workers mutated before the step-3
+        // advance must first be caught up to it (the scan core last
+        // ticked the whole fleet there).
+        let prev = self.now;
         self.now = now;
 
         // --- 1. Stream arrivals (connector path). ---
@@ -339,11 +495,15 @@ impl SimCluster {
             if let RouteDecision::Direct { worker, pe } = decision {
                 let demand_check = msg.id;
                 if let Some(pos) = self.worker_pos(worker) {
+                    self.catch_up(pos, prev);
                     if let Err(back) = self.workers[pos].deliver(pe, msg, now) {
                         // PE vanished between report and delivery.
                         self.failed_deliveries += 1;
                         self.master.requeue_front(back);
                     }
+                    // The delivery target ticks this step no matter what
+                    // its deadline says (the scan core would).
+                    self.forced_due.push(worker);
                 } else {
                     self.failed_deliveries += 1;
                     debug_assert!(demand_check.0 < u64::MAX);
@@ -382,6 +542,9 @@ impl SimCluster {
             });
             self.workers.push(worker);
             self.workers.sort_by_key(|w| w.id);
+            // A fresh worker has no wheel deadline yet: it takes its
+            // first (dt = 0) tick this step, exactly like the scan core.
+            self.forced_due.push(id);
             // A boot that was preemption-noticed while provisioning
             // registers already draining: the reclaim clock is running,
             // so this worker must never be packed onto or counted as
@@ -438,45 +601,57 @@ impl SimCluster {
         }
 
         // --- 3. Workers advance (reused event buffers — no per-tick
-        // allocation once the cluster is warm). ---
+        // allocation once the cluster is warm). Under the wheel core only
+        // workers with a due event (plus any worker the harness touched
+        // this step) take a tick; a skipped worker's state is invariant,
+        // so the event stream is byte-identical to the scan core's. ---
         self.worker_events.clear();
-        for w in &mut self.workers {
-            self.event_scratch.clear();
-            w.tick_into(now, &mut self.event_scratch);
-            for e in self.event_scratch.drain(..) {
-                self.worker_events.push((w.id, e));
+        match self.cfg.event_core {
+            EventCore::Scan => {
+                for w in &mut self.workers {
+                    self.event_scratch.clear();
+                    w.tick_into(now, &mut self.event_scratch);
+                    for e in self.event_scratch.drain(..) {
+                        self.worker_events.push((w.id, e));
+                    }
+                }
+            }
+            EventCore::Wheel => {
+                self.wheel.advance(now, &mut self.due_scratch);
+                self.due_ids.clear();
+                self.due_ids.extend(self.due_scratch.iter().copied());
+                self.due_ids.append(&mut self.forced_due);
+                // Ascending WorkerId = the scan core's iteration order,
+                // so events interleave identically.
+                self.due_ids.sort_unstable();
+                self.due_ids.dedup();
+                let due = std::mem::take(&mut self.due_ids);
+                for wid in &due {
+                    // A fired or forced id can refer to a worker removed
+                    // earlier this step (spot reclaim) — skip it.
+                    if let Some(pos) = self.worker_pos(*wid) {
+                        self.event_scratch.clear();
+                        self.workers[pos].tick_into(now, &mut self.event_scratch);
+                        for e in self.event_scratch.drain(..) {
+                            self.worker_events.push((*wid, e));
+                        }
+                        self.dirty.push(*wid);
+                    }
+                }
+                self.due_ids = due;
             }
         }
         for (wid, event) in self.worker_events.drain(..) {
             match event {
                 WorkerEvent::Report(report) => {
-                    // Workers measure CPU as a fraction of *themselves*;
-                    // the profiler works in reference-VM units. On the
-                    // homogeneous (unit-flavor) path the two coincide and
-                    // the report is forwarded as-is; a smaller flavor's
-                    // report is rescaled first (heterogeneous runs only —
-                    // the steady-state tick stays allocation-free). The
-                    // RAM/net components are already in reference units
-                    // (the PE's footprint is flavor-independent), so only
-                    // the CPU component rescales.
-                    let cpu_cap = self
-                        .worker_capacity
-                        .get(&wid)
-                        .copied()
-                        .unwrap_or(ResourceVec::UNIT)
-                        .get(Resource::Cpu);
-                    if (cpu_cap - 1.0).abs() > crate::binpacking::EPS {
-                        let mut scaled = report.clone();
-                        scaled.total_cpu = CpuFraction::new(report.total_cpu.value() * cpu_cap);
-                        for (_, usage) in &mut scaled.per_image {
-                            let cpu = usage.get(Resource::Cpu) * cpu_cap;
-                            usage.set(Resource::Cpu, cpu);
-                        }
-                        self.irm.ingest_report(&scaled);
-                    } else {
-                        self.irm.ingest_report(&report);
-                    }
-                    self.master.ingest_report(report);
+                    // Reports are batched and handed to the scheduler once
+                    // per tick (grouped by owner shard inside the facade);
+                    // the master's registry refresh is deferred alongside.
+                    // Both touch state that nothing else in this dispatch
+                    // loop reads, so the deferral is byte-identical to the
+                    // legacy per-event ingest.
+                    debug_assert_eq!(report.worker, wid);
+                    self.report_batch.push(report);
                 }
                 WorkerEvent::JobCompleted {
                     pe,
@@ -501,14 +676,63 @@ impl SimCluster {
                 }
             }
         }
+        if !self.report_batch.is_empty() {
+            // Workers measure CPU as a fraction of *themselves*; the
+            // profiler works in reference-VM units. On the homogeneous
+            // (unit-flavor) path the two coincide and the report goes in
+            // as-is; a smaller flavor's report is rescaled first
+            // (heterogeneous runs only — the steady-state tick stays
+            // allocation-free). The RAM/net components are already in
+            // reference units (the PE's footprint is flavor-independent),
+            // so only the CPU component rescales.
+            let cpu_cap_of = |caps: &HashMap<WorkerId, ResourceVec>, wid: WorkerId| {
+                caps.get(&wid)
+                    .copied()
+                    .unwrap_or(ResourceVec::UNIT)
+                    .get(Resource::Cpu)
+            };
+            self.scaled_reports.clear();
+            for report in &self.report_batch {
+                let cpu_cap = cpu_cap_of(&self.worker_capacity, report.worker);
+                if (cpu_cap - 1.0).abs() > crate::binpacking::EPS {
+                    let mut scaled = report.clone();
+                    scaled.total_cpu = CpuFraction::new(report.total_cpu.value() * cpu_cap);
+                    for (_, usage) in &mut scaled.per_image {
+                        let cpu = usage.get(Resource::Cpu) * cpu_cap;
+                        usage.set(Resource::Cpu, cpu);
+                    }
+                    self.scaled_reports.push(scaled);
+                }
+            }
+            // The `needs scaling` predicate is pure, so walking the batch
+            // again pairs each report with its scaled copy in order.
+            let mut si = 0;
+            let mut refs: Vec<&WorkerReport> = Vec::with_capacity(self.report_batch.len());
+            for report in &self.report_batch {
+                let cpu_cap = cpu_cap_of(&self.worker_capacity, report.worker);
+                if (cpu_cap - 1.0).abs() > crate::binpacking::EPS {
+                    refs.push(&self.scaled_reports[si]);
+                    si += 1;
+                } else {
+                    refs.push(report);
+                }
+            }
+            self.irm.ingest_reports(&refs);
+            drop(refs);
+            for report in self.report_batch.drain(..) {
+                self.master.ingest_report(report);
+            }
+        }
 
         // --- 4. Backlog drain (queued messages have priority). ---
         for (wid, pe, msg) in self.master.drain_backlog() {
             if let Some(pos) = self.worker_pos(wid) {
+                self.catch_up(pos, now);
                 if let Err(back) = self.workers[pos].deliver(pe, msg, now) {
                     self.failed_deliveries += 1;
                     self.master.requeue_front(back);
                 }
+                self.dirty.push(wid);
             } else {
                 self.failed_deliveries += 1;
             }
@@ -538,6 +762,7 @@ impl SimCluster {
             let aux = self.usage_for(&alloc.request.image);
             let pull = self.pull_wait(alloc.worker, &alloc.request.image, now);
             if let Some(pos) = self.worker_pos(alloc.worker) {
+                self.catch_up(pos, now);
                 self.workers[pos].start_pe_full(
                     alloc.request.image.clone(),
                     local_demand,
@@ -545,6 +770,7 @@ impl SimCluster {
                     now,
                     pull,
                 );
+                self.dirty.push(alloc.worker);
             } else {
                 // Worker vanished (scale-down race): requeue per §V-B2.
                 self.irm.requeue_failed(alloc.request);
@@ -590,7 +816,26 @@ impl SimCluster {
                 self.worker_capacity.remove(&wid);
                 self.master.registry_mut().remove(wid);
                 self.release_slot(wid);
+                self.wheel_forget(wid);
             }
+        }
+
+        // Re-arm the deadline of every worker touched this step (ticked,
+        // delivered to, or given a container): its next due time moved.
+        if self.cfg.event_core == EventCore::Wheel {
+            self.dirty.sort_unstable();
+            self.dirty.dedup();
+            let mut dirty = std::mem::take(&mut self.dirty);
+            for wid in dirty.drain(..) {
+                if let Some(pos) = self.worker_pos(wid) {
+                    let due = self.workers[pos].next_due(now);
+                    self.wheel_rearm(wid, due);
+                }
+            }
+            self.dirty = dirty;
+        } else {
+            self.forced_due.clear();
+            self.dirty.clear();
         }
 
         // --- 6. Sample the figure series. ---
@@ -658,13 +903,14 @@ impl SimCluster {
     }
 
     fn sample(&mut self, now: Millis) {
-        // Per-slot series names are formatted once per slot lifetime.
+        // Per-slot series names are formatted (and interned) once per
+        // slot lifetime; every later sample records through the ids.
         while self.slot_series.len() < self.used_slots.len() {
             let slot = self.slot_series.len();
             self.slot_series.push(SlotSeries {
-                measured: format!("w{slot}.measured"),
-                scheduled: format!("w{slot}.scheduled"),
-                error_pp: format!("w{slot}.error_pp"),
+                measured: self.recorder.series_id(&format!("w{slot}.measured")),
+                scheduled: self.recorder.series_id(&format!("w{slot}.scheduled")),
+                error_pp: self.recorder.series_id(&format!("w{slot}.error_pp")),
             });
         }
         // Per-slot measured + scheduled CPU (absent workers sample 0 —
@@ -694,11 +940,11 @@ impl SimCluster {
                 }
                 _ => (0.0, 0.0),
             };
-            let names = &self.slot_series[slot];
-            self.recorder.record(&names.measured, now, measured);
-            self.recorder.record(&names.scheduled, now, scheduled);
+            let ids = &self.slot_series[slot];
+            self.recorder.record_id(ids.measured, now, measured);
+            self.recorder.record_id(ids.scheduled, now, scheduled);
             self.recorder
-                .record(&names.error_pp, now, (scheduled - measured) * 100.0);
+                .record_id(ids.error_pp, now, (scheduled - measured) * 100.0);
         }
         // Worst per-worker RAM overcommit (percentage points of the
         // reference VM): how far the *actual placement* exceeds the
@@ -711,8 +957,10 @@ impl SimCluster {
         if !self.cfg.irm.image_resources.is_empty() {
             let ram_overcommit = self
                 .worst_ram_overcommit(|p| self.irm.resource_estimate(&p.image).get(Resource::Ram));
-            self.recorder
-                .record("ram.overcommit_pp", now, ram_overcommit * 100.0);
+            let id = *self
+                .ram_overcommit
+                .get_or_insert_with(|| self.recorder.series_id("ram.overcommit_pp"));
+            self.recorder.record_id(id, now, ram_overcommit * 100.0);
         }
         // The same aggregation at ground-truth sizes: the *committed*
         // footprint — what the hosted (non-stopping) PEs pin whenever
@@ -725,8 +973,10 @@ impl SimCluster {
         if !self.cfg.image_resource_usage.is_empty() {
             let actual_overcommit =
                 self.worst_ram_overcommit(|p| p.busy_aux.get(Resource::Ram));
-            self.recorder
-                .record("ram.overcommit_actual_pp", now, actual_overcommit * 100.0);
+            let id = *self
+                .ram_overcommit_actual
+                .get_or_insert_with(|| self.recorder.series_id("ram.overcommit_actual_pp"));
+            self.recorder.record_id(id, now, actual_overcommit * 100.0);
         }
         // Live profiler estimates per prior-carrying image — the
         // convergence series the A6 ablation reads (`profile.<image>.<dim>`
@@ -734,69 +984,85 @@ impl SimCluster {
         for ps in &self.profile_series {
             let est = self.irm.resource_estimate(&ps.image);
             self.recorder
-                .record(&ps.dims[0], now, est.get(Resource::Cpu));
+                .record_id(ps.dims[0], now, est.get(Resource::Cpu));
             self.recorder
-                .record(&ps.dims[1], now, est.get(Resource::Ram));
+                .record_id(ps.dims[1], now, est.get(Resource::Ram));
             self.recorder
-                .record(&ps.dims[2], now, est.get(Resource::Net));
+                .record_id(ps.dims[2], now, est.get(Resource::Net));
         }
+        let fixed = &self.fixed_series;
         self.recorder
-            .record("queue.len", now, self.master.backlog_len() as f64);
+            .record_id(fixed.queue_len, now, self.master.backlog_len() as f64);
         self.recorder
-            .record("workers.current", now, self.workers.len() as f64);
+            .record_id(fixed.workers_current, now, self.workers.len() as f64);
         self.recorder
-            .record("workers.target", now, self.irm.last_target() as f64);
+            .record_id(fixed.workers_target, now, self.irm.last_target() as f64);
         let active_bins = self
             .workers
             .iter()
             .filter(|w| w.pe_count() > 0)
             .count();
         self.recorder
-            .record("bins.active", now, active_bins as f64);
+            .record_id(fixed.bins_active, now, active_bins as f64);
         self.recorder
-            .record("cloud.rejected", now, self.cloud.rejected_requests as f64);
+            .record_id(fixed.cloud_rejected, now, self.cloud.rejected_requests as f64);
         // Running spend (the cost-aware ablation's headline series; the
         // ledger is monotone non-decreasing by construction), with the
         // spot share and the provider-reclaim count alongside (the A7
         // spot ablation's series).
         self.recorder
-            .record("cloud.cost_usd", now, self.cloud.cost_usd());
+            .record_id(fixed.cloud_cost_usd, now, self.cloud.cost_usd());
         self.recorder
-            .record("cloud.spot_cost_usd", now, self.cloud.spot_cost_usd());
+            .record_id(fixed.cloud_spot_cost_usd, now, self.cloud.spot_cost_usd());
         self.recorder
-            .record("cloud.preemptions", now, self.cloud.preemptions as f64);
+            .record_id(fixed.cloud_preemptions, now, self.cloud.preemptions as f64);
         // Region-scale resilience series (the A8 zone-failure ablation):
         // correlated-preemption count, work re-done after failures, and
         // preempted re-hosting requests the queue had to give up on.
-        self.recorder.record(
-            "cloud.zone_preemptions",
+        self.recorder.record_id(
+            fixed.cloud_zone_preemptions,
             now,
             self.cloud.zone_preemptions as f64,
         );
         self.recorder
-            .record("sim.rework_s", now, self.rework_ms as f64 / 1000.0);
-        self.recorder.record(
-            "irm.requeue_dropped",
+            .record_id(fixed.rework_s, now, self.rework_ms as f64 / 1000.0);
+        self.recorder.record_id(
+            fixed.requeue_dropped,
             now,
             self.irm.dropped_preempted() as f64,
         );
-        self.recorder.record(
-            "completions",
+        self.recorder.record_id(
+            fixed.completions,
             now,
             self.completions.len() as f64,
         );
         // Sharded-plane series (A9): per-shard queue depth and worker
         // slice size, plus the rebalancer's migration count — recorded
-        // only when the sharded coordinator is actually running.
-        if let Some(sharded) = self.irm.sharded() {
-            for (i, [queue_name, workers_name]) in self.shard_series.iter().enumerate() {
+        // (and the ids interned, on first sight) only when the sharded
+        // coordinator is actually running.
+        if self.irm.sharded().is_some() && self.shard_series.is_none() {
+            let per_shard = (0..self.cfg.irm.sharding.shards)
+                .map(|i| {
+                    [
+                        self.recorder.series_id(&format!("shard{i}.queue")),
+                        self.recorder.series_id(&format!("shard{i}.workers")),
+                    ]
+                })
+                .collect();
+            let migrations = self.recorder.series_id("shard.migrations");
+            self.shard_series = Some((per_shard, migrations));
+        }
+        if let (Some(sharded), Some((per_shard, migrations))) =
+            (self.irm.sharded(), self.shard_series.as_ref())
+        {
+            for (i, [queue_id, workers_id]) in per_shard.iter().enumerate() {
                 self.recorder
-                    .record(queue_name, now, sharded.shard_queue_len(i) as f64);
+                    .record_id(*queue_id, now, sharded.shard_queue_len(i) as f64);
                 self.recorder
-                    .record(workers_name, now, sharded.shard_worker_count(i) as f64);
+                    .record_id(*workers_id, now, sharded.shard_worker_count(i) as f64);
             }
             self.recorder
-                .record("shard.migrations", now, sharded.migrations() as f64);
+                .record_id(*migrations, now, sharded.migrations() as f64);
         }
     }
 
@@ -845,6 +1111,7 @@ impl SimCluster {
         self.worker_capacity.remove(&id);
         self.master.registry_mut().remove(id);
         self.release_slot(id);
+        self.wheel_forget(id);
         true
     }
 
@@ -1458,6 +1725,62 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// Tentpole pin: the timer-wheel event core replays the legacy
+    /// full-fleet scan byte for byte — same recorder CSV, same completion
+    /// log, same ledger and telemetry — on a workload that crosses every
+    /// skip path: container boots, idle timeouts, scale-downs, an
+    /// idle gap (stale workers caught up by a later burst's deliveries)
+    /// and a mid-run worker kill between ticks.
+    #[test]
+    fn wheel_core_matches_scan_core_byte_for_byte() {
+        let run = |core: EventCore| {
+            let mut c = fast_cluster(4);
+            c.cfg.event_core = core;
+            c.cfg.worker.checkpoint_period = Millis::from_secs(1);
+            burst(&mut c, 30, Millis(0), Millis::from_secs(8));
+            burst(&mut c, 10, Millis::from_secs(60), Millis::from_secs(4));
+            c.run_until(Millis::from_secs(40));
+            if let Some(id) = c.workers().first().map(|w| w.id) {
+                c.fail_worker(id);
+            }
+            c.run_until(Millis::from_secs(200));
+            (
+                c.recorder.to_csv(),
+                format!("{:?}", c.completions),
+                format!("{:.12}", c.cloud.cost_usd()),
+                c.rework_ms,
+                c.failed_deliveries,
+                c.sched_critical_work,
+                c.sched_pack_work,
+            )
+        };
+        let scan = run(EventCore::Scan);
+        let wheel = run(EventCore::Wheel);
+        assert_eq!(scan.0, wheel.0, "recorder CSV must be byte-identical");
+        assert_eq!(scan, wheel, "every ledger and log must match the scan oracle");
+    }
+
+    /// The wheel core also replays the scan under measurement noise
+    /// (noisy workers are due every tick, so nothing is ever skipped —
+    /// the rng streams must stay aligned).
+    #[test]
+    fn wheel_core_matches_scan_core_under_measurement_noise() {
+        let run = |core: EventCore| {
+            let mut c = fast_cluster(3);
+            c.cfg.event_core = core;
+            c.cfg.worker.measure_noise_std = 0.02;
+            burst(&mut c, 20, Millis(0), Millis::from_secs(6));
+            c.run_until(Millis::from_secs(120));
+            (c.recorder.to_csv(), c.completions.len())
+        };
+        assert_eq!(run(EventCore::Scan), run(EventCore::Wheel));
+    }
+
+    #[test]
+    fn wheel_is_the_default_event_core() {
+        assert_eq!(ClusterConfig::default().event_core, EventCore::Wheel);
     }
 
     #[test]

@@ -11,11 +11,15 @@
 
 pub mod cluster;
 pub mod event;
+pub mod wheel;
 
 use crate::clock::{Clock, SimClock};
 use crate::types::Millis;
 
-pub use cluster::{Arrival, ClusterConfig, Completion, SimCluster};
+pub use cluster::{
+    default_event_core, set_default_event_core, Arrival, ClusterConfig, Completion, EventCore,
+    SimCluster,
+};
 pub use event::EventQueue;
 
 /// Anything that participates in the fixed-step simulation.

@@ -1,0 +1,502 @@
+//! Hierarchical timer wheel backing the event-driven simulator core.
+//!
+//! The per-tick full-fleet scan in [`cluster`](super::cluster) asks every
+//! worker "anything due?" every `dt`. This wheel inverts that: components
+//! register a deadline (`schedule`) and each [`advance`](TimerWheel::advance)
+//! returns exactly the keys whose deadline has been reached, so a tick
+//! touches only due workers. See `rust/src/sim/README.md` for how the
+//! cluster layers skip-correctness on top.
+//!
+//! Design points:
+//!
+//! * **Raw-millisecond deadlines, no grid assumption.** Entries store the
+//!   exact `Millis` they were scheduled for and fire on the first
+//!   `advance(now)` with `at <= now` — the same "first observation at or
+//!   after the deadline" semantics a poll-every-tick loop has, for *any*
+//!   monotone sequence of tick times. The wheel's slot granularity is only
+//!   a bucketing optimisation; entries that land in the in-progress granule
+//!   but are not yet ripe wait in `pending_current` and are re-checked on
+//!   each advance.
+//! * **Hierarchy.** `LEVELS` wheels of `SLOTS` slots; level `l` buckets
+//!   `SLOTS^l` granules per slot. `advance` drains, per level, only the
+//!   slots whose window boundary was crossed (capped at `SLOTS`), so a
+//!   time jump of any size costs O(`SLOTS`·`LEVELS`) slot visits, and the
+//!   common one-granule step costs O(1). Deadlines past the top level wait
+//!   in an overflow list that is re-examined on top-level window crossings.
+//! * **Arena storage.** Entries live in a `Vec` with an explicit free list;
+//!   slots hold `(index, generation)` pairs. Cancelling marks the entry
+//!   dead in place (stale slot refs are skipped on drain via the
+//!   generation check), and every internal `Vec` is drained by swap, so a
+//!   warmed-up wheel schedules, cancels and fires without allocating.
+//! * **Ordering.** `advance` reports due keys in an unspecified order;
+//!   callers that need a deterministic dispatch order (the cluster does)
+//!   sort the returned batch. Within one `advance` the set — not the
+//!   order — is the contract.
+
+// pallas-lint: allow-file(P2, arena indices come from the wheel's own free list and are generation-checked on every access; slot indices are masked to SLOTS)
+
+use crate::types::Millis;
+
+/// Slots per level. A power of two so slot selection is a mask.
+const SLOTS: u64 = 64;
+/// Number of hierarchical levels; deadlines beyond `SLOTS^LEVELS` granules
+/// out sit in the overflow list until the horizon rotates near them.
+const LEVELS: usize = 4;
+const SLOT_BITS: u32 = 6;
+
+/// Handle for a scheduled entry, returned by [`TimerWheel::schedule`].
+/// Cancelling with a stale handle (the entry already fired, was cancelled,
+/// or its arena slot was reused) is a no-op.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Handle {
+    idx: u32,
+    gen: u32,
+}
+
+/// Where an alive entry currently lives (drives O(1) cancel bookkeeping).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Home {
+    /// In a level slot or the overflow list (counted in `in_levels`).
+    Wheel,
+    /// In `ripe` or `pending_current` (processed on every advance).
+    Near,
+    /// Dead: cancelled or fired; awaiting reuse via the free list.
+    Free,
+}
+
+#[derive(Clone, Debug)]
+struct Entry<K> {
+    key: K,
+    at: Millis,
+    gen: u32,
+    home: Home,
+}
+
+/// A hierarchical timer wheel over copyable keys. See the module docs.
+#[derive(Clone, Debug)]
+pub struct TimerWheel<K> {
+    granularity: Millis,
+    /// Time of the most recent `advance` (deadlines at or before it have
+    /// fired or sit in `ripe`).
+    now: Millis,
+    /// `now` in granules (`now.0 / granularity.0`).
+    cur: u64,
+    arena: Vec<Entry<K>>,
+    free: Vec<u32>,
+    /// `levels[l][slot]` holds `(idx, gen)` refs.
+    levels: Vec<Vec<Vec<(u32, u32)>>>,
+    overflow: Vec<(u32, u32)>,
+    /// Scheduled at or before the then-current `now`: due on the next advance.
+    ripe: Vec<(u32, u32)>,
+    /// In the current granule but `at > now`: re-checked each advance.
+    pending_current: Vec<(u32, u32)>,
+    /// Alive entries in `levels`/`overflow` (fast-path jump when zero).
+    in_levels: usize,
+    alive: usize,
+    /// Drain scratch, kept to reuse capacity.
+    scratch: Vec<(u32, u32)>,
+    /// Re-placement scratch for entries drained during rotation.
+    replace: Vec<(u32, u32)>,
+}
+
+impl<K: Copy> TimerWheel<K> {
+    pub fn new(granularity: Millis) -> Self {
+        assert!(granularity.0 > 0, "granularity must be positive");
+        TimerWheel {
+            granularity,
+            now: Millis::ZERO,
+            cur: 0,
+            arena: Vec::new(),
+            free: Vec::new(),
+            levels: (0..LEVELS)
+                .map(|_| (0..SLOTS).map(|_| Vec::new()).collect())
+                .collect(),
+            overflow: Vec::new(),
+            ripe: Vec::new(),
+            pending_current: Vec::new(),
+            in_levels: 0,
+            alive: 0,
+            scratch: Vec::new(),
+            replace: Vec::new(),
+        }
+    }
+
+    /// Time of the most recent `advance`.
+    pub fn now(&self) -> Millis {
+        self.now
+    }
+
+    /// Number of scheduled (not yet fired or cancelled) entries.
+    pub fn len(&self) -> usize {
+        self.alive
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.alive == 0
+    }
+
+    /// Schedule `key` to fire at the first `advance(now)` with `at <= now`.
+    /// Deadlines at or before the current time fire on the very next
+    /// advance. Scheduling the same key twice yields two entries; cancel
+    /// the old handle first to replace a deadline.
+    pub fn schedule(&mut self, key: K, at: Millis) -> Handle {
+        let idx = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                let i = self.arena.len();
+                assert!(i < u32::MAX as usize, "timer wheel arena exhausted");
+                self.arena.push(Entry {
+                    key,
+                    at,
+                    gen: 0,
+                    home: Home::Free,
+                });
+                i as u32
+            }
+        };
+        let e = &mut self.arena[idx as usize];
+        e.key = key;
+        e.at = at;
+        e.gen = e.gen.wrapping_add(1);
+        let gen = e.gen;
+        self.alive += 1;
+        self.place(idx, gen, at);
+        Handle { idx, gen }
+    }
+
+    /// Cancel a scheduled entry. No-op for stale handles.
+    pub fn cancel(&mut self, h: Handle) {
+        let Some(e) = self.arena.get_mut(h.idx as usize) else {
+            return;
+        };
+        if e.gen != h.gen || e.home == Home::Free {
+            return;
+        }
+        if e.home == Home::Wheel {
+            self.in_levels -= 1;
+        }
+        e.home = Home::Free;
+        self.alive -= 1;
+        self.free.push(h.idx);
+    }
+
+    /// Route an alive entry to ripe / pending_current / a level slot /
+    /// overflow, based on its deadline relative to `self.now`/`self.cur`.
+    fn place(&mut self, idx: u32, gen: u32, at: Millis) {
+        if at <= self.now {
+            self.arena[idx as usize].home = Home::Near;
+            self.ripe.push((idx, gen));
+            return;
+        }
+        let tick = at.0 / self.granularity.0;
+        if tick <= self.cur {
+            self.arena[idx as usize].home = Home::Near;
+            self.pending_current.push((idx, gen));
+            return;
+        }
+        self.arena[idx as usize].home = Home::Wheel;
+        self.in_levels += 1;
+        let delta = tick - self.cur;
+        let mut span = SLOTS;
+        for level in 0..LEVELS {
+            if delta < span {
+                let slot = ((tick >> (SLOT_BITS * level as u32)) & (SLOTS - 1)) as usize;
+                self.levels[level][slot].push((idx, gen));
+                return;
+            }
+            span <<= SLOT_BITS;
+        }
+        self.overflow.push((idx, gen));
+    }
+
+    /// Advance to `now` (monotone), clearing `due` and filling it with
+    /// every key whose deadline `at <= now` has been reached. Order within
+    /// the batch is unspecified — sort if dispatch order matters.
+    pub fn advance(&mut self, now: Millis, due: &mut Vec<K>) {
+        debug_assert!(now >= self.now, "wheel time must be monotone");
+        due.clear();
+        let new_cur = now.0 / self.granularity.0;
+
+        if self.in_levels > 0 && new_cur > self.cur {
+            // Per level, drain the slots whose windows were entered or
+            // passed by this jump (at most all SLOTS of them), collect the
+            // live entries, then re-place them against the new time. An
+            // entry whose window merely *started* is re-placed at a lower
+            // level (or pending/ripe), so precision is never lost.
+            debug_assert!(self.replace.is_empty());
+            for level in 0..LEVELS {
+                let shift = SLOT_BITS * level as u32;
+                let old_w = self.cur >> shift;
+                let new_w = new_cur >> shift;
+                if new_w == old_w {
+                    // Windows at coarser levels contain this one: no
+                    // boundary crossed anywhere above either.
+                    break;
+                }
+                let crossings = (new_w - old_w).min(SLOTS);
+                for i in 0..crossings {
+                    let slot = ((new_w - i) & (SLOTS - 1)) as usize;
+                    self.drain_slot_into_replace(level, slot);
+                }
+            }
+            if (new_cur >> (SLOT_BITS * LEVELS as u32)) > (self.cur >> (SLOT_BITS * LEVELS as u32))
+            {
+                // Top-level window crossed: part of the overflow horizon
+                // may now be representable in the hierarchy.
+                let mut batch = std::mem::take(&mut self.scratch);
+                std::mem::swap(&mut self.overflow, &mut batch);
+                for (idx, gen) in batch.drain(..) {
+                    if self.is_live(idx, gen) {
+                        self.in_levels -= 1;
+                        self.replace.push((idx, gen));
+                    }
+                }
+                self.scratch = batch;
+            }
+            self.cur = new_cur;
+            self.now = now;
+            let mut batch = std::mem::take(&mut self.replace);
+            for (idx, gen) in batch.drain(..) {
+                let at = self.arena[idx as usize].at;
+                self.place(idx, gen, at);
+            }
+            self.replace = batch;
+        } else {
+            self.cur = new_cur;
+            self.now = now;
+        }
+
+        // Fire ripe entries (scheduled at/before an already-passed time).
+        let mut batch = std::mem::take(&mut self.scratch);
+        std::mem::swap(&mut self.ripe, &mut batch);
+        for (idx, gen) in batch.drain(..) {
+            if self.is_live(idx, gen) {
+                self.fire(idx, due);
+            }
+        }
+
+        // Re-check current-granule entries against the new time.
+        std::mem::swap(&mut self.pending_current, &mut batch);
+        for (idx, gen) in batch.drain(..) {
+            if !self.is_live(idx, gen) {
+                continue;
+            }
+            if self.arena[idx as usize].at <= now {
+                self.fire(idx, due);
+            } else {
+                self.pending_current.push((idx, gen));
+            }
+        }
+        self.scratch = batch;
+    }
+
+    fn drain_slot_into_replace(&mut self, level: usize, slot: usize) {
+        if self.levels[level][slot].is_empty() {
+            return;
+        }
+        let mut batch = std::mem::take(&mut self.scratch);
+        std::mem::swap(&mut self.levels[level][slot], &mut batch);
+        for (idx, gen) in batch.drain(..) {
+            if self.is_live(idx, gen) {
+                self.in_levels -= 1;
+                self.replace.push((idx, gen));
+            }
+        }
+        self.scratch = batch;
+    }
+
+    fn is_live(&self, idx: u32, gen: u32) -> bool {
+        self.arena
+            .get(idx as usize)
+            .map(|e| e.gen == gen && e.home != Home::Free)
+            .unwrap_or(false)
+    }
+
+    fn fire(&mut self, idx: u32, due: &mut Vec<K>) {
+        let e = &mut self.arena[idx as usize];
+        e.home = Home::Free;
+        due.push(e.key);
+        self.alive -= 1;
+        self.free.push(idx);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn fires_on_first_advance_at_or_after_deadline() {
+        let mut w: TimerWheel<u64> = TimerWheel::new(Millis(100));
+        w.schedule(1, Millis(250));
+        let mut due = Vec::new();
+        w.advance(Millis(100), &mut due);
+        assert!(due.is_empty());
+        w.advance(Millis(200), &mut due);
+        assert!(due.is_empty(), "250 not reached at 200");
+        w.advance(Millis(300), &mut due);
+        assert_eq!(due, vec![1]);
+        w.advance(Millis(400), &mut due);
+        assert!(due.is_empty(), "fires exactly once");
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn non_grid_ticks_preserve_poll_semantics() {
+        // Deadline 250 observed at 249 then 251: must fire at 251 even
+        // though both observations are in the same 100 ms granule.
+        let mut w: TimerWheel<u64> = TimerWheel::new(Millis(100));
+        w.schedule(7, Millis(250));
+        let mut due = Vec::new();
+        w.advance(Millis(249), &mut due);
+        assert!(due.is_empty());
+        w.advance(Millis(251), &mut due);
+        assert_eq!(due, vec![7]);
+    }
+
+    #[test]
+    fn past_deadlines_fire_on_next_advance() {
+        let mut w: TimerWheel<u64> = TimerWheel::new(Millis(100));
+        let mut due = Vec::new();
+        w.advance(Millis(1000), &mut due);
+        w.schedule(3, Millis(500)); // already past
+        w.schedule(4, Millis(1000)); // exactly now
+        w.advance(Millis(1000), &mut due);
+        let mut got = due.clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![3, 4]);
+    }
+
+    #[test]
+    fn cancel_suppresses_and_stale_handles_are_noops() {
+        let mut w: TimerWheel<u64> = TimerWheel::new(Millis(100));
+        let h = w.schedule(1, Millis(500));
+        w.cancel(h);
+        assert!(w.is_empty());
+        let mut due = Vec::new();
+        w.advance(Millis(1000), &mut due);
+        assert!(due.is_empty());
+        // The arena slot is reused; the old handle must not kill the new entry.
+        let h2 = w.schedule(2, Millis(2000));
+        w.cancel(h); // stale
+        assert_eq!(w.len(), 1);
+        w.advance(Millis(2000), &mut due);
+        assert_eq!(due, vec![2]);
+        w.cancel(h2); // already fired: no-op
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn cascades_across_all_levels_and_overflow() {
+        let g = 100u64;
+        let mut w: TimerWheel<u64> = TimerWheel::new(Millis(g));
+        // One deadline per level plus one beyond the 64^4-granule horizon.
+        let deadlines: Vec<(u64, u64)> = vec![
+            (0, 3 * g),              // level 0
+            (1, 70 * g),             // level 1
+            (2, 5000 * g),           // level 2
+            (3, 300_000 * g),        // level 3
+            (4, (SLOTS.pow(4) + 5) * g), // overflow
+        ];
+        for (k, at) in &deadlines {
+            w.schedule(*k, Millis(*at));
+        }
+        // Jump in coarse steps; each key must fire on the first advance at
+        // or after its deadline, never before, never twice.
+        let step = 40_000 * g;
+        let mut due = Vec::new();
+        let mut fired: BTreeMap<u64, u64> = BTreeMap::new();
+        let mut t = 0u64;
+        while t <= (SLOTS.pow(4) + 40_000) * g {
+            w.advance(Millis(t), &mut due);
+            for k in &due {
+                assert!(fired.insert(*k, t).is_none(), "key {k} fired twice");
+            }
+            t += step;
+        }
+        assert!(w.is_empty());
+        for (k, at) in &deadlines {
+            let fire_t = fired.get(k).copied().expect("all keys fire");
+            assert!(fire_t >= *at, "key {k} fired early: {fire_t} < {at}");
+            assert!(fire_t - at < step, "key {k} fired late: {fire_t} vs {at}");
+        }
+    }
+
+    #[test]
+    fn matches_naive_oracle_under_random_load() {
+        let mut rng = Rng::seeded(42);
+        let mut w: TimerWheel<u64> = TimerWheel::new(Millis(100));
+        // Oracle entry: key -> (deadline, alive).
+        let mut oracle: BTreeMap<u64, (u64, bool)> = BTreeMap::new();
+        let mut handles: BTreeMap<u64, Handle> = BTreeMap::new();
+        let mut next_key = 0u64;
+        let mut now = 0u64;
+        let mut due = Vec::new();
+        for _ in 0..3000 {
+            // Random walk: mostly small steps, occasional long jumps.
+            now += if rng.below(20) == 0 {
+                rng.range(1000, 5_000_000)
+            } else {
+                rng.range(1, 250)
+            };
+            for _ in 0..rng.below(4) {
+                let at = now + rng.below(3_000_000);
+                let h = w.schedule(next_key, Millis(at));
+                oracle.insert(next_key, (at, true));
+                handles.insert(next_key, h);
+                next_key += 1;
+            }
+            // Occasionally cancel a random pending entry.
+            if rng.below(3) == 0 {
+                let pending: Vec<u64> = oracle
+                    .iter()
+                    .filter(|(_, (_, alive))| *alive)
+                    .map(|(k, _)| *k)
+                    .collect();
+                if !pending.is_empty() {
+                    let k = *rng.choose(&pending);
+                    if let Some(h) = handles.get(&k) {
+                        w.cancel(*h);
+                    }
+                    oracle.insert(k, (0, false));
+                }
+            }
+            w.advance(Millis(now), &mut due);
+            let mut got = due.clone();
+            got.sort_unstable();
+            let expect: Vec<u64> = oracle
+                .iter()
+                .filter(|(_, (at, alive))| *alive && *at <= now)
+                .map(|(k, _)| *k)
+                .collect();
+            for k in &expect {
+                oracle.insert(*k, (0, false));
+            }
+            assert_eq!(got, expect, "divergence at now={now}");
+        }
+        assert_eq!(
+            w.len(),
+            oracle.values().filter(|(_, alive)| *alive).count()
+        );
+    }
+
+    #[test]
+    fn empty_wheel_jumps_in_constant_time() {
+        let mut w: TimerWheel<u64> = TimerWheel::new(Millis(1));
+        let mut due = Vec::new();
+        // A walk this long is only feasible via the empty fast path.
+        w.advance(Millis(u64::MAX / 2), &mut due);
+        assert!(due.is_empty());
+        w.schedule(1, Millis(u64::MAX / 2 + 10));
+        w.advance(Millis(u64::MAX / 2 + 10), &mut due);
+        assert_eq!(due, vec![1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_granularity_panics() {
+        let _ = TimerWheel::<u64>::new(Millis(0));
+    }
+}

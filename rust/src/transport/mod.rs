@@ -132,6 +132,7 @@ impl Server {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         listener.set_nonblocking(true)?;
+        // pallas-lint: allow(D2, live TCP accept loop — real sockets, off the sim path)
         let accept_thread = std::thread::spawn(move || {
             let mut conn_threads = Vec::new();
             while !stop2.load(Ordering::SeqCst) {
@@ -144,6 +145,7 @@ impl Server {
                             stream.set_read_timeout(Some(std::time::Duration::from_millis(200)));
                         let handler = handler.clone();
                         let stop3 = stop2.clone();
+                        // pallas-lint: allow(D2, per-connection live handler thread — off the sim path)
                         conn_threads.push(std::thread::spawn(move || {
                             while !stop3.load(Ordering::SeqCst) {
                                 match recv_frame_timeout(&mut stream) {

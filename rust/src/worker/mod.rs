@@ -261,6 +261,50 @@ impl Worker {
             .fold(CpuFraction::ZERO, |acc, p| acc + p.demand())
     }
 
+    /// Time of the last `tick` observation (`None` before the first tick).
+    pub fn last_tick(&self) -> Option<Millis> {
+        self.last_tick
+    }
+
+    /// Earliest future time at which ticking this worker can change its
+    /// state or emit an event — the wheel deadline under which skipping
+    /// intermediate ticks is provably equivalent to taking them (see
+    /// `rust/src/sim/README.md` for the full argument). Two cases pin the
+    /// worker to every tick: a busy PE (per-tick progress applies
+    /// `round(dt·factor).max(1 ms)`, which is nonlinear in `dt`) and
+    /// per-tick measurement noise (one rng draw per observation, so the
+    /// stream length depends on the tick count). Everything else — boot
+    /// completions, idle timeouts, stop latencies, the report cadence — is
+    /// a pure deadline. The report timer always supplies one, so an idle
+    /// worker is observed at least once per report interval.
+    pub fn next_due(&self, now: Millis) -> Millis {
+        let every_tick = now + Millis(1);
+        if self.cfg.measure_noise_std > 0.0
+            || self
+                .pes
+                .iter()
+                .any(|p| matches!(p.phase, PePhase::Busy { .. }))
+        {
+            return every_tick;
+        }
+        let mut due = match self.report_timer.next_fire() {
+            Some(t) => t,
+            // Never ticked: anything due immediately.
+            None => return every_tick,
+        };
+        let timeout = self.cfg.container_idle_timeout;
+        for p in &self.pes {
+            let t = match p.phase {
+                PePhase::Booting { ready_at } => ready_at,
+                PePhase::Idle { since } if timeout.0 > 0 => since + timeout,
+                PePhase::Stopping { until } => until,
+                _ => continue,
+            };
+            due = due.min(t);
+        }
+        due.max(every_tick)
+    }
+
     /// Advance the worker by one step ending at `now`.
     pub fn tick(&mut self, now: Millis) -> Vec<WorkerEvent> {
         let mut events = Vec::new();
@@ -837,6 +881,74 @@ mod tests {
         let a = w0.start_pe(ImageName::new("img"), CpuFraction::new(0.1), Millis(0));
         let b = w1.start_pe(ImageName::new("img"), CpuFraction::new(0.1), Millis(0));
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn next_due_is_the_earliest_state_change() {
+        let mut cfg = quiet_cfg();
+        cfg.container_idle_timeout = Millis(1000);
+        let mut w = Worker::new(WorkerId(0), VmId(0), cfg, 1);
+        let img = ImageName::new("img");
+        let pe = w.start_pe(img.clone(), CpuFraction::new(0.25), Millis(0));
+        w.tick(Millis(0));
+        // Booting PE (ready at 2000) beats the report timer (due 1000)?
+        // No — the report at 1000 is earlier; it wins.
+        assert_eq!(w.next_due(Millis(0)), Millis(1000));
+        run_until(&mut w, Millis(100), Millis(1900), Millis(100));
+        // Next report due 2000, boot also due 2000.
+        assert_eq!(w.next_due(Millis(1900)), Millis(2000));
+        run_until(&mut w, Millis(2000), Millis(2000), Millis(100));
+        // Now idle since 2000: idle timeout at 3000 == report at 3000.
+        assert_eq!(w.next_due(Millis(2000)), Millis(3000));
+        // A busy PE pins the worker to every tick.
+        run_until(&mut w, Millis(2100), Millis(2500), Millis(100));
+        w.deliver(pe, msg(1, 5000), Millis(2500)).unwrap();
+        assert_eq!(w.next_due(Millis(2500)), Millis(2501));
+    }
+
+    #[test]
+    fn next_due_with_measurement_noise_is_every_tick() {
+        let mut cfg = quiet_cfg();
+        cfg.measure_noise_std = 0.01;
+        let mut w = Worker::new(WorkerId(0), VmId(0), cfg, 1);
+        w.tick(Millis(0));
+        assert_eq!(w.next_due(Millis(0)), Millis(1));
+    }
+
+    #[test]
+    fn skipping_to_next_due_matches_per_tick_state() {
+        // The wheel's core contract: for a worker with no busy PEs and no
+        // noise, one catch-up tick at the due time leaves byte-identical
+        // state and events versus ticking every dt.
+        let mut cfg = quiet_cfg();
+        cfg.container_idle_timeout = Millis(1000);
+        let mk = || {
+            let mut w = Worker::new(WorkerId(0), VmId(0), cfg.clone(), 7);
+            w.start_pe(ImageName::new("img"), CpuFraction::new(0.25), Millis(0));
+            w.tick(Millis(0));
+            w
+        };
+        let mut dense = mk();
+        let mut sparse = mk();
+        let mut dense_events = Vec::new();
+        let mut t = Millis(100);
+        while t <= Millis(6000) {
+            dense.tick_into(t, &mut dense_events);
+            t += Millis(100);
+        }
+        let mut sparse_events = Vec::new();
+        let mut now = Millis(0);
+        while now < Millis(6000) {
+            let due = sparse.next_due(now);
+            // Land on the tick grid like the cluster does: first grid
+            // point at or after the deadline.
+            let at = Millis((due.0 + 99) / 100 * 100).min(Millis(6000));
+            sparse.tick_into(at, &mut sparse_events);
+            now = at;
+        }
+        assert_eq!(format!("{dense_events:?}"), format!("{sparse_events:?}"));
+        assert_eq!(dense.pe_count(), sparse.pe_count());
+        assert_eq!(dense.last_total_cpu.value(), sparse.last_total_cpu.value());
     }
 
     #[test]

@@ -1,0 +1,125 @@
+//! Allocation-counting pin for the `SeriesId` interner (PR 9 satellite):
+//! after warm-up the recorder must never re-`format!` or re-intern a
+//! series name — recording through interned ids costs only the amortized
+//! growth of the per-series point vectors, and a warm cluster's tick
+//! loop stays allocation-free at steady state.
+//!
+//! The counting allocator is process-global, so this binary holds a
+//! single test walking both scopes sequentially — a second `#[test]`
+//! would run on a sibling thread and pollute the counters.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use harmonicio::cloud::CloudConfig;
+use harmonicio::metrics::Recorder;
+use harmonicio::sim::{Arrival, ClusterConfig, EventCore, SimCluster};
+use harmonicio::types::{ImageName, Millis};
+use harmonicio::worker::WorkerConfig;
+
+struct CountingAlloc;
+
+/// Heap acquisitions (alloc + realloc); frees are not counted.
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn alloc_calls() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn interned_series_keep_steady_state_allocation_free() {
+    // --- Recorder scope: recording through interned ids never touches
+    // the name map. 30 series × 1000 points costs only the point
+    // vectors' amortized doubling (~7 reallocs per series); rebuilding
+    // names per record (the pre-interner behavior) costs ≥ 1 allocation
+    // per record — 30 000 here — so the bound separates cleanly.
+    let mut rec = Recorder::new();
+    let ids: Vec<_> = (0..30).map(|i| rec.series_id(&format!("s{i}"))).collect();
+    for t in 0..10u64 {
+        for id in &ids {
+            rec.record_id(*id, Millis(t), t as f64);
+        }
+    }
+    let before = alloc_calls();
+    for t in 10..1010u64 {
+        for id in &ids {
+            rec.record_id(*id, Millis(t), t as f64);
+        }
+    }
+    let delta = alloc_calls() - before;
+    assert!(
+        delta < 2_000,
+        "30k interned records cost {delta} allocations — series names are being \
+         rebuilt per record (that regression costs ≥ 30000)"
+    );
+
+    // --- Cluster scope: warm a cluster through a full burst (every slot
+    // and fixed series interned, every reusable tick buffer grown, the
+    // fleet scaled back down), then demand that a long steady-state
+    // window allocates essentially nothing. A format!-per-sample
+    // regression alone costs ≥ 21 allocations per sample (12 fixed + 3
+    // per slot × 3 slots) — ≥ 2100 over the 100-sample window measured
+    // here — so the 1000 bound cannot mask it.
+    let mut cfg = ClusterConfig::default();
+    cfg.event_core = EventCore::Wheel;
+    cfg.cloud = CloudConfig {
+        quota: 3,
+        boot_delay: Millis::from_secs(5),
+        boot_jitter: Millis(1000),
+        ..CloudConfig::default()
+    };
+    cfg.worker = WorkerConfig {
+        container_boot: Millis(2000),
+        container_boot_jitter: Millis(500),
+        container_idle_timeout: Millis::from_secs(5),
+        image_pull: Millis::ZERO,
+        measure_noise_std: 0.0,
+        ..WorkerConfig::default()
+    };
+    let mut c = SimCluster::new(cfg);
+    for _ in 0..30 {
+        c.schedule_arrival(
+            Millis(0),
+            Arrival {
+                image: ImageName::new("img"),
+                payload_bytes: 1 << 20,
+                service_demand: Millis::from_secs(5),
+            },
+        );
+    }
+    c.run_until(Millis::from_secs(240));
+    assert_eq!(c.completions.len(), 30, "warm-up drained the burst");
+    let names_before = c.recorder.names().len();
+    let before = alloc_calls();
+    c.run_until(Millis::from_secs(340));
+    let delta = alloc_calls() - before;
+    assert_eq!(
+        c.recorder.names().len(),
+        names_before,
+        "steady state interned a new series name"
+    );
+    assert!(
+        delta < 1_000,
+        "1000 steady-state ticks cost {delta} allocations — the tick loop or \
+         recorder is allocating per tick/sample again"
+    );
+}

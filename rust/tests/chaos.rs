@@ -20,7 +20,7 @@ use harmonicio::binpacking::Resource;
 use harmonicio::cloud::{CloudConfig, Flavor, Zone};
 use harmonicio::experiments::microscopy;
 use harmonicio::irm::{FlavorOption, ResourceModel, SpotPolicy};
-use harmonicio::sim::{Arrival, ClusterConfig, SimCluster};
+use harmonicio::sim::{Arrival, ClusterConfig, EventCore, SimCluster};
 use harmonicio::types::{ImageName, Millis, WorkerId};
 use harmonicio::util::rng::Rng;
 use harmonicio::worker::WorkerConfig;
@@ -530,6 +530,47 @@ fn deep_repeated_zone_kills_conserve_everything() {
     let makespan = c.run_to_completion(120, Millis::from_secs(6000));
     assert!(makespan.is_some(), "drained despite repeated zone kills");
     assert_eq!(c.completions.len(), 120, "every message completed exactly once");
+}
+
+/// Determinism pin for the wheel event core under correlated chaos: a
+/// whole-zone spot reclaim fires at an instant drawn at construction,
+/// which lands on a wheel-scheduled tick boundary between worker
+/// deadlines (draining workers, requeue bursts and replacement boots
+/// all cross the wheel's skip paths at once). The wheel run must replay
+/// the legacy scan byte for byte — recorder CSV at the kill tick and at
+/// the end, completion log, both ledgers, rework — through the episode.
+#[test]
+fn zone_kill_on_wheel_tick_boundary_matches_scan_core() {
+    let run = |core: EventCore| {
+        let mut c = zoned_cluster(8, 30.0, 3, 0.4);
+        c.cfg.event_core = core;
+        burst(&mut c, 150, 12);
+        let schedule: Vec<Millis> = c.cloud.zone_failures(Zone(0)).to_vec();
+        assert!(!schedule.is_empty(), "the hot zone drew a failure schedule");
+        let first = schedule[0];
+        // Stop exactly one tick past the kill instant, snapshot, then
+        // let the recovery (requeues, replacements) play out.
+        c.run_until(first + Millis(100));
+        let csv_at_kill = c.recorder.to_csv();
+        c.run_until(first + Millis::from_secs(120));
+        (
+            csv_at_kill,
+            c.recorder.to_csv(),
+            format!("{:?}", c.completions),
+            format!("{:.12}", c.cloud.cost_usd()),
+            format!("{:.12}", c.cloud.spot_cost_usd()),
+            c.cloud.zone_preemptions,
+            c.rework_ms,
+            c.accounted_messages(),
+        )
+    };
+    let scan = run(EventCore::Scan);
+    let wheel = run(EventCore::Wheel);
+    assert_eq!(
+        scan.0, wheel.0,
+        "recorder CSV must be byte-identical at the kill tick"
+    );
+    assert_eq!(scan, wheel, "the whole episode must match the scan oracle");
 }
 
 /// Sharded scheduling plane under total shard-slice loss: every worker

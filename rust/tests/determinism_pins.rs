@@ -1,0 +1,151 @@
+//! Determinism pins for the event-wheel simulator core (the PR 9 perf
+//! work). The wheel core and the threaded shard fan-out are pure
+//! performance features with a hard contract: byte-identical output to
+//! the serial scan oracle. These pins enforce the contract at the
+//! coarsest scope available — the full experiment registry at seed 42
+//! and whole-cluster CSV fingerprints — so they double as the
+//! no-toolchain CI fallback for `scripts/bench_check.sh` (which cannot
+//! compare wall-clock numbers without cargo, but a future toolchain run
+//! must find these pins green before trusting any speedup).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use harmonicio::cloud::CloudConfig;
+use harmonicio::experiments;
+use harmonicio::sim::{set_default_event_core, Arrival, ClusterConfig, EventCore, SimCluster};
+use harmonicio::types::{ImageName, Millis};
+use harmonicio::worker::WorkerConfig;
+
+/// Every file under `dir`, repo-relative path → bytes.
+fn dir_contents(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(dir: &Path, base: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        let mut entries: Vec<_> = std::fs::read_dir(dir)
+            .expect("readable output dir")
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                walk(&p, base, out);
+            } else {
+                let rel = p
+                    .strip_prefix(base)
+                    .expect("child of base")
+                    .to_string_lossy()
+                    .into_owned();
+                out.insert(rel, std::fs::read(&p).expect("readable output file"));
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(dir, dir, &mut out);
+    out
+}
+
+/// Tentpole pin: the ENTIRE experiment registry (all 18 drivers, seed 42)
+/// must produce byte-identical outputs — every per-experiment CSV and the
+/// cumulative summary — under the wheel core and the legacy full-fleet
+/// scan. The process-global default is flipped so the registry's internal
+/// config constructors pick the core up without threading a flag through
+/// every driver; both runs happen inside this single test, so no
+/// concurrently running test ever observes the flipped default.
+#[test]
+fn full_experiment_registry_is_byte_identical_wheel_vs_scan() {
+    let base = std::env::temp_dir().join("hio_pins_event_core");
+    let scan_dir = base.join("scan");
+    let wheel_dir = base.join("wheel");
+    for d in [&scan_dir, &wheel_dir] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+
+    set_default_event_core(EventCore::Scan);
+    let scan_reports =
+        experiments::run("all", scan_dir.to_str().expect("utf-8 tmp path"), 42)
+            .expect("scan-core suite runs");
+    set_default_event_core(EventCore::Wheel);
+    let wheel_reports =
+        experiments::run("all", wheel_dir.to_str().expect("utf-8 tmp path"), 42)
+            .expect("wheel-core suite runs");
+
+    let scan_text: Vec<String> = scan_reports.iter().map(|r| r.render()).collect();
+    let wheel_text: Vec<String> = wheel_reports.iter().map(|r| r.render()).collect();
+    assert_eq!(scan_text, wheel_text, "report renders diverge between cores");
+    assert_eq!(scan_reports.len(), 18, "the whole registry ran");
+
+    let scan_files = dir_contents(&scan_dir);
+    let wheel_files = dir_contents(&wheel_dir);
+    let scan_names: Vec<&String> = scan_files.keys().collect();
+    let wheel_names: Vec<&String> = wheel_files.keys().collect();
+    assert_eq!(scan_names, wheel_names, "output file sets diverge between cores");
+    assert!(
+        scan_files.len() >= 10,
+        "the registry wrote its per-experiment outputs ({} files)",
+        scan_files.len()
+    );
+    for (name, bytes) in &scan_files {
+        assert!(
+            wheel_files.get(name) == Some(bytes),
+            "{name} is not byte-identical between the wheel and scan cores"
+        );
+    }
+}
+
+/// Satellite pin: N data-independent shard packing sub-rounds executed on
+/// std threads must be byte-identical to the serial sweep — at whole
+/// cluster scope (recorder CSV, completion count, cost ledger, packing
+/// work counters), not just per-update. Exercised at 4 shards with
+/// serial, even (4) and non-dividing (3) thread counts, multi-stream so
+/// every shard owns work. The event core is pinned explicitly (not via
+/// the process-global, which another test in this binary flips).
+#[test]
+fn parallel_shard_ticks_match_serial_at_cluster_level() {
+    let run = |parallel_workers: usize| {
+        let mut cfg = ClusterConfig::default();
+        cfg.event_core = EventCore::Wheel;
+        cfg.cloud = CloudConfig {
+            quota: 6,
+            boot_delay: Millis::from_secs(5),
+            boot_jitter: Millis(1000),
+            ..CloudConfig::default()
+        };
+        cfg.worker = WorkerConfig {
+            container_boot: Millis(2000),
+            container_boot_jitter: Millis(500),
+            container_idle_timeout: Millis::from_secs(5),
+            image_pull: Millis::ZERO,
+            measure_noise_std: 0.0,
+            ..WorkerConfig::default()
+        };
+        cfg.irm.sharding.shards = 4;
+        cfg.irm.sharding.parallel_workers = parallel_workers;
+        let mut c = SimCluster::new(cfg);
+        for img in ["stream-a", "stream-b", "stream-c", "stream-d", "stream-e"] {
+            for i in 0u64..25 {
+                c.schedule_arrival(
+                    Millis((i % 7) * 1500),
+                    Arrival {
+                        image: ImageName::new(img),
+                        payload_bytes: 1 << 20,
+                        service_demand: Millis::from_secs(6),
+                    },
+                );
+            }
+        }
+        c.run_until(Millis::from_secs(300));
+        (
+            c.recorder.to_csv(),
+            c.completions.len(),
+            format!("{:.12}", c.cloud.cost_usd()),
+            c.sched_critical_work,
+            c.sched_pack_work,
+        )
+    };
+    let serial = run(0);
+    assert!(serial.1 > 0, "the workload actually completed messages");
+    let par4 = run(4);
+    assert_eq!(serial.0, par4.0, "recorder CSV must be byte-identical (4 threads)");
+    assert_eq!(serial, par4);
+    let par3 = run(3);
+    assert_eq!(serial, par3, "non-dividing thread count must merge identically");
+}

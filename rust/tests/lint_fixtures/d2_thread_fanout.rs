@@ -1,0 +1,18 @@
+//@ virtual-path: irm/fanout.rs
+//! D2 also covers OS-thread fan-out: `thread::spawn` / `thread::scope`
+//! entry points outside the live allowlist must pragma the argument for
+//! why the merge order is fixed (nondeterministic interleaving otherwise).
+
+fn par(xs: &mut Vec<u32>) {
+    std::thread::scope(|s| { //~ D2
+        for x in xs.iter_mut() {
+            s.spawn(move || *x += 1);
+        }
+    });
+}
+
+fn ok() {
+    // pallas-lint: allow(D2, single worker joined immediately — merge order is trivial)
+    let h = std::thread::spawn(|| 1u32);
+    let _ = h.join();
+}

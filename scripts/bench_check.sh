@@ -1,22 +1,33 @@
 #!/usr/bin/env bash
-# Perf + hygiene gate: formatting, lints, and the bin-packing benchmark
-# trajectory — scalar Any-Fit naive-vs-indexed, the multi-dimensional
-# (vector) naive-vs-indexed section, the 10^5-10^6 scaling runs, and the
-# profiler-ingest section (the vector telemetry pipeline's control-loop
-# hot path: ResourceProfiler::ingest over a 20-worker fleet's reports).
-# All sections land in the same merged BENCH_binpacking.json artifact, so
-# the perf trajectory has data points for the packer *and* the profiler.
+# Perf + hygiene gate: formatting, lints, and the benchmark trajectory —
+# the bin-packing suite (scalar Any-Fit naive-vs-indexed, the
+# multi-dimensional section, the 10^5-10^6 scaling runs, the
+# profiler-ingest section) plus the end-to-end simulator suite
+# (bench_e2e: full §VI-B run, tick-rate microbenches, and the
+# wheel-vs-scan event-core comparison in PE-ticks/sec).
 # Run from the repo root (where Cargo.toml lives):
 #
 #   ./scripts/bench_check.sh [--quick]
 #
 # --quick shrinks the bench budget (BENCH_MEASURE_MS) for smoke runs.
 #
-# Emits BENCH_binpacking.json at the repo root (copied from
-# results/bench_binpacking.json, which cargo bench writes — the multi-dim
-# section lands in the same merged artifact) so every PR leaves a
-# comparable perf artifact behind. For the fmt+clippy+build+test CI gate
-# without benchmarks, use ./scripts/ci_check.sh.
+# Emits BENCH_binpacking.json and BENCH_e2e.json at the repo root (copied
+# from results/*.json, which cargo bench writes) so every PR leaves
+# comparable perf artifacts behind. Before overwriting BENCH_e2e.json the
+# script diffs the wheel-core PE-ticks/sec number against the committed
+# artifact and FAILS on a >10% regression — that is the CI perf gate for
+# the event-wheel core. For the fmt+clippy+build+test gate without
+# benchmarks, use ./scripts/ci_check.sh.
+#
+# Toolchain-free environments: when cargo is not on PATH this script
+# cannot produce or compare wall-clock numbers, so it exits 0 after
+# pointing at the determinism pins (rust/tests/determinism_pins.rs,
+# rust/tests/alloc_steady_state.rs, and the wheel-vs-scan pins embedded
+# in rust/src/sim/cluster.rs and rust/tests/chaos.rs). Those pins are the
+# no-toolchain fallback: the wheel core is a pure perf feature whose
+# correctness contract is byte-identical output, and a future
+# cargo-equipped run must find them green before trusting any speedup in
+# BENCH_e2e.json.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -24,6 +35,18 @@ cd "$(dirname "$0")/.."
 QUICK=0
 if [[ "${1:-}" == "--quick" ]]; then
     QUICK=1
+fi
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "== cargo not on PATH — benchmarks skipped."
+    echo "   Perf claims fall back to the determinism pins:"
+    echo "     rust/tests/determinism_pins.rs   (full registry, wheel vs scan, seed 42;"
+    echo "                                       parallel shards vs serial at N=4)"
+    echo "     rust/tests/alloc_steady_state.rs (steady-state tick loop allocation-free)"
+    echo "     rust/src/sim/cluster.rs          (embedded wheel-vs-scan churn/noise pins)"
+    echo "     rust/tests/chaos.rs              (zone kill on a wheel tick boundary)"
+    echo "   Run them (cargo test) before trusting any BENCH_e2e.json speedup."
+    exit 0
 fi
 
 echo "== cargo fmt --check"
@@ -46,12 +69,67 @@ if [[ ! -f results/bench_binpacking.json ]]; then
     echo "error: results/bench_binpacking.json missing" >&2
     exit 1
 fi
+
+echo "== cargo bench --bench bench_e2e"
 if [[ "$QUICK" == "1" ]]; then
-    # Quick runs skip the naive baselines and scaling series — don't
-    # overwrite the real perf-trajectory artifact with a degraded set.
-    cp results/bench_binpacking.json BENCH_binpacking.quick.json
-    echo "== wrote BENCH_binpacking.quick.json (quick run; BENCH_binpacking.json untouched)"
+    BENCH_QUICK=1 BENCH_WARMUP_MS=20 BENCH_MEASURE_MS=100 \
+        cargo bench --bench bench_e2e
 else
+    cargo bench --bench bench_e2e
+fi
+
+if [[ ! -f results/bench_e2e.json ]]; then
+    echo "error: results/bench_e2e.json missing" >&2
+    exit 1
+fi
+
+# Pull items_per_sec for one bench name out of a Bencher JSON artifact
+# (one result object per line; names are [a-z0-9/_-], no escaping).
+items_per_sec() { # <file> <bench-name>
+    grep -o "\"name\": \"$2\"[^}]*" "$1" |
+        grep -o '"items_per_sec": [0-9.]*' |
+        awk '{print $2}' |
+        head -n 1
+}
+
+WHEEL_KEY="sim/pe_ticks_per_sec_wheel"
+SCAN_KEY="sim/pe_ticks_per_sec_scan"
+new_wheel="$(items_per_sec results/bench_e2e.json "$WHEEL_KEY" || true)"
+new_scan="$(items_per_sec results/bench_e2e.json "$SCAN_KEY" || true)"
+if [[ -z "$new_wheel" ]]; then
+    echo "error: $WHEEL_KEY missing from results/bench_e2e.json" >&2
+    exit 1
+fi
+echo "== event-core comparison: wheel=${new_wheel} PE-ticks/s, scan=${new_scan:-n/a} PE-ticks/s"
+if awk -v w="$new_wheel" 'BEGIN { exit !(w + 0 < 1.0e6) }'; then
+    echo "warning: wheel core below the 10^6 PE-ticks/sec target on this machine" >&2
+fi
+
+if [[ "$QUICK" == "1" ]]; then
+    # Quick runs use a degraded budget — don't overwrite or diff the real
+    # perf-trajectory artifacts.
+    cp results/bench_binpacking.json BENCH_binpacking.quick.json
+    cp results/bench_e2e.json BENCH_e2e.quick.json
+    echo "== wrote BENCH_binpacking.quick.json + BENCH_e2e.quick.json (quick run; committed artifacts untouched)"
+else
+    # PR-over-PR gate: fail on a >10% PE-ticks/sec regression of the
+    # wheel core relative to the committed artifact.
+    if [[ -f BENCH_e2e.json ]]; then
+        old_wheel="$(items_per_sec BENCH_e2e.json "$WHEEL_KEY" || true)"
+        if [[ -n "$old_wheel" ]]; then
+            if awk -v new="$new_wheel" -v old="$old_wheel" \
+                'BEGIN { exit !(new + 0 < 0.9 * old) }'; then
+                echo "error: $WHEEL_KEY regressed >10%: ${old_wheel} -> ${new_wheel} PE-ticks/s" >&2
+                exit 1
+            fi
+            echo "== PE-ticks/sec gate OK (${old_wheel} -> ${new_wheel}, threshold -10%)"
+        else
+            echo "== no $WHEEL_KEY in committed BENCH_e2e.json — bootstrapping the series"
+        fi
+    else
+        echo "== no committed BENCH_e2e.json — bootstrapping the series"
+    fi
     cp results/bench_binpacking.json BENCH_binpacking.json
-    echo "== wrote BENCH_binpacking.json"
+    cp results/bench_e2e.json BENCH_e2e.json
+    echo "== wrote BENCH_binpacking.json + BENCH_e2e.json"
 fi
