@@ -14,16 +14,22 @@
 //!   under `rust/src/` — how the self-test corpus exercises module
 //!   scoping without planting bad code in the real tree.
 //! * `--rules`: print the rule catalog and exit.
+//! * `--format json`: emit machine-readable findings (one canonical JSON
+//!   object: `findings` with `file`/`line`/`rule`/`chain`/`message`, plus
+//!   `count` and `scanned`) instead of text — what `scripts/ci_check.sh`
+//!   archives to `results/lint.json` when the gate fails.
 //!
 //! `scripts/ci_check.sh` runs this before the tier-1 tests.
 
 use harmonicio::lint::{self, FileCtx};
+use harmonicio::util::json::Json;
 use std::path::PathBuf;
 use std::process::ExitCode;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut deep = false;
+    let mut json = false;
     let mut file: Option<String> = None;
     let mut virt: Option<String> = None;
     let mut root: Option<PathBuf> = None;
@@ -31,6 +37,19 @@ fn main() -> ExitCode {
     while i < args.len() {
         match args[i].as_str() {
             "--deep" => deep = true,
+            "--format" => {
+                i += 1;
+                match args.get(i).map(String::as_str) {
+                    Some("json") => json = true,
+                    Some("text") => json = false,
+                    other => {
+                        eprintln!(
+                            "pallas_lint: --format expects `text` or `json`, got {other:?}"
+                        );
+                        return ExitCode::from(2);
+                    }
+                }
+            }
             "--rules" => {
                 for (id, summary) in lint::RULES {
                     println!("{id:<5} {summary}");
@@ -47,7 +66,7 @@ fn main() -> ExitCode {
             }
             "--help" | "-h" => {
                 eprintln!(
-                    "usage: pallas_lint [--deep] [--rules] \
+                    "usage: pallas_lint [--deep] [--rules] [--format text|json] \
                      [--file <path> --as <virtual-rel>] [root]"
                 );
                 return ExitCode::SUCCESS;
@@ -79,7 +98,7 @@ fn main() -> ExitCode {
             }
         };
         let found = lint::lint_source(&rel, &path, &src, FileCtx::Source);
-        report(&found, 1);
+        report(&found, 1, json);
         found
     } else {
         let root = root.unwrap_or_else(|| PathBuf::from("."));
@@ -92,7 +111,7 @@ fn main() -> ExitCode {
         }
         match lint::lint_tree(&root, deep) {
             Ok((found, scanned)) => {
-                report(&found, scanned);
+                report(&found, scanned, json);
                 found
             }
             Err(e) => {
@@ -109,7 +128,30 @@ fn main() -> ExitCode {
     }
 }
 
-fn report(findings: &[lint::Finding], scanned: usize) {
+fn report(findings: &[lint::Finding], scanned: usize, json: bool) {
+    if json {
+        let doc = Json::obj([
+            ("count", Json::num(findings.len() as f64)),
+            ("scanned", Json::num(scanned as f64)),
+            (
+                "findings",
+                Json::arr(findings.iter().map(|f| {
+                    Json::obj([
+                        ("file", Json::str(f.file.as_str())),
+                        ("line", Json::num(f64::from(f.line))),
+                        ("rule", Json::str(f.rule)),
+                        ("message", Json::str(f.message.as_str())),
+                        (
+                            "chain",
+                            Json::arr(f.chain.iter().map(|h| Json::str(h.as_str()))),
+                        ),
+                    ])
+                })),
+            ),
+        ]);
+        println!("{doc}");
+        return;
+    }
     for f in findings {
         println!("{f}");
     }

@@ -419,6 +419,7 @@ impl SimCloud {
             if hazard > 0.0 {
                 let mut t_hours = 0.0f64;
                 while schedule.len() < MAX_ZONE_FAILURES {
+                    // pallas-lint: allow(D3, draw count is a pure function of the static zone_hazard config, fixed at construction in zone order — no runtime state conditions the stream)
                     t_hours += zone_rng.exponential(1.0 / hazard);
                     if t_hours >= ZONE_FAILURE_HORIZON_HOURS {
                         break;
@@ -550,6 +551,7 @@ impl SimCloud {
         let jitter = if self.cfg.boot_jitter.0 == 0 {
             0
         } else {
+            // pallas-lint: allow(D3, condition is the static boot_jitter config — every provision request in a run takes the same arm, so the draw count per request is constant)
             self.rng.range(0, 2 * self.cfg.boot_jitter.0)
         };
         let ready_at =
@@ -561,6 +563,7 @@ impl SimCloud {
                 // provisioning request (providers reclaim capacity they
                 // are still assembling, too — a preempted boot is a
                 // failed boot).
+                // pallas-lint: allow(D3, tier and hazard_of(flavor) are static config — the draw count per provision request is fixed within a run; both arms' trajectories are pinned by the spot golden CSV and the chaos suite)
                 let hours = self.rng.exponential(1.0 / hazard);
                 Some(now + Millis::from_secs_f64(hours * 3600.0))
             } else {

@@ -519,6 +519,7 @@ impl Irm {
         }
         // leftover = Σremainders / waiting_total < #nonzero-remainders,
         // so the zero-remainder tail is never reached.
+        // pallas-lint: allow(A1, floor_sum = Σ floor(total·wᵢ/W) <= Σ total·wᵢ/W = total, so the subtraction cannot underflow)
         let mut leftover = total - floor_sum;
         remainders.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
         for (remainder, i) in remainders {

@@ -80,7 +80,7 @@ struct HashRing {
 
 impl HashRing {
     fn new(shards: usize) -> Self {
-        let mut points = Vec::with_capacity(shards * VIRTUAL_NODES);
+        let mut points = Vec::with_capacity(shards.saturating_mul(VIRTUAL_NODES));
         for shard in 0..shards {
             for vnode in 0..VIRTUAL_NODES {
                 let label = format!("shard-{shard}-vnode-{vnode}");
@@ -400,7 +400,7 @@ impl ShardedIrm {
         let shard_count = self.shards.len();
         let threads = self.cfg.sharding.parallel_workers.min(shard_count);
         let rounds: Vec<Option<PackRound>> = if threads >= 2 {
-            let chunk_len = (shard_count + threads - 1) / threads;
+            let chunk_len = shard_count.div_ceil(threads);
             // pallas-lint: allow(D2, packing sub-rounds are pure functions of shard state and the read-only view; threads only change wall time, results merge in shard-index order)
             std::thread::scope(|scope| {
                 let mut handles = Vec::with_capacity(threads);
@@ -619,7 +619,7 @@ impl ShardedIrm {
             let room = self
                 .cfg
                 .max_pes_per_image
-                .saturating_sub(hosted + queued)
+                .saturating_sub(hosted.saturating_add(queued))
                 .min(waiting.saturating_sub(queued));
             let n = share.min(room);
             if n == 0 {

@@ -58,6 +58,10 @@ pub struct Pragma {
 pub struct Lexed {
     pub toks: Vec<Tok>,
     pub pragmas: Vec<Pragma>,
+    /// Lines on which a doc comment (`///` or `//!`) starts. Together with
+    /// attribute spans these are the "transparent" lines a pragma skips
+    /// when binding to the item below it (see `apply_pragmas`).
+    pub doc_lines: Vec<u32>,
 }
 
 /// Tokenize `src`. Never fails: unrecognized bytes become `Punct` tokens,
@@ -79,6 +83,9 @@ pub fn lex(src: &str) -> Lexed {
             c if c.is_whitespace() => i += 1,
             '/' if peek(&b, i + 1) == Some('/') => {
                 let start = i + 2;
+                if matches!(peek(&b, start), Some('/') | Some('!')) {
+                    out.doc_lines.push(line);
+                }
                 while i < b.len() && b[i] != '\n' {
                     i += 1;
                 }
@@ -459,6 +466,13 @@ mod tests {
         assert!(lexed.pragmas[1].file_level);
         assert_eq!(lexed.pragmas[1].rule, "P2");
         assert!(lexed.pragmas[2].malformed, "missing reason must be malformed");
+    }
+
+    #[test]
+    fn doc_comment_lines_are_recorded() {
+        let src = "//! module docs\nfn f() {}\n/// item docs\n// plain comment\nfn g() {}\n";
+        let lexed = lex(src);
+        assert_eq!(lexed.doc_lines, vec![1, 3], "doc lines only, not plain comments");
     }
 
     #[test]

@@ -23,20 +23,43 @@
 //!   bin-packing kernel is exempt; see the catalog).
 //! * **C1** — no duplicated epsilon-magnitude float literals (the PR 2
 //!   bug class); name them next to `binpacking::EPS`.
+//! * **D3** — a seeded RNG draw lexically inside an `if`/`match`/`?`-guarded
+//!   block of a determinism-critical module must pragma its draw-count
+//!   identity argument (the PR 5/6 hazard-0 bug class: one config arm
+//!   draws, the other doesn't, and every later consumer's stream forks).
+//! * **D4** — a determinism-critical function must not *reach* a
+//!   nondeterminism sink (`Instant::now`, `SystemTime`, `thread_rng`,
+//!   HashMap iteration) through any call chain — including via allowlisted
+//!   modules like `clock` or `util`. The full chain is printed; a pragma
+//!   must state the byte-identity argument and acts as a taint sanitizer.
+//! * **A1** — no unchecked `-`/`+`/`*` on integer-typed expressions in the
+//!   scheduling plane (the E9 `warmup_stats` underflow class); use
+//!   `checked_*`/`saturating_*` or pragma the bounding invariant.
 //!
 //! Suppression is always written down:
 //! `// pallas-lint: allow(D1, <reason>)` on the finding's line or the line
-//! above, or `// pallas-lint: allow-file(P2, <reason>)` anywhere in the
-//! file. A pragma with no reason is itself a finding (rule `LINT`).
+//! above (attribute and doc-comment lines between the pragma and the item
+//! are skipped), or `// pallas-lint: allow-file(P2, <reason>)` anywhere in
+//! the file. A pragma with no reason is itself a finding (rule `LINT`).
 //!
-//! The engine is token-based (see [`lexer`]), not a parser: each rule is a
-//! short pattern over the token stream. `#[cfg(test)]` / `#[test]` items
-//! are skipped by matching the attribute and the brace extent of the item
-//! that follows.
+//! The engine runs in two passes. Pass 1 is token-local per file: the
+//! hand-rolled [`lexer`] plus the [`parse`] item parser, which recovers
+//! `mod`/`impl`/`fn` headers, bodies by brace matching, call sites, and an
+//! integer symbol table — never failing, only degrading to less evidence.
+//! Pass 2 runs the rule families: the line-local rules (D1–P2, C1) pattern-
+//! match each file's token stream exactly as in v1, while D4 links every
+//! file's call sites into one crate-wide call graph and walks taint
+//! backwards from the sinks, and D3/A1 consult the pass-1 structure
+//! (conditional-block extents, operand types). `#[cfg(test)]` / `#[test]`
+//! items are skipped by matching the attribute and the brace extent of the
+//! item that follows.
 
 pub mod lexer;
+pub mod parse;
 
-use lexer::{lex, Pragma, Tok, TokKind};
+use lexer::{lex, Lexed, Pragma, Tok, TokKind};
+use parse::{parse_file, ParsedFile, FLOAT_TYPES, INT_TYPES};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::path::{Path, PathBuf};
 
 /// Modules whose behavior feeds golden snapshots / series output (D1, C1).
@@ -56,15 +79,43 @@ const HOT_EXEMPT: &[&str] = &["worker/live", "worker/agent"];
 /// `binpacking` kernel is deliberately exempt: index arithmetic is its
 /// idiom and it is property-tested against naive oracles.
 const INDEX_SCOPE: &[&str] = &["sim", "irm", "worker", "profiler", "cloud"];
+/// Modules where A1 (unchecked integer arithmetic) applies: the state-
+/// carrying scheduling plane, where an underflow panics a multi-hour run
+/// in debug and silently wraps a capacity/queue count in release. The
+/// `binpacking` kernel and `experiments` assembly code are exempt — the
+/// kernel is property-tested against oracles and experiment arithmetic is
+/// checked against golden values.
+const A1_SCOPE: &[&str] = &["sim", "irm", "cloud", "profiler", "worker"];
+/// The seeded [`crate::util::rng::Rng`] draw methods D3 disciplines. Every
+/// call advances the stream, so a draw on one config arm but not the other
+/// forks every later consumer's values.
+const DRAW_METHODS: &[&str] = &[
+    "next_u64",
+    "next_f64",
+    "uniform",
+    "below",
+    "range",
+    "normal",
+    "normal_with",
+    "exponential",
+    "lognormal",
+    "shuffle",
+    "choose",
+];
+/// Methods whose return is integer-typed regardless of receiver (A1).
+const INT_METHODS: &[&str] = &["len", "capacity", "count"];
 
 /// `(id, one-line summary)` — the catalog printed by `pallas_lint --rules`.
 pub const RULES: &[(&str, &str)] = &[
     ("D1", "no HashMap/HashSet iteration in determinism-critical modules"),
     ("D2", "no Instant::now/SystemTime/thread_rng/thread::spawn outside the live allowlist"),
+    ("D3", "seeded RNG draws on config-dependent paths must pragma draw-count identity"),
+    ("D4", "determinism-critical fns must not reach a nondeterminism sink via any call chain"),
     ("F1", "no partial_cmp — use total_cmp or pragma a proven-total impl"),
     ("F2", "no bare `as <int>` casts on float expressions — use util::cast"),
     ("P1", "no unwrap()/expect() in hot-path modules"),
     ("P2", "no direct indexing in scheduling-plane modules"),
+    ("A1", "no unchecked -/+/* on integer expressions in the scheduling plane"),
     ("C1", "no duplicated epsilon-magnitude float literals"),
     ("LINT", "pragma must be well-formed: allow(RULE, reason)"),
 ];
@@ -120,13 +171,17 @@ const NON_INDEX_KEYWORDS: &[&str] = &[
 /// while leaving ordinary fractions like 0.005 alone).
 const C1_THRESHOLD: f64 = 1e-5;
 
-/// One lint finding. `file` is repo-relative, `line` 1-based.
+/// One lint finding. `file` is repo-relative, `line` 1-based. `chain` is
+/// empty except for D4, where it holds the call chain from the flagged
+/// function down to the sink, one `file:line: name` entry per hop plus the
+/// sink itself (machine-readable twin of the chain in `message`).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Finding {
     pub file: String,
     pub line: u32,
     pub rule: &'static str,
     pub message: String,
+    pub chain: Vec<String>,
 }
 
 impl std::fmt::Display for Finding {
@@ -155,31 +210,113 @@ fn in_modules(rel: &str, mods: &[&str]) -> bool {
     })
 }
 
-/// Lint one file's source text. `rel` is the path relative to `rust/src`
-/// (used for module classification); `display` is the path printed in
-/// findings (repo-relative in tree mode).
-pub fn lint_source(rel: &str, display: &str, src: &str, ctx: FileCtx) -> Vec<Finding> {
-    let lexed = lex(src);
-    let toks = &lexed.toks;
-    let in_test = test_mask(toks);
+/// One file fed into [`lint_crate`]. `rel` is the path relative to
+/// `rust/src` (drives module classification), `display` the path printed
+/// in findings (repo-relative in tree mode).
+#[derive(Debug, Clone)]
+pub struct Input {
+    pub rel: String,
+    pub display: String,
+    pub src: String,
+    pub ctx: FileCtx,
+}
 
-    let is_critical = ctx == FileCtx::Source && in_modules(rel, CRITICAL);
-    let d2_applies = ctx == FileCtx::Source && !in_modules(rel, WALLCLOCK_ALLOW);
-    let is_hot = ctx == FileCtx::Source
+/// Per-file pass-1 state shared by the pass-2 rules.
+struct FileScan {
+    rel: String,
+    display: String,
+    ctx: FileCtx,
+    lexed: Lexed,
+    parsed: ParsedFile,
+    /// Names declared as `HashMap`/`HashSet` in this file (D1/D4 sinks).
+    hash_names: Vec<String>,
+    /// Lines a pragma skips when binding downward (attributes, doc
+    /// comments) — see `next_code_line`.
+    transparent: BTreeSet<u32>,
+    /// Pre-pragma findings.
+    raw: Vec<Finding>,
+}
+
+/// Lint a set of files as one crate: per-file token rules plus the
+/// crate-wide call-graph pass (D4). This is the engine's real entry
+/// point — [`lint_source`] and [`lint_tree`] both delegate here.
+pub fn lint_crate(inputs: &[Input]) -> Vec<Finding> {
+    let mut scans: Vec<FileScan> = inputs.iter().map(scan_file).collect();
+    let index = CrateIndex::build(&scans);
+    for s in scans.iter_mut() {
+        let mut extra = rule_d3_file(s);
+        extra.extend(rule_a1_file(s, &index));
+        s.raw.append(&mut extra);
+    }
+    for (file_idx, finding) in rule_d4(&scans, &index) {
+        scans[file_idx].raw.push(finding);
+    }
+    let mut out: Vec<Finding> = Vec::new();
+    for s in scans {
+        out.extend(apply_pragmas(s.raw, &s.lexed.pragmas, &s.transparent));
+    }
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    out
+}
+
+/// Lint one file's source text in isolation (no cross-file call graph —
+/// D4 still sees chains *within* the file).
+pub fn lint_source(rel: &str, display: &str, src: &str, ctx: FileCtx) -> Vec<Finding> {
+    lint_crate(&[Input {
+        rel: rel.to_string(),
+        display: display.to_string(),
+        src: src.to_string(),
+        ctx,
+    }])
+}
+
+/// Convenience wrapper used by the self-test fixtures: lint with the same
+/// path for classification and display.
+pub fn lint_virtual(rel: &str, src: &str) -> Vec<Finding> {
+    lint_source(rel, rel, src, FileCtx::Source)
+}
+
+/// Pass 1 for one file: lex, mask tests, parse items, and run the
+/// line-local v1 rules into `raw`.
+fn scan_file(input: &Input) -> FileScan {
+    let lexed = lex(&input.src);
+    let in_test = test_mask(&lexed.toks);
+    let parsed = if input.ctx == FileCtx::Source {
+        parse_file(&lexed.toks, &in_test)
+    } else {
+        ParsedFile::default()
+    };
+    let transparent = transparent_lines(&lexed.toks, &lexed.doc_lines);
+    let rel = input.rel.as_str();
+    let toks = &lexed.toks;
+
+    let is_critical = input.ctx == FileCtx::Source && in_modules(rel, CRITICAL);
+    let d2_applies = input.ctx == FileCtx::Source && !in_modules(rel, WALLCLOCK_ALLOW);
+    let is_hot = input.ctx == FileCtx::Source
         && in_modules(rel, HOT)
         && !in_modules(rel, HOT_EXEMPT);
-    let p2_applies = ctx == FileCtx::Source
+    let p2_applies = input.ctx == FileCtx::Source
         && in_modules(rel, INDEX_SCOPE)
         && !in_modules(rel, HOT_EXEMPT);
 
     let mut raw: Vec<Finding> = Vec::new();
+    let display = input.display.as_str();
     let mut push = |line: u32, rule: &'static str, message: String| {
-        raw.push(Finding { file: display.to_string(), line, rule, message });
+        raw.push(Finding {
+            file: display.to_string(),
+            line,
+            rule,
+            message,
+            chain: Vec::new(),
+        });
     };
 
     pragma_findings(&lexed.pragmas, &mut push);
 
-    let hash_names = if is_critical { collect_hash_names(toks) } else { Vec::new() };
+    let hash_names =
+        if input.ctx == FileCtx::Source { collect_hash_names(toks) } else { Vec::new() };
 
     for i in 0..toks.len() {
         if in_test[i] {
@@ -239,13 +376,16 @@ pub fn lint_source(rel: &str, display: &str, src: &str, ctx: FileCtx) -> Vec<Fin
         }
     }
 
-    apply_pragmas(raw, &lexed.pragmas)
-}
-
-/// Convenience wrapper used by the self-test fixtures: lint with the same
-/// path for classification and display.
-pub fn lint_virtual(rel: &str, src: &str) -> Vec<Finding> {
-    lint_source(rel, rel, src, FileCtx::Source)
+    FileScan {
+        rel: input.rel.clone(),
+        display: input.display.clone(),
+        ctx: input.ctx,
+        lexed,
+        parsed,
+        hash_names,
+        transparent,
+        raw,
+    }
 }
 
 // ---------------------------------------------------------------- rules --
@@ -657,22 +797,92 @@ fn pragma_findings(pragmas: &[Pragma], push: &mut impl FnMut(u32, &'static str, 
     }
 }
 
-/// Drop findings covered by a well-formed pragma; dedup and order the rest.
-fn apply_pragmas(raw: Vec<Finding>, pragmas: &[Pragma]) -> Vec<Finding> {
-    let mut out: Vec<Finding> = Vec::new();
-    'next: for f in raw {
-        if f.rule != "LINT" {
-            for p in pragmas.iter().filter(|p| !p.malformed) {
-                let rule_match = p.rule == "all" || p.rule == f.rule;
-                let covered = if p.file_level {
-                    rule_match
-                } else {
-                    rule_match && (f.line == p.line || f.line == p.line + 1)
-                };
-                if covered {
-                    continue 'next;
-                }
+/// Lines a downward-binding pragma skips over: attribute lines (`#[…]`,
+/// including multi-line spans) and doc-comment lines — but never lines
+/// that also carry ordinary code tokens (`#[inline] fn f()` on one line
+/// must still bind as the item's own line), and never blank lines or
+/// plain `//` comments (a pragma separated from its item stays unbound —
+/// adjacency is the audit trail).
+fn transparent_lines(toks: &[Tok], doc_lines: &[u32]) -> BTreeSet<u32> {
+    let mut attr: BTreeSet<u32> = BTreeSet::new();
+    let mut code: BTreeSet<u32> = BTreeSet::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].text == "#" {
+            let mut j = i + 1;
+            if toks.get(j).map(|t| t.text == "!").unwrap_or(false) {
+                j += 1;
             }
+            if toks.get(j).map(|t| t.text == "[").unwrap_or(false) {
+                let mut depth = 0i32;
+                while j < toks.len() {
+                    match toks[j].text.as_str() {
+                        "[" => depth += 1,
+                        "]" => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                let end_line = toks.get(j).map(|t| t.line).unwrap_or(toks[i].line);
+                for l in toks[i].line..=end_line {
+                    attr.insert(l);
+                }
+                i = j + 1;
+                continue;
+            }
+        }
+        code.insert(toks[i].line);
+        i += 1;
+    }
+    let mut out: BTreeSet<u32> = doc_lines.iter().copied().collect();
+    out.extend(attr);
+    out.retain(|l| !code.contains(l));
+    out
+}
+
+/// The first non-transparent line strictly below `line` — where a pragma
+/// written above an attribute stack (or doc comment) actually binds.
+fn next_code_line(line: u32, transparent: &BTreeSet<u32>) -> u32 {
+    let mut l = line + 1;
+    while transparent.contains(&l) {
+        l += 1;
+    }
+    l
+}
+
+/// Does a well-formed pragma for `rule` cover `line`? Shared by finding
+/// suppression and D4's sanitizer check (a pragma on a function header
+/// also stops taint from propagating through that function).
+fn pragma_covers(
+    pragmas: &[Pragma],
+    transparent: &BTreeSet<u32>,
+    rule: &str,
+    line: u32,
+) -> bool {
+    pragmas.iter().filter(|p| !p.malformed).any(|p| {
+        let rule_match = p.rule == "all" || p.rule == rule;
+        rule_match
+            && (p.file_level
+                || line == p.line
+                || line == next_code_line(p.line, transparent))
+    })
+}
+
+/// Drop findings covered by a well-formed pragma; dedup and order the rest.
+fn apply_pragmas(
+    raw: Vec<Finding>,
+    pragmas: &[Pragma],
+    transparent: &BTreeSet<u32>,
+) -> Vec<Finding> {
+    let mut out: Vec<Finding> = Vec::new();
+    for f in raw {
+        if f.rule != "LINT" && pragma_covers(pragmas, transparent, f.rule, f.line) {
+            continue;
         }
         if !out.contains(&f) {
             out.push(f);
@@ -682,6 +892,748 @@ fn apply_pragmas(raw: Vec<Finding>, pragmas: &[Pragma]) -> Vec<Finding> {
         (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
     });
     out
+}
+
+// ----------------------------------------------- pass 2: crate-wide rules --
+
+/// One function in the crate-wide table.
+struct GFn {
+    /// Index into the `FileScan` slice / that file's `ParsedFile::fns`.
+    file: usize,
+    decl: usize,
+    /// `Type::name` for methods, bare `name` for free functions.
+    qual_name: String,
+    impl_type: Option<String>,
+    /// Nondeterminism sink contained directly in the body, if any.
+    sink: Option<String>,
+    /// Inside `#[cfg(test)]` / `#[test]` — excluded from the graph.
+    masked: bool,
+    /// An `allow(D4, …)` pragma covers the header: the author has argued
+    /// byte-identity, so the fn is neither flagged nor a taint conduit.
+    sanitized: bool,
+}
+
+/// Crate-wide tables built from every `Source` file's pass-1 output: the
+/// function/call-graph table for D4 and the type-evidence tables for A1.
+struct CrateIndex {
+    fns: Vec<GFn>,
+    free_by_name: BTreeMap<String, Vec<usize>>,
+    methods_by_name: BTreeMap<String, Vec<usize>>,
+    by_impl: BTreeMap<(String, String), Vec<usize>>,
+    /// Struct field name → base type; `"{conflict}"` when structs disagree.
+    fields: BTreeMap<String, String>,
+    /// Single-integer-field tuple structs (`Millis`) and their float twins
+    /// (`CpuFraction`). Wrapper-typed operands are NOT integer evidence —
+    /// their operators are overloaded (Millis::Sub saturates) — but raw
+    /// `.0` access on one is.
+    int_wrappers: BTreeSet<String>,
+    float_wrappers: BTreeSet<String>,
+    /// fn names whose every declaration returns an integer base type.
+    int_ret_fns: BTreeSet<String>,
+    /// Per file: `/`-separated path segments of `rel` (minus `.rs`), for
+    /// module-qualified call resolution (`rng::seeded` → `util/rng.rs`).
+    file_segments: Vec<Vec<String>>,
+}
+
+impl CrateIndex {
+    fn build(scans: &[FileScan]) -> CrateIndex {
+        let mut idx = CrateIndex {
+            fns: Vec::new(),
+            free_by_name: BTreeMap::new(),
+            methods_by_name: BTreeMap::new(),
+            by_impl: BTreeMap::new(),
+            fields: BTreeMap::new(),
+            int_wrappers: BTreeSet::new(),
+            float_wrappers: BTreeSet::new(),
+            int_ret_fns: BTreeSet::new(),
+            file_segments: Vec::new(),
+        };
+        for s in scans {
+            if s.ctx != FileCtx::Source {
+                continue;
+            }
+            for st in &s.parsed.structs {
+                if let Some(ty) = &st.tuple_single {
+                    if INT_TYPES.contains(&ty.as_str()) {
+                        idx.int_wrappers.insert(st.name.clone());
+                    } else if FLOAT_TYPES.contains(&ty.as_str()) {
+                        idx.float_wrappers.insert(st.name.clone());
+                    }
+                }
+                for (field, ty) in &st.fields {
+                    match idx.fields.get(field) {
+                        Some(prev) if prev != ty => {
+                            idx.fields.insert(field.clone(), "{conflict}".to_string());
+                        }
+                        Some(_) => {}
+                        None => {
+                            idx.fields.insert(field.clone(), ty.clone());
+                        }
+                    }
+                }
+            }
+        }
+        let mut int_ret: BTreeMap<String, bool> = BTreeMap::new();
+        for (fi, s) in scans.iter().enumerate() {
+            if s.ctx != FileCtx::Source {
+                continue;
+            }
+            for (di, f) in s.parsed.fns.iter().enumerate() {
+                let qual_name = match &f.impl_type {
+                    Some(t) => format!("{t}::{}", f.name),
+                    None => f.name.clone(),
+                };
+                let sink =
+                    f.body.and_then(|b| direct_sink(&s.lexed.toks, b, &s.hash_names));
+                let sanitized =
+                    pragma_covers(&s.lexed.pragmas, &s.transparent, "D4", f.line);
+                let id = idx.fns.len();
+                match &f.impl_type {
+                    Some(t) => {
+                        idx.methods_by_name.entry(f.name.clone()).or_default().push(id);
+                        idx.by_impl
+                            .entry((t.clone(), f.name.clone()))
+                            .or_default()
+                            .push(id);
+                    }
+                    None => {
+                        idx.free_by_name.entry(f.name.clone()).or_default().push(id);
+                    }
+                }
+                let is_int_ret =
+                    f.ret.as_deref().map(|r| INT_TYPES.contains(&r)).unwrap_or(false);
+                int_ret
+                    .entry(f.name.clone())
+                    .and_modify(|ok| *ok &= is_int_ret)
+                    .or_insert(is_int_ret);
+                idx.fns.push(GFn {
+                    file: fi,
+                    decl: di,
+                    qual_name,
+                    impl_type: f.impl_type.clone(),
+                    sink,
+                    masked: f.masked,
+                    sanitized,
+                });
+            }
+        }
+        idx.int_ret_fns = int_ret.into_iter().filter(|(_, ok)| *ok).map(|(n, _)| n).collect();
+        idx.file_segments = scans
+            .iter()
+            .map(|s| {
+                let stem = s.rel.strip_suffix(".rs").unwrap_or(&s.rel);
+                stem.split('/').map(str::to_string).collect()
+            })
+            .collect();
+        idx
+    }
+
+    /// Global fn ids a call site may land on. Resolution is name-based and
+    /// deliberately asymmetric: unresolved calls (std, closures)
+    /// contribute no edge — missing taint is the safe direction — while
+    /// method names match crate-wide (a `.tick()` call reaches every
+    /// `tick` method), which can only over-approximate; D4 pragmas are the
+    /// reviewed escape for a chain argued byte-identical.
+    fn resolve(&self, caller: &GFn, call: &parse::Call) -> Vec<usize> {
+        let mut ids: Vec<usize> = if call.method {
+            self.methods_by_name.get(&call.name).cloned().unwrap_or_default()
+        } else if let Some(q) = &call.qual {
+            if q == "Self" {
+                match &caller.impl_type {
+                    Some(t) => self
+                        .by_impl
+                        .get(&(t.clone(), call.name.clone()))
+                        .cloned()
+                        .unwrap_or_default(),
+                    None => Vec::new(),
+                }
+            } else {
+                let mut v = self
+                    .by_impl
+                    .get(&(q.clone(), call.name.clone()))
+                    .cloned()
+                    .unwrap_or_default();
+                if v.is_empty()
+                    && q.chars().next().map(|c| c.is_lowercase()).unwrap_or(false)
+                {
+                    // Module-qualified free fn: `rng::seeded(…)`.
+                    v = self
+                        .free_by_name
+                        .get(&call.name)
+                        .cloned()
+                        .unwrap_or_default()
+                        .into_iter()
+                        .filter(|id| {
+                            self.file_segments[self.fns[*id].file].iter().any(|s| s == q)
+                        })
+                        .collect();
+                }
+                v
+            }
+        } else {
+            self.free_by_name.get(&call.name).cloned().unwrap_or_default()
+        };
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+}
+
+/// Scan a function body for a direct nondeterminism sink (D4 seeds).
+/// Direct sinks are D1/D2's findings in critical scope; here they only
+/// mark the function as the root of a taint chain.
+fn direct_sink(toks: &[Tok], body: (usize, usize), hash_names: &[String]) -> Option<String> {
+    let (open, close) = body;
+    for i in open..=close.min(toks.len().saturating_sub(1)) {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        match t.text.as_str() {
+            "Instant"
+                if toks.get(i + 1).map(|n| n.text == "::").unwrap_or(false)
+                    && toks.get(i + 2).map(|n| n.text == "now").unwrap_or(false) =>
+            {
+                return Some("Instant::now".to_string());
+            }
+            "SystemTime" => return Some("SystemTime".to_string()),
+            "thread_rng" => return Some("thread_rng".to_string()),
+            _ => {}
+        }
+        if hash_names.iter().any(|n| *n == t.text) && own_receiver(toks, i) {
+            // `name.iter_method(` …
+            if toks.get(i + 1).map(|n| n.text == ".").unwrap_or(false) {
+                if let Some(m) = toks.get(i + 2) {
+                    if ITER_METHODS.contains(&m.text.as_str())
+                        && toks.get(i + 3).map(|n| n.text == "(").unwrap_or(false)
+                        && !sorts_nearby(toks, i)
+                    {
+                        return Some(format!("HashMap iteration (`{}.{}`)", t.text, m.text));
+                    }
+                }
+            }
+            // … or `for … in name {`.
+            if toks.get(i + 1).map(|n| n.text == "{").unwrap_or(false) {
+                let iterated = (open..i)
+                    .rev()
+                    .take(25)
+                    .map(|j| &toks[j])
+                    .take_while(|t| t.text != ";" && t.text != "{")
+                    .any(|t| t.kind == TokKind::Ident && t.text == "in");
+                if iterated && !sorts_nearby(toks, i) {
+                    return Some(format!("HashMap iteration (`for … in {}`)", t.text));
+                }
+            }
+        }
+    }
+    None
+}
+
+/// D4 — transitive-nondeterminism taint. Reverse-BFS over the call graph
+/// from every sink-containing function; flag determinism-critical
+/// functions that reach a sink through at least one call edge, chain
+/// attached. Masked (test) and pragma-sanitized functions neither flag
+/// nor conduct taint.
+fn rule_d4(scans: &[FileScan], index: &CrateIndex) -> Vec<(usize, Finding)> {
+    let n = index.fns.len();
+    let mut redges: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (caller_id, g) in index.fns.iter().enumerate() {
+        if g.masked || g.sanitized {
+            continue;
+        }
+        for call in &scans[g.file].parsed.fns[g.decl].calls {
+            for callee in index.resolve(g, call) {
+                if callee != caller_id {
+                    redges[callee].push(caller_id);
+                }
+            }
+        }
+    }
+    for e in redges.iter_mut() {
+        e.sort_unstable();
+        e.dedup();
+    }
+    // BFS from the sinks; `via[f]` is the next hop toward the sink, so the
+    // recovered chain is a shortest one (deterministic: ids in file order,
+    // queue FIFO).
+    let mut via: Vec<Option<usize>> = vec![None; n];
+    let mut reached = vec![false; n];
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    for (id, g) in index.fns.iter().enumerate() {
+        if g.sink.is_some() && !g.masked && !g.sanitized {
+            reached[id] = true;
+            queue.push_back(id);
+        }
+    }
+    while let Some(gid) = queue.pop_front() {
+        for &caller in &redges[gid] {
+            let c = &index.fns[caller];
+            if !reached[caller] && !c.masked && !c.sanitized {
+                reached[caller] = true;
+                via[caller] = Some(gid);
+                queue.push_back(caller);
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for (id, g) in index.fns.iter().enumerate() {
+        if !reached[id] || via[id].is_none() {
+            continue;
+        }
+        let rel = scans[g.file].rel.as_str();
+        if !in_modules(rel, CRITICAL) || in_modules(rel, WALLCLOCK_ALLOW) {
+            continue;
+        }
+        let mut names: Vec<String> = Vec::new();
+        let mut chain: Vec<String> = Vec::new();
+        let mut cur = id;
+        loop {
+            let cg = &index.fns[cur];
+            names.push(format!("`{}`", cg.qual_name));
+            chain.push(format!(
+                "{}:{}: {}",
+                scans[cg.file].display,
+                scans[cg.file].parsed.fns[cg.decl].line,
+                cg.qual_name
+            ));
+            match via[cur] {
+                Some(next) => cur = next,
+                None => break,
+            }
+        }
+        let sink = index.fns[cur].sink.clone().unwrap_or_default();
+        names.push(format!("`{sink}`"));
+        chain.push(sink.clone());
+        out.push((
+            g.file,
+            Finding {
+                file: scans[g.file].display.clone(),
+                line: scans[g.file].parsed.fns[g.decl].line,
+                rule: "D4",
+                message: format!(
+                    "determinism-critical `{}` reaches nondeterminism sink `{sink}` via \
+                     {} — take time/entropy from the virtual Clock / seeded Rng, or \
+                     pragma the byte-identity argument (the pragma also stops taint \
+                     from passing through this fn)",
+                    g.qual_name,
+                    names.join(" -> ")
+                ),
+                chain,
+            },
+        ));
+    }
+    out
+}
+
+/// D3 — RNG-draw discipline: a seeded draw lexically inside an
+/// `if`/`else`/`match` block (or a `?`-guarded statement) draws on one
+/// config arm and not another, forking the stream for every later
+/// consumer — the PR 5/6 hazard-0 bug class, previously argued only by
+/// hand-written stream-identity pins. Loops are exempt: per-item draws
+/// repeat with the (deterministic) item count.
+fn rule_d3_file(s: &FileScan) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if s.ctx != FileCtx::Source
+        || !in_modules(&s.rel, CRITICAL)
+        || in_modules(&s.rel, WALLCLOCK_ALLOW)
+    {
+        return out;
+    }
+    let toks = &s.lexed.toks;
+    for f in &s.parsed.fns {
+        if f.masked {
+            continue;
+        }
+        let (open, close) = match f.body {
+            Some(b) => b,
+            None => continue,
+        };
+        // Block stack: `true` = opened by an if/else/match header.
+        let mut blocks: Vec<bool> = Vec::new();
+        let mut pending: Option<i32> = None; // paren depth at the keyword
+        let mut paren = 0i32;
+        let mut guarded_stmt = false; // `?` seen since the last `;`/brace
+        for i in open + 1..close.min(toks.len()) {
+            let t = &toks[i];
+            match (t.kind, t.text.as_str()) {
+                (TokKind::Ident, "if" | "match" | "else") => pending = Some(paren),
+                (TokKind::Punct, "(") => paren += 1,
+                (TokKind::Punct, ")") => paren -= 1,
+                (TokKind::Punct, "?") => guarded_stmt = true,
+                (TokKind::Punct, "{") => {
+                    let cond = pending == Some(paren);
+                    blocks.push(cond);
+                    if cond {
+                        pending = None;
+                    }
+                    guarded_stmt = false;
+                }
+                (TokKind::Punct, "}") => {
+                    blocks.pop();
+                    guarded_stmt = false;
+                }
+                (TokKind::Punct, ";") => guarded_stmt = false,
+                (TokKind::Punct, ".") => {
+                    if let Some((method, line)) = draw_at(toks, i) {
+                        if blocks.iter().any(|b| *b) || guarded_stmt {
+                            out.push(Finding {
+                                file: s.display.clone(),
+                                line,
+                                rule: "D3",
+                                message: format!(
+                                    "seeded RNG draw `.{method}()` on a config-dependent \
+                                     path — an arm that draws while another doesn't forks \
+                                     the stream for every later consumer (the hazard-0 \
+                                     bug class); hoist the draw, or pragma the draw-count-\
+                                     identity argument across arms"
+                                ),
+                                chain: Vec::new(),
+                            });
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+/// Is the `.` at `i` a seeded-RNG draw (`rng.below(…)`, `self.rng.choose`,
+/// `self.rng().shuffle`)? Returns the method name and its line.
+fn draw_at(toks: &[Tok], i: usize) -> Option<(String, u32)> {
+    let m = toks.get(i + 1)?;
+    if m.kind != TokKind::Ident || !DRAW_METHODS.contains(&m.text.as_str()) {
+        return None;
+    }
+    if toks.get(i + 2).map(|n| n.text != "(").unwrap_or(true) || i == 0 {
+        return None;
+    }
+    let named_rng = |t: &Tok| {
+        t.kind == TokKind::Ident && t.text.to_ascii_lowercase().contains("rng")
+    };
+    let prev = &toks[i - 1];
+    let is_rng = if prev.text == ")" {
+        matching_open(toks, i - 1)
+            .and_then(|o| o.checked_sub(1))
+            .map(|j| named_rng(&toks[j]))
+            .unwrap_or(false)
+    } else {
+        named_rng(prev)
+    };
+    if is_rng {
+        Some((m.text.clone(), m.line))
+    } else {
+        None
+    }
+}
+
+/// Operand classification for A1 (see `rule_a1_file`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Cls {
+    /// Typed integer evidence (symbol, field, `.len()`, wrapper `.0`).
+    Int,
+    /// A bare integer literal (weaker: fires `-` but not `+`/`*`).
+    IntLit,
+    Float,
+    /// Integer newtype wrapper (`Millis`) — operators are overloaded
+    /// (Sub saturates), so never evidence, and blocks firing.
+    Wrapper,
+    Unknown,
+}
+
+/// A1 — unchecked `-`/`+`/`*` on integer-typed expressions in the
+/// scheduling plane. `-` fires when either operand shows integer evidence
+/// (underflow lives at 0, the *common* end of the unsigned range — the E9
+/// `warmup_stats` class); `+`/`*` only when both operands are typed
+/// integers (overflow lives at 2^64, the rare end). Compound assigns,
+/// const items, and assert-family arguments are skipped.
+fn rule_a1_file(s: &FileScan, index: &CrateIndex) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if s.ctx != FileCtx::Source
+        || !in_modules(&s.rel, A1_SCOPE)
+        || in_modules(&s.rel, HOT_EXEMPT)
+    {
+        return out;
+    }
+    let toks = &s.lexed.toks;
+    for f in &s.parsed.fns {
+        if f.masked {
+            continue;
+        }
+        let (open, close) = match f.body {
+            Some(b) => b,
+            None => continue,
+        };
+        for i in open + 1..close.min(toks.len()) {
+            let t = &toks[i];
+            if t.kind != TokKind::Punct || !matches!(t.text.as_str(), "+" | "-" | "*") {
+                continue;
+            }
+            let next = match toks.get(i + 1) {
+                Some(n) => n,
+                None => continue,
+            };
+            // `+=`-family compound assigns and `->` arrows are not binary
+            // arithmetic; a non-operand previous token means unary/deref.
+            if next.text == "=" || (t.text == "-" && next.text == ">") {
+                continue;
+            }
+            let prev = &toks[i - 1];
+            let binary = match prev.kind {
+                TokKind::Ident => !NON_INDEX_KEYWORDS.contains(&prev.text.as_str()),
+                TokKind::Int | TokKind::Float => true,
+                TokKind::Punct => prev.text == ")" || prev.text == "]",
+                _ => false,
+            };
+            if !binary || in_const_statement(toks, i) || in_assert_macro(toks, i) {
+                continue;
+            }
+            let lhs = classify_left(toks, i, f, s, index);
+            let rhs = classify_right(toks, i, f, s, index);
+            let fires = match t.text.as_str() {
+                "-" => {
+                    (matches!(lhs, Cls::Int | Cls::IntLit)
+                        || matches!(rhs, Cls::Int | Cls::IntLit))
+                        && !matches!(lhs, Cls::Float | Cls::Wrapper)
+                        && !matches!(rhs, Cls::Float | Cls::Wrapper)
+                }
+                _ => lhs == Cls::Int && rhs == Cls::Int,
+            };
+            if !fires {
+                continue;
+            }
+            let message = match t.text.as_str() {
+                "-" => {
+                    "unchecked integer `-` underflows below zero (debug panic, release \
+                     wrap — the E9 warmup_stats class) — use `saturating_sub`/\
+                     `checked_sub`, or pragma the invariant that bounds lhs >= rhs"
+                }
+                "+" => {
+                    "unchecked integer `+` can overflow (debug panic, release wrap) — \
+                     use `checked_add`/`saturating_add`, or pragma the bounding \
+                     invariant"
+                }
+                _ => {
+                    "unchecked integer `*` can overflow (debug panic, release wrap) — \
+                     use `checked_mul`/`saturating_mul`, or pragma the bounding \
+                     invariant"
+                }
+            };
+            out.push(Finding {
+                file: s.display.clone(),
+                line: t.line,
+                rule: "A1",
+                message: message.to_string(),
+                chain: Vec::new(),
+            });
+        }
+    }
+    out
+}
+
+fn classify_type(ty: &str, index: &CrateIndex) -> Cls {
+    if ty == "{int}" || INT_TYPES.contains(&ty) {
+        Cls::Int
+    } else if FLOAT_TYPES.contains(&ty) {
+        Cls::Float
+    } else if index.int_wrappers.contains(ty) {
+        Cls::Wrapper
+    } else if index.float_wrappers.contains(ty) {
+        Cls::Float
+    } else {
+        Cls::Unknown
+    }
+}
+
+/// Look `name` up in the enclosing fn's symbols (last binding wins) and
+/// the file-level consts.
+fn classify_name(name: &str, f: &parse::FnDecl, s: &FileScan, index: &CrateIndex) -> Cls {
+    if let Some((_, ty)) = f.symbols.iter().rev().find(|(n, _)| n == name) {
+        return classify_type(ty, index);
+    }
+    if let Some((_, ty)) = s.parsed.consts.iter().find(|(n, _)| n == name) {
+        return classify_type(ty, index);
+    }
+    Cls::Unknown
+}
+
+/// Classify a `name.field` access through the crate-wide field table.
+fn classify_field(field: &str, index: &CrateIndex) -> Cls {
+    match index.fields.get(field) {
+        Some(ty) if ty != "{conflict}" => classify_type(ty, index),
+        _ => Cls::Unknown,
+    }
+}
+
+/// Classify `recv.0` tuple access: integer wrappers expose their raw int.
+fn classify_wrapper_field(
+    recv: &str,
+    f: &parse::FnDecl,
+    s: &FileScan,
+    index: &CrateIndex,
+) -> Cls {
+    let ty = f
+        .symbols
+        .iter()
+        .rev()
+        .find(|(n, _)| n == recv)
+        .or_else(|| s.parsed.consts.iter().find(|(n, _)| n == recv))
+        .map(|(_, ty)| ty.as_str());
+    match ty {
+        Some(ty) if index.int_wrappers.contains(ty) => Cls::Int,
+        Some(ty) if index.float_wrappers.contains(ty) => Cls::Float,
+        _ => Cls::Unknown,
+    }
+}
+
+/// Classify a method / free-fn name appearing as `….name(…)`.
+fn classify_method(name: &str, index: &CrateIndex) -> Cls {
+    if INT_METHODS.contains(&name) {
+        Cls::Int
+    } else if FLOAT_METHODS.contains(&name) {
+        Cls::Float
+    } else if index.int_ret_fns.contains(name) {
+        Cls::Int
+    } else {
+        Cls::Unknown
+    }
+}
+
+/// Classify the operand ending at `close` (a `)`): a call's return type
+/// or a parenthesized group's content.
+fn classify_call_result(toks: &[Tok], close: usize, index: &CrateIndex) -> Cls {
+    let open = match matching_open(toks, close) {
+        Some(o) => o,
+        None => return Cls::Unknown,
+    };
+    if open >= 1 && toks[open - 1].kind == TokKind::Ident {
+        let name = toks[open - 1].text.as_str();
+        if open >= 2 && toks[open - 2].text == "." {
+            return classify_method(name, index);
+        }
+        if index.int_ret_fns.contains(name) {
+            return Cls::Int;
+        }
+        return Cls::Unknown;
+    }
+    // Parenthesized group: any float literal/method inside taints it
+    // float; anything else stays Unknown (conservative — no finding).
+    let float_inside = toks[open + 1..close].iter().any(|t| {
+        t.kind == TokKind::Float
+            || (t.kind == TokKind::Ident && FLOAT_METHODS.contains(&t.text.as_str()))
+    });
+    if float_inside {
+        Cls::Float
+    } else {
+        Cls::Unknown
+    }
+}
+
+/// Classify the operand to the left of the operator at `op`.
+fn classify_left(
+    toks: &[Tok],
+    op: usize,
+    f: &parse::FnDecl,
+    s: &FileScan,
+    index: &CrateIndex,
+) -> Cls {
+    let i = op - 1;
+    let t = &toks[i];
+    match t.kind {
+        TokKind::Float => Cls::Float,
+        TokKind::Int => {
+            if i >= 2 && toks[i - 1].text == "." && toks[i - 2].kind == TokKind::Ident {
+                classify_wrapper_field(&toks[i - 2].text, f, s, index)
+            } else {
+                Cls::IntLit
+            }
+        }
+        TokKind::Ident => {
+            if i >= 1 && toks[i - 1].text == "." {
+                classify_field(&t.text, index)
+            } else {
+                classify_name(&t.text, f, s, index)
+            }
+        }
+        TokKind::Punct if t.text == ")" => classify_call_result(toks, i, index),
+        _ => Cls::Unknown,
+    }
+}
+
+/// Classify the operand to the right of the operator at `op`.
+fn classify_right(
+    toks: &[Tok],
+    op: usize,
+    f: &parse::FnDecl,
+    s: &FileScan,
+    index: &CrateIndex,
+) -> Cls {
+    let j = op + 1;
+    let t = &toks[j];
+    match t.kind {
+        TokKind::Float => Cls::Float,
+        TokKind::Int => Cls::IntLit,
+        TokKind::Ident => match toks.get(j + 1).map(|n| n.text.as_str()) {
+            Some(".") => match toks.get(j + 2) {
+                Some(n2) if n2.kind == TokKind::Int => {
+                    classify_wrapper_field(&t.text, f, s, index)
+                }
+                Some(n2) if n2.kind == TokKind::Ident => {
+                    if toks.get(j + 3).map(|n| n.text == "(").unwrap_or(false) {
+                        classify_method(&n2.text, index)
+                    } else {
+                        classify_field(&n2.text, index)
+                    }
+                }
+                _ => Cls::Unknown,
+            },
+            Some("(") => {
+                if index.int_ret_fns.contains(&t.text) {
+                    Cls::Int
+                } else {
+                    Cls::Unknown
+                }
+            }
+            Some("::") => Cls::Unknown,
+            _ => classify_name(&t.text, f, s, index),
+        },
+        TokKind::Punct if t.text == "(" => {
+            let close = match matching_close(toks, j) {
+                Some(c) => c,
+                None => return Cls::Unknown,
+            };
+            let float_inside = toks[j + 1..close].iter().any(|t| {
+                t.kind == TokKind::Float
+                    || (t.kind == TokKind::Ident
+                        && FLOAT_METHODS.contains(&t.text.as_str()))
+            });
+            if float_inside {
+                Cls::Float
+            } else {
+                Cls::Unknown
+            }
+        }
+        _ => Cls::Unknown,
+    }
+}
+
+/// Index of the `)` matching the `(` at `open`, scanning forward.
+fn matching_close(toks: &[Tok], open: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        match t.text.as_str() {
+            "(" => depth += 1,
+            ")" => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(j);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
 }
 
 // ------------------------------------------------------------ tree walk --
@@ -735,16 +1687,18 @@ pub fn lint_tree(root: &Path, deep: bool) -> std::io::Result<(Vec<Finding>, usiz
         }
     }
     let scanned = jobs.len();
-    let mut findings = Vec::new();
+    // One `lint_crate` call over every file at once: pass 2 (D4) needs the
+    // whole call graph, not a per-file view.
+    let mut inputs: Vec<Input> = Vec::with_capacity(scanned);
     for (path, rel, ctx) in jobs {
-        let src = std::fs::read_to_string(&path)?;
-        let display = rel_slash(&path, root);
-        findings.extend(lint_source(&rel, &display, &src, ctx));
+        inputs.push(Input {
+            rel,
+            display: rel_slash(&path, root),
+            src: std::fs::read_to_string(&path)?,
+            ctx,
+        });
     }
-    findings.sort_by(|a, b| {
-        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
-    });
-    Ok((findings, scanned))
+    Ok((lint_crate(&inputs), scanned))
 }
 
 fn rel_slash(p: &Path, base: &Path) -> String {
@@ -898,5 +1852,150 @@ mod tests {
         let src = "fn f(o: Option<f64>) -> usize { o.unwrap().ceil() as usize }\n";
         let f = lint_source("tests/t.rs", "rust/tests/t.rs", src, FileCtx::TestOnly);
         assert_eq!(rules_at(&f), vec![("F2", 1)]);
+    }
+
+    fn input(rel: &str, src: &str) -> Input {
+        Input {
+            rel: rel.to_string(),
+            display: rel.to_string(),
+            src: src.to_string(),
+            ctx: FileCtx::Source,
+        }
+    }
+
+    #[test]
+    fn d4_one_hop_taint_within_a_file() {
+        // `entropy` holds the sink (that's D2's finding); `step` merely
+        // *reaches* it — that's D4's, anchored at `step`'s header.
+        let src = "fn entropy() { let t = Instant::now(); observe(t); }\n\
+                   fn step() { entropy(); }\n";
+        let f = lint_virtual("irm/x.rs", src);
+        assert_eq!(rules_at(&f), vec![("D2", 1), ("D4", 2)]);
+        assert!(f[1].message.contains("`step` -> `entropy` -> `Instant::now`"));
+    }
+
+    #[test]
+    fn d4_two_hop_chain_through_allowlisted_modules() {
+        let f = lint_crate(&[
+            input("clock/real.rs", "fn raw_now() -> u64 { let t = Instant::now(); stamp_of(t) }\n"),
+            input("util/time.rs", "pub fn stamp() -> u64 { raw_now() }\n"),
+            input("sim/x.rs", "pub fn tick() -> u64 { stamp() }\n"),
+        ]);
+        assert_eq!(rules_at(&f), vec![("D4", 1)], "only the critical endpoint is flagged");
+        assert_eq!(f[0].file, "sim/x.rs");
+        assert_eq!(
+            f[0].chain,
+            vec![
+                "sim/x.rs:1: tick",
+                "util/time.rs:1: stamp",
+                "clock/real.rs:1: raw_now",
+                "Instant::now",
+            ]
+        );
+    }
+
+    #[test]
+    fn d4_pragma_sanitizes_the_chain() {
+        // The pragma on the conduit both suppresses and stops propagation:
+        // `tick` upstream is no longer tainted.
+        let util = "// pallas-lint: allow(D4, sim builds inject SimClock; byte-identity pinned)\n\
+                    pub fn stamp() -> u64 { raw_now() }\n";
+        let f = lint_crate(&[
+            input("clock/real.rs", "fn raw_now() -> u64 { let t = Instant::now(); stamp_of(t) }\n"),
+            input("util/time.rs", util),
+            input("sim/x.rs", "pub fn tick() -> u64 { stamp() }\n"),
+        ]);
+        assert!(f.is_empty(), "got: {f:?}");
+    }
+
+    #[test]
+    fn d4_follows_method_calls() {
+        let src = "impl Irm {\n\
+                   fn jitter(&mut self) -> u64 { self.entropy() }\n\
+                   fn entropy(&mut self) -> u64 { thread_rng() }\n}\n";
+        let f = lint_virtual("irm/x.rs", src);
+        assert_eq!(rules_at(&f), vec![("D4", 2), ("D2", 3)]);
+        assert!(f[0].message.contains("`Irm::jitter` -> `Irm::entropy` -> `thread_rng`"));
+    }
+
+    #[test]
+    fn d3_flags_conditional_draw_only() {
+        let src = "fn spot(rng: &mut Rng, hazard: f64) -> f64 {\n\
+                   if hazard > 0.0 {\n\
+                   return rng.exponential(hazard);\n\
+                   }\n\
+                   0.0\n}\n\
+                   fn warm(rng: &mut Rng, n: usize) -> u64 {\n\
+                   let mut acc = rng.next_u64();\n\
+                   for _ in 0..n {\n\
+                   acc ^= rng.next_u64();\n\
+                   }\n\
+                   acc\n}\n";
+        let f = lint_virtual("cloud/x.rs", src);
+        assert_eq!(
+            rules_at(&f),
+            vec![("D3", 3)],
+            "the unconditional and per-item loop draws do not fire"
+        );
+    }
+
+    #[test]
+    fn d3_flags_try_guarded_draw_and_pragma_suppresses() {
+        let src = "fn pick(rng: &mut Rng, o: Option<u64>) -> Option<u64> {\n\
+                   Some(o? + rng.next_u64())\n}\n";
+        assert_eq!(rules_at(&lint_virtual("irm/x.rs", src)), vec![("D3", 2)]);
+        let pragmad = "fn spot(rng: &mut Rng, hazard: f64) -> f64 {\n\
+                       if hazard > 0.0 {\n\
+                       // pallas-lint: allow(D3, hazard-0 arm draws zero times in every config — rng_stream_identity pin)\n\
+                       return rng.exponential(hazard);\n\
+                       }\n\
+                       0.0\n}\n";
+        assert!(lint_virtual("cloud/x.rs", pragmad).is_empty());
+    }
+
+    #[test]
+    fn a1_integer_arithmetic_in_scope() {
+        let src = "fn sub(a: u64, b: u64) -> u64 { a - b }\n\
+                   fn tail(xs: &[u64]) -> usize { xs.len() - 1 }\n\
+                   fn add(a: u64, b: u64) -> u64 { a + b }\n\
+                   fn fsub(a: f64, b: f64) -> f64 { a - b }\n\
+                   fn safe(a: u64, b: u64) -> u64 { a.saturating_sub(b) }\n";
+        let f = lint_virtual("irm/x.rs", src);
+        assert_eq!(rules_at(&f), vec![("A1", 1), ("A1", 2), ("A1", 3)]);
+        // Out of scope: binpacking (kernel) and non-plane modules.
+        assert!(lint_virtual("binpacking/x.rs", src).is_empty());
+        assert!(lint_virtual("metrics/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn a1_wrapper_operators_exempt_but_raw_field_access_is_not() {
+        // Millis's own `-` is overloaded (and saturates); `.0` arithmetic
+        // is raw u64 again.
+        let src = "struct Millis(pub u64);\n\
+                   fn span(a: Millis, b: Millis) -> Millis { a - b }\n\
+                   fn raw(a: Millis) -> u64 { a.0 - 1 }\n";
+        assert_eq!(rules_at(&lint_virtual("sim/x.rs", src)), vec![("A1", 3)]);
+    }
+
+    #[test]
+    fn a1_pragma_with_invariant_suppresses() {
+        let src = "fn depth(cap: usize, used: usize) -> usize {\n\
+                   // pallas-lint: allow(A1, used <= cap is the pool invariant, asserted at insert)\n\
+                   cap - used\n}\n";
+        assert!(lint_virtual("irm/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn pragma_binds_through_attributes_and_doc_comments() {
+        let src = "// pallas-lint: allow(P1, lock poisoning is fatal by design)\n\
+                   /// Doc line between pragma and item.\n\
+                   #[inline]\n\
+                   fn f(o: Option<u32>) -> u32 { o.unwrap() }\n";
+        assert!(lint_virtual("sim/x.rs", src).is_empty(), "pragma skips attr + doc lines");
+        // …but never across blank lines: adjacency is the audit trail.
+        let gap = "// pallas-lint: allow(P1, stale)\n\
+                   \n\
+                   fn f(o: Option<u32>) -> u32 { o.unwrap() }\n";
+        assert_eq!(rules_at(&lint_virtual("sim/x.rs", gap)), vec![("P1", 3)]);
     }
 }

@@ -1,0 +1,685 @@
+//! Pass 1 of the two-pass `pallas-lint` engine: a small recursive-descent
+//! item parser over the [`super::lexer`] token stream.
+//!
+//! The token-pattern rules of pass 2 are line-local; the call-graph rules
+//! (D4 transitive-nondeterminism taint) and the type-evidence rules (A1
+//! unchecked integer arithmetic) need structure: which function a token
+//! belongs to, what that function calls, and what integer-typed names are
+//! in scope. This module recovers exactly that much structure and no more:
+//!
+//! * `mod` / `impl` / `trait` / `fn` headers, bodies by brace matching —
+//!   nested items attribute their tokens to the innermost enclosing `fn`;
+//! * call sites (`name(…)`, `path::name(…)`, `.method(…)`) per function;
+//! * a per-function integer symbol table (params, explicitly-typed `let`s,
+//!   `let x = <int literal>` inference, file-level `const`/`static`);
+//! * struct declarations: named fields with their base types, and
+//!   single-field integer tuple wrappers (`struct Millis(pub u64)`), so
+//!   `x.0` arithmetic on a wrapper-typed local is recognized as integer.
+//!
+//! Like the lexer, the parser never fails: code it half-understands simply
+//! contributes less evidence (fewer call edges, fewer typed symbols), which
+//! degrades to fewer findings — the safe direction for a lint.
+
+use super::lexer::{Tok, TokKind};
+
+/// Integer base types for symbol/field/return-type classification.
+pub const INT_TYPES: &[&str] = &[
+    "usize", "u128", "u64", "u32", "u16", "u8", "isize", "i128", "i64", "i32", "i16", "i8",
+];
+/// Float base types (anti-evidence for A1).
+pub const FLOAT_TYPES: &[&str] = &["f64", "f32"];
+
+/// Keywords that are never call names even when followed by `(`.
+const NON_CALL_KEYWORDS: &[&str] = &[
+    "if", "in", "as", "match", "return", "else", "mut", "ref", "move", "let", "const",
+    "static", "use", "pub", "fn", "impl", "where", "for", "while", "loop", "break",
+    "continue", "type", "struct", "enum", "trait", "mod", "unsafe", "dyn", "await", "box",
+];
+
+/// One call site inside a function body.
+#[derive(Debug, Clone)]
+pub struct Call {
+    /// Callee name (last path segment / method name).
+    pub name: String,
+    /// Path segment directly before `::name(` — `Instant` in
+    /// `Instant::now(`, `Self` in `Self::route(` — when present.
+    pub qual: Option<String>,
+    /// True for `.name(` method-call syntax.
+    pub method: bool,
+    pub line: u32,
+}
+
+/// One parsed function (or trait-method declaration, when `body` is None).
+#[derive(Debug, Clone)]
+pub struct FnDecl {
+    pub name: String,
+    /// Enclosing `impl`/`trait` type, when any.
+    pub impl_type: Option<String>,
+    /// Line of the `fn` keyword — where D4 findings anchor.
+    pub line: u32,
+    /// Token index range `(open_brace, close_brace)` of the body.
+    pub body: Option<(usize, usize)>,
+    /// Inside a `#[cfg(test)]` / `#[test]` item.
+    pub masked: bool,
+    pub calls: Vec<Call>,
+    /// `(name, base type)` for params and typed/int-inferred `let`s.
+    /// Inferred integer bindings record the pseudo-type `"{int}"`.
+    pub symbols: Vec<(String, String)>,
+    /// Base return type, when written and scalar (`u64`, `Millis`, …).
+    pub ret: Option<String>,
+}
+
+/// One struct declaration.
+#[derive(Debug, Clone)]
+pub struct StructDecl {
+    pub name: String,
+    /// `(field, base type)` for braced structs.
+    pub fields: Vec<(String, String)>,
+    /// Base type of the single field of a tuple struct, when it has
+    /// exactly one (`struct Millis(pub u64)` → `Some("u64")`).
+    pub tuple_single: Option<String>,
+}
+
+/// Everything pass 1 recovers from one file.
+#[derive(Debug, Default)]
+pub struct ParsedFile {
+    pub fns: Vec<FnDecl>,
+    pub structs: Vec<StructDecl>,
+    /// File-level `const`/`static` names with integer base types; merged
+    /// into every function's symbol view.
+    pub consts: Vec<(String, String)>,
+}
+
+/// What an opened brace belongs to.
+enum Scope {
+    Mod,
+    Impl(Option<String>),
+    /// Index into `ParsedFile::fns`.
+    Fn(usize),
+    Block,
+}
+
+/// Parse one file's token stream. `mask` marks `#[cfg(test)]`/`#[test]`
+/// tokens (computed by the engine's `test_mask`).
+pub fn parse_file(toks: &[Tok], mask: &[bool]) -> ParsedFile {
+    let mut out = ParsedFile::default();
+    let mut stack: Vec<Scope> = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        match (t.kind, t.text.as_str()) {
+            (TokKind::Punct, "#") => {
+                i = skip_attribute(toks, i);
+            }
+            (TokKind::Punct, "{") => {
+                stack.push(Scope::Block);
+                i += 1;
+            }
+            (TokKind::Punct, "}") => {
+                if let Some(Scope::Fn(idx)) = stack.last() {
+                    if let Some((open, _)) = out.fns[*idx].body {
+                        out.fns[*idx].body = Some((open, i));
+                    }
+                }
+                stack.pop();
+                i += 1;
+            }
+            (TokKind::Ident, "mod") => {
+                // `mod name {` opens a module scope; `mod name;` is flat.
+                if toks.get(i + 1).map(|t| t.kind == TokKind::Ident).unwrap_or(false)
+                    && toks.get(i + 2).map(|t| t.text == "{").unwrap_or(false)
+                {
+                    stack.push(Scope::Mod);
+                    i += 3;
+                } else {
+                    i += 1;
+                }
+            }
+            (TokKind::Ident, "impl") | (TokKind::Ident, "trait") => {
+                let (ni, ty) = parse_impl_header(toks, i);
+                i = ni;
+                if i < toks.len() && toks[i].text == "{" {
+                    stack.push(Scope::Impl(ty));
+                    i += 1;
+                }
+            }
+            (TokKind::Ident, "struct") => {
+                let ni = parse_struct(toks, i, &mut out);
+                i = ni;
+            }
+            (TokKind::Ident, "const") | (TokKind::Ident, "static") => {
+                // File-level (or impl-level) integer constants feed the
+                // symbol table; `const` inside fn bodies is handled by the
+                // same code through the shared stack check below.
+                if let Some((name, ty)) = parse_const(toks, i) {
+                    if let Some(idx) = innermost_fn(&stack) {
+                        out.fns[idx].symbols.push((name, ty));
+                    } else {
+                        out.consts.push((name, ty));
+                    }
+                }
+                i += 1;
+            }
+            (TokKind::Ident, "fn") => {
+                let masked = mask.get(i).copied().unwrap_or(false);
+                let impl_type = enclosing_impl(&stack);
+                let (ni, decl) = parse_fn(toks, i, impl_type, masked);
+                i = ni;
+                if let Some(mut decl) = decl {
+                    let opens_body = decl.body.is_some();
+                    if let Some(idx) = innermost_fn(&stack) {
+                        // A nested fn: let the *outer* fn keep collecting
+                        // its own calls; the nested one collects its own.
+                        let _ = idx;
+                    }
+                    if opens_body {
+                        decl.body = Some((i - 1, i - 1)); // fixed up at `}`
+                        out.fns.push(decl);
+                        stack.push(Scope::Fn(out.fns.len() - 1));
+                    } else {
+                        out.fns.push(decl);
+                    }
+                }
+            }
+            (TokKind::Ident, "let") => {
+                if let Some(idx) = innermost_fn(&stack) {
+                    if let Some((name, ty)) = parse_let(toks, i) {
+                        out.fns[idx].symbols.push((name, ty));
+                    }
+                }
+                i += 1;
+            }
+            (TokKind::Ident, _) => {
+                if let Some(idx) = innermost_fn(&stack) {
+                    if let Some(call) = parse_call(toks, i) {
+                        out.fns[idx].calls.push(call);
+                    }
+                }
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    out
+}
+
+fn innermost_fn(stack: &[Scope]) -> Option<usize> {
+    stack.iter().rev().find_map(|s| match s {
+        Scope::Fn(idx) => Some(*idx),
+        _ => None,
+    })
+}
+
+fn enclosing_impl(stack: &[Scope]) -> Option<String> {
+    stack.iter().rev().find_map(|s| match s {
+        Scope::Impl(ty) => ty.clone(),
+        _ => None,
+    })
+}
+
+/// Skip `#[...]` / `#![...]` starting at the `#`; returns the index past
+/// the closing `]`.
+fn skip_attribute(toks: &[Tok], i: usize) -> usize {
+    let mut j = i + 1;
+    if toks.get(j).map(|t| t.text == "!").unwrap_or(false) {
+        j += 1;
+    }
+    if !toks.get(j).map(|t| t.text == "[").unwrap_or(false) {
+        return i + 1;
+    }
+    let mut depth = 0i32;
+    while j < toks.len() {
+        match toks[j].text.as_str() {
+            "[" => depth += 1,
+            "]" => {
+                depth -= 1;
+                if depth == 0 {
+                    return j + 1;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    j
+}
+
+/// From the `impl`/`trait` keyword, find the implemented type and the
+/// index of the body `{`. For `impl Trait for Type` the type is the first
+/// ident after `for`; otherwise the first ident outside the generic
+/// parameter list.
+fn parse_impl_header(toks: &[Tok], i: usize) -> (usize, Option<String>) {
+    let mut j = i + 1;
+    let mut angle = 0i32;
+    let mut ty: Option<String> = None;
+    let mut after_for = false;
+    while j < toks.len() {
+        let t = &toks[j];
+        match t.text.as_str() {
+            "<" => angle += 1,
+            ">" => angle -= 1,
+            "{" if angle <= 0 => return (j, ty),
+            ";" if angle <= 0 => return (j, ty), // `impl Trait for Type;`-ish degenerate
+            "for" if angle == 0 => {
+                after_for = true;
+                ty = None; // the trait name was not the type after all
+            }
+            _ => {
+                if t.kind == TokKind::Ident
+                    && angle == 0
+                    && ty.is_none()
+                    && !matches!(t.text.as_str(), "dyn" | "mut" | "where" | "unsafe")
+                {
+                    ty = Some(t.text.clone());
+                    if after_for {
+                        // `for Type` binds immediately; keep scanning for `{`.
+                        after_for = false;
+                    }
+                }
+            }
+        }
+        j += 1;
+    }
+    (j, ty)
+}
+
+/// Parse a scalar base type at `j` (after a `:` or `->`): skips `&`,
+/// `mut`, lifetimes; returns the leading ident for path/generic types
+/// (`Vec<u64>` → `Vec`), `None` for slices, tuples, `dyn`/`impl` types.
+fn parse_base_type(toks: &[Tok], mut j: usize) -> (usize, Option<String>) {
+    while j < toks.len() {
+        match (toks[j].kind, toks[j].text.as_str()) {
+            (TokKind::Punct, "&") | (TokKind::Ident, "mut") | (TokKind::Lifetime, _) => j += 1,
+            _ => break,
+        }
+    }
+    match toks.get(j) {
+        Some(t) if t.kind == TokKind::Ident => match t.text.as_str() {
+            "dyn" | "impl" => (j + 1, None),
+            _ => (j + 1, Some(t.text.clone())),
+        },
+        _ => (j, None),
+    }
+}
+
+/// Parse `fn name<…>(params) -> Ret` from the `fn` keyword; returns the
+/// index just past the body `{` (or past the `;` for body-less
+/// declarations) and the declaration.
+fn parse_fn(
+    toks: &[Tok],
+    i: usize,
+    impl_type: Option<String>,
+    masked: bool,
+) -> (usize, Option<FnDecl>) {
+    let name = match toks.get(i + 1) {
+        Some(t) if t.kind == TokKind::Ident => t.text.clone(),
+        _ => return (i + 1, None),
+    };
+    let mut decl = FnDecl {
+        name,
+        impl_type,
+        line: toks[i].line,
+        body: None,
+        masked,
+        calls: Vec::new(),
+        symbols: Vec::new(),
+        ret: None,
+    };
+    let mut j = i + 2;
+    // Generic parameter list between name and `(`.
+    if toks.get(j).map(|t| t.text == "<").unwrap_or(false) {
+        let mut angle = 0i32;
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "<" => angle += 1,
+                ">" => {
+                    angle -= 1;
+                    if angle == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+    }
+    if !toks.get(j).map(|t| t.text == "(").unwrap_or(false) {
+        return (j, Some(decl));
+    }
+    // Parameter list: `ident: Type` pairs at paren depth 1.
+    let mut depth = 0i32;
+    let open = j;
+    while j < toks.len() {
+        match toks[j].text.as_str() {
+            "(" => depth += 1,
+            ")" => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            ":" if depth == 1 => {
+                let is_name = j > open
+                    && toks[j - 1].kind == TokKind::Ident
+                    && !matches!(toks[j - 1].text.as_str(), "self" | "mut");
+                if is_name {
+                    let (_, base) = parse_base_type(toks, j + 1);
+                    if let Some(base) = base {
+                        decl.symbols.push((toks[j - 1].text.clone(), base));
+                    }
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    j += 1; // past `)`
+    // Return type.
+    if toks.get(j).map(|t| t.text == "-").unwrap_or(false)
+        && toks.get(j + 1).map(|t| t.text == ">").unwrap_or(false)
+    {
+        let (nj, base) = parse_base_type(toks, j + 2);
+        decl.ret = base;
+        j = nj;
+    }
+    // Body `{` (skipping any `where` clause) or `;` for declarations.
+    while j < toks.len() {
+        match toks[j].text.as_str() {
+            "{" => {
+                decl.body = Some((j, j));
+                return (j + 1, Some(decl));
+            }
+            ";" => return (j + 1, Some(decl)),
+            _ => j += 1,
+        }
+    }
+    (j, Some(decl))
+}
+
+/// Parse `struct Name { fields }` / `struct Name(tuple);` / `struct Name;`
+/// from the `struct` keyword; returns the index past the declaration.
+fn parse_struct(toks: &[Tok], i: usize, out: &mut ParsedFile) -> usize {
+    // `struct $name(...)` inside macro_rules! bodies: `$` precedes the
+    // name — not a real declaration.
+    let name = match toks.get(i + 1) {
+        Some(t) if t.kind == TokKind::Ident => {
+            if i > 0 && toks[i - 1].text == "$" {
+                return i + 1;
+            }
+            t.text.clone()
+        }
+        _ => return i + 1,
+    };
+    let mut j = i + 2;
+    if toks.get(j).map(|t| t.text == "<").unwrap_or(false) {
+        let mut angle = 0i32;
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "<" => angle += 1,
+                ">" => {
+                    angle -= 1;
+                    if angle == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+    }
+    let mut decl = StructDecl { name, fields: Vec::new(), tuple_single: None };
+    match toks.get(j).map(|t| t.text.as_str()) {
+        Some("(") => {
+            // Tuple struct: collect field base types at depth 1.
+            let mut depth = 0i32;
+            let mut bases: Vec<Option<String>> = Vec::new();
+            let mut expect_field = true;
+            while j < toks.len() {
+                match toks[j].text.as_str() {
+                    "(" => {
+                        depth += 1;
+                        if depth == 1 {
+                            expect_field = true;
+                        }
+                    }
+                    ")" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    "," if depth == 1 => expect_field = true,
+                    "pub" => {}
+                    _ => {
+                        if depth == 1 && expect_field {
+                            let (_, base) = parse_base_type(toks, j);
+                            bases.push(base);
+                            expect_field = false;
+                        }
+                    }
+                }
+                j += 1;
+            }
+            if bases.len() == 1 {
+                decl.tuple_single = bases.into_iter().next().flatten();
+            }
+            out.structs.push(decl);
+            j + 1
+        }
+        Some("{") => {
+            let mut depth = 0i32;
+            while j < toks.len() {
+                match toks[j].text.as_str() {
+                    "{" => depth += 1,
+                    "}" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    ":" if depth == 1 => {
+                        if toks[j - 1].kind == TokKind::Ident {
+                            let (_, base) = parse_base_type(toks, j + 1);
+                            if let Some(base) = base {
+                                decl.fields.push((toks[j - 1].text.clone(), base));
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            out.structs.push(decl);
+            j + 1
+        }
+        _ => {
+            out.structs.push(decl);
+            j
+        }
+    }
+}
+
+/// Parse `const NAME: Ty = …` / `static NAME: Ty = …`; integer types only.
+fn parse_const(toks: &[Tok], i: usize) -> Option<(String, String)> {
+    let mut j = i + 1;
+    if toks.get(j).map(|t| t.text == "mut").unwrap_or(false) {
+        j += 1;
+    }
+    let name = match toks.get(j) {
+        Some(t) if t.kind == TokKind::Ident => t.text.clone(),
+        _ => return None,
+    };
+    if !toks.get(j + 1).map(|t| t.text == ":").unwrap_or(false) {
+        return None;
+    }
+    let (_, base) = parse_base_type(toks, j + 2);
+    base.map(|b| (name, b))
+}
+
+/// Parse `let [mut] name [: Type] [= …]`; records explicitly-typed
+/// bindings and `let x = <int literal>` integer inference.
+fn parse_let(toks: &[Tok], i: usize) -> Option<(String, String)> {
+    let mut j = i + 1;
+    if toks.get(j).map(|t| t.text == "mut").unwrap_or(false) {
+        j += 1;
+    }
+    let name = match toks.get(j) {
+        Some(t) if t.kind == TokKind::Ident => t.text.clone(),
+        _ => return None,
+    };
+    match toks.get(j + 1).map(|t| t.text.as_str()) {
+        Some(":") => {
+            let (_, base) = parse_base_type(toks, j + 2);
+            base.map(|b| (name, b))
+        }
+        Some("=") => {
+            // `let x = 42;` / `let x = 42u64;` — integer inference only
+            // when the literal is the whole initializer.
+            let lit = toks.get(j + 2)?;
+            let ends = toks.get(j + 3).map(|t| t.text == ";").unwrap_or(false);
+            if lit.kind == TokKind::Int && ends {
+                Some((name, "{int}".to_string()))
+            } else {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
+/// Recognize a call site at token `i` (an ident followed by `(`).
+fn parse_call(toks: &[Tok], i: usize) -> Option<Call> {
+    let t = &toks[i];
+    if NON_CALL_KEYWORDS.contains(&t.text.as_str()) {
+        return None;
+    }
+    match toks.get(i + 1).map(|t| t.text.as_str()) {
+        Some("(") => {}
+        Some("!") => return None, // macro — handled token-locally by pass 2
+        _ => return None,
+    }
+    let prev = i.checked_sub(1).map(|p| toks[p].text.as_str());
+    match prev {
+        Some(".") => Some(Call { name: t.text.clone(), qual: None, method: true, line: t.line }),
+        Some("::") => {
+            let qual = i
+                .checked_sub(2)
+                .map(|q| &toks[q])
+                .filter(|q| q.kind == TokKind::Ident)
+                .map(|q| q.text.clone());
+            Some(Call { name: t.text.clone(), qual, method: false, line: t.line })
+        }
+        Some("fn") => None,
+        _ => Some(Call { name: t.text.clone(), qual: None, method: false, line: t.line }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    fn parse(src: &str) -> ParsedFile {
+        let lexed = lex(src);
+        let mask = vec![false; lexed.toks.len()];
+        parse_file(&lexed.toks, &mask)
+    }
+
+    #[test]
+    fn fn_headers_bodies_and_nesting() {
+        let src = "fn outer(n: u64) -> u64 {\n    fn inner(x: usize) {}\n    helper(n)\n}\n\
+                   fn plain() {}\n";
+        let p = parse(src);
+        let names: Vec<&str> = p.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["outer", "inner", "plain"]);
+        let outer = &p.fns[0];
+        assert_eq!(outer.symbols, vec![("n".to_string(), "u64".to_string())]);
+        assert_eq!(outer.ret.as_deref(), Some("u64"));
+        assert_eq!(outer.calls.len(), 1, "inner's (empty) body contributes no calls");
+        assert_eq!(outer.calls[0].name, "helper");
+    }
+
+    #[test]
+    fn impl_and_trait_types_attach_to_methods() {
+        let src = "impl Foo { fn get(&self) -> usize { self.n } }\n\
+                   impl Clock for SimClock { fn now(&self) -> Millis { Millis(0) } }\n\
+                   trait Clock { fn now(&self) -> Millis; }\n";
+        let p = parse(src);
+        assert_eq!(p.fns[0].impl_type.as_deref(), Some("Foo"));
+        assert_eq!(p.fns[1].impl_type.as_deref(), Some("SimClock"));
+        assert_eq!(p.fns[2].impl_type.as_deref(), Some("Clock"));
+        assert!(p.fns[2].body.is_none(), "trait declaration has no body");
+    }
+
+    #[test]
+    fn calls_classify_plain_qualified_and_method() {
+        let src = "fn f() { g(); Instant::now(); x.tick(); mac!(h(1)); }\n";
+        let p = parse(src);
+        let calls = &p.fns[0].calls;
+        let view: Vec<(&str, Option<&str>, bool)> = calls
+            .iter()
+            .map(|c| (c.name.as_str(), c.qual.as_deref(), c.method))
+            .collect();
+        assert_eq!(
+            view,
+            vec![
+                ("g", None, false),
+                ("now", Some("Instant"), false),
+                ("tick", None, true),
+                ("h", None, false), // inside the macro args, still a call shape
+            ]
+        );
+    }
+
+    #[test]
+    fn symbols_from_lets_and_consts() {
+        let src = "const CAP: usize = 8;\n\
+                   fn f() { let mut k: u64 = 0; let n = 42; let s = \"x\"; let v: Vec<u64> = vec![]; }\n";
+        let p = parse(src);
+        assert_eq!(p.consts, vec![("CAP".to_string(), "usize".to_string())]);
+        assert_eq!(
+            p.fns[0].symbols,
+            vec![
+                ("k".to_string(), "u64".to_string()),
+                ("n".to_string(), "{int}".to_string()),
+                ("v".to_string(), "Vec".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn structs_fields_and_int_wrappers() {
+        let src = "pub struct Millis(pub u64);\n\
+                   pub struct CpuFraction(pub f64);\n\
+                   struct W { count: u64, share: f64 }\n\
+                   macro_rules! id { ($name:ident) => { pub struct $name(pub u64); } }\n";
+        let p = parse(src);
+        let names: Vec<&str> = p.structs.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["Millis", "CpuFraction", "W"], "macro $name skipped");
+        assert_eq!(p.structs[0].tuple_single.as_deref(), Some("u64"));
+        assert_eq!(p.structs[1].tuple_single.as_deref(), Some("f64"));
+        assert_eq!(
+            p.structs[2].fields,
+            vec![
+                ("count".to_string(), "u64".to_string()),
+                ("share".to_string(), "f64".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn slices_and_generics_do_not_produce_scalar_bases() {
+        let src = "fn f(xs: &[u64], t: &mut Vec<f64>, m: Millis) {}\n";
+        let p = parse(src);
+        assert_eq!(
+            p.fns[0].symbols,
+            vec![
+                ("t".to_string(), "Vec".to_string()),
+                ("m".to_string(), "Millis".to_string()),
+            ],
+            "slice params contribute nothing; generic containers keep the outer name"
+        );
+    }
+}

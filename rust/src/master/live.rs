@@ -146,6 +146,7 @@ impl LiveCluster {
     }
 
     /// Stream one image into the cluster (P2P to a free PE, else backlog).
+    // pallas-lint: allow(D4, live-transport endpoint — the wall-clock submission timestamp IS the measurement; sim paths never reach this fn, name-based call resolution only aliases the sim-side .stream() methods onto it)
     pub fn stream(&mut self, pixels: Vec<f32>) -> MessageId {
         let id = MessageId(self.ids.next_id());
         let job = LiveJob {

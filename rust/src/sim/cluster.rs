@@ -449,8 +449,9 @@ impl SimCluster {
                 i as u64
             }
             None => {
+                let slot = self.used_slots.len();
                 self.used_slots.push(true);
-                (self.used_slots.len() - 1) as u64
+                slot as u64
             }
         }
     }
@@ -1125,6 +1126,7 @@ impl SimCluster {
             .flat_map(|w| w.pes())
             .filter(|p| matches!(p.phase, crate::worker::PePhase::Busy { .. }))
             .count();
+        // pallas-lint: allow(A1, sum of live-object counts — completions, backlog entries and busy PEs are all allocated sim objects, bounded far below 2^64)
         self.completions.len() + self.master.backlog_len() + in_flight
     }
 

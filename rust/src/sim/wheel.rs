@@ -43,6 +43,11 @@ const SLOTS: u64 = 64;
 /// out sit in the overflow list until the horizon rotates near them.
 const LEVELS: usize = 4;
 const SLOT_BITS: u32 = 6;
+/// Slot-selection mask (`SLOTS` is a power of two).
+const SLOT_MASK: u64 = SLOTS - 1;
+/// Bits spanned by the whole hierarchy: deadlines at or beyond
+/// `1 << TOP_SHIFT` granules out live in the overflow list.
+const TOP_SHIFT: u32 = SLOT_BITS * LEVELS as u32;
 
 /// Handle for a scheduled entry, returned by [`TimerWheel::schedule`].
 /// Cancelling with a stale handle (the entry already fired, was cancelled,
@@ -196,11 +201,12 @@ impl<K: Copy> TimerWheel<K> {
         }
         self.arena[idx as usize].home = Home::Wheel;
         self.in_levels += 1;
+        // pallas-lint: allow(A1, tick > self.cur here — the tick <= cur case returned into pending_current above)
         let delta = tick - self.cur;
         let mut span = SLOTS;
         for level in 0..LEVELS {
             if delta < span {
-                let slot = ((tick >> (SLOT_BITS * level as u32)) & (SLOTS - 1)) as usize;
+                let slot = ((tick >> (SLOT_BITS * level as u32)) & SLOT_MASK) as usize;
                 self.levels[level][slot].push((idx, gen));
                 return;
             }
@@ -235,12 +241,11 @@ impl<K: Copy> TimerWheel<K> {
                 }
                 let crossings = (new_w - old_w).min(SLOTS);
                 for i in 0..crossings {
-                    let slot = ((new_w - i) & (SLOTS - 1)) as usize;
+                    let slot = ((new_w - i) & SLOT_MASK) as usize;
                     self.drain_slot_into_replace(level, slot);
                 }
             }
-            if (new_cur >> (SLOT_BITS * LEVELS as u32)) > (self.cur >> (SLOT_BITS * LEVELS as u32))
-            {
+            if (new_cur >> TOP_SHIFT) > (self.cur >> TOP_SHIFT) {
                 // Top-level window crossed: part of the overflow horizon
                 // may now be representable in the hierarchy.
                 let mut batch = std::mem::take(&mut self.scratch);

@@ -66,6 +66,7 @@ impl LivePe {
     /// runs its own CellProfiler instance. The compile time is the PE's
     /// real "container boot" latency; jobs delivered meanwhile wait in the
     /// mailbox. Results are pushed into `results`.
+    // pallas-lint: allow(D4, live-transport endpoint — PE threads wall-clock their own inference, that IS the measurement; sim paths never reach this fn, name-based call resolution only aliases scope.spawn()/thread spawns onto it)
     pub fn spawn(
         id: PeId,
         image: ImageName,

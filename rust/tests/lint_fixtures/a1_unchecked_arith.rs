@@ -1,0 +1,53 @@
+//@ virtual-path: irm/a1_unchecked.rs
+//! A1 — unchecked integer arithmetic in the scheduling plane. `-` fires
+//! on either-side integer evidence (underflow lives at 0, the common end
+//! of the unsigned range — the E9 warmup_stats class); `+`/`*` only when
+//! both operands are typed integers. Newtype wrappers with overloaded
+//! operators are exempt, but raw `.0` access on one is integer evidence
+//! again. `checked_*`/`saturating_*` and invariant pragmas are the two
+//! sanctioned exits.
+pub struct Span(pub u64);
+
+pub fn shrink(total: usize, used: usize) -> usize {
+    total - used //~ A1
+}
+
+pub fn last_index(xs: &[u64]) -> usize {
+    xs.len() - 1 //~ A1
+}
+
+pub fn grow(a: u64, b: u64) -> u64 {
+    a + b //~ A1
+}
+
+pub fn scale(a: u64, b: u64) -> u64 {
+    a * b //~ A1
+}
+
+pub fn wrapper_exempt(a: Span, b: Span) -> u64 {
+    let d = a - b; // overloaded Sub saturates by design — no finding
+    d.0
+}
+
+pub fn wrapper_raw(a: Span, b: Span) -> u64 {
+    a.0 - b.0 //~ A1
+}
+
+pub fn wrapper_literal(a: Span) -> u64 {
+    a.0 - 1 //~ A1
+}
+
+pub fn hardened(total: usize, used: usize) -> usize {
+    total.saturating_sub(used)
+}
+
+pub fn argued(cap: usize, used: usize) -> usize {
+    // pallas-lint: allow(A1, used <= cap is checked at admission — the subtraction cannot underflow)
+    cap - used
+}
+//@ virtual-path: binpacking/a1_exempt.rs
+//! Negative: the bin-packing kernel is outside A1 scope — index
+//! arithmetic is its idiom and it is property-tested against oracles.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}

@@ -1,0 +1,38 @@
+//@ virtual-path: sim/d3_conditional_draw.rs
+//! D3 — RNG-draw discipline. A seeded draw inside an `if`/`match` arm
+//! (or a `?`-guarded statement) advances the stream on one path and not
+//! the other, forking every later consumer's values — the hazard-0 bug
+//! class. Loops are exempt (per-item draws repeat with the item count),
+//! and a pragma arguing draw-count identity across arms suppresses.
+use crate::util::rng::Rng;
+
+pub fn arm_draw(rng: &mut Rng, enabled: bool) -> u64 {
+    if enabled {
+        rng.next_u64() //~ D3
+    } else {
+        0
+    }
+}
+
+pub fn per_item(rng: &mut Rng, n: usize) -> u64 {
+    let mut acc = 0;
+    for _ in 0..n {
+        // Loops are exempt: the draw count follows the (deterministic)
+        // item count, not a config arm.
+        acc ^= rng.next_u64();
+    }
+    acc
+}
+
+pub fn guarded(rng: &mut Rng, v: Option<u64>) -> Option<u64> {
+    Some(v? ^ rng.next_u64()) //~ D3
+}
+
+pub fn argued(rng: &mut Rng, noise_std: f64) -> f64 {
+    if noise_std > 0.0 {
+        // pallas-lint: allow(D3, condition is static config — every call in a run takes the same arm, so the per-call draw count is constant)
+        rng.normal_with(0.0, noise_std)
+    } else {
+        0.0
+    }
+}

@@ -1,0 +1,24 @@
+//@ virtual-path: clock/real_cache.rs
+//! Allowlisted wall-clock source feeding the sanitizer case below.
+use std::time::Instant;
+
+pub fn raw_ms(epoch: Instant) -> u64 {
+    Instant::now().duration_since(epoch).as_millis() as u64
+}
+//@ virtual-path: util/cached_stamp.rs
+//! A D4 pragma is a taint *sanitizer*: the argued fn neither flags nor
+//! conducts, so the determinism-critical caller below stays clean. The
+//! reason must argue byte-identity, not convenience.
+use std::time::Instant;
+
+// pallas-lint: allow(D4, returns a value cached before the sim loop starts — byte-identical across runs for a fixed config)
+pub fn cached_ms(epoch: Instant) -> u64 {
+    raw_ms(epoch)
+}
+//@ virtual-path: sim/uses_cache.rs
+//! Negative: the only path to the sink goes through the sanitized fn.
+use std::time::Instant;
+
+pub fn tick_stamp(epoch: Instant) -> u64 {
+    cached_ms(epoch)
+}

@@ -1,0 +1,33 @@
+//@ virtual-path: clock/real_source.rs
+//! Allowlisted: the real clock IS wall time, so neither D2 nor D4 fires
+//! here — but the call graph still carries taint *through* this file to
+//! any determinism-critical caller outside the allowlist.
+use std::time::Instant;
+
+pub fn raw_now_ms(epoch: Instant) -> u64 {
+    Instant::now().duration_since(epoch).as_millis() as u64
+}
+//@ virtual-path: util/stamp.rs
+//! Neither critical nor allowlisted: clean on its own, but a conduit —
+//! the chain below passes through it untouched.
+use std::time::Instant;
+
+pub fn stamp_ms(epoch: Instant) -> u64 {
+    raw_now_ms(epoch)
+}
+//@ virtual-path: sim/tick_taint.rs
+//! Determinism-critical and two hops from the sink: D4 reports the full
+//! chain (tick_all -> stamp_ms -> raw_now_ms -> Instant::now) even
+//! though every intermediate file is clean on its own.
+use std::time::Instant;
+
+pub fn tick_all(epoch: Instant) -> u64 { //~ D4
+    stamp_ms(epoch)
+}
+//@ virtual-path: irm/direct_sink.rs
+//! A *direct* sink in critical scope is D2's finding; D4 requires at
+//! least one call edge, so it stays quiet on this fn.
+pub fn entropy_seed() -> u64 {
+    let _r = rand::thread_rng(); //~ D2
+    0
+}

@@ -1,0 +1,15 @@
+//@ virtual-path: irm/pragma_attr_adjacency.rs
+//! Pragma adjacency binds *through* attribute and doc-comment lines to
+//! the next code line, so annotating above a `#[derive(...)]`/`#[inline]`
+//! block still covers the item. Blank lines and ordinary `//` comments
+//! are NOT transparent: adjacency is the audit trail, and a pragma
+//! drifting away from its item must stop suppressing.
+
+// pallas-lint: allow(P1, the runtime invariant holds by construction here; this pragma binds through the attribute and doc lines below)
+#[inline]
+/// Doc comment between the attribute and the item.
+fn covered(v: Option<u64>) -> u64 { v.unwrap() }
+
+// pallas-lint: allow(P1, a blank line below breaks adjacency — this pragma covers nothing)
+
+fn gapped(v: Option<u64>) -> u64 { v.unwrap() } //~ P1

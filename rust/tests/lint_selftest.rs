@@ -3,10 +3,13 @@
 //! so the corpus doubles as executable documentation of each rule.
 //!
 //! Fixture format:
-//! * line 1 is `//@ virtual-path: <rel>` — the path under `rust/src/` the
-//!   snippet pretends to live at (drives module-scope classification);
+//! * every section starts with `//@ virtual-path: <rel>` — the path under
+//!   `rust/src/` the snippet pretends to live at (drives module-scope
+//!   classification). A fixture may hold several sections; they are linted
+//!   together as one crate, which is how the cross-file D4 taint chains
+//!   are exercised without planting bad code in the real tree;
 //! * any line may end with `//~ RULE [RULE…]` — the findings expected on
-//!   exactly that line;
+//!   exactly that line of its section;
 //! * a fixture with no markers asserts zero findings (a negative case).
 //!
 //! The corpus is excluded from both the normal and `--deep` tree scans
@@ -29,43 +32,81 @@ fn fixtures() -> Vec<PathBuf> {
         .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("rs"))
         .collect();
     out.sort();
-    assert!(out.len() >= 10, "fixture corpus unexpectedly small: {}", out.len());
+    assert!(out.len() >= 18, "fixture corpus unexpectedly small: {}", out.len());
     out
 }
 
-/// Pull the virtual path out of the header line and the `(line, rule)`
-/// expectation set out of the `//~` markers.
-fn parse_expectations(src: &str) -> (String, BTreeSet<(u32, String)>) {
-    let header = src.lines().next().expect("non-empty fixture");
-    let rel = header
-        .strip_prefix("//@ virtual-path: ")
-        .expect("fixture must start with `//@ virtual-path: <rel>`")
-        .trim()
-        .to_string();
-    let mut expected = BTreeSet::new();
-    for (idx, line) in src.lines().enumerate() {
-        if let Some(pos) = line.rfind("//~ ") {
-            for rule in line[pos + 4..].split_whitespace() {
-                expected.insert((idx as u32 + 1, rule.to_string()));
-            }
+/// One fixture section: its virtual path, its source text (starting at the
+/// `//@` header, so marker lines are 1-based within the section), and the
+/// `(line, rule)` expectations from the `//~` markers.
+struct Section {
+    rel: String,
+    src: String,
+    expected: BTreeSet<(u32, String)>,
+}
+
+fn parse_sections(src: &str) -> Vec<Section> {
+    let mut raw: Vec<(String, Vec<&str>)> = Vec::new();
+    for line in src.lines() {
+        if let Some(rest) = line.strip_prefix("//@ virtual-path: ") {
+            raw.push((rest.trim().to_string(), vec![line]));
+        } else {
+            raw.last_mut()
+                .expect("fixture must start with `//@ virtual-path: <rel>`")
+                .1
+                .push(line);
         }
     }
-    (rel, expected)
+    assert!(!raw.is_empty(), "fixture declares no virtual path");
+    raw.into_iter()
+        .map(|(rel, lines)| {
+            let mut expected = BTreeSet::new();
+            for (idx, line) in lines.iter().enumerate() {
+                if let Some(pos) = line.rfind("//~ ") {
+                    for rule in line[pos + 4..].split_whitespace() {
+                        expected.insert((idx as u32 + 1, rule.to_string()));
+                    }
+                }
+            }
+            Section { rel, src: lines.join("\n"), expected }
+        })
+        .collect()
+}
+
+/// Lint a fixture's sections together as one crate (the cross-file call
+/// graph sees all of them) and return the `(file, line, rule)` set.
+fn lint_fixture(sections: &[Section]) -> BTreeSet<(String, u32, String)> {
+    let inputs: Vec<lint::Input> = sections
+        .iter()
+        .map(|s| lint::Input {
+            rel: s.rel.clone(),
+            display: s.rel.clone(),
+            src: s.src.clone(),
+            ctx: lint::FileCtx::Source,
+        })
+        .collect();
+    lint::lint_crate(&inputs)
+        .into_iter()
+        .map(|f| (f.file, f.line, f.rule.to_string()))
+        .collect()
 }
 
 #[test]
 fn fixtures_produce_exactly_the_marked_findings() {
     for path in fixtures() {
         let src = std::fs::read_to_string(&path).unwrap();
-        let (rel, expected) = parse_expectations(&src);
-        let got: BTreeSet<(u32, String)> = lint::lint_virtual(&rel, &src)
-            .into_iter()
-            .map(|f| (f.line, f.rule.to_string()))
+        let sections = parse_sections(&src);
+        let got = lint_fixture(&sections);
+        let expected: BTreeSet<(String, u32, String)> = sections
+            .iter()
+            .flat_map(|s| {
+                s.expected.iter().map(|(l, r)| (s.rel.clone(), *l, r.clone()))
+            })
             .collect();
         assert_eq!(
             got,
             expected,
-            "fixture {} (linted as {rel}) disagrees with its //~ markers",
+            "fixture {} disagrees with its //~ markers",
             path.display()
         );
     }
@@ -76,12 +117,46 @@ fn every_rule_has_fixture_coverage() {
     let mut hit: BTreeSet<String> = BTreeSet::new();
     for path in fixtures() {
         let src = std::fs::read_to_string(&path).unwrap();
-        let (_, expected) = parse_expectations(&src);
-        hit.extend(expected.into_iter().map(|(_, rule)| rule));
+        for s in parse_sections(&src) {
+            hit.extend(s.expected.into_iter().map(|(_, rule)| rule));
+        }
     }
     for (id, _) in lint::RULES {
         assert!(hit.contains(*id), "no fixture exercises rule {id}");
     }
+}
+
+#[test]
+fn d4_reports_the_full_call_chain() {
+    let src =
+        std::fs::read_to_string(fixture_dir().join("d4_taint_chain.rs")).unwrap();
+    let sections = parse_sections(&src);
+    let inputs: Vec<lint::Input> = sections
+        .iter()
+        .map(|s| lint::Input {
+            rel: s.rel.clone(),
+            display: s.rel.clone(),
+            src: s.src.clone(),
+            ctx: lint::FileCtx::Source,
+        })
+        .collect();
+    let findings = lint::lint_crate(&inputs);
+    let d4 = findings
+        .iter()
+        .find(|f| f.rule == "D4")
+        .expect("taint-chain fixture must produce a D4 finding");
+    assert_eq!(d4.file, "sim/tick_taint.rs");
+    let hops: Vec<&str> = d4.chain.iter().map(String::as_str).collect();
+    assert_eq!(hops.len(), 4, "two-hop chain plus sink: {hops:?}");
+    assert!(hops[0].ends_with("tick_all"), "chain starts at the flagged fn: {hops:?}");
+    assert!(hops[1].contains("stamp_ms") && hops[1].starts_with("util/stamp.rs:"));
+    assert!(hops[2].contains("raw_now_ms") && hops[2].starts_with("clock/real_source.rs:"));
+    assert_eq!(hops[3], "Instant::now");
+    assert!(
+        d4.message.contains("`tick_all` -> `stamp_ms` -> `raw_now_ms` -> `Instant::now`"),
+        "message must print the chain: {}",
+        d4.message
+    );
 }
 
 #[test]
@@ -105,6 +180,29 @@ fn binary_fails_on_a_known_bad_fixture() {
     assert_eq!(out.status.code(), Some(1), "known-bad fixture must exit 1");
     let stdout = String::from_utf8_lossy(&out.stdout);
     assert!(stdout.contains("P1"), "expected P1 findings:\n{stdout}");
+}
+
+#[test]
+fn json_format_emits_machine_readable_findings() {
+    let fixture = fixture_dir().join("p1_unwrap_hot.rs");
+    let out = Command::new(env!("CARGO_BIN_EXE_pallas_lint"))
+        .args([
+            "--format",
+            "json",
+            "--file",
+            fixture.to_str().unwrap(),
+            "--as",
+            "cloud/p1_unwrap_hot.rs",
+        ])
+        .output()
+        .expect("spawn pallas_lint");
+    assert_eq!(out.status.code(), Some(1), "findings still drive the exit code");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.starts_with('{'), "expected a JSON object:\n{stdout}");
+    for key in ["\"count\"", "\"scanned\"", "\"findings\"", "\"rule\"", "\"chain\""] {
+        assert!(stdout.contains(key), "JSON output missing {key}:\n{stdout}");
+    }
+    assert!(stdout.contains("\"P1\""), "expected P1 in JSON:\n{stdout}");
 }
 
 #[test]

@@ -55,6 +55,17 @@ cargo fmt --check
 echo "== cargo clippy -D warnings"
 cargo clippy --all-targets -- -D warnings
 
+# Lint-engine wall time: pallas-lint v2 builds a crate-wide call graph, so
+# scan time is itself a perf surface. Time the built binary directly
+# (cargo overhead excluded) so engine regressions are visible PR-over-PR
+# in the bench log.
+echo "== pallas-lint scan wall time"
+cargo build --release --bin pallas_lint >/dev/null
+lint_t0="$(date +%s%N)"
+./target/release/pallas_lint --deep || true
+lint_t1="$(date +%s%N)"
+echo "== pallas-lint --deep wall time: $(( (lint_t1 - lint_t0) / 1000000 )) ms"
+
 echo "== cargo bench --bench bench_binpacking"
 if [[ "$QUICK" == "1" ]]; then
     # BENCH_QUICK=1 also skips the fixed-budget heavy sections (naive 50k

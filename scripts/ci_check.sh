@@ -36,16 +36,29 @@ cargo doc --no-deps -q
 
 # pallas-lint runs before the test suite: a determinism violation makes
 # every golden-pinned result below it meaningless. See docs/linting.md
-# for the rule catalog and pragma syntax.
+# for the rule catalog and pragma syntax. On failure the findings are
+# archived as a machine-readable artifact (results/lint.json) so CI
+# surfaces them without grepping the build log.
 echo "== pallas-lint (determinism & panic-safety rules)"
-cargo run --release --bin pallas_lint
+if ! cargo run --release --bin pallas_lint; then
+    mkdir -p results
+    cargo run --release --bin pallas_lint -- --format json > results/lint.json || true
+    echo "pallas-lint: findings archived to results/lint.json" >&2
+    exit 1
+fi
 
 echo "== cargo test -q"
 cargo test -q
 
 if [[ "$DEEP" == "1" ]]; then
     echo "== pallas-lint --deep (tests + benches, float-hazard rules)"
-    cargo run --release --bin pallas_lint -- --deep
+    if ! cargo run --release --bin pallas_lint -- --deep; then
+        mkdir -p results
+        cargo run --release --bin pallas_lint -- --deep --format json \
+            > results/lint.json || true
+        echo "pallas-lint: findings archived to results/lint.json" >&2
+        exit 1
+    fi
 
     echo "== deep property pass (TESTKIT_CASES=2000, release)"
     TESTKIT_CASES=2000 cargo test --release -q
